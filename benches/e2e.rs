@@ -1,0 +1,43 @@
+//! Bench: end-to-end serving per method — the rows behind Figs. 5-8 at
+//! 300 Mbps, VQAv2-like workload. Reports both real wall-clock of the
+//! whole stack and the virtual-testbed summary.
+
+use std::time::Instant;
+
+use msao::baselines::{serve_trace_baseline, Baseline};
+use msao::config::Config;
+use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::metrics::summarize;
+use msao::workload::{Benchmark, Generator};
+
+fn main() -> anyhow::Result<()> {
+    let n = 10;
+    let mut coord = Coordinator::new(Config::default())?;
+    println!("== e2e serving bench ({n} reqs, VQAv2-like, 300 Mbps) ==");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12}",
+        "method", "wall_s", "lat_mean_s", "tput_tok_s", "tflops/req"
+    );
+    for (name, which) in [
+        ("MSAO", None),
+        ("Cloud-only", Some(Baseline::CloudOnly)),
+        ("Edge-only", Some(Baseline::EdgeOnly)),
+        ("PerLLM", Some(Baseline::PerLlm)),
+    ] {
+        let mut gen = Generator::new(42);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 1.3);
+        let t0 = Instant::now();
+        let res = match which {
+            None => serve_trace(&mut coord, &items, &arrivals, Mode::Msao, 1)?,
+            Some(b) => serve_trace_baseline(&mut coord, b, &items, &arrivals, 1)?,
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let s = summarize(&res.records);
+        println!(
+            "{:<12} {:>10.2} {:>12.3} {:>12.1} {:>12.2}",
+            name, wall, s.latency_mean_s, s.throughput_tps, s.tflops_per_req
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Bench: the coarse-phase optimizer — GP fit/predict scaling and the
+//! full 50-iteration BO loop (must stay ~ms-scale so per-request
+//! planning never bottlenecks the coordinator).
+
+use msao::optimizer::{BayesOpt, Gp, Matern52};
+use msao::util::bench::{bench, black_box, header};
+
+fn main() {
+    header();
+    for n in [10usize, 25, 50] {
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        for i in 0..n {
+            let x = i as f64 / n as f64;
+            gp.observe(vec![x, 1.0 - x], (x - 0.3).powi(2)).unwrap();
+        }
+        bench(&format!("gp/predict (n={n})"), 2000, || {
+            black_box(gp.predict(black_box(&[0.4, 0.6])));
+        });
+        bench(&format!("gp/observe+refit (n={n})"), 200, || {
+            let mut g = gp.clone();
+            g.observe(vec![0.11, 0.22], 0.5).unwrap();
+            black_box(g.len());
+        });
+    }
+    bench("bo/minimize 50 iters, 4-dim", 5, || {
+        let mut bo = BayesOpt::new(4, 0.1, 7);
+        let (x, _) = bo
+            .minimize(50, |x| {
+                (x[0] - 0.3).powi(2) + (x[1] - 0.6).powi(2) + x[2] * 0.1 + x[3] * 0.05
+            })
+            .unwrap();
+        black_box(x);
+    });
+    bench("bo/minimize 50 iters, 6-dim", 5, || {
+        let mut bo = BayesOpt::new(6, 0.1, 7);
+        let (x, _) = bo.minimize(50, |x| x.iter().map(|v| (v - 0.5).powi(2)).sum()).unwrap();
+        black_box(x);
+    });
+}

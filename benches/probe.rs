@@ -1,0 +1,48 @@
+//! Bench: the lightweight modality-aware probe pipeline (Fig. 4 rows).
+//! Real PJRT execution of the L1 probe kernels per V-config class, plus
+//! the paper-scale cost-model numbers the figure reports.
+
+use msao::config::Config;
+use msao::coordinator::mas::{probe_cost, run_probe};
+use msao::coordinator::Coordinator;
+use msao::util::bench::{bench, header};
+use msao::workload::{v_configs, Generator};
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::new(Config::default())?;
+    let mut gen = Generator::new(11);
+    println!("\n== probe pipeline (real engine wall-clock) ==");
+    header();
+    let image_item = gen.vqa_item();
+    bench("probe/image+text (VQA item)", 10, || {
+        run_probe(&coord.eng, &coord.cfg.msao, &image_item).unwrap();
+    });
+    let mm = (0..8)
+        .map(|_| gen.mmbench_item())
+        .find(|i| i.video.is_some())
+        .unwrap();
+    bench("probe/video+audio+text (MMBench item)", 5, || {
+        run_probe(&coord.eng, &coord.cfg.msao, &mm).unwrap();
+    });
+
+    println!("\n== probe cost model (paper-scale, Fig. 4) ==");
+    let dev = msao::cluster::DeviceSim::new(coord.cfg.edge);
+    for cfg in v_configs() {
+        let frames = if cfg.frames > 0 { cfg.frames } else { 1 };
+        let (secs, flops, mem) = probe_cost(
+            &dev,
+            cfg.modalities.len(),
+            frames,
+            cfg.resolution.max(0.25),
+            cfg.text_len,
+        );
+        println!(
+            "{}: {:.2} ms, {:.2} GFLOP, {:.2} GB",
+            cfg.name,
+            secs * 1e3,
+            flops / 1e9,
+            mem
+        );
+    }
+    Ok(())
+}

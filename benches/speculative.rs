@@ -1,0 +1,66 @@
+//! Bench: the decode hot path — real PJRT latencies of draft decode,
+//! cloud verify and prefill calls (the L3 perf-pass targets), plus the
+//! entropy/argmax host-side post-processing.
+
+use msao::config::Config;
+use msao::coordinator::engines::{argmax, entropy};
+use msao::coordinator::Coordinator;
+use msao::util::bench::{bench, black_box, header};
+use msao::workload::Generator;
+
+fn main() -> anyhow::Result<()> {
+    let coord = Coordinator::new(Config::default())?;
+    let eng = &coord.eng;
+    let c = eng.c.clone();
+    let mut gen = Generator::new(3);
+    let item = gen.vqa_item();
+    let enc = eng.encode_image(false, item.image.as_ref().unwrap())?;
+    let text = eng
+        .tok
+        .pad_to(eng.tok.encode_prompt(&item.question, c.text_slots()), c.text_slots());
+    let vis = msao::coordinator::session::trim_tokens(&enc.tokens, c.vis_slots(), c.d_enc());
+
+    header();
+    bench("encode/vision (edge)", 10, || {
+        black_box(eng.encode_image(false, item.image.as_ref().unwrap()).unwrap());
+    });
+    bench("prefill/draft (edge)", 10, || {
+        let p = eng
+            .prefill(false, &text, 8, &vis, c.vis_slots(), &eng.empty_aud(), 0)
+            .unwrap();
+        eng.free_kv(false, p.kv);
+    });
+    bench("prefill/full (cloud)", 10, || {
+        let p = eng
+            .prefill(true, &text, 8, &vis, c.vis_slots(), &eng.empty_aud(), 0)
+            .unwrap();
+        eng.free_kv(true, p.kv);
+    });
+
+    let pre_edge = eng.prefill(false, &text, 8, &vis, c.vis_slots(), &eng.empty_aud(), 0)?;
+    let pre_cloud = eng.prefill(true, &text, 8, &vis, c.vis_slots(), &eng.empty_aud(), 0)?;
+    let lens = (c.vis_slots(), 0usize, 8usize);
+
+    bench("decode/draft 1 token (edge)", 50, || {
+        black_box(eng.block(false, false, pre_edge.kv, c.gen_off(), &[42], lens).unwrap());
+    });
+    bench("verify/full 6-token block (cloud)", 30, || {
+        black_box(
+            eng.block(true, true, pre_cloud.kv, c.gen_off(), &[42, 7, 300, 264, 11, 99], lens)
+                .unwrap(),
+        );
+    });
+    bench("decode/full 1 token (cloud)", 30, || {
+        black_box(eng.block(true, false, pre_cloud.kv, c.gen_off(), &[42], lens).unwrap());
+    });
+
+    // Host-side post-processing (must be negligible vs engine calls).
+    let logits: Vec<f32> = (0..c.vocab()).map(|i| (i as f32 * 0.37).sin()).collect();
+    bench("host/entropy (384 vocab)", 10_000, || {
+        black_box(entropy(black_box(&logits)));
+    });
+    bench("host/argmax (384 vocab)", 10_000, || {
+        black_box(argmax(black_box(&logits)));
+    });
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Bench: substrate microbenchmarks — JSON parsing, PRNG, network sim,
+//! Cholesky, workload generation, MAS math. These are the pure-rust
+//! building blocks under the coordinator; none may show up in an
+//! end-to-end profile.
+
+use msao::cluster::{DeviceSim, Link, SimModel};
+use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg};
+use msao::optimizer::linalg;
+use msao::sparsity::{self, MasInputs, Modality};
+use msao::util::bench::{bench, black_box, header};
+use msao::util::json::Value;
+use msao::util::Rng;
+use msao::workload::Generator;
+
+fn main() {
+    header();
+
+    let manifest = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    bench("json/parse manifest", 500, || {
+        black_box(Value::parse(black_box(&manifest)).unwrap());
+    });
+
+    let mut rng = Rng::seed_from_u64(1);
+    bench("rng/normal x1000", 2000, || {
+        let mut s = 0.0;
+        for _ in 0..1000 {
+            s += rng.normal();
+        }
+        black_box(s);
+    });
+
+    let mut link = Link::new(NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.05 }, 2);
+    bench("network/transfer x1000", 2000, || {
+        let mut t = 0.0;
+        for _ in 0..1000 {
+            t += link.transfer_s(100_000, msao::cluster::Dir::Up);
+        }
+        black_box(t);
+    });
+
+    let dev = DeviceSim::new(DeviceCfg::a100());
+    let m = SimModel::qwen25vl_7b();
+    bench("costmodel/decode_s x1000", 5000, || {
+        let mut t = 0.0;
+        for i in 0..1000 {
+            t += dev.decode_s(&m, 512.0 + i as f64);
+        }
+        black_box(t);
+    });
+
+    // Cholesky at BO sizes.
+    for n in [25usize, 50] {
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = if i == j { 2.0 } else { 1.0 / (1.0 + (i as f64 - j as f64).abs()) };
+            }
+        }
+        bench(&format!("linalg/cholesky {n}x{n}"), 2000, || {
+            black_box(linalg::cholesky(black_box(&a), n).unwrap());
+        });
+    }
+
+    let cfg = MsaoCfg::default();
+    let imp: Vec<f32> = (0..256).map(|i| (i as f32 / 255.0)).collect();
+    bench("sparsity/mas pipeline", 10_000, || {
+        let rho = sparsity::spatial_ratio(black_box(&imp), cfg.tau_s);
+        let beta = sparsity::masked_softmax(&[0.2, 1.3, -0.5, 0.1], &[true, true, true, false]);
+        let out = sparsity::mas(
+            &cfg,
+            Modality::Image,
+            &MasInputs { beta: beta[1], rho_spatial: rho, gamma_avg: 0.0 },
+        );
+        black_box(out.mas);
+    });
+
+    bench("workload/vqa_item", 200, || {
+        let mut g = Generator::new(9);
+        black_box(g.vqa_item());
+    });
+    bench("workload/mmbench_item", 100, || {
+        let mut g = Generator::new(9);
+        black_box(g.mmbench_item());
+    });
+}

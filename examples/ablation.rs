@@ -1,0 +1,46 @@
+//! Ablation study (Fig. 9): full MSAO vs "w/o modality-aware" (uniform
+//! offloading, no MAS pruning) vs "w/o collaborative scheduling" (static
+//! task distribution: no BO, single-token rounds, no overlap/batching).
+//!
+//!     cargo run --release --example ablation [-- <n_requests>]
+
+use anyhow::Result;
+
+use msao::config::Config;
+use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::metrics::summarize;
+use msao::util::table::{f1, f2, f3, Table};
+use msao::workload::{Benchmark, Generator};
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let mut coord = Coordinator::new(Config::default())?;
+    let mut table = Table::new(
+        "Fig.9-style ablation (300 Mbps)",
+        &["benchmark", "variant", "acc_%", "lat_s", "tflops", "mem_gb", "offloads"],
+    );
+    for benchmark in [Benchmark::Vqa, Benchmark::MmBench] {
+        for (name, mode) in [
+            ("MSAO", Mode::Msao),
+            ("w/o Modality-Aware", Mode::NoModalityAware),
+            ("w/o Collab-Sched", Mode::NoCollabSched),
+        ] {
+            let mut gen = Generator::new(77);
+            let items = gen.items(benchmark, n);
+            let arrivals = gen.arrivals(n, 1.3);
+            let res = serve_trace(&mut coord, &items, &arrivals, mode, 77)?;
+            let s = summarize(&res.records);
+            table.row(vec![
+                benchmark.name().into(),
+                name.into(),
+                f1(s.accuracy * 100.0),
+                f3(s.latency_mean_s),
+                f2(s.tflops_per_req),
+                f1(s.mem_serving_gb),
+                f2(s.offloads_per_req),
+            ]);
+        }
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Bandwidth sensitivity: MSAO vs baselines across the paper's
+//! 200 / 300 / 400 Mbps levels (the x-axis of Figs. 5-8).
+//!
+//!     cargo run --release --example bandwidth_sweep [-- <n_requests>]
+
+use anyhow::Result;
+
+use msao::config::Config;
+use msao::coordinator::Coordinator;
+use msao::experiments::{run_cell, Bench, Method};
+use msao::util::table::{f1, f3, Table};
+use msao::workload::Benchmark;
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let mut coord = Coordinator::new(Config::default())?;
+    let mut lat = Table::new(
+        "latency (s) vs bandwidth — VQAv2-like",
+        &["bandwidth", "Cloud-only", "Edge-only", "PerLLM", "MSAO"],
+    );
+    let mut tput = Table::new(
+        "throughput (tok/s) vs bandwidth — VQAv2-like",
+        &["bandwidth", "Cloud-only", "Edge-only", "PerLLM", "MSAO"],
+    );
+    for bw in [200.0, 300.0, 400.0] {
+        let bench = Bench { benchmark: Benchmark::Vqa, bandwidth: bw };
+        let mut lrow = vec![format!("{bw:.0} Mbps")];
+        let mut trow = vec![format!("{bw:.0} Mbps")];
+        for m in Method::ALL {
+            let s = run_cell(&mut coord, &bench, m, n, 42)?;
+            lrow.push(f3(s.latency_mean_s));
+            trow.push(f1(s.throughput_tps));
+        }
+        lat.row(lrow);
+        tput.row(trow);
+    }
+    lat.print();
+    tput.print();
+    Ok(())
+}

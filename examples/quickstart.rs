@@ -1,0 +1,76 @@
+//! Quickstart: one multimodal request end-to-end through MSAO.
+//!
+//! Loads the AOT artifacts, probes a synthetic VQA item, plans the
+//! offloading, runs the dual prefill + speculative decode, and prints
+//! every stage's outcome. Run with:
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use msao::config::Config;
+use msao::coordinator::mas::run_probe;
+use msao::coordinator::{Batcher, Coordinator, Mode, VirtualCluster};
+use msao::workload::Generator;
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+    println!("== MSAO quickstart ==");
+    println!("loading artifacts from {:?}...", cfg.artifacts_dir);
+    let mut coord = Coordinator::new(cfg.clone())?;
+    println!(
+        "calibrated: {} entropy samples, theta0 = {:.3}",
+        coord.calibration.len(),
+        coord.theta().theta
+    );
+
+    let mut gen = Generator::new(7);
+    let item = gen.vqa_item();
+    println!("\nrequest: {:?} (relevant modality: {})", item.question, item.relevant.name());
+
+    // Stage 1: lightweight modality-aware probing (paper §4.1).
+    let probe = run_probe(&coord.eng, &coord.cfg.msao, &item)?;
+    println!("probe ({:.1} ms at testbed scale):", probe.probe_s * 1e3);
+    for m in &probe.mas {
+        if probe.present[m.modality.index()] {
+            println!(
+                "  {:<6} beta={:.3} rho_spatial={:.3} gamma={:.3} -> MAS={:.3}",
+                m.modality.name(),
+                m.beta,
+                m.rho_spatial,
+                m.gamma_avg,
+                m.mas
+            );
+        }
+    }
+    if let Some(p) = &probe.pruned {
+        println!("  spatial pruning kept {} / 256 visual tokens", p.count);
+    }
+
+    // Stage 2+3: plan + serve through the full coordinator.
+    let mut vc = VirtualCluster::new(&coord.cfg, 1);
+    let mut batcher = Batcher::new(2.0, 4, true);
+    let mut theta = coord.theta();
+    let rec = coord.serve(&mut vc, &mut batcher, &mut theta, &item, 0.0, Mode::Msao)?;
+
+    println!("\nserved:");
+    println!("  latency        {:.3} s (prefill {:.3} s)", rec.latency_s, rec.prefill_s);
+    println!("  tokens out     {}", rec.tokens_out);
+    println!(
+        "  speculation    {}/{} drafts accepted, {} low-confidence offloads",
+        rec.accepted, rec.proposed, rec.offloads
+    );
+    println!(
+        "  visual tokens  {} kept of 256 (vlen), frames kept {}",
+        rec.vis_tokens_kept, rec.frames_kept
+    );
+    println!(
+        "  compute        {:.2} TFLOPs (edge {:.2} / cloud {:.2})",
+        rec.total_flops() / 1e12,
+        rec.flops_edge / 1e12,
+        rec.flops_cloud / 1e12
+    );
+    println!("  uplink         {:.2} MB", rec.bytes_up as f64 / 1e6);
+    println!("  P(correct)     {:.3} -> {}", rec.p_correct, rec.correct);
+    Ok(())
+}

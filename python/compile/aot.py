@@ -1,0 +1,382 @@
+"""AOT driver: lower every L2 graph to HLO text + weight npz + manifest.
+
+Run once at build time (`make artifacts`); python never appears on the
+rust request path. Interchange is HLO *text*, not serialized
+HloModuleProto — the image's xla_extension 0.5.1 rejects jax>=0.5 protos
+with 64-bit instruction ids; the text parser reassigns ids cleanly
+(see /opt/xla-example/README.md).
+
+Weights are NOT baked into the HLO as constants: each graph takes its
+flattened parameter list as leading arguments. The rust runtime uploads
+`<group>_weights.npz` to device buffers once at startup and passes them
+by reference on every call (PjRtLoadedExecutable::execute_b), so the hot
+path never re-copies weights. artifacts/manifest.json records, for every
+graph: the HLO file, the weight group + ordered weight names, and the
+input/output specs the rust engine validates against.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dims, encoders, model, probe as probe_mod
+from .dims import (
+    AUDIO_D,
+    AUDIO_T,
+    AUD_SLOTS,
+    C_FEAT,
+    D_ENC,
+    DRAFT,
+    FULL,
+    GRID,
+    N_FRAMES,
+    N_MODALITIES,
+    N_PATCH,
+    N_SPEC,
+    PATCH_DIM,
+    TEXT_SLOTS,
+    VIS_SLOTS,
+    VOCAB,
+)
+
+SEED = 42
+# Pallas kernels in the model graphs (probe graphs always use them). The
+# interpret-mode attention lowers to HLO while-loops; set to False to fall
+# back to the fused jnp path if artifact execution time ever regresses.
+PALLAS_IN_MODELS = True
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def s32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten(params: dict):
+    names = sorted(params.keys())
+    return names, [params[n] for n in names]
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {
+            "graphs": {},
+            "weights": {},
+            "constants": {
+                "VOCAB": VOCAB,
+                "PAD": dims.PAD,
+                "BOS": dims.BOS,
+                "EOS": dims.EOS,
+                "SEP": dims.SEP,
+                "ANS_BASE": dims.ANS_BASE,
+                "GRID": GRID,
+                "N_PATCH": N_PATCH,
+                "PATCH_DIM": PATCH_DIM,
+                "D_ENC": D_ENC,
+                "C_FEAT": C_FEAT,
+                "N_FRAMES": N_FRAMES,
+                "FRAME_TOK": dims.FRAME_TOK,
+                "AUDIO_T": AUDIO_T,
+                "AUDIO_D": AUDIO_D,
+                "VIS_SLOTS": VIS_SLOTS,
+                "AUD_SLOTS": AUD_SLOTS,
+                "TEXT_SLOTS": TEXT_SLOTS,
+                "GEN_SLOTS": dims.GEN_SLOTS,
+                "S_PRE": dims.S_PRE,
+                "S_MAX": dims.S_MAX,
+                "VIS_OFF": dims.VIS_OFF,
+                "AUD_OFF": dims.AUD_OFF,
+                "TEXT_OFF": dims.TEXT_OFF,
+                "GEN_OFF": dims.GEN_OFF,
+                "N_SPEC": N_SPEC,
+                "LSH_K": dims.LSH_K,
+                "N_MODALITIES": N_MODALITIES,
+                "DH": dims.DH,
+                "DRAFT_D": DRAFT.d,
+                "DRAFT_LAYERS": DRAFT.n_layers,
+                "DRAFT_HEADS": DRAFT.n_heads,
+                "DRAFT_FFN": DRAFT.ffn,
+                "DRAFT_PARAMS": int(DRAFT.n_params),
+                "FULL_D": FULL.d,
+                "FULL_LAYERS": FULL.n_layers,
+                "FULL_HEADS": FULL.n_heads,
+                "FULL_FFN": FULL.ffn,
+                "FULL_PARAMS": int(FULL.n_params),
+                "ENC_LAYERS": encoders.ENC_LAYERS,
+                "ENC_HEADS": encoders.ENC_HEADS,
+                "ENC_FFN": encoders.ENC_FFN,
+            },
+        }
+
+    def add_weights(self, group, params):
+        names, vals = flatten(params)
+        path = os.path.join(self.out_dir, f"{group}_weights.npz")
+        np.savez(path, **{n: np.asarray(v) for n, v in zip(names, vals)})
+        self.manifest["weights"][group] = {
+            "file": f"{group}_weights.npz",
+            "names": names,
+        }
+        return names, vals
+
+    def add_graph(self, name, core, weight_group, weight_vals, input_specs):
+        """core(*weights, *inputs) -> tuple of outputs."""
+        n_w = len(weight_vals)
+        w_specs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in weight_vals]
+        # keep_unused: probe graphs touch only a subset of their weight
+        # group; the rust engine always passes the whole group, so the
+        # lowered signature must keep every arg.
+        lowered = jax.jit(core, keep_unused=True).lower(*w_specs, *input_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = [
+            {"shape": list(s.shape), "dtype": s.dtype.name}
+            for s in jax.tree_util.tree_leaves(lowered.out_info)
+        ]
+        self.manifest["graphs"][name] = {
+            "file": fname,
+            "weights": weight_group,
+            "n_weight_args": n_w,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": s.dtype.name}
+                for s in input_specs
+            ],
+            "outputs": out_specs,
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB hlo, {n_w} weight args")
+
+
+def build(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+    key = jax.random.PRNGKey(SEED)
+    k_vis, k_aud, k_probe, k_draft, k_full = jax.random.split(key, 5)
+
+    vis_p = encoders.init_vision(k_vis)
+    aud_p = encoders.init_audio(k_aud)
+    print("training probe heads on the synthetic distribution...")
+    probe_p = probe_mod.train_probe(k_probe, vis_p, aud_p, verbose=True)
+    draft_p = model.init_params(k_draft, DRAFT)
+    full_p = model.init_params(k_full, FULL)
+
+    vis_names, vis_vals = b.add_weights("vision", vis_p)
+    aud_names, aud_vals = b.add_weights("audio", aud_p)
+    probe_names, probe_vals = b.add_weights("probe", probe_p)
+    draft_names, draft_vals = b.add_weights("draft", draft_p)
+    full_names, full_vals = b.add_weights("full", full_p)
+
+    def rebuild(names):
+        def f(ws):
+            return dict(zip(names, ws))
+
+        return f
+
+    # --- encoders ---------------------------------------------------------
+    nv = len(vis_names)
+
+    def g_vision(*args):
+        p = dict(zip(vis_names, args[:nv]))
+        return encoders.vision_encode(
+            p, args[nv], use_pallas=PALLAS_IN_MODELS
+        )
+
+    b.add_graph(
+        "vision_encoder", g_vision, "vision", vis_vals,
+        [f32(N_PATCH, PATCH_DIM)],
+    )
+
+    na = len(aud_names)
+
+    def g_audio(*args):
+        p = dict(zip(aud_names, args[:na]))
+        return encoders.audio_encode(p, args[na])
+
+    b.add_graph(
+        "audio_encoder", g_audio, "audio", aud_vals, [f32(AUDIO_T, AUDIO_D)]
+    )
+
+    # --- probes -----------------------------------------------------------
+    np_ = len(probe_names)
+
+    def g_spatial(*args):
+        p = dict(zip(probe_names, args[:np_]))
+        return (probe_mod.probe_spatial(p, args[np_]),)
+
+    b.add_graph(
+        "probe_spatial", g_spatial, "probe", probe_vals,
+        [f32(GRID, GRID, C_FEAT)],
+    )
+
+    def g_temporal(*args):
+        p = dict(zip(probe_names, args[:np_]))
+        return (probe_mod.probe_temporal(p, args[np_]),)
+
+    b.add_graph(
+        "probe_temporal", g_temporal, "probe", probe_vals,
+        [f32(N_FRAMES, D_ENC)],
+    )
+
+    def g_modal(*args):
+        p = dict(zip(probe_names, args[:np_]))
+        return (probe_mod.probe_modal(p, args[np_], args[np_ + 1], args[np_ + 2]),)
+
+    b.add_graph(
+        "probe_modal", g_modal, "probe", probe_vals,
+        [s32(TEXT_SLOTS), s32(), f32(N_MODALITIES, D_ENC)],
+    )
+
+    def g_prune(*args):
+        return probe_mod.prune_tokens(args[0], args[1], args[2])
+
+    b.add_graph(
+        "prune_tokens", g_prune, None, [],
+        [f32(N_PATCH, D_ENC), f32(GRID, GRID), f32(1)],
+    )
+
+    # --- models -----------------------------------------------------------
+    def model_graphs(tag, cfg, names, vals):
+        nw = len(names)
+        kv_spec = f32(cfg.n_layers, 2, cfg.n_heads, dims.S_MAX, dims.DH)
+
+        def g_prefill(*args):
+            p = dict(zip(names, args[:nw]))
+            text, tlen, vis, vlen, aud, alen = args[nw : nw + 6]
+            return model.prefill(
+                p, cfg, text, tlen, vis, vlen, aud, alen,
+                use_pallas=PALLAS_IN_MODELS,
+            )
+
+        b.add_graph(
+            f"{tag}_prefill", g_prefill, tag, vals,
+            [
+                s32(TEXT_SLOTS), s32(),
+                f32(VIS_SLOTS, D_ENC), s32(),
+                f32(AUD_SLOTS, D_ENC), s32(),
+            ],
+        )
+
+        def make_decode(n_tok):
+            def g(*args):
+                p = dict(zip(names, args[:nw]))
+                kv, pos, toks, vlen, alen, tlen = args[nw : nw + 6]
+                return model.block_decode(
+                    p, cfg, kv, pos, toks, vlen, alen, tlen,
+                    use_pallas=PALLAS_IN_MODELS,
+                )
+
+            return g
+
+        b.add_graph(
+            f"{tag}_decode", make_decode(1), tag, vals,
+            [kv_spec, s32(), s32(1), s32(), s32(), s32()],
+        )
+        if tag == "full":
+            b.add_graph(
+                "full_verify", make_decode(N_SPEC), tag, vals,
+                [kv_spec, s32(), s32(N_SPEC), s32(), s32(), s32()],
+            )
+
+    model_graphs("draft", DRAFT, draft_names, draft_vals)
+    model_graphs("full", FULL, full_names, full_vals)
+
+    golden = make_golden(draft_p, full_p, vis_p, probe_p)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print("golden.json written")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(b.manifest, f, indent=1)
+    print(f"manifest: {len(b.manifest['graphs'])} graphs -> {out_dir}")
+
+
+def make_golden(draft_p, full_p, vis_p, probe_p):
+    """Fixed-input expected outputs for the rust engine's numeric
+    integration test (rust/tests/engine_golden.rs). Uses the same
+    Pallas-bearing graphs that were lowered to HLO."""
+    text = np.full((TEXT_SLOTS,), dims.PAD, np.int32)
+    text[:4] = [dims.BOS, 72, 73, dims.SEP]
+    tlen = jnp.int32(4)
+    vis = jnp.asarray(
+        np.linspace(-1, 1, VIS_SLOTS * D_ENC, dtype=np.float32).reshape(
+            VIS_SLOTS, D_ENC
+        )
+    )
+    vlen = jnp.int32(100)
+    aud = jnp.zeros((AUD_SLOTS, D_ENC), jnp.float32)
+    alen = jnp.int32(0)
+    t = jnp.asarray(text)
+
+    out = {}
+    kv_d, logits_d = jax.jit(
+        lambda: model.prefill(
+            draft_p, DRAFT, t, tlen, vis, vlen, aud, alen,
+            use_pallas=PALLAS_IN_MODELS,
+        )
+    )()
+    out["draft_prefill_logits"] = np.asarray(logits_d).tolist()
+    lg, _ = jax.jit(
+        lambda: model.block_decode(
+            draft_p, DRAFT, kv_d, jnp.int32(dims.GEN_OFF),
+            jnp.asarray([42], jnp.int32), vlen, alen, tlen,
+            use_pallas=PALLAS_IN_MODELS,
+        )
+    )()
+    out["draft_decode_logits"] = np.asarray(lg[0]).tolist()
+
+    kv_f, logits_f = jax.jit(
+        lambda: model.prefill(
+            full_p, FULL, t, tlen, vis, vlen, aud, alen,
+            use_pallas=PALLAS_IN_MODELS,
+        )
+    )()
+    out["full_prefill_logits"] = np.asarray(logits_f).tolist()
+    vtoks = jnp.asarray([42, 7, 300, 264, 11, 99], jnp.int32)
+    vlg, _ = jax.jit(
+        lambda: model.block_decode(
+            full_p, FULL, kv_f, jnp.int32(dims.GEN_OFF), vtoks, vlen, alen,
+            tlen, use_pallas=PALLAS_IN_MODELS,
+        )
+    )()
+    out["full_verify_row0"] = np.asarray(vlg[0]).tolist()
+    out["full_verify_row5"] = np.asarray(vlg[5]).tolist()
+
+    patches = jnp.asarray(
+        np.sin(np.arange(N_PATCH * PATCH_DIM, dtype=np.float32) * 0.01).reshape(
+            N_PATCH, PATCH_DIM
+        )
+    )
+    tokens, tok32, feat, pooled = jax.jit(
+        lambda: encoders.vision_encode(vis_p, patches, use_pallas=PALLAS_IN_MODELS)
+    )()
+    out["vision_pooled"] = np.asarray(pooled).tolist()
+    imp = jax.jit(lambda: probe_mod.probe_spatial(probe_p, feat))()
+    out["probe_spatial_map_row0"] = np.asarray(imp[0]).tolist()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

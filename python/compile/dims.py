@@ -1,0 +1,68 @@
+"""Shared shape constants for the MSAO model stack.
+
+These are the single source of truth for every AOT artifact; the rust side
+reads the same values from artifacts/manifest.json (emitted by aot.py).
+
+Sequence layout (slot ranges are fixed so one artifact serves all inputs):
+    [0,   192) visual tokens   (image patches or pooled video-frame tokens)
+    [192, 224) audio tokens
+    [224, 288) text tokens
+    [288, 352) generated tokens
+"""
+
+VOCAB = 384          # 0..255 bytes, 256..263 specials, 264..383 answer tokens
+PAD, BOS, EOS, SEP = 256, 257, 258, 259
+ANS_BASE = 264       # answer vocabulary for the synthetic VQA task
+
+# vision front-end
+GRID = 16            # patch grid -> 16x16 = 256 patches
+N_PATCH = GRID * GRID
+PATCH_DIM = 192      # 8x8 RGB patch, flattened
+D_ENC = 128          # shared vision/audio encoder width
+C_FEAT = 32          # probe feature-map channels
+N_FRAMES = 8         # max video frames
+FRAME_TOK = 32       # pooled tokens contributed per video frame
+
+# audio front-end
+AUDIO_T = 32         # audio feature frames
+AUDIO_D = 80         # mel-style feature dim
+
+# sequence slots
+VIS_SLOTS = 192      # retained visual tokens after pruning (cap)
+AUD_SLOTS = 32
+TEXT_SLOTS = 64
+GEN_SLOTS = 64
+S_PRE = VIS_SLOTS + AUD_SLOTS + TEXT_SLOTS            # 288
+S_MAX = S_PRE + GEN_SLOTS                             # 352
+VIS_OFF, AUD_OFF, TEXT_OFF, GEN_OFF = 0, 192, 224, 288
+
+# probe dims
+LSH_K = 64           # number of hash functions (Eq. 5)
+D_PROBE = 64         # modal-probe embedding width
+N_MODALITIES = 4     # text, image, video, audio
+
+# speculative decoding
+N_SPEC = 6           # prev token + up to 5 draft tokens (N_max = 5)
+
+DH = 32              # head dim (both models)
+
+
+class ModelCfg:
+    """Transformer hyper-parameters for one model variant."""
+
+    def __init__(self, name, d, n_layers, n_heads, ffn):
+        self.name = name
+        self.d = d
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.ffn = ffn
+        assert d == n_heads * DH
+
+    @property
+    def n_params(self):
+        per_layer = 4 * self.d * self.d + 2 * self.d * self.ffn
+        return VOCAB * self.d + S_MAX * self.d + self.n_layers * per_layer
+
+
+DRAFT = ModelCfg("draft", d=128, n_layers=4, n_heads=4, ffn=512)
+FULL = ModelCfg("full", d=192, n_layers=6, n_heads=6, ffn=768)

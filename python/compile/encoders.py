@@ -1,0 +1,110 @@
+"""L2: modality encoders shared by both model variants (Eq. 1-2).
+
+The vision encoder is the f_v(.) of Eq. 1: a 2-layer ViT over the 16x16
+patch grid. It additionally exposes the *early-layer* feature map the
+paper's spatial probe attaches to (§4.1.1: "early layers in vision
+encoders capture spatial structures with minimal computational overhead")
+and a pooled summary vector used by the temporal-LSH and modal probes.
+
+The audio encoder is a light MLP over mel-style frames — audio carries no
+spatial/temporal probe dimensions in MSAO, only modal relevance.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .dims import C_FEAT, D_ENC, DH, GRID, N_PATCH, PATCH_DIM
+from .kernels import ref
+from .kernels.attention import attention
+
+ENC_LAYERS = 2
+ENC_HEADS = 4
+ENC_FFN = 256
+
+
+def _dense(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(din))
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def init_vision(key) -> dict:
+    p = {}
+    keys = iter(jax.random.split(key, 4 + 8 * ENC_LAYERS))
+    p["patch_proj"] = _dense(next(keys), PATCH_DIM, D_ENC)
+    p["pos"] = _dense(next(keys), N_PATCH, D_ENC, scale=0.02)
+    p["feat_proj"] = _dense(next(keys), D_ENC, C_FEAT)
+    for l in range(ENC_LAYERS):
+        pre = f"enc_{l:02d}_"
+        p[pre + "ln1_s"] = jnp.ones((D_ENC,), jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros((D_ENC,), jnp.float32)
+        p[pre + "wq"] = _dense(next(keys), D_ENC, D_ENC)
+        p[pre + "wk"] = _dense(next(keys), D_ENC, D_ENC)
+        p[pre + "wv"] = _dense(next(keys), D_ENC, D_ENC)
+        p[pre + "wo"] = _dense(next(keys), D_ENC, D_ENC)
+        p[pre + "ln2_s"] = jnp.ones((D_ENC,), jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros((D_ENC,), jnp.float32)
+        p[pre + "w1"] = _dense(next(keys), D_ENC, ENC_FFN)
+        p[pre + "b1"] = jnp.zeros((ENC_FFN,), jnp.float32)
+        p[pre + "w2"] = _dense(next(keys), ENC_FFN, D_ENC)
+        p[pre + "b2"] = jnp.zeros((D_ENC,), jnp.float32)
+    return p
+
+
+def init_audio(key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "a_w1": _dense(k1, dims.AUDIO_D, D_ENC),
+        "a_b1": jnp.zeros((D_ENC,), jnp.float32),
+        "a_w2": _dense(k2, D_ENC, D_ENC),
+        "a_b2": jnp.zeros((D_ENC,), jnp.float32),
+    }
+
+
+def _ln(x, s, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * s + b
+
+
+def vision_encode(p, patches, *, use_pallas=True):
+    """patches: [N_PATCH, PATCH_DIM] ->
+    (tokens [N_PATCH, D_ENC]      full-resolution visual tokens,
+     tokens32 [FRAME_TOK, D_ENC]  pooled tokens for video-frame use,
+     feat [GRID, GRID, C_FEAT]    early-layer probe feature map,
+     pooled [D_ENC]               global summary for LSH/modal probes).
+    """
+    x = patches @ p["patch_proj"] + p["pos"]
+    zero_mask = jnp.zeros((N_PATCH, N_PATCH), jnp.float32)  # bidirectional
+    feat = None
+    for l in range(ENC_LAYERS):
+        pre = f"enc_{l:02d}_"
+        xn = _ln(x, p[pre + "ln1_s"], p[pre + "ln1_b"])
+        q = xn @ p[pre + "wq"]
+        k = xn @ p[pre + "wk"]
+        v = xn @ p[pre + "wv"]
+        to_h = lambda t: t.reshape(N_PATCH, ENC_HEADS, DH).transpose(1, 0, 2)
+        if use_pallas:
+            o = attention(to_h(q), to_h(k), to_h(v), zero_mask, bq=64, bk=64)
+        else:
+            o = ref.attention_ref(to_h(q), to_h(k), to_h(v), zero_mask)
+        o = o.transpose(1, 0, 2).reshape(N_PATCH, D_ENC)
+        x = x + o @ p[pre + "wo"]
+        xn = _ln(x, p[pre + "ln2_s"], p[pre + "ln2_b"])
+        x = x + jax.nn.relu(xn @ p[pre + "w1"] + p[pre + "b1"]) @ p[pre + "w2"]
+        if l == 0:
+            # Early-layer feature map for the spatial probe (Eq. 3).
+            feat = (x @ p["feat_proj"]).reshape(GRID, GRID, C_FEAT)
+    tokens = x
+    tokens32 = jnp.mean(
+        x.reshape(dims.FRAME_TOK, N_PATCH // dims.FRAME_TOK, D_ENC), axis=1
+    )
+    pooled = jnp.mean(x, axis=0)
+    return tokens, tokens32, feat, pooled
+
+
+def audio_encode(p, audio):
+    """audio: [AUDIO_T, AUDIO_D] -> (tokens [AUDIO_T, D_ENC], pooled [D_ENC])."""
+    h = jax.nn.relu(audio @ p["a_w1"] + p["a_b1"])
+    tokens = h @ p["a_w2"] + p["a_b2"]
+    return tokens, jnp.mean(tokens, axis=0)

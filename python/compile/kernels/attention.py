@@ -1,0 +1,79 @@
+"""Pallas kernel: the decode/prefill attention hot-spot.
+
+TPU adaptation (DESIGN.md §6): flash-style blockwise softmax accumulation
+sized to VMEM instead of the CUDA shared-memory tiling the paper implies.
+The grid iterates (head, q-block); each step streams K/V blocks through
+VMEM keeping a running max / running denominator so the full [Sq, Sk]
+score matrix never materialises. Block sizes Bq=Bk=64 keep per-step VMEM
+at Bq*Dh + 2*Bk*Dh + Bq*Bk floats (~24 KiB at Dh=32 f32), far under the
+16 MiB VMEM budget — see DESIGN.md §8 for the roofline estimate.
+
+Masking is additive ([Sq, Sk], 0 or NEG) and carries both causality and
+slot-validity, so one kernel serves prefill, single-token decode and
+N-token speculative verify.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e9
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bk: int, sk: int):
+    # q_ref: [1, Bq, Dh] (one head, one q block); k/v_ref: [1, Sk, Dh];
+    # mask_ref: [Bq, Sk]; o_ref: [1, Bq, Dh]
+    q = q_ref[0]                                     # [Bq, Dh]
+    bq, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    m_i = jnp.full((bq,), NEG, jnp.float32)          # running max
+    l_i = jnp.zeros((bq,), jnp.float32)              # running denominator
+    acc = jnp.zeros((bq, dh), jnp.float32)           # running numerator
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(j * bk, bk), slice(None)))
+        msk = pl.load(mask_ref, (slice(None), pl.dslice(j * bk, bk)))
+        s = q @ k_blk.T * scale + msk                # [Bq, Bk]
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(0, sk // bk, body, (m_i, l_i, acc))
+    # NEG is finite, so even fully-masked (padding) rows have l_i > 0 and
+    # degrade to a uniform average, matching ref.attention_ref; the model
+    # never reads those rows. Guard anyway for true -inf masks.
+    safe = jnp.where(l_i == 0.0, 1.0, l_i)
+    o_ref[0] = acc / safe[:, None]
+
+
+def attention(q, k, v, mask, *, bq: int = 64, bk: int = 64):
+    """Flash-style attention. q: [H, Sq, Dh]; k/v: [H, Sk, Dh];
+    mask: [Sq, Sk] additive. Sq, Sk must be multiples of bq, bk.
+    Returns [H, Sq, Dh]."""
+    h, sq, dh = q.shape
+    sk = k.shape[1]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    kern = functools.partial(_kernel, bk=bk, sk=sk)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((h, sq, dh), jnp.float32),
+        grid=(h, sq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, sk, dh), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, sk, dh), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((bq, sk), lambda hi, qi: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda hi, qi: (hi, qi, 0)),
+        interpret=True,
+    )(q, k, v, mask)

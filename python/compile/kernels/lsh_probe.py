@@ -1,0 +1,38 @@
+"""Pallas kernel: temporal redundancy via sign-LSH (Eq. 5).
+
+TPU adaptation (DESIGN.md §6): the paper's per-frame hash (a CUDA warp
+ballot over K hash functions) becomes one projected matmul
+(frames[T,D] @ proj[D,K]) on the MXU with the sign comparison and the
+adjacent-frame agreement count fused in-kernel as lane reductions — no
+warp primitives needed. T and K are tiny, so a single VMEM-resident grid
+cell holds everything.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(frames_ref, proj_ref, o_ref):
+    frames = frames_ref[...]             # [T, D]
+    proj = proj_ref[...]                 # [D, K]
+    k = proj.shape[1]
+    signs = (frames @ proj) >= 0.0       # [T, K] hash bits h_k(f_t)
+    agree = jnp.sum(
+        (signs[1:] == signs[:-1]).astype(jnp.float32), axis=-1
+    ) / jnp.float32(k)                   # sim_t, t >= 1
+    sim = jnp.concatenate([jnp.zeros((1,), jnp.float32), agree])
+    o_ref[...] = 1.0 - sim               # gamma_t; gamma_0 = 1 (keep)
+
+
+def lsh_gamma(frames, proj):
+    """frames: [T, D] pooled per-frame features; proj: [D, K] hash planes.
+
+    Returns gamma: [T], the temporal redundancy score per frame.
+    """
+    t, _d = frames.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=True,
+    )(frames, proj)

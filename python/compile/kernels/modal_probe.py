@@ -1,0 +1,36 @@
+"""Pallas kernel: cross-modal relevance scores alpha_m (Eq. 6).
+
+Fuses the MLP([p; z_m]) over all M modalities in one VMEM-resident grid
+cell: the prompt embedding is broadcast against the M modality reps, the
+two matmuls hit the MXU, and the relu sits between them in-register.
+Softmax normalisation into beta_m happens on the rust side where absent
+modalities are masked (Eq. 6 footnote).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, z_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    p = p_ref[...]                        # [Dp]
+    z = z_ref[...]                        # [M, Dz]
+    m = z.shape[0]
+    x = jnp.concatenate(
+        [jnp.broadcast_to(p, (m, p.shape[0])), z], axis=-1
+    )                                     # [M, Dp+Dz]
+    h = jax.nn.relu(x @ w1_ref[...] + b1_ref[...])
+    o_ref[...] = h @ w2_ref[...] + b2_ref[0]
+
+
+def modal_scores(p, z, w1, b1, w2, b2):
+    """p: [Dp]; z: [M, Dz]; MLP weights as in ref.modal_scores_ref.
+
+    Returns alpha: [M] raw relevance scores.
+    """
+    m = z.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(p, z, w1, b1, w2, b2)

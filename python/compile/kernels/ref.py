@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: each kernel in this package must
+match its `*_ref` function to float tolerance under pytest/hypothesis
+(python/tests/test_kernels.py). They are also used directly by model.py
+when `use_pallas=False`, so the full model has a kernel-free reference
+path for end-to-end numeric checks.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def spatial_probe_ref(feat, w, b):
+    """Spatial importance map (Eq. 3): sigmoid(conv1x1(avgpool(F))).
+
+    feat: [G, G, C] early-layer feature map (already pooled over patch
+    interior by the encoder); w: [C]; b: scalar.
+    Returns [G, G] importance in (0, 1).
+    """
+    return jax.nn.sigmoid(jnp.einsum("ijc,c->ij", feat, w) + b)
+
+
+def lsh_gamma_ref(frames, proj):
+    """Temporal redundancy via sign-LSH (Eq. 5): gamma_t = 1 - sim_t.
+
+    frames: [T, D] pooled per-frame features; proj: [D, K] random
+    projections (the K hash functions). sim_t = fraction of hash bits
+    agreeing between frames t and t-1; frame 0 has no predecessor so
+    gamma_0 = 1 (always novel / must keep).
+    Returns gamma: [T] in [0, 1].
+    """
+    signs = (frames @ proj) >= 0.0  # [T, K]
+    agree = jnp.mean((signs[1:] == signs[:-1]).astype(jnp.float32), axis=-1)
+    sim = jnp.concatenate([jnp.zeros((1,), jnp.float32), agree])
+    return 1.0 - sim
+
+
+def modal_scores_ref(p, z, w1, b1, w2, b2):
+    """Cross-modal relevance scores alpha_m (Eq. 6): MLP([p; z_m]).
+
+    p: [Dp] prompt embedding; z: [M, Dz] compressed modality reps;
+    w1: [Dp+Dz, Hm], b1: [Hm], w2: [Hm], b2: scalar.
+    Returns alpha: [M] (softmax into beta_m happens on the rust side,
+    where absent modalities are masked).
+    """
+    m = z.shape[0]
+    x = jnp.concatenate([jnp.broadcast_to(p, (m, p.shape[0])), z], axis=-1)
+    h = jax.nn.relu(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def attention_ref(q, k, v, mask):
+    """Masked multi-head attention over one head-batch.
+
+    q: [H, Sq, Dh], k/v: [H, Sk, Dh], mask: [Sq, Sk] additive (0 or large
+    negative). Returns [H, Sq, Dh].
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    s = s + mask[None, :, :]
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def token_prune_ref(tokens, imp, tau, keep):
+    """Order-preserving compaction of tokens with importance >= tau (Eq. 4).
+
+    tokens: [N, D]; imp: [N]; tau: scalar threshold; keep: static capacity.
+    Returns (pruned [keep, D] zero-padded, idx [keep] source index or -1,
+    count scalar int32 = min(#selected, keep)).
+    """
+    n, d = tokens.shape
+    sel_mask = imp >= tau
+    rank = jnp.cumsum(sel_mask.astype(jnp.int32)) - 1  # rank among selected
+    sel = sel_mask & (rank < keep)
+    # Route rejected rows to a scratch slot `keep`; selected ranks are unique.
+    dest = jnp.where(sel, rank, keep)
+    out = jnp.zeros((keep + 1, d), tokens.dtype).at[dest].set(tokens)[:keep]
+    idx = jnp.full((keep + 1,), -1, jnp.int32).at[dest].set(
+        jnp.arange(n, dtype=jnp.int32)
+    )[:keep]
+    count = jnp.minimum(jnp.sum(sel_mask.astype(jnp.int32)), keep)
+    return out, idx, count

@@ -1,0 +1,41 @@
+"""Pallas kernel: spatial importance map (Eq. 3).
+
+TPU adaptation (DESIGN.md §6): the paper's CUDA conv1x1 head becomes a
+row-tiled channel contraction — each grid step loads one row of the patch
+feature map into VMEM and contracts the channel dim against the probe
+weight vector, fusing the sigmoid. BlockSpec expresses the HBM->VMEM
+schedule the paper did with thread blocks.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated against ref.spatial_probe_ref.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(feat_ref, w_ref, b_ref, o_ref):
+    # feat_ref: [1, G, C] one row of the patch grid in VMEM
+    f = feat_ref[0]                      # [G, C]
+    w = w_ref[:]                         # [C]
+    b = b_ref[0]
+    o_ref[0, :] = jax.nn.sigmoid(f @ w + b)
+
+
+def spatial_probe(feat, w, b):
+    """feat: [G, G, C]; w: [C]; b: [1]. Returns importance map [G, G]."""
+    g, g2, c = feat.shape
+    assert g == g2
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((g, g), jnp.float32),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, g, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, g), lambda i: (i, 0)),
+        interpret=True,
+    )(feat, w, b)

@@ -1,0 +1,57 @@
+"""Pallas kernel: order-preserving visual-token compaction (Eq. 4 pruning).
+
+Tokens whose spatial importance falls below tau_s are "non-critical
+background" (paper §4.1.1) and are dropped before the sequence is
+assembled. The kernel performs an in-VMEM stream compaction: a single
+grid cell walks the N source rows with a fori_loop, keeping a running
+write cursor and storing selected rows at their rank. On real TPU this
+is a sequential scatter in VMEM (N=256 rows — trivially latency-bound);
+the win is that only `keep` rows ever travel back to HBM.
+
+Outputs match ref.token_prune_ref exactly: (pruned [keep, D] zero-padded,
+idx [keep] source index or -1, count [1]).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tok_ref, imp_ref, tau_ref, o_ref, idx_ref, cnt_ref, *, keep: int):
+    n, _d = tok_ref.shape
+    tau = tau_ref[0]
+    o_ref[...] = jnp.zeros_like(o_ref)
+    idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    def body(i, cursor):
+        sel = (imp_ref[i] >= tau) & (cursor < keep)
+
+        def write(c):
+            row = pl.load(tok_ref, (pl.dslice(i, 1), slice(None)))
+            pl.store(o_ref, (pl.dslice(c, 1), slice(None)), row)
+            pl.store(idx_ref, (pl.dslice(c, 1),), jnp.full((1,), i, jnp.int32))
+            return c + 1
+
+        return jax.lax.cond(sel, write, lambda c: c, cursor)
+
+    cursor = jax.lax.fori_loop(0, n, body, jnp.int32(0))
+    cnt_ref[0] = cursor
+
+
+def token_prune(tokens, imp, tau, keep: int):
+    """tokens: [N, D]; imp: [N]; tau: [1] f32; keep: static capacity.
+
+    Returns (pruned [keep, D], idx [keep] i32, count [1] i32)."""
+    n, d = tokens.shape
+    kern = functools.partial(_kernel, keep=keep)
+    return pl.pallas_call(
+        kern,
+        out_shape=[
+            jax.ShapeDtypeStruct((keep, d), jnp.float32),
+            jax.ShapeDtypeStruct((keep,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(tokens, imp, tau)

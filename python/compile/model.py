@@ -1,0 +1,258 @@
+"""L2: the multimodal transformer pair (edge draft / cloud full).
+
+Substitution (DESIGN.md §3): stands in for Qwen2-VL-2B (edge) and
+Qwen2.5-VL-7B (cloud). Both variants share the tokenizer, vocabulary,
+head dim and sequence layout so speculative verification is seamless —
+exactly the property the paper relies on ("the two models share the same
+tokenizer and architectural design").
+
+Fixed slot layout (dims.py): [0,192) visual | [192,224) audio |
+[224,288) text | [288,352) generated. Padding inside segments is masked,
+so a single AOT artifact serves every input length.
+
+Two code paths, numerically interchangeable:
+  use_pallas=True  — attention runs through the L1 flash-style kernel
+                     (kernels/attention.py); this is what aot.py lowers.
+  use_pallas=False — pure-jnp reference (kernels/ref.py) used by pytest to
+                     validate the kernel-bearing graph end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .dims import (
+    AUD_OFF,
+    DH,
+    GEN_OFF,
+    S_MAX,
+    S_PRE,
+    TEXT_OFF,
+    VIS_OFF,
+    VIS_SLOTS,
+    AUD_SLOTS,
+    TEXT_SLOTS,
+    VOCAB,
+)
+from .kernels import ref
+from .kernels.attention import NEG, attention
+
+# ---------------------------------------------------------------------------
+# Parameter init (deterministic; weights land in artifacts/<name>_weights.npz)
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(din))
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+PRIOR_SEED = 1234  # shared by both models: the common token-transition prior
+PRIOR_ROW_SCALE = (1.2, 5.5)  # per-row temperature spread (skewed confident)
+MODEL_LOGIT_SCALE = {"draft": 0.9, "full": 0.35}  # per-model deviation
+
+
+def _shared_prior(cfg_name):
+    """Token-transition prior shared by draft and full (plus small
+    per-model perturbation). This is the substitution for trained-model
+    agreement: greedy speculative decoding needs the draft's argmax to
+    match the full model's most of the time (paper measures 70-85%
+    acceptance on real Qwen pairs). Both models' logits are
+    prior[last_token] + scale * transformer(x); the shared prior row
+    dominates, the transformer term injects input-dependent deviation —
+    larger for the draft, so acceptance is high but not trivial, and the
+    entropy of confident vs unconfident rows varies naturally."""
+    kp = jax.random.PRNGKey(PRIOR_SEED)
+    k1, k2, k3 = jax.random.split(kp, 3)
+    base = jax.random.normal(k1, (VOCAB, VOCAB), jnp.float32)
+    lo, hi = PRIOR_ROW_SCALE
+    # Skew toward confident rows (u^0.35): a trained LM is confident on
+    # most steps and uncertain on a minority — that minority is what the
+    # entropy gate (Eq. 10) exists to catch.
+    u = jax.random.uniform(k2, (VOCAB, 1)) ** 0.35
+    row_scale = lo + (hi - lo) * u
+    prior = base * row_scale
+    # Discourage EOS so generations run to length; keep PAD unreachable.
+    prior = prior.at[:, dims.EOS].add(-3.0)
+    prior = prior.at[:, dims.PAD].add(-8.0)
+    # Per-model perturbation (input-independent part of the deviation).
+    km = jax.random.fold_in(k3, 0 if cfg_name == "draft" else 1)
+    eps = {"draft": 0.32, "full": 0.1}[cfg_name]
+    return prior + eps * jax.random.normal(km, (VOCAB, VOCAB), jnp.float32)
+
+
+def init_params(key, cfg: dims.ModelCfg) -> dict:
+    """Flat name->array dict. Sorted names define the manifest arg order."""
+    p = {}
+    keys = iter(jax.random.split(key, 16 + 12 * cfg.n_layers))
+    p["prior"] = _shared_prior(cfg.name)
+    p["embed"] = _dense(next(keys), VOCAB, cfg.d, scale=0.02)
+    p["pos"] = _dense(next(keys), S_MAX, cfg.d, scale=0.02)
+    p["vis_proj"] = _dense(next(keys), dims.D_ENC, cfg.d)
+    p["aud_proj"] = _dense(next(keys), dims.D_ENC, cfg.d)
+    for l in range(cfg.n_layers):
+        pre = f"layers_{l:02d}_"
+        p[pre + "ln1_s"] = jnp.ones((cfg.d,), jnp.float32)
+        p[pre + "ln1_b"] = jnp.zeros((cfg.d,), jnp.float32)
+        p[pre + "wq"] = _dense(next(keys), cfg.d, cfg.d)
+        p[pre + "wk"] = _dense(next(keys), cfg.d, cfg.d)
+        p[pre + "wv"] = _dense(next(keys), cfg.d, cfg.d)
+        p[pre + "wo"] = _dense(next(keys), cfg.d, cfg.d)
+        p[pre + "ln2_s"] = jnp.ones((cfg.d,), jnp.float32)
+        p[pre + "ln2_b"] = jnp.zeros((cfg.d,), jnp.float32)
+        p[pre + "w1"] = _dense(next(keys), cfg.d, cfg.ffn)
+        p[pre + "b1"] = jnp.zeros((cfg.ffn,), jnp.float32)
+        p[pre + "w2"] = _dense(next(keys), cfg.ffn, cfg.d)
+        p[pre + "b2"] = jnp.zeros((cfg.d,), jnp.float32)
+    p["lnf_s"] = jnp.ones((cfg.d,), jnp.float32)
+    p["lnf_b"] = jnp.zeros((cfg.d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def _ln(x, s, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * s + b
+
+
+def _heads(x, n_heads):
+    # [S, D] -> [H, S, Dh]
+    s = x.shape[0]
+    return x.reshape(s, n_heads, DH).transpose(1, 0, 2)
+
+
+def _unheads(x):
+    # [H, S, Dh] -> [S, D]
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def _attn(q, k, v, mask, use_pallas):
+    if use_pallas:
+        sq, sk = q.shape[1], k.shape[1]
+        bq = 48 if sq % 48 == 0 and sq >= 48 else sq
+        # Perf pass (EXPERIMENTS.md §Perf L1): largest K/V block that
+        # divides Sk — fewer interpret-loop iterations per q block and a
+        # better HBM->VMEM streaming ratio on real TPU (VMEM per block at
+        # paper scale stays ~100 KiB, far under budget; DESIGN.md §8).
+        bk = next(b for b in (96, 88, 64, 48, 32, 16, 8) if sk % b == 0)
+        return attention(q, k, v, mask, bq=bq, bk=bk)
+    return ref.attention_ref(q, k, v, mask)
+
+
+def _valid_slots(vlen, alen, tlen):
+    """Boolean [S_MAX] validity of prefill slots given segment lengths."""
+    s = jnp.arange(S_MAX)
+    vis = (s >= VIS_OFF) & (s < VIS_OFF + jnp.minimum(vlen, VIS_SLOTS))
+    aud = (s >= AUD_OFF) & (s < AUD_OFF + jnp.minimum(alen, AUD_SLOTS))
+    txt = (s >= TEXT_OFF) & (s < TEXT_OFF + jnp.minimum(tlen, TEXT_SLOTS))
+    return vis | aud | txt
+
+
+def _block(params, l, x, attn_out):
+    pre = f"layers_{l:02d}_"
+    x = x + attn_out @ params[pre + "wo"]
+    xn = _ln(x, params[pre + "ln2_s"], params[pre + "ln2_b"])
+    h = jax.nn.relu(xn @ params[pre + "w1"] + params[pre + "b1"])
+    return x + h @ params[pre + "w2"] + params[pre + "b2"]
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg, text, tlen, vis, vlen, aud, alen, *, use_pallas=True):
+    """Process the assembled multimodal prompt; build the KV cache.
+
+    text: [TEXT_SLOTS] i32; vis: [VIS_SLOTS, D_ENC]; aud: [AUD_SLOTS, D_ENC];
+    *len: i32 scalars (actual lengths; the rest is padding).
+    Returns (kv [L, 2, H, S_MAX, DH], logits [VOCAB] at the last text pos).
+    """
+    n_heads = cfg.n_heads
+    x = jnp.concatenate(
+        [
+            vis @ params["vis_proj"],
+            aud @ params["aud_proj"],
+            params["embed"][text],
+        ],
+        axis=0,
+    )  # [S_PRE, D]
+    x = x + params["pos"][:S_PRE]
+
+    valid = _valid_slots(vlen, alen, tlen)[:S_PRE]
+    i = jnp.arange(S_PRE)
+    mask = jnp.where(valid[None, :] & (i[None, :] <= i[:, None]), 0.0, NEG)
+
+    kv = jnp.zeros((cfg.n_layers, 2, n_heads, S_MAX, DH), jnp.float32)
+    for l in range(cfg.n_layers):
+        pre = f"layers_{l:02d}_"
+        xn = _ln(x, params[pre + "ln1_s"], params[pre + "ln1_b"])
+        q = _heads(xn @ params[pre + "wq"], n_heads)
+        k = _heads(xn @ params[pre + "wk"], n_heads)
+        v = _heads(xn @ params[pre + "wv"], n_heads)
+        kv = kv.at[l, 0, :, :S_PRE].set(k)
+        kv = kv.at[l, 1, :, :S_PRE].set(v)
+        o = _unheads(_attn(q, k, v, mask, use_pallas))
+        x = _block(params, l, x, o)
+    xf = _ln(x, params["lnf_s"], params["lnf_b"])
+    last = TEXT_OFF + jnp.maximum(tlen, 1) - 1
+    scale = MODEL_LOGIT_SCALE[cfg.name] / jnp.sqrt(jnp.float32(cfg.d))
+    logits = params["prior"][text[jnp.maximum(tlen, 1) - 1]] + scale * (
+        xf[last] @ params["embed"].T
+    )  # [VOCAB]
+    return kv, logits
+
+
+# ---------------------------------------------------------------------------
+# Block decode (N=1 -> decode step; N=N_SPEC -> speculative verify)
+# ---------------------------------------------------------------------------
+
+
+def block_decode(
+    params, cfg, kv, start_pos, tokens, vlen, alen, tlen, *, use_pallas=True
+):
+    """Decode `tokens` at absolute slots [start_pos, start_pos+N).
+
+    kv: [L, 2, H, S_MAX, DH] (the block's slots are overwritten);
+    start_pos: i32 scalar (>= GEN_OFF); tokens: [N] i32 (N static).
+    logits[r] predicts the token *after* tokens[r].
+    Returns (logits [N, VOCAB], kv').
+    """
+    n = tokens.shape[0]
+    n_heads = cfg.n_heads
+
+    rows = start_pos + jnp.arange(n)
+    x = params["embed"][tokens] + params["pos"][rows]  # [N, D]
+
+    # Mask: prefill slots valid per lengths; generated slots valid if
+    # GEN_OFF <= j < start_pos; block slots causal within the block.
+    j = jnp.arange(S_MAX)
+    base = _valid_slots(vlen, alen, tlen) | ((j >= GEN_OFF) & (j < start_pos))
+    r = jnp.arange(n)
+    in_block = (j[None, :] >= start_pos) & (j[None, :] <= start_pos + r[:, None])
+    mask = jnp.where(base[None, :] | in_block, 0.0, NEG)  # [N, S_MAX]
+
+    for l in range(cfg.n_layers):
+        pre = f"layers_{l:02d}_"
+        xn = _ln(x, params[pre + "ln1_s"], params[pre + "ln1_b"])
+        q = _heads(xn @ params[pre + "wq"], n_heads)  # [H, N, Dh]
+        k_new = _heads(xn @ params[pre + "wk"], n_heads)
+        v_new = _heads(xn @ params[pre + "wv"], n_heads)
+        kv = jax.lax.dynamic_update_slice(
+            kv, k_new[None, None], (l, 0, 0, start_pos, 0)
+        )
+        kv = jax.lax.dynamic_update_slice(
+            kv, v_new[None, None], (l, 1, 0, start_pos, 0)
+        )
+        o = _unheads(_attn(q, kv[l, 0], kv[l, 1], mask, use_pallas))
+        x = _block(params, l, x, o)
+    xf = _ln(x, params["lnf_s"], params["lnf_b"])
+    scale = MODEL_LOGIT_SCALE[cfg.name] / jnp.sqrt(jnp.float32(cfg.d))
+    logits = params["prior"][tokens] + scale * (xf @ params["embed"].T)
+    return logits, kv  # [N, VOCAB], kv'

@@ -1,0 +1,202 @@
+"""L2: the lightweight modality-aware probing network (paper §4.1).
+
+Wires the three L1 probe kernels into AOT-able graphs:
+  - probe_spatial : feature map -> importance map (Eq. 3; kernel
+                    spatial_probe) — ratio rho_spatial (Eq. 4) and the
+                    tau_s threshold live on the rust side where the
+                    config is known.
+  - probe_temporal: per-frame pooled features -> gamma_t (Eq. 5; kernel
+                    lsh_gamma).
+  - probe_modal   : prompt tokens + pooled modality reps -> alpha_m
+                    (Eq. 6; kernel modal_scores). Softmax into beta_m is
+                    masked on the rust side for absent modalities.
+  - prune_tokens  : visual tokens + importance -> compacted tokens
+                    (kernel token_prune), feeding the prefill vis slots.
+
+MAS itself (Eq. 7) is pure scalar arithmetic over these outputs and is
+computed in rust/src/sparsity.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import dims
+from .dims import D_ENC, D_PROBE, GRID, LSH_K, N_MODALITIES, TEXT_SLOTS, VOCAB
+from .kernels import ref
+from .kernels.lsh_probe import lsh_gamma
+from .kernels.modal_probe import modal_scores
+from .kernels.spatial_probe import spatial_probe
+from .kernels.token_prune import token_prune
+
+MLP_H = 64
+
+
+def _dense(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(din))
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def train_probe(key, vision_params, audio_params, *, n_train=300, steps=300,
+                lr=0.05, seed=7, verbose=False) -> dict:
+    """Train the probe heads on the synthetic distribution (synth.py).
+
+    - Spatial head (sp_w, sp_b): logistic regression from the encoder's
+      early-layer feature map to the per-patch salience label.
+    - Modal head (pe, zproj, w1, b1, w2, b2): cross-entropy on "which
+      modality does this prompt reference", from (prompt tokens, pooled
+      modality features).
+    The LSH projection needs no training (hash similarity is intrinsic).
+    Mirrors the paper's offline-trained lightweight probing network.
+    """
+    import numpy as np
+
+    from . import encoders, synth
+
+    p = init_probe(key)
+    rng = np.random.default_rng(seed)
+
+    # --- spatial head -------------------------------------------------
+    enc = jax.jit(lambda x: encoders.vision_encode(vision_params, x, use_pallas=False))
+    feats, labels = [], []
+    for _ in range(n_train):
+        patches, mask = synth.make_image(rng)
+        _, _, feat, _ = enc(jnp.asarray(patches))
+        feats.append(np.asarray(feat).reshape(-1, dims.C_FEAT))
+        labels.append(mask.astype(np.float32))
+    x = jnp.asarray(np.concatenate(feats))          # [N*256, C]
+    y = jnp.asarray(np.concatenate(labels))         # [N*256]
+
+    def sp_loss(params):
+        w, b = params
+        logit = x @ w + b[0]
+        return jnp.mean(
+            jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+
+    sp = (p["sp_w"], p["sp_b"])
+    g = jax.jit(jax.value_and_grad(sp_loss))
+    for i in range(steps):
+        loss, grads = g(sp)
+        sp = tuple(a - lr * 4.0 * da for a, da in zip(sp, grads))
+    p["sp_w"], p["sp_b"] = sp
+    if verbose:
+        print(f"  spatial probe loss {float(loss):.4f}")
+
+    # --- modal head -----------------------------------------------------
+    aud_enc = jax.jit(lambda a: encoders.audio_encode(audio_params, a))
+    xs_text, xs_pooled, ys = [], [], []
+    for _ in range(n_train):
+        m = int(rng.integers(0, dims.N_MODALITIES))
+        text, tlen = synth.make_question(rng, m)
+        pooled = np.zeros((dims.N_MODALITIES, dims.D_ENC), np.float32)
+        patches, _ = synth.make_image(rng)
+        _, _, _, pv = enc(jnp.asarray(patches))
+        pooled[1] = np.asarray(pv)
+        pooled[2] = pooled[1] + 0.1 * rng.standard_normal(dims.D_ENC)
+        _, pa = aud_enc(jnp.asarray(synth.make_audio(rng)))
+        pooled[3] = np.asarray(pa)
+        pooled[0] = 0.0
+        xs_text.append(text)
+        xs_pooled.append(pooled)
+        ys.append(m)
+    xt = jnp.asarray(np.stack(xs_text))
+    xp = jnp.asarray(np.stack(xs_pooled))
+    yy = jnp.asarray(np.asarray(ys, np.int32))
+
+    def modal_loss(params):
+        pe, zproj, te, w1, b1, w2, b2 = params
+        emb = pe[xt]                                   # [B, T, Dp]
+        m = (xt != 256).astype(jnp.float32)            # PAD mask
+        prompt = (emb * m[..., None]).sum(1) / jnp.maximum(m.sum(1, keepdims=True), 1.0)
+        prompt = prompt / (jnp.linalg.norm(prompt, axis=-1, keepdims=True) + 1e-6)
+        z = xp @ zproj + te                            # [B, M, Dp]
+        z = z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-6)
+        cat = jnp.concatenate(
+            [jnp.broadcast_to(prompt[:, None, :], z.shape), z], -1
+        )
+        h = jax.nn.relu(cat @ w1 + b1)
+        logits = h @ w2 + b2[0]                        # [B, M]
+        lp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.take_along_axis(lp, yy[:, None], 1))
+
+    mp = (p["pe"], p["zproj"], p["type_emb"], p["w1"], p["b1"], p["w2"], p["b2"])
+    g2 = jax.jit(jax.value_and_grad(modal_loss))
+    for i in range(4 * steps):
+        loss2, grads = g2(mp)
+        # Clip by global norm for stability at this lr.
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+        clip = jnp.minimum(1.0, 1.0 / (gn + 1e-9))
+        mp = tuple(a - 2.0 * lr * clip * da for a, da in zip(mp, grads))
+    p["pe"], p["zproj"], p["type_emb"], p["w1"], p["b1"], p["w2"], p["b2"] = mp
+    if verbose:
+        print(f"  modal probe loss {float(loss2):.4f}")
+    return p
+
+
+def init_probe(key) -> dict:
+    keys = iter(jax.random.split(key, 8))
+    return {
+        "sp_w": jax.random.normal(next(keys), (dims.C_FEAT,), jnp.float32)
+        * (1.0 / jnp.sqrt(jnp.float32(dims.C_FEAT))),
+        "sp_b": jnp.zeros((1,), jnp.float32),
+        "lsh_proj": jax.random.normal(
+            next(keys), (D_ENC, LSH_K), jnp.float32
+        ),
+        "pe": _dense(next(keys), VOCAB, D_PROBE, scale=0.05),
+        "zproj": _dense(next(keys), D_ENC, D_PROBE),
+        "w1": _dense(next(keys), 2 * D_PROBE, MLP_H),
+        "b1": jnp.zeros((MLP_H,), jnp.float32),
+        "w2": jax.random.normal(next(keys), (MLP_H,), jnp.float32)
+        * (1.0 / jnp.sqrt(jnp.float32(MLP_H))),
+        "b2": jnp.zeros((1,), jnp.float32),
+        # Modality type embedding added to z_m (segment-embedding style):
+        # real encoders produce modality-distinct features; our synthetic
+        # pooled vectors for image/video are near-identical, so the type
+        # tag restores the separability Eq. 6 assumes.
+        "type_emb": 0.1
+        * jax.random.normal(next(keys), (N_MODALITIES, D_PROBE), jnp.float32),
+    }
+
+
+def probe_spatial(p, feat, *, use_pallas=True):
+    """feat: [GRID, GRID, C_FEAT] -> importance map [GRID, GRID]."""
+    if use_pallas:
+        return spatial_probe(feat, p["sp_w"], p["sp_b"])
+    return ref.spatial_probe_ref(feat, p["sp_w"], p["sp_b"][0])
+
+
+def probe_temporal(p, frames, *, use_pallas=True):
+    """frames: [N_FRAMES, D_ENC] pooled -> gamma [N_FRAMES]."""
+    if use_pallas:
+        return lsh_gamma(frames, p["lsh_proj"])
+    return ref.lsh_gamma_ref(frames, p["lsh_proj"])
+
+
+def probe_modal(p, text, tlen, pooled, *, use_pallas=True):
+    """text: [TEXT_SLOTS] i32 prompt tokens; tlen: i32; pooled:
+    [N_MODALITIES, D_ENC] per-modality summary vectors.
+    Returns alpha [N_MODALITIES] raw relevance scores."""
+    emb = p["pe"][text]  # [TEXT_SLOTS, D_PROBE]
+    m = (jnp.arange(TEXT_SLOTS) < tlen).astype(jnp.float32)
+    prompt = (emb * m[:, None]).sum(0) / jnp.maximum(m.sum(), 1.0)
+    # Unit-normalize both branches (cosine-style relevance): without this
+    # the pooled-feature magnitude swamps the prompt signal and the MLP
+    # memorizes content noise instead of learning the keyword rule.
+    prompt = prompt / (jnp.linalg.norm(prompt) + 1e-6)
+    z = pooled @ p["zproj"] + p["type_emb"]  # [M, D_PROBE]
+    z = z / (jnp.linalg.norm(z, axis=-1, keepdims=True) + 1e-6)
+    if use_pallas:
+        return modal_scores(prompt, z, p["w1"], p["b1"], p["w2"], p["b2"])
+    return ref.modal_scores_ref(
+        prompt, z, p["w1"], p["b1"], p["w2"], p["b2"][0]
+    )
+
+
+def prune_tokens(tokens, imp_map, tau, *, use_pallas=True):
+    """tokens: [N_PATCH, D_ENC]; imp_map: [GRID, GRID]; tau: [1] f32.
+    Returns (pruned [VIS_SLOTS, D_ENC], idx [VIS_SLOTS] i32, count [1])."""
+    imp = imp_map.reshape(-1)
+    if use_pallas:
+        return token_prune(tokens, imp, tau, dims.VIS_SLOTS)
+    out, idx, count = ref.token_prune_ref(tokens, imp, tau[0], dims.VIS_SLOTS)
+    return out, idx, count[None]

@@ -1,0 +1,102 @@
+"""Synthetic multimodal data distribution — the python half.
+
+The probe heads are *trained* (logistic regression / few-step SGD) on
+samples from this distribution at AOT time; the rust workload generator
+(rust/src/workload) draws from the same distribution (statistically, not
+bit-identically) at run time. This mirrors the paper's setup where the
+lightweight probing network is trained offline and generalizes to the
+benchmark inputs.
+
+Distribution contract (keep in sync with rust/src/workload/generator.rs):
+  - images: GRID x GRID patches; a rectangular salient region of
+    SAL_MIN..SAL_MAX patches gets structured high-energy content
+    (sin ramp * SAL_AMP + noise); background is low-energy noise
+    (BG_AMP * N(0,1)).
+  - video: N_FRAMES frames; each frame either repeats the previous one
+    plus DRIFT noise (static) or is freshly sampled (dynamic scene cut).
+  - audio: AUDIO_T x AUDIO_D smooth noise (sum of random sinusoids).
+  - questions: template text with a modality keyword; the relevant
+    modality is the classification target of the modal probe.
+"""
+
+import numpy as np
+
+from .dims import (
+    AUDIO_D,
+    AUDIO_T,
+    GRID,
+    N_PATCH,
+    PATCH_DIM,
+    TEXT_SLOTS,
+    BOS,
+    SEP,
+)
+
+SAL_AMP = 1.6
+BG_AMP = 0.35
+SAL_MIN, SAL_MAX = 3, 8  # salient rectangle side in patches
+DRIFT = 0.05
+
+# Keyword templates per modality (index order: text, image, video, audio —
+# matches sparsity::Modality on the rust side).
+TEMPLATES = [
+    ["define the word", "what does the phrase mean", "spell the term"],
+    ["what color is the object", "describe the picture", "what shape is shown in the image"],
+    ["what happens in the video", "describe the motion in the clip", "what moves across the frames"],
+    ["what sound is heard", "describe the audio", "who is the speaker in the recording"],
+]
+
+
+def make_image(rng: np.random.Generator):
+    """Returns (patches [N_PATCH, PATCH_DIM], salient_mask [N_PATCH])."""
+    patches = BG_AMP * rng.standard_normal((N_PATCH, PATCH_DIM))
+    w = rng.integers(SAL_MIN, SAL_MAX + 1)
+    h = rng.integers(SAL_MIN, SAL_MAX + 1)
+    r0 = rng.integers(0, GRID - h + 1)
+    c0 = rng.integers(0, GRID - w + 1)
+    mask = np.zeros((GRID, GRID), bool)
+    mask[r0 : r0 + h, c0 : c0 + w] = True
+    mask = mask.reshape(-1)
+    ramp = np.sin(np.linspace(0, 6 * np.pi, PATCH_DIM)) * SAL_AMP
+    n_sal = int(mask.sum())
+    patches[mask] = ramp[None, :] + SAL_AMP * 0.5 * rng.standard_normal(
+        (n_sal, PATCH_DIM)
+    )
+    return patches.astype(np.float32), mask
+
+
+def make_video(rng: np.random.Generator, n_frames: int, p_static: float = 0.6):
+    """Returns (frames [n_frames, N_PATCH, PATCH_DIM], novel [n_frames])."""
+    frames = np.zeros((n_frames, N_PATCH, PATCH_DIM), np.float32)
+    novel = np.zeros(n_frames, bool)
+    cur, _ = make_image(rng)
+    frames[0] = cur
+    novel[0] = True
+    for t in range(1, n_frames):
+        if rng.random() < p_static:
+            cur = cur + DRIFT * rng.standard_normal(cur.shape).astype(np.float32)
+        else:
+            cur, _ = make_image(rng)
+            novel[t] = True
+        frames[t] = cur
+    return frames, novel
+
+
+def make_audio(rng: np.random.Generator):
+    t = np.arange(AUDIO_T)[:, None]
+    f = np.arange(AUDIO_D)[None, :]
+    sig = sum(
+        rng.standard_normal() * np.sin(2 * np.pi * (rng.random() * 0.1) * t + f * rng.random())
+        for _ in range(4)
+    )
+    return (sig + 0.1 * rng.standard_normal((AUDIO_T, AUDIO_D))).astype(np.float32)
+
+
+def make_question(rng: np.random.Generator, modality_idx: int):
+    """Returns (token array [TEXT_SLOTS] i32, tlen)."""
+    t = TEMPLATES[modality_idx][rng.integers(0, len(TEMPLATES[modality_idx]))]
+    toks = [BOS] + [b for b in t.encode()][: TEXT_SLOTS - 2] + [SEP]
+    tlen = len(toks)
+    out = np.full(TEXT_SLOTS, 256, np.int32)  # PAD
+    out[:tlen] = toks
+    return out, tlen

@@ -1,0 +1,5 @@
+"""Make `compile` importable whether pytest runs from python/ or repo root."""
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

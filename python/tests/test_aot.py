@@ -1,0 +1,84 @@
+"""AOT artifact smoke: manifest consistency and HLO presence.
+
+Skipped when artifacts/ has not been built (run `make artifacts` first);
+the Makefile always builds artifacts before pytest.
+"""
+
+import json
+import os
+import zipfile
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built",
+)
+
+
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+EXPECTED_GRAPHS = {
+    "vision_encoder", "audio_encoder", "probe_spatial", "probe_temporal",
+    "probe_modal", "prune_tokens", "draft_prefill", "draft_decode",
+    "full_prefill", "full_decode", "full_verify",
+}
+
+
+def test_all_graphs_present():
+    m = manifest()
+    assert set(m["graphs"].keys()) == EXPECTED_GRAPHS
+    for g in m["graphs"].values():
+        path = os.path.join(ART, g["file"])
+        assert os.path.exists(path), g["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_weight_groups_match_npz():
+    m = manifest()
+    for group, info in m["weights"].items():
+        path = os.path.join(ART, info["file"])
+        with zipfile.ZipFile(path) as z:
+            names = {n.removesuffix(".npy") for n in z.namelist()}
+        assert names == set(info["names"]), group
+
+
+def test_graph_weight_counts():
+    m = manifest()
+    for name, g in m["graphs"].items():
+        if g["weights"] is None:
+            assert g["n_weight_args"] == 0
+        else:
+            assert g["n_weight_args"] == len(m["weights"][g["weights"]]["names"]), name
+
+
+def test_kv_shapes_consistent():
+    m = manifest()
+    c = m["constants"]
+    kv_draft = m["graphs"]["draft_decode"]["inputs"][0]["shape"]
+    assert kv_draft == [
+        c["DRAFT_LAYERS"], 2, c["DRAFT_HEADS"], c["S_MAX"], c["DH"]
+    ]
+    kv_full = m["graphs"]["full_verify"]["inputs"][0]["shape"]
+    assert kv_full == [
+        c["FULL_LAYERS"], 2, c["FULL_HEADS"], c["S_MAX"], c["DH"]
+    ]
+    # decode outputs: logits then kv, same kv shape in/out
+    outs = m["graphs"]["full_verify"]["outputs"]
+    assert outs[0]["shape"] == [c["N_SPEC"], c["VOCAB"]]
+    assert outs[1]["shape"] == kv_full
+
+
+def test_weights_are_finite():
+    m = manifest()
+    for group, info in m["weights"].items():
+        with np.load(os.path.join(ART, info["file"])) as z:
+            for n in z.files:
+                assert np.isfinite(z[n]).all(), f"{group}:{n}"

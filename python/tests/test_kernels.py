@@ -1,0 +1,215 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; fixed cases pin the
+edge conditions (empty selections, fully-masked rows, degenerate sizes).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import NEG, attention
+from compile.kernels.lsh_probe import lsh_gamma
+from compile.kernels.modal_probe import modal_scores
+from compile.kernels.spatial_probe import spatial_probe
+from compile.kernels.token_prune import token_prune
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# --- spatial probe ---------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.sampled_from([4, 8, 16]),
+    c=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spatial_probe_matches_ref(g, c, seed):
+    r = rng(seed)
+    feat = jnp.asarray(r.standard_normal((g, g, c)), jnp.float32)
+    w = jnp.asarray(r.standard_normal((c,)), jnp.float32)
+    b = jnp.asarray(r.standard_normal((1,)), jnp.float32)
+    got = spatial_probe(feat, w, b)
+    want = ref.spatial_probe_ref(feat, w, b[0])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_spatial_probe_range():
+    r = rng(0)
+    feat = jnp.asarray(r.standard_normal((16, 16, 32)) * 10, jnp.float32)
+    w = jnp.asarray(r.standard_normal((32,)), jnp.float32)
+    m = spatial_probe(feat, w, jnp.zeros((1,), jnp.float32))
+    assert float(m.min()) >= 0.0 and float(m.max()) <= 1.0
+
+
+# --- LSH temporal probe ----------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(2, 8),
+    d=st.sampled_from([32, 64, 128]),
+    k=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lsh_gamma_matches_ref(t, d, k, seed):
+    r = rng(seed)
+    frames = jnp.asarray(r.standard_normal((t, d)), jnp.float32)
+    proj = jnp.asarray(r.standard_normal((d, k)), jnp.float32)
+    got = lsh_gamma(frames, proj)
+    want = ref.lsh_gamma_ref(frames, proj)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_lsh_identical_frames_are_fully_redundant():
+    r = rng(1)
+    f0 = r.standard_normal((1, 64)).astype(np.float32)
+    frames = jnp.asarray(np.repeat(f0, 4, axis=0))
+    proj = jnp.asarray(r.standard_normal((64, 32)), jnp.float32)
+    gamma = np.asarray(lsh_gamma(frames, proj))
+    assert gamma[0] == 1.0  # first frame always novel
+    np.testing.assert_allclose(gamma[1:], 0.0, atol=1e-7)
+
+
+def test_lsh_opposite_frames_are_novel():
+    r = rng(2)
+    f0 = r.standard_normal((64,)).astype(np.float32)
+    frames = jnp.asarray(np.stack([f0, -f0]))
+    proj = jnp.asarray(r.standard_normal((64, 32)), jnp.float32)
+    gamma = np.asarray(lsh_gamma(frames, proj))
+    # sign(r.f) != sign(-r.f) whenever r.f != 0 -> near-zero agreement.
+    assert gamma[1] > 0.95
+
+
+# --- modal probe -----------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 4),
+    dp=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_modal_scores_matches_ref(m, dp, seed):
+    r = rng(seed)
+    h = 48
+    p = jnp.asarray(r.standard_normal((dp,)), jnp.float32)
+    z = jnp.asarray(r.standard_normal((m, dp)), jnp.float32)
+    w1 = jnp.asarray(r.standard_normal((2 * dp, h)) * 0.1, jnp.float32)
+    b1 = jnp.asarray(r.standard_normal((h,)) * 0.1, jnp.float32)
+    w2 = jnp.asarray(r.standard_normal((h,)) * 0.1, jnp.float32)
+    b2 = jnp.asarray(r.standard_normal((1,)) * 0.1, jnp.float32)
+    got = modal_scores(p, z, w1, b1, w2, b2)
+    want = ref.modal_scores_ref(p, z, w1, b1, w2, b2[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# --- attention -------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 4]),
+    sq=st.sampled_from([1, 6, 64, 96]),
+    sk=st.sampled_from([64, 128, 352]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(h, sq, sk, seed):
+    r = rng(seed)
+    dh = 32
+    q = jnp.asarray(r.standard_normal((h, sq, dh)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((h, sk, dh)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((h, sk, dh)), jnp.float32)
+    # Random validity + causal-ish structure in the mask.
+    valid = r.random((sk,)) < 0.8
+    valid[0] = True  # at least one attendable slot
+    mask = jnp.where(jnp.asarray(valid)[None, :], 0.0, NEG)
+    mask = jnp.broadcast_to(mask, (sq, sk))
+    bq = sq if sq < 48 else (48 if sq % 48 == 0 else 32)
+    got = attention(q, k, v, mask, bq=bq, bk=32)
+    want = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_fully_masked_rows_match_ref():
+    # With finite NEG a fully-masked row degrades to a uniform average in
+    # both kernel and oracle; the model only ever reads valid rows, but the
+    # two implementations must still agree bit-for-bit-ish here.
+    r = rng(3)
+    q = jnp.asarray(r.standard_normal((2, 32, 32)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((2, 64, 32)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((2, 64, 32)), jnp.float32)
+    mask = jnp.full((32, 64), NEG)
+    got = np.asarray(attention(q, k, v, mask, bq=32, bk=32))
+    want = np.asarray(ref.attention_ref(q, k, v, mask))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_attention_is_row_softmax_convex_combination():
+    r = rng(4)
+    q = jnp.asarray(r.standard_normal((1, 32, 32)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, 64, 32)), jnp.float32)
+    v = jnp.ones((1, 64, 32), jnp.float32)
+    mask = jnp.zeros((32, 64))
+    out = np.asarray(attention(q, k, v, mask, bq=32, bk=32))
+    np.testing.assert_allclose(out, 1.0, rtol=1e-5)  # convex comb of ones
+
+
+# --- token prune -----------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 64, 256]),
+    keep_frac=st.floats(0.1, 1.0),
+    tau=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_token_prune_matches_ref(n, keep_frac, tau, seed):
+    r = rng(seed)
+    d = 16
+    keep = max(1, int(n * keep_frac))
+    tokens = jnp.asarray(r.standard_normal((n, d)), jnp.float32)
+    imp = jnp.asarray(r.random((n,)), jnp.float32)
+    tau_a = jnp.asarray([tau], jnp.float32)
+    got_o, got_i, got_c = token_prune(tokens, imp, tau_a, keep)
+    want_o, want_i, want_c = ref.token_prune_ref(tokens, imp, tau, keep)
+    np.testing.assert_allclose(got_o, want_o)
+    np.testing.assert_array_equal(got_i, want_i)
+    assert int(got_c[0]) == int(want_c)
+
+
+def test_token_prune_none_selected():
+    tokens = jnp.ones((32, 8), jnp.float32)
+    imp = jnp.zeros((32,), jnp.float32)
+    out, idx, cnt = token_prune(tokens, imp, jnp.asarray([0.5], jnp.float32), 16)
+    assert int(cnt[0]) == 0
+    np.testing.assert_allclose(out, 0.0)
+    assert int(np.asarray(idx).max()) == -1
+
+
+def test_token_prune_all_selected_capped():
+    tokens = jnp.arange(32 * 4, dtype=jnp.float32).reshape(32, 4)
+    imp = jnp.ones((32,), jnp.float32)
+    out, idx, cnt = token_prune(tokens, imp, jnp.asarray([0.5], jnp.float32), 8)
+    assert int(cnt[0]) == 8
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8))
+    np.testing.assert_allclose(out, np.asarray(tokens)[:8])
+
+
+def test_token_prune_order_preserving():
+    r = rng(5)
+    tokens = jnp.asarray(r.standard_normal((64, 4)), jnp.float32)
+    imp = jnp.asarray(r.random((64,)), jnp.float32)
+    _, idx, cnt = token_prune(tokens, imp, jnp.asarray([0.6], jnp.float32), 32)
+    idx = np.asarray(idx)[: int(cnt[0])]
+    assert (np.diff(idx) > 0).all()

@@ -1,0 +1,204 @@
+"""L2 correctness: model graphs with Pallas kernels vs pure-jnp reference,
+plus the structural invariants the rust coordinator relies on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dims, encoders, model, probe as probe_mod
+from compile.dims import DRAFT, FULL, GEN_OFF, S_MAX, TEXT_OFF
+
+
+@functools.lru_cache(maxsize=None)
+def params(tag):
+    key = jax.random.PRNGKey({"draft": 10, "full": 11}[tag])
+    return model.init_params(key, {"draft": DRAFT, "full": FULL}[tag])
+
+
+def make_inputs(seed=0, tlen=7, vlen=120, alen=0):
+    r = np.random.default_rng(seed)
+    text = np.full((dims.TEXT_SLOTS,), dims.PAD, np.int32)
+    text[:tlen] = r.integers(0, 256, tlen)
+    vis = r.standard_normal((dims.VIS_SLOTS, dims.D_ENC)).astype(np.float32)
+    aud = r.standard_normal((dims.AUD_SLOTS, dims.D_ENC)).astype(np.float32)
+    return (
+        jnp.asarray(text),
+        jnp.int32(tlen),
+        jnp.asarray(vis),
+        jnp.int32(vlen),
+        jnp.asarray(aud),
+        jnp.int32(alen),
+    )
+
+
+@pytest.mark.parametrize("tag,cfg", [("draft", DRAFT), ("full", FULL)])
+def test_prefill_pallas_matches_ref(tag, cfg):
+    p = params(tag)
+    args = make_inputs()
+    kv1, l1 = jax.jit(
+        lambda *a: model.prefill(p, cfg, *a, use_pallas=True)
+    )(*args)
+    kv2, l2 = jax.jit(
+        lambda *a: model.prefill(p, cfg, *a, use_pallas=False)
+    )(*args)
+    np.testing.assert_allclose(l1, l2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(kv1, kv2, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("tag,cfg", [("draft", DRAFT), ("full", FULL)])
+def test_decode_pallas_matches_ref(tag, cfg):
+    p = params(tag)
+    args = make_inputs()
+    kv, _ = jax.jit(lambda *a: model.prefill(p, cfg, *a, use_pallas=False))(
+        *args
+    )
+    toks = jnp.asarray([42], jnp.int32)
+    lens = (args[3], args[5], args[1])
+    l1, _ = model.block_decode(
+        p, cfg, kv, jnp.int32(GEN_OFF), toks, *lens, use_pallas=True
+    )
+    l2, _ = model.block_decode(
+        p, cfg, kv, jnp.int32(GEN_OFF), toks, *lens, use_pallas=False
+    )
+    np.testing.assert_allclose(l1, l2, rtol=2e-3, atol=2e-3)
+
+
+def test_padding_content_does_not_change_logits():
+    """Masking invariant: bytes in padded slots must be invisible."""
+    p = params("draft")
+    args = list(make_inputs(tlen=5, vlen=64))
+    _, l1 = model.prefill(p, DRAFT, *args, use_pallas=False)
+    # Scribble over padded text slots and padded vis rows.
+    text = np.asarray(args[0]).copy()
+    text[5:] = 99
+    vis = np.asarray(args[2]).copy()
+    vis[64:] = 123.0
+    args[0] = jnp.asarray(text)
+    args[2] = jnp.asarray(vis)
+    _, l2 = model.prefill(p, DRAFT, *args, use_pallas=False)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_writes_only_its_slots():
+    p = params("draft")
+    args = make_inputs()
+    kv, _ = model.prefill(p, DRAFT, *args, use_pallas=False)
+    lens = (args[3], args[5], args[1])
+    _, kv2 = model.block_decode(
+        p, DRAFT, kv, jnp.int32(GEN_OFF), jnp.asarray([7], jnp.int32), *lens,
+        use_pallas=False,
+    )
+    kv, kv2 = np.asarray(kv), np.asarray(kv2)
+    # Everything except slot GEN_OFF is untouched.
+    mask = np.ones(kv.shape, bool)
+    mask[:, :, :, GEN_OFF] = False
+    np.testing.assert_array_equal(kv[mask], kv2[mask])
+    assert not np.allclose(kv[:, :, :, GEN_OFF], kv2[:, :, :, GEN_OFF])
+
+
+def test_block_decode_equals_sequential_decode():
+    """Verify semantics: scoring N tokens in one block must equal feeding
+    them one by one — the property speculative verification depends on."""
+    p = params("full")
+    args = make_inputs(seed=3)
+    lens = (args[3], args[5], args[1])
+    kv0, _ = model.prefill(p, FULL, *args, use_pallas=False)
+
+    toks = np.asarray([5, 17, 290, 31, 264, 112], np.int32)
+    block_logits, _ = model.block_decode(
+        p, FULL, kv0, jnp.int32(GEN_OFF), jnp.asarray(toks), *lens,
+        use_pallas=False,
+    )
+    kv = kv0
+    seq_logits = []
+    for i, t in enumerate(toks):
+        lg, kv = model.block_decode(
+            p, FULL, kv, jnp.int32(GEN_OFF + i),
+            jnp.asarray([t], jnp.int32), *lens, use_pallas=False,
+        )
+        seq_logits.append(np.asarray(lg[0]))
+    np.testing.assert_allclose(
+        np.asarray(block_logits), np.stack(seq_logits), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_prefill_logits_depend_on_visual_tokens():
+    p = params("draft")
+    a1 = make_inputs(seed=1)
+    a2 = list(a1)
+    vis = np.asarray(a2[2]).copy()
+    vis[:64] += 1.0
+    a2[2] = jnp.asarray(vis)
+    _, l1 = model.prefill(p, DRAFT, *a1, use_pallas=False)
+    _, l2 = model.prefill(p, DRAFT, *a2, use_pallas=False)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_vision_encoder_shapes_and_pallas_parity():
+    vp = encoders.init_vision(jax.random.PRNGKey(7))
+    patches = jnp.asarray(
+        np.random.default_rng(0)
+        .standard_normal((dims.N_PATCH, dims.PATCH_DIM))
+        .astype(np.float32)
+    )
+    t1, t32_1, f1, p1 = encoders.vision_encode(vp, patches, use_pallas=True)
+    t2, t32_2, f2, p2 = encoders.vision_encode(vp, patches, use_pallas=False)
+    assert t1.shape == (dims.N_PATCH, dims.D_ENC)
+    assert t32_1.shape == (dims.FRAME_TOK, dims.D_ENC)
+    assert f1.shape == (dims.GRID, dims.GRID, dims.C_FEAT)
+    assert p1.shape == (dims.D_ENC,)
+    np.testing.assert_allclose(t1, t2, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(f1, f2, rtol=2e-3, atol=2e-3)
+
+
+def test_probe_graphs_pallas_parity():
+    pp = probe_mod.init_probe(jax.random.PRNGKey(8))
+    r = np.random.default_rng(2)
+    feat = jnp.asarray(
+        r.standard_normal((dims.GRID, dims.GRID, dims.C_FEAT)), jnp.float32
+    )
+    np.testing.assert_allclose(
+        probe_mod.probe_spatial(pp, feat, use_pallas=True),
+        probe_mod.probe_spatial(pp, feat, use_pallas=False),
+        rtol=1e-5, atol=1e-6,
+    )
+    frames = jnp.asarray(
+        r.standard_normal((dims.N_FRAMES, dims.D_ENC)), jnp.float32
+    )
+    np.testing.assert_allclose(
+        probe_mod.probe_temporal(pp, frames, use_pallas=True),
+        probe_mod.probe_temporal(pp, frames, use_pallas=False),
+        rtol=1e-6, atol=1e-7,
+    )
+    text = jnp.asarray(
+        np.pad(r.integers(0, 256, 9), (0, dims.TEXT_SLOTS - 9)), jnp.int32
+    )
+    pooled = jnp.asarray(
+        r.standard_normal((dims.N_MODALITIES, dims.D_ENC)), jnp.float32
+    )
+    np.testing.assert_allclose(
+        probe_mod.probe_modal(pp, text, jnp.int32(9), pooled, use_pallas=True),
+        probe_mod.probe_modal(pp, text, jnp.int32(9), pooled, use_pallas=False),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_probe_modal_prompt_masking():
+    """Tokens past tlen must not influence the prompt embedding."""
+    pp = probe_mod.init_probe(jax.random.PRNGKey(9))
+    r = np.random.default_rng(3)
+    pooled = jnp.asarray(
+        r.standard_normal((dims.N_MODALITIES, dims.D_ENC)), jnp.float32
+    )
+    t1 = np.full((dims.TEXT_SLOTS,), 7, np.int32)
+    t2 = t1.copy()
+    t2[10:] = 200
+    a1 = probe_mod.probe_modal(pp, jnp.asarray(t1), jnp.int32(10), pooled,
+                               use_pallas=False)
+    a2 = probe_mod.probe_modal(pp, jnp.asarray(t2), jnp.int32(10), pooled,
+                               use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=1e-6)

@@ -1,0 +1,60 @@
+"""Synthetic distribution contract tests (synth.py <-> rust generator).
+
+These pin the statistical properties both sides rely on: salient patches
+carry higher energy, static frames drift slightly, templates reference
+the right modality keywords.
+"""
+
+import numpy as np
+
+from compile import synth
+from compile.dims import N_PATCH, PATCH_DIM, TEXT_SLOTS
+
+
+def test_image_salience_energy_gap():
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        patches, mask = synth.make_image(rng)
+        assert patches.shape == (N_PATCH, PATCH_DIM)
+        e = (patches**2).mean(axis=1)
+        assert e[mask].mean() > 5 * e[~mask].mean()
+
+
+def test_video_static_frames_are_near_duplicates():
+    rng = np.random.default_rng(1)
+    frames, novel = synth.make_video(rng, 8, p_static=0.5)
+    assert novel[0]
+    for t in range(1, 8):
+        d = np.abs(frames[t] - frames[t - 1]).mean()
+        if novel[t]:
+            assert d > 0.3
+        else:
+            assert d < 0.1
+
+
+def test_questions_reference_modality_keywords():
+    rng = np.random.default_rng(2)
+    keywords = ["word", "ima", "vid", "aud"]  # loose per-modality markers
+    hits = 0
+    for m in range(4):
+        toks, tlen = synth.make_question(rng, m)
+        assert toks.shape == (TEXT_SLOTS,)
+        text = bytes(int(t) for t in toks[1 : tlen - 1]).decode()
+        # Each class template mentions its modality family.
+        families = [
+            ["word", "phrase", "term"],
+            ["picture", "image", "object", "color", "shape"],
+            ["video", "clip", "frames", "motion", "moves"],
+            ["sound", "audio", "speaker", "recording", "heard"],
+        ]
+        if any(k in text for k in families[m]):
+            hits += 1
+    assert hits == 4
+    del keywords
+
+
+def test_audio_shape_and_finite():
+    rng = np.random.default_rng(3)
+    a = synth.make_audio(rng)
+    assert a.shape == (32, 80)
+    assert np.isfinite(a).all()

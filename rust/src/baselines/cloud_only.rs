@@ -1,0 +1,98 @@
+//! Cloud-only baseline: every modality ships raw to the cloud; the full
+//! model does prefill and all decoding; tokens stream back at the end.
+//! Suffers exactly what the paper describes: heavy uplink transmission
+//! and serialized cloud inference under load.
+
+use anyhow::Result;
+
+use crate::cluster::{activation_bytes, kv_bytes, SimModel};
+use crate::coordinator::engines::argmax;
+use crate::coordinator::session::Coordinator;
+use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::metrics::ExecRecord;
+use crate::quality::{self, Capability, ServedInfo};
+use crate::util::Rng;
+use crate::workload::Item;
+
+pub fn serve(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+) -> Result<ExecRecord> {
+    let cfg = coord.cfg.clone();
+    let c = coord.eng.c.clone();
+    let n_out = cfg.msao.max_new_tokens;
+    let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
+
+    // Raw payload uplink.
+    let bytes = super::full_payload_bytes(item);
+    let (_, up_arr) = vc.send_up(arrival, bytes, false);
+    rec.bytes_up = bytes;
+
+    // Cloud encodes + prefills at full fidelity.
+    let inp = super::full_inputs(coord, item, true)?;
+    let vit = SimModel::vision_encoder();
+    let full_m = SimModel::qwen25vl_7b();
+    let enc_frames = inp.frames.max(1) as f64;
+    let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+    let (_, enc_end) = vc.exec(
+        Site::Cloud,
+        up_arr,
+        vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_frames,
+        vit.flops_prefill(enc_patches) * enc_frames,
+    );
+    let (_, pre_end) = vc.exec(
+        Site::Cloud,
+        enc_end,
+        vc.dev(Site::Cloud).prefill_s(&full_m, inp.seq_paper),
+        full_m.flops_prefill(inp.seq_paper),
+    );
+    rec.prefill_s = pre_end - arrival;
+
+    let kv_gb = kv_bytes(&full_m, inp.seq_paper + n_out as f64) / 1e9;
+    vc.cloud_mem.alloc(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
+
+    // Real prefill + decode on the cloud engine.
+    let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let mut tok = argmax(&pre.logits);
+    let mut tokens = vec![tok];
+    let mut t = pre_end;
+    let lens = (inp.vlen, inp.alen, inp.tlen);
+    for j in 0..n_out - 1 {
+        let lg = coord.eng.block(true, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
+        let ctx = inp.seq_paper + j as f64;
+        let (_, end) = vc.exec(
+            Site::Cloud,
+            t,
+            vc.dev(Site::Cloud).decode_s(&full_m, ctx),
+            full_m.flops_decode(ctx),
+        );
+        t = end;
+        tok = argmax(&lg);
+        tokens.push(tok);
+        if tok == c.eos() {
+            break;
+        }
+    }
+    coord.eng.free_kv(true, pre.kv);
+    vc.cloud_mem.free(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
+
+    let (_, done) = vc.send_down(t, 4 * tokens.len() as u64 + 64, false);
+    rec.bytes_down = 4 * tokens.len() as u64 + 64;
+    rec.t_done = done;
+    rec.latency_s = done - arrival;
+    rec.tokens_out = tokens.len();
+    rec.flops_edge = vc.flops_edge;
+    rec.flops_cloud = vc.flops_cloud;
+    rec.mem_edge_gb = vc.edge_mem.peak_gb();
+    rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+    // Cloud-only pins the full model for the stream's entire duration.
+    rec.mem_serving_gb = vc.cloud_mem.peak_gb();
+
+    let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
+    rec.p_correct = quality::p_correct(cap, item, &ServedInfo::default());
+    let mut rng = Rng::seed_from_u64(item.id ^ 0xC10D);
+    rec.correct = quality::sample_correct(&mut rng, rec.p_correct);
+    Ok(rec)
+}

@@ -1,0 +1,90 @@
+//! Edge-only baseline: the lightweight draft model serves everything
+//! locally. No network, full data locality — but capability-limited
+//! (Table 1: 58-64% accuracy) and the edge device is the sole compute
+//! resource, so complex multimodal prompts produce latency tails.
+
+use anyhow::Result;
+
+use crate::cluster::{activation_bytes, kv_bytes, SimModel};
+use crate::coordinator::engines::argmax;
+use crate::coordinator::session::Coordinator;
+use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::metrics::ExecRecord;
+use crate::quality::{self, Capability, ServedInfo};
+use crate::util::Rng;
+use crate::workload::Item;
+
+pub fn serve(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+) -> Result<ExecRecord> {
+    let cfg = coord.cfg.clone();
+    let c = coord.eng.c.clone();
+    let n_out = cfg.msao.max_new_tokens;
+    let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
+
+    let inp = super::full_inputs(coord, item, false)?;
+    let vit = SimModel::vision_encoder();
+    let draft_m = SimModel::qwen2vl_2b();
+    let enc_frames = inp.frames.max(1) as f64;
+    let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+    let (_, enc_end) = vc.exec(
+        Site::Edge,
+        arrival,
+        vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames,
+        vit.flops_prefill(enc_patches) * enc_frames,
+    );
+    let (_, pre_end) = vc.exec(
+        Site::Edge,
+        enc_end,
+        vc.dev(Site::Edge).prefill_s(&draft_m, inp.seq_paper),
+        draft_m.flops_prefill(inp.seq_paper),
+    );
+    rec.prefill_s = pre_end - arrival;
+
+    let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
+    vc.edge_mem.alloc(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
+
+    let pre = coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let mut tok = argmax(&pre.logits);
+    let mut tokens = vec![tok];
+    let mut t = pre_end;
+    let lens = (inp.vlen, inp.alen, inp.tlen);
+    for j in 0..n_out - 1 {
+        let lg = coord.eng.block(false, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
+        let ctx = inp.seq_paper + j as f64;
+        let (_, end) = vc.exec(
+            Site::Edge,
+            t,
+            vc.dev(Site::Edge).decode_s(&draft_m, ctx),
+            draft_m.flops_decode(ctx),
+        );
+        t = end;
+        tok = argmax(&lg);
+        tokens.push(tok);
+        if tok == c.eos() {
+            break;
+        }
+    }
+    coord.eng.free_kv(false, pre.kv);
+    vc.edge_mem.free(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
+
+    rec.t_done = t;
+    rec.latency_s = t - arrival;
+    rec.tokens_out = tokens.len();
+    rec.flops_edge = vc.flops_edge;
+    rec.flops_cloud = vc.flops_cloud;
+    rec.mem_edge_gb = vc.edge_mem.peak_gb();
+    rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+    rec.mem_serving_gb = vc.edge_mem.peak_gb();
+
+    let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
+    // Edge-only tokens carry edge quality; inputs are full fidelity.
+    let info = ServedInfo { cloud_quality_fraction: 0.0, ..Default::default() };
+    rec.p_correct = quality::p_correct(cap, item, &info);
+    let mut rng = Rng::seed_from_u64(item.id ^ 0xED6E);
+    rec.correct = quality::sample_correct(&mut rng, rec.p_correct);
+    Ok(rec)
+}

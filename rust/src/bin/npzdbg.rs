@@ -1,0 +1,12 @@
+use xla::FromRawBytes;
+fn main() {
+    let client = xla::PjRtClient::cpu().unwrap();
+    let v = xla::PjRtBuffer::read_npz("artifacts/draft_weights.npz", &client).unwrap();
+    for (n, b) in v.iter().take(4) {
+        println!("{n}: {:?}", b.on_device_shape().map(|s| format!("{s:?}")));
+    }
+    let lit = xla::Literal::read_npz("artifacts/draft_weights.npz", &()).unwrap();
+    for (n, l) in lit.iter().take(4) {
+        println!("lit {n}: {:?} elems={}", l.shape(), l.element_count());
+    }
+}

@@ -1,0 +1,186 @@
+//! Analytic transformer cost model (substrate, DESIGN.md §3).
+//!
+//! The PJRT-CPU engine gives us *real* token streams, entropies and
+//! acceptance dynamics from the tiny stand-in models; this module maps
+//! those event counts onto the paper's testbed scale — Qwen2-VL-2B on an
+//! RTX 3090 (edge) and Qwen2.5-VL-7B on an A100 (cloud) — producing the
+//! latency / FLOPs / memory numbers the experiments report.
+//!
+//! Standard transformer accounting:
+//!   prefill FLOPs  ~= 2 * P * S + 2 * L * S^2 * D   (GEMMs + attention)
+//!   decode  FLOPs  ~= 2 * P + 2 * L * S_ctx * D      (per token)
+//!   exec time      = max(compute-bound, memory-bound) + launch overhead
+//! Decode is memory-bound (weights streamed per token); prefill is
+//! compute-bound — the max() captures both regimes.
+
+use crate::config::DeviceCfg;
+
+/// Paper-scale model description used for cost accounting.
+#[derive(Debug, Clone, Copy)]
+pub struct SimModel {
+    /// Total parameter count.
+    pub params: f64,
+    /// Hidden width.
+    pub d: f64,
+    /// Transformer layers.
+    pub layers: f64,
+    /// Bytes per parameter as served (fp16).
+    pub bytes_per_param: f64,
+    /// KV-cache bytes per token (2 * layers * d * bytes).
+    pub kv_bytes_per_token: f64,
+}
+
+impl SimModel {
+    /// Qwen2-VL-2B — the edge draft model (paper §5.1.1).
+    pub fn qwen2vl_2b() -> Self {
+        let d = 1536.0;
+        let layers = 28.0;
+        SimModel {
+            params: 2.1e9,
+            d,
+            layers,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 2.0 * layers * d * 2.0,
+        }
+    }
+
+    /// Qwen2.5-VL-7B — the cloud model (paper §5.1.1).
+    pub fn qwen25vl_7b() -> Self {
+        let d = 3584.0;
+        let layers = 28.0;
+        SimModel {
+            params: 7.6e9,
+            d,
+            layers,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 2.0 * layers * d * 2.0,
+        }
+    }
+
+    /// Vision encoder scale (ViT-style, shared by both models).
+    pub fn vision_encoder() -> Self {
+        let d = 1280.0;
+        let layers = 32.0;
+        SimModel {
+            params: 0.67e9,
+            d,
+            layers,
+            bytes_per_param: 2.0,
+            kv_bytes_per_token: 0.0,
+        }
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.bytes_per_param
+    }
+
+    /// Prefill FLOPs over a sequence of `s` tokens.
+    pub fn flops_prefill(&self, s: f64) -> f64 {
+        2.0 * self.params * s + 2.0 * self.layers * s * s * self.d
+    }
+
+    /// FLOPs for one decode step at context length `s_ctx`.
+    pub fn flops_decode(&self, s_ctx: f64) -> f64 {
+        2.0 * self.params + 2.0 * self.layers * s_ctx * self.d
+    }
+
+    /// FLOPs to verify `n` draft tokens in one parallel pass.
+    pub fn flops_verify(&self, n: f64, s_ctx: f64) -> f64 {
+        // Same as prefilling n tokens against s_ctx context.
+        2.0 * self.params * n + 2.0 * self.layers * n * s_ctx * self.d
+    }
+
+    /// Bytes that must stream from HBM for one decode step (weights +
+    /// KV cache at context `s_ctx`).
+    pub fn decode_bytes(&self, s_ctx: f64) -> f64 {
+        self.weight_bytes() + self.kv_bytes_per_token * s_ctx
+    }
+}
+
+/// A device executing cost-model work.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSim {
+    pub cfg: DeviceCfg,
+}
+
+impl DeviceSim {
+    pub fn new(cfg: DeviceCfg) -> Self {
+        DeviceSim { cfg }
+    }
+
+    /// Execution time (seconds) for a kernel of `flops` touching `bytes`.
+    pub fn exec_s(&self, flops: f64, bytes: f64) -> f64 {
+        let compute = flops / (self.cfg.peak_tflops * 1e12 * self.cfg.mfu);
+        let memory = bytes / (self.cfg.mem_bw_gbs * 1e9);
+        compute.max(memory) + self.cfg.launch_us * 1e-6
+    }
+
+    pub fn prefill_s(&self, m: &SimModel, s: f64) -> f64 {
+        self.exec_s(m.flops_prefill(s), m.weight_bytes())
+    }
+
+    pub fn decode_s(&self, m: &SimModel, s_ctx: f64) -> f64 {
+        self.exec_s(m.flops_decode(s_ctx), m.decode_bytes(s_ctx))
+    }
+
+    pub fn verify_s(&self, m: &SimModel, n: f64, s_ctx: f64) -> f64 {
+        self.exec_s(
+            m.flops_verify(n, s_ctx),
+            m.weight_bytes() + m.kv_bytes_per_token * s_ctx,
+        )
+    }
+
+    /// Vision encode time for `n_patches` patches.
+    pub fn encode_s(&self, m: &SimModel, n_patches: f64) -> f64 {
+        self.exec_s(m.flops_prefill(n_patches), m.weight_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceCfg;
+
+    #[test]
+    fn decode_is_memory_bound_prefill_compute_bound() {
+        let a100 = DeviceSim::new(DeviceCfg::a100());
+        let m = SimModel::qwen25vl_7b();
+        // Decode: memory term dominates.
+        let mem_t = m.decode_bytes(512.0) / (a100.cfg.mem_bw_gbs * 1e9);
+        let d = a100.decode_s(&m, 512.0);
+        assert!((d - mem_t - a100.cfg.launch_us * 1e-6).abs() / d < 0.05, "{d} vs {mem_t}");
+        // Prefill at long seq: compute term dominates.
+        let comp_t = m.flops_prefill(2048.0) / (a100.cfg.peak_tflops * 1e12 * a100.cfg.mfu);
+        let p = a100.prefill_s(&m, 2048.0);
+        assert!((p - comp_t - a100.cfg.launch_us * 1e-6).abs() / p < 0.05);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // A100 decoding Qwen-7B: ~10ms/token territory (fp16, mem-bound).
+        let a100 = DeviceSim::new(DeviceCfg::a100());
+        let t = a100.decode_s(&SimModel::qwen25vl_7b(), 1024.0);
+        assert!(t > 0.005 && t < 0.03, "7B decode {t}s/token");
+        // 3090 decoding Qwen-2B: faster per token than A100-7B.
+        let edge = DeviceSim::new(DeviceCfg::rtx3090());
+        let t2 = edge.decode_s(&SimModel::qwen2vl_2b(), 1024.0);
+        assert!(t2 < t, "draft {t2} should beat full {t}");
+    }
+
+    #[test]
+    fn verify_amortizes_vs_sequential_decode() {
+        let a100 = DeviceSim::new(DeviceCfg::a100());
+        let m = SimModel::qwen25vl_7b();
+        let seq: f64 = (0..5).map(|i| a100.decode_s(&m, 512.0 + i as f64)).sum();
+        let ver = a100.verify_s(&m, 5.0, 512.0);
+        assert!(ver < 0.5 * seq, "verify {ver} vs sequential {seq}");
+    }
+
+    #[test]
+    fn monotonic_in_context() {
+        let d = DeviceSim::new(DeviceCfg::rtx3090());
+        let m = SimModel::qwen2vl_2b();
+        assert!(d.decode_s(&m, 2048.0) > d.decode_s(&m, 128.0));
+        assert!(d.prefill_s(&m, 1024.0) > d.prefill_s(&m, 256.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Peak-memory accounting (substrate for Fig. 8).
+//!
+//! Tracks the edge device's GPU memory at paper scale: model weights,
+//! activation working set, KV cache occupancy, and the probe module's
+//! footprint. The tracker is a simple high-water-mark ledger driven by
+//! the coordinator's real allocation events.
+
+use super::costmodel::SimModel;
+
+#[derive(Debug, Clone, Default)]
+pub struct MemTracker {
+    current: f64,
+    peak: f64,
+    /// Static residents (weights) included in every measurement.
+    base: f64,
+}
+
+impl MemTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register permanently-resident bytes (model weights).
+    pub fn set_base(&mut self, bytes: f64) {
+        self.base = bytes;
+        self.peak = self.peak.max(self.base + self.current);
+    }
+
+    pub fn alloc(&mut self, bytes: f64) {
+        self.current += bytes;
+        self.peak = self.peak.max(self.base + self.current);
+    }
+
+    pub fn free(&mut self, bytes: f64) {
+        self.current = (self.current - bytes).max(0.0);
+    }
+
+    pub fn current_gb(&self) -> f64 {
+        (self.base + self.current) / 1e9
+    }
+
+    pub fn peak_gb(&self) -> f64 {
+        self.peak / 1e9
+    }
+
+    /// Peak above the resident base — the marginal memory this workload
+    /// forced beyond the always-on weights (used for shared multi-tenant
+    /// resources like MSAO's cloud verifier).
+    pub fn peak_marginal_gb(&self) -> f64 {
+        ((self.peak - self.base) / 1e9).max(0.0)
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.base + self.current;
+    }
+}
+
+/// Activation working-set estimate for a prefill of `s` tokens (fp16):
+/// roughly 2 * s * d * layers bytes live at once with fused attention.
+pub fn activation_bytes(m: &SimModel, s: f64) -> f64 {
+    2.0 * s * m.d * 4.0 // a few live buffers of [s, d] at fp16
+}
+
+/// KV-cache bytes for `tokens` cached positions.
+pub fn kv_bytes(m: &SimModel, tokens: f64) -> f64 {
+    m.kv_bytes_per_token * tokens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn high_water_mark() {
+        let mut t = MemTracker::new();
+        t.set_base(4e9);
+        t.alloc(2e9);
+        t.alloc(1e9);
+        t.free(2.5e9);
+        assert!((t.peak_gb() - 7.0).abs() < 1e-9);
+        assert!((t.current_gb() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_clamps_at_zero() {
+        let mut t = MemTracker::new();
+        t.alloc(1.0);
+        t.free(5.0);
+        assert_eq!(t.current_gb(), 0.0);
+    }
+
+    #[test]
+    fn kv_scale_sanity() {
+        // Qwen-7B KV at 1k tokens: 2*28*3584*2 bytes/token * 1024 ~= 0.41 GB.
+        let m = SimModel::qwen25vl_7b();
+        let gb = kv_bytes(&m, 1024.0) / 1e9;
+        assert!(gb > 0.3 && gb < 0.5, "{gb}");
+    }
+}

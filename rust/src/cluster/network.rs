@@ -1,0 +1,133 @@
+//! Edge-cloud network link simulator (substrate, Eq. 8).
+//!
+//! T_comm = DataSize / B_eff + RTT, with optional uniform jitter. The
+//! link meters every byte that crosses it (uplink modality payloads,
+//! verify batches, offloaded KV state, downlink tokens) so experiments
+//! can report exact communication volumes. Time is virtual: the
+//! scheduler owns the clock; `Link` only computes durations and tallies
+//! traffic.
+
+use crate::config::NetworkCfg;
+use crate::util::Rng;
+
+#[derive(Debug)]
+pub struct Link {
+    cfg: NetworkCfg,
+    rng: Rng,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub transfers: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Up,
+    Down,
+}
+
+impl Link {
+    pub fn new(cfg: NetworkCfg, seed: u64) -> Self {
+        Link { cfg, rng: Rng::seed_from_u64(seed), uplink_bytes: 0, downlink_bytes: 0, transfers: 0 }
+    }
+
+    pub fn bandwidth_mbps(&self) -> f64 {
+        self.cfg.bandwidth_mbps
+    }
+
+    pub fn rtt_s(&self) -> f64 {
+        self.cfg.rtt_ms * 1e-3
+    }
+
+    /// One-way propagation delay (half the RTT).
+    pub fn one_way_s(&self) -> f64 {
+        0.5 * self.rtt_s()
+    }
+
+    /// Serialization time for `bytes` on the link (no propagation).
+    pub fn serialize_s(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 / (self.cfg.bandwidth_mbps * 1e6)
+    }
+
+    /// Duration of a one-way transfer of `bytes` (Eq. 8 with one-way
+    /// propagation; a request-response pair costs a full RTT).
+    pub fn transfer_s(&mut self, bytes: u64, dir: Dir) -> f64 {
+        self.transfers += 1;
+        match dir {
+            Dir::Up => self.uplink_bytes += bytes,
+            Dir::Down => self.downlink_bytes += bytes,
+        }
+        let base = self.serialize_s(bytes) + self.one_way_s();
+        let j = if self.cfg.jitter > 0.0 {
+            1.0 + self.cfg.jitter * (2.0 * self.rng.f64() - 1.0)
+        } else {
+            1.0
+        };
+        base * j
+    }
+
+    /// Round trip carrying `up` bytes then `down` bytes (Eq. 8: size/B + RTT).
+    pub fn round_trip_s(&mut self, up: u64, down: u64) -> f64 {
+        self.transfer_s(up, Dir::Up) + self.transfer_s(down, Dir::Down)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.uplink_bytes + self.downlink_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bw: f64, rtt: f64, jitter: f64) -> NetworkCfg {
+        NetworkCfg { bandwidth_mbps: bw, rtt_ms: rtt, jitter }
+    }
+
+    #[test]
+    fn eq8_exact_without_jitter() {
+        let mut l = Link::new(cfg(200.0, 20.0, 0.0), 1);
+        // 1 MB at 200 Mbps = 8e6 bits / 2e8 bps = 40 ms, + 10 ms one-way.
+        let t = l.transfer_s(1_000_000, Dir::Up);
+        assert!((t - 0.050).abs() < 1e-9, "{t}");
+        assert_eq!(l.uplink_bytes, 1_000_000);
+    }
+
+    #[test]
+    fn round_trip_includes_full_rtt() {
+        let mut l = Link::new(cfg(400.0, 20.0, 0.0), 1);
+        let t = l.round_trip_s(0, 0);
+        assert!((t - 0.020).abs() < 1e-9, "{t}");
+    }
+
+    #[test]
+    fn monotone_in_bytes_and_bandwidth() {
+        let mut l200 = Link::new(cfg(200.0, 20.0, 0.0), 1);
+        let mut l400 = Link::new(cfg(400.0, 20.0, 0.0), 1);
+        let small = l200.transfer_s(10_000, Dir::Up);
+        let big = l200.transfer_s(1_000_000, Dir::Up);
+        assert!(big > small);
+        assert!(l400.transfer_s(1_000_000, Dir::Up) < big);
+    }
+
+    #[test]
+    fn jitter_bounded_and_reproducible() {
+        let mut a = Link::new(cfg(300.0, 20.0, 0.1), 7);
+        let mut b = Link::new(cfg(300.0, 20.0, 0.1), 7);
+        for _ in 0..100 {
+            let base = 1_000_000.0 * 8.0 / 300e6 + 0.01;
+            let ta = a.transfer_s(1_000_000, Dir::Up);
+            let tb = b.transfer_s(1_000_000, Dir::Up);
+            assert_eq!(ta, tb); // same seed, same jitter
+            assert!(ta >= base * 0.9 - 1e-12 && ta <= base * 1.1 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut l = Link::new(cfg(300.0, 20.0, 0.0), 1);
+        l.transfer_s(100, Dir::Up);
+        l.transfer_s(50, Dir::Down);
+        assert_eq!(l.total_bytes(), 150);
+        assert_eq!(l.transfers, 2);
+    }
+}

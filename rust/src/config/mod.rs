@@ -1,0 +1,305 @@
+//! Configuration system: every knob of the MSAO stack in one tree with
+//! paper-faithful defaults (§5.1.4 Parameter Configuration).
+//!
+//! `Config::default()` reproduces the paper's setup; `Config::load` merges
+//! a JSON config file over the defaults (offline environment: no
+//! serde_json/toml, so parsing goes through `util::json`). Unknown keys
+//! are rejected to catch typos.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Directory holding AOT artifacts (manifest.json etc.).
+    pub artifacts_dir: String,
+    pub msao: MsaoCfg,
+    pub network: NetworkCfg,
+    pub edge: DeviceCfg,
+    pub cloud: DeviceCfg,
+    pub serve: ServeCfg,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".to_string(),
+            msao: MsaoCfg::default(),
+            network: NetworkCfg::default(),
+            edge: DeviceCfg::rtx3090(),
+            cloud: DeviceCfg::a100(),
+            serve: ServeCfg::default(),
+        }
+    }
+}
+
+/// MSAO hyper-parameters (paper §5.1.4).
+#[derive(Debug, Clone)]
+pub struct MsaoCfg {
+    /// Spatial sparsity threshold tau_s (Eq. 4).
+    pub tau_s: f64,
+    /// Spatial redundancy weight lambda_spatial (Eq. 7).
+    pub lambda_spatial: f64,
+    /// Temporal redundancy weight lambda_temp (Eq. 7).
+    pub lambda_temp: f64,
+    /// Max tolerable quality degradation epsilon_Q (relative, 0.02 = 2%).
+    pub epsilon_q: f64,
+    /// Initial confidence-threshold percentile of the calibration entropy
+    /// distribution (Alg. 1 line 2: H_emp^-1(0.7)).
+    pub theta_init_percentile: f64,
+    /// Threshold decay factor delta (Alg. 1 line 11).
+    pub theta_decay: f64,
+    /// Floor theta_min for the adapted threshold.
+    pub theta_min: f64,
+    /// EMA smoothing for the acceptance-driven theta update (line 8).
+    pub theta_ema: f64,
+    /// Max speculative length N_max.
+    pub n_max: usize,
+    /// Target acceptance probability P_target (Alg. 1 line 3).
+    pub p_target: f64,
+    /// Bayesian-optimization iterations for the coarse phase.
+    pub bo_iters: usize,
+    /// EI exploration-exploitation trade-off xi.
+    pub bo_xi: f64,
+    /// Calibration set size for the empirical entropy distribution.
+    pub calibration_samples: usize,
+    /// Temporal redundancy keep-threshold: frames with gamma below this
+    /// are subsampled (paper: "safely subsampled").
+    pub gamma_keep: f64,
+    /// Max new tokens per request.
+    pub max_new_tokens: usize,
+    /// Edge memory budget Mem_edge^max in GB.
+    pub mem_edge_max_gb: f64,
+    /// Per-modality communication deadline T_max (seconds).
+    pub t_comm_max_s: f64,
+}
+
+impl Default for MsaoCfg {
+    fn default() -> Self {
+        MsaoCfg {
+            tau_s: 0.3,
+            lambda_spatial: 0.6,
+            lambda_temp: 0.4,
+            epsilon_q: 0.02,
+            theta_init_percentile: 0.7,
+            theta_decay: 0.95,
+            theta_min: 0.05,
+            theta_ema: 0.1,
+            n_max: 5,
+            p_target: 0.8,
+            bo_iters: 50,
+            bo_xi: 0.1,
+            calibration_samples: 500,
+            gamma_keep: 0.15,
+            max_new_tokens: 64,
+            mem_edge_max_gb: 24.0,
+            t_comm_max_s: 1.0,
+        }
+    }
+}
+
+/// Network link between edge and cloud (Eq. 8 parameters).
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkCfg {
+    /// Effective bandwidth in Mbps (paper levels: 200 / 300 / 400).
+    pub bandwidth_mbps: f64,
+    /// Round-trip time in ms (paper: 20 ms).
+    pub rtt_ms: f64,
+    /// Uniform jitter fraction applied to transfer time (0 = none).
+    pub jitter: f64,
+}
+
+impl Default for NetworkCfg {
+    fn default() -> Self {
+        NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.05 }
+    }
+}
+
+/// Analytic device model (DESIGN.md §3 substitution for A100 / RTX 3090).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCfg {
+    /// Peak dense f16/bf16 throughput in TFLOP/s.
+    pub peak_tflops: f64,
+    /// Memory bandwidth in GB/s.
+    pub mem_bw_gbs: f64,
+    /// Device memory in GB.
+    pub vram_gb: f64,
+    /// Achievable fraction of peak on transformer matmuls (MFU).
+    pub mfu: f64,
+    /// Fixed per-kernel-launch overhead in microseconds.
+    pub launch_us: f64,
+}
+
+impl DeviceCfg {
+    /// NVIDIA RTX 3090 (edge device, paper §5.1.1).
+    pub fn rtx3090() -> Self {
+        DeviceCfg {
+            peak_tflops: 71.0, // fp16 tensor-core
+            mem_bw_gbs: 936.0,
+            vram_gb: 24.0,
+            mfu: 0.35,
+            launch_us: 8.0,
+        }
+    }
+
+    /// NVIDIA A100 40GB (cloud server, paper §5.1.1).
+    pub fn a100() -> Self {
+        DeviceCfg {
+            peak_tflops: 312.0, // bf16 tensor-core
+            mem_bw_gbs: 1555.0,
+            vram_gb: 40.0,
+            mfu: 0.45,
+            launch_us: 5.0,
+        }
+    }
+}
+
+/// Serving-loop knobs (router/batcher).
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// Max requests processed concurrently.
+    pub max_inflight: usize,
+    /// Dynamic batcher: max verify calls coalesced into one uplink burst.
+    pub verify_batch: usize,
+    /// Dynamic batcher: max wait to fill a batch (ms).
+    pub batch_wait_ms: f64,
+    /// Request queue capacity (admission control).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg { max_inflight: 4, verify_batch: 4, batch_wait_ms: 2.0, queue_cap: 256 }
+    }
+}
+
+macro_rules! merge_fields {
+    ($obj:expr, $target:expr, { $($key:literal => $field:expr => $conv:ident),* $(,)? }) => {
+        for (k, v) in $obj {
+            match k.as_str() {
+                $($key => $field = v.$conv()?,)*
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+    };
+}
+
+impl Config {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = Value::parse(text)?;
+        let mut c = Config::default();
+        c.merge(&v)?;
+        Ok(c)
+    }
+
+    pub fn merge(&mut self, v: &Value) -> Result<()> {
+        for (k, section) in v.as_obj()? {
+            match k.as_str() {
+                "artifacts_dir" => self.artifacts_dir = section.as_str()?.to_string(),
+                "msao" => {
+                    let m = &mut self.msao;
+                    merge_fields!(section.as_obj()?, *m, {
+                        "tau_s" => m.tau_s => as_f64,
+                        "lambda_spatial" => m.lambda_spatial => as_f64,
+                        "lambda_temp" => m.lambda_temp => as_f64,
+                        "epsilon_q" => m.epsilon_q => as_f64,
+                        "theta_init_percentile" => m.theta_init_percentile => as_f64,
+                        "theta_decay" => m.theta_decay => as_f64,
+                        "theta_min" => m.theta_min => as_f64,
+                        "theta_ema" => m.theta_ema => as_f64,
+                        "n_max" => m.n_max => as_usize,
+                        "p_target" => m.p_target => as_f64,
+                        "bo_iters" => m.bo_iters => as_usize,
+                        "bo_xi" => m.bo_xi => as_f64,
+                        "calibration_samples" => m.calibration_samples => as_usize,
+                        "gamma_keep" => m.gamma_keep => as_f64,
+                        "max_new_tokens" => m.max_new_tokens => as_usize,
+                        "mem_edge_max_gb" => m.mem_edge_max_gb => as_f64,
+                        "t_comm_max_s" => m.t_comm_max_s => as_f64,
+                    });
+                }
+                "network" => {
+                    let n = &mut self.network;
+                    merge_fields!(section.as_obj()?, *n, {
+                        "bandwidth_mbps" => n.bandwidth_mbps => as_f64,
+                        "rtt_ms" => n.rtt_ms => as_f64,
+                        "jitter" => n.jitter => as_f64,
+                    });
+                }
+                "edge" | "cloud" => {
+                    let d = if k == "edge" { &mut self.edge } else { &mut self.cloud };
+                    merge_fields!(section.as_obj()?, *d, {
+                        "peak_tflops" => d.peak_tflops => as_f64,
+                        "mem_bw_gbs" => d.mem_bw_gbs => as_f64,
+                        "vram_gb" => d.vram_gb => as_f64,
+                        "mfu" => d.mfu => as_f64,
+                        "launch_us" => d.launch_us => as_f64,
+                    });
+                }
+                "serve" => {
+                    let s = &mut self.serve;
+                    merge_fields!(section.as_obj()?, *s, {
+                        "max_inflight" => s.max_inflight => as_usize,
+                        "verify_batch" => s.verify_batch => as_usize,
+                        "batch_wait_ms" => s.batch_wait_ms => as_f64,
+                        "queue_cap" => s.queue_cap => as_usize,
+                    });
+                }
+                other => bail!("unknown config section {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Paper bandwidth sweep levels (Mbps).
+    pub const BANDWIDTH_LEVELS: [f64; 3] = [200.0, 300.0, 400.0];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.msao.tau_s, 0.3);
+        assert_eq!(c.msao.lambda_spatial, 0.6);
+        assert_eq!(c.msao.lambda_temp, 0.4);
+        assert_eq!(c.msao.epsilon_q, 0.02);
+        assert_eq!(c.msao.theta_decay, 0.95);
+        assert_eq!(c.msao.n_max, 5);
+        assert_eq!(c.msao.p_target, 0.8);
+        assert_eq!(c.msao.bo_iters, 50);
+        assert_eq!(c.msao.calibration_samples, 500);
+        assert_eq!(c.network.rtt_ms, 20.0);
+        assert_eq!(c.edge.vram_gb, 24.0);
+        assert_eq!(c.cloud.vram_gb, 40.0);
+    }
+
+    #[test]
+    fn partial_override_keeps_defaults() {
+        let c = Config::from_json_str(
+            r#"{"network": {"bandwidth_mbps": 200}, "msao": {"n_max": 3}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.network.bandwidth_mbps, 200.0);
+        assert_eq!(c.network.rtt_ms, 20.0);
+        assert_eq!(c.msao.n_max, 3);
+        assert_eq!(c.msao.tau_s, 0.3);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(Config::from_json_str(r#"{"msao": {"typo_key": 1}}"#).is_err());
+        assert!(Config::from_json_str(r#"{"bogus_section": {}}"#).is_err());
+    }
+}

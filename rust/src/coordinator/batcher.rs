@@ -1,0 +1,93 @@
+//! Dynamic verify batcher: coalesces verify-round uplinks from
+//! concurrent requests into shared exchange windows so the 20 ms RTT is
+//! paid once per window instead of once per request (the paper's
+//! collaborative scheduler amortizes communication the same way).
+//!
+//! Policy: a verify uplink departing within `window_s` of the previous
+//! one piggybacks on the open exchange (no extra propagation delay);
+//! otherwise it opens a new window and pays propagation.
+
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    window_s: f64,
+    max_batch: usize,
+    last_window_start: f64,
+    in_window: usize,
+    pub windows_opened: u64,
+    pub piggybacked: u64,
+    enabled: bool,
+}
+
+impl Batcher {
+    pub fn new(window_ms: f64, max_batch: usize, enabled: bool) -> Self {
+        Batcher {
+            window_s: window_ms * 1e-3,
+            max_batch: max_batch.max(1),
+            last_window_start: f64::NEG_INFINITY,
+            in_window: 0,
+            windows_opened: 0,
+            piggybacked: 0,
+            enabled,
+        }
+    }
+
+    /// Register a verify exchange departing at `t`. Returns true if the
+    /// message piggybacks (skip propagation delay), false if it opens a
+    /// new window (pay propagation).
+    pub fn admit(&mut self, t: f64) -> bool {
+        if self.enabled
+            && t - self.last_window_start <= self.window_s
+            && self.in_window < self.max_batch
+        {
+            self.in_window += 1;
+            self.piggybacked += 1;
+            true
+        } else {
+            self.last_window_start = t;
+            self.in_window = 1;
+            self.windows_opened += 1;
+            false
+        }
+    }
+
+    pub fn amortization(&self) -> f64 {
+        let total = self.windows_opened + self.piggybacked;
+        if total == 0 {
+            0.0
+        } else {
+            self.piggybacked as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coalesces_within_window() {
+        let mut b = Batcher::new(2.0, 4, true);
+        assert!(!b.admit(0.0)); // opens window
+        assert!(b.admit(0.001)); // rides it
+        assert!(b.admit(0.0015));
+        assert!(!b.admit(0.01)); // outside window
+        assert_eq!(b.windows_opened, 2);
+        assert_eq!(b.piggybacked, 2);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(10.0, 2, true);
+        assert!(!b.admit(0.0));
+        assert!(b.admit(0.001));
+        assert!(!b.admit(0.002)); // batch full -> new window
+    }
+
+    #[test]
+    fn disabled_never_piggybacks() {
+        let mut b = Batcher::new(10.0, 8, false);
+        assert!(!b.admit(0.0));
+        assert!(!b.admit(0.0001));
+        assert_eq!(b.piggybacked, 0);
+    }
+}

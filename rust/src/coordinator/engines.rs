@@ -1,0 +1,327 @@
+//! Typed facade over the two PJRT site actors: every AOT graph gets a
+//! strongly-typed method (shapes validated against the manifest), and KV
+//! caches stay device-resident behind handles. This is the only module
+//! that speaks raw `HostTensor` to the engines; everything above deals in
+//! tokens, entropies and probe outputs.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::engine::{Arg, HostTensor, KvHandle, OutPlan};
+use crate::runtime::{Constants, Manifest, SiteHandle, SiteThread, Tokenizer};
+use crate::workload::generator::{N_PATCH, PATCH_DIM};
+
+/// Graphs loaded at the edge site (draft model + encoders + probes).
+pub const EDGE_GRAPHS: [&str; 8] = [
+    "vision_encoder",
+    "audio_encoder",
+    "probe_spatial",
+    "probe_temporal",
+    "probe_modal",
+    "prune_tokens",
+    "draft_prefill",
+    "draft_decode",
+];
+
+/// Graphs loaded at the cloud site (full model + encoders for re-encode).
+pub const CLOUD_GRAPHS: [&str; 5] = [
+    "vision_encoder",
+    "audio_encoder",
+    "full_prefill",
+    "full_decode",
+    "full_verify",
+];
+
+pub struct Engines {
+    pub edge: SiteHandle,
+    pub cloud: SiteHandle,
+    pub c: Constants,
+    pub tok: Tokenizer,
+    pub manifest: Manifest,
+    _edge_thread: SiteThread,
+    _cloud_thread: SiteThread,
+}
+
+/// Output of a vision-encoder call.
+pub struct Encoded {
+    pub tokens: HostTensor,   // [N_PATCH, D_ENC]
+    pub tokens32: Vec<f32>,   // [FRAME_TOK * D_ENC]
+    pub feat: HostTensor,     // [GRID, GRID, C_FEAT]
+    pub pooled: Vec<f32>,     // [D_ENC]
+}
+
+pub struct PruneOut {
+    pub pruned: HostTensor, // [VIS_SLOTS, D_ENC]
+    pub idx: Vec<i32>,      // [VIS_SLOTS], -1 padded
+    pub count: usize,
+}
+
+pub struct BlockOut {
+    pub logits: Vec<f32>, // [N * VOCAB]
+    pub kv: KvHandle,
+}
+
+impl Engines {
+    pub fn start(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let edge_t = SiteThread::spawn("edge", &manifest, &EDGE_GRAPHS)?;
+        let cloud_t = SiteThread::spawn("cloud", &manifest, &CLOUD_GRAPHS)?;
+        Ok(Engines {
+            edge: edge_t.handle.clone(),
+            cloud: cloud_t.handle.clone(),
+            c: manifest.constants.clone(),
+            tok: Tokenizer::new(),
+            manifest,
+            _edge_thread: edge_t,
+            _cloud_thread: cloud_t,
+        })
+    }
+
+    fn site(&self, cloud: bool) -> &SiteHandle {
+        if cloud {
+            &self.cloud
+        } else {
+            &self.edge
+        }
+    }
+
+    // --- encoders ----------------------------------------------------
+
+    pub fn encode_image(&self, cloud: bool, patches: &[f32]) -> Result<Encoded> {
+        anyhow::ensure!(patches.len() == N_PATCH * PATCH_DIM, "patch shape");
+        let out = self.site(cloud).call(
+            "vision_encoder",
+            vec![Arg::Host(HostTensor::f32(
+                patches.to_vec(),
+                vec![N_PATCH, PATCH_DIM],
+            ))],
+            OutPlan::AllHost,
+        )?;
+        let mut it = out.host.into_iter().map(|t| t.unwrap());
+        let tokens = it.next().context("tokens")?;
+        let tokens32 = it.next().context("tokens32")?.as_f32()?.to_vec();
+        let feat = it.next().context("feat")?;
+        let pooled = it.next().context("pooled")?.as_f32()?.to_vec();
+        Ok(Encoded { tokens, tokens32, feat, pooled })
+    }
+
+    pub fn encode_audio(&self, cloud: bool, audio: &[f32]) -> Result<(HostTensor, Vec<f32>)> {
+        let c = &self.c;
+        let out = self.site(cloud).call(
+            "audio_encoder",
+            vec![Arg::Host(HostTensor::f32(
+                audio.to_vec(),
+                vec![c.audio_t(), c.audio_d()],
+            ))],
+            OutPlan::AllHost,
+        )?;
+        let mut it = out.host.into_iter().map(|t| t.unwrap());
+        let tokens = it.next().context("tokens")?;
+        let pooled = it.next().context("pooled")?.as_f32()?.to_vec();
+        Ok((tokens, pooled))
+    }
+
+    // --- probes (edge only) -------------------------------------------
+
+    pub fn probe_spatial(&self, feat: &HostTensor) -> Result<Vec<f32>> {
+        let out = self.edge.call(
+            "probe_spatial",
+            vec![Arg::Host(feat.clone())],
+            OutPlan::AllHost,
+        )?;
+        Ok(out.host[0].as_ref().unwrap().as_f32()?.to_vec())
+    }
+
+    pub fn probe_temporal(&self, frame_pooled: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.c;
+        anyhow::ensure!(frame_pooled.len() == c.n_frames() * c.d_enc());
+        let out = self.edge.call(
+            "probe_temporal",
+            vec![Arg::Host(HostTensor::f32(
+                frame_pooled.to_vec(),
+                vec![c.n_frames(), c.d_enc()],
+            ))],
+            OutPlan::AllHost,
+        )?;
+        Ok(out.host[0].as_ref().unwrap().as_f32()?.to_vec())
+    }
+
+    pub fn probe_modal(
+        &self,
+        text: &[i32],
+        tlen: usize,
+        pooled: &[f32],
+    ) -> Result<Vec<f32>> {
+        let c = &self.c;
+        anyhow::ensure!(text.len() == c.text_slots());
+        anyhow::ensure!(pooled.len() == c.n_modalities() * c.d_enc());
+        let out = self.edge.call(
+            "probe_modal",
+            vec![
+                Arg::Host(HostTensor::i32(text.to_vec(), vec![c.text_slots()])),
+                Arg::Host(HostTensor::scalar_i32(tlen as i32)),
+                Arg::Host(HostTensor::f32(
+                    pooled.to_vec(),
+                    vec![c.n_modalities(), c.d_enc()],
+                )),
+            ],
+            OutPlan::AllHost,
+        )?;
+        Ok(out.host[0].as_ref().unwrap().as_f32()?.to_vec())
+    }
+
+    pub fn prune_tokens(&self, tokens: &HostTensor, imp_map: &[f32], tau: f32) -> Result<PruneOut> {
+        let c = &self.c;
+        anyhow::ensure!(imp_map.len() == c.grid() * c.grid());
+        let out = self.edge.call(
+            "prune_tokens",
+            vec![
+                Arg::Host(tokens.clone()),
+                Arg::Host(HostTensor::f32(imp_map.to_vec(), vec![c.grid(), c.grid()])),
+                Arg::Host(HostTensor::f32(vec![tau], vec![1])),
+            ],
+            OutPlan::AllHost,
+        )?;
+        let mut it = out.host.into_iter().map(|t| t.unwrap());
+        let pruned = it.next().context("pruned")?;
+        let idx = it.next().context("idx")?.as_i32()?.to_vec();
+        let count = it.next().context("count")?.as_i32()?[0] as usize;
+        Ok(PruneOut { pruned, idx, count })
+    }
+
+    // --- models --------------------------------------------------------
+
+    /// Prefill; returns last-position logits and a device-resident KV.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        &self,
+        cloud: bool,
+        text: &[i32],
+        tlen: usize,
+        vis: &HostTensor,
+        vlen: usize,
+        aud: &HostTensor,
+        alen: usize,
+    ) -> Result<BlockOut> {
+        let c = &self.c;
+        let graph = if cloud { "full_prefill" } else { "draft_prefill" };
+        let out = self.site(cloud).call(
+            graph,
+            vec![
+                Arg::Host(HostTensor::i32(text.to_vec(), vec![c.text_slots()])),
+                Arg::Host(HostTensor::scalar_i32(tlen as i32)),
+                Arg::Host(vis.clone()),
+                Arg::Host(HostTensor::scalar_i32(vlen as i32)),
+                Arg::Host(aud.clone()),
+                Arg::Host(HostTensor::scalar_i32(alen as i32)),
+            ],
+            OutPlan::Kv { kv_index: 0, replace: None },
+        )?;
+        Ok(BlockOut {
+            logits: out.host[1].as_ref().unwrap().as_f32()?.to_vec(),
+            kv: out.kv.context("kv")?,
+        })
+    }
+
+    /// Decode/verify a token block. `tokens.len()` must match the graph
+    /// (1 for *_decode, N_SPEC for full_verify). Updates `kv` in place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block(
+        &self,
+        cloud: bool,
+        verify: bool,
+        kv: KvHandle,
+        pos: usize,
+        tokens: &[i32],
+        lens: (usize, usize, usize),
+    ) -> Result<Vec<f32>> {
+        let graph = match (cloud, verify) {
+            (true, true) => "full_verify",
+            (true, false) => "full_decode",
+            (false, false) => "draft_decode",
+            (false, true) => return Err(anyhow!("draft has no verify graph")),
+        };
+        let (vlen, alen, tlen) = lens;
+        let out = self.site(cloud).call(
+            graph,
+            vec![
+                Arg::Kv(kv),
+                Arg::Host(HostTensor::scalar_i32(pos as i32)),
+                Arg::Host(HostTensor::i32(tokens.to_vec(), vec![tokens.len()])),
+                Arg::Host(HostTensor::scalar_i32(vlen as i32)),
+                Arg::Host(HostTensor::scalar_i32(alen as i32)),
+                Arg::Host(HostTensor::scalar_i32(tlen as i32)),
+            ],
+            OutPlan::Kv { kv_index: 1, replace: Some(kv) },
+        )?;
+        Ok(out.host[0].as_ref().unwrap().as_f32()?.to_vec())
+    }
+
+    pub fn free_kv(&self, cloud: bool, kv: KvHandle) {
+        self.site(cloud).free_kv(kv);
+    }
+
+    /// Zero visual/audio tensors for absent modalities.
+    pub fn empty_vis(&self) -> HostTensor {
+        let c = &self.c;
+        HostTensor::f32(
+            vec![0.0; c.vis_slots() * c.d_enc()],
+            vec![c.vis_slots(), c.d_enc()],
+        )
+    }
+
+    pub fn empty_aud(&self) -> HostTensor {
+        let c = &self.c;
+        HostTensor::f32(
+            vec![0.0; c.aud_slots() * c.d_enc()],
+            vec![c.aud_slots(), c.d_enc()],
+        )
+    }
+}
+
+/// Greedy argmax over a logits row.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Shannon entropy of softmax(logits) in nats (Eq. 9).
+///
+/// Single pass over the exponentials (perf pass §Perf L3-1):
+/// H = ln z - (1/z) * sum(e_i * x_i) with x_i = v_i - max, avoiding a
+/// second exp/ln sweep over the vocabulary.
+pub fn entropy(logits: &[f32]) -> f64 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0f64;
+    let mut ex = 0f64; // sum e_i * x_i
+    for &v in logits {
+        let x = (v - max) as f64;
+        let e = x.exp();
+        z += e;
+        ex += e * x;
+    }
+    z.ln() - ex / z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_entropy() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        // Uniform over 4: entropy = ln 4.
+        let h = entropy(&[1.0, 1.0, 1.0, 1.0]);
+        assert!((h - (4f64).ln()).abs() < 1e-9);
+        // Peaked: near zero.
+        let h2 = entropy(&[100.0, 0.0, 0.0, 0.0]);
+        assert!(h2 < 1e-9);
+        assert!(entropy(&[1.0, 2.0]) > 0.0);
+    }
+}

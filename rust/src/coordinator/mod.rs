@@ -1,0 +1,26 @@
+//! The MSAO coordinator — the paper's system contribution.
+//!
+//! Pipeline per request (Fig. 2): the edge probes modality sparsity
+//! ([`mas`]), the coarse planner picks retention/compression by Bayesian
+//! optimization ([`planner`]), both models prefill in parallel (Eq. 14's
+//! max term), and the fine-grained speculative loop ([`speculative`])
+//! generates tokens with entropy-gated edge drafts verified by the cloud,
+//! batched over the link ([`batcher`]). All timing flows through the
+//! virtual testbed ([`timeline`]); all tokens flow through the real PJRT
+//! engines ([`engines`]).
+
+pub mod batcher;
+pub mod engines;
+pub mod mas;
+pub mod planner;
+pub mod server;
+pub mod session;
+pub mod speculative;
+pub mod timeline;
+
+pub use batcher::Batcher;
+pub use engines::Engines;
+pub use planner::Plan;
+pub use server::{serve_trace, TraceResult};
+pub use session::{Coordinator, Mode};
+pub use timeline::{Site, VirtualCluster};

@@ -1,0 +1,345 @@
+//! Coarse-grained per-request optimization (Alg. 1 line 1): choose the
+//! modality retention ratios beta and compression ratios rho by Bayesian
+//! optimization of the expected latency model (Eq. 14), subject to the
+//! quality bound epsilon_Q, the edge memory budget, the per-modality
+//! communication deadline, and beta_m >= 1 - MAS_m (Eq. 11).
+//!
+//! The objective is the analytic cost model — no engine calls — so 50 GP
+//! iterations cost well under a millisecond of real time; the chosen plan
+//! then drives the real prefill/decode execution.
+
+use anyhow::Result;
+
+use crate::cluster::{DeviceSim, SimModel};
+use crate::config::Config;
+use crate::optimizer::BayesOpt;
+use crate::quality::{self, Capability, ServedInfo};
+use crate::sparsity::Modality;
+use crate::workload::generator::{Item, N_FRAMES};
+
+use super::mas::ProbeOutcome;
+
+/// The coarse-phase decision for one request.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Visual tokens to keep (image path; <= prune count).
+    pub vis_keep: usize,
+    /// Frames to keep (video path; indices into the frame list).
+    pub frames_keep: Vec<usize>,
+    /// Audio tokens to keep.
+    pub aud_keep: usize,
+    /// Compression ratio per modality (payload quality reduction).
+    pub rho: [f64; 4],
+    /// Retention ratio per modality (beta after optimization).
+    pub beta: [f64; 4],
+    /// Uplink payload bytes for the cloud prefill.
+    pub bytes_up: u64,
+    /// Predicted quality degradation (planner's own estimate).
+    pub delta_q_est: f64,
+    /// Predicted end-to-end latency (s) from the model (diagnostics).
+    pub latency_est: f64,
+    /// Speculative draft length N_draft (Alg. 1 line 3).
+    pub n_draft: usize,
+}
+
+/// Inputs the planner needs beyond the probe outcome.
+pub struct PlanCtx<'a> {
+    pub cfg: &'a Config,
+    pub item: &'a Item,
+    pub probe: &'a ProbeOutcome,
+    /// P_conf estimate from calibration (Eq. 12).
+    pub p_conf: f64,
+    /// Expected output length (tokens).
+    pub n_out: usize,
+    pub seed: u64,
+}
+
+impl Plan {
+    /// Uniform no-pruning plan (ablation "w/o modality-aware" and the
+    /// uniform baselines): keep everything, no compression.
+    pub fn uniform(probe: &ProbeOutcome, item: &Item, cfg: &Config, p_conf: f64) -> Plan {
+        let vis_keep = probe.pruned.as_ref().map(|_| {
+            // Uniform policy ships everything the slots can hold.
+            192
+        });
+        let frames_all: Vec<usize> = if item.video.is_some() {
+            (0..N_FRAMES.min(6)).collect()
+        } else {
+            Vec::new()
+        };
+        let aud_keep = if item.audio.is_some() { 32 } else { 0 };
+        let mut bytes = item.payload_bytes(Modality::Text);
+        if item.has(Modality::Image) {
+            bytes += item.payload_bytes(Modality::Image);
+        }
+        if item.has(Modality::Video) {
+            bytes += item.payload_bytes(Modality::Video);
+        }
+        if item.has(Modality::Audio) {
+            bytes += item.payload_bytes(Modality::Audio);
+        }
+        Plan {
+            vis_keep: vis_keep.unwrap_or(0),
+            frames_keep: frames_all,
+            aud_keep,
+            rho: [0.0; 4],
+            beta: [1.0; 4],
+            bytes_up: bytes,
+            delta_q_est: 0.0,
+            latency_est: 0.0,
+            n_draft: crate::optimizer::draft_len(p_conf, cfg.msao.p_target, cfg.msao.n_max),
+        }
+    }
+}
+
+/// Candidate evaluation: map (beta, rho) for the active modalities onto
+/// sequence lengths, payload bytes, memory, and the Eq. 14 latency.
+struct Evaluator<'a> {
+    ctx: &'a PlanCtx<'a>,
+    edge: DeviceSim,
+    cloud: DeviceSim,
+    draft: SimModel,
+    full: SimModel,
+    cap: Capability,
+    /// Active (optimizable) modalities in x-vector order.
+    active: Vec<Modality>,
+    prune_count: usize,
+    novel_frames: usize,
+}
+
+struct Candidate {
+    vis_keep: usize,
+    frames_keep: Vec<usize>,
+    aud_keep: usize,
+    beta: [f64; 4],
+    rho: [f64; 4],
+    bytes_up: u64,
+    latency: f64,
+    delta_q: f64,
+    feasible: bool,
+}
+
+impl<'a> Evaluator<'a> {
+    fn new(ctx: &'a PlanCtx<'a>) -> Self {
+        let mut active = Vec::new();
+        for m in [Modality::Image, Modality::Video, Modality::Audio] {
+            if ctx.item.has(m) {
+                active.push(m);
+            }
+        }
+        let prune_count = ctx.probe.pruned.as_ref().map(|p| p.count).unwrap_or(0);
+        let novel_frames = ctx.probe.frame_keep.iter().filter(|&&k| k).count();
+        Evaluator {
+            ctx,
+            edge: DeviceSim::new(ctx.cfg.edge),
+            cloud: DeviceSim::new(ctx.cfg.cloud),
+            draft: SimModel::qwen2vl_2b(),
+            full: SimModel::qwen25vl_7b(),
+            cap: Capability::for_benchmark(
+                ctx.item.benchmark,
+                ctx.cfg.network.bandwidth_mbps,
+            ),
+            active,
+            prune_count,
+            novel_frames,
+        }
+    }
+
+    /// x = [beta_1, rho_1, beta_2, rho_2, ...] per active modality.
+    fn dim(&self) -> usize {
+        2 * self.active.len()
+    }
+
+    fn decode(&self, x: &[f64]) -> Candidate {
+        let ctx = self.ctx;
+        let mut beta = [1.0f64; 4];
+        let mut rho = [0.0f64; 4];
+        for (i, &m) in self.active.iter().enumerate() {
+            let mas = ctx.probe.mas[m.index()].mas;
+            // Constraint beta_m >= 1 - MAS_m by construction.
+            beta[m.index()] = (1.0 - mas) + x[2 * i] * mas;
+            rho[m.index()] = x[2 * i + 1];
+        }
+
+        // Sequence composition.
+        let vis_keep = if ctx.item.has(Modality::Image) {
+            ((beta[1] * self.prune_count as f64).round() as usize)
+                .clamp(4.min(self.prune_count.max(1)), 192)
+        } else {
+            0
+        };
+        let frames_keep: Vec<usize> = if ctx.item.video.is_some() {
+            // Keep novel frames first, then static ones, up to the
+            // beta-scaled budget (cap 6 frames = 192 slots).
+            let budget = ((beta[2] * 6.0).round() as usize).clamp(1, 6);
+            let mut order: Vec<usize> = (0..ctx.probe.frame_keep.len())
+                .filter(|&t| ctx.probe.frame_keep[t])
+                .collect();
+            for t in 0..ctx.probe.frame_keep.len() {
+                if !ctx.probe.frame_keep[t] {
+                    order.push(t);
+                }
+            }
+            let mut kept: Vec<usize> = order.into_iter().take(budget).collect();
+            kept.sort_unstable();
+            kept
+        } else {
+            Vec::new()
+        };
+        let aud_keep = if ctx.item.has(Modality::Audio) {
+            ((beta[3] * 32.0).round() as usize).clamp(4, 32)
+        } else {
+            0
+        };
+
+        // Paper-scale sequence lengths (visual tokens dominate).
+        let vis_tokens_paper = if ctx.item.has(Modality::Video) {
+            frames_keep.len() as f64 * 128.0
+        } else {
+            vis_keep as f64 * 4.0 // 256-patch grid ~ 1024 paper tokens
+        };
+        let seq = vis_tokens_paper + aud_keep as f64 * 2.0 + 32.0;
+
+        // Uplink payload (Eq. 8 DataSize(beta, rho)).
+        let mut bytes = ctx.item.payload_bytes(Modality::Text) as f64;
+        if ctx.item.has(Modality::Image) {
+            let f = vis_keep as f64 / 256.0;
+            bytes += ctx.item.payload_bytes(Modality::Image) as f64
+                * f
+                * (1.0 - 0.7 * rho[1]);
+        }
+        if ctx.item.has(Modality::Video) {
+            let f = frames_keep.len() as f64 / N_FRAMES as f64;
+            bytes += ctx.item.payload_bytes(Modality::Video) as f64
+                * f
+                * (1.0 - 0.7 * rho[2]);
+        }
+        if ctx.item.has(Modality::Audio) {
+            let f = aud_keep as f64 / 32.0;
+            bytes += ctx.item.payload_bytes(Modality::Audio) as f64
+                * f
+                * (1.0 - 0.7 * rho[3]);
+        }
+        let bytes_up = bytes as u64;
+
+        // --- Eq. 14 expected latency ----------------------------------
+        let net = &ctx.cfg.network;
+        let t_comm = bytes * 8.0 / (net.bandwidth_mbps * 1e6) + net.rtt_ms * 1e-3;
+        let d_edge = self.edge.prefill_s(&self.draft, seq);
+        let enc_cloud = self
+            .cloud
+            .encode_s(&SimModel::vision_encoder(), vis_tokens_paper.max(64.0));
+        let d_cloud = self.cloud.prefill_s(&self.full, seq) + enc_cloud;
+        let prefill = d_edge.max(t_comm + d_cloud);
+
+        let p_conf = ctx.p_conf;
+        let n_draft = crate::optimizer::draft_len(
+            p_conf,
+            ctx.cfg.msao.p_target,
+            ctx.cfg.msao.n_max,
+        ) as f64;
+        let t_draft = self.edge.decode_s(&self.draft, seq + 16.0);
+        let t_verify = self.cloud.verify_s(&self.full, n_draft + 1.0, seq + 16.0);
+        let rt = net.rtt_ms * 1e-3;
+        // Verified rounds hide comm behind drafting; low-confidence steps
+        // offload state (activation-sized) and decode on the cloud.
+        let t_offload = rt
+            + self.full.d * 2.0 * 8.0 / (net.bandwidth_mbps * 1e6)
+            + self.cloud.decode_s(&self.full, seq + 16.0);
+        let per_token = t_draft
+            + p_conf * (t_verify / n_draft.max(1.0)).max(rt / n_draft.max(1.0))
+            + (1.0 - p_conf) * t_offload;
+        let latency = prefill + ctx.n_out as f64 * per_token;
+
+        // --- constraints -------------------------------------------------
+        // Quality estimate: the planner's belief of retained salient info.
+        let sal_est = if ctx.item.has(Modality::Image) {
+            (beta[1] * (1.0 - 0.3 * rho[1])).clamp(0.0, 1.0)
+        } else {
+            1.0
+        };
+        let novel_est = if ctx.item.has(Modality::Video) {
+            let kept_novel = frames_keep
+                .iter()
+                .filter(|&&t| *ctx.probe.frame_keep.get(t).unwrap_or(&false))
+                .count();
+            (kept_novel as f64 / self.novel_frames.max(1) as f64).clamp(0.0, 1.0)
+                * (1.0 - 0.3 * rho[2])
+        } else {
+            1.0
+        };
+        let info = ServedInfo {
+            salient_retained: sal_est,
+            novel_frames_retained: novel_est,
+            relevant_modality_kept: true,
+            cloud_quality_fraction: 1.0,
+        };
+        let delta_q = quality::delta_q(self.cap, ctx.item, &info);
+
+        let kv_gb = crate::cluster::kv_bytes(&self.draft, seq + ctx.n_out as f64) / 1e9;
+        let mem_edge_gb = self.draft.weight_bytes() / 1e9 + kv_gb + 1.5;
+        let feasible = delta_q <= ctx.cfg.msao.epsilon_q
+            && mem_edge_gb <= ctx.cfg.msao.mem_edge_max_gb
+            && t_comm <= ctx.cfg.msao.t_comm_max_s;
+
+        Candidate {
+            vis_keep,
+            frames_keep,
+            aud_keep,
+            beta,
+            rho,
+            bytes_up,
+            latency,
+            delta_q,
+            feasible,
+        }
+    }
+
+    fn objective(&self, x: &[f64]) -> f64 {
+        let c = self.decode(x);
+        if c.feasible {
+            c.latency
+        } else {
+            // Smooth penalty: keeps the GP informative outside the
+            // feasible region.
+            c.latency + 5.0 + 50.0 * (c.delta_q - self.ctx.cfg.msao.epsilon_q).max(0.0)
+        }
+    }
+}
+
+/// Run the coarse-phase optimization for one request.
+pub fn plan(ctx: &PlanCtx) -> Result<Plan> {
+    let ev = Evaluator::new(ctx);
+    let n_draft =
+        crate::optimizer::draft_len(ctx.p_conf, ctx.cfg.msao.p_target, ctx.cfg.msao.n_max);
+
+    if ev.dim() == 0 {
+        // Text-only request: nothing to optimize.
+        return Ok(Plan {
+            vis_keep: 0,
+            frames_keep: Vec::new(),
+            aud_keep: 0,
+            rho: [0.0; 4],
+            beta: [1.0; 4],
+            bytes_up: ctx.item.payload_bytes(Modality::Text),
+            delta_q_est: 0.0,
+            latency_est: 0.0,
+            n_draft,
+        });
+    }
+
+    let mut bo = BayesOpt::new(ev.dim(), ctx.cfg.msao.bo_xi, ctx.seed);
+    let (best_x, _) = bo.minimize(ctx.cfg.msao.bo_iters, |x| ev.objective(x))?;
+    let c = ev.decode(&best_x);
+    Ok(Plan {
+        vis_keep: c.vis_keep,
+        frames_keep: c.frames_keep,
+        aud_keep: c.aud_keep,
+        rho: c.rho,
+        beta: c.beta,
+        bytes_up: c.bytes_up,
+        delta_q_est: c.delta_q,
+        latency_est: c.latency,
+        n_draft,
+    })
+}

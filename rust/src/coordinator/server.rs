@@ -1,0 +1,67 @@
+//! Trace server: drive a stream of requests through the coordinator and
+//! the shared virtual testbed, producing the ExecRecords every
+//! experiment aggregates.
+//!
+//! Requests are processed in arrival order; the virtual cluster's
+//! resource cursors (edge / cloud / both link directions) serialize
+//! contended work, so concurrent load produces honest queueing,
+//! saturation and batching behaviour. (Code-order FCFS is a slightly
+//! pessimistic approximation of a fully event-driven interleave —
+//! documented in DESIGN.md.)
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::ExecRecord;
+use crate::workload::Item;
+
+use super::batcher::Batcher;
+use super::session::{Coordinator, Mode};
+use super::timeline::VirtualCluster;
+
+pub struct TraceResult {
+    pub records: Vec<ExecRecord>,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub batch_amortization: f64,
+}
+
+/// Serve `items` with Poisson `arrivals` under `mode`.
+pub fn serve_trace(
+    coord: &mut Coordinator,
+    items: &[Item],
+    arrivals: &[f64],
+    mode: Mode,
+    seed: u64,
+) -> Result<TraceResult> {
+    assert_eq!(items.len(), arrivals.len());
+    let cfg: Config = coord.cfg.clone();
+    let mut vc = VirtualCluster::new(&cfg, seed);
+    // Paper-scale resident weights.
+    // 25% runtime workspace beyond raw weights (see baselines/mod.rs).
+    vc.edge_mem.set_base(
+        1.25 * (crate::cluster::SimModel::qwen2vl_2b().weight_bytes()
+            + crate::cluster::SimModel::vision_encoder().weight_bytes()),
+    );
+    vc.cloud_mem.set_base(
+        1.25 * (crate::cluster::SimModel::qwen25vl_7b().weight_bytes()
+            + crate::cluster::SimModel::vision_encoder().weight_bytes()),
+    );
+    let mut batcher = Batcher::new(
+        cfg.serve.batch_wait_ms,
+        cfg.serve.verify_batch,
+        mode != Mode::NoCollabSched,
+    );
+    let mut theta = coord.theta();
+    let mut records = Vec::with_capacity(items.len());
+    for (item, &arr) in items.iter().zip(arrivals) {
+        let rec = coord.serve(&mut vc, &mut batcher, &mut theta, item, arr, mode)?;
+        records.push(rec);
+    }
+    Ok(TraceResult {
+        records,
+        uplink_bytes: vc.link.uplink_bytes,
+        downlink_bytes: vc.link.downlink_bytes,
+        batch_amortization: batcher.amortization(),
+    })
+}

@@ -1,0 +1,599 @@
+//! Per-request session driver: probe -> plan -> dual prefill ->
+//! speculative decode -> quality + metrics. This is MSAO end to end;
+//! the ablation modes of Fig. 9 switch off one half each.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{activation_bytes, kv_bytes, SimModel};
+use crate::config::Config;
+use crate::metrics::ExecRecord;
+use crate::optimizer::ThetaController;
+use crate::quality::{self, Capability, ServedInfo};
+use crate::runtime::engine::HostTensor;
+use crate::sparsity::Modality;
+use crate::util::Rng;
+use crate::workload::generator::Item;
+
+use super::batcher::Batcher;
+use super::engines::{argmax, entropy, Engines};
+use super::mas::{run_probe, ProbeOutcome};
+use super::planner::{self, Plan, PlanCtx};
+use super::speculative::{speculative_decode, SpecParams};
+use super::timeline::{Site, VirtualCluster};
+
+/// Serving mode: full MSAO or one of the Fig. 9 ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Msao,
+    /// Uniform offloading policy, no MAS pruning (Fig. 9 variant 1).
+    NoModalityAware,
+    /// Static task distribution: MAS pruning kept, but no BO, no
+    /// adaptive speculation, no overlap, no batching (Fig. 9 variant 2).
+    NoCollabSched,
+}
+
+pub struct Coordinator {
+    pub eng: Engines,
+    pub cfg: Config,
+    /// Calibration entropies for theta initialization (Alg. 1 line 2).
+    pub calibration: Vec<f64>,
+    pub p_conf0: f64,
+    rng: Rng,
+}
+
+impl Coordinator {
+    pub fn new(cfg: Config) -> Result<Self> {
+        let eng = Engines::start(&cfg.artifacts_dir)?;
+        let mut me = Coordinator {
+            eng,
+            cfg,
+            calibration: Vec::new(),
+            p_conf0: 0.7,
+            rng: Rng::seed_from_u64(0xC0FFEE),
+        };
+        me.calibrate()?;
+        Ok(me)
+    }
+
+    /// Collect the empirical draft-entropy distribution on a small
+    /// calibration set (the paper uses 500 samples; a smaller sample of
+    /// real engine steps gives the same percentile to within noise).
+    fn calibrate(&mut self) -> Result<()> {
+        let c = self.eng.c.clone();
+        let mut gen = crate::workload::Generator::new(0xCA11B);
+        let mut ents = Vec::new();
+        for _ in 0..10 {
+            let item = gen.vqa_item();
+            let enc = self.eng.encode_image(false, item.image.as_ref().unwrap())?;
+            let text = self.eng.tok.pad_to(
+                self.eng.tok.encode_prompt(&item.question, c.text_slots()),
+                c.text_slots(),
+            );
+            let tlen = text.iter().filter(|&&t| t != crate::runtime::tokenizer::PAD).count();
+            // Trim raw tokens to the vis slot budget.
+            let vis = trim_tokens(&enc.tokens, c.vis_slots(), c.d_enc());
+            let pre = self.eng.prefill(
+                false,
+                &text,
+                tlen,
+                &vis,
+                c.vis_slots(),
+                &self.eng.empty_aud(),
+                0,
+            )?;
+            let mut tok = argmax(&pre.logits);
+            ents.push(entropy(&pre.logits));
+            for j in 0..6 {
+                let lg = self.eng.block(
+                    false,
+                    false,
+                    pre.kv,
+                    c.gen_off() + j,
+                    &[tok],
+                    (c.vis_slots(), 0, tlen),
+                )?;
+                ents.push(entropy(&lg));
+                tok = argmax(&lg);
+            }
+            self.eng.free_kv(false, pre.kv);
+        }
+        // P_conf at the initial threshold percentile (Eq. 12).
+        self.p_conf0 = self.cfg.msao.theta_init_percentile;
+        self.calibration = ents;
+        Ok(())
+    }
+
+    pub fn theta(&self) -> ThetaController {
+        ThetaController::from_calibration(&self.cfg.msao, &self.calibration)
+    }
+
+    /// Serve one item under `mode`, charging the shared virtual cluster.
+    pub fn serve(
+        &mut self,
+        vc: &mut VirtualCluster,
+        batcher: &mut Batcher,
+        theta: &mut ThetaController,
+        item: &Item,
+        arrival: f64,
+        mode: Mode,
+    ) -> Result<ExecRecord> {
+        let c = self.eng.c.clone();
+        let cfg = self.cfg.clone();
+        let msao = &cfg.msao;
+        let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
+
+        // ---------------- probe phase (edge) ---------------------------
+        let probe = run_probe(&self.eng, msao, item)?;
+        let probe_end = if mode == Mode::NoModalityAware {
+            // Uniform policy: encoders still run (they feed the draft
+            // model) but no probe heads; no probe latency charged.
+            arrival
+        } else {
+            let (_, end) = vc.exec(Site::Edge, arrival, probe.probe_s, probe.probe_flops);
+            vc.edge_mem.alloc(probe.probe_mem_gb * 1e9);
+            rec.probe_s = probe.probe_s;
+            end
+        };
+
+        // ---------------- coarse plan ------------------------------------
+        let n_out = msao.max_new_tokens;
+        let plan = match mode {
+            Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, self.p_conf0),
+            Mode::Msao => planner::plan(&PlanCtx {
+                cfg: &cfg,
+                item,
+                probe: &probe,
+                p_conf: self.p_conf0,
+                n_out,
+                seed: item.id ^ 0x9E37,
+            })?,
+            Mode::NoCollabSched => {
+                // Modality-aware pruning retained; scheduling static
+                // (fixed draft length, no overlap/batching, no routing).
+                planner::plan(&PlanCtx {
+                    cfg: &cfg,
+                    item,
+                    probe: &probe,
+                    p_conf: self.p_conf0,
+                    n_out,
+                    seed: item.id ^ 0x9E37,
+                })?
+            }
+        };
+
+        // ---------------- assemble prefill inputs ------------------------
+        let (vis, vlen, kept_idx) = assemble_visual(&self.eng, &probe, &plan, item, mode)?;
+        let (aud, alen) = assemble_audio(&self.eng, &probe, &plan)?;
+        let text = self.eng.tok.pad_to(
+            self.eng.tok.encode_prompt(&item.question, c.text_slots()),
+            c.text_slots(),
+        );
+        let tlen = text.iter().filter(|&&t| t != crate::runtime::tokenizer::PAD).count();
+        let lens = (vlen, alen, tlen);
+
+        // Paper-scale sequence length for the cost model.
+        let seq_paper = paper_seq(item, vlen, plan.frames_keep.len(), alen);
+
+        // ---------------- adaptive site routing ---------------------------
+        // "dynamically schedules workloads between edge and cloud based on
+        // the derived MAS scores and real-time system states" (§4.2): when
+        // the edge queue is deep (or the cloud decisively faster for this
+        // request), the pruned request is served cloud-direct instead of
+        // through the edge speculative path. The ablation "w/o
+        // collaborative scheduling" pins everything to the static path.
+        if mode == Mode::Msao {
+            let est = {
+                let d_edge = vc.dev(Site::Edge);
+                let d_cloud = vc.dev(Site::Cloud);
+                let draft = SimModel::qwen2vl_2b();
+                let full = SimModel::qwen25vl_7b();
+                let vitm = SimModel::vision_encoder();
+                let edge_q = (vc.busy_until(Site::Edge) - probe_end).max(0.0);
+                let cloud_q = (vc.busy_until(Site::Cloud) - probe_end).max(0.0);
+                let t_edge = edge_q
+                    + d_edge.encode_s(&vitm, 256.0)
+                    + d_edge.prefill_s(&draft, seq_paper)
+                    + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
+                let up = plan.bytes_up as f64 * 8.0 / (cfg.network.bandwidth_mbps * 1e6)
+                    + 0.5 * cfg.network.rtt_ms * 1e-3;
+                let t_cloud = cloud_q
+                    + up
+                    + d_cloud.encode_s(&vitm, 256.0)
+                    + d_cloud.prefill_s(&full, seq_paper)
+                    + n_out as f64 * d_cloud.decode_s(&full, seq_paper);
+                (t_edge, t_cloud)
+            };
+            if est.1 < 0.9 * est.0 {
+                return self.serve_cloud_direct(
+                    vc, item, arrival, probe_end, rec, &probe, &plan,
+                    (&text, tlen, &vis, vlen, &aud, alen),
+                    seq_paper, &kept_idx, mode,
+                );
+            }
+        }
+
+        // ---------------- dual prefill (Eq. 14 max term) ------------------
+        let draft_m = SimModel::qwen2vl_2b();
+        let full_m = SimModel::qwen25vl_7b();
+        let vit = SimModel::vision_encoder();
+
+        // Edge vision-encode cost. MSAO pays the probe's early layers on
+        // everything (already charged) and the *remaining* encoder layers
+        // only on retained content: kept frames for video, kept-patch
+        // fraction for images (§4.1: non-critical patches are pruned
+        // before the deep layers / projector). The uniform ablation
+        // encodes everything at full depth.
+        const EARLY_SHARE: f64 = 2.0 / 32.0; // probe taps layer 2 of 32
+        let enc_frames = if mode == Mode::NoModalityAware {
+            frames_encoded(item) as f64
+        } else if item.video.is_some() {
+            plan.frames_keep.len().max(1) as f64
+        } else {
+            frames_encoded(item) as f64
+        };
+        let late_scale = if mode == Mode::NoModalityAware || item.image.is_none() {
+            1.0
+        } else {
+            // Deep layers run on the retained patches only.
+            EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
+        };
+        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+        let enc_secs = vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames * late_scale;
+        let (_, enc_end) = vc.exec(
+            Site::Edge,
+            probe_end,
+            enc_secs,
+            vit.flops_prefill(enc_patches) * enc_frames * late_scale,
+        );
+        let edge_pre_secs = vc.dev(Site::Edge).prefill_s(&draft_m, seq_paper);
+        let (_, edge_pre_end) = vc.exec(
+            Site::Edge,
+            enc_end,
+            edge_pre_secs,
+            draft_m.flops_prefill(seq_paper),
+        );
+
+        // Cloud: pruned payload uplink, re-encode, full prefill.
+        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        rec.bytes_up += plan.bytes_up;
+        let kept_frames = plan.frames_keep.len().max(1) as f64;
+        // Cloud re-encodes only the shipped (pruned) content.
+        let cloud_share = if item.video.is_some() { kept_frames } else { (vlen.max(8) as f64 / 256.0).min(1.0) };
+        let cloud_enc = vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * cloud_share;
+        let (_, cloud_enc_end) = vc.exec(Site::Cloud, up_arr, cloud_enc, vit.flops_prefill(enc_patches) * cloud_share);
+        let cloud_pre_secs = vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
+        let (_, cloud_pre_end) = vc.exec(
+            Site::Cloud,
+            cloud_enc_end,
+            cloud_pre_secs,
+            full_m.flops_prefill(seq_paper),
+        );
+
+        // Real prefills.
+        let edge_pre = self.eng.prefill(false, &text, tlen, &vis, vlen, &aud, alen)?;
+        let cloud_pre = self.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
+        let first_token = argmax(&cloud_pre.logits);
+
+        // Memory at paper scale.
+        let edge_kv_gb = kv_bytes(&draft_m, seq_paper + n_out as f64) / 1e9;
+        let cloud_kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
+        vc.edge_mem.alloc(edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper));
+        vc.cloud_mem.alloc(cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
+
+        let prefill_done = edge_pre_end.max(cloud_pre_end);
+        rec.prefill_s = prefill_done - arrival;
+
+        // ---------------- speculative decode ------------------------------
+        let spec = speculative_decode(
+            &self.eng,
+            vc,
+            theta,
+            msao,
+            batcher,
+            SpecParams {
+                edge_kv: edge_pre.kv,
+                cloud_kv: cloud_pre.kv,
+                lens,
+                seq_paper,
+                first_token,
+                edge_ready: edge_pre_end,
+                cloud_ready: cloud_pre_end,
+                max_new: n_out,
+                n_draft: plan.n_draft,
+                adaptive: mode != Mode::NoCollabSched,
+            },
+        )?;
+
+        // Downlink the generated text to the user.
+        let (_, done) = vc.send_down(spec.t_done, 4 * spec.tokens.len() as u64 + 64, false);
+        rec.bytes_down += 4 * spec.tokens.len() as u64 + 64;
+
+        // ---------------- bookkeeping -------------------------------------
+        self.eng.free_kv(false, edge_pre.kv);
+        self.eng.free_kv(true, cloud_pre.kv);
+        vc.edge_mem.free(edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper));
+        vc.cloud_mem.free(cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
+        if mode != Mode::NoModalityAware {
+            vc.edge_mem.free(probe.probe_mem_gb * 1e9);
+        }
+
+        rec.t_done = done;
+        rec.latency_s = done - arrival;
+        rec.tokens_out = spec.tokens.len();
+        rec.accepted = spec.accepted;
+        rec.proposed = spec.proposed;
+        rec.offloads = spec.offloads;
+        rec.vis_tokens_kept = vlen;
+        rec.frames_kept = plan.frames_keep.len();
+        rec.mem_edge_gb = vc.edge_mem.peak_gb();
+        rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+        // MSAO's cloud model is a shared multi-tenant verifier touched in
+        // short bursts; the stream's dedicated memory is the edge peak
+        // plus the cloud's marginal KV/activations.
+        rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
+        rec.flops_edge = vc.flops_edge;
+        rec.flops_cloud = vc.flops_cloud;
+
+        // ---------------- quality -----------------------------------------
+        let info = served_info(item, &probe, &plan, &kept_idx, mode, spec.cloud_fraction);
+        let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
+        rec.p_correct = quality::p_correct(cap, item, &info);
+        rec.correct = quality::sample_correct(&mut self.rng, rec.p_correct);
+        Ok(rec)
+    }
+
+    /// Cloud-direct path of the adaptive router: the *pruned* request is
+    /// shipped to the cloud and the full model both prefills and decodes
+    /// there (no edge speculation). Chosen when the real-time system
+    /// state makes the edge path slower (deep edge queue, idle cloud).
+    #[allow(clippy::too_many_arguments)]
+    fn serve_cloud_direct(
+        &mut self,
+        vc: &mut VirtualCluster,
+        item: &Item,
+        arrival: f64,
+        probe_end: f64,
+        mut rec: ExecRecord,
+        probe: &ProbeOutcome,
+        plan: &Plan,
+        inputs: (&[i32], usize, &HostTensor, usize, &HostTensor, usize),
+        seq_paper: f64,
+        kept_idx: &[i32],
+        mode: Mode,
+    ) -> Result<ExecRecord> {
+        let (text, tlen, vis, vlen, aud, alen) = inputs;
+        let c = self.eng.c.clone();
+        let cfg = self.cfg.clone();
+        let n_out = cfg.msao.max_new_tokens;
+        let full_m = SimModel::qwen25vl_7b();
+        let vit = SimModel::vision_encoder();
+
+        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        rec.bytes_up += plan.bytes_up;
+        let kept_frames = plan.frames_keep.len().max(1) as f64;
+        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+        let enc_mult = if item.video.is_some() {
+            kept_frames
+        } else {
+            (vlen.max(8) as f64 / 256.0).min(1.0)
+        };
+        let (_, enc_end) = vc.exec(
+            Site::Cloud,
+            up_arr,
+            vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_mult,
+            vit.flops_prefill(enc_patches) * enc_mult,
+        );
+        let (_, pre_end) = vc.exec(
+            Site::Cloud,
+            enc_end,
+            vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
+            full_m.flops_prefill(seq_paper),
+        );
+        rec.prefill_s = pre_end - arrival;
+
+        let kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
+        vc.cloud_mem.alloc(kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
+
+        let pre = self.eng.prefill(true, text, tlen, vis, vlen, aud, alen)?;
+        let mut tok = argmax(&pre.logits);
+        let mut tokens = vec![tok];
+        let mut t = pre_end;
+        let lens = (vlen, alen, tlen);
+        for j in 0..n_out - 1 {
+            let lg = self.eng.block(true, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
+            let ctx = seq_paper + j as f64;
+            let (_, end) = vc.exec(
+                Site::Cloud,
+                t,
+                vc.dev(Site::Cloud).decode_s(&full_m, ctx),
+                full_m.flops_decode(ctx),
+            );
+            t = end;
+            tok = argmax(&lg);
+            tokens.push(tok);
+            if tok == c.eos() {
+                break;
+            }
+        }
+        self.eng.free_kv(true, pre.kv);
+        vc.cloud_mem.free(kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
+        vc.edge_mem.free(probe.probe_mem_gb * 1e9);
+
+        let (_, done) = vc.send_down(t, 4 * tokens.len() as u64 + 64, false);
+        rec.bytes_down += 4 * tokens.len() as u64 + 64;
+        rec.t_done = done;
+        rec.latency_s = done - arrival;
+        rec.tokens_out = tokens.len();
+        rec.vis_tokens_kept = vlen;
+        rec.frames_kept = plan.frames_keep.len();
+        rec.flops_edge = vc.flops_edge;
+        rec.flops_cloud = vc.flops_cloud;
+        rec.mem_edge_gb = vc.edge_mem.peak_gb();
+        rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+        rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
+
+        let info = served_info(item, probe, plan, kept_idx, mode, 1.0);
+        let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
+        rec.p_correct = quality::p_correct(cap, item, &info);
+        rec.correct = quality::sample_correct(&mut self.rng, rec.p_correct);
+        Ok(rec)
+    }
+}
+
+/// Number of vision-encoder forward passes the edge runs for this item.
+fn frames_encoded(item: &Item) -> usize {
+    if let Some(v) = &item.video {
+        v.len()
+    } else if item.image.is_some() {
+        1
+    } else {
+        0
+    }
+}
+
+/// Paper-scale prompt length for the cost model.
+pub fn paper_seq(item: &Item, vlen: usize, frames: usize, alen: usize) -> f64 {
+    let vis = if item.video.is_some() {
+        frames as f64 * 128.0
+    } else {
+        vlen as f64 * 4.0
+    };
+    vis + alen as f64 * 2.0 + 32.0
+}
+
+/// Build the visual slot tensor per the plan. Returns (tensor, vlen,
+/// kept source patch indices for quality accounting).
+fn assemble_visual(
+    eng: &Engines,
+    probe: &ProbeOutcome,
+    plan: &Plan,
+    item: &Item,
+    mode: Mode,
+) -> Result<(HostTensor, usize, Vec<i32>)> {
+    let c = &eng.c;
+    let d = c.d_enc();
+    let slots = c.vis_slots();
+    if let Some(_frames) = &item.video {
+        // Video: concat pooled 32-token encodings of kept frames.
+        let ft = c.frame_tok();
+        let mut data = vec![0f32; slots * d];
+        let mut n = 0usize;
+        for &t in &plan.frames_keep {
+            if (n + 1) * ft > slots {
+                break;
+            }
+            let src = &probe.frame_tokens32[t];
+            data[n * ft * d..(n + 1) * ft * d].copy_from_slice(src);
+            n += 1;
+        }
+        return Ok((HostTensor::f32(data, vec![slots, d]), n * ft, Vec::new()));
+    }
+    if item.image.is_some() {
+        match mode {
+            Mode::NoModalityAware => {
+                let toks = probe.image_tokens.as_ref().context("image tokens")?;
+                let t = trim_tokens(toks, slots, d);
+                Ok((t, slots, (0..slots as i32).collect()))
+            }
+            _ => {
+                let p = probe.pruned.as_ref().context("pruned")?;
+                let keep = plan.vis_keep.min(p.count);
+                // Zero out beyond the beta-trimmed budget.
+                let mut data = p.pruned.as_f32()?.to_vec();
+                for row in keep..slots {
+                    for x in &mut data[row * d..(row + 1) * d] {
+                        *x = 0.0;
+                    }
+                }
+                let kept_idx = p.idx[..keep.min(p.idx.len())].to_vec();
+                Ok((HostTensor::f32(data, vec![slots, d]), keep, kept_idx))
+            }
+        }
+    } else {
+        Ok((eng.empty_vis(), 0, Vec::new()))
+    }
+}
+
+fn assemble_audio(
+    eng: &Engines,
+    probe: &ProbeOutcome,
+    plan: &Plan,
+) -> Result<(HostTensor, usize)> {
+    let c = &eng.c;
+    let d = c.d_enc();
+    let slots = c.aud_slots();
+    match &probe.audio_tokens {
+        Some(t) => {
+            let keep = plan.aud_keep.min(slots);
+            let src = t.as_f32()?;
+            let mut data = vec![0f32; slots * d];
+            // Stride-subsample keep rows (temporal compression).
+            for i in 0..keep {
+                let s = i * slots / keep.max(1);
+                data[i * d..(i + 1) * d].copy_from_slice(&src[s * d..(s + 1) * d]);
+            }
+            Ok((HostTensor::f32(data, vec![slots, d]), keep))
+        }
+        None => Ok((eng.empty_aud(), 0)),
+    }
+}
+
+/// Trim/pad an [N_PATCH, D] token tensor into the [VIS_SLOTS, D] budget.
+pub fn trim_tokens(tokens: &HostTensor, slots: usize, d: usize) -> HostTensor {
+    let src = tokens.as_f32().unwrap();
+    let mut data = vec![0f32; slots * d];
+    let n = slots.min(src.len() / d);
+    data[..n * d].copy_from_slice(&src[..n * d]);
+    HostTensor::f32(data, vec![slots, d])
+}
+
+/// Measure what actually survived for the quality model.
+fn served_info(
+    item: &Item,
+    probe: &ProbeOutcome,
+    plan: &Plan,
+    kept_idx: &[i32],
+    mode: Mode,
+    cloud_fraction: f64,
+) -> ServedInfo {
+    let salient_retained = match (&item.salient, mode) {
+        // Uniform policy: measured from its arbitrary (grid-order) slot
+        // cap — the 256->192 trim drops ~25% of patches blindly, which
+        // is exactly the accuracy cost of modality-blind offloading.
+        (Some(sal), _) => {
+            let total = sal.iter().filter(|&&s| s).count().max(1);
+            let kept = kept_idx
+                .iter()
+                .filter(|&&i| i >= 0 && sal[i as usize])
+                .count();
+            (kept as f64 / total as f64) * (1.0 - 0.3 * plan.rho[Modality::Image.index()])
+        }
+        (None, _) => 1.0,
+    };
+    let novel_frames_retained = match &item.novel {
+        Some(novel) => {
+            let total = novel.iter().filter(|&&n| n).count().max(1);
+            let kept = plan
+                .frames_keep
+                .iter()
+                .filter(|&&t| *novel.get(t).unwrap_or(&false))
+                .count();
+            (kept as f64 / total as f64).min(1.0)
+                * (1.0 - 0.3 * plan.rho[Modality::Video.index()])
+        }
+        None => 1.0,
+    };
+    let relevant_modality_kept = match item.relevant {
+        Modality::Text => true,
+        Modality::Image => plan.vis_keep > 0 || mode == Mode::NoModalityAware,
+        Modality::Video => !plan.frames_keep.is_empty(),
+        Modality::Audio => plan.aud_keep > 0 || item.audio.is_none(),
+    };
+    let _ = probe;
+    ServedInfo {
+        salient_retained: salient_retained.clamp(0.0, 1.0),
+        novel_frames_retained: novel_frames_retained.clamp(0.0, 1.0),
+        relevant_modality_kept,
+        cloud_quality_fraction: cloud_fraction,
+    }
+}

@@ -1,0 +1,231 @@
+//! Fine-grained adaptive speculative decode loop (Alg. 1 lines 4-13).
+//!
+//! Real token streams: the edge draft model proposes tokens one at a
+//! time (entropy-gated, Eq. 9-10); the cloud full model verifies blocks
+//! in parallel (full_verify) and supplies the correction/bonus token.
+//! Every committed token is cloud-approved, which is why MSAO's accuracy
+//! tracks the cloud-only bound in Table 1.
+//!
+//! Virtual timing: fully-accepted rounds hide the verify round-trip
+//! behind the next round's drafting (the paper's "near-optimal overlap
+//! between edge draft generation and cloud verification"); any rejection
+//! flushes the pipeline and the edge stalls until the verdict arrives.
+//! Low-confidence steps (H > theta) cut the draft block short, ship the
+//! intermediate state with the verify payload, and take the cloud's
+//! token at that position — an "offload" in the paper's terms.
+
+use anyhow::Result;
+
+use crate::cluster::SimModel;
+use crate::config::MsaoCfg;
+use crate::optimizer::ThetaController;
+use crate::runtime::engine::KvHandle;
+
+use super::batcher::Batcher;
+use super::engines::{argmax, entropy, Engines};
+use super::timeline::{Site, VirtualCluster};
+
+pub struct SpecParams {
+    pub edge_kv: KvHandle,
+    pub cloud_kv: KvHandle,
+    /// (vlen, alen, tlen) segment lengths for masking.
+    pub lens: (usize, usize, usize),
+    /// Paper-scale context length (for the cost model).
+    pub seq_paper: f64,
+    /// First committed token (from the cloud prefill logits).
+    pub first_token: i32,
+    /// Virtual times when each side is ready to decode.
+    pub edge_ready: f64,
+    pub cloud_ready: f64,
+    pub max_new: usize,
+    pub n_draft: usize,
+    /// Adaptive gating (false = ablation "w/o collaborative scheduling":
+    /// fixed single-token rounds, no overlap, no batching).
+    pub adaptive: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SpecOutcome {
+    pub tokens: Vec<i32>,
+    pub accepted: usize,
+    pub proposed: usize,
+    pub offloads: usize,
+    pub rounds: usize,
+    /// Virtual time the last token was committed.
+    pub t_done: f64,
+    /// Fraction of tokens carrying cloud-level quality (all committed
+    /// tokens are verified here, so 1.0 unless the loop degrades).
+    pub cloud_fraction: f64,
+}
+
+/// Verify-exchange payload sizes (bytes, paper scale).
+const VERIFY_UP_BYTES: u64 = 96; // tokens + positions + header
+const VERDICT_DOWN_BYTES: u64 = 64;
+const OFFLOAD_STATE_BYTES: u64 = 64 * 1024; // intermediate activations
+
+pub fn speculative_decode(
+    eng: &Engines,
+    vc: &mut VirtualCluster,
+    theta: &mut ThetaController,
+    _cfg: &MsaoCfg,
+    batcher: &mut Batcher,
+    p: SpecParams,
+) -> Result<SpecOutcome> {
+    let c = &eng.c;
+    let gen_off = c.gen_off();
+    let n_spec = c.n_spec();
+    let vocab = c.vocab();
+    let draft_m = SimModel::qwen2vl_2b();
+    let full_m = SimModel::qwen25vl_7b();
+
+    let mut out = SpecOutcome { tokens: vec![p.first_token], cloud_fraction: 1.0, ..Default::default() };
+    let mut commit_t = p.cloud_ready; // first token committed at prefill end
+    let mut edge_free = p.edge_ready.max(p.cloud_ready);
+    let mut flushed = true; // first round cannot overlap anything
+
+    // The static-scheduling ablation keeps the speculative mechanics
+    // (entropy gate, pipelining) but loses the *collaborative* parts:
+    // verify batching and adaptive routing (handled by the session).
+    let n_draft = p.n_draft.clamp(1, n_spec - 1);
+
+    while out.tokens.len() < p.max_new {
+        out.rounds += 1;
+        let n = out.tokens.len(); // committed so far
+        let last = *out.tokens.last().unwrap();
+
+        // --- draft phase (edge) ---------------------------------------
+        let mut drafts: Vec<i32> = Vec::with_capacity(n_draft);
+        let mut input = last;
+        // Pipelined drafting: the edge proceeds from its own cursor; only
+        // a flush (rejection) synchronizes it with the verdict arrival.
+        let mut t_cursor = edge_free;
+        let _ = flushed;
+        let mut low_conf = false;
+        for j in 0..n_draft {
+            let pos = gen_off + n - 1 + j;
+            if pos + 1 >= c.s_max() {
+                break;
+            }
+            let logits = eng.block(false, false, p.edge_kv, pos, &[input], p.lens)?;
+            let ctx = p.seq_paper + (n + j) as f64;
+            let secs = vc.dev(Site::Edge).decode_s(&draft_m, ctx);
+            let (_, end) = vc.exec(Site::Edge, t_cursor, secs, draft_m.flops_decode(ctx));
+            t_cursor = end;
+            let h = entropy(&logits);
+            theta.record_entropy(h);
+            let tok = argmax(&logits);
+            drafts.push(tok);
+            input = tok;
+            if !theta.speculate(h) {
+                low_conf = true;
+                break;
+            }
+        }
+        let m = drafts.len();
+        let draft_end = t_cursor;
+
+        // --- verify phase (cloud) ---------------------------------------
+        // Block inputs: [last, d_1..d_m] padded to N_SPEC; logits[r]
+        // checks d_{r+1}; logits[m] is the correction/bonus.
+        let mut block: Vec<i32> = Vec::with_capacity(n_spec);
+        block.push(last);
+        block.extend(&drafts);
+        while block.len() < n_spec {
+            block.push(c.pad());
+        }
+        let cloud_pos = gen_off + n - 1;
+        let logits = eng.block(true, true, p.cloud_kv, cloud_pos, &block, p.lens)?;
+
+        // Virtual: uplink (with offload state if low confidence), verify
+        // compute, verdict downlink.
+        let up_bytes = VERIFY_UP_BYTES + if low_conf { OFFLOAD_STATE_BYTES } else { 0 };
+        let piggyback = p.adaptive && batcher.admit(draft_end);
+        let (_, up_arr) = vc.send_up(draft_end, up_bytes, piggyback);
+        let ctx = p.seq_paper + n as f64;
+        // Batched verifies share the cloud's weight streaming: a
+        // piggybacked round pays only its incremental compute + KV reads,
+        // the window leader pays the full memory-bound pass.
+        let v_secs = if piggyback {
+            vc.dev(Site::Cloud).exec_s(
+                full_m.flops_verify((m + 1) as f64, ctx),
+                full_m.kv_bytes_per_token * ctx,
+            )
+        } else {
+            vc.dev(Site::Cloud).verify_s(&full_m, (m + 1) as f64, ctx)
+        };
+        let (_, v_end) = vc.exec(
+            Site::Cloud,
+            up_arr,
+            v_secs,
+            full_m.flops_verify((m + 1) as f64, ctx),
+        );
+        let (_, v_arr) = vc.send_down(v_end, VERDICT_DOWN_BYTES, false);
+
+        // --- acceptance (greedy longest prefix) -------------------------
+        let mut j = 0usize;
+        while j < m {
+            let row = &logits[j * vocab..(j + 1) * vocab];
+            if argmax(row) == drafts[j] {
+                j += 1;
+            } else {
+                break;
+            }
+        }
+        let correction = argmax(&logits[j * vocab..(j + 1) * vocab]);
+        out.proposed += m;
+        out.accepted += j;
+        if low_conf {
+            out.offloads += 1;
+            if j == m {
+                // False alarm: the gate fired but every pending draft was
+                // accepted — loosen rather than decay (gate precision
+                // feedback keeps theta from collapsing, Eq. 16).
+                theta.on_verify(m + 1, m + 1);
+            } else {
+                theta.on_offload();
+            }
+        }
+        theta.on_verify(j, m.max(1));
+
+        // Commit d_1..d_j + correction.
+        let mut committed: Vec<i32> = drafts[..j].to_vec();
+        committed.push(correction);
+        let mut hit_eos = false;
+        for t in committed {
+            out.tokens.push(t);
+            if t == c.eos() {
+                hit_eos = true;
+                break;
+            }
+            if out.tokens.len() >= p.max_new {
+                break;
+            }
+        }
+        commit_t = v_arr;
+
+        // --- pipeline bookkeeping ---------------------------------------
+        // The offload is asynchronous (Alg. 1 line 10): shipping the
+        // intermediate state does not stall the edge; only an actual
+        // draft rejection flushes the pipeline.
+        // Static scheduling (ablation) never overlaps: the edge waits for
+        // every verdict, paying the full verify round-trip per round.
+        let all_accepted = j == m && p.adaptive;
+        if all_accepted {
+            // Verify hidden behind next round's drafting.
+            flushed = false;
+            edge_free = draft_end;
+        } else {
+            // Rejection / offload / non-adaptive: edge stalls for verdict.
+            flushed = true;
+            edge_free = draft_end.max(v_arr);
+        }
+
+        if hit_eos {
+            break;
+        }
+    }
+
+    out.t_done = commit_t;
+    out.tokens.truncate(p.max_new);
+    Ok(out)
+}

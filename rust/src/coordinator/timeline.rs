@@ -1,0 +1,168 @@
+//! Virtual testbed timeline: serialized occupancy of the edge device,
+//! the cloud device, and the two link directions, plus FLOPs and memory
+//! ledgers — the discrete-event substrate every serving mode runs on.
+//!
+//! Real token streams come from the PJRT engines; *time* comes from the
+//! cost model applied to the same events at paper scale (DESIGN.md §3).
+//! Devices are serially occupied resources: an op scheduled at `earliest`
+//! starts at max(earliest, busy_until). The uplink and downlink are
+//! independent serialization resources with propagation delay appended.
+
+use crate::cluster::{DeviceSim, Link, MemTracker};
+use crate::config::Config;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    Edge,
+    Cloud,
+}
+
+#[derive(Debug)]
+pub struct VirtualCluster {
+    pub edge: DeviceSim,
+    pub cloud: DeviceSim,
+    pub link: Link,
+    pub edge_mem: MemTracker,
+    pub cloud_mem: MemTracker,
+    pub flops_edge: f64,
+    pub flops_cloud: f64,
+    edge_busy: f64,
+    cloud_busy: f64,
+    up_busy: f64,
+    down_busy: f64,
+}
+
+impl VirtualCluster {
+    pub fn new(cfg: &Config, seed: u64) -> Self {
+        VirtualCluster {
+            edge: DeviceSim::new(cfg.edge),
+            cloud: DeviceSim::new(cfg.cloud),
+            link: Link::new(cfg.network, seed),
+            edge_mem: MemTracker::new(),
+            cloud_mem: MemTracker::new(),
+            flops_edge: 0.0,
+            flops_cloud: 0.0,
+            edge_busy: 0.0,
+            cloud_busy: 0.0,
+            up_busy: 0.0,
+            down_busy: 0.0,
+        }
+    }
+
+    pub fn busy_until(&self, site: Site) -> f64 {
+        match site {
+            Site::Edge => self.edge_busy,
+            Site::Cloud => self.cloud_busy,
+        }
+    }
+
+    /// Run `secs` of compute consuming `flops` on `site`, no earlier than
+    /// `earliest`. Returns (start, end).
+    pub fn exec(&mut self, site: Site, earliest: f64, secs: f64, flops: f64) -> (f64, f64) {
+        let busy = match site {
+            Site::Edge => &mut self.edge_busy,
+            Site::Cloud => &mut self.cloud_busy,
+        };
+        let start = busy.max(earliest);
+        let end = start + secs;
+        *busy = end;
+        match site {
+            Site::Edge => self.flops_edge += flops,
+            Site::Cloud => self.flops_cloud += flops,
+        }
+        (start, end)
+    }
+
+    /// Transfer `bytes` edge->cloud starting no earlier than `earliest`.
+    /// Returns (serialization end, arrival time at the cloud).
+    /// `skip_propagation` models a batched/piggybacked message that rides
+    /// an already-open exchange window (dynamic batcher).
+    pub fn send_up(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
+        let start = self.up_busy.max(earliest);
+        let ser = self.link.serialize_s(bytes);
+        let end = start + ser;
+        self.up_busy = end;
+        self.link.uplink_bytes += bytes;
+        self.link.transfers += 1;
+        let prop = if skip_propagation { 0.0 } else { self.link.one_way_s() };
+        (end, end + prop)
+    }
+
+    /// Transfer `bytes` cloud->edge. Returns (serialization end, arrival).
+    pub fn send_down(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
+        let start = self.down_busy.max(earliest);
+        let ser = self.link.serialize_s(bytes);
+        let end = start + ser;
+        self.down_busy = end;
+        self.link.downlink_bytes += bytes;
+        self.link.transfers += 1;
+        let prop = if skip_propagation { 0.0 } else { self.link.one_way_s() };
+        (end, end + prop)
+    }
+
+    pub fn mem(&mut self, site: Site) -> &mut MemTracker {
+        match site {
+            Site::Edge => &mut self.edge_mem,
+            Site::Cloud => &mut self.cloud_mem,
+        }
+    }
+
+    pub fn dev(&self, site: Site) -> &DeviceSim {
+        match site {
+            Site::Edge => &self.edge,
+            Site::Cloud => &self.cloud,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vc() -> VirtualCluster {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        VirtualCluster::new(&cfg, 1)
+    }
+
+    #[test]
+    fn devices_serialize_work() {
+        let mut c = vc();
+        let (s1, e1) = c.exec(Site::Edge, 0.0, 1.0, 1e9);
+        let (s2, e2) = c.exec(Site::Edge, 0.0, 0.5, 1e9);
+        assert_eq!((s1, e1), (0.0, 1.0));
+        assert_eq!((s2, e2), (1.0, 1.5)); // queued behind op 1
+        // Cloud is independent.
+        let (s3, _) = c.exec(Site::Cloud, 0.2, 0.1, 1e9);
+        assert_eq!(s3, 0.2);
+        assert_eq!(c.flops_edge, 2e9);
+        assert_eq!(c.flops_cloud, 1e9);
+    }
+
+    #[test]
+    fn earliest_respected() {
+        let mut c = vc();
+        let (s, _) = c.exec(Site::Cloud, 5.0, 1.0, 0.0);
+        assert_eq!(s, 5.0);
+    }
+
+    #[test]
+    fn link_directions_independent_and_serialized() {
+        let mut c = vc();
+        // 300 Mbps: 1 MB = 8e6/3e8 s ~= 26.7ms serialize; one-way 10 ms.
+        let (end1, arr1) = c.send_up(0.0, 1_000_000, false);
+        assert!((end1 - 0.026_666).abs() < 1e-4, "{end1}");
+        assert!((arr1 - end1 - 0.010).abs() < 1e-9);
+        let (end2, _) = c.send_up(0.0, 1_000_000, false);
+        assert!(end2 > end1 * 1.9); // serialized behind first
+        let (end3, _) = c.send_down(0.0, 1_000_000, false);
+        assert!((end3 - end1).abs() < 1e-9); // downlink independent
+    }
+
+    #[test]
+    fn piggyback_skips_propagation() {
+        let mut c = vc();
+        let (end, arr) = c.send_up(0.0, 1000, true);
+        assert_eq!(end, arr);
+    }
+}

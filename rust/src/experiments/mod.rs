@@ -1,0 +1,364 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver regenerates the corresponding artifact's rows: same
+//! methods, same sweeps (2 benchmarks x 200/300/400 Mbps), printed as
+//! ASCII tables and dumped as JSON for plotting. Absolute numbers come
+//! from the calibrated virtual testbed (DESIGN.md §3); the *shape* —
+//! who wins, by what factor, where crossovers fall — is the
+//! reproduction target.
+
+use anyhow::Result;
+
+use crate::baselines::{serve_trace_baseline, Baseline};
+use crate::config::Config;
+use crate::coordinator::{serve_trace, Coordinator, Mode};
+use crate::metrics::{summarize, Summary};
+use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::table::{f1, f2, f3, Table};
+use crate::workload::{v_configs, Benchmark, Generator};
+
+/// Requests per (benchmark, bandwidth, method) cell. Small enough to run
+/// every cell through the real engines, large enough for stable means.
+pub const N_REQUESTS: usize = 16;
+/// Offered load (requests/second) for the serving traces.
+pub const ARRIVAL_RATE: f64 = 1.8;
+
+pub struct Bench {
+    pub benchmark: Benchmark,
+    pub bandwidth: f64,
+}
+
+pub fn sweep() -> Vec<Bench> {
+    let mut v = Vec::new();
+    for &benchmark in &[Benchmark::Vqa, Benchmark::MmBench] {
+        for &bandwidth in &Config::BANDWIDTH_LEVELS {
+            v.push(Bench { benchmark, bandwidth });
+        }
+    }
+    v
+}
+
+/// All four serving strategies of the main comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    CloudOnly,
+    EdgeOnly,
+    PerLlm,
+    Msao,
+}
+
+impl Method {
+    pub const ALL: [Method; 4] =
+        [Method::CloudOnly, Method::EdgeOnly, Method::PerLlm, Method::Msao];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::CloudOnly => "Cloud-only",
+            Method::EdgeOnly => "Edge-only",
+            Method::PerLlm => "PerLLM",
+            Method::Msao => "MSAO",
+        }
+    }
+}
+
+/// Run one (benchmark, bandwidth, method) cell and summarize.
+pub fn run_cell(
+    coord: &mut Coordinator,
+    bench: &Bench,
+    method: Method,
+    n: usize,
+    seed: u64,
+) -> Result<Summary> {
+    coord.cfg.network.bandwidth_mbps = bench.bandwidth;
+    let mut gen = Generator::new(seed);
+    let items = gen.items(bench.benchmark, n);
+    let arrivals = gen.arrivals(n, ARRIVAL_RATE);
+    let res = match method {
+        Method::Msao => serve_trace(coord, &items, &arrivals, Mode::Msao, seed)?,
+        Method::CloudOnly => {
+            serve_trace_baseline(coord, Baseline::CloudOnly, &items, &arrivals, seed)?
+        }
+        Method::EdgeOnly => {
+            serve_trace_baseline(coord, Baseline::EdgeOnly, &items, &arrivals, seed)?
+        }
+        Method::PerLlm => {
+            serve_trace_baseline(coord, Baseline::PerLlm, &items, &arrivals, seed)?
+        }
+    };
+    Ok(summarize(&res.records))
+}
+
+/// Fig. 4 — probe-module overhead across configurations V1-V7.
+pub fn fig4(coord: &mut Coordinator) -> Result<(Table, Value)> {
+    use crate::cluster::{DeviceSim, SimModel};
+    use crate::coordinator::mas::probe_cost;
+
+    let dev = DeviceSim::new(coord.cfg.edge);
+    let full = SimModel::qwen25vl_7b();
+    let mut table = Table::new(
+        "Fig.4 — lightweight modality-aware module overhead (V1-V7)",
+        &["config", "modalities", "latency_ms", "flops_pct", "mem_gb"],
+    );
+    let mut rows = Vec::new();
+    let vit = SimModel::vision_encoder();
+    for cfg in v_configs() {
+        let frames = if cfg.frames > 0 { cfg.frames } else { usize::from(cfg.resolution > 0.0) };
+        let (secs, flops, mem) =
+            probe_cost(&dev, cfg.modalities.len(), frames.max(1), cfg.resolution.max(0.25), cfg.text_len);
+        // FLOPs relative to this configuration's full inference pipeline:
+        // encoder passes for every frame + full-model prefill over the
+        // config's sequence + 64-token decode (paper §5.2 normalizes the
+        // module against the end-to-end pass it accompanies).
+        let patches = 256.0 * cfg.resolution.max(0.25);
+        let seq = patches * frames.max(1) as f64 * 0.5 + cfg.text_len as f64;
+        let pipeline_flops = frames.max(1) as f64 * vit.flops_prefill(patches)
+            + full.flops_prefill(seq)
+            + (0..64).map(|j| full.flops_decode(seq + j as f64)).sum::<f64>();
+        let pct = 100.0 * flops / pipeline_flops;
+        table.row(vec![
+            cfg.name.to_string(),
+            format!("{}", cfg.modalities.len()),
+            f2(secs * 1e3),
+            f3(pct),
+            f2(mem),
+        ]);
+        rows.push(obj(vec![
+            ("config", s(cfg.name)),
+            ("latency_ms", num(secs * 1e3)),
+            ("flops_pct", num(pct)),
+            ("mem_gb", num(mem)),
+        ]));
+    }
+    Ok((table, arr(rows)))
+}
+
+/// Table 1 — accuracy comparison.
+pub fn table1(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    let mut table = Table::new(
+        "Table 1 — Accuracy (%)",
+        &["dataset", "bandwidth", "Cloud-only", "Edge-only", "PerLLM", "MSAO"],
+    );
+    let mut rows = Vec::new();
+    for bench in sweep() {
+        let mut cells = Vec::new();
+        for (mi, method) in Method::ALL.iter().enumerate() {
+            let s = run_cell(coord, &bench, *method, n, 42 + mi as u64)?;
+            cells.push(s.expected_accuracy * 100.0);
+        }
+        table.row(vec![
+            bench.benchmark.name().to_string(),
+            format!("{:.0} Mbps", bench.bandwidth),
+            f1(cells[0]),
+            f1(cells[1]),
+            f1(cells[2]),
+            f1(cells[3]),
+        ]);
+        rows.push(obj(vec![
+            ("dataset", s(bench.benchmark.name())),
+            ("bandwidth", num(bench.bandwidth)),
+            ("cloud", num(cells[0])),
+            ("edge", num(cells[1])),
+            ("perllm", num(cells[2])),
+            ("msao", num(cells[3])),
+        ]));
+    }
+    Ok((table, arr(rows)))
+}
+
+/// Shared machinery for Figs. 5-8 (throughput / latency / compute / mem).
+pub fn main_sweep(coord: &mut Coordinator, n: usize) -> Result<Vec<(Bench, Vec<Summary>)>> {
+    let mut out = Vec::new();
+    for bench in sweep() {
+        let mut sums = Vec::new();
+        for (mi, method) in Method::ALL.iter().enumerate() {
+            sums.push(run_cell(coord, &bench, *method, n, 42 + mi as u64)?);
+        }
+        out.push((bench, sums));
+    }
+    Ok(out)
+}
+
+pub fn fig5(data: &[(Bench, Vec<Summary>)]) -> (Table, Value) {
+    metric_table(
+        data,
+        "Fig.5 — Throughput (tokens/s)",
+        |s| s.throughput_tps,
+        f1,
+    )
+}
+
+pub fn fig6(data: &[(Bench, Vec<Summary>)]) -> (Table, Value) {
+    metric_table(
+        data,
+        "Fig.6 — Mean end-to-end latency (s)",
+        |s| s.latency_mean_s,
+        f3,
+    )
+}
+
+pub fn fig7(data: &[(Bench, Vec<Summary>)]) -> (Table, Value) {
+    metric_table(
+        data,
+        "Fig.7 — Computing overhead (TFLOPs/request)",
+        |s| s.tflops_per_req,
+        f2,
+    )
+}
+
+pub fn fig8(data: &[(Bench, Vec<Summary>)]) -> (Table, Value) {
+    metric_table(
+        data,
+        "Fig.8 — Dedicated serving memory (GB)",
+        |s| s.mem_serving_gb,
+        f1,
+    )
+}
+
+fn metric_table(
+    data: &[(Bench, Vec<Summary>)],
+    title: &str,
+    f: impl Fn(&Summary) -> f64,
+    fmt: impl Fn(f64) -> String,
+) -> (Table, Value) {
+    let mut table = Table::new(
+        title,
+        &["dataset", "bandwidth", "Cloud-only", "Edge-only", "PerLLM", "MSAO"],
+    );
+    let mut rows = Vec::new();
+    for (bench, sums) in data {
+        let vals: Vec<f64> = sums.iter().map(&f).collect();
+        table.row(vec![
+            bench.benchmark.name().to_string(),
+            format!("{:.0} Mbps", bench.bandwidth),
+            fmt(vals[0]),
+            fmt(vals[1]),
+            fmt(vals[2]),
+            fmt(vals[3]),
+        ]);
+        rows.push(obj(vec![
+            ("dataset", s(bench.benchmark.name())),
+            ("bandwidth", num(bench.bandwidth)),
+            ("cloud", num(vals[0])),
+            ("edge", num(vals[1])),
+            ("perllm", num(vals[2])),
+            ("msao", num(vals[3])),
+        ]));
+    }
+    (table, arr(rows))
+}
+
+/// Fig. 9 — ablation study: full MSAO vs w/o modality-aware vs w/o
+/// collaborative scheduling, on both benchmarks at 300 Mbps.
+pub fn fig9(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    let mut table = Table::new(
+        "Fig.9 — Ablation (300 Mbps)",
+        &["dataset", "variant", "accuracy_%", "latency_s", "tflops", "mem_gb"],
+    );
+    let variants = [
+        ("MSAO", Mode::Msao),
+        ("w/o Modality-Aware", Mode::NoModalityAware),
+        ("w/o Collab-Sched", Mode::NoCollabSched),
+    ];
+    let mut rows = Vec::new();
+    for &benchmark in &[Benchmark::Vqa, Benchmark::MmBench] {
+        coord.cfg.network.bandwidth_mbps = 300.0;
+        for (name, mode) in variants {
+            let mut gen = Generator::new(77);
+            let items = gen.items(benchmark, n);
+            let arrivals = gen.arrivals(n, ARRIVAL_RATE);
+            let res = serve_trace(coord, &items, &arrivals, mode, 77)?;
+            let sum = summarize(&res.records);
+            table.row(vec![
+                benchmark.name().to_string(),
+                name.to_string(),
+                f1(sum.expected_accuracy * 100.0),
+                f3(sum.latency_mean_s),
+                f2(sum.tflops_per_req),
+                f1(sum.mem_serving_gb),
+            ]);
+            rows.push(obj(vec![
+                ("dataset", s(benchmark.name())),
+                ("variant", s(name)),
+                ("accuracy", num(sum.expected_accuracy * 100.0)),
+                ("latency_s", num(sum.latency_mean_s)),
+                ("tflops", num(sum.tflops_per_req)),
+                ("mem_gb", num(sum.mem_serving_gb)),
+            ]));
+        }
+    }
+    Ok((table, arr(rows)))
+}
+
+/// Dispatcher: run one experiment id (or "all"), print tables, dump JSON.
+pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) -> Result<()> {
+    let mut dumps: Vec<(&str, Value)> = Vec::new();
+    match id {
+        "fig4" => {
+            let (t, v) = fig4(coord)?;
+            t.print();
+            dumps.push(("fig4", v));
+        }
+        "table1" => {
+            let (t, v) = table1(coord, n)?;
+            t.print();
+            dumps.push(("table1", v));
+        }
+        "fig5" | "fig6" | "fig7" | "fig8" => {
+            let data = main_sweep(coord, n)?;
+            let (t, v) = match id {
+                "fig5" => fig5(&data),
+                "fig6" => fig6(&data),
+                "fig7" => fig7(&data),
+                _ => fig8(&data),
+            };
+            t.print();
+            dumps.push((Box::leak(id.to_string().into_boxed_str()), v));
+        }
+        "fig9" => {
+            let (t, v) = fig9(coord, n)?;
+            t.print();
+            dumps.push(("fig9", v));
+        }
+        "main" => {
+            // Figs. 5-8 share one sweep; run it once.
+            let data = main_sweep(coord, n)?;
+            for (name, (t, v)) in [
+                ("fig5", fig5(&data)),
+                ("fig6", fig6(&data)),
+                ("fig7", fig7(&data)),
+                ("fig8", fig8(&data)),
+            ] {
+                t.print();
+                dumps.push((name, v));
+            }
+        }
+        "all" => {
+            let (t, v) = fig4(coord)?;
+            t.print();
+            dumps.push(("fig4", v));
+            let (t, v) = table1(coord, n)?;
+            t.print();
+            dumps.push(("table1", v));
+            let data = main_sweep(coord, n)?;
+            for (name, (t, v)) in [
+                ("fig5", fig5(&data)),
+                ("fig6", fig6(&data)),
+                ("fig7", fig7(&data)),
+                ("fig8", fig8(&data)),
+            ] {
+                t.print();
+                dumps.push((name, v));
+            }
+            let (t, v) = fig9(coord, n)?;
+            t.print();
+            dumps.push(("fig9", v));
+        }
+        other => anyhow::bail!("unknown experiment id {other:?}"),
+    }
+    if let Some(path) = out_json {
+        let o = obj(dumps.into_iter().map(|(k, v)| (k, v)).collect());
+        std::fs::write(path, o.to_string())?;
+        println!("results written to {path}");
+    }
+    Ok(())
+}

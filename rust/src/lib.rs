@@ -1,0 +1,37 @@
+//! MSAO: Adaptive Modality Sparsity-Aware Offloading with Edge-Cloud
+//! Collaboration for Efficient Multimodal LLM Inference.
+//!
+//! Reproduction of Yang et al. (CS.DC 2026). Three-layer architecture:
+//! this crate is the L3 coordinator — it loads AOT-compiled HLO artifacts
+//! (L2 JAX graphs embedding L1 Pallas kernels, built once by
+//! `python/compile/aot.py`) through the PJRT C API and runs the paper's
+//! adaptive offloading system on top. Python is never on the request path.
+//!
+//! Crate layout (see DESIGN.md for the full inventory):
+//! - [`config`]      — TOML config: models, devices, network, MSAO params.
+//! - [`runtime`]     — PJRT engine actors (edge/cloud sites), tokenizer.
+//! - [`cluster`]     — substrates: device cost model, network simulator.
+//! - [`sparsity`]    — MAS metric math (Eqs. 4-7).
+//! - [`optimizer`]   — from-scratch GP Bayesian optimization + EMA.
+//! - [`coordinator`] — the paper's contribution: MAS probing, offload
+//!   planning, speculative decode loop, batching, KV management, serving.
+//! - [`baselines`]   — Cloud-only / Edge-only / PerLLM comparators.
+//! - [`workload`]    — synthetic VQAv2/MMBench-like generators and traces.
+//! - [`quality`]     — calibrated accuracy model (DESIGN.md §7).
+//! - [`metrics`]     — histograms, counters, table emitters.
+//! - [`experiments`] — drivers regenerating every paper table and figure.
+
+pub mod baselines;
+pub mod util;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod optimizer;
+pub mod quality;
+pub mod runtime;
+pub mod sparsity;
+pub mod workload;
+
+pub use config::Config;

@@ -1,0 +1,179 @@
+//! MSAO launcher: `msao <command> [flags]`.
+//!
+//! Commands
+//!   info                         — print artifact + config summary
+//!   probe [--seed N]             — probe one synthetic item, print MAS
+//!   serve [--n N] [--mode M] [--bandwidth B] — serve a trace, print summary
+//!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
+//!                                  (fig4|table1|fig5..fig9|main|all)
+//!
+//! Flag parsing is hand-rolled (offline environment: no clap).
+
+use anyhow::{bail, Context, Result};
+
+use msao::baselines::{serve_trace_baseline, Baseline};
+use msao::config::Config;
+use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::experiments;
+use msao::metrics::summarize;
+use msao::workload::Generator;
+
+struct Args {
+    cmd: String,
+    flags: std::collections::HashMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "info".to_string());
+    let mut flags = std::collections::HashMap::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let val = it.next().with_context(|| format!("missing value for --{name}"))?;
+            flags.insert(name.to_string(), val);
+        } else {
+            bail!("unexpected argument {a:?}");
+        }
+    }
+    Ok(Args { cmd, flags })
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> Result<usize> {
+        Ok(match self.get(k) {
+            Some(v) => v.parse()?,
+            None => d,
+        })
+    }
+
+    fn f64_or(&self, k: &str, d: f64) -> Result<f64> {
+        Ok(match self.get(k) {
+            Some(v) => v.parse()?,
+            None => d,
+        })
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.get("config") {
+        Some(p) => Config::load(p),
+        None => Ok(Config::default()),
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "info" => {
+            let cfg = load_config(&args)?;
+            let m = msao::runtime::Manifest::load(&cfg.artifacts_dir)?;
+            println!("MSAO — adaptive modality sparsity-aware offloading");
+            println!("artifacts: {} graphs from {:?}", m.graphs.len(), m.dir);
+            println!(
+                "models: draft d={} L={} ({}K params) | full d={} L={} ({}K params)",
+                m.constants.draft_d(),
+                m.constants.draft_layers(),
+                m.constants.draft_params() / 1000,
+                m.constants.full_d(),
+                m.constants.full_layers(),
+                m.constants.full_params() / 1000,
+            );
+            println!(
+                "testbed: edge {:.0} TFLOPs / cloud {:.0} TFLOPs / {} Mbps rtt {} ms",
+                cfg.edge.peak_tflops,
+                cfg.cloud.peak_tflops,
+                cfg.network.bandwidth_mbps,
+                cfg.network.rtt_ms
+            );
+            println!(
+                "msao: tau_s={} lambda=({}, {}) eps_Q={} N_max={} P_target={} BO iters={}",
+                cfg.msao.tau_s,
+                cfg.msao.lambda_spatial,
+                cfg.msao.lambda_temp,
+                cfg.msao.epsilon_q,
+                cfg.msao.n_max,
+                cfg.msao.p_target,
+                cfg.msao.bo_iters
+            );
+        }
+        "probe" => {
+            let cfg = load_config(&args)?;
+            let seed = args.usize_or("seed", 7)? as u64;
+            let coord = Coordinator::new(cfg)?;
+            let mut gen = Generator::new(seed);
+            let item = gen.mmbench_item();
+            let probe = msao::coordinator::mas::run_probe(&coord.eng, &coord.cfg.msao, &item)?;
+            println!("question: {:?} (relevant: {})", item.question, item.relevant.name());
+            println!("rho_spatial = {:.3}  gamma_avg = {:.3}", probe.rho_spatial, probe.gamma_avg);
+            for m in &probe.mas {
+                println!(
+                    "  {:<6} present={:<5} beta={:.3} MAS={:.3}",
+                    m.modality.name(),
+                    probe.present[m.modality.index()],
+                    m.beta,
+                    m.mas
+                );
+            }
+        }
+        "serve" => {
+            let mut cfg = load_config(&args)?;
+            cfg.network.bandwidth_mbps = args.f64_or("bandwidth", cfg.network.bandwidth_mbps)?;
+            let n = args.usize_or("n", 16)?;
+            let mode = args.get("mode").unwrap_or("msao").to_string();
+            let mut coord = Coordinator::new(cfg)?;
+            let mut gen = Generator::new(args.usize_or("seed", 42)? as u64);
+            let items = gen.items(msao::workload::Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, args.f64_or("rate", 2.0)?);
+            let res = match mode.as_str() {
+                "msao" => serve_trace(&mut coord, &items, &arrivals, Mode::Msao, 1)?,
+                "no-modality" => {
+                    serve_trace(&mut coord, &items, &arrivals, Mode::NoModalityAware, 1)?
+                }
+                "no-collab" => {
+                    serve_trace(&mut coord, &items, &arrivals, Mode::NoCollabSched, 1)?
+                }
+                "cloud" => serve_trace_baseline(&mut coord, Baseline::CloudOnly, &items, &arrivals, 1)?,
+                "edge" => serve_trace_baseline(&mut coord, Baseline::EdgeOnly, &items, &arrivals, 1)?,
+                "perllm" => serve_trace_baseline(&mut coord, Baseline::PerLlm, &items, &arrivals, 1)?,
+                other => bail!("unknown mode {other:?}"),
+            };
+            let sum = summarize(&res.records);
+            println!("mode={mode} n={n}");
+            println!(
+                "accuracy {:.1}%  latency mean {:.3}s p99 {:.3}s  throughput {:.1} tok/s",
+                sum.accuracy * 100.0,
+                sum.latency_mean_s,
+                sum.latency_p99_s,
+                sum.throughput_tps
+            );
+            println!(
+                "tflops/req {:.2} (edge {:.2} cloud {:.2})  mem edge {:.1} GB cloud {:.1} GB",
+                sum.tflops_per_req,
+                sum.tflops_edge_per_req,
+                sum.tflops_cloud_per_req,
+                sum.mem_edge_peak_gb,
+                sum.mem_cloud_peak_gb
+            );
+            println!(
+                "acceptance {:.2}  offloads/req {:.2}  uplink {:.2} MB total",
+                sum.acceptance_rate,
+                sum.offloads_per_req,
+                res.uplink_bytes as f64 / 1e6
+            );
+        }
+        "experiment" => {
+            let cfg = load_config(&args)?;
+            let id = args.get("id").context("--id required")?.to_string();
+            let n = args.usize_or("n", experiments::N_REQUESTS)?;
+            let json = args.get("json").map(|s| s.to_string());
+            let mut coord = Coordinator::new(cfg)?;
+            experiments::run(&mut coord, &id, n, json.as_deref())?;
+        }
+        other => bail!("unknown command {other:?} (try info|probe|serve|experiment)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! Metrics: per-request execution records and workload-level aggregation
+//! — the raw material for every table and figure.
+
+use crate::util::stats::{mean, percentile};
+
+/// Everything measured for one served request (virtual-testbed units).
+#[derive(Debug, Clone, Default)]
+pub struct ExecRecord {
+    pub request_id: u64,
+    /// Virtual arrival / completion times (seconds).
+    pub t_arrival: f64,
+    pub t_done: f64,
+    /// End-to-end latency (s).
+    pub latency_s: f64,
+    /// Prefill portion of the latency (s).
+    pub prefill_s: f64,
+    /// Probe (modality-aware module) latency (s).
+    pub probe_s: f64,
+    /// Tokens generated.
+    pub tokens_out: usize,
+    /// Draft tokens accepted / proposed (speculation stats).
+    pub accepted: usize,
+    pub proposed: usize,
+    /// Low-confidence offloads to the cloud.
+    pub offloads: usize,
+    /// FLOPs consumed (paper-scale), split by site.
+    pub flops_edge: f64,
+    pub flops_cloud: f64,
+    /// Bytes over the link.
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Peak memory attributable to this request (paper scale, GB).
+    pub mem_edge_gb: f64,
+    pub mem_cloud_gb: f64,
+    /// Method-specific "dedicated serving memory" (Fig. 8 metric): the
+    /// peak memory the operator must provision exclusively for this
+    /// request stream (see DESIGN.md §7 note).
+    pub mem_serving_gb: f64,
+    /// Quality: probability the final answer is correct (calibrated
+    /// model, DESIGN.md §7) and the sampled correctness.
+    pub p_correct: f64,
+    pub correct: bool,
+    /// Retention achieved per modality (for ablation analysis).
+    pub vis_tokens_kept: usize,
+    pub frames_kept: usize,
+}
+
+impl ExecRecord {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.flops_edge + self.flops_cloud
+    }
+}
+
+/// Aggregated view over a batch of records.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    /// Sampled exact-match accuracy (noisy at small n).
+    pub accuracy: f64,
+    /// Expected accuracy: mean p_correct of the calibrated quality model
+    /// (what Table 1 reports — deterministic given the serving decisions).
+    pub expected_accuracy: f64,
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+    pub prefill_mean_s: f64,
+    pub probe_mean_ms: f64,
+    /// System throughput: total tokens / makespan (tokens/s).
+    pub throughput_tps: f64,
+    pub tflops_per_req: f64,
+    pub tflops_edge_per_req: f64,
+    pub tflops_cloud_per_req: f64,
+    pub mem_edge_peak_gb: f64,
+    pub mem_cloud_peak_gb: f64,
+    pub mem_serving_gb: f64,
+    pub gb_up_per_req: f64,
+    pub acceptance_rate: f64,
+    pub offloads_per_req: f64,
+    pub tokens_per_req: f64,
+}
+
+pub fn summarize(records: &[ExecRecord]) -> Summary {
+    let n = records.len();
+    assert!(n > 0, "no records");
+    let lat: Vec<f64> = records.iter().map(|r| r.latency_s).collect();
+    let makespan = records
+        .iter()
+        .map(|r| r.t_done)
+        .fold(0.0f64, f64::max)
+        - records.iter().map(|r| r.t_arrival).fold(f64::INFINITY, f64::min);
+    let tokens: usize = records.iter().map(|r| r.tokens_out).sum();
+    let (acc_n, prop_n): (usize, usize) = records
+        .iter()
+        .fold((0, 0), |(a, p), r| (a + r.accepted, p + r.proposed));
+    Summary {
+        n,
+        accuracy: records.iter().filter(|r| r.correct).count() as f64 / n as f64,
+        expected_accuracy: records.iter().map(|r| r.p_correct).sum::<f64>() / n as f64,
+        latency_mean_s: mean(&lat),
+        latency_p50_s: percentile(&lat, 0.5),
+        latency_p99_s: percentile(&lat, 0.99),
+        prefill_mean_s: mean(&records.iter().map(|r| r.prefill_s).collect::<Vec<_>>()),
+        probe_mean_ms: 1e3 * mean(&records.iter().map(|r| r.probe_s).collect::<Vec<_>>()),
+        throughput_tps: tokens as f64 / makespan.max(1e-9),
+        tflops_per_req: mean(&records.iter().map(|r| r.total_flops() / 1e12).collect::<Vec<_>>()),
+        tflops_edge_per_req: mean(&records.iter().map(|r| r.flops_edge / 1e12).collect::<Vec<_>>()),
+        tflops_cloud_per_req: mean(&records.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>()),
+        mem_edge_peak_gb: records.iter().map(|r| r.mem_edge_gb).fold(0.0, f64::max),
+        mem_cloud_peak_gb: records.iter().map(|r| r.mem_cloud_gb).fold(0.0, f64::max),
+        mem_serving_gb: records.iter().map(|r| r.mem_serving_gb).fold(0.0, f64::max),
+        gb_up_per_req: mean(&records.iter().map(|r| r.bytes_up as f64 / 1e9).collect::<Vec<_>>()),
+        acceptance_rate: if prop_n == 0 { 0.0 } else { acc_n as f64 / prop_n as f64 },
+        offloads_per_req: mean(&records.iter().map(|r| r.offloads as f64).collect::<Vec<_>>()),
+        tokens_per_req: tokens as f64 / n as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(lat: f64, t0: f64, tokens: usize, ok: bool) -> ExecRecord {
+        ExecRecord {
+            t_arrival: t0,
+            t_done: t0 + lat,
+            latency_s: lat,
+            tokens_out: tokens,
+            correct: ok,
+            accepted: 4,
+            proposed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let recs = vec![rec(1.0, 0.0, 10, true), rec(3.0, 1.0, 30, false)];
+        let s = summarize(&recs);
+        assert_eq!(s.n, 2);
+        assert!((s.accuracy - 0.5).abs() < 1e-12);
+        assert!((s.latency_mean_s - 2.0).abs() < 1e-12);
+        // makespan = 4.0 (0 -> 4), 40 tokens.
+        assert!((s.throughput_tps - 10.0).abs() < 1e-9);
+        assert!((s.acceptance_rate - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        summarize(&[]);
+    }
+}

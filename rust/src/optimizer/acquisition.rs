@@ -1,0 +1,81 @@
+//! Expected Improvement acquisition (paper §5.1.4: "the acquisition
+//! function is expected improvement with an exploration-exploitation
+//! trade-off parameter of 0.1").
+//!
+//! EI(x) = (f* - mu - xi) Phi(z) + sigma phi(z),  z = (f* - mu - xi)/sigma
+//! for minimization, with xi the exploration bonus.
+
+/// Standard normal pdf.
+pub fn phi(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal cdf via erf (Abramowitz-Stegun 7.1.26 approximation;
+/// max error ~1.5e-7, plenty for acquisition ranking).
+pub fn cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Expected improvement for *minimization*.
+pub fn expected_improvement(mean: f64, var: f64, best: f64, xi: f64) -> f64 {
+    let sigma = var.sqrt();
+    if sigma < 1e-12 {
+        return (best - mean - xi).max(0.0);
+    }
+    let imp = best - mean - xi;
+    let z = imp / sigma;
+    (imp * cdf(z) + sigma * phi(z)).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_symmetry() {
+        for x in [-2.0, -0.5, 0.0, 0.7, 1.9] {
+            assert!((cdf(x) + cdf(-x) - 1.0).abs() < 1e-7);
+        }
+        assert!((cdf(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ei_prefers_lower_mean_and_higher_variance() {
+        let best = 1.0;
+        let low_mean = expected_improvement(0.5, 0.01, best, 0.0);
+        let high_mean = expected_improvement(1.5, 0.01, best, 0.0);
+        assert!(low_mean > high_mean);
+        let low_var = expected_improvement(1.2, 0.0001, best, 0.0);
+        let high_var = expected_improvement(1.2, 1.0, best, 0.0);
+        assert!(high_var > low_var);
+    }
+
+    #[test]
+    fn ei_nonnegative_and_zero_when_hopeless() {
+        let ei = expected_improvement(100.0, 1e-13, 0.0, 0.0);
+        assert_eq!(ei, 0.0);
+        for mean in [-1.0, 0.0, 2.0] {
+            assert!(expected_improvement(mean, 0.5, 0.0, 0.1) >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Bayesian optimization loop for the coarse-grained phase (Alg. 1
+//! line 1): minimize expected prefill latency over (beta, rho) in
+//! [0,1]^d subject to box constraints handled by the objective (infeasible
+//! points return a penalized value).
+//!
+//! GP surrogate (Matérn 5/2) + EI acquisition maximized over a random
+//! candidate set — for d <= 8 and <= 50 iterations this is within noise
+//! of gradient-based acquisition optimization and has no extra deps.
+
+use anyhow::Result;
+
+use crate::util::Rng;
+
+use super::acquisition::expected_improvement;
+use super::gp::{Gp, Matern52};
+
+pub struct BayesOpt {
+    pub gp: Gp,
+    dim: usize,
+    xi: f64,
+    rng: Rng,
+    n_candidates: usize,
+    n_seed: usize,
+}
+
+impl BayesOpt {
+    pub fn new(dim: usize, xi: f64, seed: u64) -> Self {
+        BayesOpt {
+            gp: Gp::new(Matern52::default(), 1e-6),
+            dim,
+            xi,
+            rng: Rng::seed_from_u64(seed),
+            n_candidates: 64, // perf pass: 256->64, same optima found (tests), 4x cheaper suggest
+            n_seed: 8.min(4 * dim.max(1)),
+        }
+    }
+
+    /// Next point to evaluate: random (space-filling) during seeding, then
+    /// EI-argmax over a fresh random candidate set.
+    pub fn suggest(&mut self) -> Vec<f64> {
+        if self.gp.len() < self.n_seed {
+            return (0..self.dim).map(|_| self.rng.f64()).collect();
+        }
+        let best = self.gp.best_standardized();
+        let mut best_x: Vec<f64> = (0..self.dim).map(|_| self.rng.f64()).collect();
+        let mut best_ei = f64::NEG_INFINITY;
+        for _ in 0..self.n_candidates {
+            let x: Vec<f64> = (0..self.dim).map(|_| self.rng.f64()).collect();
+            let (raw_mean, raw_var) = self.gp.predict(&x);
+            // Standardize for EI (gp returns raw units).
+            let (m, s) = (raw_mean, raw_var);
+            let _ = (m, s);
+            let ei = {
+                // Work in raw units with raw best: equivalent ranking.
+                let raw_best = self.gp.best().map(|(_, y)| y).unwrap_or(0.0);
+                let _ = best;
+                expected_improvement(raw_mean, raw_var, raw_best, self.xi)
+            };
+            if ei > best_ei {
+                best_ei = ei;
+                best_x = x;
+            }
+        }
+        best_x
+    }
+
+    /// Report an observation.
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) -> Result<()> {
+        self.gp.observe(x, y)
+    }
+
+    /// Run the full loop against an objective.
+    pub fn minimize<F: FnMut(&[f64]) -> f64>(
+        &mut self,
+        iters: usize,
+        mut f: F,
+    ) -> Result<(Vec<f64>, f64)> {
+        for _ in 0..iters {
+            let x = self.suggest();
+            let y = f(&x);
+            self.observe(x, y)?;
+        }
+        let (x, y) = self.gp.best().expect("at least one observation");
+        Ok((x.to_vec(), y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_1d_minimum() {
+        let mut bo = BayesOpt::new(1, 0.01, 42);
+        // Minimum at x = 0.3.
+        let (x, y) = bo.minimize(30, |x| (x[0] - 0.3).powi(2)).unwrap();
+        assert!((x[0] - 0.3).abs() < 0.08, "x={:?}", x);
+        assert!(y < 0.01, "y={y}");
+    }
+
+    #[test]
+    fn finds_2d_minimum() {
+        let mut bo = BayesOpt::new(2, 0.01, 7);
+        let (x, y) = bo
+            .minimize(40, |x| (x[0] - 0.7).powi(2) + (x[1] - 0.2).powi(2))
+            .unwrap();
+        assert!((x[0] - 0.7).abs() < 0.15 && (x[1] - 0.2).abs() < 0.15, "{x:?}");
+        assert!(y < 0.03, "y={y}");
+    }
+
+    #[test]
+    fn beats_random_search_on_average() {
+        // Sublinear-regret sanity (Eq. 15): BO's best-found should beat
+        // pure random with the same budget on a smooth objective.
+        let obj = |x: &[f64]| {
+            (x[0] - 0.42).powi(2) + 0.5 * (x[1] - 0.77).powi(2) + 0.1 * (x[0] * x[1]).sin()
+        };
+        let mut bo_wins = 0;
+        for seed in 0..5 {
+            let mut bo = BayesOpt::new(2, 0.01, seed);
+            let (_, y_bo) = bo.minimize(25, |x| obj(x)).unwrap();
+            let mut rng = Rng::seed_from_u64(seed + 1000);
+            let y_rand = (0..25)
+                .map(|_| obj(&[rng.f64(), rng.f64()]))
+                .fold(f64::INFINITY, f64::min);
+            if y_bo <= y_rand {
+                bo_wins += 1;
+            }
+        }
+        assert!(bo_wins >= 3, "BO won only {bo_wins}/5");
+    }
+
+    #[test]
+    fn handles_penalized_infeasible_regions() {
+        let mut bo = BayesOpt::new(1, 0.01, 3);
+        // Feasible only for x > 0.5; infeasible penalized.
+        let (x, _) = bo
+            .minimize(30, |x| {
+                if x[0] <= 0.5 {
+                    10.0
+                } else {
+                    (x[0] - 0.6).powi(2)
+                }
+            })
+            .unwrap();
+        assert!(x[0] > 0.5, "{x:?}");
+    }
+}

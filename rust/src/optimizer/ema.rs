@@ -1,0 +1,212 @@
+//! Fine-grained confidence-threshold adaptation (Alg. 1 lines 2, 8, 11).
+//!
+//! theta_conf starts at the 70th percentile of a calibration entropy
+//! distribution; on successful speculation it moves by EMA toward the
+//! level that keeps the observed acceptance rate at P_target; on a
+//! low-confidence offload it decays by delta (floored at theta_min).
+//! The EMA contraction is what gives the paper's Eq. 16 convergence.
+
+use crate::config::MsaoCfg;
+use crate::util::stats::percentile;
+
+#[derive(Debug, Clone)]
+pub struct ThetaController {
+    pub theta: f64,
+    cfg: ThetaCfg,
+    /// Sliding window of recent entropies (for re-quantiling).
+    recent: Vec<f64>,
+    cap: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ThetaCfg {
+    ema: f64,
+    decay: f64,
+    min: f64,
+    p_target: f64,
+}
+
+impl ThetaController {
+    /// Initialize from the calibration entropy sample (Alg. 1 line 2:
+    /// theta = H_emp^-1(percentile)).
+    pub fn from_calibration(cfg: &MsaoCfg, entropies: &[f64]) -> Self {
+        let theta = if entropies.is_empty() {
+            1.0
+        } else {
+            percentile(entropies, cfg.theta_init_percentile)
+        };
+        ThetaController {
+            theta: theta.max(cfg.theta_min),
+            cfg: ThetaCfg {
+                ema: cfg.theta_ema,
+                decay: cfg.theta_decay,
+                min: cfg.theta_min,
+                p_target: cfg.p_target,
+            },
+            recent: Vec::new(),
+            cap: 256,
+        }
+    }
+
+    /// Record an observed draft entropy (drives the adaptive quantile).
+    pub fn record_entropy(&mut self, h: f64) {
+        if self.recent.len() == self.cap {
+            self.recent.remove(0);
+        }
+        self.recent.push(h);
+    }
+
+    /// Speculation round finished: `accepted` of `proposed` draft tokens
+    /// were accepted by the cloud (Alg. 1 line 8: EMA of accepted tokens).
+    ///
+    /// theta* is the entropy quantile admitting P_target of recent steps
+    /// (the inverse of Eq. 12, matching the Alg. 1 line-2 initialization);
+    /// the EMA contracts toward it, giving the Eq. 16 convergence. A
+    /// fully-rejected round is evidence the gate is too loose and applies
+    /// an extra decay on top.
+    pub fn on_verify(&mut self, accepted: usize, proposed: usize) {
+        if proposed == 0 {
+            return;
+        }
+        let target = if self.recent.is_empty() {
+            self.theta
+        } else {
+            percentile(&self.recent, self.cfg.p_target)
+        };
+        self.theta = ((1.0 - self.cfg.ema) * self.theta + self.cfg.ema * target)
+            .max(self.cfg.min);
+        if accepted == 0 && proposed >= 2 {
+            self.theta = (self.theta * self.cfg.decay).max(self.cfg.min);
+        }
+    }
+
+    /// Low-confidence step triggered an offload (Alg. 1 line 11:
+    /// theta <- max(theta * delta, theta_min)).
+    pub fn on_offload(&mut self) {
+        self.theta = (self.theta * self.cfg.decay).max(self.cfg.min);
+    }
+
+    /// Should this step speculate? (Eq. 10)
+    pub fn speculate(&self, entropy: f64) -> bool {
+        entropy <= self.theta
+    }
+
+    /// P_conf estimate from the recent entropy window (Eq. 12).
+    pub fn p_conf(&self) -> f64 {
+        if self.recent.is_empty() {
+            return 0.5;
+        }
+        let n = self.recent.iter().filter(|&&h| h <= self.theta).count();
+        n as f64 / self.recent.len() as f64
+    }
+}
+
+/// Expected speculative run length E[N_spec] = 1 / (1 - P_conf) (Eq. 13),
+/// capped at N_max.
+pub fn expected_spec_len(p_conf: f64, n_max: usize) -> f64 {
+    let p = p_conf.clamp(0.0, 0.999);
+    (1.0 / (1.0 - p)).min(n_max as f64)
+}
+
+/// Draft length from target acceptance (Alg. 1 line 3):
+/// N_draft = min(floor(log(1 - P_target) / log(P_conf)), N_max).
+pub fn draft_len(p_conf: f64, p_target: f64, n_max: usize) -> usize {
+    if p_conf <= 0.0 || p_conf >= 1.0 {
+        return if p_conf >= 1.0 { n_max } else { 1 };
+    }
+    let n = ((1.0 - p_target).ln() / p_conf.ln()).floor();
+    (n.max(1.0) as usize).min(n_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MsaoCfg {
+        MsaoCfg::default()
+    }
+
+    fn calib() -> Vec<f64> {
+        (0..500).map(|i| i as f64 / 499.0 * 3.0).collect() // uniform [0,3]
+    }
+
+    #[test]
+    fn init_at_percentile() {
+        let t = ThetaController::from_calibration(&cfg(), &calib());
+        assert!((t.theta - 2.1).abs() < 0.02, "{}", t.theta); // 70th pct of U[0,3]
+    }
+
+    #[test]
+    fn offload_decays_with_floor() {
+        let mut t = ThetaController::from_calibration(&cfg(), &calib());
+        let before = t.theta;
+        t.on_offload();
+        assert!((t.theta - before * 0.95).abs() < 1e-12);
+        for _ in 0..500 {
+            t.on_offload();
+        }
+        assert!((t.theta - cfg().theta_min).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_acceptance_tightens_high_acceptance_loosens() {
+        let mut t = ThetaController::from_calibration(&cfg(), &calib());
+        for h in calib() {
+            t.record_entropy(h);
+        }
+        let start = t.theta;
+        for _ in 0..20 {
+            t.on_verify(0, 5); // nothing accepted
+        }
+        assert!(t.theta < start, "tighten: {} -> {}", start, t.theta);
+        let tightened = t.theta;
+        for _ in 0..50 {
+            t.on_verify(5, 5); // everything accepted
+        }
+        assert!(t.theta > tightened, "loosen: {} -> {}", tightened, t.theta);
+    }
+
+    #[test]
+    fn ema_converges_to_stable_theta() {
+        // Eq. 16: with stationary feedback theta converges.
+        let mut t = ThetaController::from_calibration(&cfg(), &calib());
+        for h in calib() {
+            t.record_entropy(h);
+        }
+        let mut last = t.theta;
+        let mut deltas = Vec::new();
+        for _ in 0..200 {
+            t.on_verify(4, 5); // 0.8 == P_target exactly
+            deltas.push((t.theta - last).abs());
+            last = t.theta;
+        }
+        let tail: f64 = deltas[150..].iter().sum::<f64>() / 50.0;
+        assert!(tail < 1e-3, "not converged: {tail}");
+    }
+
+    #[test]
+    fn speculate_rule_eq10() {
+        let t = ThetaController::from_calibration(&cfg(), &calib());
+        assert!(t.speculate(t.theta - 0.1));
+        assert!(t.speculate(t.theta));
+        assert!(!t.speculate(t.theta + 0.1));
+    }
+
+    #[test]
+    fn spec_len_eq13() {
+        assert!((expected_spec_len(0.5, 100) - 2.0).abs() < 1e-12);
+        assert!((expected_spec_len(0.9, 100) - 10.0).abs() < 1e-9);
+        assert_eq!(expected_spec_len(0.99, 5), 5.0); // capped
+    }
+
+    #[test]
+    fn draft_len_alg1_line3() {
+        // P_conf=0.8, P_target=0.8: log(0.2)/log(0.8) ~= 7.2 -> capped at 5.
+        assert_eq!(draft_len(0.8, 0.8, 5), 5);
+        // Low confidence -> short drafts.
+        assert_eq!(draft_len(0.3, 0.8, 5), 1);
+        // Degenerate cases.
+        assert_eq!(draft_len(0.0, 0.8, 5), 1);
+        assert_eq!(draft_len(1.0, 0.8, 5), 5);
+    }
+}

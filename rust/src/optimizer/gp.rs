@@ -1,0 +1,225 @@
+//! Gaussian-process surrogate with Matérn 5/2 kernel (paper §5.1.4:
+//! "Gaussian process surrogate with Matérn 5/2 kernel").
+//!
+//! Observations are (x in [0,1]^d, y) pairs; predictions return posterior
+//! mean and variance. Outputs are standardized internally so the EI
+//! acquisition is scale-free. With the GP-UCB/EI machinery the coarse
+//! phase achieves the O(sqrt(T log T)) regret the paper cites (Eq. 15).
+
+use anyhow::Result;
+
+use super::linalg;
+
+#[derive(Debug, Clone)]
+pub struct Matern52 {
+    /// Length scale per dimension (isotropic default 0.3 on [0,1]^d).
+    pub length_scale: f64,
+    /// Signal variance.
+    pub sigma2: f64,
+}
+
+impl Default for Matern52 {
+    fn default() -> Self {
+        Matern52 { length_scale: 0.3, sigma2: 1.0 }
+    }
+}
+
+impl Matern52 {
+    pub fn eval(&self, a: &[f64], b: &[f64]) -> f64 {
+        let r2: f64 = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) / self.length_scale).powi(2))
+            .sum();
+        let r = r2.sqrt();
+        let s5 = (5.0f64).sqrt();
+        self.sigma2 * (1.0 + s5 * r + 5.0 * r2 / 3.0) * (-s5 * r).exp()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Gp {
+    kernel: Matern52,
+    noise: f64,
+    xs: Vec<Vec<f64>>,
+    ys_raw: Vec<f64>,
+    // Fitted state.
+    chol: Vec<f64>,
+    alpha: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+}
+
+impl Gp {
+    pub fn new(kernel: Matern52, noise: f64) -> Self {
+        Gp {
+            kernel,
+            noise,
+            xs: Vec::new(),
+            ys_raw: Vec::new(),
+            chol: Vec::new(),
+            alpha: Vec::new(),
+            y_mean: 0.0,
+            y_std: 1.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Best (minimum) observed raw value.
+    pub fn best(&self) -> Option<(&[f64], f64)> {
+        let (i, y) = self
+            .ys_raw
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+        Some((&self.xs[i], *y))
+    }
+
+    pub fn observe(&mut self, x: Vec<f64>, y: f64) -> Result<()> {
+        self.xs.push(x);
+        self.ys_raw.push(y);
+        self.refit()
+    }
+
+    fn refit(&mut self) -> Result<()> {
+        let n = self.xs.len();
+        self.y_mean = self.ys_raw.iter().sum::<f64>() / n as f64;
+        self.y_std = (self
+            .ys_raw
+            .iter()
+            .map(|y| (y - self.y_mean).powi(2))
+            .sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let ys: Vec<f64> = self.ys_raw.iter().map(|y| (y - self.y_mean) / self.y_std).collect();
+
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel.eval(&self.xs[i], &self.xs[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += self.noise;
+        }
+        // Escalate jitter if the factorization struggles.
+        let mut jitter = 0.0;
+        let chol = loop {
+            let mut kj = k.clone();
+            if jitter > 0.0 {
+                for i in 0..n {
+                    kj[i * n + i] += jitter;
+                }
+            }
+            match linalg::cholesky(&kj, n) {
+                Ok(l) => break l,
+                Err(_) if jitter < 1.0 => {
+                    jitter = if jitter == 0.0 { 1e-8 } else { jitter * 10.0 };
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        self.alpha = linalg::chol_solve(&chol, n, &ys);
+        self.chol = chol;
+        Ok(())
+    }
+
+    /// Posterior (mean, variance) at `x`, in raw output units.
+    pub fn predict(&self, x: &[f64]) -> (f64, f64) {
+        let n = self.xs.len();
+        if n == 0 {
+            return (0.0, self.kernel.sigma2);
+        }
+        let kx: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
+        let mean_std: f64 = kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
+        let v = linalg::solve_lower(&self.chol, n, &kx);
+        let var_std = (self.kernel.eval(x, x) - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
+        (
+            mean_std * self.y_std + self.y_mean,
+            var_std * self.y_std * self.y_std,
+        )
+    }
+
+    /// Best observed value standardized (for EI).
+    pub fn best_standardized(&self) -> f64 {
+        self.ys_raw
+            .iter()
+            .map(|y| (y - self.y_mean) / self.y_std)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_properties() {
+        let k = Matern52::default();
+        let a = [0.3, 0.7];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-12); // k(x,x) = sigma2
+        let near = k.eval(&a, &[0.31, 0.71]);
+        let far = k.eval(&a, &[0.9, 0.1]);
+        assert!(near > far && far > 0.0);
+        // Symmetry.
+        assert!((k.eval(&a, &[0.9, 0.1]) - k.eval(&[0.9, 0.1], &a)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn interpolates_observations() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        let f = |x: f64| (3.0 * x - 1.0).sin() + 2.0;
+        for i in 0..8 {
+            let x = i as f64 / 7.0;
+            gp.observe(vec![x], f(x)).unwrap();
+        }
+        for i in 0..8 {
+            let x = i as f64 / 7.0;
+            let (m, v) = gp.predict(&[x]);
+            assert!((m - f(x)).abs() < 1e-2, "at {x}: {m} vs {}", f(x));
+            assert!(v < 1e-2);
+        }
+        // Away from data, variance grows.
+        let (_, v_far) = gp.predict(&[0.5 / 7.0]);
+        let (_, v_at) = gp.predict(&[1.0 / 7.0]);
+        assert!(v_far > v_at);
+    }
+
+    #[test]
+    fn predicts_reasonably_between_points() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        gp.observe(vec![0.0], 0.0).unwrap();
+        gp.observe(vec![1.0], 1.0).unwrap();
+        let (m, _) = gp.predict(&[0.5]);
+        assert!(m > 0.2 && m < 0.8, "midpoint mean {m}");
+    }
+
+    #[test]
+    fn best_tracks_minimum() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        gp.observe(vec![0.1], 5.0).unwrap();
+        gp.observe(vec![0.5], 2.0).unwrap();
+        gp.observe(vec![0.9], 7.0).unwrap();
+        let (x, y) = gp.best().unwrap();
+        assert_eq!(y, 2.0);
+        assert_eq!(x, &[0.5]);
+    }
+
+    #[test]
+    fn survives_duplicate_points() {
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        gp.observe(vec![0.5], 1.0).unwrap();
+        gp.observe(vec![0.5], 1.0).unwrap(); // duplicate -> needs jitter
+        gp.observe(vec![0.5], 1.02).unwrap();
+        let (m, _) = gp.predict(&[0.5]);
+        assert!((m - 1.0).abs() < 0.1);
+    }
+}

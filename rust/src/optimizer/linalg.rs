@@ -1,0 +1,114 @@
+//! Dense linear algebra for the GP (substrate): Cholesky factorization
+//! and triangular solves over row-major `Vec<f64>` matrices. Problem
+//! sizes are tiny (BO with <=50 observations), so simplicity wins.
+
+use anyhow::{bail, Result};
+
+/// Cholesky factor L (lower) of SPD matrix `a` (n x n, row-major),
+/// in-place into a fresh matrix. Adds no jitter itself — callers add
+/// diagonal noise before factoring.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[i * n + k] * y[k];
+        }
+        y[i] = sum / l[i * n + i];
+    }
+    y
+}
+
+/// Solve L^T x = y (backward substitution).
+pub fn solve_upper_t(l: &[f64], n: usize, y: &[f64]) -> Vec<f64> {
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[k * n + i] * x[k];
+        }
+        x[i] = sum / l[i * n + i];
+    }
+    x
+}
+
+/// Solve A x = b given the Cholesky factor L of A.
+pub fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    solve_upper_t(l, n, &solve_lower(l, n, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_and_solve_3x3() {
+        // A = [[4,2,0.6],[2,2,0.4],[0.6,0.4,1]] is SPD.
+        let a = vec![4.0, 2.0, 0.6, 2.0, 2.0, 0.4, 0.6, 0.4, 1.0];
+        let l = cholesky(&a, 3).unwrap();
+        // L L^T == A
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += l[i * 3 + k] * l[j * 3 + k];
+                }
+                assert!((s - a[i * 3 + j]).abs() < 1e-12);
+            }
+        }
+        let b = vec![1.0, -2.0, 3.0];
+        let x = chol_solve(&l, 3, &b);
+        // Check A x = b.
+        for i in 0..3 {
+            let mut s = 0.0;
+            for j in 0..3 {
+                s += a[i * 3 + j] * x[j];
+            }
+            assert!((s - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let l = cholesky(&a, n).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let x = chol_solve(&l, n, &b);
+        for i in 0..n {
+            assert!((x[i] - b[i]).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch optimization substrates for the two-timescale MSAO
+//! algorithm (Alg. 1): Bayesian optimization (GP + Matérn 5/2 + EI) for
+//! the coarse per-request phase, and the EMA confidence-threshold
+//! controller for the fine per-step phase.
+
+pub mod acquisition;
+pub mod bayesopt;
+pub mod ema;
+pub mod gp;
+pub mod linalg;
+
+pub use bayesopt::BayesOpt;
+pub use ema::{draft_len, expected_spec_len, ThetaController};
+pub use gp::{Gp, Matern52};

@@ -1,0 +1,177 @@
+//! Site actor: owns a PJRT [`Site`] on a dedicated OS thread.
+//!
+//! PJRT objects are not `Send`, so each simulated site (edge, cloud) runs
+//! its engine on its own thread; the coordinator sends commands over an
+//! mpsc channel and blocks on one-shot replies. This also mirrors the
+//! paper's physical deployment: edge and cloud are independent executors
+//! that only exchange explicit messages (whose bytes are metered through
+//! the network simulator).
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::oneshot;
+
+use super::engine::{Arg, CallOut, HostTensor, KvHandle, OutPlan, Site};
+use super::manifest::{Manifest, TensorSpec};
+
+enum Cmd {
+    Call {
+        graph: String,
+        args: Vec<Arg>,
+        plan: OutPlan,
+        resp: oneshot::Sender<Result<CallOut>>,
+    },
+    ExportKv {
+        handle: KvHandle,
+        spec: TensorSpec,
+        resp: oneshot::Sender<Result<HostTensor>>,
+    },
+    ImportKv {
+        tensor: HostTensor,
+        resp: oneshot::Sender<Result<KvHandle>>,
+    },
+    FreeKv {
+        handle: KvHandle,
+    },
+    Stats {
+        resp: oneshot::Sender<SiteStats>,
+    },
+    Shutdown,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SiteStats {
+    pub kv_entries: usize,
+    pub bytes_uploaded: u64,
+}
+
+/// Cloneable handle to a site actor thread. All methods block the calling
+/// thread until the engine replies; callers that want overlap (e.g. edge
+/// draft racing cloud verify) issue calls from separate threads.
+#[derive(Clone)]
+pub struct SiteHandle {
+    tx: mpsc::Sender<Cmd>,
+    pub name: String,
+}
+
+pub struct SiteThread {
+    pub handle: SiteHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl SiteThread {
+    /// Spawn a site actor loading `graphs` from `manifest`.
+    pub fn spawn(name: &str, manifest: &Manifest, graphs: &[&str]) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let name_s = name.to_string();
+        let manifest = manifest.clone();
+        let graphs: Vec<String> = graphs.iter().map(|s| s.to_string()).collect();
+        let join = std::thread::Builder::new()
+            .name(format!("site-{name}"))
+            .spawn(move || {
+                let refs: Vec<&str> = graphs.iter().map(|s| s.as_str()).collect();
+                let mut site = match Site::load(&name_s, &manifest, &refs) {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Call { graph, args, plan, resp } => {
+                            resp.send(site.call(&graph, &args, plan));
+                        }
+                        Cmd::ExportKv { handle, spec, resp } => {
+                            resp.send(site.export_kv(handle, &spec));
+                        }
+                        Cmd::ImportKv { tensor, resp } => {
+                            resp.send(site.import_kv(&tensor));
+                        }
+                        Cmd::FreeKv { handle } => site.free_kv(handle),
+                        Cmd::Stats { resp } => {
+                            resp.send(SiteStats {
+                                kv_entries: site.kv_count(),
+                                bytes_uploaded: site.bytes_uploaded,
+                            });
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("site {name} thread died during load"))??;
+        let handle = SiteHandle { tx, name: name.to_string() };
+        Ok(SiteThread { handle: handle.clone(), join: Some(join) })
+    }
+}
+
+impl Drop for SiteThread {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl SiteHandle {
+    pub fn call(&self, graph: &str, args: Vec<Arg>, plan: OutPlan) -> Result<CallOut> {
+        let (resp, rx) = oneshot::channel();
+        self.tx
+            .send(Cmd::Call { graph: graph.to_string(), args, plan, resp })
+            .map_err(|_| anyhow!("site {} actor gone", self.name))?;
+        rx.recv().ok_or_else(|| anyhow!("site {} dropped call", self.name))?
+    }
+
+    /// Fire a call and return a receiver so the caller can overlap other
+    /// work (the speculative loop races edge drafting with cloud verify).
+    pub fn call_async(
+        &self,
+        graph: &str,
+        args: Vec<Arg>,
+        plan: OutPlan,
+    ) -> Result<oneshot::Receiver<Result<CallOut>>> {
+        let (resp, rx) = oneshot::channel();
+        self.tx
+            .send(Cmd::Call { graph: graph.to_string(), args, plan, resp })
+            .map_err(|_| anyhow!("site {} actor gone", self.name))?;
+        Ok(rx)
+    }
+
+    pub fn export_kv(&self, handle: KvHandle, spec: TensorSpec) -> Result<HostTensor> {
+        let (resp, rx) = oneshot::channel();
+        self.tx
+            .send(Cmd::ExportKv { handle, spec, resp })
+            .map_err(|_| anyhow!("site {} actor gone", self.name))?;
+        rx.recv().ok_or_else(|| anyhow!("site {} dropped call", self.name))?
+    }
+
+    pub fn import_kv(&self, tensor: HostTensor) -> Result<KvHandle> {
+        let (resp, rx) = oneshot::channel();
+        self.tx
+            .send(Cmd::ImportKv { tensor, resp })
+            .map_err(|_| anyhow!("site {} actor gone", self.name))?;
+        rx.recv().ok_or_else(|| anyhow!("site {} dropped call", self.name))?
+    }
+
+    pub fn free_kv(&self, handle: KvHandle) {
+        let _ = self.tx.send(Cmd::FreeKv { handle });
+    }
+
+    pub fn stats(&self) -> Result<SiteStats> {
+        let (resp, rx) = oneshot::channel();
+        self.tx
+            .send(Cmd::Stats { resp })
+            .map_err(|_| anyhow!("site {} actor gone", self.name))?;
+        rx.recv().ok_or_else(|| anyhow!("site {} dropped stats", self.name))
+    }
+}

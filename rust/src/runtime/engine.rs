@@ -1,0 +1,401 @@
+//! PJRT engine: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! One [`Site`] owns one PJRT client plus the executables and weight
+//! buffers for the graphs that run at that site (the edge site loads the
+//! draft model + encoders + probes; the cloud site loads the full model).
+//! Weights are uploaded to device buffers once at startup and passed by
+//! reference on every call (`execute_b`), so the decode hot loop never
+//! re-copies them. KV caches live in a device-resident slab keyed by
+//! [`KvHandle`]; only logits travel back to the host each step.
+//!
+//! PJRT objects are not `Send`: `Site` must stay on the thread that made
+//! it. The async coordinator talks to sites through the actor in
+//! [`super::actor`].
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{GraphSpec, Manifest, TensorSpec};
+
+/// Host-side tensor, the interchange type between coordinator and engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len() * 4,
+            HostTensor::I32(d, _) => d.len() * 4,
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        let (n, dt) = match self {
+            HostTensor::F32(d, _) => (d.len(), "float32"),
+            HostTensor::I32(d, _) => (d.len(), "int32"),
+        };
+        n == spec.elements() && dt == spec.dtype
+    }
+}
+
+/// Argument to a graph call: host data (uploaded per call) or a
+/// device-resident KV cache handle.
+#[derive(Debug, Clone)]
+pub enum Arg {
+    Host(HostTensor),
+    Kv(KvHandle),
+}
+
+impl From<HostTensor> for Arg {
+    fn from(t: HostTensor) -> Self {
+        Arg::Host(t)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KvHandle(pub u64);
+
+/// Which outputs of a call to keep device-resident as new KV entries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OutPlan {
+    /// Fetch every output to the host.
+    AllHost,
+    /// Output at `kv_index` becomes (or replaces) a KV slab entry; the
+    /// rest are fetched to the host.
+    Kv { kv_index: usize, replace: Option<KvHandle> },
+}
+
+/// Result of a call: host tensors for fetched outputs, `None` at the slot
+/// kept on device (its handle is in `kv`).
+#[derive(Debug)]
+pub struct CallOut {
+    pub host: Vec<Option<HostTensor>>,
+    pub kv: Option<KvHandle>,
+}
+
+struct LoadedGraph {
+    exe: PjRtLoadedExecutable,
+    spec: GraphSpec,
+}
+
+pub struct Site {
+    pub name: String,
+    client: PjRtClient,
+    graphs: HashMap<String, LoadedGraph>,
+    weight_groups: HashMap<String, Vec<PjRtBuffer>>,
+    kv_slab: HashMap<KvHandle, PjRtBuffer>,
+    next_kv: u64,
+    /// Running total of bytes uploaded host->device (metrics).
+    pub bytes_uploaded: u64,
+    /// Host copies of the weight literals. PJRT's CopyFromLiteral is
+    /// asynchronous: the source literal must outlive the device copy, so
+    /// they are pinned here for the site's lifetime (dropping them early
+    /// segfaults inside libxla_extension on the copy worker thread).
+    _pinned_weights: Vec<Literal>,
+}
+
+impl Site {
+    /// Load the given graphs (and their weight groups) at this site.
+    pub fn load(name: &str, manifest: &Manifest, graph_names: &[&str]) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        let mut site = Site {
+            name: name.to_string(),
+            client,
+            graphs: HashMap::new(),
+            weight_groups: HashMap::new(),
+            kv_slab: HashMap::new(),
+            next_kv: 1,
+            bytes_uploaded: 0,
+            _pinned_weights: Vec::new(),
+        };
+        for gname in graph_names {
+            let spec = manifest.graph(gname)?.clone();
+            if let Some(group) = &spec.weights {
+                if !site.weight_groups.contains_key(group) {
+                    let path = manifest.weights_path(group)?;
+                    // NB: PjRtBuffer::read_npz mis-types f32 arrays as F16
+                    // (crate bug: ElementType ordinal cast). Read as
+                    // Literals (correct) and upload explicitly.
+                    let named: Vec<(String, Literal)> = Literal::read_npz(&path, &())
+                        .map_err(|e| anyhow!("npz {path:?}: {e}"))?;
+                    let mut by_name: HashMap<String, PjRtBuffer> = HashMap::new();
+                    for (n, lit) in named {
+                        let buf = site
+                            .client
+                            .buffer_from_host_literal(None, &lit)
+                            .map_err(|e| anyhow!("upload weight {n}: {e}"))?;
+                        by_name.insert(n.trim_end_matches(".npy").to_string(), buf);
+                        site._pinned_weights.push(lit); // async copy source
+                    }
+                    let order = &manifest.weights[group].names;
+                    let mut bufs = Vec::with_capacity(order.len());
+                    for n in order {
+                        bufs.push(
+                            by_name
+                                .remove(n)
+                                .with_context(|| format!("weight {group}/{n}"))?,
+                        );
+                    }
+                    site.weight_groups.insert(group.clone(), bufs);
+                }
+            }
+            let hlo = manifest.hlo_path(gname)?;
+            let proto = xla::HloModuleProto::from_text_file(&hlo)
+                .map_err(|e| anyhow!("parse {hlo:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = site
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {gname}: {e}"))?;
+            site.graphs.insert(gname.to_string(), LoadedGraph { exe, spec });
+        }
+        Ok(site)
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.graphs.contains_key(name)
+    }
+
+    fn upload(&mut self, t: &HostTensor) -> Result<PjRtBuffer> {
+        self.bytes_uploaded += t.size_bytes() as u64;
+        let buf = match t {
+            HostTensor::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+            HostTensor::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+        };
+        buf.map_err(|e| anyhow!("upload: {e}"))
+    }
+
+    fn fetch(buf: &PjRtBuffer, spec: &TensorSpec) -> Result<HostTensor> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("fetch: {e}"))?;
+        literal_to_host(&lit, spec)
+    }
+
+    pub fn kv_count(&self) -> usize {
+        self.kv_slab.len()
+    }
+
+    pub fn free_kv(&mut self, h: KvHandle) {
+        self.kv_slab.remove(&h);
+    }
+
+    /// Pull a KV cache off the device (for edge->cloud state offloading;
+    /// the bytes then travel through the simulated network).
+    pub fn export_kv(&mut self, h: KvHandle, spec: &TensorSpec) -> Result<HostTensor> {
+        let buf = self.kv_slab.get(&h).context("export_kv: bad handle")?;
+        Self::fetch(buf, spec)
+    }
+
+    /// Ingest a host KV tensor into the device slab.
+    pub fn import_kv(&mut self, t: &HostTensor) -> Result<KvHandle> {
+        let buf = self.upload(t)?;
+        let h = KvHandle(self.next_kv);
+        self.next_kv += 1;
+        self.kv_slab.insert(h, buf);
+        Ok(h)
+    }
+
+    /// Execute `graph` with `args` (weights are prepended automatically).
+    pub fn call(&mut self, graph: &str, args: &[Arg], plan: OutPlan) -> Result<CallOut> {
+        let lg = self
+            .graphs
+            .get(graph)
+            .with_context(|| format!("graph {graph} not loaded at site {}", self.name))?;
+        let spec = lg.spec.clone();
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{graph}: got {} args, expected {}",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        for (i, a) in args.iter().enumerate() {
+            if let Arg::Host(t) = a {
+                if !t.matches(&spec.inputs[i]) {
+                    bail!(
+                        "{graph}: arg {i} shape/dtype mismatch (got {:?}, want {:?})",
+                        t.shape(),
+                        spec.inputs[i]
+                    );
+                }
+            }
+        }
+
+        // Upload host args; collect owned temporaries so refs stay valid.
+        let mut tmp: Vec<PjRtBuffer> = Vec::new();
+        let mut tmp_idx: Vec<usize> = Vec::new(); // arg position per tmp
+        for (i, a) in args.iter().enumerate() {
+            if let Arg::Host(t) = a {
+                tmp.push(self.upload(t)?);
+                tmp_idx.push(i);
+            }
+        }
+        let weights: &[PjRtBuffer] = match &spec.weights {
+            Some(g) => &self.weight_groups[g],
+            None => &[],
+        };
+        let mut refs: Vec<&PjRtBuffer> = Vec::with_capacity(weights.len() + args.len());
+        refs.extend(weights.iter());
+        let mut t_iter = tmp.iter();
+        for a in args {
+            match a {
+                Arg::Host(_) => refs.push(t_iter.next().unwrap()),
+                Arg::Kv(h) => refs.push(
+                    self.kv_slab
+                        .get(h)
+                        .with_context(|| format!("{graph}: stale kv handle {h:?}"))?,
+                ),
+            }
+        }
+
+        let exe = &self.graphs[graph].exe;
+        let mut outs = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("{graph}: execute: {e}"))?;
+        let device_outs = outs.swap_remove(0);
+        drop(tmp);
+
+        self.collect(graph, device_outs, &spec, plan)
+    }
+
+    fn collect(
+        &mut self,
+        graph: &str,
+        device_outs: Vec<PjRtBuffer>,
+        spec: &GraphSpec,
+        plan: OutPlan,
+    ) -> Result<CallOut> {
+        // PJRT may return one buffer per output leaf, or a single tuple
+        // buffer (the graphs are lowered with return_tuple=True). Handle
+        // both; the tuple path loses device residency so OutPlan::Kv
+        // requires the untupled path.
+        let n_out = spec.outputs.len();
+        if device_outs.len() == n_out {
+            let mut host = Vec::with_capacity(n_out);
+            let mut kv = None;
+            for (i, buf) in device_outs.into_iter().enumerate() {
+                match plan {
+                    OutPlan::Kv { kv_index, replace } if i == kv_index => {
+                        let h = match replace {
+                            Some(h) => h,
+                            None => {
+                                let h = KvHandle(self.next_kv);
+                                self.next_kv += 1;
+                                h
+                            }
+                        };
+                        self.kv_slab.insert(h, buf);
+                        kv = Some(h);
+                        host.push(None);
+                    }
+                    _ => host.push(Some(Self::fetch(&buf, &spec.outputs[i])?)),
+                }
+            }
+            Ok(CallOut { host, kv })
+        } else if device_outs.len() == 1 {
+            // Tuple buffer: decompose host-side.
+            let lit = device_outs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{graph}: fetch tuple: {e}"))?;
+            let parts = lit
+                .to_tuple()
+                .map_err(|e| anyhow!("{graph}: decompose: {e}"))?;
+            if parts.len() != n_out {
+                bail!("{graph}: tuple arity {} != {}", parts.len(), n_out);
+            }
+            let mut host = Vec::with_capacity(n_out);
+            let mut kv = None;
+            for (i, part) in parts.iter().enumerate() {
+                let t = literal_to_host(part, &spec.outputs[i])?;
+                match plan {
+                    OutPlan::Kv { kv_index, replace } if i == kv_index => {
+                        let buf = self.upload(&t)?;
+                        let h = match replace {
+                            Some(h) => h,
+                            None => {
+                                let h = KvHandle(self.next_kv);
+                                self.next_kv += 1;
+                                h
+                            }
+                        };
+                        self.kv_slab.insert(h, buf);
+                        kv = Some(h);
+                        host.push(None);
+                    }
+                    _ => host.push(Some(t)),
+                }
+            }
+            Ok(CallOut { host, kv })
+        } else {
+            bail!(
+                "{graph}: unexpected output count {} (want {} or 1)",
+                device_outs.len(),
+                n_out
+            )
+        }
+    }
+}
+
+fn literal_to_host(lit: &Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    // Graphs are lowered with return_tuple=True, so a single-output graph
+    // yields a 1-tuple literal; unwrap it transparently.
+    if matches!(lit.shape(), Ok(xla::Shape::Tuple(_))) {
+        let mut parts = lit
+            .clone()
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e}"))?;
+        if parts.len() != 1 {
+            bail!("unexpected tuple literal arity {}", parts.len());
+        }
+        return literal_to_host(&parts.remove(0), spec);
+    }
+    match spec.dtype.as_str() {
+        "float32" => Ok(HostTensor::F32(
+            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            spec.shape.clone(),
+        )),
+        "int32" => Ok(HostTensor::I32(
+            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            spec.shape.clone(),
+        )),
+        other => bail!("unsupported dtype {other}"),
+    }
+}

@@ -1,0 +1,294 @@
+//! artifacts/manifest.json: the contract between `python/compile/aot.py`
+//! and the rust engine. Records every AOT graph (HLO file, weight group,
+//! I/O specs) plus the shared shape constants (`dims.py` mirror).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub graphs: HashMap<String, GraphSpec>,
+    pub weights: HashMap<String, WeightGroup>,
+    pub constants: Constants,
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphSpec {
+    pub file: String,
+    pub weights: Option<String>,
+    pub n_weight_args: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightGroup {
+    pub file: String,
+    pub names: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * 4
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TensorSpec {
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Shape constants shared with python/compile/dims.py. Loaded generically;
+/// accessor methods give the frequently used ones names.
+#[derive(Debug, Clone)]
+pub struct Constants(HashMap<String, i64>);
+
+macro_rules! consts {
+    ($($fn_name:ident => $key:literal),* $(,)?) => {
+        impl Constants {
+            $(pub fn $fn_name(&self) -> usize {
+                self.0[$key] as usize
+            })*
+        }
+    };
+}
+
+consts! {
+    vocab => "VOCAB",
+    grid => "GRID",
+    n_patch => "N_PATCH",
+    patch_dim => "PATCH_DIM",
+    d_enc => "D_ENC",
+    c_feat => "C_FEAT",
+    n_frames => "N_FRAMES",
+    frame_tok => "FRAME_TOK",
+    audio_t => "AUDIO_T",
+    audio_d => "AUDIO_D",
+    vis_slots => "VIS_SLOTS",
+    aud_slots => "AUD_SLOTS",
+    text_slots => "TEXT_SLOTS",
+    gen_slots => "GEN_SLOTS",
+    s_pre => "S_PRE",
+    s_max => "S_MAX",
+    vis_off => "VIS_OFF",
+    aud_off => "AUD_OFF",
+    text_off => "TEXT_OFF",
+    gen_off => "GEN_OFF",
+    n_spec => "N_SPEC",
+    lsh_k => "LSH_K",
+    n_modalities => "N_MODALITIES",
+    dh => "DH",
+    draft_d => "DRAFT_D",
+    draft_layers => "DRAFT_LAYERS",
+    draft_heads => "DRAFT_HEADS",
+    draft_ffn => "DRAFT_FFN",
+    draft_params => "DRAFT_PARAMS",
+    full_d => "FULL_D",
+    full_layers => "FULL_LAYERS",
+    full_heads => "FULL_HEADS",
+    full_ffn => "FULL_FFN",
+    full_params => "FULL_PARAMS",
+    enc_layers => "ENC_LAYERS",
+    enc_heads => "ENC_HEADS",
+    enc_ffn => "ENC_FFN",
+}
+
+impl Constants {
+    pub fn get(&self, key: &str) -> Option<i64> {
+        self.0.get(key).copied()
+    }
+
+    pub fn pad(&self) -> i32 {
+        self.0["PAD"] as i32
+    }
+
+    pub fn eos(&self) -> i32 {
+        self.0["EOS"] as i32
+    }
+
+    pub fn ans_base(&self) -> i32 {
+        self.0["ANS_BASE"] as i32
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts`"))?;
+        let v = Value::parse(&text)?;
+
+        let mut graphs = HashMap::new();
+        for (name, g) in v.req("graphs")?.as_obj()? {
+            let weights = match g.req("weights")? {
+                Value::Null => None,
+                w => Some(w.as_str()?.to_string()),
+            };
+            graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    file: g.req("file")?.as_str()?.to_string(),
+                    weights,
+                    n_weight_args: g.req("n_weight_args")?.as_usize()?,
+                    inputs: g
+                        .req("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: g
+                        .req("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut weights = HashMap::new();
+        for (name, w) in v.req("weights")?.as_obj()? {
+            weights.insert(
+                name.clone(),
+                WeightGroup {
+                    file: w.req("file")?.as_str()?.to_string(),
+                    names: w
+                        .req("names")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| Ok(x.as_str()?.to_string()))
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+
+        let mut constants = HashMap::new();
+        for (k, c) in v.req("constants")?.as_obj()? {
+            constants.insert(k.clone(), c.as_f64()? as i64);
+        }
+
+        let m = Manifest {
+            graphs,
+            weights,
+            constants: Constants(constants),
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph {name:?} missing from manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.graph(name)?.file))
+    }
+
+    pub fn weights_path(&self, group: &str) -> Result<PathBuf> {
+        let g = self
+            .weights
+            .get(group)
+            .with_context(|| format!("weight group {group:?} missing"))?;
+        Ok(self.dir.join(&g.file))
+    }
+
+    /// KV-cache tensor spec for a model tag ("draft" | "full").
+    pub fn kv_spec(&self, tag: &str) -> Result<TensorSpec> {
+        Ok(self.graph(&format!("{tag}_decode"))?.inputs[0].clone())
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, g) in &self.graphs {
+            if !self.dir.join(&g.file).exists() {
+                bail!("HLO artifact missing for {name}: {}", g.file);
+            }
+            if let Some(group) = &g.weights {
+                let wg = self
+                    .weights
+                    .get(group)
+                    .with_context(|| format!("{name}: weight group {group}"))?;
+                if wg.names.len() != g.n_weight_args {
+                    bail!(
+                        "{name}: n_weight_args {} != group size {}",
+                        g.n_weight_args,
+                        wg.names.len()
+                    );
+                }
+            } else if g.n_weight_args != 0 {
+                bail!("{name}: weightless graph with n_weight_args != 0");
+            }
+        }
+        let c = &self.constants;
+        if c.s_pre() != c.vis_slots() + c.aud_slots() + c.text_slots()
+            || c.s_max() != c.s_pre() + c.gen_slots()
+        {
+            bail!("inconsistent sequence layout constants");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        let m = Manifest::load(art_dir()).expect("run `make artifacts` first");
+        assert!(m.graphs.contains_key("draft_prefill"));
+        assert!(m.graphs.contains_key("full_verify"));
+        assert_eq!(m.constants.s_max(), m.constants.s_pre() + m.constants.gen_slots());
+    }
+
+    #[test]
+    fn kv_shapes_match_model_dims() {
+        let m = Manifest::load(art_dir()).unwrap();
+        let c = &m.constants;
+        let kv = m.kv_spec("draft").unwrap();
+        assert_eq!(
+            kv.shape,
+            vec![c.draft_layers(), 2, c.draft_heads(), c.s_max(), c.dh()]
+        );
+        let v = m.graph("full_verify").unwrap();
+        assert_eq!(v.outputs[0].shape, vec![c.n_spec(), c.vocab()]);
+        assert_eq!(&v.outputs[1], &m.kv_spec("full").unwrap());
+    }
+
+    #[test]
+    fn prune_graph_is_weightless() {
+        let m = Manifest::load(art_dir()).unwrap();
+        let g = m.graph("prune_tokens").unwrap();
+        assert!(g.weights.is_none());
+        assert_eq!(g.n_weight_args, 0);
+    }
+}

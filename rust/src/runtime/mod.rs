@@ -1,0 +1,15 @@
+//! Runtime: PJRT artifact loading/execution and the tokenizer.
+//!
+//! `engine::Site` is the synchronous, thread-pinned core; `actor` wraps a
+//! site in a dedicated OS thread with a command channel so the tokio
+//! coordinator can drive it (PJRT objects are not `Send`).
+
+pub mod actor;
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+
+pub use actor::{SiteHandle, SiteStats, SiteThread};
+pub use engine::{Arg, CallOut, HostTensor, KvHandle, OutPlan, Site};
+pub use manifest::{Constants, GraphSpec, Manifest, TensorSpec};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,121 @@
+//! Byte-level tokenizer shared by the draft and full models.
+//!
+//! Vocabulary (dims.py mirror): ids 0..=255 are raw bytes, 256..264 are
+//! specials (PAD/BOS/EOS/SEP/...), 264..384 are answer tokens for the
+//! synthetic VQA task. Both models were AOT-compiled against this table,
+//! which is what makes edge-draft -> cloud-verify token streams
+//! compatible (paper §5.1.1: "the two models share the same tokenizer").
+
+pub const PAD: i32 = 256;
+pub const BOS: i32 = 257;
+pub const EOS: i32 = 258;
+pub const SEP: i32 = 259;
+pub const ANS_BASE: i32 = 264;
+pub const VOCAB: usize = 384;
+pub const N_ANSWERS: usize = VOCAB - ANS_BASE as usize;
+
+#[derive(Debug, Clone, Default)]
+pub struct Tokenizer;
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        Tokenizer
+    }
+
+    /// Encode a text prompt: BOS + bytes + SEP, truncated to `max_len`.
+    pub fn encode_prompt(&self, text: &str, max_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len().min(max_len) + 2);
+        out.push(BOS);
+        for b in text.bytes() {
+            if out.len() + 1 >= max_len {
+                break;
+            }
+            out.push(b as i32);
+        }
+        out.push(SEP);
+        out.truncate(max_len);
+        out
+    }
+
+    /// Pad a token sequence to `len` with PAD.
+    pub fn pad_to(&self, mut toks: Vec<i32>, len: usize) -> Vec<i32> {
+        toks.truncate(len);
+        toks.resize(len, PAD);
+        toks
+    }
+
+    /// Decode generated ids back to a display string.
+    pub fn decode(&self, toks: &[i32]) -> String {
+        let mut s = String::new();
+        for &t in toks {
+            match t {
+                0..=255 => s.push(t as u8 as char),
+                PAD => {}
+                BOS => s.push_str("<bos>"),
+                EOS => break,
+                SEP => s.push_str("<sep>"),
+                t if t >= ANS_BASE && (t as usize) < VOCAB => {
+                    s.push_str(&format!("<ans{}>", t - ANS_BASE));
+                }
+                t => s.push_str(&format!("<{t}>")),
+            }
+        }
+        s
+    }
+
+    /// Answer token id for synthetic-task answer index `i`.
+    pub fn answer_token(&self, i: usize) -> i32 {
+        ANS_BASE + (i % N_ANSWERS) as i32
+    }
+
+    pub fn is_answer(&self, t: i32) -> bool {
+        t >= ANS_BASE && (t as usize) < VOCAB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tk = Tokenizer::new();
+        let toks = tk.encode_prompt("what color?", 64);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(*toks.last().unwrap(), SEP);
+        let s = tk.decode(&toks);
+        assert!(s.contains("what color?"));
+    }
+
+    #[test]
+    fn truncation_respects_max_len() {
+        let tk = Tokenizer::new();
+        let long = "x".repeat(500);
+        let toks = tk.encode_prompt(&long, 64);
+        assert_eq!(toks.len(), 64);
+    }
+
+    #[test]
+    fn padding() {
+        let tk = Tokenizer::new();
+        let toks = tk.pad_to(vec![BOS, 65, SEP], 8);
+        assert_eq!(toks.len(), 8);
+        assert_eq!(toks[3..], [PAD; 5]);
+    }
+
+    #[test]
+    fn answer_tokens_in_range() {
+        let tk = Tokenizer::new();
+        for i in 0..300 {
+            let t = tk.answer_token(i);
+            assert!(tk.is_answer(t));
+            assert!((t as usize) < VOCAB);
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let tk = Tokenizer::new();
+        assert_eq!(tk.decode(&[72, 73, EOS, 74]), "HI");
+    }
+}

@@ -1,0 +1,205 @@
+//! MAS metric math (Eqs. 4-7).
+
+use crate::config::MsaoCfg;
+
+/// Input modalities in the fixed N_MODALITIES=4 probe order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Modality {
+    Text,
+    Image,
+    Video,
+    Audio,
+}
+
+impl Modality {
+    pub const ALL: [Modality; 4] = [Modality::Text, Modality::Image, Modality::Video, Modality::Audio];
+
+    pub fn index(self) -> usize {
+        match self {
+            Modality::Text => 0,
+            Modality::Image => 1,
+            Modality::Video => 2,
+            Modality::Audio => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Modality::Text => "text",
+            Modality::Image => "image",
+            Modality::Video => "video",
+            Modality::Audio => "audio",
+        }
+    }
+}
+
+/// Spatial sparsity ratio rho_spatial (Eq. 4): fraction of patches whose
+/// importance falls below tau_s.
+pub fn spatial_ratio(importance: &[f32], tau_s: f64) -> f64 {
+    if importance.is_empty() {
+        return 0.0;
+    }
+    let below = importance.iter().filter(|&&x| (x as f64) < tau_s).count();
+    below as f64 / importance.len() as f64
+}
+
+/// Temporal statistics from per-frame redundancy scores gamma_t (Eq. 5).
+/// Returns (gamma_avg over real frames, keep mask per frame): frames with
+/// gamma below `gamma_keep` are redundant and subsampled.
+pub fn temporal_stats(gamma: &[f32], n_frames: usize, gamma_keep: f64) -> (f64, Vec<bool>) {
+    let n = n_frames.min(gamma.len());
+    if n == 0 {
+        return (0.0, Vec::new());
+    }
+    let keep: Vec<bool> = gamma[..n].iter().map(|&g| (g as f64) >= gamma_keep).collect();
+    // Redundancy score: average (1 - gamma) = average similarity — high
+    // when the clip is static. gamma_avg in Eq. 7 weights how much
+    // temporal redundancy contributes to MAS.
+    let avg_redundancy =
+        gamma[..n].iter().map(|&g| 1.0 - g as f64).sum::<f64>() / n as f64;
+    (avg_redundancy, keep)
+}
+
+/// Masked softmax over raw relevance scores alpha_m (Eq. 6): absent
+/// modalities get beta = 0 and do not absorb probability mass.
+pub fn masked_softmax(alpha: &[f32], present: &[bool]) -> Vec<f64> {
+    assert_eq!(alpha.len(), present.len());
+    let max = alpha
+        .iter()
+        .zip(present)
+        .filter(|(_, &p)| p)
+        .map(|(&a, _)| a as f64)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if max == f64::NEG_INFINITY {
+        return vec![0.0; alpha.len()];
+    }
+    let exps: Vec<f64> = alpha
+        .iter()
+        .zip(present)
+        .map(|(&a, &p)| if p { ((a as f64) - max).exp() } else { 0.0 })
+        .collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Everything the MAS fusion needs for one modality.
+#[derive(Debug, Clone, Default)]
+pub struct MasInputs {
+    /// beta_m from the masked softmax.
+    pub beta: f64,
+    /// rho_spatial^(m) — 0 for modalities without a spatial dimension.
+    pub rho_spatial: f64,
+    /// gamma_avg^(m) (temporal redundancy) — 0 without a temporal dim.
+    pub gamma_avg: f64,
+}
+
+/// Per-modality MAS output.
+#[derive(Debug, Clone)]
+pub struct ModalityMas {
+    pub modality: Modality,
+    pub mas: f64,
+    pub beta: f64,
+    pub rho_spatial: f64,
+    pub gamma_avg: f64,
+}
+
+/// MAS_m (Eq. 7):
+/// `MAS_m = 1 - beta_m * (1 - lambda_s * rho_spatial - lambda_t * gamma_avg)`,
+/// clamped to [0, 1]. High MAS = redundant / irrelevant (safe to compress
+/// or drop); low MAS = critical, must be preserved (the planner enforces
+/// `beta_m >= 1 - MAS_m`, Eq. 11 last constraint).
+pub fn mas(cfg: &MsaoCfg, m: Modality, inp: &MasInputs) -> ModalityMas {
+    let inner = 1.0 - cfg.lambda_spatial * inp.rho_spatial - cfg.lambda_temp * inp.gamma_avg;
+    let v = 1.0 - inp.beta * inner;
+    ModalityMas {
+        modality: m,
+        mas: v.clamp(0.0, 1.0),
+        beta: inp.beta,
+        rho_spatial: inp.rho_spatial,
+        gamma_avg: inp.gamma_avg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> MsaoCfg {
+        MsaoCfg::default()
+    }
+
+    #[test]
+    fn spatial_ratio_counts_below_threshold() {
+        let imp = [0.1f32, 0.2, 0.5, 0.9];
+        assert!((spatial_ratio(&imp, 0.3) - 0.5).abs() < 1e-12);
+        assert_eq!(spatial_ratio(&[], 0.3), 0.0);
+        assert_eq!(spatial_ratio(&imp, 0.0), 0.0);
+        assert_eq!(spatial_ratio(&imp, 1.0), 1.0);
+    }
+
+    #[test]
+    fn temporal_static_clip_is_redundant() {
+        // gamma ~ 0 everywhere except frame 0 -> high redundancy, one keeper.
+        let gamma = [1.0f32, 0.02, 0.01, 0.05];
+        let (avg, keep) = temporal_stats(&gamma, 4, 0.15);
+        assert!(avg > 0.7, "{avg}");
+        assert_eq!(keep, vec![true, false, false, false]);
+    }
+
+    #[test]
+    fn temporal_dynamic_clip_is_kept() {
+        let gamma = [1.0f32, 0.8, 0.9, 0.7];
+        let (avg, keep) = temporal_stats(&gamma, 4, 0.15);
+        assert!(avg < 0.2, "{avg}");
+        assert!(keep.iter().all(|&k| k));
+    }
+
+    #[test]
+    fn masked_softmax_ignores_absent() {
+        let alpha = [1.0f32, 5.0, 2.0, 3.0];
+        let present = [true, false, true, false];
+        let beta = masked_softmax(&alpha, &present);
+        assert_eq!(beta[1], 0.0);
+        assert_eq!(beta[3], 0.0);
+        assert!((beta.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(beta[2] > beta[0]);
+    }
+
+    #[test]
+    fn masked_softmax_all_absent_is_zero() {
+        let beta = masked_softmax(&[1.0, 2.0], &[false, false]);
+        assert_eq!(beta, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn mas_bounds_and_monotonicity() {
+        let c = cfg();
+        // Relevant, dense modality -> low MAS.
+        let dense = mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.0, gamma_avg: 0.0 });
+        // Irrelevant modality -> high MAS.
+        let irrelevant = mas(&c, Modality::Audio, &MasInputs { beta: 0.01, rho_spatial: 0.0, gamma_avg: 0.0 });
+        // Relevant but spatially sparse -> in between.
+        let sparse = mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.8, gamma_avg: 0.0 });
+        assert!(dense.mas < sparse.mas && sparse.mas < irrelevant.mas);
+        for m in [&dense, &irrelevant, &sparse] {
+            assert!((0.0..=1.0).contains(&m.mas));
+        }
+    }
+
+    #[test]
+    fn mas_eq7_exact() {
+        let c = cfg();
+        let out = mas(&c, Modality::Video, &MasInputs { beta: 0.5, rho_spatial: 0.4, gamma_avg: 0.3 });
+        // 1 - 0.5 * (1 - 0.6*0.4 - 0.4*0.3) = 1 - 0.5 * 0.64 = 0.68
+        assert!((out.mas - 0.68).abs() < 1e-12, "{}", out.mas);
+    }
+
+    #[test]
+    fn mas_high_redundancy_saturates() {
+        let mut c = cfg();
+        c.lambda_spatial = 1.0;
+        c.lambda_temp = 1.0;
+        let out = mas(&c, Modality::Video, &MasInputs { beta: 1.0, rho_spatial: 0.9, gamma_avg: 0.9 });
+        assert_eq!(out.mas, 1.0); // clamped
+    }
+}

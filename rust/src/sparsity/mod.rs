@@ -1,0 +1,11 @@
+//! Modality Activation Sparsity — the paper's §4.1 metric stack.
+//!
+//! The heavy lifting (importance maps, LSH hashes, relevance scores) runs
+//! in the L1 Pallas kernels via the probe artifacts; this module is the
+//! scalar post-processing the coordinator applies on the edge:
+//! rho_spatial (Eq. 4), gamma aggregation (Eq. 5), masked softmax into
+//! beta_m (Eq. 6), and the fused MAS metric (Eq. 7).
+
+pub mod mas;
+
+pub use mas::{mas, masked_softmax, spatial_ratio, temporal_stats, MasInputs, Modality, ModalityMas};

@@ -1,0 +1,80 @@
+//! Minimal benchmark harness (substrate — no criterion offline).
+//!
+//! `bench(name, iters, f)` warms up, measures wall-clock per iteration,
+//! and prints mean / p50 / p99 in criterion-like format so `cargo bench`
+//! output stays diffable. Returns the stats for programmatic use.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} {:>10} {:>10}   ({} iters)",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.p50_s),
+            fmt_s(self.p99_s),
+            self.iters
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p99"
+    );
+    println!("{}", "-".repeat(80));
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run `f` for `iters` measured iterations (plus 10% warmup, min 1).
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
+    let warmup = (iters / 10).max(1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&times),
+        p50_s: percentile(&times, 0.5),
+        p99_s: percentile(&times, 0.99),
+    };
+    stats.report();
+    stats
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,11 @@
+//! From-scratch substrates for the offline environment: JSON, PRNG,
+//! one-shot channels, statistics, and table rendering.
+
+pub mod json;
+pub mod oneshot;
+pub mod rng;
+pub mod stats;
+pub mod bench;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,49 @@
+//! One-shot reply channel (substrate — no tokio offline).
+//!
+//! Thin wrapper over `std::sync::mpsc::sync_channel(1)` giving the
+//! actor-reply ergonomics the runtime and coordinator use.
+
+use std::sync::mpsc;
+
+pub struct Sender<T>(mpsc::SyncSender<T>);
+pub struct Receiver<T>(mpsc::Receiver<T>);
+
+pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+    let (tx, rx) = mpsc::sync_channel(1);
+    (Sender(tx), Receiver(rx))
+}
+
+impl<T> Sender<T> {
+    /// Send the reply; returns false if the receiver is gone.
+    pub fn send(self, v: T) -> bool {
+        self.0.send(v).is_ok()
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Block until the reply arrives (None if sender dropped).
+    pub fn recv(self) -> Option<T> {
+        self.0.recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let (tx, rx) = channel();
+        std::thread::spawn(move || {
+            tx.send(42);
+        });
+        assert_eq!(rx.recv(), Some(42));
+    }
+
+    #[test]
+    fn dropped_sender_yields_none() {
+        let (tx, rx) = channel::<i32>();
+        drop(tx);
+        assert_eq!(rx.recv(), None);
+    }
+}

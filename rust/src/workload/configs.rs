@@ -1,0 +1,44 @@
+//! The seven probe configurations V1-V7 of Fig. 4 ("unimodal text,
+//! bimodal image-text, and trimodal video-text-audio inputs across
+//! increasing resolution and sequence length").
+
+use crate::sparsity::Modality;
+
+#[derive(Debug, Clone)]
+pub struct ProbeConfig {
+    pub name: &'static str,
+    pub modalities: Vec<Modality>,
+    /// Relative visual resolution scale (1.0 = GRID x GRID patches).
+    pub resolution: f64,
+    /// Video frames probed (0 for non-video).
+    pub frames: usize,
+    /// Prompt length in tokens.
+    pub text_len: usize,
+}
+
+pub fn v_configs() -> Vec<ProbeConfig> {
+    use Modality::*;
+    vec![
+        ProbeConfig { name: "V1", modalities: vec![Text], resolution: 0.0, frames: 0, text_len: 16 },
+        ProbeConfig { name: "V2", modalities: vec![Text], resolution: 0.0, frames: 0, text_len: 48 },
+        ProbeConfig { name: "V3", modalities: vec![Text, Image], resolution: 0.5, frames: 0, text_len: 16 },
+        ProbeConfig { name: "V4", modalities: vec![Text, Image], resolution: 1.0, frames: 0, text_len: 32 },
+        ProbeConfig { name: "V5", modalities: vec![Text, Image, Audio], resolution: 1.0, frames: 0, text_len: 32 },
+        ProbeConfig { name: "V6", modalities: vec![Text, Video, Audio], resolution: 1.0, frames: 4, text_len: 32 },
+        ProbeConfig { name: "V7", modalities: vec![Text, Video, Audio], resolution: 1.5, frames: 8, text_len: 48 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seven_configs_increasing_complexity() {
+        let v = v_configs();
+        assert_eq!(v.len(), 7);
+        assert_eq!(v[0].modalities.len(), 1);
+        assert_eq!(v[6].modalities.len(), 3);
+        assert!(v[6].frames > v[5].frames || v[6].resolution > v[5].resolution);
+    }
+}

@@ -1,0 +1,407 @@
+//! Synthetic multimodal workload generator — the rust half of the
+//! distribution contract in python/compile/synth.py (the probe heads were
+//! trained on the same distribution at AOT time). Substitutes for VQAv2
+//! and MMBench (DESIGN.md §3): items carry ground-truth salience /
+//! novelty / relevant-modality labels so the quality model can score the
+//! coordinator's real pruning decisions mechanistically.
+
+use crate::sparsity::Modality;
+use crate::util::Rng;
+
+// ---- distribution constants (keep in sync with synth.py) -----------------
+pub const GRID: usize = 16;
+pub const N_PATCH: usize = GRID * GRID;
+pub const PATCH_DIM: usize = 192;
+pub const N_FRAMES: usize = 8;
+pub const AUDIO_T: usize = 32;
+pub const AUDIO_D: usize = 80;
+const SAL_AMP: f32 = 1.6;
+const BG_AMP: f32 = 0.35;
+const SAL_MIN: usize = 3;
+const SAL_MAX: usize = 8;
+const DRIFT: f32 = 0.05;
+
+/// Question templates per modality (synth.py TEMPLATES mirror).
+pub const TEMPLATES: [&[&str]; 4] = [
+    &["define the word", "what does the phrase mean", "spell the term"],
+    &[
+        "what color is the object",
+        "describe the picture",
+        "what shape is shown in the image",
+    ],
+    &[
+        "what happens in the video",
+        "describe the motion in the clip",
+        "what moves across the frames",
+    ],
+    &[
+        "what sound is heard",
+        "describe the audio",
+        "who is the speaker in the recording",
+    ],
+];
+
+/// Which benchmark an item mimics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Benchmark {
+    /// VQAv2-like: image + text, visual questions.
+    Vqa,
+    /// MMBench-like: 20 capability dimensions over image/video/audio.
+    MmBench,
+}
+
+impl Benchmark {
+    pub fn name(self) -> &'static str {
+        match self {
+            Benchmark::Vqa => "VQAv2",
+            Benchmark::MmBench => "MMBench",
+        }
+    }
+}
+
+/// One synthetic multimodal request.
+#[derive(Debug, Clone)]
+pub struct Item {
+    pub id: u64,
+    pub benchmark: Benchmark,
+    /// MMBench capability dimension (0..20) or 0 for VQA.
+    pub dimension: usize,
+    pub question: String,
+    pub relevant: Modality,
+    /// Image patches [N_PATCH * PATCH_DIM] (also frame 0 of video items).
+    pub image: Option<Vec<f32>>,
+    /// Ground-truth per-patch salience for the image.
+    pub salient: Option<Vec<bool>>,
+    /// Video frames, each [N_PATCH * PATCH_DIM].
+    pub video: Option<Vec<Vec<f32>>>,
+    /// Ground truth: is frame t novel (scene content changed)?
+    pub novel: Option<Vec<bool>>,
+    /// Audio features [AUDIO_T * AUDIO_D].
+    pub audio: Option<Vec<f32>>,
+    /// Synthetic answer index (maps to an answer token).
+    pub answer: usize,
+}
+
+impl Item {
+    pub fn has(&self, m: Modality) -> bool {
+        match m {
+            Modality::Text => true,
+            Modality::Image => self.image.is_some() && self.video.is_none(),
+            Modality::Video => self.video.is_some(),
+            Modality::Audio => self.audio.is_some(),
+        }
+    }
+
+    pub fn present_mask(&self) -> [bool; 4] {
+        [
+            true,
+            self.image.is_some() && self.video.is_none(),
+            self.video.is_some(),
+            self.audio.is_some(),
+        ]
+    }
+
+    /// Raw uplink payload size at paper scale if this modality were
+    /// shipped without any pruning (bytes). Images are ~1080p JPEG-class,
+    /// video is one such frame per retained frame, audio is 16-bit PCM
+    /// seconds, text is negligible.
+    pub fn payload_bytes(&self, m: Modality) -> u64 {
+        match m {
+            Modality::Text => 256,
+            Modality::Image => {
+                if self.has(Modality::Image) {
+                    2_000_000 // high-res VLM input, JPEG-class
+                } else {
+                    0
+                }
+            }
+            Modality::Video => {
+                if self.has(Modality::Video) {
+                    2_000_000 * N_FRAMES as u64 / 2 // inter-frame compression
+                } else {
+                    0
+                }
+            }
+            Modality::Audio => {
+                if self.has(Modality::Audio) {
+                    400_000
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+pub struct Generator {
+    rng: Rng,
+    next_id: u64,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Self {
+        Generator { rng: Rng::seed_from_u64(seed), next_id: 0 }
+    }
+
+    fn make_image(&mut self) -> (Vec<f32>, Vec<bool>) {
+        let rng = &mut self.rng;
+        let mut patches = vec![0f32; N_PATCH * PATCH_DIM];
+        for p in patches.iter_mut() {
+            *p = BG_AMP * rng.normal() as f32;
+        }
+        let w = rng.range(SAL_MIN, SAL_MAX);
+        let h = rng.range(SAL_MIN, SAL_MAX);
+        let r0 = rng.below(GRID - h + 1);
+        let c0 = rng.below(GRID - w + 1);
+        let mut mask = vec![false; N_PATCH];
+        for r in r0..r0 + h {
+            for c in c0..c0 + w {
+                mask[r * GRID + c] = true;
+            }
+        }
+        for (i, &m) in mask.iter().enumerate() {
+            if m {
+                for j in 0..PATCH_DIM {
+                    let ramp = (6.0 * std::f32::consts::PI * j as f32
+                        / (PATCH_DIM - 1) as f32)
+                        .sin()
+                        * SAL_AMP;
+                    patches[i * PATCH_DIM + j] =
+                        ramp + SAL_AMP * 0.5 * rng.normal() as f32;
+                }
+            }
+        }
+        (patches, mask)
+    }
+
+    fn make_video(&mut self, p_static: f64) -> (Vec<Vec<f32>>, Vec<bool>) {
+        let mut frames = Vec::with_capacity(N_FRAMES);
+        let mut novel = vec![false; N_FRAMES];
+        let (first, _) = self.make_image();
+        frames.push(first);
+        novel[0] = true;
+        for t in 1..N_FRAMES {
+            if self.rng.bool(p_static) {
+                let prev = frames[t - 1].clone();
+                let drifted: Vec<f32> = prev
+                    .iter()
+                    .map(|&x| x + DRIFT * self.rng.normal() as f32)
+                    .collect();
+                frames.push(drifted);
+            } else {
+                let (img, _) = self.make_image();
+                frames.push(img);
+                novel[t] = true;
+            }
+        }
+        (frames, novel)
+    }
+
+    fn make_audio(&mut self) -> Vec<f32> {
+        let rng = &mut self.rng;
+        let mut sig = vec![0f32; AUDIO_T * AUDIO_D];
+        for _ in 0..4 {
+            let amp = rng.normal() as f32;
+            let freq = (rng.f64() * 0.1) as f32;
+            let phase = rng.f64() as f32;
+            for t in 0..AUDIO_T {
+                for f in 0..AUDIO_D {
+                    sig[t * AUDIO_D + f] += amp
+                        * (2.0 * std::f32::consts::PI * freq * t as f32
+                            + f as f32 * phase)
+                            .sin();
+                }
+            }
+        }
+        for s in sig.iter_mut() {
+            *s += 0.1 * rng.normal() as f32;
+        }
+        sig
+    }
+
+    fn make_question(&mut self, m: Modality) -> String {
+        let t = TEMPLATES[m.index()];
+        t[self.rng.below(t.len())].to_string()
+    }
+
+    /// One VQAv2-like item: image + visual question.
+    pub fn vqa_item(&mut self) -> Item {
+        let (image, salient) = self.make_image();
+        let relevant = if self.rng.bool(0.9) { Modality::Image } else { Modality::Text };
+        let question = self.make_question(relevant);
+        let id = self.bump();
+        Item {
+            id,
+            benchmark: Benchmark::Vqa,
+            dimension: 0,
+            question,
+            relevant,
+            image: Some(image),
+            salient: Some(salient),
+            video: None,
+            novel: None,
+            audio: None,
+            answer: self.rng.below(120),
+        }
+    }
+
+    /// One MMBench-like item: one of 20 capability dimensions, mixing
+    /// image / video / audio presence.
+    pub fn mmbench_item(&mut self) -> Item {
+        let dimension = self.rng.below(20);
+        // Dimensions cycle through modality emphases.
+        let relevant = match dimension % 4 {
+            0 => Modality::Image,
+            1 => Modality::Video,
+            2 => Modality::Audio,
+            _ => Modality::Image,
+        };
+        let question = self.make_question(relevant);
+        // The relevant modality must be present as itself: image
+        // questions get an image (never only video frames).
+        let with_video =
+            relevant == Modality::Video || (relevant == Modality::Audio && self.rng.bool(0.3));
+        let with_audio = relevant == Modality::Audio || self.rng.bool(0.25);
+        let (video, novel, image, salient) = if with_video {
+            let p_static = if relevant == Modality::Video { 0.5 } else { 0.85 };
+            let (v, n) = self.make_video(p_static);
+            (Some(v), Some(n), None, None)
+        } else {
+            let (img, sal) = self.make_image();
+            (None, None, Some(img), Some(sal))
+        };
+        let audio = if with_audio { Some(self.make_audio()) } else { None };
+        let id = self.bump();
+        Item {
+            id,
+            benchmark: Benchmark::MmBench,
+            dimension,
+            question,
+            relevant,
+            image,
+            salient,
+            video,
+            novel,
+            audio,
+            answer: self.rng.below(120),
+        }
+    }
+
+    pub fn items(&mut self, bench: Benchmark, n: usize) -> Vec<Item> {
+        (0..n)
+            .map(|_| match bench {
+                Benchmark::Vqa => self.vqa_item(),
+                Benchmark::MmBench => self.mmbench_item(),
+            })
+            .collect()
+    }
+
+    /// Poisson arrival offsets (seconds) for `n` requests at `rate` req/s.
+    pub fn arrivals(&mut self, n: usize, rate: f64) -> Vec<f64> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += self.rng.exp(rate);
+                t
+            })
+            .collect()
+    }
+
+    fn bump(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vqa_items_have_image_and_salience() {
+        let mut g = Generator::new(1);
+        for _ in 0..10 {
+            let it = g.vqa_item();
+            assert_eq!(it.benchmark, Benchmark::Vqa);
+            let img = it.image.as_ref().unwrap();
+            assert_eq!(img.len(), N_PATCH * PATCH_DIM);
+            let sal = it.salient.as_ref().unwrap();
+            let n_sal = sal.iter().filter(|&&s| s).count();
+            assert!((SAL_MIN * SAL_MIN..=SAL_MAX * SAL_MAX).contains(&n_sal));
+        }
+    }
+
+    #[test]
+    fn salient_patches_have_higher_energy() {
+        let mut g = Generator::new(2);
+        let it = g.vqa_item();
+        let img = it.image.as_ref().unwrap();
+        let sal = it.salient.as_ref().unwrap();
+        let energy = |i: usize| -> f32 {
+            img[i * PATCH_DIM..(i + 1) * PATCH_DIM]
+                .iter()
+                .map(|x| x * x)
+                .sum::<f32>()
+                / PATCH_DIM as f32
+        };
+        let sal_e: f32 = (0..N_PATCH).filter(|&i| sal[i]).map(energy).sum::<f32>()
+            / sal.iter().filter(|&&s| s).count() as f32;
+        let bg_e: f32 = (0..N_PATCH).filter(|&i| !sal[i]).map(energy).sum::<f32>()
+            / sal.iter().filter(|&&s| !s).count() as f32;
+        assert!(sal_e > 5.0 * bg_e, "salient {sal_e} vs bg {bg_e}");
+    }
+
+    #[test]
+    fn video_novelty_ground_truth() {
+        let mut g = Generator::new(3);
+        let (frames, novel) = g.make_video(0.6);
+        assert_eq!(frames.len(), N_FRAMES);
+        assert!(novel[0]);
+        // Non-novel frames are close to their predecessor.
+        for t in 1..N_FRAMES {
+            let d: f32 = frames[t]
+                .iter()
+                .zip(&frames[t - 1])
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / frames[t].len() as f32;
+            if novel[t] {
+                assert!(d > 0.3, "novel frame {t} too similar ({d})");
+            } else {
+                assert!(d < 0.1, "static frame {t} too different ({d})");
+            }
+        }
+    }
+
+    #[test]
+    fn mmbench_mixes_modalities() {
+        let mut g = Generator::new(4);
+        let items = g.items(Benchmark::MmBench, 60);
+        let n_video = items.iter().filter(|i| i.video.is_some()).count();
+        let n_audio = items.iter().filter(|i| i.audio.is_some()).count();
+        let n_image = items.iter().filter(|i| i.image.is_some()).count();
+        assert!(n_video > 10 && n_audio > 10 && n_image > 10);
+        // Relevant modality is always present.
+        for it in &items {
+            assert!(it.has(it.relevant), "{:?} missing", it.relevant);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_with_expected_rate() {
+        let mut g = Generator::new(5);
+        let a = g.arrivals(2000, 4.0);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+        let mean_gap = a.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.25).abs() < 0.02, "{mean_gap}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Generator::new(9).vqa_item();
+        let b = Generator::new(9).vqa_item();
+        assert_eq!(a.image, b.image);
+        assert_eq!(a.question, b.question);
+    }
+}

@@ -1,0 +1,8 @@
+//! Synthetic workload substrates: VQAv2/MMBench-like item generators,
+//! Poisson traces, and the Fig. 4 probe configurations.
+
+pub mod configs;
+pub mod generator;
+
+pub use configs::{v_configs, ProbeConfig};
+pub use generator::{Benchmark, Generator, Item};

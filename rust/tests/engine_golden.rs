@@ -1,0 +1,199 @@
+//! Cross-language numeric integration test: the rust PJRT engine must
+//! reproduce the exact outputs python computed through the same HLO
+//! graphs (artifacts/golden.json, written by `python -m compile.aot`).
+//!
+//! This is the core correctness signal for the whole AOT bridge: weights
+//! npz -> device buffers -> execute_b -> logits.
+
+use msao::runtime::{Arg, HostTensor, Manifest, OutPlan, SiteThread};
+use msao::util::json::Value;
+
+fn art_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn golden() -> Value {
+    let text = std::fs::read_to_string(art_dir().join("golden.json"))
+        .expect("golden.json missing; run `make artifacts`");
+    Value::parse(&text).unwrap()
+}
+
+fn vecf(v: &Value, key: &str) -> Vec<f32> {
+    v.req(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut worst = 0f32;
+    for (g, w) in got.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst <= tol, "{what}: max abs diff {worst} > {tol}");
+}
+
+/// Fixed inputs mirroring aot.make_golden.
+struct Fixed {
+    text: Vec<i32>,
+    vis: Vec<f32>,
+    aud: Vec<f32>,
+}
+
+fn fixed(m: &Manifest) -> Fixed {
+    let c = &m.constants;
+    let mut text = vec![c.pad(); c.text_slots()];
+    text[0] = 257; // BOS
+    text[1] = 72;
+    text[2] = 73;
+    text[3] = c.get("SEP").unwrap() as i32;
+    let n = c.vis_slots() * c.d_enc();
+    let vis: Vec<f32> = (0..n)
+        .map(|i| -1.0 + 2.0 * i as f32 / (n - 1) as f32)
+        .collect();
+    let aud = vec![0f32; c.aud_slots() * c.d_enc()];
+    Fixed { text, vis, aud }
+}
+
+#[test]
+fn engine_reproduces_python_golden_outputs() {
+    let m = Manifest::load(art_dir()).expect("run `make artifacts` first");
+    let g = golden();
+    let c = m.constants.clone();
+    let f = fixed(&m);
+
+    let site = SiteThread::spawn(
+        "test",
+        &m,
+        &[
+            "draft_prefill",
+            "draft_decode",
+            "full_prefill",
+            "full_verify",
+            "vision_encoder",
+            "probe_spatial",
+        ],
+    )
+    .expect("spawn site");
+    let h = &site.handle;
+
+    let prefill_args = |_tag: &str| {
+        vec![
+            Arg::Host(HostTensor::i32(f.text.clone(), vec![c.text_slots()])),
+            Arg::Host(HostTensor::scalar_i32(4)),
+            Arg::Host(HostTensor::f32(
+                f.vis.clone(),
+                vec![c.vis_slots(), c.d_enc()],
+            )),
+            Arg::Host(HostTensor::scalar_i32(100)),
+            Arg::Host(HostTensor::f32(
+                f.aud.clone(),
+                vec![c.aud_slots(), c.d_enc()],
+            )),
+            Arg::Host(HostTensor::scalar_i32(0)),
+        ]
+    };
+
+    // --- draft prefill + decode ------------------------------------------
+    let out = h
+        .call(
+            "draft_prefill",
+            prefill_args("draft"),
+            OutPlan::Kv { kv_index: 0, replace: None },
+        )
+        .unwrap();
+    let kv = out.kv.expect("kv handle");
+    let logits = out.host[1].as_ref().unwrap().as_f32().unwrap();
+    assert_close(logits, &vecf(&g, "draft_prefill_logits"), 5e-3, "draft_prefill");
+
+    let out = h
+        .call(
+            "draft_decode",
+            vec![
+                Arg::Kv(kv),
+                Arg::Host(HostTensor::scalar_i32(c.gen_off() as i32)),
+                Arg::Host(HostTensor::i32(vec![42], vec![1])),
+                Arg::Host(HostTensor::scalar_i32(100)),
+                Arg::Host(HostTensor::scalar_i32(0)),
+                Arg::Host(HostTensor::scalar_i32(4)),
+            ],
+            OutPlan::Kv { kv_index: 1, replace: Some(kv) },
+        )
+        .unwrap();
+    let logits = out.host[0].as_ref().unwrap().as_f32().unwrap();
+    assert_close(logits, &vecf(&g, "draft_decode_logits"), 5e-3, "draft_decode");
+
+    // --- full prefill + verify -------------------------------------------
+    let out = h
+        .call(
+            "full_prefill",
+            prefill_args("full"),
+            OutPlan::Kv { kv_index: 0, replace: None },
+        )
+        .unwrap();
+    let kvf = out.kv.unwrap();
+    let logits = out.host[1].as_ref().unwrap().as_f32().unwrap();
+    assert_close(logits, &vecf(&g, "full_prefill_logits"), 5e-3, "full_prefill");
+
+    let out = h
+        .call(
+            "full_verify",
+            vec![
+                Arg::Kv(kvf),
+                Arg::Host(HostTensor::scalar_i32(c.gen_off() as i32)),
+                Arg::Host(HostTensor::i32(vec![42, 7, 300, 264, 11, 99], vec![6])),
+                Arg::Host(HostTensor::scalar_i32(100)),
+                Arg::Host(HostTensor::scalar_i32(0)),
+                Arg::Host(HostTensor::scalar_i32(4)),
+            ],
+            OutPlan::Kv { kv_index: 1, replace: Some(kvf) },
+        )
+        .unwrap();
+    let vlg = out.host[0].as_ref().unwrap().as_f32().unwrap();
+    let vocab = c.vocab();
+    assert_close(&vlg[..vocab], &vecf(&g, "full_verify_row0"), 5e-3, "verify row0");
+    assert_close(
+        &vlg[5 * vocab..6 * vocab],
+        &vecf(&g, "full_verify_row5"),
+        5e-3,
+        "verify row5",
+    );
+
+    // --- vision encoder + spatial probe ------------------------------------
+    let n = c.n_patch() * c.patch_dim();
+    let patches: Vec<f32> = (0..n).map(|i| (i as f32 * 0.01).sin()).collect();
+    let out = h
+        .call(
+            "vision_encoder",
+            vec![Arg::Host(HostTensor::f32(
+                patches,
+                vec![c.n_patch(), c.patch_dim()],
+            ))],
+            OutPlan::AllHost,
+        )
+        .unwrap();
+    let pooled = out.host[3].as_ref().unwrap().as_f32().unwrap();
+    assert_close(pooled, &vecf(&g, "vision_pooled"), 5e-3, "vision_pooled");
+
+    let feat = out.host[2].as_ref().unwrap().clone();
+    let out = h
+        .call("probe_spatial", vec![Arg::Host(feat)], OutPlan::AllHost)
+        .unwrap();
+    let map = out.host[0].as_ref().unwrap().as_f32().unwrap();
+    assert_close(
+        &map[..c.grid()],
+        &vecf(&g, "probe_spatial_map_row0"),
+        5e-3,
+        "probe_spatial",
+    );
+
+    // KV slab hygiene.
+    let stats = h.stats().unwrap();
+    assert_eq!(stats.kv_entries, 2);
+    h.free_kv(kv);
+    h.free_kv(kvf);
+}

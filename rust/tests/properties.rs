@@ -1,0 +1,313 @@
+//! Hand-rolled property tests (offline environment: no proptest).
+//! Each property runs hundreds of seeded random cases through the
+//! deterministic PRNG; failures print the offending seed.
+
+use msao::cluster::{DeviceSim, Link, SimModel};
+use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg};
+use msao::coordinator::Batcher;
+use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
+use msao::sparsity::{self, MasInputs, Modality};
+use msao::util::json::Value;
+use msao::util::stats::percentile;
+use msao::util::Rng;
+use msao::workload::{Benchmark, Generator};
+
+fn cases(n: usize) -> impl Iterator<Item = u64> {
+    (0..n as u64).map(|i| i * 0x9E3779B9 + 12345)
+}
+
+// --- MAS properties ---------------------------------------------------------
+
+#[test]
+fn prop_mas_always_in_unit_interval() {
+    let cfg = MsaoCfg::default();
+    for seed in cases(500) {
+        let mut r = Rng::seed_from_u64(seed);
+        let inp = MasInputs {
+            beta: r.f64(),
+            rho_spatial: r.f64(),
+            gamma_avg: r.f64(),
+        };
+        let out = sparsity::mas(&cfg, Modality::Image, &inp);
+        assert!(
+            (0.0..=1.0).contains(&out.mas),
+            "seed {seed}: MAS {} out of range for {inp:?}",
+            out.mas
+        );
+    }
+}
+
+#[test]
+fn prop_mas_monotone_in_relevance() {
+    // Higher beta (more relevant) must never RAISE MAS (Eq. 7).
+    let cfg = MsaoCfg::default();
+    for seed in cases(300) {
+        let mut r = Rng::seed_from_u64(seed);
+        let rho = r.f64();
+        let gam = r.f64();
+        let b1 = r.f64();
+        let b2 = r.f64();
+        let (lo, hi) = if b1 < b2 { (b1, b2) } else { (b2, b1) };
+        let m_lo = sparsity::mas(&cfg, Modality::Video, &MasInputs { beta: lo, rho_spatial: rho, gamma_avg: gam });
+        let m_hi = sparsity::mas(&cfg, Modality::Video, &MasInputs { beta: hi, rho_spatial: rho, gamma_avg: gam });
+        assert!(
+            m_hi.mas <= m_lo.mas + 1e-12,
+            "seed {seed}: beta {lo}->{hi} raised MAS {}->{}",
+            m_lo.mas,
+            m_hi.mas
+        );
+    }
+}
+
+#[test]
+fn prop_masked_softmax_is_distribution_over_present() {
+    for seed in cases(500) {
+        let mut r = Rng::seed_from_u64(seed);
+        let alpha: Vec<f32> = (0..4).map(|_| (r.f64() * 10.0 - 5.0) as f32).collect();
+        let present: Vec<bool> = (0..4).map(|_| r.bool(0.6)).collect();
+        let beta = sparsity::masked_softmax(&alpha, &present);
+        let sum: f64 = beta.iter().sum();
+        if present.iter().any(|&p| p) {
+            assert!((sum - 1.0).abs() < 1e-9, "seed {seed}: sum {sum}");
+        } else {
+            assert_eq!(sum, 0.0);
+        }
+        for (b, &p) in beta.iter().zip(&present) {
+            assert!(*b >= 0.0 && (p || *b == 0.0), "seed {seed}");
+        }
+    }
+}
+
+// --- spatial ratio ------------------------------------------------------------
+
+#[test]
+fn prop_spatial_ratio_monotone_in_threshold() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let imp: Vec<f32> = (0..64).map(|_| r.f64() as f32).collect();
+        let t1 = r.f64();
+        let t2 = r.f64();
+        let (lo, hi) = if t1 < t2 { (t1, t2) } else { (t2, t1) };
+        assert!(
+            sparsity::spatial_ratio(&imp, lo) <= sparsity::spatial_ratio(&imp, hi),
+            "seed {seed}"
+        );
+    }
+}
+
+// --- network / cost model ------------------------------------------------------
+
+#[test]
+fn prop_transfer_time_monotone_and_bounded() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let cfg = NetworkCfg {
+            bandwidth_mbps: r.range_f64(50.0, 1000.0),
+            rtt_ms: r.range_f64(1.0, 100.0),
+            jitter: 0.0,
+        };
+        let mut link = Link::new(cfg, seed);
+        let b1 = r.below(1_000_000) as u64;
+        let b2 = b1 + r.below(1_000_000) as u64;
+        let t1 = link.transfer_s(b1, msao::cluster::Dir::Up);
+        let t2 = link.transfer_s(b2, msao::cluster::Dir::Up);
+        assert!(t2 >= t1, "seed {seed}");
+        assert!(t1 >= 0.5 * cfg.rtt_ms * 1e-3 - 1e-12, "seed {seed}: below propagation");
+    }
+}
+
+#[test]
+fn prop_exec_time_monotone_in_work() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let dev = DeviceSim::new(if r.bool(0.5) { DeviceCfg::a100() } else { DeviceCfg::rtx3090() });
+        let m = if r.bool(0.5) { SimModel::qwen25vl_7b() } else { SimModel::qwen2vl_2b() };
+        let s1 = r.range_f64(16.0, 2048.0);
+        let s2 = s1 + r.range_f64(1.0, 1024.0);
+        assert!(dev.prefill_s(&m, s2) >= dev.prefill_s(&m, s1), "seed {seed}");
+        assert!(dev.decode_s(&m, s2) >= dev.decode_s(&m, s1), "seed {seed}");
+    }
+}
+
+// --- optimizer -------------------------------------------------------------------
+
+#[test]
+fn prop_cholesky_reconstructs_spd_matrices() {
+    for seed in cases(100) {
+        let mut r = Rng::seed_from_u64(seed);
+        let n = 2 + r.below(8);
+        // SPD via A = B B^T + n*I.
+        let b: Vec<f64> = (0..n * n).map(|_| r.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let l = linalg::cholesky(&a, n).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                assert!((s - a[i * n + j]).abs() < 1e-8, "seed {seed} at ({i},{j})");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_gp_variance_nonnegative_and_shrinks_at_data() {
+    for seed in cases(50) {
+        let mut r = Rng::seed_from_u64(seed);
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        let mut xs = Vec::new();
+        for _ in 0..6 {
+            let x = vec![r.f64(), r.f64()];
+            gp.observe(x.clone(), r.normal()).unwrap();
+            xs.push(x);
+        }
+        let mut v_at_data = 0.0f64;
+        for x in &xs {
+            let (_, v) = gp.predict(x);
+            assert!(v >= 0.0, "seed {seed}: negative var {v}");
+            v_at_data = v_at_data.max(v);
+        }
+        // Predictions are in raw output units, so compare relatively:
+        // far from the data the posterior must be much less certain.
+        let (_, v_far) = gp.predict(&[5.0, -3.0]);
+        assert!(
+            v_far > 10.0 * v_at_data.max(1e-12),
+            "seed {seed}: far var {v_far} vs at-data {v_at_data}"
+        );
+    }
+}
+
+#[test]
+fn prop_theta_controller_stays_in_bounds() {
+    let cfg = MsaoCfg::default();
+    for seed in cases(100) {
+        let mut r = Rng::seed_from_u64(seed);
+        let calib: Vec<f64> = (0..100).map(|_| r.f64() * 5.0).collect();
+        let mut t = ThetaController::from_calibration(&cfg, &calib);
+        let hmax = calib.iter().cloned().fold(0.0f64, f64::max);
+        for _ in 0..200 {
+            match r.below(3) {
+                0 => t.record_entropy(r.f64() * 5.0),
+                1 => t.on_verify(r.below(6), 5),
+                _ => t.on_offload(),
+            }
+            assert!(
+                t.theta >= cfg.theta_min && t.theta <= hmax.max(1.0) * 2.0,
+                "seed {seed}: theta {} escaped",
+                t.theta
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_spec_len_and_draft_len_sane() {
+    for seed in cases(300) {
+        let mut r = Rng::seed_from_u64(seed);
+        let p = r.f64();
+        let e = expected_spec_len(p, 5);
+        assert!((1.0..=5.0).contains(&e), "seed {seed}: E[N] {e}");
+        let d = draft_len(p, 0.8, 5);
+        assert!((1..=5).contains(&d), "seed {seed}: N_draft {d}");
+    }
+}
+
+// --- batcher ------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_piggyback_fraction_bounded() {
+    for seed in cases(100) {
+        let mut r = Rng::seed_from_u64(seed);
+        let mut b = Batcher::new(r.range_f64(0.5, 5.0), 1 + r.below(8), true);
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += r.exp(100.0);
+            b.admit(t);
+        }
+        let a = b.amortization();
+        assert!((0.0..1.0).contains(&a), "seed {seed}: amortization {a}");
+        assert_eq!(b.windows_opened + b.piggybacked, 200, "seed {seed}");
+    }
+}
+
+// --- workload -----------------------------------------------------------------
+
+#[test]
+fn prop_items_well_formed() {
+    for seed in cases(40) {
+        let mut g = Generator::new(seed);
+        for item in g.items(Benchmark::MmBench, 5) {
+            assert!(item.has(item.relevant), "seed {seed}: relevant modality absent");
+            if let (Some(v), Some(nv)) = (&item.video, &item.novel) {
+                assert_eq!(v.len(), nv.len());
+                assert!(nv[0], "seed {seed}: frame 0 must be novel");
+            }
+            if let Some(sal) = &item.salient {
+                assert!(sal.iter().any(|&s| s), "seed {seed}: no salient patches");
+            }
+            assert!(!item.question.is_empty());
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let v = random_json(&mut r, 3);
+        let text = v.to_string();
+        let v2 = Value::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, v2, "seed {seed}");
+    }
+}
+
+fn random_json(r: &mut Rng, depth: usize) -> Value {
+    use std::collections::BTreeMap;
+    match if depth == 0 { r.below(4) } else { r.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(r.bool(0.5)),
+        2 => Value::Num((r.normal() * 100.0 * 8.0).round() / 8.0),
+        3 => {
+            let n = r.below(8);
+            Value::Str((0..n).map(|_| char::from(32 + r.below(90) as u8)).collect())
+        }
+        4 => Value::Arr((0..r.below(4)).map(|_| random_json(r, depth - 1)).collect()),
+        _ => {
+            let mut m = BTreeMap::new();
+            for i in 0..r.below(4) {
+                m.insert(format!("k{i}"), random_json(r, depth - 1));
+            }
+            Value::Obj(m)
+        }
+    }
+}
+
+// --- stats ---------------------------------------------------------------------
+
+#[test]
+fn prop_percentile_within_minmax_and_monotone() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let xs: Vec<f64> = (0..1 + r.below(50)).map(|_| r.normal() * 10.0).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let q1 = r.f64();
+        let q2 = r.f64();
+        let (a, b) = if q1 < q2 { (q1, q2) } else { (q2, q1) };
+        let p1 = percentile(&xs, a);
+        let p2 = percentile(&xs, b);
+        assert!(p1 >= lo - 1e-12 && p2 <= hi + 1e-12, "seed {seed}");
+        assert!(p1 <= p2 + 1e-12, "seed {seed}");
+    }
+}
