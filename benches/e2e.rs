@@ -6,7 +6,7 @@ use std::time::Instant;
 
 use msao::baselines::{serve_trace_baseline, Baseline};
 use msao::config::Config;
-use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::coordinator::{serve_trace_concurrent, Coordinator, Mode};
 use msao::metrics::summarize;
 use msao::workload::{Benchmark, Generator};
 
@@ -29,7 +29,9 @@ fn main() -> anyhow::Result<()> {
         let arrivals = gen.arrivals(n, 1.3);
         let t0 = Instant::now();
         let res = match which {
-            None => serve_trace(&mut coord, &items, &arrivals, Mode::Msao, 1)?,
+            // Concurrency 1: scheduling-equivalent to the sequential
+            // baselines; the scaling section below varies the cap.
+            None => serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, 1)?,
             Some(b) => serve_trace_baseline(&mut coord, b, &items, &arrivals, 1)?,
         };
         let wall = t0.elapsed().as_secs_f64();
@@ -37,6 +39,26 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:<12} {:>10.2} {:>12.3} {:>12.1} {:>12.2}",
             name, wall, s.latency_mean_s, s.throughput_tps, s.tflops_per_req
+        );
+    }
+
+    // Scheduler scaling: MSAO at increasing concurrency caps (same trace).
+    println!("== MSAO concurrency scaling ({n} reqs, 4 req/s offered) ==");
+    println!(
+        "{:<12} {:>10} {:>12} {:>12} {:>12}",
+        "concurrency", "wall_s", "lat_p99_s", "tput_tok_s", "amort"
+    );
+    for conc in [1usize, 2, 4, 8] {
+        let mut gen = Generator::new(42);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 4.0);
+        let t0 = Instant::now();
+        let res = serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, conc)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let s = summarize(&res.records);
+        println!(
+            "{:<12} {:>10.2} {:>12.3} {:>12.1} {:>12.2}",
+            conc, wall, s.latency_p99_s, s.throughput_tps, res.batch_amortization
         );
     }
     Ok(())

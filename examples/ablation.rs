@@ -7,7 +7,7 @@
 use anyhow::Result;
 
 use msao::config::Config;
-use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::coordinator::{serve_trace_concurrent, Coordinator, Mode};
 use msao::metrics::summarize;
 use msao::util::table::{f1, f2, f3, Table};
 use msao::workload::{Benchmark, Generator};
@@ -28,7 +28,9 @@ fn main() -> Result<()> {
             let mut gen = Generator::new(77);
             let items = gen.items(benchmark, n);
             let arrivals = gen.arrivals(n, 1.3);
-            let res = serve_trace(&mut coord, &items, &arrivals, mode, 77)?;
+            // Concurrency 1 keeps the variant comparison (and its
+            // memory column) scheduling-equivalent.
+            let res = serve_trace_concurrent(&mut coord, &items, &arrivals, mode, 77, 1)?;
             let s = summarize(&res.records);
             table.row(vec![
                 benchmark.name().into(),

@@ -164,7 +164,12 @@ pub struct ServeCfg {
     pub max_inflight: usize,
     /// Dynamic batcher: max verify calls coalesced into one uplink burst.
     pub verify_batch: usize,
-    /// Dynamic batcher: max wait to fill a batch (ms).
+    /// Dynamic batcher: max wait to fill a batch (ms). Sized a little
+    /// above one edge draft step (~5 ms at paper scale) so verify
+    /// uplinks from concurrently drafting sessions — which the edge
+    /// serializes at least one decode step apart — can share an
+    /// exchange window; well under the 10 ms one-way propagation each
+    /// coalesced message saves.
     pub batch_wait_ms: f64,
     /// Request queue capacity (admission control).
     pub queue_cap: usize,
@@ -172,7 +177,7 @@ pub struct ServeCfg {
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { max_inflight: 4, verify_batch: 4, batch_wait_ms: 2.0, queue_cap: 256 }
+        ServeCfg { max_inflight: 4, verify_batch: 4, batch_wait_ms: 6.0, queue_cap: 256 }
     }
 }
 

@@ -34,20 +34,42 @@ impl Batcher {
     /// Register a verify exchange departing at `t`. Returns true if the
     /// message piggybacks (skip propagation delay), false if it opens a
     /// new window (pay propagation).
+    ///
+    /// Only departures at or after the window start can ride it: a
+    /// message departing *before* the open window (out-of-order event
+    /// processing across concurrent sessions) pays for its own exchange
+    /// rather than borrowing one that had not begun yet — and it must
+    /// not clobber the still-open window, which later in-order
+    /// departures can keep coalescing onto.
     pub fn admit(&mut self, t: f64) -> bool {
-        if self.enabled
-            && t - self.last_window_start <= self.window_s
-            && self.in_window < self.max_batch
-        {
+        let dt = t - self.last_window_start;
+        if self.enabled && dt >= 0.0 && dt <= self.window_s && self.in_window < self.max_batch {
             self.in_window += 1;
             self.piggybacked += 1;
             true
+        } else if dt < 0.0 {
+            // Stale departure: its own single-message exchange.
+            self.windows_opened += 1;
+            false
         } else {
             self.last_window_start = t;
             self.in_window = 1;
             self.windows_opened += 1;
             false
         }
+    }
+
+    /// Clear window state and counters, returning the batcher to its
+    /// just-constructed state. `serve_trace` builds a fresh batcher per
+    /// trace, so nothing in-tree needs this today; it exists for
+    /// drivers that hold one batcher across trace runs (sweep
+    /// harnesses, long-lived servers), where stale window starts and
+    /// amortization tallies would otherwise leak between experiments.
+    pub fn reset(&mut self) {
+        self.last_window_start = f64::NEG_INFINITY;
+        self.in_window = 0;
+        self.windows_opened = 0;
+        self.piggybacked = 0;
     }
 
     pub fn amortization(&self) -> f64 {
@@ -81,6 +103,35 @@ mod tests {
         assert!(!b.admit(0.0));
         assert!(b.admit(0.001));
         assert!(!b.admit(0.002)); // batch full -> new window
+    }
+
+    #[test]
+    fn rejects_out_of_order_departures() {
+        // A message departing before the open window's start must not
+        // piggyback on it (negative delta used to pass the <= check).
+        let mut b = Batcher::new(2.0, 8, true);
+        assert!(!b.admit(1.0)); // opens window at t=1.0
+        assert!(!b.admit(0.5)); // departed before the window: own exchange
+        assert_eq!(b.piggybacked, 0);
+        assert_eq!(b.windows_opened, 2);
+        // The t=1.0 window stays open: later in-order departures still
+        // coalesce onto it.
+        assert!(b.admit(1.0015));
+        assert_eq!(b.piggybacked, 1);
+    }
+
+    #[test]
+    fn reset_clears_window_and_counters() {
+        let mut b = Batcher::new(10.0, 8, true);
+        assert!(!b.admit(0.0));
+        assert!(b.admit(0.001));
+        b.reset();
+        assert_eq!(b.windows_opened, 0);
+        assert_eq!(b.piggybacked, 0);
+        assert_eq!(b.amortization(), 0.0);
+        // First admit after reset opens a fresh window even at t inside
+        // the pre-reset window.
+        assert!(!b.admit(0.002));
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod batcher;
 pub mod engines;
 pub mod mas;
 pub mod planner;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 pub mod speculative;
@@ -21,6 +22,7 @@ pub mod timeline;
 pub use batcher::Batcher;
 pub use engines::Engines;
 pub use planner::Plan;
-pub use server::{serve_trace, TraceResult};
-pub use session::{Coordinator, Mode};
+pub use scheduler::StepOutcome;
+pub use server::{msao_testbed, serve_trace, serve_trace_concurrent, TraceResult};
+pub use session::{Coordinator, Mode, Session};
 pub use timeline::{Site, VirtualCluster};

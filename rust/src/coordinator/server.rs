@@ -2,12 +2,32 @@
 //! the shared virtual testbed, producing the ExecRecords every
 //! experiment aggregates.
 //!
-//! Requests are processed in arrival order; the virtual cluster's
-//! resource cursors (edge / cloud / both link directions) serialize
-//! contended work, so concurrent load produces honest queueing,
-//! saturation and batching behaviour. (Code-order FCFS is a slightly
-//! pessimistic approximation of a fully event-driven interleave —
-//! documented in DESIGN.md.)
+//! # Event model
+//!
+//! Each request is a resumable [`Session`] state machine whose phases
+//! are anchored at virtual-time events:
+//!
+//! * **probe** — fires at the arrival time; charges the modality-aware
+//!   module on the edge.
+//! * **plan + prefill** — fires at probe end; runs the BO planner, the
+//!   adaptive edge/cloud routing decision (which reads the *live*
+//!   queue depths of the interleaved cluster), and both prefills.
+//! * **draft/verify round** — one event per speculative round, fired at
+//!   the time the edge can start drafting (`SpecSession::next_time`);
+//!   cloud-direct sessions fire one event per cloud decode step.
+//! * **downlink** — fires at the last commit time; releases KV/memory
+//!   and scores quality.
+//!
+//! The scheduler ([`super::scheduler::drive`]) admits sessions FCFS up
+//! to `concurrency` in flight and always advances the session with the
+//! earliest next event, so edge/cloud occupancy and link serialization
+//! are charged in virtual-time order across requests. Verify uplinks
+//! from *different* sessions therefore interleave on the link, which is
+//! what lets the dynamic [`Batcher`] coalesce them into shared exchange
+//! windows (the paper's collaborative scheduling) — the seed's
+//! run-to-completion FCFS loop could only ever batch a session with
+//! itself. At `concurrency == 1` the scheduler degenerates to exactly
+//! that seed loop and reproduces its records bit for bit.
 
 use anyhow::Result;
 
@@ -16,7 +36,8 @@ use crate::metrics::ExecRecord;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
-use super::session::{Coordinator, Mode};
+use super::scheduler;
+use super::session::{Coordinator, Mode, Session};
 use super::timeline::VirtualCluster;
 
 pub struct TraceResult {
@@ -26,19 +47,13 @@ pub struct TraceResult {
     pub batch_amortization: f64,
 }
 
-/// Serve `items` with Poisson `arrivals` under `mode`.
-pub fn serve_trace(
-    coord: &mut Coordinator,
-    items: &[Item],
-    arrivals: &[f64],
-    mode: Mode,
-    seed: u64,
-) -> Result<TraceResult> {
-    assert_eq!(items.len(), arrivals.len());
-    let cfg: Config = coord.cfg.clone();
-    let mut vc = VirtualCluster::new(&cfg, seed);
-    // Paper-scale resident weights.
-    // 25% runtime workspace beyond raw weights (see baselines/mod.rs).
+/// Fresh virtual testbed with MSAO's paper-scale resident weights
+/// (draft + encoder on the edge, full model + encoder in the cloud,
+/// 25% runtime workspace beyond raw weights — see baselines/mod.rs).
+/// Shared by the trace server and the equivalence tests so both run on
+/// identically configured clusters.
+pub fn msao_testbed(cfg: &Config, seed: u64) -> VirtualCluster {
+    let mut vc = VirtualCluster::new(cfg, seed);
     vc.edge_mem.set_base(
         1.25 * (crate::cluster::SimModel::qwen2vl_2b().weight_bytes()
             + crate::cluster::SimModel::vision_encoder().weight_bytes()),
@@ -47,17 +62,59 @@ pub fn serve_trace(
         1.25 * (crate::cluster::SimModel::qwen25vl_7b().weight_bytes()
             + crate::cluster::SimModel::vision_encoder().weight_bytes()),
     );
+    vc
+}
+
+/// Serve `items` with Poisson `arrivals` under `mode`, processing up to
+/// `cfg.serve.max_inflight` requests concurrently. The "w/o
+/// collaborative scheduling" ablation pins to sequential FCFS — static
+/// task distribution forfeits the event-driven interleave along with
+/// batching and routing, which is exactly what Fig. 9 measures.
+pub fn serve_trace(
+    coord: &mut Coordinator,
+    items: &[Item],
+    arrivals: &[f64],
+    mode: Mode,
+    seed: u64,
+) -> Result<TraceResult> {
+    let concurrency = if mode == Mode::NoCollabSched {
+        1
+    } else {
+        coord.cfg.serve.max_inflight
+    };
+    serve_trace_concurrent(coord, items, arrivals, mode, seed, concurrency)
+}
+
+/// Serve `items` with an explicit concurrency cap (1 = the seed's
+/// sequential FCFS; higher values interleave sessions event-driven).
+pub fn serve_trace_concurrent(
+    coord: &mut Coordinator,
+    items: &[Item],
+    arrivals: &[f64],
+    mode: Mode,
+    seed: u64,
+    concurrency: usize,
+) -> Result<TraceResult> {
+    assert_eq!(items.len(), arrivals.len());
+    let cfg: Config = coord.cfg.clone();
+    let mut vc = msao_testbed(&cfg, seed);
     let mut batcher = Batcher::new(
         cfg.serve.batch_wait_ms,
         cfg.serve.verify_batch,
         mode != Mode::NoCollabSched,
     );
     let mut theta = coord.theta();
-    let mut records = Vec::with_capacity(items.len());
-    for (item, &arr) in items.iter().zip(arrivals) {
-        let rec = coord.serve(&mut vc, &mut batcher, &mut theta, item, arr, mode)?;
-        records.push(rec);
-    }
+
+    let mut sessions: Vec<Session> = items
+        .iter()
+        .zip(arrivals)
+        .map(|(item, &arr)| Session::new(item, arr, mode))
+        .collect();
+    scheduler::drive(&mut sessions, concurrency, Session::next_time, |_, s| {
+        s.step(coord, &mut vc, &mut batcher, &mut theta)
+    })?;
+    let records: Vec<ExecRecord> = sessions.into_iter().map(Session::into_record).collect();
+
     Ok(TraceResult {
         records,
         uplink_bytes: vc.link.uplink_bytes,

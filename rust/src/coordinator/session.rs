@@ -1,6 +1,14 @@
-//! Per-request session driver: probe -> plan -> dual prefill ->
+//! Per-request serving session: probe -> plan -> dual prefill ->
 //! speculative decode -> quality + metrics. This is MSAO end to end;
 //! the ablation modes of Fig. 9 switch off one half each.
+//!
+//! The request is a resumable state machine ([`Session`]): each phase
+//! (probe, plan+prefill, every draft/verify round, final downlink) is
+//! one `step()` call anchored at a virtual-time event, so the
+//! event-driven trace scheduler ([`super::scheduler`]) can interleave
+//! many sessions on the shared [`VirtualCluster`] in virtual-time
+//! order. [`Coordinator::serve`] drives a single session to completion
+//! and is exactly the seed's monolithic run-to-completion path.
 
 use anyhow::{Context, Result};
 
@@ -9,7 +17,7 @@ use crate::config::Config;
 use crate::metrics::ExecRecord;
 use crate::optimizer::ThetaController;
 use crate::quality::{self, Capability, ServedInfo};
-use crate::runtime::engine::HostTensor;
+use crate::runtime::engine::{HostTensor, KvHandle};
 use crate::sparsity::Modality;
 use crate::util::Rng;
 use crate::workload::generator::Item;
@@ -18,7 +26,8 @@ use super::batcher::Batcher;
 use super::engines::{argmax, entropy, Engines};
 use super::mas::{run_probe, ProbeOutcome};
 use super::planner::{self, Plan, PlanCtx};
-use super::speculative::{speculative_decode, SpecParams};
+use super::scheduler::StepOutcome;
+use super::speculative::{SpecParams, SpecSession};
 use super::timeline::{Site, VirtualCluster};
 
 /// Serving mode: full MSAO or one of the Fig. 9 ablations.
@@ -39,6 +48,576 @@ pub struct Coordinator {
     pub calibration: Vec<f64>,
     pub p_conf0: f64,
     rng: Rng,
+}
+
+/// Everything the downlink/bookkeeping/quality tail of a session needs,
+/// carried through the decode phase.
+struct FinishCommon {
+    probe: ProbeOutcome,
+    plan: Plan,
+    kept_idx: Vec<i32>,
+    vlen: usize,
+    edge_kv: Option<KvHandle>,
+    cloud_kv: Option<KvHandle>,
+    /// Paper-scale KV + activation bytes to release per site (0 = none).
+    edge_mem_bytes: f64,
+    cloud_mem_bytes: f64,
+    probe_mem_bytes: f64,
+}
+
+/// Speculative decode in flight (edge drafts, cloud verifies).
+struct DecodeState {
+    spec: SpecSession,
+    finish: FinishCommon,
+}
+
+/// Cloud-direct decode in flight (adaptive router bypassed the edge).
+/// The cloud KV handle lives in `finish.cloud_kv` (freed at downlink).
+struct CloudState {
+    lens: (usize, usize, usize),
+    seq_paper: f64,
+    tok: i32,
+    tokens: Vec<i32>,
+    /// Cloud decode cursor (virtual time of the next decode step).
+    t: f64,
+    /// Tokens decoded so far (loop index of the seed's decode loop).
+    j: usize,
+    n_out: usize,
+    finish: FinishCommon,
+}
+
+/// Generation finished at `t_done`; downlink + bookkeeping remain.
+struct FinishState {
+    t_done: f64,
+    tokens_out: usize,
+    accepted: usize,
+    proposed: usize,
+    offloads: usize,
+    cloud_fraction: f64,
+    common: FinishCommon,
+}
+
+impl FinishState {
+    fn from_spec(out: super::speculative::SpecOutcome, common: FinishCommon) -> Self {
+        FinishState {
+            t_done: out.t_done,
+            tokens_out: out.tokens.len(),
+            accepted: out.accepted,
+            proposed: out.proposed,
+            offloads: out.offloads,
+            cloud_fraction: out.cloud_fraction,
+            common,
+        }
+    }
+
+    fn from_cloud(tokens_out: usize, t_done: f64, common: FinishCommon) -> Self {
+        FinishState {
+            t_done,
+            tokens_out,
+            accepted: 0,
+            proposed: 0,
+            offloads: 0,
+            cloud_fraction: 1.0,
+            common,
+        }
+    }
+}
+
+enum Phase {
+    /// Waiting to run the probe at the arrival time.
+    Probe,
+    /// Probe charged up to `probe_end`; plan + prefill next.
+    Prefill { probe: ProbeOutcome, probe_end: f64 },
+    Decode(Box<DecodeState>),
+    CloudDecode(Box<CloudState>),
+    Finish(Box<FinishState>),
+    Done,
+}
+
+/// One request moving through the serving pipeline as a sequence of
+/// virtual-time events. `next_time()` is the scheduler's sort key;
+/// `step()` advances exactly one phase / round.
+pub struct Session<'a> {
+    item: &'a Item,
+    arrival: f64,
+    mode: Mode,
+    rec: ExecRecord,
+    phase: Phase,
+}
+
+impl<'a> Session<'a> {
+    pub fn new(item: &'a Item, arrival: f64, mode: Mode) -> Self {
+        Session {
+            item,
+            arrival,
+            mode,
+            rec: ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() },
+            phase: Phase::Probe,
+        }
+    }
+
+    /// Virtual time of this session's next event.
+    pub fn next_time(&self) -> f64 {
+        match &self.phase {
+            Phase::Probe => self.arrival,
+            Phase::Prefill { probe_end, .. } => *probe_end,
+            Phase::Decode(d) => d.spec.next_time(),
+            Phase::CloudDecode(s) => s.t,
+            Phase::Finish(f) => f.t_done,
+            Phase::Done => f64::INFINITY,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    pub fn into_record(self) -> ExecRecord {
+        debug_assert!(matches!(self.phase, Phase::Done), "session not complete");
+        self.rec
+    }
+
+    /// Advance one phase (or one draft/verify round), charging the
+    /// shared virtual cluster. Returns `Done` after the final downlink.
+    pub fn step(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        batcher: &mut Batcher,
+        theta: &mut ThetaController,
+    ) -> Result<StepOutcome> {
+        let phase = std::mem::replace(&mut self.phase, Phase::Done);
+        self.phase = match phase {
+            Phase::Probe => self.step_probe(coord, vc)?,
+            Phase::Prefill { probe, probe_end } => {
+                self.step_prefill(coord, vc, probe, probe_end)?
+            }
+            Phase::Decode(d) => self.step_decode(coord, vc, batcher, theta, d)?,
+            Phase::CloudDecode(s) => self.step_cloud_decode(coord, vc, s)?,
+            Phase::Finish(f) => self.step_finish(coord, vc, *f)?,
+            Phase::Done => Phase::Done,
+        };
+        Ok(if matches!(self.phase, Phase::Done) {
+            StepOutcome::Done
+        } else {
+            StepOutcome::Pending
+        })
+    }
+
+    // ---------------- probe phase (edge) ---------------------------
+    fn step_probe(&mut self, coord: &mut Coordinator, vc: &mut VirtualCluster) -> Result<Phase> {
+        let probe = run_probe(&coord.eng, &coord.cfg.msao, self.item)?;
+        let probe_end = if self.mode == Mode::NoModalityAware {
+            // Uniform policy: encoders still run (they feed the draft
+            // model) but no probe heads; no probe latency charged.
+            self.arrival
+        } else {
+            let (_, end) = vc.exec(Site::Edge, self.arrival, probe.probe_s, probe.probe_flops);
+            vc.edge_mem.alloc(probe.probe_mem_gb * 1e9);
+            self.rec.probe_s = probe.probe_s;
+            end
+        };
+        Ok(Phase::Prefill { probe, probe_end })
+    }
+
+    // ---------------- plan + route + dual prefill ---------------------
+    fn step_prefill(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        probe: ProbeOutcome,
+        probe_end: f64,
+    ) -> Result<Phase> {
+        let item = self.item;
+        let mode = self.mode;
+        let c = coord.eng.c.clone();
+        let cfg = coord.cfg.clone();
+
+        // ---------------- coarse plan ------------------------------------
+        let n_out = cfg.msao.max_new_tokens;
+        let plan = match mode {
+            Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, coord.p_conf0),
+            // NoCollabSched keeps modality-aware pruning; scheduling is
+            // static (fixed draft length, no overlap/batching, no routing).
+            Mode::Msao | Mode::NoCollabSched => planner::plan(&PlanCtx {
+                cfg: &cfg,
+                item,
+                probe: &probe,
+                p_conf: coord.p_conf0,
+                n_out,
+                seed: item.id ^ 0x9E37,
+            })?,
+        };
+
+        // ---------------- assemble prefill inputs ------------------------
+        let (vis, vlen, kept_idx) = assemble_visual(&coord.eng, &probe, &plan, item, mode)?;
+        let (aud, alen) = assemble_audio(&coord.eng, &probe, &plan)?;
+        let text = coord.eng.tok.pad_to(
+            coord.eng.tok.encode_prompt(&item.question, c.text_slots()),
+            c.text_slots(),
+        );
+        let tlen = text.iter().filter(|&&t| t != crate::runtime::tokenizer::PAD).count();
+        let lens = (vlen, alen, tlen);
+
+        // Paper-scale sequence length for the cost model.
+        let seq_paper = paper_seq(item, vlen, plan.frames_keep.len(), alen);
+
+        // ---------------- adaptive site routing ---------------------------
+        // "dynamically schedules workloads between edge and cloud based on
+        // the derived MAS scores and real-time system states" (§4.2): when
+        // the edge queue is deep (or the cloud decisively faster for this
+        // request), the pruned request is served cloud-direct instead of
+        // through the edge speculative path. The ablation "w/o
+        // collaborative scheduling" pins everything to the static path.
+        if mode == Mode::Msao {
+            let est = {
+                let d_edge = vc.dev(Site::Edge);
+                let d_cloud = vc.dev(Site::Cloud);
+                let draft = SimModel::qwen2vl_2b();
+                let full = SimModel::qwen25vl_7b();
+                let vitm = SimModel::vision_encoder();
+                let edge_q = (vc.busy_until(Site::Edge) - probe_end).max(0.0);
+                let cloud_q = (vc.busy_until(Site::Cloud) - probe_end).max(0.0);
+                let t_edge = edge_q
+                    + d_edge.encode_s(&vitm, 256.0)
+                    + d_edge.prefill_s(&draft, seq_paper)
+                    + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
+                let up = plan.bytes_up as f64 * 8.0 / (cfg.network.bandwidth_mbps * 1e6)
+                    + 0.5 * cfg.network.rtt_ms * 1e-3;
+                let t_cloud = cloud_q
+                    + up
+                    + d_cloud.encode_s(&vitm, 256.0)
+                    + d_cloud.prefill_s(&full, seq_paper)
+                    + n_out as f64 * d_cloud.decode_s(&full, seq_paper);
+                (t_edge, t_cloud)
+            };
+            if est.1 < 0.9 * est.0 {
+                return self.prefill_cloud_direct(
+                    coord,
+                    vc,
+                    probe,
+                    probe_end,
+                    plan,
+                    (text, tlen, vis, vlen, aud, alen),
+                    seq_paper,
+                    kept_idx,
+                );
+            }
+        }
+
+        // ---------------- dual prefill (Eq. 14 max term) ------------------
+        let draft_m = SimModel::qwen2vl_2b();
+        let full_m = SimModel::qwen25vl_7b();
+        let vit = SimModel::vision_encoder();
+
+        // Edge vision-encode cost. MSAO pays the probe's early layers on
+        // everything (already charged) and the *remaining* encoder layers
+        // only on retained content: kept frames for video, kept-patch
+        // fraction for images (§4.1: non-critical patches are pruned
+        // before the deep layers / projector). The uniform ablation
+        // encodes everything at full depth.
+        const EARLY_SHARE: f64 = 2.0 / 32.0; // probe taps layer 2 of 32
+        let enc_frames = if mode == Mode::NoModalityAware {
+            frames_encoded(item) as f64
+        } else if item.video.is_some() {
+            plan.frames_keep.len().max(1) as f64
+        } else {
+            frames_encoded(item) as f64
+        };
+        let late_scale = if mode == Mode::NoModalityAware || item.image.is_none() {
+            1.0
+        } else {
+            // Deep layers run on the retained patches only.
+            EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
+        };
+        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+        let enc_secs = vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames * late_scale;
+        let (_, enc_end) = vc.exec(
+            Site::Edge,
+            probe_end,
+            enc_secs,
+            vit.flops_prefill(enc_patches) * enc_frames * late_scale,
+        );
+        let edge_pre_secs = vc.dev(Site::Edge).prefill_s(&draft_m, seq_paper);
+        let (_, edge_pre_end) = vc.exec(
+            Site::Edge,
+            enc_end,
+            edge_pre_secs,
+            draft_m.flops_prefill(seq_paper),
+        );
+
+        // Cloud: pruned payload uplink, re-encode, full prefill.
+        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        self.rec.bytes_up += plan.bytes_up;
+        let kept_frames = plan.frames_keep.len().max(1) as f64;
+        // Cloud re-encodes only the shipped (pruned) content.
+        let cloud_share = if item.video.is_some() {
+            kept_frames
+        } else {
+            (vlen.max(8) as f64 / 256.0).min(1.0)
+        };
+        let cloud_enc = vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * cloud_share;
+        let (_, cloud_enc_end) = vc.exec(
+            Site::Cloud,
+            up_arr,
+            cloud_enc,
+            vit.flops_prefill(enc_patches) * cloud_share,
+        );
+        let cloud_pre_secs = vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
+        let (_, cloud_pre_end) = vc.exec(
+            Site::Cloud,
+            cloud_enc_end,
+            cloud_pre_secs,
+            full_m.flops_prefill(seq_paper),
+        );
+
+        // Real prefills.
+        let edge_pre = coord.eng.prefill(false, &text, tlen, &vis, vlen, &aud, alen)?;
+        let cloud_pre = coord.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
+        let first_token = argmax(&cloud_pre.logits);
+
+        // Memory at paper scale.
+        let edge_kv_gb = kv_bytes(&draft_m, seq_paper + n_out as f64) / 1e9;
+        let cloud_kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
+        let edge_mem_bytes = edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper);
+        let cloud_mem_bytes = cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
+        vc.edge_mem.alloc(edge_mem_bytes);
+        vc.cloud_mem.alloc(cloud_mem_bytes);
+
+        let prefill_done = edge_pre_end.max(cloud_pre_end);
+        self.rec.prefill_s = prefill_done - self.arrival;
+
+        // ---------------- speculative decode ------------------------------
+        let spec = SpecSession::new(
+            &coord.eng,
+            SpecParams {
+                edge_kv: edge_pre.kv,
+                cloud_kv: cloud_pre.kv,
+                lens,
+                seq_paper,
+                first_token,
+                edge_ready: edge_pre_end,
+                cloud_ready: cloud_pre_end,
+                max_new: n_out,
+                n_draft: plan.n_draft,
+                adaptive: mode != Mode::NoCollabSched,
+            },
+        );
+        let probe_mem_bytes = if mode != Mode::NoModalityAware {
+            probe.probe_mem_gb * 1e9
+        } else {
+            0.0
+        };
+        let finish = FinishCommon {
+            probe,
+            plan,
+            kept_idx,
+            vlen,
+            edge_kv: Some(edge_pre.kv),
+            cloud_kv: Some(cloud_pre.kv),
+            edge_mem_bytes,
+            cloud_mem_bytes,
+            probe_mem_bytes,
+        };
+        if spec.is_done() {
+            // Degenerate budget (max_new <= 1): nothing to decode.
+            return Ok(Phase::Finish(Box::new(FinishState::from_spec(spec.finish(), finish))));
+        }
+        Ok(Phase::Decode(Box::new(DecodeState { spec, finish })))
+    }
+
+    /// Cloud-direct path of the adaptive router: the *pruned* request is
+    /// shipped to the cloud and the full model both prefills and decodes
+    /// there (no edge speculation). Chosen when the real-time system
+    /// state makes the edge path slower (deep edge queue, idle cloud).
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_cloud_direct(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        probe: ProbeOutcome,
+        probe_end: f64,
+        plan: Plan,
+        inputs: (Vec<i32>, usize, HostTensor, usize, HostTensor, usize),
+        seq_paper: f64,
+        kept_idx: Vec<i32>,
+    ) -> Result<Phase> {
+        let (text, tlen, vis, vlen, aud, alen) = inputs;
+        let item = self.item;
+        let n_out = coord.cfg.msao.max_new_tokens;
+        let full_m = SimModel::qwen25vl_7b();
+        let vit = SimModel::vision_encoder();
+
+        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        self.rec.bytes_up += plan.bytes_up;
+        let kept_frames = plan.frames_keep.len().max(1) as f64;
+        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+        let enc_mult = if item.video.is_some() {
+            kept_frames
+        } else {
+            (vlen.max(8) as f64 / 256.0).min(1.0)
+        };
+        let (_, enc_end) = vc.exec(
+            Site::Cloud,
+            up_arr,
+            vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_mult,
+            vit.flops_prefill(enc_patches) * enc_mult,
+        );
+        let (_, pre_end) = vc.exec(
+            Site::Cloud,
+            enc_end,
+            vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
+            full_m.flops_prefill(seq_paper),
+        );
+        self.rec.prefill_s = pre_end - self.arrival;
+
+        let kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
+        let cloud_mem_bytes = kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
+        vc.cloud_mem.alloc(cloud_mem_bytes);
+
+        let pre = coord.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
+        let tok = argmax(&pre.logits);
+        let probe_mem_bytes = probe.probe_mem_gb * 1e9;
+        let state = CloudState {
+            lens: (vlen, alen, tlen),
+            seq_paper,
+            tok,
+            tokens: vec![tok],
+            t: pre_end,
+            j: 0,
+            n_out,
+            finish: FinishCommon {
+                probe,
+                plan,
+                kept_idx,
+                vlen,
+                edge_kv: None,
+                cloud_kv: Some(pre.kv),
+                edge_mem_bytes: 0.0,
+                cloud_mem_bytes,
+                probe_mem_bytes,
+            },
+        };
+        if state.n_out <= 1 {
+            let CloudState { tokens, t, finish, .. } = state;
+            return Ok(Phase::Finish(Box::new(FinishState::from_cloud(tokens.len(), t, finish))));
+        }
+        Ok(Phase::CloudDecode(Box::new(state)))
+    }
+
+    // ---------------- one speculative draft/verify round ----------------
+    fn step_decode(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        batcher: &mut Batcher,
+        theta: &mut ThetaController,
+        mut d: Box<DecodeState>,
+    ) -> Result<Phase> {
+        d.spec.round(&coord.eng, vc, theta, batcher)?;
+        if d.spec.is_done() {
+            let DecodeState { spec, finish } = *d;
+            Ok(Phase::Finish(Box::new(FinishState::from_spec(spec.finish(), finish))))
+        } else {
+            Ok(Phase::Decode(d))
+        }
+    }
+
+    // ---------------- one cloud-direct decode step ----------------------
+    fn step_cloud_decode(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        mut s: Box<CloudState>,
+    ) -> Result<Phase> {
+        let gen_off = coord.eng.c.gen_off();
+        let eos = coord.eng.c.eos();
+        let full_m = SimModel::qwen25vl_7b();
+        let kv = s.finish.cloud_kv.expect("cloud-direct session always holds a cloud KV");
+        let lg = coord.eng.block(true, false, kv, gen_off + s.j, &[s.tok], s.lens)?;
+        let ctx = s.seq_paper + s.j as f64;
+        let (_, end) = vc.exec(
+            Site::Cloud,
+            s.t,
+            vc.dev(Site::Cloud).decode_s(&full_m, ctx),
+            full_m.flops_decode(ctx),
+        );
+        s.t = end;
+        s.tok = argmax(&lg);
+        s.tokens.push(s.tok);
+        s.j += 1;
+        if s.tok == eos || s.j + 1 >= s.n_out {
+            let CloudState { tokens, t, finish, .. } = *s;
+            Ok(Phase::Finish(Box::new(FinishState::from_cloud(tokens.len(), t, finish))))
+        } else {
+            Ok(Phase::CloudDecode(s))
+        }
+    }
+
+    // ---------------- downlink + bookkeeping + quality ------------------
+    fn step_finish(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        f: FinishState,
+    ) -> Result<Phase> {
+        let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
+        let bytes = 4 * f.tokens_out as u64 + 64;
+        // Downlink the generated text to the user.
+        let (_, done) = vc.send_down(f.t_done, bytes, false);
+        self.rec.bytes_down += bytes;
+
+        if let Some(kv) = f.common.edge_kv {
+            coord.eng.free_kv(false, kv);
+        }
+        if let Some(kv) = f.common.cloud_kv {
+            coord.eng.free_kv(true, kv);
+        }
+        if f.common.edge_mem_bytes > 0.0 {
+            vc.edge_mem.free(f.common.edge_mem_bytes);
+        }
+        if f.common.cloud_mem_bytes > 0.0 {
+            vc.cloud_mem.free(f.common.cloud_mem_bytes);
+        }
+        if f.common.probe_mem_bytes > 0.0 {
+            vc.edge_mem.free(f.common.probe_mem_bytes);
+        }
+
+        self.rec.t_done = done;
+        self.rec.latency_s = done - self.arrival;
+        self.rec.tokens_out = f.tokens_out;
+        self.rec.accepted = f.accepted;
+        self.rec.proposed = f.proposed;
+        self.rec.offloads = f.offloads;
+        self.rec.vis_tokens_kept = f.common.vlen;
+        self.rec.frames_kept = f.common.plan.frames_keep.len();
+        self.rec.mem_edge_gb = vc.edge_mem.peak_gb();
+        self.rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+        // MSAO's cloud model is a shared multi-tenant verifier touched in
+        // short bursts; the stream's dedicated memory is the edge peak
+        // plus the cloud's marginal KV/activations. These are *cluster*
+        // peaks: under sequential FCFS (concurrency 1, the paper-figure
+        // setting) they equal this stream's footprint, while under
+        // concurrent interleave they measure cluster occupancy — all
+        // in-flight sessions' KV is genuinely resident at once.
+        self.rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
+        self.rec.flops_edge = vc.flops_edge;
+        self.rec.flops_cloud = vc.flops_cloud;
+
+        // ---------------- quality -----------------------------------------
+        let info = served_info(
+            self.item,
+            &f.common.probe,
+            &f.common.plan,
+            &f.common.kept_idx,
+            self.mode,
+            f.cloud_fraction,
+        );
+        let cap = Capability::for_benchmark(self.item.benchmark, bandwidth_mbps);
+        self.rec.p_correct = quality::p_correct(cap, self.item, &info);
+        self.rec.correct = quality::sample_correct(&mut coord.rng, self.rec.p_correct);
+        Ok(Phase::Done)
+    }
 }
 
 impl Coordinator {
@@ -108,6 +687,9 @@ impl Coordinator {
     }
 
     /// Serve one item under `mode`, charging the shared virtual cluster.
+    /// Runs the session state machine to completion — the seed's
+    /// run-to-completion FCFS path, and the reference the event-driven
+    /// scheduler must reproduce bit for bit at concurrency 1.
     pub fn serve(
         &mut self,
         vc: &mut VirtualCluster,
@@ -117,326 +699,9 @@ impl Coordinator {
         arrival: f64,
         mode: Mode,
     ) -> Result<ExecRecord> {
-        let c = self.eng.c.clone();
-        let cfg = self.cfg.clone();
-        let msao = &cfg.msao;
-        let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
-
-        // ---------------- probe phase (edge) ---------------------------
-        let probe = run_probe(&self.eng, msao, item)?;
-        let probe_end = if mode == Mode::NoModalityAware {
-            // Uniform policy: encoders still run (they feed the draft
-            // model) but no probe heads; no probe latency charged.
-            arrival
-        } else {
-            let (_, end) = vc.exec(Site::Edge, arrival, probe.probe_s, probe.probe_flops);
-            vc.edge_mem.alloc(probe.probe_mem_gb * 1e9);
-            rec.probe_s = probe.probe_s;
-            end
-        };
-
-        // ---------------- coarse plan ------------------------------------
-        let n_out = msao.max_new_tokens;
-        let plan = match mode {
-            Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, self.p_conf0),
-            Mode::Msao => planner::plan(&PlanCtx {
-                cfg: &cfg,
-                item,
-                probe: &probe,
-                p_conf: self.p_conf0,
-                n_out,
-                seed: item.id ^ 0x9E37,
-            })?,
-            Mode::NoCollabSched => {
-                // Modality-aware pruning retained; scheduling static
-                // (fixed draft length, no overlap/batching, no routing).
-                planner::plan(&PlanCtx {
-                    cfg: &cfg,
-                    item,
-                    probe: &probe,
-                    p_conf: self.p_conf0,
-                    n_out,
-                    seed: item.id ^ 0x9E37,
-                })?
-            }
-        };
-
-        // ---------------- assemble prefill inputs ------------------------
-        let (vis, vlen, kept_idx) = assemble_visual(&self.eng, &probe, &plan, item, mode)?;
-        let (aud, alen) = assemble_audio(&self.eng, &probe, &plan)?;
-        let text = self.eng.tok.pad_to(
-            self.eng.tok.encode_prompt(&item.question, c.text_slots()),
-            c.text_slots(),
-        );
-        let tlen = text.iter().filter(|&&t| t != crate::runtime::tokenizer::PAD).count();
-        let lens = (vlen, alen, tlen);
-
-        // Paper-scale sequence length for the cost model.
-        let seq_paper = paper_seq(item, vlen, plan.frames_keep.len(), alen);
-
-        // ---------------- adaptive site routing ---------------------------
-        // "dynamically schedules workloads between edge and cloud based on
-        // the derived MAS scores and real-time system states" (§4.2): when
-        // the edge queue is deep (or the cloud decisively faster for this
-        // request), the pruned request is served cloud-direct instead of
-        // through the edge speculative path. The ablation "w/o
-        // collaborative scheduling" pins everything to the static path.
-        if mode == Mode::Msao {
-            let est = {
-                let d_edge = vc.dev(Site::Edge);
-                let d_cloud = vc.dev(Site::Cloud);
-                let draft = SimModel::qwen2vl_2b();
-                let full = SimModel::qwen25vl_7b();
-                let vitm = SimModel::vision_encoder();
-                let edge_q = (vc.busy_until(Site::Edge) - probe_end).max(0.0);
-                let cloud_q = (vc.busy_until(Site::Cloud) - probe_end).max(0.0);
-                let t_edge = edge_q
-                    + d_edge.encode_s(&vitm, 256.0)
-                    + d_edge.prefill_s(&draft, seq_paper)
-                    + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
-                let up = plan.bytes_up as f64 * 8.0 / (cfg.network.bandwidth_mbps * 1e6)
-                    + 0.5 * cfg.network.rtt_ms * 1e-3;
-                let t_cloud = cloud_q
-                    + up
-                    + d_cloud.encode_s(&vitm, 256.0)
-                    + d_cloud.prefill_s(&full, seq_paper)
-                    + n_out as f64 * d_cloud.decode_s(&full, seq_paper);
-                (t_edge, t_cloud)
-            };
-            if est.1 < 0.9 * est.0 {
-                return self.serve_cloud_direct(
-                    vc, item, arrival, probe_end, rec, &probe, &plan,
-                    (&text, tlen, &vis, vlen, &aud, alen),
-                    seq_paper, &kept_idx, mode,
-                );
-            }
-        }
-
-        // ---------------- dual prefill (Eq. 14 max term) ------------------
-        let draft_m = SimModel::qwen2vl_2b();
-        let full_m = SimModel::qwen25vl_7b();
-        let vit = SimModel::vision_encoder();
-
-        // Edge vision-encode cost. MSAO pays the probe's early layers on
-        // everything (already charged) and the *remaining* encoder layers
-        // only on retained content: kept frames for video, kept-patch
-        // fraction for images (§4.1: non-critical patches are pruned
-        // before the deep layers / projector). The uniform ablation
-        // encodes everything at full depth.
-        const EARLY_SHARE: f64 = 2.0 / 32.0; // probe taps layer 2 of 32
-        let enc_frames = if mode == Mode::NoModalityAware {
-            frames_encoded(item) as f64
-        } else if item.video.is_some() {
-            plan.frames_keep.len().max(1) as f64
-        } else {
-            frames_encoded(item) as f64
-        };
-        let late_scale = if mode == Mode::NoModalityAware || item.image.is_none() {
-            1.0
-        } else {
-            // Deep layers run on the retained patches only.
-            EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
-        };
-        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-        let enc_secs = vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames * late_scale;
-        let (_, enc_end) = vc.exec(
-            Site::Edge,
-            probe_end,
-            enc_secs,
-            vit.flops_prefill(enc_patches) * enc_frames * late_scale,
-        );
-        let edge_pre_secs = vc.dev(Site::Edge).prefill_s(&draft_m, seq_paper);
-        let (_, edge_pre_end) = vc.exec(
-            Site::Edge,
-            enc_end,
-            edge_pre_secs,
-            draft_m.flops_prefill(seq_paper),
-        );
-
-        // Cloud: pruned payload uplink, re-encode, full prefill.
-        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
-        rec.bytes_up += plan.bytes_up;
-        let kept_frames = plan.frames_keep.len().max(1) as f64;
-        // Cloud re-encodes only the shipped (pruned) content.
-        let cloud_share = if item.video.is_some() { kept_frames } else { (vlen.max(8) as f64 / 256.0).min(1.0) };
-        let cloud_enc = vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * cloud_share;
-        let (_, cloud_enc_end) = vc.exec(Site::Cloud, up_arr, cloud_enc, vit.flops_prefill(enc_patches) * cloud_share);
-        let cloud_pre_secs = vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
-        let (_, cloud_pre_end) = vc.exec(
-            Site::Cloud,
-            cloud_enc_end,
-            cloud_pre_secs,
-            full_m.flops_prefill(seq_paper),
-        );
-
-        // Real prefills.
-        let edge_pre = self.eng.prefill(false, &text, tlen, &vis, vlen, &aud, alen)?;
-        let cloud_pre = self.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
-        let first_token = argmax(&cloud_pre.logits);
-
-        // Memory at paper scale.
-        let edge_kv_gb = kv_bytes(&draft_m, seq_paper + n_out as f64) / 1e9;
-        let cloud_kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
-        vc.edge_mem.alloc(edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper));
-        vc.cloud_mem.alloc(cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
-
-        let prefill_done = edge_pre_end.max(cloud_pre_end);
-        rec.prefill_s = prefill_done - arrival;
-
-        // ---------------- speculative decode ------------------------------
-        let spec = speculative_decode(
-            &self.eng,
-            vc,
-            theta,
-            msao,
-            batcher,
-            SpecParams {
-                edge_kv: edge_pre.kv,
-                cloud_kv: cloud_pre.kv,
-                lens,
-                seq_paper,
-                first_token,
-                edge_ready: edge_pre_end,
-                cloud_ready: cloud_pre_end,
-                max_new: n_out,
-                n_draft: plan.n_draft,
-                adaptive: mode != Mode::NoCollabSched,
-            },
-        )?;
-
-        // Downlink the generated text to the user.
-        let (_, done) = vc.send_down(spec.t_done, 4 * spec.tokens.len() as u64 + 64, false);
-        rec.bytes_down += 4 * spec.tokens.len() as u64 + 64;
-
-        // ---------------- bookkeeping -------------------------------------
-        self.eng.free_kv(false, edge_pre.kv);
-        self.eng.free_kv(true, cloud_pre.kv);
-        vc.edge_mem.free(edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper));
-        vc.cloud_mem.free(cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
-        if mode != Mode::NoModalityAware {
-            vc.edge_mem.free(probe.probe_mem_gb * 1e9);
-        }
-
-        rec.t_done = done;
-        rec.latency_s = done - arrival;
-        rec.tokens_out = spec.tokens.len();
-        rec.accepted = spec.accepted;
-        rec.proposed = spec.proposed;
-        rec.offloads = spec.offloads;
-        rec.vis_tokens_kept = vlen;
-        rec.frames_kept = plan.frames_keep.len();
-        rec.mem_edge_gb = vc.edge_mem.peak_gb();
-        rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
-        // MSAO's cloud model is a shared multi-tenant verifier touched in
-        // short bursts; the stream's dedicated memory is the edge peak
-        // plus the cloud's marginal KV/activations.
-        rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
-        rec.flops_edge = vc.flops_edge;
-        rec.flops_cloud = vc.flops_cloud;
-
-        // ---------------- quality -----------------------------------------
-        let info = served_info(item, &probe, &plan, &kept_idx, mode, spec.cloud_fraction);
-        let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
-        rec.p_correct = quality::p_correct(cap, item, &info);
-        rec.correct = quality::sample_correct(&mut self.rng, rec.p_correct);
-        Ok(rec)
-    }
-
-    /// Cloud-direct path of the adaptive router: the *pruned* request is
-    /// shipped to the cloud and the full model both prefills and decodes
-    /// there (no edge speculation). Chosen when the real-time system
-    /// state makes the edge path slower (deep edge queue, idle cloud).
-    #[allow(clippy::too_many_arguments)]
-    fn serve_cloud_direct(
-        &mut self,
-        vc: &mut VirtualCluster,
-        item: &Item,
-        arrival: f64,
-        probe_end: f64,
-        mut rec: ExecRecord,
-        probe: &ProbeOutcome,
-        plan: &Plan,
-        inputs: (&[i32], usize, &HostTensor, usize, &HostTensor, usize),
-        seq_paper: f64,
-        kept_idx: &[i32],
-        mode: Mode,
-    ) -> Result<ExecRecord> {
-        let (text, tlen, vis, vlen, aud, alen) = inputs;
-        let c = self.eng.c.clone();
-        let cfg = self.cfg.clone();
-        let n_out = cfg.msao.max_new_tokens;
-        let full_m = SimModel::qwen25vl_7b();
-        let vit = SimModel::vision_encoder();
-
-        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
-        rec.bytes_up += plan.bytes_up;
-        let kept_frames = plan.frames_keep.len().max(1) as f64;
-        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-        let enc_mult = if item.video.is_some() {
-            kept_frames
-        } else {
-            (vlen.max(8) as f64 / 256.0).min(1.0)
-        };
-        let (_, enc_end) = vc.exec(
-            Site::Cloud,
-            up_arr,
-            vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_mult,
-            vit.flops_prefill(enc_patches) * enc_mult,
-        );
-        let (_, pre_end) = vc.exec(
-            Site::Cloud,
-            enc_end,
-            vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
-            full_m.flops_prefill(seq_paper),
-        );
-        rec.prefill_s = pre_end - arrival;
-
-        let kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
-        vc.cloud_mem.alloc(kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
-
-        let pre = self.eng.prefill(true, text, tlen, vis, vlen, aud, alen)?;
-        let mut tok = argmax(&pre.logits);
-        let mut tokens = vec![tok];
-        let mut t = pre_end;
-        let lens = (vlen, alen, tlen);
-        for j in 0..n_out - 1 {
-            let lg = self.eng.block(true, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
-            let ctx = seq_paper + j as f64;
-            let (_, end) = vc.exec(
-                Site::Cloud,
-                t,
-                vc.dev(Site::Cloud).decode_s(&full_m, ctx),
-                full_m.flops_decode(ctx),
-            );
-            t = end;
-            tok = argmax(&lg);
-            tokens.push(tok);
-            if tok == c.eos() {
-                break;
-            }
-        }
-        self.eng.free_kv(true, pre.kv);
-        vc.cloud_mem.free(kv_gb * 1e9 + activation_bytes(&full_m, seq_paper));
-        vc.edge_mem.free(probe.probe_mem_gb * 1e9);
-
-        let (_, done) = vc.send_down(t, 4 * tokens.len() as u64 + 64, false);
-        rec.bytes_down += 4 * tokens.len() as u64 + 64;
-        rec.t_done = done;
-        rec.latency_s = done - arrival;
-        rec.tokens_out = tokens.len();
-        rec.vis_tokens_kept = vlen;
-        rec.frames_kept = plan.frames_keep.len();
-        rec.flops_edge = vc.flops_edge;
-        rec.flops_cloud = vc.flops_cloud;
-        rec.mem_edge_gb = vc.edge_mem.peak_gb();
-        rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
-        rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
-
-        let info = served_info(item, probe, plan, kept_idx, mode, 1.0);
-        let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
-        rec.p_correct = quality::p_correct(cap, item, &info);
-        rec.correct = quality::sample_correct(&mut self.rng, rec.p_correct);
-        Ok(rec)
+        let mut s = Session::new(item, arrival, mode);
+        while s.step(self, vc, batcher, theta)? == StepOutcome::Pending {}
+        Ok(s.into_record())
     }
 }
 

@@ -13,6 +13,14 @@
 //! Low-confidence steps (H > theta) cut the draft block short, ship the
 //! intermediate state with the verify payload, and take the cloud's
 //! token at that position — an "offload" in the paper's terms.
+//!
+//! The loop is a resumable state machine ([`SpecSession`]): each
+//! draft→verify round is one `round()` call, and `next_time()` exposes
+//! the virtual time the next round's drafting begins. The event-driven
+//! trace scheduler advances whichever session's round is earliest, so
+//! verify uplinks from concurrent requests interleave on the link and
+//! the dynamic [`Batcher`] can coalesce them. [`speculative_decode`]
+//! keeps the original run-to-completion API for single-request callers.
 
 use anyhow::Result;
 
@@ -25,6 +33,7 @@ use super::batcher::Batcher;
 use super::engines::{argmax, entropy, Engines};
 use super::timeline::{Site, VirtualCluster};
 
+#[derive(Debug, Clone, Copy)]
 pub struct SpecParams {
     pub edge_kv: KvHandle,
     pub cloud_kv: KvHandle,
@@ -63,45 +72,131 @@ const VERIFY_UP_BYTES: u64 = 96; // tokens + positions + header
 const VERDICT_DOWN_BYTES: u64 = 64;
 const OFFLOAD_STATE_BYTES: u64 = 64 * 1024; // intermediate activations
 
-pub fn speculative_decode(
-    eng: &Engines,
-    vc: &mut VirtualCluster,
+/// Cap the planner's draft length to the verify graph's block size: the
+/// verify block carries `last` plus the drafts, so at most `N_SPEC - 1`
+/// drafts fit (and a round normally proposes at least one). Degenerate
+/// manifests with `N_SPEC <= 1` have no room for any draft — the cap is
+/// 0 and every round degrades to a pure cloud-verified correction token
+/// (the block is `[last]` alone, still within the graph shape). The
+/// seed's `clamp(1, n_spec - 1)` aborted with min > max instead.
+pub fn draft_cap(n_draft: usize, n_spec: usize) -> usize {
+    let cap = n_spec.saturating_sub(1);
+    if cap == 0 {
+        return 0;
+    }
+    n_draft.clamp(1, cap)
+}
+
+/// Post-verify threshold feedback (Alg. 1 lines 8 and 11). Exactly one
+/// acceptance-EMA update per round: a false-alarm offload round (the
+/// gate fired but every pending draft was accepted) loosens via the
+/// full-acceptance signal *instead of* — not in addition to — the
+/// regular acceptance update, so a single round never counts twice.
+pub fn theta_feedback(
     theta: &mut ThetaController,
-    _cfg: &MsaoCfg,
-    batcher: &mut Batcher,
+    low_conf: bool,
+    accepted: usize,
+    proposed: usize,
+) {
+    if low_conf && accepted == proposed {
+        // False alarm: loosen rather than decay (gate precision
+        // feedback keeps theta from collapsing, Eq. 16).
+        theta.on_verify(proposed + 1, proposed + 1);
+    } else if low_conf {
+        theta.on_offload();
+        theta.on_verify(accepted, proposed.max(1));
+    } else {
+        theta.on_verify(accepted, proposed.max(1));
+    }
+}
+
+/// Resumable speculative-decode loop: one draft→verify round per
+/// `round()` call, with the pipeline cursors (`edge_free`, `commit_t`)
+/// carried across calls so concurrent sessions can interleave rounds on
+/// the shared virtual cluster.
+#[derive(Debug)]
+pub struct SpecSession {
     p: SpecParams,
-) -> Result<SpecOutcome> {
-    let c = &eng.c;
-    let gen_off = c.gen_off();
-    let n_spec = c.n_spec();
-    let vocab = c.vocab();
-    let draft_m = SimModel::qwen2vl_2b();
-    let full_m = SimModel::qwen25vl_7b();
+    out: SpecOutcome,
+    /// Virtual time the latest verdict committed tokens.
+    commit_t: f64,
+    /// Virtual time the edge can start the next round's drafting.
+    edge_free: f64,
+    n_draft: usize,
+    done: bool,
+}
 
-    let mut out = SpecOutcome { tokens: vec![p.first_token], cloud_fraction: 1.0, ..Default::default() };
-    let mut commit_t = p.cloud_ready; // first token committed at prefill end
-    let mut edge_free = p.edge_ready.max(p.cloud_ready);
-    let mut flushed = true; // first round cannot overlap anything
+impl SpecSession {
+    pub fn new(eng: &Engines, p: SpecParams) -> Self {
+        let n_draft = draft_cap(p.n_draft, eng.c.n_spec());
+        let out = SpecOutcome {
+            tokens: vec![p.first_token],
+            cloud_fraction: 1.0,
+            ..Default::default()
+        };
+        let done = out.tokens.len() >= p.max_new;
+        SpecSession {
+            out,
+            commit_t: p.cloud_ready, // first token committed at prefill end
+            edge_free: p.edge_ready.max(p.cloud_ready),
+            n_draft,
+            done,
+            p,
+        }
+    }
 
-    // The static-scheduling ablation keeps the speculative mechanics
-    // (entropy gate, pipelining) but loses the *collaborative* parts:
-    // verify batching and adaptive routing (handled by the session).
-    let n_draft = p.n_draft.clamp(1, n_spec - 1);
+    /// Virtual time of this session's next event: the start of the next
+    /// draft block (or the final commit once the loop is done).
+    pub fn next_time(&self) -> f64 {
+        if self.done {
+            self.commit_t
+        } else {
+            self.edge_free
+        }
+    }
 
-    while out.tokens.len() < p.max_new {
-        out.rounds += 1;
-        let n = out.tokens.len(); // committed so far
-        let last = *out.tokens.last().unwrap();
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Consume the session, yielding the outcome with `t_done` set.
+    pub fn finish(mut self) -> SpecOutcome {
+        self.out.t_done = self.commit_t;
+        self.out.tokens.truncate(self.p.max_new);
+        self.out
+    }
+
+    /// Run one draft→verify round (Alg. 1 lines 4-13). No-op once done.
+    pub fn round(
+        &mut self,
+        eng: &Engines,
+        vc: &mut VirtualCluster,
+        theta: &mut ThetaController,
+        batcher: &mut Batcher,
+    ) -> Result<()> {
+        if self.done {
+            return Ok(());
+        }
+        let c = &eng.c;
+        let gen_off = c.gen_off();
+        let n_spec = c.n_spec();
+        let vocab = c.vocab();
+        let draft_m = SimModel::qwen2vl_2b();
+        let full_m = SimModel::qwen25vl_7b();
+        let p = self.p;
+
+        self.out.rounds += 1;
+        let n = self.out.tokens.len(); // committed so far
+        let last = *self.out.tokens.last().unwrap();
 
         // --- draft phase (edge) ---------------------------------------
-        let mut drafts: Vec<i32> = Vec::with_capacity(n_draft);
+        let mut drafts: Vec<i32> = Vec::with_capacity(self.n_draft);
         let mut input = last;
         // Pipelined drafting: the edge proceeds from its own cursor; only
         // a flush (rejection) synchronizes it with the verdict arrival.
-        let mut t_cursor = edge_free;
-        let _ = flushed;
+        let mut t_cursor = self.edge_free;
         let mut low_conf = false;
-        for j in 0..n_draft {
+        for j in 0..self.n_draft {
             let pos = gen_off + n - 1 + j;
             if pos + 1 >= c.s_max() {
                 break;
@@ -172,36 +267,28 @@ pub fn speculative_decode(
             }
         }
         let correction = argmax(&logits[j * vocab..(j + 1) * vocab]);
-        out.proposed += m;
-        out.accepted += j;
+        self.out.proposed += m;
+        self.out.accepted += j;
         if low_conf {
-            out.offloads += 1;
-            if j == m {
-                // False alarm: the gate fired but every pending draft was
-                // accepted — loosen rather than decay (gate precision
-                // feedback keeps theta from collapsing, Eq. 16).
-                theta.on_verify(m + 1, m + 1);
-            } else {
-                theta.on_offload();
-            }
+            self.out.offloads += 1;
         }
-        theta.on_verify(j, m.max(1));
+        theta_feedback(theta, low_conf, j, m);
 
         // Commit d_1..d_j + correction.
         let mut committed: Vec<i32> = drafts[..j].to_vec();
         committed.push(correction);
         let mut hit_eos = false;
         for t in committed {
-            out.tokens.push(t);
+            self.out.tokens.push(t);
             if t == c.eos() {
                 hit_eos = true;
                 break;
             }
-            if out.tokens.len() >= p.max_new {
+            if self.out.tokens.len() >= p.max_new {
                 break;
             }
         }
-        commit_t = v_arr;
+        self.commit_t = v_arr;
 
         // --- pipeline bookkeeping ---------------------------------------
         // The offload is asynchronous (Alg. 1 line 10): shipping the
@@ -212,20 +299,97 @@ pub fn speculative_decode(
         let all_accepted = j == m && p.adaptive;
         if all_accepted {
             // Verify hidden behind next round's drafting.
-            flushed = false;
-            edge_free = draft_end;
+            self.edge_free = draft_end;
         } else {
             // Rejection / offload / non-adaptive: edge stalls for verdict.
-            flushed = true;
-            edge_free = draft_end.max(v_arr);
+            self.edge_free = draft_end.max(v_arr);
         }
 
-        if hit_eos {
-            break;
+        if hit_eos || self.out.tokens.len() >= p.max_new {
+            self.done = true;
         }
+        Ok(())
+    }
+}
+
+/// Run the speculative loop to completion (single-request callers; the
+/// trace server interleaves rounds through [`SpecSession`] instead).
+pub fn speculative_decode(
+    eng: &Engines,
+    vc: &mut VirtualCluster,
+    theta: &mut ThetaController,
+    _cfg: &MsaoCfg,
+    batcher: &mut Batcher,
+    p: SpecParams,
+) -> Result<SpecOutcome> {
+    let mut s = SpecSession::new(eng, p);
+    while !s.is_done() {
+        s.round(eng, vc, theta, batcher)?;
+    }
+    Ok(s.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MsaoCfg;
+
+    #[test]
+    fn draft_cap_survives_nspec_one() {
+        // Regression: `n_draft.clamp(1, n_spec - 1)` panicked for
+        // N_SPEC == 1 manifests (clamp requires min <= max). The block
+        // is [last, d_1..d_m], so N_SPEC == 1 leaves room for 0 drafts
+        // — capping to 1 would overflow the verify graph instead.
+        assert_eq!(draft_cap(4, 1), 0);
+        assert_eq!(draft_cap(4, 0), 0);
+        // Normal cases unchanged.
+        assert_eq!(draft_cap(4, 8), 4);
+        assert_eq!(draft_cap(9, 8), 7);
+        assert_eq!(draft_cap(0, 8), 1);
+        assert_eq!(draft_cap(1, 2), 1);
     }
 
-    out.t_done = commit_t;
-    out.tokens.truncate(p.max_new);
-    Ok(out)
+    fn seeded_theta() -> ThetaController {
+        let calib: Vec<f64> = (0..500).map(|i| i as f64 / 499.0 * 3.0).collect();
+        let mut t = ThetaController::from_calibration(&MsaoCfg::default(), &calib);
+        for h in calib {
+            t.record_entropy(h);
+        }
+        t
+    }
+
+    #[test]
+    fn false_alarm_round_updates_theta_exactly_once() {
+        // Regression: a false-alarm offload round (low_conf, j == m) used
+        // to apply on_verify(m+1, m+1) AND on_verify(j, m), double-
+        // counting the round in the acceptance EMA.
+        let mut got = seeded_theta();
+        let mut want = seeded_theta();
+        theta_feedback(&mut got, true, 3, 3);
+        want.on_verify(4, 4); // the loosening signal, once
+        assert_eq!(got.theta.to_bits(), want.theta.to_bits());
+    }
+
+    #[test]
+    fn real_offload_round_decays_then_updates() {
+        let mut got = seeded_theta();
+        let mut want = seeded_theta();
+        theta_feedback(&mut got, true, 1, 3);
+        want.on_offload();
+        want.on_verify(1, 3);
+        assert_eq!(got.theta.to_bits(), want.theta.to_bits());
+    }
+
+    #[test]
+    fn confident_round_is_plain_acceptance_update() {
+        let mut got = seeded_theta();
+        let mut want = seeded_theta();
+        theta_feedback(&mut got, false, 2, 5);
+        want.on_verify(2, 5);
+        assert_eq!(got.theta.to_bits(), want.theta.to_bits());
+        // m == 0 guarded against a zero denominator.
+        theta_feedback(&mut got, false, 0, 0);
+        want.on_verify(0, 1);
+        assert_eq!(got.theta.to_bits(), want.theta.to_bits());
+    }
 }

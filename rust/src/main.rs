@@ -3,9 +3,10 @@
 //! Commands
 //!   info                         — print artifact + config summary
 //!   probe [--seed N]             — probe one synthetic item, print MAS
-//!   serve [--n N] [--mode M] [--bandwidth B] — serve a trace, print summary
+//!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--concurrency C]
+//!                                — serve a trace, print summary
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
-//!                                  (fig4|table1|fig5..fig9|main|all)
+//!                                  (fig4|table1|fig5..fig9|concurrency|main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap).
 
@@ -122,6 +123,7 @@ fn main() -> Result<()> {
         "serve" => {
             let mut cfg = load_config(&args)?;
             cfg.network.bandwidth_mbps = args.f64_or("bandwidth", cfg.network.bandwidth_mbps)?;
+            cfg.serve.max_inflight = args.usize_or("concurrency", cfg.serve.max_inflight)?;
             let n = args.usize_or("n", 16)?;
             let mode = args.get("mode").unwrap_or("msao").to_string();
             let mut coord = Coordinator::new(cfg)?;

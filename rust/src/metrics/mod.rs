@@ -29,7 +29,10 @@ pub struct ExecRecord {
     /// Bytes over the link.
     pub bytes_up: u64,
     pub bytes_down: u64,
-    /// Peak memory attributable to this request (paper scale, GB).
+    /// Peak device memory at this request's completion (paper scale,
+    /// GB). Cluster-level peaks: per-request footprint under sequential
+    /// FCFS, occupancy including concurrent sessions' KV under the
+    /// event-driven interleave.
     pub mem_edge_gb: f64,
     pub mem_cloud_gb: f64,
     /// Method-specific "dedicated serving memory" (Fig. 8 metric): the
@@ -75,6 +78,12 @@ pub struct Summary {
     pub probe_mean_ms: f64,
     /// System throughput: total tokens / makespan (tokens/s).
     pub throughput_tps: f64,
+    /// First arrival to last completion (s) — the serving window the
+    /// throughput figures normalize by.
+    pub makespan_s: f64,
+    /// Request throughput: completed requests / makespan (req/s). The
+    /// concurrency sweep reports this against the offered load.
+    pub req_throughput_rps: f64,
     pub tflops_per_req: f64,
     pub tflops_edge_per_req: f64,
     pub tflops_cloud_per_req: f64,
@@ -110,6 +119,8 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
         prefill_mean_s: mean(&records.iter().map(|r| r.prefill_s).collect::<Vec<_>>()),
         probe_mean_ms: 1e3 * mean(&records.iter().map(|r| r.probe_s).collect::<Vec<_>>()),
         throughput_tps: tokens as f64 / makespan.max(1e-9),
+        makespan_s: makespan,
+        req_throughput_rps: n as f64 / makespan.max(1e-9),
         tflops_per_req: mean(&records.iter().map(|r| r.total_flops() / 1e12).collect::<Vec<_>>()),
         tflops_edge_per_req: mean(&records.iter().map(|r| r.flops_edge / 1e12).collect::<Vec<_>>()),
         tflops_cloud_per_req: mean(&records.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>()),
@@ -149,6 +160,8 @@ mod tests {
         assert!((s.latency_mean_s - 2.0).abs() < 1e-12);
         // makespan = 4.0 (0 -> 4), 40 tokens.
         assert!((s.throughput_tps - 10.0).abs() < 1e-9);
+        assert!((s.makespan_s - 4.0).abs() < 1e-12);
+        assert!((s.req_throughput_rps - 0.5).abs() < 1e-12);
         assert!((s.acceptance_rate - 0.8).abs() < 1e-12);
     }
 

@@ -24,7 +24,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Total order: NaN samples sort to the ends instead of panicking the
+    // comparator mid-sort (a single NaN latency must not abort a sweep).
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, q)
 }
 
@@ -63,6 +65,16 @@ mod tests {
         assert!((percentile(&xs, 1.0) - 100.0).abs() < 1e-12);
         assert!((percentile(&xs, 0.5) - 50.5).abs() < 1e-12);
         assert!((percentile(&xs, 0.99) - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // partial_cmp(..).unwrap() used to abort here; total_cmp sorts
+        // (positive) NaN past +inf instead.
+        let xs = [1.0, f64::NAN, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!(percentile(&xs, 1.0).is_nan());
     }
 
     #[test]

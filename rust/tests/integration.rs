@@ -9,7 +9,9 @@ use msao::baselines::{serve_trace_baseline, Baseline};
 use msao::config::Config;
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
-use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::coordinator::{
+    msao_testbed, serve_trace, serve_trace_concurrent, Batcher, Coordinator, Mode,
+};
 use msao::metrics::summarize;
 use msao::sparsity::Modality;
 use msao::workload::{Benchmark, Generator};
@@ -186,6 +188,81 @@ fn speculative_tokens_match_cloud_greedy_semantics() {
     assert!(rec.proposed > 0 && rec.accepted <= rec.proposed);
     assert!(rec.mem_edge_gb > 5.0); // weights resident at paper scale
     let _ = eng_c;
+}
+
+#[test]
+fn scheduler_concurrency_one_reproduces_sequential_fcfs() {
+    // The event-driven scheduler at concurrency 1 must reproduce the
+    // seed's run-to-completion FCFS loop bit for bit: same tokens, same
+    // virtual times, same quality, on an identically seeded testbed.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let mut gen = Generator::new(31);
+    let n = 6;
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals = gen.arrivals(n, 1.3);
+    let sched = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 5, 1).unwrap();
+
+    // Seed FCFS reference: one request to completion at a time, sharing
+    // testbed, batcher and theta exactly like the seed serve_trace did.
+    let cfg = c.cfg.clone();
+    let mut vc = msao_testbed(&cfg, 5);
+    let mut batcher = Batcher::new(cfg.serve.batch_wait_ms, cfg.serve.verify_batch, true);
+    let mut theta = c.theta();
+    for (i, (item, &arr)) in items.iter().zip(&arrivals).enumerate() {
+        let rec = c.serve(&mut vc, &mut batcher, &mut theta, item, arr, Mode::Msao).unwrap();
+        let s = &sched.records[i];
+        assert_eq!(rec.tokens_out, s.tokens_out, "req {i}: tokens");
+        assert_eq!(rec.accepted, s.accepted, "req {i}: accepted");
+        assert_eq!(rec.proposed, s.proposed, "req {i}: proposed");
+        assert_eq!(rec.offloads, s.offloads, "req {i}: offloads");
+        assert_eq!(rec.bytes_up, s.bytes_up, "req {i}: bytes_up");
+        assert_eq!(rec.t_done.to_bits(), s.t_done.to_bits(), "req {i}: t_done");
+        assert_eq!(rec.latency_s.to_bits(), s.latency_s.to_bits(), "req {i}: latency");
+        assert_eq!(rec.prefill_s.to_bits(), s.prefill_s.to_bits(), "req {i}: prefill");
+        assert_eq!(rec.p_correct.to_bits(), s.p_correct.to_bits(), "req {i}: p_correct");
+    }
+}
+
+#[test]
+fn cross_request_verify_batching_under_concurrent_load() {
+    // With >= 8 sessions decoding at once, verify uplinks from different
+    // requests interleave on the link and the dynamic batcher must
+    // coalesce at least some of them — impossible for the seed's
+    // run-to-completion loop, whose rounds are a full draft block apart.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let mut gen = Generator::new(99);
+    let n = 12;
+    let items = gen.items(Benchmark::Vqa, n);
+    // Burst arrivals: everything lands within ~100 ms.
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+    let res = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 7, 8).unwrap();
+    assert!(
+        res.batch_amortization > 0.0,
+        "no cross-request piggyback (amortization {})",
+        res.batch_amortization
+    );
+    assert!(res.records.iter().all(|r| r.tokens_out > 0));
+}
+
+#[test]
+fn concurrent_poisson_trace_completes_every_session() {
+    // No session starves under the event-driven interleave: every
+    // request of a Poisson trace finishes with sane times and tokens.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let mut gen = Generator::new(17);
+    let n = 16;
+    let items = gen.items(Benchmark::MmBench, n);
+    let arrivals = gen.arrivals(n, 4.0);
+    let res = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 11, 8).unwrap();
+    assert_eq!(res.records.len(), n);
+    for (i, r) in res.records.iter().enumerate() {
+        assert!(r.tokens_out > 0, "req {i} produced no tokens");
+        assert!(r.t_done > r.t_arrival, "req {i}: non-causal completion");
+        assert!(r.latency_s.is_finite() && r.latency_s > 0.0, "req {i}: latency");
+    }
 }
 
 #[test]
