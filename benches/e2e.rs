@@ -1,12 +1,12 @@
 //! Bench: end-to-end serving per method — the rows behind Figs. 5-8 at
-//! 300 Mbps, VQAv2-like workload. Reports both real wall-clock of the
-//! whole stack and the virtual-testbed summary.
+//! 300 Mbps, VQAv2-like workload, every method through the unified
+//! `serve(coord, &TraceSpec)` entrypoint. Reports both real wall-clock
+//! of the whole stack and the virtual-testbed summary.
 
 use std::time::Instant;
 
-use msao::baselines::{serve_trace_baseline, Baseline};
 use msao::config::Config;
-use msao::coordinator::{serve_trace_concurrent, Coordinator, Mode};
+use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 use msao::metrics::summarize;
 use msao::workload::{Benchmark, Generator};
 
@@ -18,22 +18,20 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:>10} {:>12} {:>12} {:>12}",
         "method", "wall_s", "lat_mean_s", "tput_tok_s", "tflops/req"
     );
-    for (name, which) in [
-        ("MSAO", None),
-        ("Cloud-only", Some(Baseline::CloudOnly)),
-        ("Edge-only", Some(Baseline::EdgeOnly)),
-        ("PerLLM", Some(Baseline::PerLlm)),
+    for (name, policy) in [
+        ("MSAO", PolicyKind::Msao(Mode::Msao)),
+        ("Cloud-only", PolicyKind::CloudOnly),
+        ("Edge-only", PolicyKind::EdgeOnly),
+        ("PerLLM", PolicyKind::PerLlm),
     ] {
         let mut gen = Generator::new(42);
         let items = gen.items(Benchmark::Vqa, n);
         let arrivals = gen.arrivals(n, 1.3);
+        // Concurrency 1: scheduling-equivalent method comparison; the
+        // scaling section below varies the cap.
+        let spec = TraceSpec::new(policy).trace(items, arrivals).seed(1).concurrency(1);
         let t0 = Instant::now();
-        let res = match which {
-            // Concurrency 1: scheduling-equivalent to the sequential
-            // baselines; the scaling section below varies the cap.
-            None => serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, 1)?,
-            Some(b) => serve_trace_baseline(&mut coord, b, &items, &arrivals, 1)?,
-        };
+        let res = serve(&mut coord, &spec)?;
         let wall = t0.elapsed().as_secs_f64();
         let s = summarize(&res.records);
         println!(
@@ -42,24 +40,34 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // Scheduler scaling: MSAO at increasing concurrency caps (same trace).
-    println!("== MSAO concurrency scaling ({n} reqs, 4 req/s offered) ==");
-    println!(
-        "{:<12} {:>10} {:>12} {:>12} {:>12}",
-        "concurrency", "wall_s", "lat_p99_s", "tput_tok_s", "amort"
-    );
-    for conc in [1usize, 2, 4, 8] {
-        let mut gen = Generator::new(42);
-        let items = gen.items(Benchmark::Vqa, n);
-        let arrivals = gen.arrivals(n, 4.0);
-        let t0 = Instant::now();
-        let res = serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, conc)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let s = summarize(&res.records);
+    // Scheduler scaling: each method at increasing concurrency caps
+    // (same trace) — baselines are event-driven sessions too.
+    for (name, policy) in [
+        ("MSAO", PolicyKind::Msao(Mode::Msao)),
+        ("Cloud-only", PolicyKind::CloudOnly),
+    ] {
+        println!("== {name} concurrency scaling ({n} reqs, 4 req/s offered) ==");
         println!(
-            "{:<12} {:>10.2} {:>12.3} {:>12.1} {:>12.2}",
-            conc, wall, s.latency_p99_s, s.throughput_tps, res.batch_amortization
+            "{:<12} {:>10} {:>12} {:>12} {:>12}",
+            "concurrency", "wall_s", "lat_p99_s", "tput_tok_s", "amort"
         );
+        for conc in [1usize, 2, 4, 8] {
+            let mut gen = Generator::new(42);
+            let items = gen.items(Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, 4.0);
+            let spec = TraceSpec::new(policy.clone())
+                .trace(items, arrivals)
+                .seed(1)
+                .concurrency(conc);
+            let t0 = Instant::now();
+            let res = serve(&mut coord, &spec)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let s = summarize(&res.records);
+            println!(
+                "{:<12} {:>10.2} {:>12.3} {:>12.1} {:>12.2}",
+                conc, wall, s.latency_p99_s, s.throughput_tps, res.batch_amortization
+            );
+        }
     }
     Ok(())
 }

@@ -1,13 +1,14 @@
 //! Ablation study (Fig. 9): full MSAO vs "w/o modality-aware" (uniform
 //! offloading, no MAS pruning) vs "w/o collaborative scheduling" (static
 //! task distribution: no BO, single-token rounds, no overlap/batching).
+//! Each variant is just a policy in the unified `serve` API.
 //!
 //!     cargo run --release --example ablation [-- <n_requests>]
 
 use anyhow::Result;
 
 use msao::config::Config;
-use msao::coordinator::{serve_trace_concurrent, Coordinator, Mode};
+use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 use msao::metrics::summarize;
 use msao::util::table::{f1, f2, f3, Table};
 use msao::workload::{Benchmark, Generator};
@@ -30,7 +31,11 @@ fn main() -> Result<()> {
             let arrivals = gen.arrivals(n, 1.3);
             // Concurrency 1 keeps the variant comparison (and its
             // memory column) scheduling-equivalent.
-            let res = serve_trace_concurrent(&mut coord, &items, &arrivals, mode, 77, 1)?;
+            let spec = TraceSpec::new(PolicyKind::Msao(mode))
+                .trace(items, arrivals)
+                .seed(77)
+                .concurrency(1);
+            let res = serve(&mut coord, &spec)?;
             let s = summarize(&res.records);
             table.row(vec![
                 benchmark.name().into(),

@@ -1,5 +1,8 @@
 //! Bandwidth sensitivity: MSAO vs baselines across the paper's
-//! 200 / 300 / 400 Mbps levels (the x-axis of Figs. 5-8).
+//! 200 / 300 / 400 Mbps levels (the x-axis of Figs. 5-8). Every cell
+//! runs through the unified `serve(coord, &TraceSpec)` entrypoint (via
+//! `experiments::run_cell`), so all four methods are charged by the
+//! same serving machinery.
 //!
 //!     cargo run --release --example bandwidth_sweep [-- <n_requests>]
 

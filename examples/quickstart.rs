@@ -10,7 +10,7 @@ use anyhow::Result;
 
 use msao::config::Config;
 use msao::coordinator::mas::run_probe;
-use msao::coordinator::{Batcher, Coordinator, Mode, VirtualCluster};
+use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 use msao::workload::Generator;
 
 fn main() -> Result<()> {
@@ -47,11 +47,13 @@ fn main() -> Result<()> {
         println!("  spatial pruning kept {} / 256 visual tokens", p.count);
     }
 
-    // Stage 2+3: plan + serve through the full coordinator.
-    let mut vc = VirtualCluster::new(&coord.cfg, 1);
-    let mut batcher = Batcher::new(2.0, 4, true);
-    let mut theta = coord.theta();
-    let rec = coord.serve(&mut vc, &mut batcher, &mut theta, &item, 0.0, Mode::Msao)?;
+    // Stage 2+3: plan + serve through the unified policy API — a
+    // one-request trace under the MSAO policy.
+    let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+        .trace(vec![item.clone()], vec![0.0])
+        .seed(1);
+    let res = serve(&mut coord, &spec)?;
+    let rec = &res.records[0];
 
     println!("\nserved:");
     println!("  latency        {:.3} s (prefill {:.3} s)", rec.latency_s, rec.prefill_s);

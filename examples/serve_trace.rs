@@ -2,15 +2,15 @@
 //! batched request trace through the full three-layer stack — AOT HLO
 //! artifacts on PJRT, MAS probing, BO planning, speculative edge/cloud
 //! decode, verify batching — and report latency/throughput per method.
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! Every method goes through the unified `serve(coord, &TraceSpec)`
+//! entrypoint; the run is recorded in EXPERIMENTS.md §End-to-end.
 //!
 //!     cargo run --release --example serve_trace [-- <n_requests>]
 
 use anyhow::Result;
 
-use msao::baselines::{serve_trace_baseline, Baseline};
 use msao::config::Config;
-use msao::coordinator::{serve_trace_concurrent, Coordinator, Mode};
+use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 use msao::metrics::summarize;
 use msao::util::table::{f1, f2, f3, Table};
 use msao::workload::{Benchmark, Generator};
@@ -29,22 +29,20 @@ fn main() -> Result<()> {
         ],
     );
     for benchmark in [Benchmark::Vqa, Benchmark::MmBench] {
-        for (name, which) in [
-            ("MSAO", None),
-            ("Cloud-only", Some(Baseline::CloudOnly)),
-            ("Edge-only", Some(Baseline::EdgeOnly)),
-            ("PerLLM", Some(Baseline::PerLlm)),
+        for (name, policy) in [
+            ("MSAO", PolicyKind::Msao(Mode::Msao)),
+            ("Cloud-only", PolicyKind::CloudOnly),
+            ("Edge-only", PolicyKind::EdgeOnly),
+            ("PerLLM", PolicyKind::PerLlm),
         ] {
             let mut gen = Generator::new(42);
             let items = gen.items(benchmark, n);
             let arrivals = gen.arrivals(n, 1.3);
-            let res = match which {
-                // Concurrency 1 keeps the method comparison
-                // scheduling-equivalent (baselines are sequential);
-                // the sweep below shows what interleaving adds.
-                None => serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, 1)?,
-                Some(b) => serve_trace_baseline(&mut coord, b, &items, &arrivals, 1)?,
-            };
+            // Concurrency 1 keeps the method comparison
+            // scheduling-equivalent (sequential run-to-completion);
+            // the sweeps below show what interleaving adds.
+            let spec = TraceSpec::new(policy).trace(items, arrivals).seed(1).concurrency(1);
+            let res = serve(&mut coord, &spec)?;
             let s = summarize(&res.records);
             table.row(vec![
                 benchmark.name().into(),
@@ -62,29 +60,76 @@ fn main() -> Result<()> {
     table.print();
 
     // Event-driven scheduler: what interleaving buys over sequential
-    // FCFS (concurrency 1) as the offered load rises.
+    // FCFS (concurrency 1) as the offered load rises — for every method,
+    // now that baselines are schedulable sessions too.
     let mut sweep = Table::new(
-        "MSAO concurrency sweep (VQA)",
-        &["rate_rps", "conc", "tput_tok_s", "lat_p50_s", "lat_p99_s", "amort"],
+        "concurrency sweep (VQA)",
+        &["method", "rate_rps", "conc", "tput_tok_s", "lat_p50_s", "lat_p99_s", "amort"],
     );
-    for rate in [1.3, 4.0] {
-        for conc in [1usize, 4, 8] {
-            let mut gen = Generator::new(42);
-            let items = gen.items(Benchmark::Vqa, n);
-            let arrivals = gen.arrivals(n, rate);
-            let res = serve_trace_concurrent(&mut coord, &items, &arrivals, Mode::Msao, 1, conc)?;
-            let s = summarize(&res.records);
-            sweep.row(vec![
-                f1(rate),
-                format!("{conc}"),
-                f1(s.throughput_tps),
-                f3(s.latency_p50_s),
-                f3(s.latency_p99_s),
-                f2(res.batch_amortization),
-            ]);
+    for (name, policy) in [
+        ("MSAO", PolicyKind::Msao(Mode::Msao)),
+        ("Cloud-only", PolicyKind::CloudOnly),
+    ] {
+        for rate in [1.3, 4.0] {
+            for conc in [1usize, 4, 8] {
+                let mut gen = Generator::new(42);
+                let items = gen.items(Benchmark::Vqa, n);
+                let arrivals = gen.arrivals(n, rate);
+                let spec = TraceSpec::new(policy.clone())
+                    .trace(items, arrivals)
+                    .seed(1)
+                    .concurrency(conc);
+                let res = serve(&mut coord, &spec)?;
+                let s = summarize(&res.records);
+                sweep.row(vec![
+                    name.into(),
+                    f1(rate),
+                    format!("{conc}"),
+                    f1(s.throughput_tps),
+                    f3(s.latency_p50_s),
+                    f3(s.latency_p99_s),
+                    f2(res.batch_amortization),
+                ]);
+            }
         }
     }
     sweep.print();
+
+    // Mixed multi-tenant trace: per-request policies on one shared
+    // cluster — heterogeneous tenants queue against each other.
+    let mut mixed = Table::new(
+        "mixed-policy trace (VQA, 4 req/s, conc 8)",
+        &["tenant", "lat_mean_s", "lat_p99_s", "tput_tok_s"],
+    );
+    let tenants = PolicyKind::TENANT_MIX;
+    let mut gen = Generator::new(42);
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals = gen.arrivals(n, 4.0);
+    let spec = TraceSpec::new(PolicyKind::PerRequest(PolicyKind::round_robin(n)))
+        .trace(items, arrivals)
+        .seed(1)
+        .concurrency(8);
+    let res = serve(&mut coord, &spec)?;
+    for (mi, tenant) in tenants.iter().enumerate() {
+        let recs: Vec<_> = res
+            .records
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % tenants.len() == mi)
+            .map(|(_, r)| r.clone())
+            .collect();
+        if recs.is_empty() {
+            continue; // n < 4 leaves later tenants without requests
+        }
+        let s = summarize(&recs);
+        mixed.row(vec![
+            tenant.name().into(),
+            f3(s.latency_mean_s),
+            f3(s.latency_p99_s),
+            f1(s.throughput_tps),
+        ]);
+    }
+    mixed.print();
     println!("(tokens are generated by the real draft/full models through PJRT;");
     println!(" timing is the calibrated A100/RTX3090/link virtual testbed)");
     Ok(())

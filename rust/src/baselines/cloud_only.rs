@@ -2,6 +2,11 @@
 //! model does prefill and all decoding; tokens stream back at the end.
 //! Suffers exactly what the paper describes: heavy uplink transmission
 //! and serialized cloud inference under load.
+//!
+//! [`start`] is the session decomposition (arrival → decode steps →
+//! downlink) driven by the event scheduler; [`serve`] is the
+//! pre-refactor run-to-completion loop, kept verbatim as the sequential
+//! reference the golden equivalence tests pin [`start`] against.
 
 use anyhow::Result;
 
@@ -14,6 +19,82 @@ use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
 use crate::workload::Item;
 
+use super::{BPhase, DecodeState, FinishState};
+
+/// Session start phase, fired at the arrival time: raw payload uplink,
+/// cloud encode + prefill at full fidelity. Transitions to per-token
+/// cloud decode events. `cloud_frac` is threaded through so PerLLM's
+/// cloud-landing requests carry their quality provenance.
+pub(crate) fn start(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    rec: &mut ExecRecord,
+    cloud_frac: f64,
+) -> Result<BPhase> {
+    let n_out = coord.cfg.msao.max_new_tokens;
+
+    // Raw payload uplink.
+    let bytes = super::full_payload_bytes(item);
+    let (_, up_arr) = vc.send_up(arrival, bytes, false);
+    rec.bytes_up = bytes;
+
+    // Cloud encodes + prefills at full fidelity.
+    let inp = super::full_inputs(coord, item, true)?;
+    let vit = SimModel::vision_encoder();
+    let full_m = SimModel::qwen25vl_7b();
+    let enc_frames = inp.frames.max(1) as f64;
+    let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+    let (_, enc_end) = vc.exec(
+        Site::Cloud,
+        up_arr,
+        vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_frames,
+        vit.flops_prefill(enc_patches) * enc_frames,
+    );
+    let (_, pre_end) = vc.exec(
+        Site::Cloud,
+        enc_end,
+        vc.dev(Site::Cloud).prefill_s(&full_m, inp.seq_paper),
+        full_m.flops_prefill(inp.seq_paper),
+    );
+    rec.prefill_s = pre_end - arrival;
+
+    let kv_gb = kv_bytes(&full_m, inp.seq_paper + n_out as f64) / 1e9;
+    let mem_bytes = kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper);
+    vc.cloud_mem.alloc(mem_bytes);
+
+    // Real prefill on the cloud engine; decode continues step-wise.
+    let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let tok = argmax(&pre.logits);
+    if n_out <= 1 {
+        coord.eng.free_kv(true, pre.kv);
+        vc.cloud_mem.free(mem_bytes);
+        return Ok(BPhase::Finish(FinishState {
+            t_done: pre_end,
+            tokens_out: 1,
+            downlink: true,
+            cloud_frac,
+        }));
+    }
+    Ok(BPhase::Decode(Box::new(DecodeState {
+        cloud: true,
+        kv: pre.kv,
+        lens: (inp.vlen, inp.alen, inp.tlen),
+        seq_paper: inp.seq_paper,
+        tok,
+        tokens_out: 1,
+        t: pre_end,
+        j: 0,
+        n_out,
+        mem_bytes,
+        cloud_frac,
+    })))
+}
+
+/// Sequential run-to-completion reference (the seed's loop body) — used
+/// only by the golden equivalence tests; production serving goes through
+/// the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,

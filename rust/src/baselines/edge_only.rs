@@ -2,6 +2,11 @@
 //! locally. No network, full data locality — but capability-limited
 //! (Table 1: 58-64% accuracy) and the edge device is the sole compute
 //! resource, so complex multimodal prompts produce latency tails.
+//!
+//! [`start`] is the session decomposition (arrival → decode steps →
+//! finish) driven by the event scheduler; [`serve`] is the pre-refactor
+//! run-to-completion loop, kept verbatim as the sequential reference the
+//! golden equivalence tests pin [`start`] against.
 
 use anyhow::Result;
 
@@ -14,6 +19,76 @@ use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
 use crate::workload::Item;
 
+use super::{BPhase, DecodeState, FinishState};
+
+/// Session start phase, fired at the arrival time: edge encode + draft
+/// prefill at full fidelity (no network). Transitions to per-token edge
+/// decode events. `cloud_frac` is threaded through so PerLLM's
+/// edge-landing requests carry their quality provenance.
+pub(crate) fn start(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    rec: &mut ExecRecord,
+    cloud_frac: f64,
+) -> Result<BPhase> {
+    let n_out = coord.cfg.msao.max_new_tokens;
+
+    let inp = super::full_inputs(coord, item, false)?;
+    let vit = SimModel::vision_encoder();
+    let draft_m = SimModel::qwen2vl_2b();
+    let enc_frames = inp.frames.max(1) as f64;
+    let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+    let (_, enc_end) = vc.exec(
+        Site::Edge,
+        arrival,
+        vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames,
+        vit.flops_prefill(enc_patches) * enc_frames,
+    );
+    let (_, pre_end) = vc.exec(
+        Site::Edge,
+        enc_end,
+        vc.dev(Site::Edge).prefill_s(&draft_m, inp.seq_paper),
+        draft_m.flops_prefill(inp.seq_paper),
+    );
+    rec.prefill_s = pre_end - arrival;
+
+    let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
+    let mem_bytes = kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper);
+    vc.edge_mem.alloc(mem_bytes);
+
+    let pre =
+        coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let tok = argmax(&pre.logits);
+    if n_out <= 1 {
+        coord.eng.free_kv(false, pre.kv);
+        vc.edge_mem.free(mem_bytes);
+        return Ok(BPhase::Finish(FinishState {
+            t_done: pre_end,
+            tokens_out: 1,
+            downlink: false,
+            cloud_frac,
+        }));
+    }
+    Ok(BPhase::Decode(Box::new(DecodeState {
+        cloud: false,
+        kv: pre.kv,
+        lens: (inp.vlen, inp.alen, inp.tlen),
+        seq_paper: inp.seq_paper,
+        tok,
+        tokens_out: 1,
+        t: pre_end,
+        j: 0,
+        n_out,
+        mem_bytes,
+        cloud_frac,
+    })))
+}
+
+/// Sequential run-to-completion reference (the seed's loop body) — used
+/// only by the golden equivalence tests; production serving goes through
+/// the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -47,7 +122,8 @@ pub fn serve(
     let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
     vc.edge_mem.alloc(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
 
-    let pre = coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let pre =
+        coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let mut tok = argmax(&pre.logits);
     let mut tokens = vec![tok];
     let mut t = pre_end;

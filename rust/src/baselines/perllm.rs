@@ -8,6 +8,12 @@
 //! modality pruning or speculative overlap, so it ships full payloads
 //! and pays per-token hops whenever it splits mid-model.
 
+//! [`start`] is the session decomposition (partition decision at the
+//! arrival event, then the chosen path's phases) driven by the event
+//! scheduler; [`serve`] is the pre-refactor run-to-completion loop, kept
+//! verbatim as the sequential reference the golden equivalence tests pin
+//! [`start`] against.
+
 use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
@@ -18,6 +24,8 @@ use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
 use crate::workload::Item;
+
+use super::{BPhase, FinishState, SplitState};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Partition {
@@ -79,6 +87,199 @@ fn estimate(
     }
 }
 
+/// PerLLM's personalized scheduler trades quality against latency: the
+/// small edge model pays a latency-equivalent quality penalty, so
+/// requests run on the cloud unless the edge is decisively faster (e.g.
+/// under cloud congestion). This yields the edge/cloud request mix
+/// behind PerLLM's Table 1 accuracy (between the two extremes).
+const EDGE_QUALITY_PENALTY_S: f64 = 0.25;
+
+/// Pick the partition minimizing estimated completion time given the
+/// *live* device/link occupancy at the arrival event.
+fn pick_partition(
+    vc: &VirtualCluster,
+    item: &Item,
+    n_out: usize,
+    bandwidth_mbps: f64,
+    rtt_s: f64,
+    arrival: f64,
+) -> Partition {
+    // Rough sequence estimate for the partition decision.
+    let seq_est = if item.video.is_some() { 6.0 * 128.0 + 32.0 } else { 192.0 * 4.0 + 32.0 };
+    let mut best = Partition::AllEdge;
+    let mut best_t = f64::INFINITY;
+    for part in [Partition::AllEdge, Partition::AllCloud, Partition::Split] {
+        let mut t = estimate(vc, item, seq_est, n_out, bandwidth_mbps, rtt_s, part, arrival);
+        if part == Partition::AllEdge {
+            t += EDGE_QUALITY_PENALTY_S;
+        }
+        if t < best_t {
+            best_t = t;
+            best = part;
+        }
+    }
+    best
+}
+
+/// Session start phase, fired at the arrival time: the partition
+/// decision reads the cluster's live queue depths, then the request
+/// enters the chosen path's phases (delegating to the edge-only /
+/// cloud-only session starts, or the mid-split below).
+pub(crate) fn start(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    rec: &mut ExecRecord,
+) -> Result<BPhase> {
+    let n_out = coord.cfg.msao.max_new_tokens;
+    let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
+    let rtt_s = coord.cfg.network.rtt_ms * 1e-3;
+    match pick_partition(vc, item, n_out, bandwidth_mbps, rtt_s, arrival) {
+        Partition::AllEdge => super::edge_only::start(coord, vc, item, arrival, rec, 0.0),
+        Partition::AllCloud => super::cloud_only::start(coord, vc, item, arrival, rec, 1.0),
+        Partition::Split => split_start(coord, vc, item, arrival, rec),
+    }
+}
+
+/// The per-site half of the layer-split full model (the session path's
+/// single source of the 50/50 split; the verbatim golden-reference
+/// `serve_split` keeps its own copy by design).
+fn half_model() -> SimModel {
+    let mut half = SimModel::qwen25vl_7b();
+    half.params *= 0.5;
+    half.layers *= 0.5;
+    half.kv_bytes_per_token *= 0.5;
+    half
+}
+
+/// Mid-split prefill: edge encode + front-half prefill, hidden-state
+/// uplink, cloud back-half prefill. Transitions to per-token hop events.
+fn split_start(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    rec: &mut ExecRecord,
+) -> Result<BPhase> {
+    let n_out = coord.cfg.msao.max_new_tokens;
+
+    let inp = super::full_inputs(coord, item, false)?;
+    let vit = SimModel::vision_encoder();
+    let full_m = SimModel::qwen25vl_7b();
+    let half = half_model();
+
+    let enc_frames = inp.frames.max(1) as f64;
+    let enc_patches2 = if item.video.is_some() { 256.0 } else { 1024.0 };
+    let (_, enc_end) = vc.exec(
+        Site::Edge,
+        arrival,
+        vc.dev(Site::Edge).encode_s(&vit, enc_patches2) * enc_frames,
+        vit.flops_prefill(enc_patches2) * enc_frames,
+    );
+    let (_, front_end) = vc.exec(
+        Site::Edge,
+        enc_end,
+        vc.dev(Site::Edge).prefill_s(&half, inp.seq_paper),
+        half.flops_prefill(inp.seq_paper),
+    );
+    let hidden_bytes = (inp.seq_paper * full_m.d * 2.0) as u64;
+    let (_, up_arr) = vc.send_up(front_end, hidden_bytes, false);
+    rec.bytes_up += hidden_bytes;
+    let (_, pre_end) = vc.exec(
+        Site::Cloud,
+        up_arr,
+        vc.dev(Site::Cloud).prefill_s(&half, inp.seq_paper),
+        half.flops_prefill(inp.seq_paper),
+    );
+    rec.prefill_s = pre_end - arrival;
+
+    let kv_total = kv_bytes(&full_m, inp.seq_paper + n_out as f64);
+    let mem_half = 0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper);
+    vc.edge_mem.alloc(mem_half);
+    vc.cloud_mem.alloc(mem_half);
+
+    // Real tokens: unsplit full model on the cloud engine (identical math).
+    let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let tok = argmax(&pre.logits);
+    if n_out <= 1 {
+        coord.eng.free_kv(true, pre.kv);
+        vc.edge_mem.free(mem_half);
+        vc.cloud_mem.free(mem_half);
+        return Ok(BPhase::Finish(FinishState {
+            t_done: pre_end,
+            tokens_out: 1,
+            downlink: false,
+            cloud_frac: 1.0,
+        }));
+    }
+    Ok(BPhase::Split(Box::new(SplitState {
+        kv: pre.kv,
+        lens: (inp.vlen, inp.alen, inp.tlen),
+        seq_paper: inp.seq_paper,
+        tok,
+        tokens_out: 1,
+        t: pre_end,
+        j: 0,
+        n_out,
+        mem_half,
+    })))
+}
+
+/// One mid-split decode step: edge front half, activation hop up, cloud
+/// back half, token hop down (the PerLLM fallback when both devices are
+/// loaded).
+pub(crate) fn split_step(
+    coord: &mut Coordinator,
+    vc: &mut VirtualCluster,
+    rec: &mut ExecRecord,
+    mut s: Box<SplitState>,
+) -> Result<BPhase> {
+    let gen_off = coord.eng.c.gen_off();
+    let eos = coord.eng.c.eos();
+    let full_m = SimModel::qwen25vl_7b();
+    let half = half_model();
+    let act_bytes = (full_m.d * 2.0) as u64;
+
+    let lg = coord.eng.block(true, false, s.kv, gen_off + s.j, &[s.tok], s.lens)?;
+    let ctx = s.seq_paper + s.j as f64;
+    let (_, fe) = vc.exec(
+        Site::Edge,
+        s.t,
+        vc.dev(Site::Edge).decode_s(&half, ctx),
+        half.flops_decode(ctx),
+    );
+    let (_, ua) = vc.send_up(fe, act_bytes, false);
+    rec.bytes_up += act_bytes;
+    let (_, ce) = vc.exec(
+        Site::Cloud,
+        ua,
+        vc.dev(Site::Cloud).decode_s(&half, ctx),
+        half.flops_decode(ctx),
+    );
+    let (_, da) = vc.send_down(ce, 16, false);
+    rec.bytes_down += 16;
+    s.t = da;
+    s.tok = argmax(&lg);
+    s.tokens_out += 1;
+    s.j += 1;
+    if s.tok == eos || s.j >= s.n_out - 1 {
+        coord.eng.free_kv(true, s.kv);
+        vc.edge_mem.free(s.mem_half);
+        vc.cloud_mem.free(s.mem_half);
+        return Ok(BPhase::Finish(FinishState {
+            t_done: s.t,
+            tokens_out: s.tokens_out,
+            downlink: false,
+            cloud_frac: 1.0,
+        }));
+    }
+    Ok(BPhase::Split(s))
+}
+
+/// Sequential run-to-completion reference (the seed's loop body) — used
+/// only by the golden equivalence tests; production serving goes through
+/// the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -89,28 +290,7 @@ pub fn serve(
     let n_out = cfg.msao.max_new_tokens;
     let rtt_s = cfg.network.rtt_ms * 1e-3;
 
-    // Rough sequence estimate for the partition decision.
-    let seq_est = if item.video.is_some() { 6.0 * 128.0 + 32.0 } else { 192.0 * 4.0 + 32.0 };
-    // PerLLM's personalized scheduler trades quality against latency:
-    // the small edge model pays a latency-equivalent quality penalty, so
-    // requests run on the cloud unless the edge is decisively faster
-    // (e.g. under cloud congestion). This yields the edge/cloud request
-    // mix behind PerLLM's Table 1 accuracy (between the two extremes).
-    const EDGE_QUALITY_PENALTY_S: f64 = 0.25;
-    let mut best = Partition::AllEdge;
-    let mut best_t = f64::INFINITY;
-    for part in [Partition::AllEdge, Partition::AllCloud, Partition::Split] {
-        let mut t = estimate(
-            vc, item, seq_est, n_out, cfg.network.bandwidth_mbps, rtt_s, part, arrival,
-        );
-        if part == Partition::AllEdge {
-            t += EDGE_QUALITY_PENALTY_S;
-        }
-        if t < best_t {
-            best_t = t;
-            best = part;
-        }
-    }
+    let best = pick_partition(vc, item, n_out, cfg.network.bandwidth_mbps, rtt_s, arrival);
 
     let mut rec = match best {
         Partition::AllEdge => {

@@ -1,0 +1,169 @@
+//! Command-line parsing for the `msao` launcher, kept in the library so
+//! the flag → [`TraceSpec`] mapping is unit-testable (offline
+//! environment: no clap; parsing is hand-rolled).
+//!
+//! `msao serve` semantics:
+//! * `--mode` picks the serving policy (`msao`, the Fig. 9 ablations
+//!   `no-modality` / `no-collab`, the baselines `cloud` / `edge` /
+//!   `perllm`, or `mixed` for a round-robin multi-tenant trace).
+//! * `--seed` seeds the workload generator AND the virtual testbed —
+//!   one run, one seed (the testbed seed used to be silently pinned
+//!   to 1).
+//! * `--concurrency` is honored by every mode; without it, the policy's
+//!   default applies (sequential for `no-collab`, `serve.max_inflight`
+//!   otherwise).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Mode, PolicyKind, TraceSpec};
+use crate::workload::{Benchmark, Generator};
+
+pub struct Args {
+    pub cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(mut it: impl Iterator<Item = String>) -> Result<Args> {
+        let cmd = it.next().unwrap_or_else(|| "info".to_string());
+        let mut flags = HashMap::new();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it.next().with_context(|| format!("missing value for --{name}"))?;
+                flags.insert(name.to_string(), val);
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, k: &str, d: usize) -> Result<usize> {
+        Ok(match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("parsing --{k} {v:?}"))?,
+            None => d,
+        })
+    }
+
+    pub fn f64_or(&self, k: &str, d: f64) -> Result<f64> {
+        Ok(match self.get(k) {
+            Some(v) => v.parse().with_context(|| format!("parsing --{k} {v:?}"))?,
+            None => d,
+        })
+    }
+}
+
+/// Serving policy for a `--mode` value. `mixed` is expanded by
+/// [`serve_spec`], which knows the trace length.
+pub fn policy_for_mode(mode: &str) -> Result<PolicyKind> {
+    Ok(match mode {
+        "msao" => PolicyKind::Msao(Mode::Msao),
+        "no-modality" => PolicyKind::Msao(Mode::NoModalityAware),
+        "no-collab" => PolicyKind::Msao(Mode::NoCollabSched),
+        "cloud" => PolicyKind::CloudOnly,
+        "edge" => PolicyKind::EdgeOnly,
+        "perllm" => PolicyKind::PerLlm,
+        other => bail!(
+            "unknown mode {other:?} (try msao|no-modality|no-collab|cloud|edge|perllm|mixed)"
+        ),
+    })
+}
+
+/// Build the `msao serve` trace spec from parsed flags. Returns the
+/// mode string (for display) alongside the spec.
+pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
+    let n = args.usize_or("n", 16)?;
+    let mode = args.get("mode").unwrap_or("msao").to_string();
+    let seed = args.usize_or("seed", 42)? as u64;
+    let rate = args.f64_or("rate", 2.0)?;
+    let policy = if mode == "mixed" {
+        PolicyKind::PerRequest(PolicyKind::round_robin(n))
+    } else {
+        policy_for_mode(&mode)?
+    };
+    let mut gen = Generator::new(seed);
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals = gen.arrivals(n, rate);
+    let mut spec = TraceSpec::new(policy).trace(items, arrivals).seed(seed);
+    if let Some(c) = args.get("concurrency") {
+        spec = spec.concurrency(c.parse().context("parsing --concurrency")?);
+    }
+    Ok((mode, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn argv(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn concurrency_flag_honored_for_every_mode() {
+        for mode in ["msao", "no-modality", "no-collab", "cloud", "edge", "perllm", "mixed"] {
+            let a = argv(&["serve", "--mode", mode, "--n", "4", "--concurrency", "3"]);
+            let (_, spec) = serve_spec(&a).unwrap();
+            assert_eq!(spec.concurrency, Some(3), "mode {mode} dropped --concurrency");
+            spec.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn one_seed_drives_workload_and_testbed() {
+        let a = argv(&["serve", "--seed", "7", "--n", "3"]);
+        let (_, spec) = serve_spec(&a).unwrap();
+        assert_eq!(spec.seed, 7, "testbed seed must follow --seed");
+        let mut gen = Generator::new(7);
+        let items = gen.items(Benchmark::Vqa, 3);
+        assert_eq!(spec.items.len(), 3);
+        assert_eq!(spec.items[0].id, items[0].id);
+        assert_eq!(spec.items[0].question, items[0].question);
+    }
+
+    #[test]
+    fn mixed_mode_builds_per_request_policies() {
+        let a = argv(&["serve", "--mode", "mixed", "--n", "6"]);
+        let (_, spec) = serve_spec(&a).unwrap();
+        match &spec.policy {
+            PolicyKind::PerRequest(v) => {
+                assert_eq!(v.len(), 6);
+                assert_eq!(v[0], PolicyKind::Msao(Mode::Msao));
+                assert_eq!(v[1], PolicyKind::CloudOnly);
+            }
+            p => panic!("expected PerRequest, got {p:?}"),
+        }
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_mode_rejected() {
+        let a = argv(&["serve", "--mode", "bogus"]);
+        assert!(serve_spec(&a).is_err());
+    }
+
+    #[test]
+    fn default_concurrency_follows_policy() {
+        let cfg = Config::default();
+        let (_, spec) = serve_spec(&argv(&["serve", "--n", "2"])).unwrap();
+        assert_eq!(spec.effective_concurrency(&cfg), cfg.serve.max_inflight);
+        let (_, spec) =
+            serve_spec(&argv(&["serve", "--mode", "no-collab", "--n", "2"])).unwrap();
+        assert_eq!(spec.effective_concurrency(&cfg), 1);
+        let (_, spec) = serve_spec(&argv(&["serve", "--mode", "cloud", "--n", "2"])).unwrap();
+        assert_eq!(spec.effective_concurrency(&cfg), cfg.serve.max_inflight);
+    }
+
+    #[test]
+    fn flag_parser_rejects_bare_values_and_missing_values() {
+        assert!(Args::parse(["serve", "oops"].iter().map(|s| s.to_string())).is_err());
+        assert!(Args::parse(["serve", "--n"].iter().map(|s| s.to_string())).is_err());
+    }
+}

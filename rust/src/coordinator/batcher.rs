@@ -60,7 +60,7 @@ impl Batcher {
     }
 
     /// Clear window state and counters, returning the batcher to its
-    /// just-constructed state. `serve_trace` builds a fresh batcher per
+    /// just-constructed state. `serve` builds a fresh batcher per
     /// trace, so nothing in-tree needs this today; it exists for
     /// drivers that hold one batcher across trace runs (sweep
     /// harnesses, long-lived servers), where stale window starts and

@@ -8,11 +8,18 @@
 //! batched over the link ([`batcher`]). All timing flows through the
 //! virtual testbed ([`timeline`]); all tokens flow through the real PJRT
 //! engines ([`engines`]).
+//!
+//! Serving is policy-driven: a [`TraceSpec`] names the trace, the
+//! [`PolicyKind`] (MSAO, an ablation, a baseline, or a per-request mix),
+//! the concurrency cap, and the testbed seed, and [`serve`] is the one
+//! entrypoint that runs it — every strategy is an event-driven session
+//! interleaved by [`scheduler`] on the shared cluster.
 
 pub mod batcher;
 pub mod engines;
 pub mod mas;
 pub mod planner;
+pub mod policy;
 pub mod scheduler;
 pub mod server;
 pub mod session;
@@ -22,7 +29,8 @@ pub mod timeline;
 pub use batcher::Batcher;
 pub use engines::Engines;
 pub use planner::Plan;
+pub use policy::{testbed, PolicyKind, ResidentProfile, TraceSpec};
 pub use scheduler::StepOutcome;
-pub use server::{msao_testbed, serve_trace, serve_trace_concurrent, TraceResult};
+pub use server::{serve, TraceResult};
 pub use session::{Coordinator, Mode, Session};
 pub use timeline::{Site, VirtualCluster};

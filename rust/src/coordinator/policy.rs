@@ -1,0 +1,398 @@
+//! Policy-driven serving API: every strategy is one policy choice inside
+//! the same event-driven serving loop.
+//!
+//! The paper's comparisons (Table 1, Figs. 5-9) are only apples-to-apples
+//! if every strategy is charged by the same serving machinery. A
+//! [`PolicyKind`] names the strategy — full MSAO or one of its Fig. 9
+//! ablations, Cloud-only, Edge-only, PerLLM, or a heterogeneous
+//! [`PolicyKind::PerRequest`] mix — and a [`TraceSpec`] bundles the
+//! trace (items + arrivals), the policy, the in-flight cap, the testbed
+//! seed, and the resident-weight profile. [`super::server::serve`] is
+//! the single entrypoint that runs a spec.
+//!
+//! The resident-weight placement each policy pins on the virtual
+//! cluster lives here too ([`PolicyKind::resident_profile`] +
+//! [`testbed`]) — formerly duplicated between `baselines` and the MSAO
+//! trace server.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::SimModel;
+use crate::config::Config;
+use crate::workload::Item;
+
+use super::session::Mode;
+use super::timeline::VirtualCluster;
+
+/// Serving runtimes hold ~25% beyond raw weights (CUDA context,
+/// attention workspaces, fragmentation) — folded into the resident base
+/// so Fig. 8 absolutes are realistic.
+pub const WORKSPACE: f64 = 1.25;
+
+/// The serving strategy charged for a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// The paper's system (or one of its Fig. 9 ablation modes).
+    Msao(Mode),
+    /// Everything ships raw to the cloud; the full model serves.
+    CloudOnly,
+    /// The draft model serves everything locally.
+    EdgeOnly,
+    /// PerLLM layer-wise partitioned offloading.
+    PerLlm,
+    /// Heterogeneous multi-tenant trace: request `i` is served under
+    /// `policies[i]`, all interleaved on the one shared cluster.
+    PerRequest(Vec<PolicyKind>),
+}
+
+impl PolicyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Msao(Mode::Msao) => "MSAO",
+            PolicyKind::Msao(Mode::NoModalityAware) => "MSAO w/o Modality-Aware",
+            PolicyKind::Msao(Mode::NoCollabSched) => "MSAO w/o Collab-Sched",
+            PolicyKind::CloudOnly => "Cloud-only",
+            PolicyKind::EdgeOnly => "Edge-only",
+            PolicyKind::PerLlm => "PerLLM",
+            PolicyKind::PerRequest(_) => "Per-request",
+        }
+    }
+
+    /// Policy serving request `i` of a trace (`self` unless PerRequest).
+    pub fn for_request(&self, i: usize) -> &PolicyKind {
+        match self {
+            PolicyKind::PerRequest(v) => &v[i],
+            other => other,
+        }
+    }
+
+    /// The canonical four-tenant mix, one policy per method. Single
+    /// source of truth for every "mixed" surface (`--mode mixed`, the
+    /// `mixed` experiment, examples), so they all assign request `i`
+    /// to the same tenant.
+    pub const TENANT_MIX: [PolicyKind; 4] = [
+        PolicyKind::Msao(Mode::Msao),
+        PolicyKind::CloudOnly,
+        PolicyKind::EdgeOnly,
+        PolicyKind::PerLlm,
+    ];
+
+    /// Round-robin per-request policies over [`Self::TENANT_MIX`] for
+    /// an `n`-request trace.
+    pub fn round_robin(n: usize) -> Vec<PolicyKind> {
+        (0..n).map(|i| Self::TENANT_MIX[i % Self::TENANT_MIX.len()].clone()).collect()
+    }
+
+    /// Whether the dynamic verify batcher is armed for this trace. Only
+    /// the "w/o collaborative scheduling" ablation forfeits it (static
+    /// task distribution — exactly what Fig. 9 measures). A mixed trace
+    /// shares one armed batcher; only MSAO-family sessions touch it,
+    /// and `validate()` rejects NoCollabSched inside a PerRequest mix
+    /// so the disarmed-batcher semantics cannot be silently lost.
+    pub fn collaborative(&self) -> bool {
+        !matches!(self, PolicyKind::Msao(Mode::NoCollabSched))
+    }
+
+    /// In-flight cap when the spec doesn't pin one: 1 for the no-collab
+    /// ablation (static scheduling forfeits the interleave), the
+    /// configured `serve.max_inflight` for everything else.
+    pub fn default_concurrency(&self, cfg: &Config) -> usize {
+        if matches!(self, PolicyKind::Msao(Mode::NoCollabSched)) {
+            1
+        } else {
+            cfg.serve.max_inflight
+        }
+    }
+
+    /// Resident weights this policy pins per site for the lifetime of
+    /// the trace (paper-scale bytes, workspace included).
+    pub fn resident_profile(&self) -> ResidentProfile {
+        let draft = SimModel::qwen2vl_2b().weight_bytes();
+        let full = SimModel::qwen25vl_7b().weight_bytes();
+        let vit = SimModel::vision_encoder().weight_bytes();
+        match self {
+            // Draft + encoder on the edge; full model + encoder in the
+            // cloud (the speculative verifier).
+            PolicyKind::Msao(_) => ResidentProfile {
+                edge_bytes: WORKSPACE * (draft + vit),
+                cloud_bytes: WORKSPACE * (full + vit),
+            },
+            PolicyKind::CloudOnly => ResidentProfile {
+                edge_bytes: 0.0,
+                cloud_bytes: WORKSPACE * (full + vit),
+            },
+            PolicyKind::EdgeOnly => ResidentProfile {
+                edge_bytes: WORKSPACE * (draft + vit),
+                cloud_bytes: 0.0,
+            },
+            // Layer split: roughly half the full model resident per
+            // site, plus the vision encoder on the edge (inputs enter
+            // there).
+            PolicyKind::PerLlm => ResidentProfile {
+                edge_bytes: WORKSPACE * (0.5 * full + vit),
+                cloud_bytes: WORKSPACE * (0.5 * full),
+            },
+            // Mixed tenants: every constituent policy's weights must be
+            // resident at once — per-site max over the tenants.
+            PolicyKind::PerRequest(v) => v.iter().fold(
+                ResidentProfile { edge_bytes: 0.0, cloud_bytes: 0.0 },
+                |acc, p| acc.union(&p.resident_profile()),
+            ),
+        }
+    }
+}
+
+/// Permanently-resident bytes per site (weights + workspace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResidentProfile {
+    pub edge_bytes: f64,
+    pub cloud_bytes: f64,
+}
+
+impl ResidentProfile {
+    /// Per-site max — the placement a shared cluster needs to host both.
+    pub fn union(&self, other: &ResidentProfile) -> ResidentProfile {
+        ResidentProfile {
+            edge_bytes: self.edge_bytes.max(other.edge_bytes),
+            cloud_bytes: self.cloud_bytes.max(other.cloud_bytes),
+        }
+    }
+}
+
+/// Fresh virtual testbed with `profile`'s resident weights pinned — the
+/// one place the cluster is configured (shared by the trace server and
+/// the golden equivalence tests).
+pub fn testbed(cfg: &Config, seed: u64, profile: &ResidentProfile) -> VirtualCluster {
+    let mut vc = VirtualCluster::new(cfg, seed);
+    vc.edge_mem.set_base(profile.edge_bytes);
+    vc.cloud_mem.set_base(profile.cloud_bytes);
+    vc
+}
+
+/// Everything needed to run one request trace through
+/// [`super::server::serve`]: the items, their arrival times, the serving
+/// policy, the in-flight cap, and the testbed seed. Built fluently:
+///
+/// ```ignore
+/// let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+///     .trace(items, arrivals)
+///     .seed(42)
+///     .concurrency(8);
+/// let result = serve(&mut coord, &spec)?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    pub items: Vec<Item>,
+    /// Arrival times (seconds), non-decreasing — admission is FCFS in
+    /// slice order.
+    pub arrivals: Vec<f64>,
+    pub policy: PolicyKind,
+    /// In-flight cap; `None` = the policy's default (1 for the
+    /// no-collab ablation, `serve.max_inflight` otherwise).
+    pub concurrency: Option<usize>,
+    /// Seeds the virtual testbed (link jitter). One trace, one seed.
+    pub seed: u64,
+    /// Resident-weight override; `None` derives from the policy.
+    pub profile: Option<ResidentProfile>,
+}
+
+impl TraceSpec {
+    pub fn new(policy: PolicyKind) -> Self {
+        TraceSpec {
+            items: Vec::new(),
+            arrivals: Vec::new(),
+            policy,
+            concurrency: None,
+            seed: 0,
+            profile: None,
+        }
+    }
+
+    /// Set the request trace (items plus matching arrival times).
+    pub fn trace(mut self, items: Vec<Item>, arrivals: Vec<f64>) -> Self {
+        self.items = items;
+        self.arrivals = arrivals;
+        self
+    }
+
+    /// Pin the in-flight cap (1 = sequential run-to-completion FCFS).
+    pub fn concurrency(mut self, cap: usize) -> Self {
+        self.concurrency = Some(cap);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the resident-weight placement derived from the policy.
+    pub fn profile(mut self, profile: ResidentProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
+    pub fn resident_profile(&self) -> ResidentProfile {
+        self.profile.unwrap_or_else(|| self.policy.resident_profile())
+    }
+
+    pub fn effective_concurrency(&self, cfg: &Config) -> usize {
+        match self.concurrency {
+            Some(c) => c,
+            None => self.policy.default_concurrency(cfg),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.items.len() != self.arrivals.len() {
+            bail!(
+                "trace has {} items but {} arrivals",
+                self.items.len(),
+                self.arrivals.len()
+            );
+        }
+        if self.arrivals.windows(2).any(|w| w[1] < w[0]) {
+            bail!("arrivals must be non-decreasing (admission is FCFS in slice order)");
+        }
+        if self.concurrency == Some(0) {
+            bail!("concurrency must be >= 1");
+        }
+        if let PolicyKind::PerRequest(v) = &self.policy {
+            if v.len() != self.items.len() {
+                bail!(
+                    "PerRequest policy lists {} policies for {} requests",
+                    v.len(),
+                    self.items.len()
+                );
+            }
+            if v.iter().any(|p| matches!(p, PolicyKind::PerRequest(_))) {
+                bail!("PerRequest policies cannot nest");
+            }
+            // The no-collab ablation is trace-level semantics (disarmed
+            // batcher, sequential default) that a shared mixed trace
+            // cannot honor per-tenant — its Fig. 9 numbers would be
+            // silently wrong inside a mix.
+            if v.iter().any(|p| matches!(p, PolicyKind::Msao(Mode::NoCollabSched))) {
+                bail!("Msao(NoCollabSched) cannot appear in a PerRequest mix");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Benchmark, Generator};
+
+    fn trace(n: usize) -> (Vec<Item>, Vec<f64>) {
+        let mut gen = Generator::new(1);
+        (gen.items(Benchmark::Vqa, n), gen.arrivals(n, 2.0))
+    }
+
+    #[test]
+    fn validate_catches_malformed_specs() {
+        let (items, arrivals) = trace(3);
+        let ok = TraceSpec::new(PolicyKind::CloudOnly).trace(items.clone(), arrivals.clone());
+        ok.validate().unwrap();
+
+        let short = TraceSpec::new(PolicyKind::CloudOnly)
+            .trace(items.clone(), arrivals[..2].to_vec());
+        assert!(short.validate().is_err(), "length mismatch accepted");
+
+        let unsorted = TraceSpec::new(PolicyKind::CloudOnly)
+            .trace(items.clone(), vec![1.0, 0.5, 2.0]);
+        assert!(unsorted.validate().is_err(), "unsorted arrivals accepted");
+
+        let zero = TraceSpec::new(PolicyKind::CloudOnly)
+            .trace(items.clone(), arrivals.clone())
+            .concurrency(0);
+        assert!(zero.validate().is_err(), "concurrency 0 accepted");
+
+        let wrong_len = TraceSpec::new(PolicyKind::PerRequest(vec![PolicyKind::EdgeOnly]))
+            .trace(items.clone(), arrivals.clone());
+        assert!(wrong_len.validate().is_err(), "PerRequest length mismatch accepted");
+
+        let nested = TraceSpec::new(PolicyKind::PerRequest(vec![
+            PolicyKind::EdgeOnly,
+            PolicyKind::PerRequest(vec![PolicyKind::CloudOnly]),
+            PolicyKind::PerLlm,
+        ]))
+        .trace(items.clone(), arrivals.clone());
+        assert!(nested.validate().is_err(), "nested PerRequest accepted");
+
+        // The no-collab ablation disarms the trace-shared batcher; a
+        // mix cannot honor that per-tenant, so it must be rejected.
+        let no_collab_mix = TraceSpec::new(PolicyKind::PerRequest(vec![
+            PolicyKind::Msao(Mode::NoCollabSched),
+            PolicyKind::CloudOnly,
+            PolicyKind::EdgeOnly,
+        ]))
+        .trace(items, arrivals);
+        assert!(no_collab_mix.validate().is_err(), "NoCollabSched mix accepted");
+    }
+
+    #[test]
+    fn per_request_profile_is_per_site_max_of_tenants() {
+        let mixed = PolicyKind::PerRequest(vec![
+            PolicyKind::Msao(Mode::Msao),
+            PolicyKind::CloudOnly,
+            PolicyKind::EdgeOnly,
+            PolicyKind::PerLlm,
+        ]);
+        let p = mixed.resident_profile();
+        for kind in [
+            PolicyKind::Msao(Mode::Msao),
+            PolicyKind::CloudOnly,
+            PolicyKind::EdgeOnly,
+            PolicyKind::PerLlm,
+        ] {
+            let q = kind.resident_profile();
+            assert!(p.edge_bytes >= q.edge_bytes, "{kind:?} edge");
+            assert!(p.cloud_bytes >= q.cloud_bytes, "{kind:?} cloud");
+        }
+        // PerLLM's half-model split dominates MSAO's draft on the edge.
+        assert_eq!(
+            p.edge_bytes,
+            PolicyKind::PerLlm.resident_profile().edge_bytes
+        );
+        assert_eq!(
+            p.cloud_bytes,
+            PolicyKind::Msao(Mode::Msao).resident_profile().cloud_bytes
+        );
+    }
+
+    #[test]
+    fn default_concurrency_pins_no_collab_to_sequential() {
+        let cfg = Config::default();
+        assert_eq!(
+            PolicyKind::Msao(Mode::NoCollabSched).default_concurrency(&cfg),
+            1
+        );
+        for kind in [
+            PolicyKind::Msao(Mode::Msao),
+            PolicyKind::CloudOnly,
+            PolicyKind::EdgeOnly,
+            PolicyKind::PerLlm,
+        ] {
+            assert_eq!(kind.default_concurrency(&cfg), cfg.serve.max_inflight);
+        }
+        let (items, arrivals) = {
+            let mut gen = Generator::new(2);
+            (gen.items(Benchmark::Vqa, 2), gen.arrivals(2, 2.0))
+        };
+        let spec = TraceSpec::new(PolicyKind::EdgeOnly)
+            .trace(items, arrivals)
+            .concurrency(7);
+        assert_eq!(spec.effective_concurrency(&cfg), 7);
+    }
+
+    #[test]
+    fn testbed_pins_profile_bases() {
+        let cfg = Config::default();
+        let profile = PolicyKind::Msao(Mode::Msao).resident_profile();
+        let vc = testbed(&cfg, 1, &profile);
+        assert!((vc.edge_mem.peak_gb() - profile.edge_bytes / 1e9).abs() < 1e-9);
+        assert!((vc.cloud_mem.peak_gb() - profile.cloud_bytes / 1e9).abs() < 1e-9);
+    }
+}

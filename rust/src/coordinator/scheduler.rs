@@ -169,6 +169,27 @@ mod tests {
     }
 
     #[test]
+    fn mixed_session_shapes_stay_event_ordered_and_starvation_free() {
+        // Heterogeneous session shapes on one cluster — MSAO-like
+        // many-round sessions next to baseline-like few-event sessions
+        // (the unified policy API's mixed traces): once admitted, the
+        // global step sequence must stay sorted by virtual time, and
+        // every session must finish every step.
+        let mut mocks = vec![
+            Mock::new(vec![0.0, 0.5, 1.0, 1.5, 2.0, 2.5]), // spec rounds
+            Mock::new(vec![0.1, 3.0]),                     // prefill + finish
+            Mock::new(vec![0.2, 0.9, 4.0]),
+            Mock::new(vec![2.2]),
+        ];
+        let log = run(&mut mocks, 4);
+        for w in log.windows(2) {
+            assert!(w[0].1 <= w[1].1, "out of order: {log:?}");
+        }
+        assert_eq!(log.len(), 12);
+        assert!(mocks.iter().all(|m| m.at == m.times.len()), "starved session");
+    }
+
+    #[test]
     fn no_starvation_under_poisson_trace() {
         // 100 sessions with Poisson arrivals and random per-step service
         // times: every session must finish every step.

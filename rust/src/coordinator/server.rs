@@ -1,43 +1,43 @@
-//! Trace server: drive a stream of requests through the coordinator and
-//! the shared virtual testbed, producing the ExecRecords every
-//! experiment aggregates.
+//! Unified trace server: [`serve`] is the one way to run a request
+//! trace, whatever the strategy.
 //!
 //! # Event model
 //!
-//! Each request is a resumable [`Session`] state machine whose phases
-//! are anchored at virtual-time events:
+//! Every request — MSAO and baseline alike — is a resumable session
+//! state machine whose phases are anchored at virtual-time events:
 //!
-//! * **probe** — fires at the arrival time; charges the modality-aware
-//!   module on the edge.
-//! * **plan + prefill** — fires at probe end; runs the BO planner, the
-//!   adaptive edge/cloud routing decision (which reads the *live*
-//!   queue depths of the interleaved cluster), and both prefills.
-//! * **draft/verify round** — one event per speculative round, fired at
-//!   the time the edge can start drafting (`SpecSession::next_time`);
-//!   cloud-direct sessions fire one event per cloud decode step.
-//! * **downlink** — fires at the last commit time; releases KV/memory
-//!   and scores quality.
+//! * MSAO sessions ([`Session`]): probe → plan + dual prefill →
+//!   draft/verify rounds (or cloud-direct decode steps) → downlink.
+//! * Baseline sessions ([`BaselineSession`]): arrival (uplink + encode +
+//!   prefill) → per-token decode steps (per-token edge→cloud hops for
+//!   the PerLLM mid-split) → downlink.
 //!
 //! The scheduler ([`super::scheduler::drive`]) admits sessions FCFS up
-//! to `concurrency` in flight and always advances the session with the
-//! earliest next event, so edge/cloud occupancy and link serialization
-//! are charged in virtual-time order across requests. Verify uplinks
-//! from *different* sessions therefore interleave on the link, which is
-//! what lets the dynamic [`Batcher`] coalesce them into shared exchange
-//! windows (the paper's collaborative scheduling) — the seed's
-//! run-to-completion FCFS loop could only ever batch a session with
-//! itself. At `concurrency == 1` the scheduler degenerates to exactly
-//! that seed loop and reproduces its records bit for bit.
+//! to the spec's concurrency cap and always advances the session with
+//! the earliest next event, so edge/cloud occupancy and link
+//! serialization are charged in virtual-time order across requests and
+//! across *strategies* — a Cloud-only tenant queues behind an MSAO
+//! verify burst exactly as it would on real hardware. Verify uplinks
+//! from different MSAO sessions interleave on the link, which is what
+//! lets the dynamic [`Batcher`] coalesce them into shared exchange
+//! windows (the paper's collaborative scheduling).
+//!
+//! At `concurrency == 1` the loop degenerates to sequential
+//! run-to-completion FCFS and reproduces the pre-refactor per-strategy
+//! loops bit for bit (pinned by the golden equivalence tests).
 
 use anyhow::Result;
 
+use crate::baselines::{Baseline, BaselineSession};
 use crate::config::Config;
 use crate::metrics::ExecRecord;
+use crate::optimizer::ThetaController;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
-use super::scheduler;
-use super::session::{Coordinator, Mode, Session};
+use super::policy::{self, PolicyKind, TraceSpec};
+use super::scheduler::{self, StepOutcome};
+use super::session::{Coordinator, Session};
 use super::timeline::VirtualCluster;
 
 pub struct TraceResult {
@@ -47,73 +47,83 @@ pub struct TraceResult {
     pub batch_amortization: f64,
 }
 
-/// Fresh virtual testbed with MSAO's paper-scale resident weights
-/// (draft + encoder on the edge, full model + encoder in the cloud,
-/// 25% runtime workspace beyond raw weights — see baselines/mod.rs).
-/// Shared by the trace server and the equivalence tests so both run on
-/// identically configured clusters.
-pub fn msao_testbed(cfg: &Config, seed: u64) -> VirtualCluster {
-    let mut vc = VirtualCluster::new(cfg, seed);
-    vc.edge_mem.set_base(
-        1.25 * (crate::cluster::SimModel::qwen2vl_2b().weight_bytes()
-            + crate::cluster::SimModel::vision_encoder().weight_bytes()),
-    );
-    vc.cloud_mem.set_base(
-        1.25 * (crate::cluster::SimModel::qwen25vl_7b().weight_bytes()
-            + crate::cluster::SimModel::vision_encoder().weight_bytes()),
-    );
-    vc
+/// One admitted request under whichever policy its spec assigns.
+enum AnySession<'a> {
+    Msao(Session<'a>),
+    Baseline(BaselineSession<'a>),
 }
 
-/// Serve `items` with Poisson `arrivals` under `mode`, processing up to
-/// `cfg.serve.max_inflight` requests concurrently. The "w/o
-/// collaborative scheduling" ablation pins to sequential FCFS — static
-/// task distribution forfeits the event-driven interleave along with
-/// batching and routing, which is exactly what Fig. 9 measures.
-pub fn serve_trace(
-    coord: &mut Coordinator,
-    items: &[Item],
-    arrivals: &[f64],
-    mode: Mode,
-    seed: u64,
-) -> Result<TraceResult> {
-    let concurrency = if mode == Mode::NoCollabSched {
-        1
-    } else {
-        coord.cfg.serve.max_inflight
-    };
-    serve_trace_concurrent(coord, items, arrivals, mode, seed, concurrency)
+impl<'a> AnySession<'a> {
+    fn new(policy: &PolicyKind, item: &'a Item, arrival: f64) -> Self {
+        match policy {
+            PolicyKind::Msao(mode) => AnySession::Msao(Session::new(item, arrival, *mode)),
+            PolicyKind::CloudOnly => {
+                AnySession::Baseline(BaselineSession::new(Baseline::CloudOnly, item, arrival))
+            }
+            PolicyKind::EdgeOnly => {
+                AnySession::Baseline(BaselineSession::new(Baseline::EdgeOnly, item, arrival))
+            }
+            PolicyKind::PerLlm => {
+                AnySession::Baseline(BaselineSession::new(Baseline::PerLlm, item, arrival))
+            }
+            PolicyKind::PerRequest(_) => unreachable!("validate() rejects nested PerRequest"),
+        }
+    }
+
+    fn next_time(&self) -> f64 {
+        match self {
+            AnySession::Msao(s) => s.next_time(),
+            AnySession::Baseline(b) => b.next_time(),
+        }
+    }
+
+    fn step(
+        &mut self,
+        coord: &mut Coordinator,
+        vc: &mut VirtualCluster,
+        batcher: &mut Batcher,
+        theta: &mut ThetaController,
+    ) -> Result<StepOutcome> {
+        match self {
+            AnySession::Msao(s) => s.step(coord, vc, batcher, theta),
+            AnySession::Baseline(b) => b.step(coord, vc),
+        }
+    }
+
+    fn into_record(self) -> ExecRecord {
+        match self {
+            AnySession::Msao(s) => s.into_record(),
+            AnySession::Baseline(b) => b.into_record(),
+        }
+    }
 }
 
-/// Serve `items` with an explicit concurrency cap (1 = the seed's
-/// sequential FCFS; higher values interleave sessions event-driven).
-pub fn serve_trace_concurrent(
-    coord: &mut Coordinator,
-    items: &[Item],
-    arrivals: &[f64],
-    mode: Mode,
-    seed: u64,
-    concurrency: usize,
-) -> Result<TraceResult> {
-    assert_eq!(items.len(), arrivals.len());
+/// Serve a trace per its [`TraceSpec`]: build the testbed from the
+/// policy's resident-weight profile, spawn one session per request, and
+/// drive them event-ordered under the spec's concurrency cap.
+pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+    spec.validate()?;
     let cfg: Config = coord.cfg.clone();
-    let mut vc = msao_testbed(&cfg, seed);
+    let mut vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
     let mut batcher = Batcher::new(
         cfg.serve.batch_wait_ms,
         cfg.serve.verify_batch,
-        mode != Mode::NoCollabSched,
+        spec.policy.collaborative(),
     );
     let mut theta = coord.theta();
+    let concurrency = spec.effective_concurrency(&cfg);
 
-    let mut sessions: Vec<Session> = items
+    let mut sessions: Vec<AnySession> = spec
+        .items
         .iter()
-        .zip(arrivals)
-        .map(|(item, &arr)| Session::new(item, arr, mode))
+        .zip(&spec.arrivals)
+        .enumerate()
+        .map(|(i, (item, &arr))| AnySession::new(spec.policy.for_request(i), item, arr))
         .collect();
-    scheduler::drive(&mut sessions, concurrency, Session::next_time, |_, s| {
+    scheduler::drive(&mut sessions, concurrency, AnySession::next_time, |_, s| {
         s.step(coord, &mut vc, &mut batcher, &mut theta)
     })?;
-    let records: Vec<ExecRecord> = sessions.into_iter().map(Session::into_record).collect();
+    let records: Vec<ExecRecord> = sessions.into_iter().map(AnySession::into_record).collect();
 
     Ok(TraceResult {
         records,

@@ -9,9 +9,8 @@
 
 use anyhow::Result;
 
-use crate::baselines::{serve_trace_baseline, Baseline};
 use crate::config::Config;
-use crate::coordinator::{serve_trace_concurrent, Coordinator, Mode};
+use crate::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 use crate::metrics::{summarize, Summary};
 use crate::util::json::{arr, num, obj, s, Value};
 use crate::util::table::{f1, f2, f3, Table};
@@ -59,6 +58,16 @@ impl Method {
             Method::Msao => "MSAO",
         }
     }
+
+    /// Serving policy for this method in the unified API.
+    pub fn policy(self) -> PolicyKind {
+        match self {
+            Method::CloudOnly => PolicyKind::CloudOnly,
+            Method::EdgeOnly => PolicyKind::EdgeOnly,
+            Method::PerLlm => PolicyKind::PerLlm,
+            Method::Msao => PolicyKind::Msao(Mode::Msao),
+        }
+    }
 }
 
 /// Run one (benchmark, bandwidth, method) cell and summarize.
@@ -73,24 +82,16 @@ pub fn run_cell(
     let mut gen = Generator::new(seed);
     let items = gen.items(bench.benchmark, n);
     let arrivals = gen.arrivals(n, ARRIVAL_RATE);
-    let res = match method {
-        // Concurrency 1: the baselines run sequentially to completion,
-        // so the paper-figure comparisons stay scheduling-equivalent —
-        // MSAO's edge here is algorithmic, not admission policy. What
-        // the event-driven interleave adds on top is reported by the
-        // dedicated `concurrency` sweep.
-        Method::Msao => serve_trace_concurrent(coord, &items, &arrivals, Mode::Msao, seed, 1)?,
-        Method::CloudOnly => {
-            serve_trace_baseline(coord, Baseline::CloudOnly, &items, &arrivals, seed)?
-        }
-        Method::EdgeOnly => {
-            serve_trace_baseline(coord, Baseline::EdgeOnly, &items, &arrivals, seed)?
-        }
-        Method::PerLlm => {
-            serve_trace_baseline(coord, Baseline::PerLlm, &items, &arrivals, seed)?
-        }
-    };
-    Ok(summarize(&res.records))
+    // Concurrency 1 for every method: the paper-figure comparisons stay
+    // scheduling-equivalent (sequential run-to-completion FCFS) — MSAO's
+    // edge here is algorithmic, not admission policy. What the
+    // event-driven interleave adds on top is reported by the dedicated
+    // `concurrency` sweep, which now covers all four methods.
+    let spec = TraceSpec::new(method.policy())
+        .trace(items, arrivals)
+        .seed(seed)
+        .concurrency(1);
+    Ok(summarize(&serve(coord, &spec)?.records))
 }
 
 /// Fig. 4 — probe-module overhead across configurations V1-V7.
@@ -108,8 +109,13 @@ pub fn fig4(coord: &mut Coordinator) -> Result<(Table, Value)> {
     let vit = SimModel::vision_encoder();
     for cfg in v_configs() {
         let frames = if cfg.frames > 0 { cfg.frames } else { usize::from(cfg.resolution > 0.0) };
-        let (secs, flops, mem) =
-            probe_cost(&dev, cfg.modalities.len(), frames.max(1), cfg.resolution.max(0.25), cfg.text_len);
+        let (secs, flops, mem) = probe_cost(
+            &dev,
+            cfg.modalities.len(),
+            frames.max(1),
+            cfg.resolution.max(0.25),
+            cfg.text_len,
+        );
         // FLOPs relative to this configuration's full inference pipeline:
         // encoder passes for every frame + full-model prefill over the
         // config's sequence + 64-token decode (paper §5.2 normalizes the
@@ -274,7 +280,11 @@ pub fn fig9(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
             // All variants at concurrency 1: the ablation isolates the
             // algorithm (and the memory column is a per-request
             // footprint only under sequential FCFS).
-            let res = serve_trace_concurrent(coord, &items, &arrivals, mode, 77, 1)?;
+            let spec = TraceSpec::new(PolicyKind::Msao(mode))
+                .trace(items, arrivals)
+                .seed(77)
+                .concurrency(1);
+            let res = serve(coord, &spec)?;
             let sum = summarize(&res.records);
             table.row(vec![
                 benchmark.name().to_string(),
@@ -297,52 +307,137 @@ pub fn fig9(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
     Ok((table, arr(rows)))
 }
 
-/// Concurrency sweep — the event-driven scheduler under offered load:
-/// throughput and p50/p99 latency per (arrival rate, concurrency cap),
-/// plus the verify-batch amortization the cross-request interleave
-/// unlocks. Concurrency 1 is the seed's sequential FCFS baseline, so
-/// each rate's rows read as "what interleaving buys at this load".
+/// Concurrency sweep — the event-driven scheduler under offered load,
+/// for ALL four methods now that baselines are schedulable sessions:
+/// throughput and p50/p99 latency per (method, arrival rate, concurrency
+/// cap), plus the verify-batch amortization the cross-request interleave
+/// unlocks (MSAO only — baselines have no verify traffic). Concurrency 1
+/// is the sequential FCFS baseline, so each rate's rows read as "what
+/// interleaving buys this method at this load".
 pub fn concurrency_sweep(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
     const RATES: [f64; 4] = [1.0, 2.0, 4.0, 8.0];
     const CONCURRENCY: [usize; 4] = [1, 2, 4, 8];
     coord.cfg.network.bandwidth_mbps = 300.0;
     let mut table = Table::new(
-        "Concurrency sweep — MSAO under offered load (VQA, 300 Mbps)",
+        "Concurrency sweep — all methods under offered load (VQA, 300 Mbps)",
         &[
-            "rate_rps", "conc", "tput_tok_s", "tput_req_s", "lat_p50_s", "lat_p99_s",
-            "amort",
+            "method", "rate_rps", "conc", "tput_tok_s", "tput_req_s", "lat_p50_s",
+            "lat_p99_s", "amort",
         ],
     );
     let mut rows = Vec::new();
-    for &rate in &RATES {
-        for &conc in &CONCURRENCY {
-            // Same items and arrival process at every concurrency level,
-            // so columns differ only by scheduling.
-            let mut gen = Generator::new(4242);
-            let items = gen.items(Benchmark::Vqa, n);
-            let arrivals = gen.arrivals(n, rate);
-            let res = serve_trace_concurrent(coord, &items, &arrivals, Mode::Msao, 9, conc)?;
-            let sum = summarize(&res.records);
-            table.row(vec![
-                f1(rate),
-                format!("{conc}"),
-                f1(sum.throughput_tps),
-                f2(sum.req_throughput_rps),
-                f3(sum.latency_p50_s),
-                f3(sum.latency_p99_s),
-                f2(res.batch_amortization),
-            ]);
-            rows.push(obj(vec![
-                ("rate_rps", num(rate)),
-                ("concurrency", num(conc as f64)),
-                ("throughput_tps", num(sum.throughput_tps)),
-                ("req_throughput_rps", num(sum.req_throughput_rps)),
-                ("latency_p50_s", num(sum.latency_p50_s)),
-                ("latency_p99_s", num(sum.latency_p99_s)),
-                ("batch_amortization", num(res.batch_amortization)),
-            ]));
+    for method in Method::ALL {
+        for &rate in &RATES {
+            for &conc in &CONCURRENCY {
+                // Same items and arrival process at every concurrency
+                // level, so columns differ only by scheduling.
+                let mut gen = Generator::new(4242);
+                let items = gen.items(Benchmark::Vqa, n);
+                let arrivals = gen.arrivals(n, rate);
+                let spec = TraceSpec::new(method.policy())
+                    .trace(items, arrivals)
+                    .seed(9)
+                    .concurrency(conc);
+                let res = serve(coord, &spec)?;
+                let sum = summarize(&res.records);
+                table.row(vec![
+                    method.name().to_string(),
+                    f1(rate),
+                    format!("{conc}"),
+                    f1(sum.throughput_tps),
+                    f2(sum.req_throughput_rps),
+                    f3(sum.latency_p50_s),
+                    f3(sum.latency_p99_s),
+                    f2(res.batch_amortization),
+                ]);
+                rows.push(obj(vec![
+                    ("method", s(method.name())),
+                    ("rate_rps", num(rate)),
+                    ("concurrency", num(conc as f64)),
+                    ("throughput_tps", num(sum.throughput_tps)),
+                    ("req_throughput_rps", num(sum.req_throughput_rps)),
+                    ("latency_p50_s", num(sum.latency_p50_s)),
+                    ("latency_p99_s", num(sum.latency_p99_s)),
+                    ("batch_amortization", num(res.batch_amortization)),
+                ]));
+            }
         }
     }
+    Ok((table, arr(rows)))
+}
+
+/// Mixed-policy trace — heterogeneous tenants (one per method,
+/// round-robin) share one virtual cluster with per-request policies,
+/// interleaved by the event-driven scheduler. Reports per-tenant and
+/// overall service quality: what each strategy experiences when it is
+/// NOT alone on the hardware.
+pub fn mixed(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    coord.cfg.network.bandwidth_mbps = 300.0;
+    let mut gen = Generator::new(4242);
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals = gen.arrivals(n, 4.0);
+    let spec = TraceSpec::new(PolicyKind::PerRequest(PolicyKind::round_robin(n)))
+        .trace(items, arrivals)
+        .seed(4242)
+        .concurrency(8);
+    let res = serve(coord, &spec)?;
+
+    // No per-tenant compute column: ExecRecord flops are cumulative
+    // cluster snapshots at each finish event, which under interleave
+    // measure completion order, not tenant compute.
+    let mut table = Table::new(
+        "Mixed-policy trace — four tenants share the cluster (VQA, 300 Mbps, 4 req/s, conc 8)",
+        &["tenant", "n", "acc_%", "lat_mean_s", "lat_p99_s", "tput_tok_s"],
+    );
+    let mut rows = Vec::new();
+    let tenants = PolicyKind::TENANT_MIX;
+    for (mi, tenant) in tenants.iter().enumerate() {
+        let recs: Vec<_> = res
+            .records
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % tenants.len() == mi)
+            .map(|(_, r)| r.clone())
+            .collect();
+        // Short traces (n < 4) leave later tenants without requests.
+        if recs.is_empty() {
+            continue;
+        }
+        let sum = summarize(&recs);
+        table.row(vec![
+            tenant.name().to_string(),
+            format!("{}", recs.len()),
+            f1(sum.expected_accuracy * 100.0),
+            f3(sum.latency_mean_s),
+            f3(sum.latency_p99_s),
+            f1(sum.throughput_tps),
+        ]);
+        rows.push(obj(vec![
+            ("tenant", s(tenant.name())),
+            ("n", num(recs.len() as f64)),
+            ("accuracy", num(sum.expected_accuracy * 100.0)),
+            ("latency_mean_s", num(sum.latency_mean_s)),
+            ("latency_p99_s", num(sum.latency_p99_s)),
+            ("throughput_tps", num(sum.throughput_tps)),
+        ]));
+    }
+    let all = summarize(&res.records);
+    table.row(vec![
+        "ALL".to_string(),
+        format!("{}", res.records.len()),
+        f1(all.expected_accuracy * 100.0),
+        f3(all.latency_mean_s),
+        f3(all.latency_p99_s),
+        f1(all.throughput_tps),
+    ]);
+    rows.push(obj(vec![
+        ("tenant", s("ALL")),
+        ("n", num(res.records.len() as f64)),
+        ("accuracy", num(all.expected_accuracy * 100.0)),
+        ("latency_mean_s", num(all.latency_mean_s)),
+        ("latency_p99_s", num(all.latency_p99_s)),
+        ("throughput_tps", num(all.throughput_tps)),
+    ]));
     Ok((table, arr(rows)))
 }
 
@@ -381,6 +476,11 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             t.print();
             dumps.push(("concurrency", v));
         }
+        "mixed" => {
+            let (t, v) = mixed(coord, n)?;
+            t.print();
+            dumps.push(("mixed", v));
+        }
         "main" => {
             // Figs. 5-8 share one sweep; run it once.
             let data = main_sweep(coord, n)?;
@@ -417,6 +517,9 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             let (t, v) = concurrency_sweep(coord, n)?;
             t.print();
             dumps.push(("concurrency", v));
+            let (t, v) = mixed(coord, n)?;
+            t.print();
+            dumps.push(("mixed", v));
         }
         other => anyhow::bail!("unknown experiment id {other:?}"),
     }

@@ -14,14 +14,31 @@
 //! - [`sparsity`]    — MAS metric math (Eqs. 4-7).
 //! - [`optimizer`]   — from-scratch GP Bayesian optimization + EMA.
 //! - [`coordinator`] — the paper's contribution: MAS probing, offload
-//!   planning, speculative decode loop, batching, KV management, serving.
-//! - [`baselines`]   — Cloud-only / Edge-only / PerLLM comparators.
+//!   planning, speculative decode loop, batching, KV management, and the
+//!   policy-driven serving API (`serve` + `TraceSpec` + `PolicyKind`).
+//! - [`baselines`]   — Cloud-only / Edge-only / PerLLM comparators, each
+//!   an event-driven session schedulable alongside MSAO.
 //! - [`workload`]    — synthetic VQAv2/MMBench-like generators and traces.
 //! - [`quality`]     — calibrated accuracy model (DESIGN.md §7).
 //! - [`metrics`]     — histograms, counters, table emitters.
 //! - [`experiments`] — drivers regenerating every paper table and figure.
+//! - [`cli`]         — flag parsing for the `msao` launcher.
+//!
+//! Serving quickstart — every strategy goes through one entrypoint:
+//!
+//! ```ignore
+//! use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
+//!
+//! let mut coord = Coordinator::new(Config::default())?;
+//! let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+//!     .trace(items, arrivals)
+//!     .seed(42)
+//!     .concurrency(8);
+//! let result = serve(&mut coord, &spec)?;
+//! ```
 
 pub mod baselines;
+pub mod cli;
 pub mod util;
 pub mod cluster;
 pub mod config;

@@ -3,61 +3,28 @@
 //! Commands
 //!   info                         — print artifact + config summary
 //!   probe [--seed N]             — probe one synthetic item, print MAS
-//!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--concurrency C]
-//!                                — serve a trace, print summary
+//!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
+//!         [--concurrency C]      — serve a trace through the unified
+//!                                  policy API, print summary. Modes:
+//!                                  msao|no-modality|no-collab|cloud|
+//!                                  edge|perllm|mixed. One --seed drives
+//!                                  both the workload and the testbed;
+//!                                  --concurrency is honored by every
+//!                                  mode.
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
-//!                                  (fig4|table1|fig5..fig9|concurrency|main|all)
+//!                                  (fig4|table1|fig5..fig9|concurrency|mixed|main|all)
 //!
-//! Flag parsing is hand-rolled (offline environment: no clap).
+//! Flag parsing is hand-rolled (offline environment: no clap) and lives
+//! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
 
 use anyhow::{bail, Context, Result};
 
-use msao::baselines::{serve_trace_baseline, Baseline};
+use msao::cli::{self, Args};
 use msao::config::Config;
-use msao::coordinator::{serve_trace, Coordinator, Mode};
+use msao::coordinator::{serve, Coordinator};
 use msao::experiments;
 use msao::metrics::summarize;
 use msao::workload::Generator;
-
-struct Args {
-    cmd: String,
-    flags: std::collections::HashMap<String, String>,
-}
-
-fn parse_args() -> Result<Args> {
-    let mut it = std::env::args().skip(1);
-    let cmd = it.next().unwrap_or_else(|| "info".to_string());
-    let mut flags = std::collections::HashMap::new();
-    while let Some(a) = it.next() {
-        if let Some(name) = a.strip_prefix("--") {
-            let val = it.next().with_context(|| format!("missing value for --{name}"))?;
-            flags.insert(name.to_string(), val);
-        } else {
-            bail!("unexpected argument {a:?}");
-        }
-    }
-    Ok(Args { cmd, flags })
-}
-
-impl Args {
-    fn get(&self, k: &str) -> Option<&str> {
-        self.flags.get(k).map(|s| s.as_str())
-    }
-
-    fn usize_or(&self, k: &str, d: usize) -> Result<usize> {
-        Ok(match self.get(k) {
-            Some(v) => v.parse()?,
-            None => d,
-        })
-    }
-
-    fn f64_or(&self, k: &str, d: f64) -> Result<f64> {
-        Ok(match self.get(k) {
-            Some(v) => v.parse()?,
-            None => d,
-        })
-    }
-}
 
 fn load_config(args: &Args) -> Result<Config> {
     match args.get("config") {
@@ -67,7 +34,7 @@ fn load_config(args: &Args) -> Result<Config> {
 }
 
 fn main() -> Result<()> {
-    let args = parse_args()?;
+    let args = Args::parse(std::env::args().skip(1))?;
     match args.cmd.as_str() {
         "info" => {
             let cfg = load_config(&args)?;
@@ -123,28 +90,13 @@ fn main() -> Result<()> {
         "serve" => {
             let mut cfg = load_config(&args)?;
             cfg.network.bandwidth_mbps = args.f64_or("bandwidth", cfg.network.bandwidth_mbps)?;
-            cfg.serve.max_inflight = args.usize_or("concurrency", cfg.serve.max_inflight)?;
-            let n = args.usize_or("n", 16)?;
-            let mode = args.get("mode").unwrap_or("msao").to_string();
+            let (mode, spec) = cli::serve_spec(&args)?;
+            let n = spec.items.len();
+            let conc = spec.effective_concurrency(&cfg);
             let mut coord = Coordinator::new(cfg)?;
-            let mut gen = Generator::new(args.usize_or("seed", 42)? as u64);
-            let items = gen.items(msao::workload::Benchmark::Vqa, n);
-            let arrivals = gen.arrivals(n, args.f64_or("rate", 2.0)?);
-            let res = match mode.as_str() {
-                "msao" => serve_trace(&mut coord, &items, &arrivals, Mode::Msao, 1)?,
-                "no-modality" => {
-                    serve_trace(&mut coord, &items, &arrivals, Mode::NoModalityAware, 1)?
-                }
-                "no-collab" => {
-                    serve_trace(&mut coord, &items, &arrivals, Mode::NoCollabSched, 1)?
-                }
-                "cloud" => serve_trace_baseline(&mut coord, Baseline::CloudOnly, &items, &arrivals, 1)?,
-                "edge" => serve_trace_baseline(&mut coord, Baseline::EdgeOnly, &items, &arrivals, 1)?,
-                "perllm" => serve_trace_baseline(&mut coord, Baseline::PerLlm, &items, &arrivals, 1)?,
-                other => bail!("unknown mode {other:?}"),
-            };
+            let res = serve(&mut coord, &spec)?;
             let sum = summarize(&res.records);
-            println!("mode={mode} n={n}");
+            println!("mode={mode} n={n} seed={} concurrency={conc}", spec.seed);
             println!(
                 "accuracy {:.1}%  latency mean {:.3}s p99 {:.3}s  throughput {:.1} tok/s",
                 sum.accuracy * 100.0,

@@ -5,16 +5,22 @@
 
 use std::sync::{Mutex, OnceLock};
 
-use msao::baselines::{serve_trace_baseline, Baseline};
+use msao::baselines::{cloud_only, edge_only, perllm, Baseline};
 use msao::config::Config;
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
-    msao_testbed, serve_trace, serve_trace_concurrent, Batcher, Coordinator, Mode,
+    serve, testbed, Batcher, Coordinator, Mode, PolicyKind, TraceSpec,
 };
 use msao::metrics::summarize;
 use msao::sparsity::Modality;
-use msao::workload::{Benchmark, Generator};
+use msao::workload::{Benchmark, Generator, Item};
+
+/// MSAO trace spec with the policy default concurrency (what the old
+/// `serve_trace` entrypoint used).
+fn msao_spec(items: Vec<Item>, arrivals: Vec<f64>, mode: Mode, seed: u64) -> TraceSpec {
+    TraceSpec::new(PolicyKind::Msao(mode)).trace(items, arrivals).seed(seed)
+}
 
 fn coord() -> std::sync::MutexGuard<'static, Coordinator> {
     static C: OnceLock<Mutex<Coordinator>> = OnceLock::new();
@@ -127,13 +133,16 @@ fn msao_beats_cloud_only_latency_and_flops_under_load() {
     let items = gen.items(Benchmark::Vqa, 10);
     let arrivals = gen.arrivals(10, 1.3);
     let msao = summarize(
-        &serve_trace(&mut c, &items, &arrivals, Mode::Msao, 1).unwrap().records,
-    );
-    let cloud = summarize(
-        &serve_trace_baseline(&mut c, Baseline::CloudOnly, &items, &arrivals, 1)
+        &serve(&mut c, &msao_spec(items.clone(), arrivals.clone(), Mode::Msao, 1))
             .unwrap()
             .records,
     );
+    // Concurrency 1 = the sequential loop the baselines ran pre-unification.
+    let cloud_spec = TraceSpec::new(PolicyKind::CloudOnly)
+        .trace(items, arrivals)
+        .seed(1)
+        .concurrency(1);
+    let cloud = summarize(&serve(&mut c, &cloud_spec).unwrap().records);
     assert!(
         msao.latency_mean_s < cloud.latency_mean_s,
         "MSAO {} vs cloud {}",
@@ -154,12 +163,20 @@ fn ablations_degrade_the_right_metrics() {
     let mut gen = Generator::new(77);
     let items = gen.items(Benchmark::Vqa, 10);
     let arrivals = gen.arrivals(10, 1.3);
-    let full = summarize(&serve_trace(&mut c, &items, &arrivals, Mode::Msao, 2).unwrap().records);
+    let full = summarize(
+        &serve(&mut c, &msao_spec(items.clone(), arrivals.clone(), Mode::Msao, 2))
+            .unwrap()
+            .records,
+    );
     let no_collab = summarize(
-        &serve_trace(&mut c, &items, &arrivals, Mode::NoCollabSched, 2).unwrap().records,
+        &serve(&mut c, &msao_spec(items.clone(), arrivals.clone(), Mode::NoCollabSched, 2))
+            .unwrap()
+            .records,
     );
     let no_aware = summarize(
-        &serve_trace(&mut c, &items, &arrivals, Mode::NoModalityAware, 2).unwrap().records,
+        &serve(&mut c, &msao_spec(items, arrivals, Mode::NoModalityAware, 2))
+            .unwrap()
+            .records,
     );
     // Static scheduling costs latency (Fig. 9 right).
     assert!(
@@ -182,7 +199,7 @@ fn speculative_tokens_match_cloud_greedy_semantics() {
     let eng_c = c.eng.c.clone();
     let mut gen = Generator::new(9);
     let items = gen.items(Benchmark::Vqa, 1);
-    let res = serve_trace(&mut c, &items, &[0.0], Mode::Msao, 3).unwrap();
+    let res = serve(&mut c, &msao_spec(items, vec![0.0], Mode::Msao, 3)).unwrap();
     let rec = &res.records[0];
     assert!(rec.tokens_out >= 32, "tokens {}", rec.tokens_out);
     assert!(rec.proposed > 0 && rec.accepted <= rec.proposed);
@@ -201,12 +218,13 @@ fn scheduler_concurrency_one_reproduces_sequential_fcfs() {
     let n = 6;
     let items = gen.items(Benchmark::Vqa, n);
     let arrivals = gen.arrivals(n, 1.3);
-    let sched = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 5, 1).unwrap();
+    let spec = msao_spec(items.clone(), arrivals.clone(), Mode::Msao, 5).concurrency(1);
+    let sched = serve(&mut c, &spec).unwrap();
 
     // Seed FCFS reference: one request to completion at a time, sharing
     // testbed, batcher and theta exactly like the seed serve_trace did.
     let cfg = c.cfg.clone();
-    let mut vc = msao_testbed(&cfg, 5);
+    let mut vc = testbed(&cfg, 5, &PolicyKind::Msao(Mode::Msao).resident_profile());
     let mut batcher = Batcher::new(cfg.serve.batch_wait_ms, cfg.serve.verify_batch, true);
     let mut theta = c.theta();
     for (i, (item, &arr)) in items.iter().zip(&arrivals).enumerate() {
@@ -237,7 +255,8 @@ fn cross_request_verify_batching_under_concurrent_load() {
     let items = gen.items(Benchmark::Vqa, n);
     // Burst arrivals: everything lands within ~100 ms.
     let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
-    let res = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 7, 8).unwrap();
+    let spec = msao_spec(items, arrivals, Mode::Msao, 7).concurrency(8);
+    let res = serve(&mut c, &spec).unwrap();
     assert!(
         res.batch_amortization > 0.0,
         "no cross-request piggyback (amortization {})",
@@ -256,7 +275,8 @@ fn concurrent_poisson_trace_completes_every_session() {
     let n = 16;
     let items = gen.items(Benchmark::MmBench, n);
     let arrivals = gen.arrivals(n, 4.0);
-    let res = serve_trace_concurrent(&mut c, &items, &arrivals, Mode::Msao, 11, 8).unwrap();
+    let spec = msao_spec(items, arrivals, Mode::Msao, 11).concurrency(8);
+    let res = serve(&mut c, &spec).unwrap();
     assert_eq!(res.records.len(), n);
     for (i, r) in res.records.iter().enumerate() {
         assert!(r.tokens_out > 0, "req {i} produced no tokens");
@@ -273,13 +293,135 @@ fn perllm_lands_between_edge_and_cloud_accuracy() {
     let n = 14;
     let items = gen.items(Benchmark::Vqa, n);
     let arrivals = gen.arrivals(n, 1.3);
-    let per = summarize(
-        &serve_trace_baseline(&mut c, Baseline::PerLlm, &items, &arrivals, 4).unwrap().records,
-    );
+    let spec = TraceSpec::new(PolicyKind::PerLlm)
+        .trace(items, arrivals)
+        .seed(4)
+        .concurrency(1);
+    let per = summarize(&serve(&mut c, &spec).unwrap().records);
     // p_correct (not the sampled accuracy, which is noisy at n=14) must
     // sit between the edge and cloud capability anchors.
-    let recs = serve_trace_baseline(&mut c, Baseline::PerLlm, &items, &arrivals, 4).unwrap();
+    let recs = serve(&mut c, &spec).unwrap();
     let mean_p: f64 = recs.records.iter().map(|r| r.p_correct).sum::<f64>() / n as f64;
     assert!(mean_p > 0.55 && mean_p < 0.80, "PerLLM mean p_correct {mean_p}");
     assert!(per.tflops_per_req > 0.0);
+}
+
+#[test]
+fn baseline_sessions_reproduce_sequential_loop_bit_for_bit() {
+    // Golden equivalence, one sub-case per baseline: the event-driven
+    // session path at concurrency 1 must reproduce the pre-refactor
+    // run-to-completion loop bit for bit — same tokens, same virtual
+    // times, same bytes, same quality — on an identically seeded
+    // testbed. The references are the straight-line `serve` functions
+    // each baseline module keeps verbatim from before the refactor.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    for (policy, baseline) in [
+        (PolicyKind::CloudOnly, Baseline::CloudOnly),
+        (PolicyKind::EdgeOnly, Baseline::EdgeOnly),
+        (PolicyKind::PerLlm, Baseline::PerLlm),
+    ] {
+        let mut gen = Generator::new(31);
+        let n = 5;
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 1.3);
+        let spec = TraceSpec::new(policy.clone())
+            .trace(items.clone(), arrivals.clone())
+            .seed(5)
+            .concurrency(1);
+        let new = serve(&mut c, &spec).unwrap();
+        assert_eq!(new.records.len(), n);
+
+        // The old loop: each request served to completion in arrival
+        // order on an identically configured shared testbed (what
+        // `serve_trace_baseline` did before the unification).
+        let cfg = c.cfg.clone();
+        let mut vc = testbed(&cfg, 5, &policy.resident_profile());
+        for (i, (item, &arr)) in items.iter().zip(&arrivals).enumerate() {
+            let rec = match baseline {
+                Baseline::CloudOnly => cloud_only::serve(&mut c, &mut vc, item, arr),
+                Baseline::EdgeOnly => edge_only::serve(&mut c, &mut vc, item, arr),
+                Baseline::PerLlm => perllm::serve(&mut c, &mut vc, item, arr),
+            }
+            .unwrap();
+            let s = &new.records[i];
+            assert_eq!(rec.tokens_out, s.tokens_out, "{policy:?} req {i}: tokens");
+            assert_eq!(rec.bytes_up, s.bytes_up, "{policy:?} req {i}: bytes_up");
+            assert_eq!(rec.bytes_down, s.bytes_down, "{policy:?} req {i}: bytes_down");
+            assert_eq!(rec.t_done.to_bits(), s.t_done.to_bits(), "{policy:?} req {i}: t_done");
+            assert_eq!(
+                rec.latency_s.to_bits(),
+                s.latency_s.to_bits(),
+                "{policy:?} req {i}: latency"
+            );
+            assert_eq!(
+                rec.prefill_s.to_bits(),
+                s.prefill_s.to_bits(),
+                "{policy:?} req {i}: prefill"
+            );
+            assert_eq!(
+                rec.flops_edge.to_bits(),
+                s.flops_edge.to_bits(),
+                "{policy:?} req {i}: flops_edge"
+            );
+            assert_eq!(
+                rec.flops_cloud.to_bits(),
+                s.flops_cloud.to_bits(),
+                "{policy:?} req {i}: flops_cloud"
+            );
+            assert_eq!(
+                rec.mem_serving_gb.to_bits(),
+                s.mem_serving_gb.to_bits(),
+                "{policy:?} req {i}: mem_serving"
+            );
+            assert_eq!(
+                rec.p_correct.to_bits(),
+                s.p_correct.to_bits(),
+                "{policy:?} req {i}: p_correct"
+            );
+            assert_eq!(rec.correct, s.correct, "{policy:?} req {i}: correct");
+        }
+        assert_eq!(new.uplink_bytes, vc.link.uplink_bytes, "{policy:?}: uplink bytes");
+        assert_eq!(new.downlink_bytes, vc.link.downlink_bytes, "{policy:?}: downlink bytes");
+    }
+}
+
+#[test]
+fn mixed_policy_trace_serves_heterogeneous_tenants() {
+    // A PerRequest trace mixes MSAO and baseline sessions on one shared
+    // cluster under the event-driven interleave: every session must
+    // complete (starvation-free) with causal times, and per-tenant
+    // signatures must survive (edge-only ships nothing up; cloud-only
+    // ships raw payloads).
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let mut gen = Generator::new(55);
+    let n = 8;
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.05).collect();
+    let policies: Vec<PolicyKind> = (0..n)
+        .map(|i| match i % 4 {
+            0 => PolicyKind::Msao(Mode::Msao),
+            1 => PolicyKind::CloudOnly,
+            2 => PolicyKind::EdgeOnly,
+            _ => PolicyKind::PerLlm,
+        })
+        .collect();
+    let spec = TraceSpec::new(PolicyKind::PerRequest(policies))
+        .trace(items, arrivals)
+        .seed(13)
+        .concurrency(4);
+    let res = serve(&mut c, &spec).unwrap();
+    assert_eq!(res.records.len(), n);
+    for (i, r) in res.records.iter().enumerate() {
+        assert!(r.tokens_out > 0, "req {i} produced no tokens");
+        assert!(r.t_done > r.t_arrival, "req {i}: non-causal completion");
+        assert!(r.latency_s.is_finite() && r.latency_s > 0.0, "req {i}: latency");
+    }
+    for i in (2..n).step_by(4) {
+        assert_eq!(res.records[i].bytes_up, 0, "edge-only req {i} used the uplink");
+    }
+    for i in (1..n).step_by(4) {
+        assert!(res.records[i].bytes_up > 0, "cloud-only req {i} shipped nothing");
+    }
 }
