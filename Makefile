@@ -1,0 +1,31 @@
+# MSAO build entry points. `make artifacts` is the one-time AOT compile
+# step (python/JAX) that README, rust/tests/engine_golden.rs and
+# python/tests/test_aot.py refer to; everything after it is cargo.
+
+ARTIFACTS := artifacts
+
+.PHONY: artifacts test pytest fmt clean
+
+# Build the AOT artifacts (HLO graphs + weights + golden outputs) the
+# rust engines load at runtime. Requires JAX; writes $(ARTIFACTS)/.
+artifacts: $(ARTIFACTS)/manifest.json
+
+$(ARTIFACTS)/manifest.json:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS)
+
+# Tier-1 gate (ROADMAP.md). Engine-backed tests self-skip when
+# artifacts/ is absent; run `make artifacts` first for the full suite.
+test:
+	cargo build --release
+	cargo test -q
+
+# Python-side tests (kernel/model/AOT smoke); builds artifacts first so
+# test_aot.py does not skip.
+pytest: artifacts
+	cd python && python -m pytest tests -q
+
+fmt:
+	cargo fmt
+
+clean:
+	rm -rf $(ARTIFACTS) target

@@ -3,8 +3,8 @@
 //! building blocks under the coordinator; none may show up in an
 //! end-to-end profile.
 
-use msao::cluster::{DeviceSim, Link, SimModel};
-use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg};
+use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
+use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario};
 use msao::optimizer::linalg;
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::bench::{bench, black_box, header};
@@ -36,6 +36,30 @@ fn main() {
             t += link.transfer_s(100_000, msao::cluster::Dir::Up);
         }
         black_box(t);
+    });
+
+    // Time-varying condition sampling + monitor EMA: per-transfer costs
+    // of the dynamic substrate (must stay negligible vs the cost model).
+    let netcfg = NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.0 };
+    let mut flaky =
+        Link::with_dynamics(netcfg, &NetworkDynamics::Scenario(NetworkScenario::Flaky), 3);
+    bench("network/conditions_at flaky x1000", 2000, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            // Cycle a bounded window so the lazy Markov chain stays small.
+            let (bw, rtt) = flaky.conditions_at((i % 400) as f64 * 0.25);
+            acc += bw + rtt;
+        }
+        black_box(acc);
+    });
+    let mut mon = SystemMonitor::new(&netcfg, 0.3);
+    bench("monitor/observe+estimate x1000", 5000, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            mon.observe_transfer(200.0 + (i % 7) as f64, 20.0);
+            acc += mon.estimate().bandwidth_mbps;
+        }
+        black_box(acc);
     });
 
     let dev = DeviceSim::new(DeviceCfg::a100());

@@ -84,7 +84,7 @@ fn main() -> Result<()> {
                 sweep.row(vec![
                     name.into(),
                     f1(rate),
-                    format!("{conc}"),
+                    conc.to_string(),
                     f1(s.throughput_tps),
                     f3(s.latency_p50_s),
                     f3(s.latency_p99_s),

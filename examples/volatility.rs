@@ -1,0 +1,106 @@
+//! Link volatility: what happens to each serving strategy when the
+//! edge-cloud link degrades mid-trace — and how MSAO's system monitor
+//! lets it re-partition while the static baselines keep shipping full
+//! payloads into the degraded link.
+//!
+//! Section 1 sweeps the named scenarios (constant / step-drop / burst /
+//! flaky) across all four methods. Section 2 zooms into MSAO on a
+//! degraded-from-t0 trace: per-request uplink bytes against the same
+//! requests on a constant link, showing the plan change the moment the
+//! monitor's estimate converges (request 0 still plans on the stale
+//! 300 Mbps prior — identical bytes — then replans mid-stream).
+//!
+//!     cargo run --release --example volatility [-- <n_requests>]
+
+use anyhow::Result;
+
+use msao::config::{Config, NetworkDynamics, NetworkScenario, Segment};
+use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceResult, TraceSpec};
+use msao::metrics::summarize;
+use msao::util::table::{f1, f2, f3, Table};
+use msao::workload::{Benchmark, Generator};
+
+/// One MSAO trace (seed 42/7, conc 1) under the given link dynamics.
+fn msao_trace(c: &mut Coordinator, dynamics: NetworkDynamics, n: usize) -> Result<TraceResult> {
+    c.cfg.dynamics = dynamics;
+    let mut gen = Generator::new(42);
+    let items = gen.items(Benchmark::Vqa, n);
+    let arrivals = gen.arrivals(n, 1.8);
+    let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+        .trace(items, arrivals)
+        .seed(7)
+        .concurrency(1);
+    serve(c, &spec)
+}
+
+fn main() -> Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let mut coord = Coordinator::new(Config::default())?;
+
+    let mut table = Table::new(
+        "volatility sweep (VQA, 300 Mbps nominal, 1.8 req/s, conc 1)",
+        &["scenario", "method", "lat_mean_s", "lat_p99_s", "MB_up_req", "replans_req", "bw_est"],
+    );
+    for scenario in NetworkScenario::ALL {
+        coord.cfg.dynamics = NetworkDynamics::Scenario(scenario);
+        for (name, policy) in [
+            ("MSAO", PolicyKind::Msao(Mode::Msao)),
+            ("Cloud-only", PolicyKind::CloudOnly),
+            ("Edge-only", PolicyKind::EdgeOnly),
+            ("PerLLM", PolicyKind::PerLlm),
+        ] {
+            let mut gen = Generator::new(42);
+            let items = gen.items(Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, 1.8);
+            let spec = TraceSpec::new(policy).trace(items, arrivals).seed(7).concurrency(1);
+            let res = serve(&mut coord, &spec)?;
+            let s = summarize(&res.records);
+            table.row(vec![
+                scenario.name().into(),
+                name.into(),
+                f3(s.latency_mean_s),
+                f3(s.latency_p99_s),
+                f2(s.gb_up_per_req * 1e3),
+                f2(s.replans_per_req),
+                f1(res.net_estimate.bandwidth_mbps),
+            ]);
+        }
+    }
+    table.print();
+
+    // --- re-partitioning, request by request ---------------------------
+    // Degraded from t=0 (bw x0.2, rtt x2) while the monitor still
+    // believes the nominal 300 Mbps: request 0's plan is made on the
+    // stale prior (same bytes as the constant run), the estimate
+    // converges during its decode, and later requests plan against the
+    // degraded belief.
+    let mut per_req = Table::new(
+        "MSAO per-request uplink: constant vs degraded-from-t0 link",
+        &["req", "MB_up constant", "MB_up degraded", "replans"],
+    );
+    let constant = msao_trace(&mut coord, NetworkDynamics::Constant, n)?;
+    let degraded = msao_trace(
+        &mut coord,
+        NetworkDynamics::Trace(vec![Segment {
+            t_start: 0.0,
+            bandwidth_mbps: 60.0,
+            rtt_ms: 40.0,
+        }]),
+        n,
+    )?;
+    for (i, (c, d)) in constant.records.iter().zip(&degraded.records).enumerate() {
+        per_req.row(vec![
+            i.to_string(),
+            f2(c.bytes_up as f64 / 1e6),
+            f2(d.bytes_up as f64 / 1e6),
+            d.replans.to_string(),
+        ]);
+    }
+    per_req.print();
+    println!(
+        "monitor belief after the degraded trace: {:.1} Mbps rtt {:.1} ms (truth: 60 / 40)",
+        degraded.net_estimate.bandwidth_mbps, degraded.net_estimate.rtt_ms
+    );
+    coord.cfg.dynamics = NetworkDynamics::Constant;
+    Ok(())
+}

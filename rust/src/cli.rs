@@ -12,11 +12,15 @@
 //! * `--concurrency` is honored by every mode; without it, the policy's
 //!   default applies (sequential for `no-collab`, `serve.max_inflight`
 //!   otherwise).
+//! * `--network` picks a time-varying link scenario
+//!   (`constant|step-drop|burst|flaky`) layered over the base
+//!   bandwidth; without it the link is constant (the static substrate).
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::config::{NetworkDynamics, NetworkScenario};
 use crate::coordinator::{Mode, PolicyKind, TraceSpec};
 use crate::workload::{Benchmark, Generator};
 
@@ -73,6 +77,15 @@ pub fn policy_for_mode(mode: &str) -> Result<PolicyKind> {
             "unknown mode {other:?} (try msao|no-modality|no-collab|cloud|edge|perllm|mixed)"
         ),
     })
+}
+
+/// Time-varying link dynamics for the `--network` flag (None = flag
+/// absent: keep whatever the config file chose).
+pub fn network_dynamics(args: &Args) -> Result<Option<NetworkDynamics>> {
+    match args.get("network") {
+        None => Ok(None),
+        Some(v) => Ok(Some(NetworkDynamics::Scenario(NetworkScenario::parse(v)?))),
+    }
 }
 
 /// Build the `msao serve` trace spec from parsed flags. Returns the
@@ -165,5 +178,26 @@ mod tests {
     fn flag_parser_rejects_bare_values_and_missing_values() {
         assert!(Args::parse(["serve", "oops"].iter().map(|s| s.to_string())).is_err());
         assert!(Args::parse(["serve", "--n"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn network_flag_maps_to_scenario_dynamics() {
+        let a = argv(&["serve", "--n", "2"]);
+        assert_eq!(network_dynamics(&a).unwrap(), None);
+        for (flag, want) in [
+            ("constant", NetworkScenario::Constant),
+            ("step-drop", NetworkScenario::StepDrop),
+            ("burst", NetworkScenario::Burst),
+            ("flaky", NetworkScenario::Flaky),
+        ] {
+            let a = argv(&["serve", "--network", flag]);
+            assert_eq!(
+                network_dynamics(&a).unwrap(),
+                Some(NetworkDynamics::Scenario(want)),
+                "flag {flag}"
+            );
+        }
+        let a = argv(&["serve", "--network", "bogus"]);
+        assert!(network_dynamics(&a).is_err());
     }
 }

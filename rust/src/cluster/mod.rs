@@ -1,12 +1,16 @@
 //! Cluster substrates: the analytic device cost model, the edge-cloud
-//! network link, and memory accounting — the simulated testbed standing
-//! in for the paper's A100 + RTX 3090 + 200-400 Mbps deployment
-//! (DESIGN.md §3 substitution table).
+//! network link with time-varying conditions, the system monitor
+//! (EMA bandwidth/RTT/load estimates the coordinator plans against),
+//! and memory accounting — the simulated testbed standing in for the
+//! paper's A100 + RTX 3090 + 200-400 Mbps deployment (DESIGN.md §3
+//! substitution table).
 
 pub mod costmodel;
 pub mod memory;
+pub mod monitor;
 pub mod network;
 
 pub use costmodel::{DeviceSim, SimModel};
 pub use memory::{activation_bytes, kv_bytes, MemTracker};
+pub use monitor::{NetEstimate, SystemMonitor};
 pub use network::{Dir, Link};

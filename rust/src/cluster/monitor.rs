@@ -1,0 +1,152 @@
+//! System monitor: the coordinator's *belief* about real-time system
+//! state (paper §4.2 — "dynamically schedules workloads ... based on
+//! the derived MAS scores and real-time system states").
+//!
+//! The edge coordinator cannot read the link's ground-truth conditions;
+//! it can only observe them. [`SystemMonitor`] passively watches
+//! completed transfers (the effective bandwidth/RTT each one
+//! experienced) and per-site queue waits. The bandwidth/RTT estimates
+//! are what the planner's Eq. 14 cost model, the adaptive site router's
+//! link terms, and the per-round speculative replanning consume
+//! *instead of* the ground-truth config; estimates lag reality by the
+//! EMA horizon, so MSAO genuinely adapts — and transiently
+//! mis-estimates — like the paper's system. The queue-wait EMAs are the
+//! load-observability half (surfaced via `TraceResult`): scheduling
+//! itself reads the coordinator's own *exact* queue depths, which a
+//! real edge coordinator does know locally.
+//!
+//! Estimates are seeded from the config's nominal conditions (the same
+//! prior the static planner used to hard-code). Under constant
+//! conditions every observation equals the prior, the EMA update adds
+//! an exact zero, and the estimates stay *bitwise* equal to the config
+//! — which is what makes the dynamic substrate reproduce the static
+//! numbers bit for bit.
+
+use crate::config::NetworkCfg;
+
+/// The monitor's current belief about link conditions, in the same
+/// units as [`NetworkCfg`] so it can substitute for it in cost models.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetEstimate {
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+}
+
+/// Passive observer of the serving substrate: EMA estimates of link
+/// bandwidth/RTT (from completed transfers) and per-site queue wait
+/// (from device scheduling events).
+#[derive(Debug, Clone)]
+pub struct SystemMonitor {
+    est: NetEstimate,
+    edge_wait_s: f64,
+    cloud_wait_s: f64,
+    alpha: f64,
+    pub transfers_observed: u64,
+}
+
+impl SystemMonitor {
+    /// Seed the estimates with the config's nominal conditions.
+    pub fn new(cfg: &NetworkCfg, alpha: f64) -> Self {
+        SystemMonitor {
+            est: NetEstimate { bandwidth_mbps: cfg.bandwidth_mbps, rtt_ms: cfg.rtt_ms },
+            edge_wait_s: 0.0,
+            cloud_wait_s: 0.0,
+            alpha,
+            transfers_observed: 0,
+        }
+    }
+
+    /// A transfer completed under the given effective conditions.
+    pub fn observe_transfer(&mut self, bandwidth_mbps: f64, rtt_ms: f64) {
+        self.est.bandwidth_mbps += self.alpha * (bandwidth_mbps - self.est.bandwidth_mbps);
+        self.est.rtt_ms += self.alpha * (rtt_ms - self.est.rtt_ms);
+        self.transfers_observed += 1;
+    }
+
+    /// A device op waited `wait_s` behind the site's queue before it
+    /// could start (`cloud` selects the site).
+    pub fn observe_wait(&mut self, cloud: bool, wait_s: f64) {
+        let w = if cloud { &mut self.cloud_wait_s } else { &mut self.edge_wait_s };
+        *w += self.alpha * (wait_s - *w);
+    }
+
+    /// Current link-condition belief.
+    pub fn estimate(&self) -> NetEstimate {
+        self.est
+    }
+
+    /// Smoothed queue wait (seconds) for a site — the load estimate.
+    pub fn wait_s(&self, cloud: bool) -> f64 {
+        if cloud {
+            self.cloud_wait_s
+        } else {
+            self.edge_wait_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> NetworkCfg {
+        NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.0 }
+    }
+
+    #[test]
+    fn seeded_from_config_prior() {
+        let m = SystemMonitor::new(&cfg(), 0.3);
+        assert_eq!(m.estimate(), NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 });
+        assert_eq!(m.wait_s(false), 0.0);
+        assert_eq!(m.transfers_observed, 0);
+    }
+
+    #[test]
+    fn constant_observations_keep_estimates_bitwise_fixed() {
+        // The bit-for-bit guarantee: observing exactly the prior must
+        // not move the estimate by even one ULP.
+        let c = cfg();
+        let mut m = SystemMonitor::new(&c, 0.3);
+        for _ in 0..1000 {
+            m.observe_transfer(c.bandwidth_mbps, c.rtt_ms);
+        }
+        let e = m.estimate();
+        assert_eq!(e.bandwidth_mbps.to_bits(), c.bandwidth_mbps.to_bits());
+        assert_eq!(e.rtt_ms.to_bits(), c.rtt_ms.to_bits());
+        assert_eq!(m.transfers_observed, 1000);
+    }
+
+    #[test]
+    fn estimates_converge_to_a_step_change() {
+        let mut m = SystemMonitor::new(&cfg(), 0.3);
+        for _ in 0..30 {
+            m.observe_transfer(60.0, 40.0);
+        }
+        let e = m.estimate();
+        assert!((e.bandwidth_mbps - 60.0).abs() < 1.0, "bw {}", e.bandwidth_mbps);
+        assert!((e.rtt_ms - 40.0).abs() < 1.0, "rtt {}", e.rtt_ms);
+    }
+
+    #[test]
+    fn convergence_is_gradual_not_instant() {
+        // The lag is the point: the first post-drop observation must NOT
+        // snap the estimate to the new value (the planner mis-estimates
+        // for a while, like a real system).
+        let mut m = SystemMonitor::new(&cfg(), 0.3);
+        m.observe_transfer(60.0, 40.0);
+        let e = m.estimate();
+        assert!((e.bandwidth_mbps - 228.0).abs() < 1e-9, "bw {}", e.bandwidth_mbps);
+        assert!(e.bandwidth_mbps > 60.0 && e.bandwidth_mbps < 300.0);
+    }
+
+    #[test]
+    fn queue_wait_ema_tracks_per_site() {
+        let mut m = SystemMonitor::new(&cfg(), 0.5);
+        m.observe_wait(false, 1.0);
+        m.observe_wait(true, 3.0);
+        assert!((m.wait_s(false) - 0.5).abs() < 1e-12);
+        assert!((m.wait_s(true) - 1.5).abs() < 1e-12);
+        m.observe_wait(false, 1.0);
+        assert!((m.wait_s(false) - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,4 +1,5 @@
-//! Edge-cloud network link simulator (substrate, Eq. 8).
+//! Edge-cloud network link simulator (substrate, Eq. 8) with
+//! time-varying conditions.
 //!
 //! T_comm = DataSize / B_eff + RTT, with optional uniform jitter. The
 //! link meters every byte that crosses it (uplink modality payloads,
@@ -6,13 +7,174 @@
 //! can report exact communication volumes. Time is virtual: the
 //! scheduler owns the clock; `Link` only computes durations and tallies
 //! traffic.
+//!
+//! Conditions are *time-indexed*: a [`ConditionModel`] built from the
+//! config's [`NetworkDynamics`] maps the virtual start time of each
+//! transfer to the bandwidth/RTT in effect — a constant model (the
+//! default), an explicit piecewise-constant trace, or a seeded
+//! Markov-modulated good/degraded/outage process whose segments are
+//! generated lazily as later times are queried. The constant model
+//! reproduces the static link bit for bit: it returns the base
+//! [`NetworkCfg`] values untouched and feeds them through the exact
+//! same arithmetic.
 
-use crate::config::NetworkCfg;
+use crate::config::{NetworkCfg, NetworkDynamics, NetworkScenario, Segment};
 use crate::util::Rng;
+
+/// Serialization time for `bytes` at `bandwidth_mbps` (no propagation).
+pub fn serialize_s_with(bandwidth_mbps: f64, bytes: u64) -> f64 {
+    bytes as f64 * 8.0 / (bandwidth_mbps * 1e6)
+}
+
+/// Conditions covering `t` in a sorted segment list (base before the
+/// first segment).
+fn lookup(segs: &[Segment], base: &NetworkCfg, t: f64) -> (f64, f64) {
+    let idx = segs.partition_point(|s| s.t_start <= t);
+    if idx == 0 {
+        (base.bandwidth_mbps, base.rtt_ms)
+    } else {
+        let s = &segs[idx - 1];
+        (s.bandwidth_mbps, s.rtt_ms)
+    }
+}
+
+/// Lazily-extended Markov-modulated conditions: the chain holds a state
+/// for an exponential dwell, then transitions; each visit appends one
+/// piecewise-constant segment. Deterministic given the seed, and
+/// queries at any (not necessarily monotone) virtual time are answered
+/// from the generated prefix.
+#[derive(Debug, Clone)]
+struct MarkovProcess {
+    /// (bandwidth scale, rtt scale, mean dwell s) per state; start = 0.
+    states: Vec<(f64, f64, f64)>,
+    /// Row-stochastic transition weights (self-transitions allowed).
+    trans: Vec<Vec<f64>>,
+    rng: Rng,
+    segs: Vec<Segment>,
+    state: usize,
+    /// Virtual time the current state's dwell ends.
+    t_end: f64,
+    base: NetworkCfg,
+}
+
+impl MarkovProcess {
+    fn new(
+        base: NetworkCfg,
+        states: Vec<(f64, f64, f64)>,
+        trans: Vec<Vec<f64>>,
+        seed: u64,
+    ) -> Self {
+        let mut p = MarkovProcess {
+            states,
+            trans,
+            rng: Rng::seed_from_u64(seed),
+            segs: Vec::new(),
+            state: 0,
+            t_end: 0.0,
+            base,
+        };
+        p.push_segment(0.0);
+        p
+    }
+
+    fn push_segment(&mut self, t_start: f64) {
+        let (bw_scale, rtt_scale, mean_dwell) = self.states[self.state];
+        self.segs.push(Segment {
+            t_start,
+            bandwidth_mbps: self.base.bandwidth_mbps * bw_scale,
+            rtt_ms: self.base.rtt_ms * rtt_scale,
+        });
+        self.t_end = t_start + self.rng.exp(1.0 / mean_dwell);
+    }
+
+    /// Extend the chain until the current dwell covers `t`.
+    fn ensure(&mut self, t: f64) {
+        while self.t_end <= t {
+            let next = self.rng.weighted(&self.trans[self.state]);
+            self.state = next;
+            let t_start = self.t_end;
+            self.push_segment(t_start);
+        }
+    }
+
+    fn conditions_at(&mut self, t: f64) -> (f64, f64) {
+        self.ensure(t);
+        lookup(&self.segs, &self.base, t)
+    }
+}
+
+/// Runtime sampler mapping virtual time to link conditions, resolved
+/// from the config's [`NetworkDynamics`] at link construction.
+#[derive(Debug, Clone)]
+enum ConditionModel {
+    Constant,
+    Trace(Vec<Segment>),
+    Markov(MarkovProcess),
+}
+
+impl ConditionModel {
+    fn build(cfg: NetworkCfg, dynamics: &NetworkDynamics, seed: u64) -> Self {
+        match dynamics {
+            NetworkDynamics::Constant => ConditionModel::Constant,
+            NetworkDynamics::Trace(segs) => ConditionModel::Trace(segs.clone()),
+            NetworkDynamics::Scenario(s) => Self::scenario(cfg, *s, seed),
+        }
+    }
+
+    /// Resolve a named scenario against the base conditions.
+    fn scenario(cfg: NetworkCfg, s: NetworkScenario, seed: u64) -> Self {
+        match s {
+            NetworkScenario::Constant => ConditionModel::Constant,
+            // Permanent degradation at t = 4 s: bandwidth x0.2, RTT x2.
+            NetworkScenario::StepDrop => ConditionModel::Trace(vec![Segment {
+                t_start: 4.0,
+                bandwidth_mbps: cfg.bandwidth_mbps * 0.2,
+                rtt_ms: cfg.rtt_ms * 2.0,
+            }]),
+            // Periodic congestion: every 8 s, a 2 s window at x0.3 / x1.5.
+            // Built explicitly to a 240 s horizon (traces at experiment
+            // scale finish well inside it); base conditions afterwards.
+            NetworkScenario::Burst => {
+                let mut segs = Vec::new();
+                let (period, len, horizon) = (8.0, 2.0, 240.0);
+                let mut t = period - len;
+                while t < horizon {
+                    segs.push(Segment {
+                        t_start: t,
+                        bandwidth_mbps: cfg.bandwidth_mbps * 0.3,
+                        rtt_ms: cfg.rtt_ms * 1.5,
+                    });
+                    segs.push(Segment {
+                        t_start: t + len,
+                        bandwidth_mbps: cfg.bandwidth_mbps,
+                        rtt_ms: cfg.rtt_ms,
+                    });
+                    t += period;
+                }
+                ConditionModel::Trace(segs)
+            }
+            // Flaky last-mile link: good (base, mean 6 s) / degraded
+            // (x0.3 bw, x2 rtt, mean 3 s) / outage (x0.05 bw, x5 rtt,
+            // mean 1 s), starting good. Seeded off the link seed so the
+            // jitter RNG stream is untouched.
+            NetworkScenario::Flaky => ConditionModel::Markov(MarkovProcess::new(
+                cfg,
+                vec![(1.0, 1.0, 6.0), (0.3, 2.0, 3.0), (0.05, 5.0, 1.0)],
+                vec![
+                    vec![0.0, 0.8, 0.2],
+                    vec![0.7, 0.0, 0.3],
+                    vec![0.5, 0.5, 0.0],
+                ],
+                seed ^ 0x5EED_11A7,
+            )),
+        }
+    }
+}
 
 #[derive(Debug)]
 pub struct Link {
     cfg: NetworkCfg,
+    model: ConditionModel,
     rng: Rng,
     pub uplink_bytes: u64,
     pub downlink_bytes: u64,
@@ -26,30 +188,72 @@ pub enum Dir {
 }
 
 impl Link {
+    /// Static link (constant conditions) — the pre-dynamics behavior.
     pub fn new(cfg: NetworkCfg, seed: u64) -> Self {
-        Link { cfg, rng: Rng::seed_from_u64(seed), uplink_bytes: 0, downlink_bytes: 0, transfers: 0 }
+        Self::with_dynamics(cfg, &NetworkDynamics::Constant, seed)
     }
 
+    /// Link whose conditions follow `dynamics` over virtual time.
+    pub fn with_dynamics(cfg: NetworkCfg, dynamics: &NetworkDynamics, seed: u64) -> Self {
+        Link {
+            model: ConditionModel::build(cfg, dynamics, seed),
+            cfg,
+            rng: Rng::seed_from_u64(seed),
+            uplink_bytes: 0,
+            downlink_bytes: 0,
+            transfers: 0,
+        }
+    }
+
+    /// Base (nominal) bandwidth — the config value, not the current
+    /// condition. Real-time values come from [`Self::conditions_at`].
     pub fn bandwidth_mbps(&self) -> f64 {
         self.cfg.bandwidth_mbps
     }
 
+    /// Base (nominal) RTT in seconds.
     pub fn rtt_s(&self) -> f64 {
         self.cfg.rtt_ms * 1e-3
     }
 
-    /// One-way propagation delay (half the RTT).
+    /// One-way propagation delay at base conditions (half the RTT).
     pub fn one_way_s(&self) -> f64 {
         0.5 * self.rtt_s()
     }
 
-    /// Serialization time for `bytes` on the link (no propagation).
-    pub fn serialize_s(&self, bytes: u64) -> f64 {
-        bytes as f64 * 8.0 / (self.cfg.bandwidth_mbps * 1e6)
+    /// Ground-truth `(bandwidth_mbps, rtt_ms)` in effect at virtual
+    /// time `t`. `&mut` because the Markov model lazily extends its
+    /// segment list to cover `t`.
+    pub fn conditions_at(&mut self, t: f64) -> (f64, f64) {
+        match &mut self.model {
+            ConditionModel::Constant => (self.cfg.bandwidth_mbps, self.cfg.rtt_ms),
+            ConditionModel::Trace(segs) => lookup(segs, &self.cfg, t),
+            ConditionModel::Markov(p) => p.conditions_at(t),
+        }
     }
 
-    /// Duration of a one-way transfer of `bytes` (Eq. 8 with one-way
-    /// propagation; a request-response pair costs a full RTT).
+    /// Serialization time for `bytes` at base conditions.
+    pub fn serialize_s(&self, bytes: u64) -> f64 {
+        serialize_s_with(self.cfg.bandwidth_mbps, bytes)
+    }
+
+    /// Serialization time for `bytes` under the conditions at `t`.
+    pub fn serialize_s_at(&mut self, t: f64, bytes: u64) -> f64 {
+        let (bw, _) = self.conditions_at(t);
+        serialize_s_with(bw, bytes)
+    }
+
+    /// One-way propagation delay under the conditions at `t`.
+    pub fn one_way_s_at(&mut self, t: f64) -> f64 {
+        let (_, rtt) = self.conditions_at(t);
+        0.5 * (rtt * 1e-3)
+    }
+
+    /// Duration of a one-way transfer of `bytes` at base conditions
+    /// (Eq. 8 with one-way propagation; a request-response pair costs a
+    /// full RTT). Time-indexed callers go through the
+    /// [`crate::coordinator::timeline::VirtualCluster`] send paths,
+    /// which sample [`Self::conditions_at`] instead.
     pub fn transfer_s(&mut self, bytes: u64, dir: Dir) -> f64 {
         self.transfers += 1;
         match dir {
@@ -118,7 +322,7 @@ mod tests {
             let ta = a.transfer_s(1_000_000, Dir::Up);
             let tb = b.transfer_s(1_000_000, Dir::Up);
             assert_eq!(ta, tb); // same seed, same jitter
-            assert!(ta >= base * 0.9 - 1e-12 && ta <= base * 1.1 + 1e-12);
+            assert!((base * 0.9 - 1e-12..=base * 1.1 + 1e-12).contains(&ta));
         }
     }
 
@@ -129,5 +333,91 @@ mod tests {
         l.transfer_s(50, Dir::Down);
         assert_eq!(l.total_bytes(), 150);
         assert_eq!(l.transfers, 2);
+    }
+
+    #[test]
+    fn constant_conditions_bitwise_match_base() {
+        let c = cfg(300.0, 20.0, 0.0);
+        let mut l = Link::new(c, 1);
+        for t in [0.0, 0.5, 17.3, 1e6] {
+            let (bw, rtt) = l.conditions_at(t);
+            assert_eq!(bw.to_bits(), c.bandwidth_mbps.to_bits());
+            assert_eq!(rtt.to_bits(), c.rtt_ms.to_bits());
+            assert_eq!(
+                l.serialize_s_at(t, 123_456).to_bits(),
+                l.serialize_s(123_456).to_bits()
+            );
+            assert_eq!(l.one_way_s_at(t).to_bits(), l.one_way_s().to_bits());
+        }
+    }
+
+    #[test]
+    fn explicit_trace_switches_at_segment_boundaries() {
+        let c = cfg(300.0, 20.0, 0.0);
+        let dynamics = NetworkDynamics::Trace(vec![
+            Segment { t_start: 1.0, bandwidth_mbps: 100.0, rtt_ms: 30.0 },
+            Segment { t_start: 5.0, bandwidth_mbps: 50.0, rtt_ms: 60.0 },
+        ]);
+        let mut l = Link::with_dynamics(c, &dynamics, 1);
+        assert_eq!(l.conditions_at(0.5), (300.0, 20.0)); // base before trace
+        assert_eq!(l.conditions_at(1.0), (100.0, 30.0)); // boundary inclusive
+        assert_eq!(l.conditions_at(4.999), (100.0, 30.0));
+        assert_eq!(l.conditions_at(5.0), (50.0, 60.0));
+        assert_eq!(l.conditions_at(1e9), (50.0, 60.0)); // last extends forever
+        // Non-monotone queries are fine (independent uplink/downlink
+        // cursors query out of order).
+        assert_eq!(l.conditions_at(2.0), (100.0, 30.0));
+    }
+
+    #[test]
+    fn step_drop_scenario_degrades_after_onset() {
+        let c = cfg(300.0, 20.0, 0.0);
+        let mut l =
+            Link::with_dynamics(c, &NetworkDynamics::Scenario(NetworkScenario::StepDrop), 1);
+        assert_eq!(l.conditions_at(0.0), (300.0, 20.0));
+        assert_eq!(l.conditions_at(4.0), (60.0, 40.0));
+        assert!(l.serialize_s_at(10.0, 1_000_000) > l.serialize_s_at(0.0, 1_000_000));
+    }
+
+    #[test]
+    fn burst_scenario_alternates_and_recovers() {
+        let c = cfg(300.0, 20.0, 0.0);
+        let mut l =
+            Link::with_dynamics(c, &NetworkDynamics::Scenario(NetworkScenario::Burst), 1);
+        assert_eq!(l.conditions_at(0.0), (300.0, 20.0)); // before first burst
+        let (bw, rtt) = l.conditions_at(7.0); // inside the 6..8 s window
+        assert_eq!((bw, rtt), (90.0, 30.0));
+        assert_eq!(l.conditions_at(8.5), (300.0, 20.0)); // recovered
+        assert_eq!(l.conditions_at(15.0), (90.0, 30.0)); // next burst
+        assert_eq!(l.conditions_at(1e6), (300.0, 20.0)); // beyond horizon
+    }
+
+    #[test]
+    fn flaky_markov_is_seeded_deterministic_and_bounded() {
+        let c = cfg(300.0, 20.0, 0.0);
+        let dynamics = NetworkDynamics::Scenario(NetworkScenario::Flaky);
+        let mut a = Link::with_dynamics(c, &dynamics, 9);
+        let mut b = Link::with_dynamics(c, &dynamics, 9);
+        let mut other = Link::with_dynamics(c, &dynamics, 10);
+        let mut saw_change = false;
+        let mut prev = a.conditions_at(0.0);
+        for i in 0..400 {
+            let t = i as f64 * 0.25;
+            let ca = a.conditions_at(t);
+            assert_eq!(ca, b.conditions_at(t), "seed-determinism at t={t}");
+            assert!((300.0 * 0.05 - 1e-9..=300.0 + 1e-9).contains(&ca.0), "bw {}", ca.0);
+            assert!((20.0 - 1e-9..=20.0 * 5.0 + 1e-9).contains(&ca.1), "rtt {}", ca.1);
+            if ca != prev {
+                saw_change = true;
+            }
+            prev = ca;
+        }
+        assert!(saw_change, "flaky link never changed state in 100 s");
+        // Different seed, different sample path (overwhelmingly likely).
+        let differs = (0..400).any(|i| {
+            let t = i as f64 * 0.25;
+            a.conditions_at(t) != other.conditions_at(t)
+        });
+        assert!(differs, "independent seeds produced identical paths");
     }
 }

@@ -18,6 +18,9 @@ pub struct Config {
     pub artifacts_dir: String,
     pub msao: MsaoCfg,
     pub network: NetworkCfg,
+    /// How the link conditions evolve over virtual time (default:
+    /// constant — exactly the static link). See [`NetworkDynamics`].
+    pub dynamics: NetworkDynamics,
     pub edge: DeviceCfg,
     pub cloud: DeviceCfg,
     pub serve: ServeCfg,
@@ -29,6 +32,7 @@ impl Default for Config {
             artifacts_dir: "artifacts".to_string(),
             msao: MsaoCfg::default(),
             network: NetworkCfg::default(),
+            dynamics: NetworkDynamics::Constant,
             edge: DeviceCfg::rtx3090(),
             cloud: DeviceCfg::a100(),
             serve: ServeCfg::default(),
@@ -118,6 +122,114 @@ impl Default for NetworkCfg {
     }
 }
 
+/// One piecewise-constant segment of link conditions. A segment holds
+/// from `t_start` until the next segment's `t_start` (the last segment
+/// extends forever); virtual times before the first segment fall back to
+/// the base [`NetworkCfg`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    /// Virtual time (seconds) this segment takes effect.
+    pub t_start: f64,
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+}
+
+/// Named volatility scenarios (CLI `--network`, the `volatility`
+/// experiment). Parameters are *relative* to the base [`NetworkCfg`] so
+/// the same scenario composes with any bandwidth level; the absolute
+/// segment trace (or Markov process) is resolved at link construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetworkScenario {
+    /// Base conditions forever (identical to `NetworkDynamics::Constant`).
+    Constant,
+    /// One permanent degradation mid-trace: bandwidth x0.2, RTT x2 at
+    /// t = 4 s (a backhaul re-route / congestion onset).
+    StepDrop,
+    /// Periodic congestion windows: every 8 s the link spends 2 s at
+    /// bandwidth x0.3 / RTT x1.5 (cross-traffic bursts).
+    Burst,
+    /// Seeded Markov-modulated link: good / degraded / outage states
+    /// with exponential dwell times (a flaky last-mile link).
+    Flaky,
+}
+
+impl NetworkScenario {
+    pub const ALL: [NetworkScenario; 4] = [
+        NetworkScenario::Constant,
+        NetworkScenario::StepDrop,
+        NetworkScenario::Burst,
+        NetworkScenario::Flaky,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NetworkScenario::Constant => "constant",
+            NetworkScenario::StepDrop => "step-drop",
+            NetworkScenario::Burst => "burst",
+            NetworkScenario::Flaky => "flaky",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "constant" => NetworkScenario::Constant,
+            "step-drop" => NetworkScenario::StepDrop,
+            "burst" => NetworkScenario::Burst,
+            "flaky" => NetworkScenario::Flaky,
+            other => bail!(
+                "unknown network scenario {other:?} (try constant|step-drop|burst|flaky)"
+            ),
+        })
+    }
+}
+
+/// Time-varying link-condition model: how bandwidth/RTT evolve over
+/// virtual time. The substrate samples conditions at the virtual start
+/// time of every transfer ([`crate::cluster::Link::conditions_at`]);
+/// `Constant` (the default) never touches the time axis and reproduces
+/// the static link bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetworkDynamics {
+    /// Conditions never change — the base [`NetworkCfg`] forever.
+    Constant,
+    /// Explicit user-supplied piecewise-constant trace (config key
+    /// `network.trace`: an array of `{t, bandwidth_mbps, rtt_ms}`).
+    Trace(Vec<Segment>),
+    /// Named scenario (config key `network.scenario`), resolved against
+    /// the base conditions when the link is built.
+    Scenario(NetworkScenario),
+}
+
+/// Parse `network.trace`: a JSON array of `{t, bandwidth_mbps, rtt_ms}`
+/// objects with non-decreasing `t` and positive bandwidth.
+fn parse_trace(v: &Value) -> Result<Vec<Segment>> {
+    let items = v.as_arr()?;
+    if items.is_empty() {
+        bail!("network.trace must have at least one segment");
+    }
+    let mut segs: Vec<Segment> = Vec::with_capacity(items.len());
+    for (i, e) in items.iter().enumerate() {
+        let seg = Segment {
+            t_start: e.req("t")?.as_f64()?,
+            bandwidth_mbps: e.req("bandwidth_mbps")?.as_f64()?,
+            rtt_ms: e.req("rtt_ms")?.as_f64()?,
+        };
+        if !seg.bandwidth_mbps.is_finite() || seg.bandwidth_mbps <= 0.0 {
+            bail!("network.trace[{i}]: bandwidth_mbps must be > 0");
+        }
+        if !seg.rtt_ms.is_finite() || seg.rtt_ms < 0.0 {
+            bail!("network.trace[{i}]: rtt_ms must be >= 0");
+        }
+        if let Some(prev) = segs.last() {
+            if seg.t_start < prev.t_start {
+                bail!("network.trace[{i}]: t must be non-decreasing");
+            }
+        }
+        segs.push(seg);
+    }
+    Ok(segs)
+}
+
 /// Analytic device model (DESIGN.md §3 substitution for A100 / RTX 3090).
 #[derive(Debug, Clone, Copy)]
 pub struct DeviceCfg {
@@ -173,11 +285,20 @@ pub struct ServeCfg {
     pub batch_wait_ms: f64,
     /// Request queue capacity (admission control).
     pub queue_cap: usize,
+    /// EMA smoothing for the system monitor's bandwidth/RTT/load
+    /// estimates (0 < alpha <= 1; higher reacts faster, noisier).
+    pub monitor_ema: f64,
 }
 
 impl Default for ServeCfg {
     fn default() -> Self {
-        ServeCfg { max_inflight: 4, verify_batch: 4, batch_wait_ms: 6.0, queue_cap: 256 }
+        ServeCfg {
+            max_inflight: 4,
+            verify_batch: 4,
+            batch_wait_ms: 6.0,
+            queue_cap: 256,
+            monitor_ema: 0.3,
+        }
     }
 }
 
@@ -233,12 +354,20 @@ impl Config {
                     });
                 }
                 "network" => {
-                    let n = &mut self.network;
-                    merge_fields!(section.as_obj()?, *n, {
-                        "bandwidth_mbps" => n.bandwidth_mbps => as_f64,
-                        "rtt_ms" => n.rtt_ms => as_f64,
-                        "jitter" => n.jitter => as_f64,
-                    });
+                    for (k2, v2) in section.as_obj()? {
+                        match k2.as_str() {
+                            "bandwidth_mbps" => self.network.bandwidth_mbps = v2.as_f64()?,
+                            "rtt_ms" => self.network.rtt_ms = v2.as_f64()?,
+                            "jitter" => self.network.jitter = v2.as_f64()?,
+                            "scenario" => {
+                                self.dynamics = NetworkDynamics::Scenario(
+                                    NetworkScenario::parse(v2.as_str()?)?,
+                                )
+                            }
+                            "trace" => self.dynamics = NetworkDynamics::Trace(parse_trace(v2)?),
+                            other => bail!("unknown config key {other:?}"),
+                        }
+                    }
                 }
                 "edge" | "cloud" => {
                     let d = if k == "edge" { &mut self.edge } else { &mut self.cloud };
@@ -257,7 +386,17 @@ impl Config {
                         "verify_batch" => s.verify_batch => as_usize,
                         "batch_wait_ms" => s.batch_wait_ms => as_f64,
                         "queue_cap" => s.queue_cap => as_usize,
+                        "monitor_ema" => s.monitor_ema => as_f64,
                     });
+                    // EMA weights outside (0, 1] overshoot (alpha > 1 can
+                    // drive the bandwidth estimate negative) or freeze
+                    // adaptation (alpha <= 0); NaN fails the check too.
+                    if !(self.serve.monitor_ema > 0.0 && self.serve.monitor_ema <= 1.0) {
+                        bail!(
+                            "serve.monitor_ema must be in (0, 1], got {}",
+                            self.serve.monitor_ema
+                        );
+                    }
                 }
                 other => bail!("unknown config section {other:?}"),
             }
@@ -306,5 +445,69 @@ mod tests {
     fn unknown_keys_rejected() {
         assert!(Config::from_json_str(r#"{"msao": {"typo_key": 1}}"#).is_err());
         assert!(Config::from_json_str(r#"{"bogus_section": {}}"#).is_err());
+        assert!(Config::from_json_str(r#"{"network": {"typo_key": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn dynamics_default_constant_and_scenario_parses() {
+        assert_eq!(Config::default().dynamics, NetworkDynamics::Constant);
+        let c = Config::from_json_str(r#"{"network": {"scenario": "step-drop"}}"#).unwrap();
+        assert_eq!(
+            c.dynamics,
+            NetworkDynamics::Scenario(NetworkScenario::StepDrop)
+        );
+        assert!(Config::from_json_str(r#"{"network": {"scenario": "bogus"}}"#).is_err());
+        for s in NetworkScenario::ALL {
+            assert_eq!(NetworkScenario::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn explicit_trace_parses_and_validates() {
+        let c = Config::from_json_str(
+            r#"{"network": {"trace": [
+                {"t": 0, "bandwidth_mbps": 300, "rtt_ms": 20},
+                {"t": 5, "bandwidth_mbps": 60, "rtt_ms": 40}
+            ]}}"#,
+        )
+        .unwrap();
+        match &c.dynamics {
+            NetworkDynamics::Trace(segs) => {
+                assert_eq!(segs.len(), 2);
+                assert_eq!(segs[0].bandwidth_mbps, 300.0);
+                assert_eq!(segs[1].t_start, 5.0);
+                assert_eq!(segs[1].rtt_ms, 40.0);
+            }
+            d => panic!("expected Trace, got {d:?}"),
+        }
+        // Decreasing t, non-positive bandwidth, and empty traces rejected.
+        assert!(Config::from_json_str(
+            r#"{"network": {"trace": [
+                {"t": 5, "bandwidth_mbps": 300, "rtt_ms": 20},
+                {"t": 0, "bandwidth_mbps": 60, "rtt_ms": 40}
+            ]}}"#,
+        )
+        .is_err());
+        assert!(Config::from_json_str(
+            r#"{"network": {"trace": [{"t": 0, "bandwidth_mbps": 0, "rtt_ms": 20}]}}"#,
+        )
+        .is_err());
+        assert!(Config::from_json_str(r#"{"network": {"trace": []}}"#).is_err());
+    }
+
+    #[test]
+    fn monitor_ema_default_and_override() {
+        assert_eq!(Config::default().serve.monitor_ema, 0.3);
+        let c = Config::from_json_str(r#"{"serve": {"monitor_ema": 0.5}}"#).unwrap();
+        assert_eq!(c.serve.monitor_ema, 0.5);
+        assert_eq!(
+            Config::from_json_str(r#"{"serve": {"monitor_ema": 1}}"#).unwrap().serve.monitor_ema,
+            1.0
+        );
+        // Out-of-range EMA weights overshoot or freeze the monitor.
+        for bad in ["0", "-0.2", "3.0"] {
+            let json = format!("{{\"serve\": {{\"monitor_ema\": {bad}}}}}");
+            assert!(Config::from_json_str(&json).is_err(), "accepted monitor_ema {bad}");
+        }
     }
 }

@@ -43,7 +43,7 @@ impl Batcher {
     /// departures can keep coalescing onto.
     pub fn admit(&mut self, t: f64) -> bool {
         let dt = t - self.last_window_start;
-        if self.enabled && dt >= 0.0 && dt <= self.window_s && self.in_window < self.max_batch {
+        if self.enabled && (0.0..=self.window_s).contains(&dt) && self.in_window < self.max_batch {
             self.in_window += 1;
             self.piggybacked += 1;
             true

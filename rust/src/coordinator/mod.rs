@@ -7,7 +7,11 @@
 //! generates tokens with entropy-gated edge drafts verified by the cloud,
 //! batched over the link ([`batcher`]). All timing flows through the
 //! virtual testbed ([`timeline`]); all tokens flow through the real PJRT
-//! engines ([`engines`]).
+//! engines ([`engines`]). Link conditions are time-varying: planning and
+//! per-round speculative replanning consume the system monitor's EMA
+//! estimates ([`crate::cluster::SystemMonitor`]) rather than ground
+//! truth, so MSAO adapts to — and transiently mis-estimates — the
+//! real-time system state.
 //!
 //! Serving is policy-driven: a [`TraceSpec`] names the trace, the
 //! [`PolicyKind`] (MSAO, an ablation, a baseline, or a per-request mix),

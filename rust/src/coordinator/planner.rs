@@ -7,10 +7,18 @@
 //! The objective is the analytic cost model — no engine calls — so 50 GP
 //! iterations cost well under a millisecond of real time; the chosen plan
 //! then drives the real prefill/decode execution.
+//!
+//! Network terms in Eq. 14 use the [`SystemMonitor`]'s EMA *estimates*
+//! (`PlanCtx::net`), not the ground-truth config: the planner believes
+//! what the monitor has observed, so it adapts to — and transiently
+//! mis-estimates — time-varying link conditions. Under constant
+//! conditions the estimate equals the config bit for bit.
+//!
+//! [`SystemMonitor`]: crate::cluster::SystemMonitor
 
 use anyhow::Result;
 
-use crate::cluster::{DeviceSim, SimModel};
+use crate::cluster::{DeviceSim, NetEstimate, SimModel};
 use crate::config::Config;
 use crate::optimizer::BayesOpt;
 use crate::quality::{self, Capability, ServedInfo};
@@ -47,6 +55,9 @@ pub struct PlanCtx<'a> {
     pub cfg: &'a Config,
     pub item: &'a Item,
     pub probe: &'a ProbeOutcome,
+    /// The monitor's current link-condition belief — the "real-time
+    /// system state" every network term of Eq. 14 is evaluated against.
+    pub net: NetEstimate,
     /// P_conf estimate from calibration (Eq. 12).
     pub p_conf: f64,
     /// Expected output length (tokens).
@@ -135,6 +146,12 @@ impl<'a> Evaluator<'a> {
             cloud: DeviceSim::new(ctx.cfg.cloud),
             draft: SimModel::qwen2vl_2b(),
             full: SimModel::qwen25vl_7b(),
+            // Capability anchors interpolate the paper's per-bandwidth-
+            // LEVEL accuracy (Table 1) — an experiment anchor, not a
+            // real-time quantity. It stays on the nominal config value so
+            // the epsilon_q bound is evaluated on the same capability
+            // scale the final scoring uses; only the Eq. 14 network
+            // terms below adapt to the monitor's estimates.
             cap: Capability::for_benchmark(
                 ctx.item.benchmark,
                 ctx.cfg.network.bandwidth_mbps,
@@ -223,7 +240,8 @@ impl<'a> Evaluator<'a> {
         let bytes_up = bytes as u64;
 
         // --- Eq. 14 expected latency ----------------------------------
-        let net = &ctx.cfg.network;
+        // Network terms use the monitor's estimates (real-time state).
+        let net = &ctx.net;
         let t_comm = bytes * 8.0 / (net.bandwidth_mbps * 1e6) + net.rtt_ms * 1e-3;
         let d_edge = self.edge.prefill_s(&self.draft, seq);
         let enc_cloud = self

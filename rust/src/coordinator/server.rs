@@ -29,6 +29,7 @@
 use anyhow::Result;
 
 use crate::baselines::{Baseline, BaselineSession};
+use crate::cluster::NetEstimate;
 use crate::config::Config;
 use crate::metrics::ExecRecord;
 use crate::optimizer::ThetaController;
@@ -45,6 +46,14 @@ pub struct TraceResult {
     pub uplink_bytes: u64,
     pub downlink_bytes: u64,
     pub batch_amortization: f64,
+    /// The system monitor's link-condition belief when the trace ended
+    /// (equals the config's nominal conditions on a static link).
+    pub net_estimate: NetEstimate,
+    /// The monitor's smoothed per-site queue waits (seconds) at trace
+    /// end — the load-observability half of the monitor. Scheduling
+    /// decisions use the coordinator's exact queue depths instead.
+    pub edge_wait_s: f64,
+    pub cloud_wait_s: f64,
 }
 
 /// One admitted request under whichever policy its spec assigns.
@@ -130,5 +139,8 @@ pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
         uplink_bytes: vc.link.uplink_bytes,
         downlink_bytes: vc.link.downlink_bytes,
         batch_amortization: batcher.amortization(),
+        net_estimate: vc.monitor.estimate(),
+        edge_wait_s: vc.monitor.wait_s(false),
+        cloud_wait_s: vc.monitor.wait_s(true),
     })
 }

@@ -93,6 +93,7 @@ struct FinishState {
     accepted: usize,
     proposed: usize,
     offloads: usize,
+    replans: usize,
     cloud_fraction: f64,
     common: FinishCommon,
 }
@@ -105,6 +106,7 @@ impl FinishState {
             accepted: out.accepted,
             proposed: out.proposed,
             offloads: out.offloads,
+            replans: out.replans,
             cloud_fraction: out.cloud_fraction,
             common,
         }
@@ -117,6 +119,7 @@ impl FinishState {
             accepted: 0,
             proposed: 0,
             offloads: 0,
+            replans: 0,
             cloud_fraction: 1.0,
             common,
         }
@@ -234,6 +237,9 @@ impl<'a> Session<'a> {
         let cfg = coord.cfg.clone();
 
         // ---------------- coarse plan ------------------------------------
+        // The planner sees the monitor's link-condition belief, not the
+        // ground-truth config — plans adapt as estimates converge.
+        let net = vc.monitor.estimate();
         let n_out = cfg.msao.max_new_tokens;
         let plan = match mode {
             Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, coord.p_conf0),
@@ -243,6 +249,7 @@ impl<'a> Session<'a> {
                 cfg: &cfg,
                 item,
                 probe: &probe,
+                net,
                 p_conf: coord.p_conf0,
                 n_out,
                 seed: item.id ^ 0x9E37,
@@ -267,8 +274,10 @@ impl<'a> Session<'a> {
         // the derived MAS scores and real-time system states" (§4.2): when
         // the edge queue is deep (or the cloud decisively faster for this
         // request), the pruned request is served cloud-direct instead of
-        // through the edge speculative path. The ablation "w/o
-        // collaborative scheduling" pins everything to the static path.
+        // through the edge speculative path. Queue depths are the
+        // coordinator's own state (exact); link terms use the monitor's
+        // estimates. The ablation "w/o collaborative scheduling" pins
+        // everything to the static path.
         if mode == Mode::Msao {
             let est = {
                 let d_edge = vc.dev(Site::Edge);
@@ -282,8 +291,8 @@ impl<'a> Session<'a> {
                     + d_edge.encode_s(&vitm, 256.0)
                     + d_edge.prefill_s(&draft, seq_paper)
                     + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
-                let up = plan.bytes_up as f64 * 8.0 / (cfg.network.bandwidth_mbps * 1e6)
-                    + 0.5 * cfg.network.rtt_ms * 1e-3;
+                let up = plan.bytes_up as f64 * 8.0 / (net.bandwidth_mbps * 1e6)
+                    + 0.5 * net.rtt_ms * 1e-3;
                 let t_cloud = cloud_q
                     + up
                     + d_cloud.encode_s(&vitm, 256.0)
@@ -400,6 +409,8 @@ impl<'a> Session<'a> {
                 cloud_ready: cloud_pre_end,
                 max_new: n_out,
                 n_draft: plan.n_draft,
+                n_max: cfg.msao.n_max,
+                planned_net: net,
                 adaptive: mode != Mode::NoCollabSched,
             },
         );
@@ -589,6 +600,7 @@ impl<'a> Session<'a> {
         self.rec.accepted = f.accepted;
         self.rec.proposed = f.proposed;
         self.rec.offloads = f.offloads;
+        self.rec.replans = f.replans;
         self.rec.vis_tokens_kept = f.common.vlen;
         self.rec.frames_kept = f.common.plan.frames_keep.len();
         self.rec.mem_edge_gb = vc.edge_mem.peak_gb();

@@ -24,7 +24,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::SimModel;
+use crate::cluster::{NetEstimate, SimModel};
 use crate::config::MsaoCfg;
 use crate::optimizer::ThetaController;
 use crate::runtime::engine::KvHandle;
@@ -48,8 +48,14 @@ pub struct SpecParams {
     pub cloud_ready: f64,
     pub max_new: usize,
     pub n_draft: usize,
+    /// Ceiling N_max for monitor-driven draft-length replanning.
+    pub n_max: usize,
+    /// Link-condition belief the coarse plan was computed against; each
+    /// round compares the monitor's current estimate to this and
+    /// replans the draft length when they diverge.
+    pub planned_net: NetEstimate,
     /// Adaptive gating (false = ablation "w/o collaborative scheduling":
-    /// fixed single-token rounds, no overlap, no batching).
+    /// fixed single-token rounds, no overlap, no batching, no replan).
     pub adaptive: bool,
 }
 
@@ -60,6 +66,9 @@ pub struct SpecOutcome {
     pub proposed: usize,
     pub offloads: usize,
     pub rounds: usize,
+    /// Times the monitor-driven replanning changed the draft length
+    /// mid-stream (estimate drift crossed the hysteresis band).
+    pub replans: usize,
     /// Virtual time the last token was committed.
     pub t_done: f64,
     /// Fraction of tokens carrying cloud-level quality (all committed
@@ -71,6 +80,46 @@ pub struct SpecOutcome {
 const VERIFY_UP_BYTES: u64 = 96; // tokens + positions + header
 const VERDICT_DOWN_BYTES: u64 = 64;
 const OFFLOAD_STATE_BYTES: u64 = 64 * 1024; // intermediate activations
+
+/// Cost of one low-confidence verify exchange (RTT + offload-state
+/// serialization) under an estimate — the per-round overhead the draft
+/// length amortizes.
+fn exchange_cost_s(est: &NetEstimate) -> f64 {
+    est.rtt_ms * 1e-3 + OFFLOAD_STATE_BYTES as f64 * 8.0 / (est.bandwidth_mbps * 1e6)
+}
+
+/// Hysteresis band for replanning: estimates whose exchange cost is
+/// within x1.25 of the plan's assumption keep the planned draft length
+/// (avoids thrashing on estimator noise).
+const REPLAN_BAND: f64 = 1.25;
+
+/// Monitor-driven per-round replanning (the fine-grained half of
+/// "adapts to real-time system states"): when the link estimate has
+/// drifted from what the coarse plan assumed, re-derive the draft block
+/// length. A degraded link makes each verify exchange dearer, so longer
+/// blocks amortize it; a recovered link shortens blocks back toward the
+/// plan (less wasted speculation per rejection).
+///
+/// The exact-equality fast path is the bit-for-bit guarantee: with
+/// constant conditions the estimate never moves off the plan's belief,
+/// so the planned length is returned without touching any arithmetic.
+pub fn replan_draft(
+    base: usize,
+    planned: &NetEstimate,
+    now: &NetEstimate,
+    n_max: usize,
+    n_spec: usize,
+) -> usize {
+    if now.bandwidth_mbps == planned.bandwidth_mbps && now.rtt_ms == planned.rtt_ms {
+        return base;
+    }
+    let ratio = exchange_cost_s(now) / exchange_cost_s(planned);
+    if ratio < REPLAN_BAND && ratio > 1.0 / REPLAN_BAND {
+        return base;
+    }
+    let scaled = (base as f64 * ratio).round() as usize;
+    draft_cap(scaled.clamp(1, n_max.max(1)), n_spec)
+}
 
 /// Cap the planner's draft length to the verify graph's block size: the
 /// verify block carries `last` plus the drafts, so at most `N_SPEC - 1`
@@ -122,6 +171,9 @@ pub struct SpecSession {
     commit_t: f64,
     /// Virtual time the edge can start the next round's drafting.
     edge_free: f64,
+    /// The coarse plan's draft length (capped to the verify graph).
+    n_draft_plan: usize,
+    /// Current effective draft length (replanned against the monitor).
     n_draft: usize,
     done: bool,
 }
@@ -139,6 +191,7 @@ impl SpecSession {
             out,
             commit_t: p.cloud_ready, // first token committed at prefill end
             edge_free: p.edge_ready.max(p.cloud_ready),
+            n_draft_plan: n_draft,
             n_draft,
             done,
             p,
@@ -184,6 +237,20 @@ impl SpecSession {
         let draft_m = SimModel::qwen2vl_2b();
         let full_m = SimModel::qwen25vl_7b();
         let p = self.p;
+
+        // --- monitor-driven replanning (real-time system state) -------
+        // The static-scheduling ablation never replans; otherwise the
+        // round re-derives its draft length from the monitor's current
+        // estimate (no-op bit for bit while the estimate sits on the
+        // plan's belief — the constant-conditions case).
+        if p.adaptive {
+            let est = vc.monitor.estimate();
+            let n_new = replan_draft(self.n_draft_plan, &p.planned_net, &est, p.n_max, n_spec);
+            if n_new != self.n_draft {
+                self.n_draft = n_new;
+                self.out.replans += 1;
+            }
+        }
 
         self.out.rounds += 1;
         let n = self.out.tokens.len(); // committed so far
@@ -347,6 +414,47 @@ mod tests {
         assert_eq!(draft_cap(9, 8), 7);
         assert_eq!(draft_cap(0, 8), 1);
         assert_eq!(draft_cap(1, 2), 1);
+    }
+
+    #[test]
+    fn replan_keeps_plan_on_exact_or_small_drift() {
+        let planned = NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 };
+        // Exact equality: the bit-for-bit fast path.
+        assert_eq!(replan_draft(4, &planned, &planned, 5, 8), 4);
+        // Within the hysteresis band: keep the plan.
+        let near = NetEstimate { bandwidth_mbps: 280.0, rtt_ms: 21.0 };
+        assert_eq!(replan_draft(4, &planned, &near, 5, 8), 4);
+    }
+
+    #[test]
+    fn replan_lengthens_drafts_on_degraded_link() {
+        let planned = NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 };
+        // Step-drop converged estimate: bw x0.2, rtt x2 — exchange cost
+        // roughly doubles, so the block length should grow.
+        let degraded = NetEstimate { bandwidth_mbps: 60.0, rtt_ms: 40.0 };
+        let n = replan_draft(2, &planned, &degraded, 5, 8);
+        assert!(n > 2, "degraded link should lengthen drafts, got {n}");
+        // Ceilings respected: N_max and the verify graph cap.
+        assert!(replan_draft(4, &planned, &degraded, 5, 8) <= 5);
+        assert_eq!(replan_draft(4, &planned, &degraded, 9, 4), 3); // N_SPEC cap
+    }
+
+    #[test]
+    fn replan_shortens_drafts_on_recovered_link() {
+        // Plan made under congestion; the link recovered.
+        let planned = NetEstimate { bandwidth_mbps: 60.0, rtt_ms: 80.0 };
+        let recovered = NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 };
+        let n = replan_draft(5, &planned, &recovered, 5, 8);
+        assert!(n < 5, "recovered link should shorten drafts, got {n}");
+        assert!(n >= 1);
+    }
+
+    #[test]
+    fn replan_degenerate_graph_stays_at_zero() {
+        // N_SPEC <= 1 leaves no room for drafts regardless of estimates.
+        let planned = NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 };
+        let degraded = NetEstimate { bandwidth_mbps: 30.0, rtt_ms: 100.0 };
+        assert_eq!(replan_draft(0, &planned, &degraded, 5, 1), 0);
     }
 
     fn seeded_theta() -> ThetaController {

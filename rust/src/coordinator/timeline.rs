@@ -7,8 +7,17 @@
 //! Devices are serially occupied resources: an op scheduled at `earliest`
 //! starts at max(earliest, busy_until). The uplink and downlink are
 //! independent serialization resources with propagation delay appended.
+//!
+//! Link conditions are time-varying: every transfer samples the
+//! bandwidth/RTT in effect at its virtual start time
+//! ([`Link::conditions_at`], driven by the config's `NetworkDynamics`),
+//! and reports what it experienced to the [`SystemMonitor`] — the EMA
+//! estimator the planner and the speculative replanning consume in
+//! place of ground truth. Device execs report their queue waits to the
+//! monitor too.
 
-use crate::cluster::{DeviceSim, Link, MemTracker};
+use crate::cluster::network::serialize_s_with;
+use crate::cluster::{DeviceSim, Link, MemTracker, SystemMonitor};
 use crate::config::Config;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +31,9 @@ pub struct VirtualCluster {
     pub edge: DeviceSim,
     pub cloud: DeviceSim,
     pub link: Link,
+    /// The coordinator's estimator of real-time system state (EMA
+    /// bandwidth/RTT/load) — fed by transfers and exec waits below.
+    pub monitor: SystemMonitor,
     pub edge_mem: MemTracker,
     pub cloud_mem: MemTracker,
     pub flops_edge: f64,
@@ -37,7 +49,8 @@ impl VirtualCluster {
         VirtualCluster {
             edge: DeviceSim::new(cfg.edge),
             cloud: DeviceSim::new(cfg.cloud),
-            link: Link::new(cfg.network, seed),
+            link: Link::with_dynamics(cfg.network, &cfg.dynamics, seed),
+            monitor: SystemMonitor::new(&cfg.network, cfg.serve.monitor_ema),
             edge_mem: MemTracker::new(),
             cloud_mem: MemTracker::new(),
             flops_edge: 0.0,
@@ -70,33 +83,41 @@ impl VirtualCluster {
             Site::Edge => self.flops_edge += flops,
             Site::Cloud => self.flops_cloud += flops,
         }
+        // Queue-depth observation: how long the op waited for the device.
+        self.monitor.observe_wait(site == Site::Cloud, start - earliest);
         (start, end)
     }
 
     /// Transfer `bytes` edge->cloud starting no earlier than `earliest`.
     /// Returns (serialization end, arrival time at the cloud).
     /// `skip_propagation` models a batched/piggybacked message that rides
-    /// an already-open exchange window (dynamic batcher).
+    /// an already-open exchange window (dynamic batcher). Conditions are
+    /// sampled at the serialization start time; the transfer reports the
+    /// bandwidth/RTT it experienced to the monitor.
     pub fn send_up(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
         let start = self.up_busy.max(earliest);
-        let ser = self.link.serialize_s(bytes);
+        let (bw, rtt) = self.link.conditions_at(start);
+        let ser = serialize_s_with(bw, bytes);
         let end = start + ser;
         self.up_busy = end;
         self.link.uplink_bytes += bytes;
         self.link.transfers += 1;
-        let prop = if skip_propagation { 0.0 } else { self.link.one_way_s() };
+        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
+        self.monitor.observe_transfer(bw, rtt);
         (end, end + prop)
     }
 
     /// Transfer `bytes` cloud->edge. Returns (serialization end, arrival).
     pub fn send_down(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
         let start = self.down_busy.max(earliest);
-        let ser = self.link.serialize_s(bytes);
+        let (bw, rtt) = self.link.conditions_at(start);
+        let ser = serialize_s_with(bw, bytes);
         let end = start + ser;
         self.down_busy = end;
         self.link.downlink_bytes += bytes;
         self.link.transfers += 1;
-        let prop = if skip_propagation { 0.0 } else { self.link.one_way_s() };
+        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
+        self.monitor.observe_transfer(bw, rtt);
         (end, end + prop)
     }
 
@@ -164,5 +185,70 @@ mod tests {
         let mut c = vc();
         let (end, arr) = c.send_up(0.0, 1000, true);
         assert_eq!(end, arr);
+    }
+
+    #[test]
+    fn constant_trace_reproduces_default_link_bitwise() {
+        // The golden substrate guarantee: an explicit single-segment
+        // trace carrying the base conditions must charge every transfer
+        // identically (to the bit) to the default static link.
+        use crate::config::{NetworkDynamics, Segment};
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        let mut base = VirtualCluster::new(&cfg, 1);
+        cfg.dynamics = NetworkDynamics::Trace(vec![Segment {
+            t_start: 0.0,
+            bandwidth_mbps: cfg.network.bandwidth_mbps,
+            rtt_ms: cfg.network.rtt_ms,
+        }]);
+        let mut traced = VirtualCluster::new(&cfg, 1);
+        for (i, &bytes) in [1_000_000u64, 0, 555, 64 * 1024].iter().enumerate() {
+            let t = i as f64 * 0.3;
+            let (e1, a1) = base.send_up(t, bytes, false);
+            let (e2, a2) = traced.send_up(t, bytes, false);
+            assert_eq!(e1.to_bits(), e2.to_bits(), "transfer {i}: end");
+            assert_eq!(a1.to_bits(), a2.to_bits(), "transfer {i}: arrival");
+            let (d1, _) = base.send_down(t, bytes, false);
+            let (d2, _) = traced.send_down(t, bytes, false);
+            assert_eq!(d1.to_bits(), d2.to_bits(), "transfer {i}: down");
+        }
+        // Estimates stayed pinned at the prior on both substrates.
+        let (eb, et) = (base.monitor.estimate(), traced.monitor.estimate());
+        assert_eq!(eb.bandwidth_mbps.to_bits(), et.bandwidth_mbps.to_bits());
+        assert_eq!(eb.bandwidth_mbps.to_bits(), cfg.network.bandwidth_mbps.to_bits());
+    }
+
+    #[test]
+    fn step_trace_slows_transfers_after_the_drop() {
+        use crate::config::{NetworkDynamics, Segment};
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.dynamics = NetworkDynamics::Trace(vec![Segment {
+            t_start: 2.0,
+            bandwidth_mbps: 60.0,
+            rtt_ms: 40.0,
+        }]);
+        let mut c = VirtualCluster::new(&cfg, 1);
+        let (end_pre, arr_pre) = c.send_up(0.0, 1_000_000, false);
+        // 300 Mbps: ~26.7 ms serialize + 10 ms one-way.
+        assert!((end_pre - 0.026_666).abs() < 1e-4, "{end_pre}");
+        assert!((arr_pre - end_pre - 0.010).abs() < 1e-9);
+        let (end_post, arr_post) = c.send_up(3.0, 1_000_000, false);
+        // 60 Mbps: ~133 ms serialize + 20 ms one-way.
+        assert!((end_post - 3.0 - 0.1333).abs() < 1e-3, "{end_post}");
+        assert!((arr_post - end_post - 0.020).abs() < 1e-9);
+        // The monitor saw both segments and is converging to the second.
+        let e = c.monitor.estimate();
+        assert!(e.bandwidth_mbps < 300.0 && e.bandwidth_mbps > 60.0, "{e:?}");
+        assert_eq!(c.monitor.transfers_observed, 2);
+    }
+
+    #[test]
+    fn exec_waits_feed_the_load_estimate() {
+        let mut c = vc();
+        c.exec(Site::Edge, 0.0, 1.0, 0.0); // busy until 1.0
+        c.exec(Site::Edge, 0.2, 0.1, 0.0); // waits 0.8 s
+        assert!(c.monitor.wait_s(false) > 0.0);
+        assert_eq!(c.monitor.wait_s(true), 0.0);
     }
 }

@@ -4,15 +4,19 @@
 //!   info                         — print artifact + config summary
 //!   probe [--seed N]             — probe one synthetic item, print MAS
 //!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
-//!         [--concurrency C]      — serve a trace through the unified
-//!                                  policy API, print summary. Modes:
-//!                                  msao|no-modality|no-collab|cloud|
-//!                                  edge|perllm|mixed. One --seed drives
-//!                                  both the workload and the testbed;
-//!                                  --concurrency is honored by every
-//!                                  mode.
+//!         [--concurrency C] [--network SC] — serve a trace through the
+//!                                  unified policy API, print summary.
+//!                                  Modes: msao|no-modality|no-collab|
+//!                                  cloud|edge|perllm|mixed. One --seed
+//!                                  drives both the workload and the
+//!                                  testbed; --concurrency is honored by
+//!                                  every mode; --network layers a
+//!                                  time-varying link scenario
+//!                                  (constant|step-drop|burst|flaky)
+//!                                  over the base bandwidth.
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
-//!                                  (fig4|table1|fig5..fig9|concurrency|mixed|main|all)
+//!                                  (fig4|table1|fig5..fig9|concurrency|
+//!                                  mixed|volatility|main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap) and lives
 //! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
@@ -90,6 +94,9 @@ fn main() -> Result<()> {
         "serve" => {
             let mut cfg = load_config(&args)?;
             cfg.network.bandwidth_mbps = args.f64_or("bandwidth", cfg.network.bandwidth_mbps)?;
+            if let Some(dynamics) = cli::network_dynamics(&args)? {
+                cfg.dynamics = dynamics;
+            }
             let (mode, spec) = cli::serve_spec(&args)?;
             let n = spec.items.len();
             let conc = spec.effective_concurrency(&cfg);
@@ -113,11 +120,18 @@ fn main() -> Result<()> {
                 sum.mem_cloud_peak_gb
             );
             println!(
-                "acceptance {:.2}  offloads/req {:.2}  uplink {:.2} MB total",
+                "acceptance {:.2}  offloads/req {:.2}  replans/req {:.2}  uplink {:.2} MB total",
                 sum.acceptance_rate,
                 sum.offloads_per_req,
+                sum.replans_per_req,
                 res.uplink_bytes as f64 / 1e6
             );
+            if coord.cfg.dynamics != msao::config::NetworkDynamics::Constant {
+                println!(
+                    "monitor estimate at trace end: {:.1} Mbps rtt {:.1} ms",
+                    res.net_estimate.bandwidth_mbps, res.net_estimate.rtt_ms
+                );
+            }
         }
         "experiment" => {
             let cfg = load_config(&args)?;

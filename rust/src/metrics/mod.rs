@@ -23,6 +23,9 @@ pub struct ExecRecord {
     pub proposed: usize,
     /// Low-confidence offloads to the cloud.
     pub offloads: usize,
+    /// Mid-stream draft-length replans triggered by the system
+    /// monitor's estimate drifting off the coarse plan's belief.
+    pub replans: usize,
     /// FLOPs consumed (paper-scale), split by site.
     pub flops_edge: f64,
     pub flops_cloud: f64,
@@ -93,6 +96,8 @@ pub struct Summary {
     pub gb_up_per_req: f64,
     pub acceptance_rate: f64,
     pub offloads_per_req: f64,
+    /// Monitor-driven mid-stream replans per request (0 on static links).
+    pub replans_per_req: f64,
     pub tokens_per_req: f64,
 }
 
@@ -123,13 +128,16 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
         req_throughput_rps: n as f64 / makespan.max(1e-9),
         tflops_per_req: mean(&records.iter().map(|r| r.total_flops() / 1e12).collect::<Vec<_>>()),
         tflops_edge_per_req: mean(&records.iter().map(|r| r.flops_edge / 1e12).collect::<Vec<_>>()),
-        tflops_cloud_per_req: mean(&records.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>()),
+        tflops_cloud_per_req: mean(
+            &records.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>(),
+        ),
         mem_edge_peak_gb: records.iter().map(|r| r.mem_edge_gb).fold(0.0, f64::max),
         mem_cloud_peak_gb: records.iter().map(|r| r.mem_cloud_gb).fold(0.0, f64::max),
         mem_serving_gb: records.iter().map(|r| r.mem_serving_gb).fold(0.0, f64::max),
         gb_up_per_req: mean(&records.iter().map(|r| r.bytes_up as f64 / 1e9).collect::<Vec<_>>()),
         acceptance_rate: if prop_n == 0 { 0.0 } else { acc_n as f64 / prop_n as f64 },
         offloads_per_req: mean(&records.iter().map(|r| r.offloads as f64).collect::<Vec<_>>()),
+        replans_per_req: mean(&records.iter().map(|r| r.replans as f64).collect::<Vec<_>>()),
         tokens_per_req: tokens as f64 / n as f64,
     }
 }

@@ -12,7 +12,8 @@ pub enum Modality {
 }
 
 impl Modality {
-    pub const ALL: [Modality; 4] = [Modality::Text, Modality::Image, Modality::Video, Modality::Audio];
+    pub const ALL: [Modality; 4] =
+        [Modality::Text, Modality::Image, Modality::Video, Modality::Audio];
 
     pub fn index(self) -> usize {
         match self {
@@ -175,11 +176,17 @@ mod tests {
     fn mas_bounds_and_monotonicity() {
         let c = cfg();
         // Relevant, dense modality -> low MAS.
-        let dense = mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.0, gamma_avg: 0.0 });
+        let dense =
+            mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.0, gamma_avg: 0.0 });
         // Irrelevant modality -> high MAS.
-        let irrelevant = mas(&c, Modality::Audio, &MasInputs { beta: 0.01, rho_spatial: 0.0, gamma_avg: 0.0 });
+        let irrelevant = mas(
+            &c,
+            Modality::Audio,
+            &MasInputs { beta: 0.01, rho_spatial: 0.0, gamma_avg: 0.0 },
+        );
         // Relevant but spatially sparse -> in between.
-        let sparse = mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.8, gamma_avg: 0.0 });
+        let sparse =
+            mas(&c, Modality::Image, &MasInputs { beta: 0.9, rho_spatial: 0.8, gamma_avg: 0.0 });
         assert!(dense.mas < sparse.mas && sparse.mas < irrelevant.mas);
         for m in [&dense, &irrelevant, &sparse] {
             assert!((0.0..=1.0).contains(&m.mas));
@@ -189,7 +196,8 @@ mod tests {
     #[test]
     fn mas_eq7_exact() {
         let c = cfg();
-        let out = mas(&c, Modality::Video, &MasInputs { beta: 0.5, rho_spatial: 0.4, gamma_avg: 0.3 });
+        let out =
+            mas(&c, Modality::Video, &MasInputs { beta: 0.5, rho_spatial: 0.4, gamma_avg: 0.3 });
         // 1 - 0.5 * (1 - 0.6*0.4 - 0.4*0.3) = 1 - 0.5 * 0.64 = 0.68
         assert!((out.mas - 0.68).abs() < 1e-12, "{}", out.mas);
     }
@@ -199,7 +207,8 @@ mod tests {
         let mut c = cfg();
         c.lambda_spatial = 1.0;
         c.lambda_temp = 1.0;
-        let out = mas(&c, Modality::Video, &MasInputs { beta: 1.0, rho_spatial: 0.9, gamma_avg: 0.9 });
+        let out =
+            mas(&c, Modality::Video, &MasInputs { beta: 1.0, rho_spatial: 0.9, gamma_avg: 0.9 });
         assert_eq!(out.mas, 1.0); // clamped
     }
 }

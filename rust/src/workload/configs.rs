@@ -19,13 +19,55 @@ pub struct ProbeConfig {
 pub fn v_configs() -> Vec<ProbeConfig> {
     use Modality::*;
     vec![
-        ProbeConfig { name: "V1", modalities: vec![Text], resolution: 0.0, frames: 0, text_len: 16 },
-        ProbeConfig { name: "V2", modalities: vec![Text], resolution: 0.0, frames: 0, text_len: 48 },
-        ProbeConfig { name: "V3", modalities: vec![Text, Image], resolution: 0.5, frames: 0, text_len: 16 },
-        ProbeConfig { name: "V4", modalities: vec![Text, Image], resolution: 1.0, frames: 0, text_len: 32 },
-        ProbeConfig { name: "V5", modalities: vec![Text, Image, Audio], resolution: 1.0, frames: 0, text_len: 32 },
-        ProbeConfig { name: "V6", modalities: vec![Text, Video, Audio], resolution: 1.0, frames: 4, text_len: 32 },
-        ProbeConfig { name: "V7", modalities: vec![Text, Video, Audio], resolution: 1.5, frames: 8, text_len: 48 },
+        ProbeConfig {
+            name: "V1",
+            modalities: vec![Text],
+            resolution: 0.0,
+            frames: 0,
+            text_len: 16,
+        },
+        ProbeConfig {
+            name: "V2",
+            modalities: vec![Text],
+            resolution: 0.0,
+            frames: 0,
+            text_len: 48,
+        },
+        ProbeConfig {
+            name: "V3",
+            modalities: vec![Text, Image],
+            resolution: 0.5,
+            frames: 0,
+            text_len: 16,
+        },
+        ProbeConfig {
+            name: "V4",
+            modalities: vec![Text, Image],
+            resolution: 1.0,
+            frames: 0,
+            text_len: 32,
+        },
+        ProbeConfig {
+            name: "V5",
+            modalities: vec![Text, Image, Audio],
+            resolution: 1.0,
+            frames: 0,
+            text_len: 32,
+        },
+        ProbeConfig {
+            name: "V6",
+            modalities: vec![Text, Video, Audio],
+            resolution: 1.0,
+            frames: 4,
+            text_len: 32,
+        },
+        ProbeConfig {
+            name: "V7",
+            modalities: vec![Text, Video, Audio],
+            resolution: 1.5,
+            frames: 8,
+            text_len: 48,
+        },
     ]
 }
 

@@ -6,7 +6,8 @@
 use std::sync::{Mutex, OnceLock};
 
 use msao::baselines::{cloud_only, edge_only, perllm, Baseline};
-use msao::config::Config;
+use msao::cluster::NetEstimate;
+use msao::config::{Config, NetworkDynamics, Segment};
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
@@ -15,6 +16,24 @@ use msao::coordinator::{
 use msao::metrics::summarize;
 use msao::sparsity::Modality;
 use msao::workload::{Benchmark, Generator, Item};
+
+/// Engine-backed tests need the AOT artifacts; without them every test
+/// in this file self-skips (cleanly green) so the CI tier-1 gate can
+/// block on `cargo test -q` even where the JAX toolchain is absent.
+fn artifacts_built() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_built() {
+            eprintln!("skipped: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
 
 /// MSAO trace spec with the policy default concurrency (what the old
 /// `serve_trace` entrypoint used).
@@ -36,6 +55,7 @@ fn coord() -> std::sync::MutexGuard<'static, Coordinator> {
 
 #[test]
 fn probe_identifies_relevant_modality_and_salience() {
+    require_artifacts!();
     let c = coord();
     let mut gen = Generator::new(5);
     let mut modal_hits = 0;
@@ -68,6 +88,7 @@ fn probe_identifies_relevant_modality_and_salience() {
 
 #[test]
 fn probe_pruning_keeps_salient_patches() {
+    require_artifacts!();
     let c = coord();
     let mut gen = Generator::new(6);
     let item = gen.vqa_item();
@@ -95,6 +116,7 @@ fn probe_pruning_keeps_salient_patches() {
 
 #[test]
 fn planner_respects_mas_floor_and_quality_bound() {
+    require_artifacts!();
     let c = coord();
     let mut gen = Generator::new(7);
     let item = gen.vqa_item();
@@ -103,6 +125,10 @@ fn planner_respects_mas_floor_and_quality_bound() {
         cfg: &c.cfg,
         item: &item,
         probe: &probe,
+        net: NetEstimate {
+            bandwidth_mbps: c.cfg.network.bandwidth_mbps,
+            rtt_ms: c.cfg.network.rtt_ms,
+        },
         p_conf: 0.7,
         n_out: 64,
         seed: 1,
@@ -121,12 +147,13 @@ fn planner_respects_mas_floor_and_quality_bound() {
         }
     }
     assert!(p.delta_q_est <= c.cfg.msao.epsilon_q + 1e-9, "dq {}", p.delta_q_est);
-    assert!(p.n_draft >= 1 && p.n_draft <= c.cfg.msao.n_max);
+    assert!((1..=c.cfg.msao.n_max).contains(&p.n_draft));
     assert!(p.bytes_up > 0);
 }
 
 #[test]
 fn msao_beats_cloud_only_latency_and_flops_under_load() {
+    require_artifacts!();
     let mut c = coord();
     c.cfg.network.bandwidth_mbps = 300.0;
     let mut gen = Generator::new(42);
@@ -158,6 +185,7 @@ fn msao_beats_cloud_only_latency_and_flops_under_load() {
 
 #[test]
 fn ablations_degrade_the_right_metrics() {
+    require_artifacts!();
     let mut c = coord();
     c.cfg.network.bandwidth_mbps = 300.0;
     let mut gen = Generator::new(77);
@@ -192,6 +220,7 @@ fn ablations_degrade_the_right_metrics() {
 
 #[test]
 fn speculative_tokens_match_cloud_greedy_semantics() {
+    require_artifacts!();
     // Spec decoding with greedy accept must produce tokens the full
     // model endorses: re-scoring the emitted prefix with the full model
     // must reproduce each committed token (verify-consistency).
@@ -209,6 +238,7 @@ fn speculative_tokens_match_cloud_greedy_semantics() {
 
 #[test]
 fn scheduler_concurrency_one_reproduces_sequential_fcfs() {
+    require_artifacts!();
     // The event-driven scheduler at concurrency 1 must reproduce the
     // seed's run-to-completion FCFS loop bit for bit: same tokens, same
     // virtual times, same quality, on an identically seeded testbed.
@@ -244,6 +274,7 @@ fn scheduler_concurrency_one_reproduces_sequential_fcfs() {
 
 #[test]
 fn cross_request_verify_batching_under_concurrent_load() {
+    require_artifacts!();
     // With >= 8 sessions decoding at once, verify uplinks from different
     // requests interleave on the link and the dynamic batcher must
     // coalesce at least some of them — impossible for the seed's
@@ -267,6 +298,7 @@ fn cross_request_verify_batching_under_concurrent_load() {
 
 #[test]
 fn concurrent_poisson_trace_completes_every_session() {
+    require_artifacts!();
     // No session starves under the event-driven interleave: every
     // request of a Poisson trace finishes with sane times and tokens.
     let mut c = coord();
@@ -287,6 +319,7 @@ fn concurrent_poisson_trace_completes_every_session() {
 
 #[test]
 fn perllm_lands_between_edge_and_cloud_accuracy() {
+    require_artifacts!();
     let mut c = coord();
     c.cfg.network.bandwidth_mbps = 300.0;
     let mut gen = Generator::new(123);
@@ -308,6 +341,7 @@ fn perllm_lands_between_edge_and_cloud_accuracy() {
 
 #[test]
 fn baseline_sessions_reproduce_sequential_loop_bit_for_bit() {
+    require_artifacts!();
     // Golden equivalence, one sub-case per baseline: the event-driven
     // session path at concurrency 1 must reproduce the pre-refactor
     // run-to-completion loop bit for bit — same tokens, same virtual
@@ -386,8 +420,175 @@ fn baseline_sessions_reproduce_sequential_loop_bit_for_bit() {
     }
 }
 
+/// Everything in an `ExecRecord` that must be bitwise-stable across the
+/// constant-dynamics golden comparison (`correct` is excluded: its
+/// Bernoulli draw consumes the coordinator's shared RNG, which advances
+/// between the two serve calls; `p_correct` pins the quality instead).
+fn assert_records_bitwise_equal(
+    a: &msao::metrics::ExecRecord,
+    b: &msao::metrics::ExecRecord,
+    what: &str,
+) {
+    assert_eq!(a.tokens_out, b.tokens_out, "{what}: tokens_out");
+    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
+    assert_eq!(a.proposed, b.proposed, "{what}: proposed");
+    assert_eq!(a.offloads, b.offloads, "{what}: offloads");
+    assert_eq!(a.replans, b.replans, "{what}: replans");
+    assert_eq!(a.bytes_up, b.bytes_up, "{what}: bytes_up");
+    assert_eq!(a.bytes_down, b.bytes_down, "{what}: bytes_down");
+    assert_eq!(a.t_done.to_bits(), b.t_done.to_bits(), "{what}: t_done");
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: latency");
+    assert_eq!(a.prefill_s.to_bits(), b.prefill_s.to_bits(), "{what}: prefill");
+    assert_eq!(a.flops_edge.to_bits(), b.flops_edge.to_bits(), "{what}: flops_edge");
+    assert_eq!(a.flops_cloud.to_bits(), b.flops_cloud.to_bits(), "{what}: flops_cloud");
+    assert_eq!(a.mem_serving_gb.to_bits(), b.mem_serving_gb.to_bits(), "{what}: mem_serving");
+    assert_eq!(a.p_correct.to_bits(), b.p_correct.to_bits(), "{what}: p_correct");
+}
+
+#[test]
+fn constant_network_trace_is_bit_for_bit_identical() {
+    require_artifacts!();
+    // Golden regression for the dynamic substrate: an explicit
+    // constant-condition trace must reproduce the static link's serve()
+    // outputs (times / bytes / quality) bit for bit — at concurrency 1
+    // AND under the event-driven interleave — for MSAO and a baseline.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let constant_trace = NetworkDynamics::Trace(vec![Segment {
+        t_start: 0.0,
+        bandwidth_mbps: 300.0,
+        rtt_ms: c.cfg.network.rtt_ms,
+    }]);
+    for policy in [PolicyKind::Msao(Mode::Msao), PolicyKind::CloudOnly] {
+        for conc in [1usize, 8] {
+            let mut gen = Generator::new(31);
+            let n = 6;
+            let items = gen.items(Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, 2.5);
+            let spec = TraceSpec::new(policy.clone())
+                .trace(items, arrivals)
+                .seed(5)
+                .concurrency(conc);
+            c.cfg.dynamics = NetworkDynamics::Constant;
+            let golden = serve(&mut c, &spec).unwrap();
+            c.cfg.dynamics = constant_trace.clone();
+            let traced = serve(&mut c, &spec).unwrap();
+            c.cfg.dynamics = NetworkDynamics::Constant;
+            for (i, (a, b)) in golden.records.iter().zip(&traced.records).enumerate() {
+                assert_records_bitwise_equal(a, b, &format!("{policy:?} conc {conc} req {i}"));
+            }
+            assert_eq!(golden.uplink_bytes, traced.uplink_bytes, "{policy:?}: uplink");
+            assert_eq!(golden.downlink_bytes, traced.downlink_bytes, "{policy:?}: downlink");
+            // The monitor never moved off the nominal prior on either run.
+            assert_eq!(
+                traced.net_estimate.bandwidth_mbps.to_bits(),
+                (300.0f64).to_bits(),
+                "{policy:?}: estimate drifted on a constant trace"
+            );
+        }
+    }
+}
+
+#[test]
+fn planner_repartitions_under_degraded_estimates() {
+    require_artifacts!();
+    // The planner consumes the monitor's belief: the same probed request
+    // planned under a degraded link estimate must choose a different
+    // partition (smaller uplink payload) than under the nominal one.
+    let c = coord();
+    let mut gen = Generator::new(7);
+    let item = gen.vqa_item();
+    let probe = run_probe(&c.eng, &c.cfg.msao, &item).unwrap();
+    let plan_at = |net: NetEstimate| {
+        plan(&PlanCtx {
+            cfg: &c.cfg,
+            item: &item,
+            probe: &probe,
+            net,
+            p_conf: 0.7,
+            n_out: 64,
+            seed: 1,
+        })
+        .unwrap()
+    };
+    let nominal = plan_at(NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 });
+    let degraded = plan_at(NetEstimate { bandwidth_mbps: 20.0, rtt_ms: 100.0 });
+    assert!(
+        degraded.bytes_up < nominal.bytes_up,
+        "degraded link must shrink the uplink partition: {} vs {}",
+        degraded.bytes_up,
+        nominal.bytes_up
+    );
+    // Both plans still honor the quality bound they were solved under.
+    assert!(degraded.delta_q_est <= c.cfg.msao.epsilon_q + 1e-9);
+}
+
+#[test]
+fn msao_replans_mid_trace_after_network_step_drop() {
+    require_artifacts!();
+    // The paper's adaptive claim, end to end: the link degrades (x0.2
+    // bandwidth, x2 RTT) from t=0 while the monitor still believes the
+    // nominal 300 Mbps. Request 0 is planned on the stale prior — its
+    // coarse plan is byte-identical to the constant run — then the
+    // estimate converges on real transfers and (a) the in-flight
+    // speculative loop replans its draft length mid-stream, and (b)
+    // later requests are planned against the degraded belief, provably
+    // changing the partition.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let n = 6;
+    let run = |c: &mut Coordinator, dynamics: NetworkDynamics| {
+        c.cfg.dynamics = dynamics;
+        let mut gen = Generator::new(31);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 1.3);
+        let spec = msao_spec(items, arrivals, Mode::Msao, 5).concurrency(1);
+        let res = serve(c, &spec).unwrap();
+        c.cfg.dynamics = NetworkDynamics::Constant;
+        res
+    };
+    let constant = run(&mut c, NetworkDynamics::Constant);
+    let degraded = run(
+        &mut c,
+        NetworkDynamics::Trace(vec![Segment {
+            t_start: 0.0,
+            bandwidth_mbps: 60.0,
+            rtt_ms: 40.0,
+        }]),
+    );
+
+    // (a) Request 0 planned before any observation: same coarse plan.
+    assert_eq!(
+        constant.records[0].bytes_up, degraded.records[0].bytes_up,
+        "request 0 must plan on the prior belief"
+    );
+    // ...but its speculative loop noticed the drift mid-stream.
+    assert!(
+        degraded.records[0].replans > 0,
+        "no mid-stream replan despite a 5x bandwidth drop"
+    );
+    assert_eq!(constant.records[0].replans, 0, "constant run must never replan");
+
+    // (b) The monitor converged toward the truth (60 Mbps)...
+    assert!(
+        degraded.net_estimate.bandwidth_mbps < 150.0,
+        "estimate stuck at {:.1} Mbps",
+        degraded.net_estimate.bandwidth_mbps
+    );
+    // ...and at least one post-convergence request chose a different
+    // partition than it did on the constant link.
+    let repartitioned = (1..n)
+        .any(|i| degraded.records[i].bytes_up != constant.records[i].bytes_up);
+    assert!(repartitioned, "no request re-partitioned after convergence");
+    // Latency reacts to the degraded link (sanity: the substrate bites).
+    let sum_c = summarize(&constant.records);
+    let sum_d = summarize(&degraded.records);
+    assert!(sum_d.latency_mean_s > sum_c.latency_mean_s);
+}
+
 #[test]
 fn mixed_policy_trace_serves_heterogeneous_tenants() {
+    require_artifacts!();
     // A PerRequest trace mixes MSAO and baseline sessions on one shared
     // cluster under the event-driven interleave: every session must
     // complete (starvation-free) with causal times, and per-tenant

@@ -2,8 +2,8 @@
 //! Each property runs hundreds of seeded random cases through the
 //! deterministic PRNG; failures print the offending seed.
 
-use msao::cluster::{DeviceSim, Link, SimModel};
-use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg};
+use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
+use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment};
 use msao::coordinator::Batcher;
 use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
 use msao::sparsity::{self, MasInputs, Modality};
@@ -48,8 +48,16 @@ fn prop_mas_monotone_in_relevance() {
         let b1 = r.f64();
         let b2 = r.f64();
         let (lo, hi) = if b1 < b2 { (b1, b2) } else { (b2, b1) };
-        let m_lo = sparsity::mas(&cfg, Modality::Video, &MasInputs { beta: lo, rho_spatial: rho, gamma_avg: gam });
-        let m_hi = sparsity::mas(&cfg, Modality::Video, &MasInputs { beta: hi, rho_spatial: rho, gamma_avg: gam });
+        let m_lo = sparsity::mas(
+            &cfg,
+            Modality::Video,
+            &MasInputs { beta: lo, rho_spatial: rho, gamma_avg: gam },
+        );
+        let m_hi = sparsity::mas(
+            &cfg,
+            Modality::Video,
+            &MasInputs { beta: hi, rho_spatial: rho, gamma_avg: gam },
+        );
         assert!(
             m_hi.mas <= m_lo.mas + 1e-12,
             "seed {seed}: beta {lo}->{hi} raised MAS {}->{}",
@@ -117,10 +125,144 @@ fn prop_transfer_time_monotone_and_bounded() {
 }
 
 #[test]
+fn prop_constant_dynamics_bitwise_equal_static_link() {
+    // The dynamic substrate's golden invariant: constant dynamics (and
+    // an explicit one-segment trace carrying the base values) sample
+    // bitwise-identical conditions to the static link at every time.
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let cfg = NetworkCfg {
+            bandwidth_mbps: r.range_f64(50.0, 1000.0),
+            rtt_ms: r.range_f64(1.0, 100.0),
+            jitter: 0.0,
+        };
+        let mut plain = Link::new(cfg, seed);
+        let mut traced = Link::with_dynamics(
+            cfg,
+            &NetworkDynamics::Trace(vec![Segment {
+                t_start: 0.0,
+                bandwidth_mbps: cfg.bandwidth_mbps,
+                rtt_ms: cfg.rtt_ms,
+            }]),
+            seed,
+        );
+        for _ in 0..20 {
+            let t = r.range_f64(0.0, 1e4);
+            let bytes = r.below(10_000_000) as u64;
+            assert_eq!(
+                plain.serialize_s_at(t, bytes).to_bits(),
+                traced.serialize_s_at(t, bytes).to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(
+                plain.one_way_s_at(t).to_bits(),
+                traced.one_way_s_at(t).to_bits(),
+                "seed {seed}"
+            );
+            assert_eq!(
+                plain.serialize_s_at(t, bytes).to_bits(),
+                plain.serialize_s(bytes).to_bits(),
+                "seed {seed}: constant sampling must match base arithmetic"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_trace_lookup_returns_covering_segment() {
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let cfg = NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.0 };
+        // Random sorted trace with distinguishable per-segment values.
+        let n = 1 + r.below(8);
+        let mut t = r.range_f64(0.0, 5.0);
+        let mut segs = Vec::new();
+        for i in 0..n {
+            segs.push(Segment {
+                t_start: t,
+                bandwidth_mbps: 100.0 + i as f64,
+                rtt_ms: 10.0 + i as f64,
+            });
+            t += r.range_f64(0.1, 10.0);
+        }
+        let mut link = Link::with_dynamics(cfg, &NetworkDynamics::Trace(segs.clone()), seed);
+        for _ in 0..50 {
+            let q = r.range_f64(0.0, t + 10.0);
+            let (bw, rtt) = link.conditions_at(q);
+            // Reference: last segment with t_start <= q, else base.
+            let want = segs.iter().rev().find(|s| s.t_start <= q);
+            match want {
+                Some(s) => assert_eq!((bw, rtt), (s.bandwidth_mbps, s.rtt_ms), "seed {seed}"),
+                None => assert_eq!((bw, rtt), (cfg.bandwidth_mbps, cfg.rtt_ms), "seed {seed}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_markov_conditions_deterministic_positive_and_idempotent() {
+    let cfg = NetworkCfg { bandwidth_mbps: 300.0, rtt_ms: 20.0, jitter: 0.0 };
+    for seed in cases(50) {
+        let dynamics = NetworkDynamics::Scenario(NetworkScenario::Flaky);
+        let mut a = Link::with_dynamics(cfg, &dynamics, seed);
+        let mut b = Link::with_dynamics(cfg, &dynamics, seed);
+        let mut r = Rng::seed_from_u64(seed ^ 0xABCD);
+        let queries: Vec<f64> = (0..40).map(|_| r.range_f64(0.0, 200.0)).collect();
+        // b sees the same queries sorted — lazy extension must not
+        // depend on query order.
+        let answers_a: Vec<(f64, f64)> =
+            queries.iter().map(|&t| a.conditions_at(t)).collect();
+        for (&t, &want) in queries.iter().zip(&answers_a) {
+            assert_eq!(a.conditions_at(t), want, "seed {seed}: idempotent");
+        }
+        let mut sorted = queries.clone();
+        sorted.sort_by(f64::total_cmp);
+        for &t in &sorted {
+            let c = b.conditions_at(t);
+            assert!(c.0 > 0.0 && c.1 > 0.0, "seed {seed}: non-positive conditions");
+        }
+        // Re-query original order against b: same sample path.
+        for (&t, &want) in queries.iter().zip(&answers_a) {
+            assert_eq!(b.conditions_at(t), want, "seed {seed}: order-dependent chain");
+        }
+    }
+}
+
+#[test]
+fn prop_monitor_estimate_stays_within_observation_hull() {
+    // The EMA estimate is a convex combination of the prior and the
+    // observations, so it must stay inside their min/max hull.
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed);
+        let cfg = NetworkCfg {
+            bandwidth_mbps: r.range_f64(50.0, 1000.0),
+            rtt_ms: r.range_f64(1.0, 100.0),
+            jitter: 0.0,
+        };
+        let alpha = r.range_f64(0.05, 1.0);
+        let mut m = SystemMonitor::new(&cfg, alpha);
+        let (mut lo_bw, mut hi_bw) = (cfg.bandwidth_mbps, cfg.bandwidth_mbps);
+        for _ in 0..100 {
+            let bw = r.range_f64(10.0, 1200.0);
+            lo_bw = lo_bw.min(bw);
+            hi_bw = hi_bw.max(bw);
+            m.observe_transfer(bw, r.range_f64(1.0, 200.0));
+            let e = m.estimate();
+            assert!(
+                (lo_bw - 1e-9..=hi_bw + 1e-9).contains(&e.bandwidth_mbps),
+                "seed {seed}: estimate {} outside [{lo_bw}, {hi_bw}]",
+                e.bandwidth_mbps
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_exec_time_monotone_in_work() {
     for seed in cases(200) {
         let mut r = Rng::seed_from_u64(seed);
-        let dev = DeviceSim::new(if r.bool(0.5) { DeviceCfg::a100() } else { DeviceCfg::rtx3090() });
+        let dev =
+            DeviceSim::new(if r.bool(0.5) { DeviceCfg::a100() } else { DeviceCfg::rtx3090() });
         let m = if r.bool(0.5) { SimModel::qwen25vl_7b() } else { SimModel::qwen2vl_2b() };
         let s1 = r.range_f64(16.0, 2048.0);
         let s2 = s1 + r.range_f64(1.0, 1024.0);
@@ -203,7 +345,7 @@ fn prop_theta_controller_stays_in_bounds() {
                 _ => t.on_offload(),
             }
             assert!(
-                t.theta >= cfg.theta_min && t.theta <= hmax.max(1.0) * 2.0,
+                (cfg.theta_min..=hmax.max(1.0) * 2.0).contains(&t.theta),
                 "seed {seed}: theta {} escaped",
                 t.theta
             );
