@@ -4,7 +4,8 @@
 //! end-to-end profile.
 
 use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
-use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario};
+use msao::config::{Config, DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario};
+use msao::coordinator::{least_loaded, Site, VirtualCluster};
 use msao::optimizer::linalg;
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::bench::{bench, black_box, header};
@@ -58,6 +59,33 @@ fn main() {
         for i in 0..1000 {
             mon.observe_transfer(200.0 + (i % 7) as f64, 20.0);
             acc += mon.estimate().bandwidth_mbps;
+        }
+        black_box(acc);
+    });
+
+    // Fleet substrate: per-op cost of the multi-edge timeline (exec on
+    // an edge + uplink + shared-cloud exec + routing pick). Must stay
+    // negligible next to the analytic cost model it charges.
+    let mut fleet_cfg = Config::default();
+    fleet_cfg.network.jitter = 0.0;
+    fleet_cfg.replicate_edges(4).unwrap();
+    let mut fleet = VirtualCluster::new(&fleet_cfg, 3);
+    bench("fleet/exec+send_up+cloud x1000", 1000, || {
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            let e = (i % 4) as usize;
+            let t = i as f64 * 1e-3;
+            let (_, end) = fleet.exec(Site::Edge(e), t, 1e-4, 1e9);
+            let (_, arr) = fleet.send_up(e, end, 4096, false);
+            let (_, done) = fleet.exec(Site::Cloud, arr, 1e-4, 1e9);
+            acc += done;
+        }
+        black_box(acc);
+    });
+    bench("fleet/least_loaded pick x1000", 2000, || {
+        let mut acc = 0usize;
+        for _ in 0..1000 {
+            acc += least_loaded(&fleet);
         }
         black_box(acc);
     });

@@ -3,17 +3,17 @@
 //! Suffers exactly what the paper describes: heavy uplink transmission
 //! and serialized cloud inference under load.
 //!
-//! [`start`] is the session decomposition (arrival → decode steps →
+//! `start` is the session decomposition (arrival → decode steps →
 //! downlink) driven by the event scheduler; [`serve`] is the
 //! pre-refactor run-to-completion loop, kept verbatim as the sequential
-//! reference the golden equivalence tests pin [`start`] against.
+//! reference the golden equivalence tests pin `start` against.
 
 use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
 use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
@@ -21,15 +21,17 @@ use crate::workload::Item;
 
 use super::{BPhase, DecodeState, FinishState};
 
-/// Session start phase, fired at the arrival time: raw payload uplink,
-/// cloud encode + prefill at full fidelity. Transitions to per-token
-/// cloud decode events. `cloud_frac` is threaded through so PerLLM's
-/// cloud-landing requests carry their quality provenance.
+/// Session start phase, fired at the arrival time: raw payload uplink
+/// on the session's edge, cloud encode + prefill at full fidelity.
+/// Transitions to per-token cloud decode events. `cloud_frac` is
+/// threaded through so PerLLM's cloud-landing requests carry their
+/// quality provenance.
 pub(crate) fn start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
+    edge: EdgeId,
     rec: &mut ExecRecord,
     cloud_frac: f64,
 ) -> Result<BPhase> {
@@ -37,7 +39,7 @@ pub(crate) fn start(
 
     // Raw payload uplink.
     let bytes = super::full_payload_bytes(item);
-    let (_, up_arr) = vc.send_up(arrival, bytes, false);
+    let (_, up_arr) = vc.send_up(edge, arrival, bytes, false);
     rec.bytes_up = bytes;
 
     // Cloud encodes + prefills at full fidelity.
@@ -79,6 +81,7 @@ pub(crate) fn start(
     }
     Ok(BPhase::Decode(Box::new(DecodeState {
         cloud: true,
+        edge,
         kv: pre.kv,
         lens: (inp.vlen, inp.alen, inp.tlen),
         seq_paper: inp.seq_paper,
@@ -92,9 +95,10 @@ pub(crate) fn start(
     })))
 }
 
-/// Sequential run-to-completion reference (the seed's loop body) — used
-/// only by the golden equivalence tests; production serving goes through
-/// the session path above.
+/// Sequential run-to-completion reference (the seed's loop body on the
+/// original two-site pair, addressed as edge 0 of a fleet of one) —
+/// used only by the golden equivalence tests; production serving goes
+/// through the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -108,7 +112,7 @@ pub fn serve(
 
     // Raw payload uplink.
     let bytes = super::full_payload_bytes(item);
-    let (_, up_arr) = vc.send_up(arrival, bytes, false);
+    let (_, up_arr) = vc.send_up(0, arrival, bytes, false);
     rec.bytes_up = bytes;
 
     // Cloud encodes + prefills at full fidelity.
@@ -159,14 +163,14 @@ pub fn serve(
     coord.eng.free_kv(true, pre.kv);
     vc.cloud_mem.free(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
 
-    let (_, done) = vc.send_down(t, 4 * tokens.len() as u64 + 64, false);
+    let (_, done) = vc.send_down(0, t, 4 * tokens.len() as u64 + 64, false);
     rec.bytes_down = 4 * tokens.len() as u64 + 64;
     rec.t_done = done;
     rec.latency_s = done - arrival;
     rec.tokens_out = tokens.len();
-    rec.flops_edge = vc.flops_edge;
+    rec.flops_edge = vc.edges[0].flops;
     rec.flops_cloud = vc.flops_cloud;
-    rec.mem_edge_gb = vc.edge_mem.peak_gb();
+    rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
     rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
     // Cloud-only pins the full model for the stream's entire duration.
     rec.mem_serving_gb = vc.cloud_mem.peak_gb();

@@ -1,19 +1,20 @@
 //! Edge-only baseline: the lightweight draft model serves everything
 //! locally. No network, full data locality — but capability-limited
-//! (Table 1: 58-64% accuracy) and the edge device is the sole compute
-//! resource, so complex multimodal prompts produce latency tails.
+//! (Table 1: 58-64% accuracy) and the session's edge site is its sole
+//! compute resource, so complex multimodal prompts produce latency
+//! tails.
 //!
-//! [`start`] is the session decomposition (arrival → decode steps →
+//! `start` is the session decomposition (arrival → decode steps →
 //! finish) driven by the event scheduler; [`serve`] is the pre-refactor
 //! run-to-completion loop, kept verbatim as the sequential reference the
-//! golden equivalence tests pin [`start`] against.
+//! golden equivalence tests pin `start` against.
 
 use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
 use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
@@ -22,14 +23,16 @@ use crate::workload::Item;
 use super::{BPhase, DecodeState, FinishState};
 
 /// Session start phase, fired at the arrival time: edge encode + draft
-/// prefill at full fidelity (no network). Transitions to per-token edge
-/// decode events. `cloud_frac` is threaded through so PerLLM's
-/// edge-landing requests carry their quality provenance.
+/// prefill at full fidelity (no network) on the session's edge site.
+/// Transitions to per-token edge decode events. `cloud_frac` is
+/// threaded through so PerLLM's edge-landing requests carry their
+/// quality provenance.
 pub(crate) fn start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
+    edge: EdgeId,
     rec: &mut ExecRecord,
     cloud_frac: f64,
 ) -> Result<BPhase> {
@@ -41,29 +44,29 @@ pub(crate) fn start(
     let enc_frames = inp.frames.max(1) as f64;
     let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
     let (_, enc_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(edge),
         arrival,
-        vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames,
+        vc.dev(Site::Edge(edge)).encode_s(&vit, enc_patches) * enc_frames,
         vit.flops_prefill(enc_patches) * enc_frames,
     );
     let (_, pre_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(edge),
         enc_end,
-        vc.dev(Site::Edge).prefill_s(&draft_m, inp.seq_paper),
+        vc.dev(Site::Edge(edge)).prefill_s(&draft_m, inp.seq_paper),
         draft_m.flops_prefill(inp.seq_paper),
     );
     rec.prefill_s = pre_end - arrival;
 
     let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
     let mem_bytes = kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper);
-    vc.edge_mem.alloc(mem_bytes);
+    vc.edges[edge].mem.alloc(mem_bytes);
 
     let pre =
         coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
         coord.eng.free_kv(false, pre.kv);
-        vc.edge_mem.free(mem_bytes);
+        vc.edges[edge].mem.free(mem_bytes);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
             tokens_out: 1,
@@ -73,6 +76,7 @@ pub(crate) fn start(
     }
     Ok(BPhase::Decode(Box::new(DecodeState {
         cloud: false,
+        edge,
         kv: pre.kv,
         lens: (inp.vlen, inp.alen, inp.tlen),
         seq_paper: inp.seq_paper,
@@ -86,9 +90,10 @@ pub(crate) fn start(
     })))
 }
 
-/// Sequential run-to-completion reference (the seed's loop body) — used
-/// only by the golden equivalence tests; production serving goes through
-/// the session path above.
+/// Sequential run-to-completion reference (the seed's loop body on the
+/// original two-site pair, addressed as edge 0 of a fleet of one) —
+/// used only by the golden equivalence tests; production serving goes
+/// through the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -106,21 +111,21 @@ pub fn serve(
     let enc_frames = inp.frames.max(1) as f64;
     let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
     let (_, enc_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(0),
         arrival,
-        vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames,
+        vc.dev(Site::Edge(0)).encode_s(&vit, enc_patches) * enc_frames,
         vit.flops_prefill(enc_patches) * enc_frames,
     );
     let (_, pre_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(0),
         enc_end,
-        vc.dev(Site::Edge).prefill_s(&draft_m, inp.seq_paper),
+        vc.dev(Site::Edge(0)).prefill_s(&draft_m, inp.seq_paper),
         draft_m.flops_prefill(inp.seq_paper),
     );
     rec.prefill_s = pre_end - arrival;
 
     let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
-    vc.edge_mem.alloc(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
+    vc.edges[0].mem.alloc(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
 
     let pre =
         coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
@@ -132,9 +137,9 @@ pub fn serve(
         let lg = coord.eng.block(false, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
         let ctx = inp.seq_paper + j as f64;
         let (_, end) = vc.exec(
-            Site::Edge,
+            Site::Edge(0),
             t,
-            vc.dev(Site::Edge).decode_s(&draft_m, ctx),
+            vc.dev(Site::Edge(0)).decode_s(&draft_m, ctx),
             draft_m.flops_decode(ctx),
         );
         t = end;
@@ -145,16 +150,16 @@ pub fn serve(
         }
     }
     coord.eng.free_kv(false, pre.kv);
-    vc.edge_mem.free(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
+    vc.edges[0].mem.free(kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper));
 
     rec.t_done = t;
     rec.latency_s = t - arrival;
     rec.tokens_out = tokens.len();
-    rec.flops_edge = vc.flops_edge;
+    rec.flops_edge = vc.edges[0].flops;
     rec.flops_cloud = vc.flops_cloud;
-    rec.mem_edge_gb = vc.edge_mem.peak_gb();
+    rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
     rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
-    rec.mem_serving_gb = vc.edge_mem.peak_gb();
+    rec.mem_serving_gb = vc.edges[0].mem.peak_gb();
 
     let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
     // Edge-only tokens carry edge quality; inputs are full fidelity.

@@ -25,7 +25,7 @@ use crate::cluster::SimModel;
 use crate::coordinator::engines::argmax;
 use crate::coordinator::scheduler::StepOutcome;
 use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::runtime::engine::KvHandle;
@@ -51,9 +51,12 @@ impl Baseline {
 }
 
 /// Single-site decode in flight (cloud for Cloud-only / PerLLM-cloud,
-/// edge for Edge-only / PerLLM-edge).
+/// the session's edge for Edge-only / PerLLM-edge).
 pub(crate) struct DecodeState {
     pub cloud: bool,
+    /// The session's edge site (decode site when `!cloud`; always the
+    /// memory/downlink site).
+    pub edge: EdgeId,
     pub kv: KvHandle,
     pub lens: (usize, usize, usize),
     pub seq_paper: f64,
@@ -71,6 +74,7 @@ pub(crate) struct DecodeState {
 
 /// PerLLM mid-split decode in flight (per-token edge→cloud hops).
 pub(crate) struct SplitState {
+    pub edge: EdgeId,
     pub kv: KvHandle,
     pub lens: (usize, usize, usize),
     pub seq_paper: f64,
@@ -104,24 +108,42 @@ pub(crate) enum BPhase {
 /// One baseline request moving through the serving pipeline as a
 /// sequence of virtual-time events, schedulable alongside MSAO sessions.
 /// `next_time()` is the scheduler's sort key; `step()` advances exactly
-/// one phase / decode step.
+/// one phase / decode step. Like MSAO sessions, a baseline session is
+/// bound to one edge site of the fleet (its uplink, local compute, and
+/// memory all land there).
 pub struct BaselineSession<'a> {
     item: &'a Item,
     arrival: f64,
     baseline: Baseline,
+    edge: EdgeId,
     rec: ExecRecord,
     phase: BPhase,
 }
 
 impl<'a> BaselineSession<'a> {
-    pub fn new(baseline: Baseline, item: &'a Item, arrival: f64) -> Self {
+    pub fn new(baseline: Baseline, item: &'a Item, arrival: f64, edge: EdgeId) -> Self {
         BaselineSession {
             item,
             arrival,
             baseline,
-            rec: ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() },
+            edge,
+            rec: ExecRecord {
+                request_id: item.id,
+                t_arrival: arrival,
+                edge_id: edge,
+                ..Default::default()
+            },
             phase: BPhase::Start,
         }
+    }
+
+    /// Re-bind the session to another edge. Only valid before the first
+    /// step (the fleet router resolves `LeastLoaded` at the arrival
+    /// event).
+    pub fn set_edge(&mut self, edge: EdgeId) {
+        debug_assert!(matches!(self.phase, BPhase::Start), "edge re-bound mid-session");
+        self.edge = edge;
+        self.rec.edge_id = edge;
     }
 
     /// Virtual time of this session's next event.
@@ -170,12 +192,14 @@ impl<'a> BaselineSession<'a> {
     fn step_start(&mut self, coord: &mut Coordinator, vc: &mut VirtualCluster) -> Result<BPhase> {
         match self.baseline {
             Baseline::CloudOnly => {
-                cloud_only::start(coord, vc, self.item, self.arrival, &mut self.rec, 1.0)
+                cloud_only::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec, 1.0)
             }
             Baseline::EdgeOnly => {
-                edge_only::start(coord, vc, self.item, self.arrival, &mut self.rec, 0.0)
+                edge_only::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec, 0.0)
             }
-            Baseline::PerLlm => perllm::start(coord, vc, self.item, self.arrival, &mut self.rec),
+            Baseline::PerLlm => {
+                perllm::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec)
+            }
         }
     }
 
@@ -190,25 +214,25 @@ impl<'a> BaselineSession<'a> {
         let mut t_done = f.t_done;
         if f.downlink {
             let bytes = 4 * f.tokens_out as u64 + 64;
-            let (_, done) = vc.send_down(f.t_done, bytes, false);
+            let (_, done) = vc.send_down(self.edge, f.t_done, bytes, false);
             self.rec.bytes_down = bytes;
             t_done = done;
         }
         self.rec.t_done = t_done;
         self.rec.latency_s = t_done - self.arrival;
         self.rec.tokens_out = f.tokens_out;
-        self.rec.flops_edge = vc.flops_edge;
+        self.rec.flops_edge = vc.edges[self.edge].flops;
         self.rec.flops_cloud = vc.flops_cloud;
-        self.rec.mem_edge_gb = vc.edge_mem.peak_gb();
+        self.rec.mem_edge_gb = vc.edges[self.edge].mem.peak_gb();
         self.rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
         // Dedicated serving memory (Fig. 8): Cloud-only pins the full
         // model for the stream; Edge-only the draft; PerLLM pins its
         // layer split on both devices regardless of where a given
-        // request lands.
+        // request lands. Edge-side peaks are the session's own site.
         self.rec.mem_serving_gb = match self.baseline {
             Baseline::CloudOnly => vc.cloud_mem.peak_gb(),
-            Baseline::EdgeOnly => vc.edge_mem.peak_gb(),
-            Baseline::PerLlm => vc.edge_mem.peak_gb() + vc.cloud_mem.peak_gb(),
+            Baseline::EdgeOnly => vc.edges[self.edge].mem.peak_gb(),
+            Baseline::PerLlm => vc.edges[self.edge].mem.peak_gb() + vc.cloud_mem.peak_gb(),
         };
 
         let cap = Capability::for_benchmark(self.item.benchmark, bandwidth_mbps);
@@ -241,7 +265,7 @@ fn step_decode(
 ) -> Result<BPhase> {
     let gen_off = coord.eng.c.gen_off();
     let eos = coord.eng.c.eos();
-    let site = if d.cloud { Site::Cloud } else { Site::Edge };
+    let site = if d.cloud { Site::Cloud } else { Site::Edge(d.edge) };
     let m = if d.cloud { SimModel::qwen25vl_7b() } else { SimModel::qwen2vl_2b() };
     let lg = coord.eng.block(d.cloud, false, d.kv, gen_off + d.j, &[d.tok], d.lens)?;
     let ctx = d.seq_paper + d.j as f64;

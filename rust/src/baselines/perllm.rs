@@ -8,18 +8,18 @@
 //! modality pruning or speculative overlap, so it ships full payloads
 //! and pays per-token hops whenever it splits mid-model.
 
-//! [`start`] is the session decomposition (partition decision at the
+//! `start` is the session decomposition (partition decision at the
 //! arrival event, then the chosen path's phases) driven by the event
 //! scheduler; [`serve`] is the pre-refactor run-to-completion loop, kept
 //! verbatim as the sequential reference the golden equivalence tests pin
-//! [`start`] against.
+//! `start` against.
 
 use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
 use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
@@ -34,7 +34,9 @@ enum Partition {
     Split, // front half on edge, back half on cloud
 }
 
-/// Estimate completion time for a partition choice (cost model only).
+/// Estimate completion time for a partition choice (cost model only),
+/// for a request landing on `edge` of the fleet.
+#[allow(clippy::too_many_arguments)]
 fn estimate(
     vc: &VirtualCluster,
     item: &Item,
@@ -43,6 +45,7 @@ fn estimate(
     bandwidth_mbps: f64,
     rtt_s: f64,
     part: Partition,
+    edge: EdgeId,
     arrival: f64,
 ) -> f64 {
     let draft = SimModel::qwen2vl_2b();
@@ -52,14 +55,14 @@ fn estimate(
     let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
     let payload = super::full_payload_bytes(item) as f64;
     let up_s = payload * 8.0 / (bandwidth_mbps * 1e6) + 0.5 * rtt_s;
-    let edge_q = (vc.busy_until(Site::Edge) - arrival).max(0.0);
+    let edge_q = (vc.busy_until(Site::Edge(edge)) - arrival).max(0.0);
     let cloud_q = (vc.busy_until(Site::Cloud) - arrival).max(0.0);
     match part {
         Partition::AllEdge => {
             edge_q
-                + vc.dev(Site::Edge).encode_s(&vit, enc_patches) * frames
-                + vc.dev(Site::Edge).prefill_s(&draft, seq)
-                + n_out as f64 * vc.dev(Site::Edge).decode_s(&draft, seq)
+                + vc.dev(Site::Edge(edge)).encode_s(&vit, enc_patches) * frames
+                + vc.dev(Site::Edge(edge)).prefill_s(&draft, seq)
+                + n_out as f64 * vc.dev(Site::Edge(edge)).decode_s(&draft, seq)
         }
         Partition::AllCloud => {
             cloud_q
@@ -75,12 +78,12 @@ fn estimate(
             half.kv_bytes_per_token *= 0.5;
             let hidden_up = seq * full.d * 2.0 * 8.0 / (bandwidth_mbps * 1e6);
             edge_q.max(cloud_q)
-                + vc.dev(Site::Edge).encode_s(&vit, enc_patches) * frames
-                + vc.dev(Site::Edge).prefill_s(&half, seq)
+                + vc.dev(Site::Edge(edge)).encode_s(&vit, enc_patches) * frames
+                + vc.dev(Site::Edge(edge)).prefill_s(&half, seq)
                 + hidden_up
                 + vc.dev(Site::Cloud).prefill_s(&half, seq)
                 + n_out as f64
-                    * (vc.dev(Site::Edge).decode_s(&half, seq)
+                    * (vc.dev(Site::Edge(edge)).decode_s(&half, seq)
                         + vc.dev(Site::Cloud).decode_s(&half, seq)
                         + rtt_s)
         }
@@ -95,13 +98,14 @@ fn estimate(
 const EDGE_QUALITY_PENALTY_S: f64 = 0.25;
 
 /// Pick the partition minimizing estimated completion time given the
-/// *live* device/link occupancy at the arrival event.
+/// *live* device/link occupancy at the arrival event on `edge`.
 fn pick_partition(
     vc: &VirtualCluster,
     item: &Item,
     n_out: usize,
     bandwidth_mbps: f64,
     rtt_s: f64,
+    edge: EdgeId,
     arrival: f64,
 ) -> Partition {
     // Rough sequence estimate for the partition decision.
@@ -109,7 +113,8 @@ fn pick_partition(
     let mut best = Partition::AllEdge;
     let mut best_t = f64::INFINITY;
     for part in [Partition::AllEdge, Partition::AllCloud, Partition::Split] {
-        let mut t = estimate(vc, item, seq_est, n_out, bandwidth_mbps, rtt_s, part, arrival);
+        let mut t =
+            estimate(vc, item, seq_est, n_out, bandwidth_mbps, rtt_s, part, edge, arrival);
         if part == Partition::AllEdge {
             t += EDGE_QUALITY_PENALTY_S;
         }
@@ -130,15 +135,20 @@ pub(crate) fn start(
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
+    edge: EdgeId,
     rec: &mut ExecRecord,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
-    let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
-    let rtt_s = coord.cfg.network.rtt_ms * 1e-3;
-    match pick_partition(vc, item, n_out, bandwidth_mbps, rtt_s, arrival) {
-        Partition::AllEdge => super::edge_only::start(coord, vc, item, arrival, rec, 0.0),
-        Partition::AllCloud => super::cloud_only::start(coord, vc, item, arrival, rec, 1.0),
-        Partition::Split => split_start(coord, vc, item, arrival, rec),
+    // The partition decision prices the uplink/hops at the *assigned
+    // edge's* base link, not the fleet-wide nominal — on heterogeneous
+    // fleets the weak link must make AllCloud/Split genuinely dearer.
+    let net = coord.cfg.edge_network(edge);
+    let bandwidth_mbps = net.bandwidth_mbps;
+    let rtt_s = net.rtt_ms * 1e-3;
+    match pick_partition(vc, item, n_out, bandwidth_mbps, rtt_s, edge, arrival) {
+        Partition::AllEdge => super::edge_only::start(coord, vc, item, arrival, edge, rec, 0.0),
+        Partition::AllCloud => super::cloud_only::start(coord, vc, item, arrival, edge, rec, 1.0),
+        Partition::Split => split_start(coord, vc, item, arrival, edge, rec),
     }
 }
 
@@ -160,6 +170,7 @@ fn split_start(
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
+    edge: EdgeId,
     rec: &mut ExecRecord,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
@@ -172,19 +183,19 @@ fn split_start(
     let enc_frames = inp.frames.max(1) as f64;
     let enc_patches2 = if item.video.is_some() { 256.0 } else { 1024.0 };
     let (_, enc_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(edge),
         arrival,
-        vc.dev(Site::Edge).encode_s(&vit, enc_patches2) * enc_frames,
+        vc.dev(Site::Edge(edge)).encode_s(&vit, enc_patches2) * enc_frames,
         vit.flops_prefill(enc_patches2) * enc_frames,
     );
     let (_, front_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(edge),
         enc_end,
-        vc.dev(Site::Edge).prefill_s(&half, inp.seq_paper),
+        vc.dev(Site::Edge(edge)).prefill_s(&half, inp.seq_paper),
         half.flops_prefill(inp.seq_paper),
     );
     let hidden_bytes = (inp.seq_paper * full_m.d * 2.0) as u64;
-    let (_, up_arr) = vc.send_up(front_end, hidden_bytes, false);
+    let (_, up_arr) = vc.send_up(edge, front_end, hidden_bytes, false);
     rec.bytes_up += hidden_bytes;
     let (_, pre_end) = vc.exec(
         Site::Cloud,
@@ -196,7 +207,7 @@ fn split_start(
 
     let kv_total = kv_bytes(&full_m, inp.seq_paper + n_out as f64);
     let mem_half = 0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper);
-    vc.edge_mem.alloc(mem_half);
+    vc.edges[edge].mem.alloc(mem_half);
     vc.cloud_mem.alloc(mem_half);
 
     // Real tokens: unsplit full model on the cloud engine (identical math).
@@ -204,7 +215,7 @@ fn split_start(
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
         coord.eng.free_kv(true, pre.kv);
-        vc.edge_mem.free(mem_half);
+        vc.edges[edge].mem.free(mem_half);
         vc.cloud_mem.free(mem_half);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
@@ -214,6 +225,7 @@ fn split_start(
         }));
     }
     Ok(BPhase::Split(Box::new(SplitState {
+        edge,
         kv: pre.kv,
         lens: (inp.vlen, inp.alen, inp.tlen),
         seq_paper: inp.seq_paper,
@@ -244,12 +256,12 @@ pub(crate) fn split_step(
     let lg = coord.eng.block(true, false, s.kv, gen_off + s.j, &[s.tok], s.lens)?;
     let ctx = s.seq_paper + s.j as f64;
     let (_, fe) = vc.exec(
-        Site::Edge,
+        Site::Edge(s.edge),
         s.t,
-        vc.dev(Site::Edge).decode_s(&half, ctx),
+        vc.dev(Site::Edge(s.edge)).decode_s(&half, ctx),
         half.flops_decode(ctx),
     );
-    let (_, ua) = vc.send_up(fe, act_bytes, false);
+    let (_, ua) = vc.send_up(s.edge, fe, act_bytes, false);
     rec.bytes_up += act_bytes;
     let (_, ce) = vc.exec(
         Site::Cloud,
@@ -257,7 +269,7 @@ pub(crate) fn split_step(
         vc.dev(Site::Cloud).decode_s(&half, ctx),
         half.flops_decode(ctx),
     );
-    let (_, da) = vc.send_down(ce, 16, false);
+    let (_, da) = vc.send_down(s.edge, ce, 16, false);
     rec.bytes_down += 16;
     s.t = da;
     s.tok = argmax(&lg);
@@ -265,7 +277,7 @@ pub(crate) fn split_step(
     s.j += 1;
     if s.tok == eos || s.j >= s.n_out - 1 {
         coord.eng.free_kv(true, s.kv);
-        vc.edge_mem.free(s.mem_half);
+        vc.edges[s.edge].mem.free(s.mem_half);
         vc.cloud_mem.free(s.mem_half);
         return Ok(BPhase::Finish(FinishState {
             t_done: s.t,
@@ -277,9 +289,10 @@ pub(crate) fn split_step(
     Ok(BPhase::Split(s))
 }
 
-/// Sequential run-to-completion reference (the seed's loop body) — used
-/// only by the golden equivalence tests; production serving goes through
-/// the session path above.
+/// Sequential run-to-completion reference (the seed's loop body on the
+/// original two-site pair, addressed as edge 0 of a fleet of one) —
+/// used only by the golden equivalence tests; production serving goes
+/// through the session path above.
 pub fn serve(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -290,7 +303,7 @@ pub fn serve(
     let n_out = cfg.msao.max_new_tokens;
     let rtt_s = cfg.network.rtt_ms * 1e-3;
 
-    let best = pick_partition(vc, item, n_out, cfg.network.bandwidth_mbps, rtt_s, arrival);
+    let best = pick_partition(vc, item, n_out, cfg.network.bandwidth_mbps, rtt_s, 0, arrival);
 
     let mut rec = match best {
         Partition::AllEdge => {
@@ -307,7 +320,7 @@ pub fn serve(
     };
     // PerLLM pins its layer split on both devices regardless of where a
     // given request lands.
-    rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_gb();
+    rec.mem_serving_gb = vc.edges[0].mem.peak_gb() + vc.cloud_mem.peak_gb();
     Ok(rec)
 }
 
@@ -343,19 +356,19 @@ fn serve_split(
     let enc_frames = inp.frames.max(1) as f64;
     let enc_patches2 = if item.video.is_some() { 256.0 } else { 1024.0 };
     let (_, enc_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(0),
         arrival,
-        vc.dev(Site::Edge).encode_s(&vit, enc_patches2) * enc_frames,
+        vc.dev(Site::Edge(0)).encode_s(&vit, enc_patches2) * enc_frames,
         vit.flops_prefill(enc_patches2) * enc_frames,
     );
     let (_, front_end) = vc.exec(
-        Site::Edge,
+        Site::Edge(0),
         enc_end,
-        vc.dev(Site::Edge).prefill_s(&half, inp.seq_paper),
+        vc.dev(Site::Edge(0)).prefill_s(&half, inp.seq_paper),
         half.flops_prefill(inp.seq_paper),
     );
     let hidden_bytes = (inp.seq_paper * full_m.d * 2.0) as u64;
-    let (_, up_arr) = vc.send_up(front_end, hidden_bytes, false);
+    let (_, up_arr) = vc.send_up(0, front_end, hidden_bytes, false);
     rec.bytes_up += hidden_bytes;
     let (_, pre_end) = vc.exec(
         Site::Cloud,
@@ -366,7 +379,7 @@ fn serve_split(
     rec.prefill_s = pre_end - arrival;
 
     let kv_total = kv_bytes(&full_m, inp.seq_paper + n_out as f64);
-    vc.edge_mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
+    vc.edges[0].mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
     vc.cloud_mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
 
     // Real tokens: unsplit full model on the cloud engine (identical math).
@@ -380,12 +393,12 @@ fn serve_split(
         let lg = coord.eng.block(true, false, pre.kv, c.gen_off() + j, &[tok], lens)?;
         let ctx = inp.seq_paper + j as f64;
         let (_, fe) = vc.exec(
-            Site::Edge,
+            Site::Edge(0),
             t,
-            vc.dev(Site::Edge).decode_s(&half, ctx),
+            vc.dev(Site::Edge(0)).decode_s(&half, ctx),
             half.flops_decode(ctx),
         );
-        let (_, ua) = vc.send_up(fe, act_bytes, false);
+        let (_, ua) = vc.send_up(0, fe, act_bytes, false);
         rec.bytes_up += act_bytes;
         let (_, ce) = vc.exec(
             Site::Cloud,
@@ -393,7 +406,7 @@ fn serve_split(
             vc.dev(Site::Cloud).decode_s(&half, ctx),
             half.flops_decode(ctx),
         );
-        let (_, da) = vc.send_down(ce, 16, false);
+        let (_, da) = vc.send_down(0, ce, 16, false);
         rec.bytes_down += 16;
         t = da;
         tok = argmax(&lg);
@@ -403,15 +416,15 @@ fn serve_split(
         }
     }
     coord.eng.free_kv(true, pre.kv);
-    vc.edge_mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
+    vc.edges[0].mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
     vc.cloud_mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
 
     rec.t_done = t;
     rec.latency_s = t - arrival;
     rec.tokens_out = tokens.len();
-    rec.flops_edge = vc.flops_edge;
+    rec.flops_edge = vc.edges[0].flops;
     rec.flops_cloud = vc.flops_cloud;
-    rec.mem_edge_gb = vc.edge_mem.peak_gb();
+    rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
     rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
     patch_quality(&mut rec, item, &cfg, 1.0);
     Ok(rec)

@@ -15,13 +15,17 @@
 //! * `--network` picks a time-varying link scenario
 //!   (`constant|step-drop|burst|flaky`) layered over the base
 //!   bandwidth; without it the link is constant (the static substrate).
+//! * `--edges N` serves on a homogeneous fleet of N copies of the base
+//!   edge (config files can describe heterogeneous fleets via the
+//!   `fleet` section); `--assign rr|least-loaded|pinned:<edge>` picks
+//!   the request→edge routing strategy.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{NetworkDynamics, NetworkScenario};
-use crate::coordinator::{Mode, PolicyKind, TraceSpec};
+use crate::config::{Config, NetworkDynamics, NetworkScenario};
+use crate::coordinator::{Assign, Mode, PolicyKind, TraceSpec};
 use crate::workload::{Benchmark, Generator};
 
 pub struct Args {
@@ -88,6 +92,17 @@ pub fn network_dynamics(args: &Args) -> Result<Option<NetworkDynamics>> {
     }
 }
 
+/// Apply `--edges N` to the config: replace the fleet with N identical
+/// copies of the base edge. Without the flag the config file's fleet
+/// (or the single-edge default) stands.
+pub fn apply_fleet_flags(cfg: &mut Config, args: &Args) -> Result<()> {
+    if let Some(v) = args.get("edges") {
+        let n: usize = v.parse().with_context(|| format!("parsing --edges {v:?}"))?;
+        cfg.replicate_edges(n)?;
+    }
+    Ok(())
+}
+
 /// Build the `msao serve` trace spec from parsed flags. Returns the
 /// mode string (for display) alongside the spec.
 pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
@@ -106,6 +121,9 @@ pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
     let mut spec = TraceSpec::new(policy).trace(items, arrivals).seed(seed);
     if let Some(c) = args.get("concurrency") {
         spec = spec.concurrency(c.parse().context("parsing --concurrency")?);
+    }
+    if let Some(a) = args.get("assign") {
+        spec = spec.assign(Assign::parse(a)?);
     }
     Ok((mode, spec))
 }
@@ -178,6 +196,37 @@ mod tests {
     fn flag_parser_rejects_bare_values_and_missing_values() {
         assert!(Args::parse(["serve", "oops"].iter().map(|s| s.to_string())).is_err());
         assert!(Args::parse(["serve", "--n"].iter().map(|s| s.to_string())).is_err());
+    }
+
+    #[test]
+    fn assign_flag_maps_to_strategy() {
+        let (_, spec) = serve_spec(&argv(&["serve", "--n", "2"])).unwrap();
+        assert_eq!(spec.assign, Assign::RoundRobin, "default must be round-robin");
+        for (flag, want) in [
+            ("rr", Assign::RoundRobin),
+            ("least-loaded", Assign::LeastLoaded),
+            ("ll", Assign::LeastLoaded),
+            ("pinned:1", Assign::Pinned(1)),
+        ] {
+            let (_, spec) = serve_spec(&argv(&["serve", "--n", "2", "--assign", flag])).unwrap();
+            assert_eq!(spec.assign, want, "flag {flag}");
+        }
+        assert!(serve_spec(&argv(&["serve", "--assign", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn edges_flag_replicates_the_fleet() {
+        let mut cfg = Config::default();
+        apply_fleet_flags(&mut cfg, &argv(&["serve", "--edges", "3"])).unwrap();
+        assert_eq!(cfg.edge_sites().len(), 3);
+        // Absent flag leaves the config's fleet untouched.
+        let mut cfg2 = Config::default();
+        cfg2.replicate_edges(2).unwrap();
+        apply_fleet_flags(&mut cfg2, &argv(&["serve"])).unwrap();
+        assert_eq!(cfg2.edge_sites().len(), 2);
+        let mut cfg3 = Config::default();
+        assert!(apply_fleet_flags(&mut cfg3, &argv(&["serve", "--edges", "0"])).is_err());
+        assert!(apply_fleet_flags(&mut cfg3, &argv(&["serve", "--edges", "x"])).is_err());
     }
 
     #[test]

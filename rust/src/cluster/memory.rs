@@ -1,6 +1,7 @@
 //! Peak-memory accounting (substrate for Fig. 8).
 //!
-//! Tracks the edge device's GPU memory at paper scale: model weights,
+//! Tracks one device's GPU memory at paper scale — each edge site of
+//! the fleet and the shared cloud own a tracker: model weights,
 //! activation working set, KV cache occupancy, and the probe module's
 //! footprint. The tracker is a simple high-water-mark ledger driven by
 //! the coordinator's real allocation events.

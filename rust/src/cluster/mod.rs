@@ -1,16 +1,19 @@
-//! Cluster substrates: the analytic device cost model, the edge-cloud
-//! network link with time-varying conditions, the system monitor
-//! (EMA bandwidth/RTT/load estimates the coordinator plans against),
-//! and memory accounting — the simulated testbed standing in for the
-//! paper's A100 + RTX 3090 + 200-400 Mbps deployment (DESIGN.md §3
-//! substitution table).
+//! Cluster substrates: the analytic device cost model, the per-edge
+//! edge-cloud network links with time-varying conditions, the per-edge
+//! system monitors (EMA bandwidth/RTT/load estimates the coordinator
+//! plans and routes against), site identity for the edge fleet, and
+//! memory accounting — the simulated testbed standing in for the
+//! paper's A100 + N×(RTX 3090 / Orin) + 200-400 Mbps deployment
+//! (DESIGN.md §3 substitution table).
 
 pub mod costmodel;
 pub mod memory;
 pub mod monitor;
 pub mod network;
+pub mod site;
 
 pub use costmodel::{DeviceSim, SimModel};
 pub use memory::{activation_bytes, kv_bytes, MemTracker};
 pub use monitor::{NetEstimate, SystemMonitor};
 pub use network::{Dir, Link};
+pub use site::{EdgeId, Site};

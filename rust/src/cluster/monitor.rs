@@ -1,19 +1,24 @@
-//! System monitor: the coordinator's *belief* about real-time system
-//! state (paper §4.2 — "dynamically schedules workloads ... based on
-//! the derived MAS scores and real-time system states").
+//! System monitor: one edge coordinator's *belief* about real-time
+//! system state (paper §4.2 — "dynamically schedules workloads ... based
+//! on the derived MAS scores and real-time system states").
 //!
-//! The edge coordinator cannot read the link's ground-truth conditions;
-//! it can only observe them. [`SystemMonitor`] passively watches
-//! completed transfers (the effective bandwidth/RTT each one
-//! experienced) and per-site queue waits. The bandwidth/RTT estimates
-//! are what the planner's Eq. 14 cost model, the adaptive site router's
-//! link terms, and the per-round speculative replanning consume
-//! *instead of* the ground-truth config; estimates lag reality by the
-//! EMA horizon, so MSAO genuinely adapts — and transiently
+//! Every edge site of the fleet owns one monitor for its own uplink. An
+//! edge coordinator cannot read its link's ground-truth conditions; it
+//! can only observe them. [`SystemMonitor`] passively watches completed
+//! transfers on *its* link (the effective bandwidth/RTT each one
+//! experienced) and per-site queue waits: its own device's waits
+//! directly, and the shared cloud's waits as advertised by the cloud
+//! (piggybacked on every response, so every edge's belief updates). The
+//! bandwidth/RTT estimates are what the planner's Eq. 14 cost model,
+//! the adaptive site router's link terms, the fleet router's
+//! `LeastLoaded` assignment, and the per-round speculative replanning
+//! consume *instead of* the ground-truth config; estimates lag reality
+//! by the EMA horizon, so MSAO genuinely adapts — and transiently
 //! mis-estimates — like the paper's system. The queue-wait EMAs are the
-//! load-observability half (surfaced via `TraceResult`): scheduling
-//! itself reads the coordinator's own *exact* queue depths, which a
-//! real edge coordinator does know locally.
+//! load-observability half (surfaced via `TraceResult` and consumed by
+//! `LeastLoaded`): per-session scheduling itself reads the
+//! coordinator's own *exact* queue depths, which a real edge
+//! coordinator does know locally.
 //!
 //! Estimates are seeded from the config's nominal conditions (the same
 //! prior the static planner used to hard-code). Under constant
@@ -24,6 +29,8 @@
 
 use crate::config::NetworkCfg;
 
+use super::site::Site;
+
 /// The monitor's current belief about link conditions, in the same
 /// units as [`NetworkCfg`] so it can substitute for it in cost models.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -32,9 +39,9 @@ pub struct NetEstimate {
     pub rtt_ms: f64,
 }
 
-/// Passive observer of the serving substrate: EMA estimates of link
-/// bandwidth/RTT (from completed transfers) and per-site queue wait
-/// (from device scheduling events).
+/// Passive observer of one edge site's serving substrate: EMA estimates
+/// of link bandwidth/RTT (from completed transfers) and per-site queue
+/// wait (from device scheduling events).
 #[derive(Debug, Clone)]
 pub struct SystemMonitor {
     est: NetEstimate,
@@ -63,10 +70,16 @@ impl SystemMonitor {
         self.transfers_observed += 1;
     }
 
-    /// A device op waited `wait_s` behind the site's queue before it
-    /// could start (`cloud` selects the site).
-    pub fn observe_wait(&mut self, cloud: bool, wait_s: f64) {
-        let w = if cloud { &mut self.cloud_wait_s } else { &mut self.edge_wait_s };
+    /// A device op waited `wait_s` behind `site`'s queue before it could
+    /// start. The monitor is already scoped to one edge, so the id
+    /// inside [`Site::Edge`] is not inspected — the enum exists so call
+    /// sites cannot transpose the edge/cloud EMAs (the old boolean
+    /// `is_cloud` parameter allowed exactly that).
+    pub fn observe_wait(&mut self, site: Site, wait_s: f64) {
+        let w = match site {
+            Site::Cloud => &mut self.cloud_wait_s,
+            Site::Edge(_) => &mut self.edge_wait_s,
+        };
         *w += self.alpha * (wait_s - *w);
     }
 
@@ -76,11 +89,10 @@ impl SystemMonitor {
     }
 
     /// Smoothed queue wait (seconds) for a site — the load estimate.
-    pub fn wait_s(&self, cloud: bool) -> f64 {
-        if cloud {
-            self.cloud_wait_s
-        } else {
-            self.edge_wait_s
+    pub fn wait_s(&self, site: Site) -> f64 {
+        match site {
+            Site::Cloud => self.cloud_wait_s,
+            Site::Edge(_) => self.edge_wait_s,
         }
     }
 }
@@ -97,7 +109,7 @@ mod tests {
     fn seeded_from_config_prior() {
         let m = SystemMonitor::new(&cfg(), 0.3);
         assert_eq!(m.estimate(), NetEstimate { bandwidth_mbps: 300.0, rtt_ms: 20.0 });
-        assert_eq!(m.wait_s(false), 0.0);
+        assert_eq!(m.wait_s(Site::Edge(0)), 0.0);
         assert_eq!(m.transfers_observed, 0);
     }
 
@@ -142,11 +154,23 @@ mod tests {
     #[test]
     fn queue_wait_ema_tracks_per_site() {
         let mut m = SystemMonitor::new(&cfg(), 0.5);
-        m.observe_wait(false, 1.0);
-        m.observe_wait(true, 3.0);
-        assert!((m.wait_s(false) - 0.5).abs() < 1e-12);
-        assert!((m.wait_s(true) - 1.5).abs() < 1e-12);
-        m.observe_wait(false, 1.0);
-        assert!((m.wait_s(false) - 0.75).abs() < 1e-12);
+        m.observe_wait(Site::Edge(0), 1.0);
+        m.observe_wait(Site::Cloud, 3.0);
+        assert!((m.wait_s(Site::Edge(0)) - 0.5).abs() < 1e-12);
+        assert!((m.wait_s(Site::Cloud) - 1.5).abs() < 1e-12);
+        m.observe_wait(Site::Edge(0), 1.0);
+        assert!((m.wait_s(Site::Edge(0)) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_id_inside_site_is_not_inspected() {
+        // The monitor is scoped to one edge; any Edge(id) addresses its
+        // single edge-wait EMA (the id exists to keep the cloud EMA
+        // untransposable, not to select among edges).
+        let mut m = SystemMonitor::new(&cfg(), 0.5);
+        m.observe_wait(Site::Edge(7), 2.0);
+        assert_eq!(m.wait_s(Site::Edge(0)).to_bits(), m.wait_s(Site::Edge(7)).to_bits());
+        assert!((m.wait_s(Site::Edge(3)) - 1.0).abs() < 1e-12);
+        assert_eq!(m.wait_s(Site::Cloud), 0.0);
     }
 }

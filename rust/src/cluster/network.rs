@@ -1,5 +1,6 @@
 //! Edge-cloud network link simulator (substrate, Eq. 8) with
-//! time-varying conditions.
+//! time-varying conditions — one instance per edge site of the fleet,
+//! each with its own dynamics seed.
 //!
 //! T_comm = DataSize / B_eff + RTT, with optional uniform jitter. The
 //! link meters every byte that crosses it (uplink modality payloads,
@@ -8,7 +9,7 @@
 //! scheduler owns the clock; `Link` only computes durations and tallies
 //! traffic.
 //!
-//! Conditions are *time-indexed*: a [`ConditionModel`] built from the
+//! Conditions are *time-indexed*: a `ConditionModel` built from the
 //! config's [`NetworkDynamics`] maps the virtual start time of each
 //! transfer to the bandwidth/RTT in effect — a constant model (the
 //! default), an explicit piecewise-constant trace, or a seeded

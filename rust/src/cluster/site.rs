@@ -1,0 +1,50 @@
+//! Site identity for the edge fleet: which device (and which uplink)
+//! an operation is charged to.
+//!
+//! The substrate is a *fleet* of edge sites contending for one shared
+//! cloud: every edge-side resource (device, link, monitor, memory) is
+//! per-site, so edge-side operations name their site by [`EdgeId`].
+//! The cloud is a single shared pool — [`Site::Cloud`] carries no id.
+//!
+//! `Site` lives in `cluster` (not `coordinator::timeline`) because the
+//! [`super::SystemMonitor`] keys its queue-wait EMAs by site; the
+//! coordinator re-exports it from `timeline` for its own call sites.
+
+/// Index of an edge site within the fleet (0 for a single-edge setup).
+pub type EdgeId = usize;
+
+/// A schedulable compute site: one of the fleet's edge devices, or the
+/// shared cloud.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    Edge(EdgeId),
+    Cloud,
+}
+
+impl Site {
+    pub fn is_cloud(self) -> bool {
+        matches!(self, Site::Cloud)
+    }
+
+    /// The edge id, if this is an edge site.
+    pub fn edge_id(self) -> Option<EdgeId> {
+        match self {
+            Site::Edge(e) => Some(e),
+            Site::Cloud => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_accessors() {
+        assert!(Site::Cloud.is_cloud());
+        assert!(!Site::Edge(0).is_cloud());
+        assert_eq!(Site::Edge(3).edge_id(), Some(3));
+        assert_eq!(Site::Cloud.edge_id(), None);
+        assert_ne!(Site::Edge(0), Site::Edge(1));
+    }
+}

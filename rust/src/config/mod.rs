@@ -24,6 +24,11 @@ pub struct Config {
     pub edge: DeviceCfg,
     pub cloud: DeviceCfg,
     pub serve: ServeCfg,
+    /// The edge fleet: one entry per edge site contending for the shared
+    /// cloud, each with its own device and link. Empty (the default)
+    /// means a single edge built from the top-level `edge` / `network` /
+    /// `dynamics` fields — the original two-site testbed.
+    pub fleet: Vec<EdgeSiteCfg>,
 }
 
 impl Default for Config {
@@ -36,8 +41,18 @@ impl Default for Config {
             edge: DeviceCfg::rtx3090(),
             cloud: DeviceCfg::a100(),
             serve: ServeCfg::default(),
+            fleet: Vec::new(),
         }
     }
+}
+
+/// One edge site of the fleet: its device plus its own link to the
+/// cloud (base conditions and how they evolve over virtual time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeSiteCfg {
+    pub device: DeviceCfg,
+    pub network: NetworkCfg,
+    pub dynamics: NetworkDynamics,
 }
 
 /// MSAO hyper-parameters (paper §5.1.4).
@@ -106,7 +121,7 @@ impl Default for MsaoCfg {
 }
 
 /// Network link between edge and cloud (Eq. 8 parameters).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkCfg {
     /// Effective bandwidth in Mbps (paper levels: 200 / 300 / 400).
     pub bandwidth_mbps: f64,
@@ -230,8 +245,9 @@ fn parse_trace(v: &Value) -> Result<Vec<Segment>> {
     Ok(segs)
 }
 
-/// Analytic device model (DESIGN.md §3 substitution for A100 / RTX 3090).
-#[derive(Debug, Clone, Copy)]
+/// Analytic device model (DESIGN.md §3 substitution for A100 /
+/// RTX 3090 / Jetson Orin).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceCfg {
     /// Peak dense f16/bf16 throughput in TFLOP/s.
     pub peak_tflops: f64,
@@ -266,6 +282,28 @@ impl DeviceCfg {
             mfu: 0.45,
             launch_us: 5.0,
         }
+    }
+
+    /// NVIDIA Jetson AGX Orin 32GB — the weak end of a heterogeneous
+    /// edge fleet (MoA-Off-style mixed deployments).
+    pub fn orin() -> Self {
+        DeviceCfg {
+            peak_tflops: 21.0, // fp16 dense (Ampere, 1792 cores)
+            mem_bw_gbs: 204.8,
+            vram_gb: 32.0,
+            mfu: 0.30,
+            launch_us: 14.0,
+        }
+    }
+
+    /// Look up a named device preset (fleet config `device` key, CLI).
+    pub fn preset(name: &str) -> Result<Self> {
+        Ok(match name {
+            "rtx3090" | "3090" => DeviceCfg::rtx3090(),
+            "a100" => DeviceCfg::a100(),
+            "orin" => DeviceCfg::orin(),
+            other => bail!("unknown device preset {other:?} (try rtx3090|a100|orin)"),
+        })
     }
 }
 
@@ -302,6 +340,34 @@ impl Default for ServeCfg {
     }
 }
 
+/// Parse one `fleet` array entry: a per-edge site with an optional
+/// device preset and link overrides, defaulting to the top-level
+/// `edge` / `network` / `dynamics` values.
+fn parse_fleet_site(base: &Config, v: &Value) -> Result<EdgeSiteCfg> {
+    let mut site = EdgeSiteCfg {
+        device: base.edge,
+        network: base.network,
+        dynamics: base.dynamics.clone(),
+    };
+    for (k, v2) in v.as_obj()? {
+        match k.as_str() {
+            "device" => site.device = DeviceCfg::preset(v2.as_str()?)?,
+            "bandwidth_mbps" => site.network.bandwidth_mbps = v2.as_f64()?,
+            "rtt_ms" => site.network.rtt_ms = v2.as_f64()?,
+            "jitter" => site.network.jitter = v2.as_f64()?,
+            "scenario" => {
+                site.dynamics = NetworkDynamics::Scenario(NetworkScenario::parse(v2.as_str()?)?)
+            }
+            "trace" => site.dynamics = NetworkDynamics::Trace(parse_trace(v2)?),
+            other => bail!("unknown fleet key {other:?}"),
+        }
+    }
+    if !(site.network.bandwidth_mbps.is_finite() && site.network.bandwidth_mbps > 0.0) {
+        bail!("fleet entry: bandwidth_mbps must be > 0");
+    }
+    Ok(site)
+}
+
 macro_rules! merge_fields {
     ($obj:expr, $target:expr, { $($key:literal => $field:expr => $conv:ident),* $(,)? }) => {
         for (k, v) in $obj {
@@ -328,6 +394,10 @@ impl Config {
     }
 
     pub fn merge(&mut self, v: &Value) -> Result<()> {
+        // Fleet entries default to the top-level edge/network/dynamics
+        // values, so they are resolved only after every other section
+        // has merged (section iteration is alphabetical).
+        let mut fleet_section: Option<&Value> = None;
         for (k, section) in v.as_obj()? {
             match k.as_str() {
                 "artifacts_dir" => self.artifacts_dir = section.as_str()?.to_string(),
@@ -398,9 +468,67 @@ impl Config {
                         );
                     }
                 }
+                "fleet" => fleet_section = Some(section),
                 other => bail!("unknown config section {other:?}"),
             }
         }
+        if let Some(section) = fleet_section {
+            let items = section.as_arr()?;
+            if items.is_empty() {
+                bail!("fleet must list at least one edge site");
+            }
+            self.fleet =
+                items.iter().map(|e| parse_fleet_site(self, e)).collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+
+    /// The resolved edge fleet: the explicit `fleet` entries, or — when
+    /// none are configured — a single site built from the top-level
+    /// `edge` / `network` / `dynamics` fields (the original two-site
+    /// testbed, bit-for-bit).
+    pub fn edge_sites(&self) -> Vec<EdgeSiteCfg> {
+        if self.fleet.is_empty() {
+            vec![EdgeSiteCfg {
+                device: self.edge,
+                network: self.network,
+                dynamics: self.dynamics.clone(),
+            }]
+        } else {
+            self.fleet.clone()
+        }
+    }
+
+    /// Base link conditions for one edge site — the top-level `network`
+    /// when no fleet is configured (so a fleet of one is bit-for-bit
+    /// the single-edge path), that edge's own link otherwise.
+    pub fn edge_network(&self, edge: usize) -> NetworkCfg {
+        if self.fleet.is_empty() {
+            self.network
+        } else {
+            self.fleet[edge].network
+        }
+    }
+
+    /// Replace the fleet with `n` identical copies of the base edge
+    /// (CLI `--edges n`). `n == 1` clears the fleet back to the
+    /// top-level single-edge path.
+    pub fn replicate_edges(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            bail!("--edges must be >= 1");
+        }
+        self.fleet = if n == 1 {
+            Vec::new()
+        } else {
+            vec![
+                EdgeSiteCfg {
+                    device: self.edge,
+                    network: self.network,
+                    dynamics: self.dynamics.clone(),
+                };
+                n
+            ]
+        };
         Ok(())
     }
 
@@ -493,6 +621,99 @@ mod tests {
         )
         .is_err());
         assert!(Config::from_json_str(r#"{"network": {"trace": []}}"#).is_err());
+    }
+
+    #[test]
+    fn fleet_defaults_to_single_top_level_edge() {
+        let c = Config::default();
+        assert!(c.fleet.is_empty());
+        let sites = c.edge_sites();
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].device, c.edge);
+        assert_eq!(sites[0].network, c.network);
+        assert_eq!(sites[0].dynamics, c.dynamics);
+    }
+
+    #[test]
+    fn fleet_entries_inherit_top_level_overrides() {
+        // The fleet section resolves AFTER network/edge, whatever the
+        // key order, so entries default to the configured base link.
+        let c = Config::from_json_str(
+            r#"{"fleet": [{}, {"bandwidth_mbps": 60, "rtt_ms": 40}],
+                "network": {"bandwidth_mbps": 200}}"#,
+        )
+        .unwrap();
+        let sites = c.edge_sites();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].network.bandwidth_mbps, 200.0);
+        assert_eq!(sites[1].network.bandwidth_mbps, 60.0);
+        assert_eq!(sites[1].network.rtt_ms, 40.0);
+        assert_eq!(sites[0].device, DeviceCfg::rtx3090());
+    }
+
+    #[test]
+    fn fleet_device_presets_and_dynamics_parse() {
+        let c = Config::from_json_str(
+            r#"{"fleet": [
+                {"device": "rtx3090"},
+                {"device": "orin", "scenario": "flaky"},
+                {"device": "orin", "trace": [{"t": 0, "bandwidth_mbps": 50, "rtt_ms": 30}]}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.fleet[0].device, DeviceCfg::rtx3090());
+        assert_eq!(c.fleet[1].device, DeviceCfg::orin());
+        assert_eq!(
+            c.fleet[1].dynamics,
+            NetworkDynamics::Scenario(NetworkScenario::Flaky)
+        );
+        assert!(matches!(&c.fleet[2].dynamics, NetworkDynamics::Trace(t) if t.len() == 1));
+        assert!(DeviceCfg::preset("bogus").is_err());
+    }
+
+    #[test]
+    fn fleet_rejects_malformed_entries() {
+        assert!(Config::from_json_str(r#"{"fleet": []}"#).is_err(), "empty fleet");
+        assert!(
+            Config::from_json_str(r#"{"fleet": [{"typo_key": 1}]}"#).is_err(),
+            "unknown key"
+        );
+        assert!(
+            Config::from_json_str(r#"{"fleet": [{"device": "bogus"}]}"#).is_err(),
+            "unknown preset"
+        );
+        assert!(
+            Config::from_json_str(r#"{"fleet": [{"bandwidth_mbps": 0}]}"#).is_err(),
+            "non-positive bandwidth"
+        );
+    }
+
+    #[test]
+    fn edge_network_resolves_per_edge_links() {
+        let c = Config::from_json_str(
+            r#"{"network": {"bandwidth_mbps": 200},
+                "fleet": [{}, {"bandwidth_mbps": 60, "rtt_ms": 40}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.edge_network(0).bandwidth_mbps, 200.0);
+        assert_eq!(c.edge_network(1).bandwidth_mbps, 60.0);
+        assert_eq!(c.edge_network(1).rtt_ms, 40.0);
+        // Fleet-less: the top-level network, whatever the index asked.
+        let d = Config::default();
+        assert_eq!(d.edge_network(0), d.network);
+    }
+
+    #[test]
+    fn replicate_edges_builds_homogeneous_fleet() {
+        let mut c = Config::default();
+        c.replicate_edges(3).unwrap();
+        assert_eq!(c.fleet.len(), 3);
+        assert_eq!(c.edge_sites().len(), 3);
+        assert!(c.fleet.iter().all(|s| s.device == c.edge && s.network == c.network));
+        // n == 1 restores the fleet-less single-edge path.
+        c.replicate_edges(1).unwrap();
+        assert!(c.fleet.is_empty());
+        assert!(c.replicate_edges(0).is_err());
     }
 
     #[test]

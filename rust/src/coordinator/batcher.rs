@@ -72,13 +72,20 @@ impl Batcher {
         self.piggybacked = 0;
     }
 
-    pub fn amortization(&self) -> f64 {
-        let total = self.windows_opened + self.piggybacked;
+    /// Piggybacked fraction for the given counters — the single source
+    /// of the amortization formula, shared with the trace server's
+    /// fleet-wide aggregation over per-uplink batchers.
+    pub fn ratio(piggybacked: u64, windows_opened: u64) -> f64 {
+        let total = windows_opened + piggybacked;
         if total == 0 {
             0.0
         } else {
-            self.piggybacked as f64 / total as f64
+            piggybacked as f64 / total as f64
         }
+    }
+
+    pub fn amortization(&self) -> f64 {
+        Self::ratio(self.piggybacked, self.windows_opened)
     }
 }
 

@@ -1,23 +1,28 @@
 //! The MSAO coordinator — the paper's system contribution.
 //!
-//! Pipeline per request (Fig. 2): the edge probes modality sparsity
-//! ([`mas`]), the coarse planner picks retention/compression by Bayesian
-//! optimization ([`planner`]), both models prefill in parallel (Eq. 14's
-//! max term), and the fine-grained speculative loop ([`speculative`])
-//! generates tokens with entropy-gated edge drafts verified by the cloud,
-//! batched over the link ([`batcher`]). All timing flows through the
-//! virtual testbed ([`timeline`]); all tokens flow through the real PJRT
-//! engines ([`engines`]). Link conditions are time-varying: planning and
-//! per-round speculative replanning consume the system monitor's EMA
-//! estimates ([`crate::cluster::SystemMonitor`]) rather than ground
-//! truth, so MSAO adapts to — and transiently mis-estimates — the
-//! real-time system state.
+//! Pipeline per request (Fig. 2): the assigned edge site probes
+//! modality sparsity ([`mas`]), the coarse planner picks
+//! retention/compression by Bayesian optimization ([`planner`]), both
+//! models prefill in parallel (Eq. 14's max term), and the fine-grained
+//! speculative loop ([`speculative`]) generates tokens with
+//! entropy-gated edge drafts verified by the cloud, batched over that
+//! edge's link ([`batcher`], one window per uplink). All timing flows
+//! through the virtual testbed ([`timeline`]) — an edge *fleet*
+//! contending for one shared cloud device; all tokens flow through the
+//! real PJRT engines ([`engines`]). Link conditions are time-varying
+//! per edge: planning and per-round speculative replanning consume the
+//! assigned edge's monitor EMA estimates
+//! ([`crate::cluster::SystemMonitor`]) rather than ground truth, so
+//! MSAO adapts to — and transiently mis-estimates — the real-time
+//! system state.
 //!
 //! Serving is policy-driven: a [`TraceSpec`] names the trace, the
 //! [`PolicyKind`] (MSAO, an ablation, a baseline, or a per-request mix),
-//! the concurrency cap, and the testbed seed, and [`serve`] is the one
-//! entrypoint that runs it — every strategy is an event-driven session
-//! interleaved by [`scheduler`] on the shared cluster.
+//! the edge-assignment strategy ([`Assign`]: pinned, round-robin, or
+//! monitor-driven least-loaded), the concurrency cap, and the testbed
+//! seed, and [`serve`] is the one entrypoint that runs it — every
+//! strategy is an event-driven session interleaved by [`scheduler`] on
+//! the shared fleet.
 
 pub mod batcher;
 pub mod engines;
@@ -33,8 +38,10 @@ pub mod timeline;
 pub use batcher::Batcher;
 pub use engines::Engines;
 pub use planner::Plan;
-pub use policy::{testbed, PolicyKind, ResidentProfile, TraceSpec};
+pub use policy::{
+    least_loaded, testbed, Assign, FleetRouter, PolicyKind, ResidentProfile, TraceSpec,
+};
 pub use scheduler::StepOutcome;
-pub use server::{serve, TraceResult};
+pub use server::{serve, EdgeTraceStats, TraceResult};
 pub use session::{Coordinator, Mode, Session};
-pub use timeline::{Site, VirtualCluster};
+pub use timeline::{edge_seed, EdgeId, EdgeSite, Site, VirtualCluster};

@@ -17,12 +17,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::cluster::SimModel;
+use crate::cluster::{SimModel, SystemMonitor};
 use crate::config::Config;
 use crate::workload::Item;
 
 use super::session::Mode;
-use super::timeline::VirtualCluster;
+use super::timeline::{EdgeId, Site, VirtualCluster};
 
 /// Serving runtimes hold ~25% beyond raw weights (CUDA context,
 /// attention workspaces, fragmentation) — folded into the resident base
@@ -142,6 +142,124 @@ impl PolicyKind {
     }
 }
 
+/// How incoming requests are assigned to edge sites of the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Assign {
+    /// Every request lands on one fixed edge.
+    Pinned(EdgeId),
+    /// Request `i` lands on edge `i % n_edges` (the fleet-blind split).
+    RoundRobin,
+    /// Each request, at its arrival event, lands on the edge whose
+    /// monitor estimates the lowest load: smoothed device queue wait
+    /// plus the time to ship a reference payload at the estimated link
+    /// conditions. This is the fleet-aware router — it reads *beliefs*,
+    /// not ground truth, so it adapts as the monitors converge.
+    LeastLoaded,
+}
+
+impl Assign {
+    pub fn name(self) -> String {
+        match self {
+            Assign::Pinned(e) => format!("pinned:{e}"),
+            Assign::RoundRobin => "round-robin".to_string(),
+            Assign::LeastLoaded => "least-loaded".to_string(),
+        }
+    }
+
+    /// Parse a CLI `--assign` value: `rr` / `round-robin`,
+    /// `least-loaded` / `ll`, or `pinned:<edge>`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(e) = s.strip_prefix("pinned:") {
+            let id: EdgeId = e
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad pinned edge id {e:?} in --assign {s:?}"))?;
+            return Ok(Assign::Pinned(id));
+        }
+        Ok(match s {
+            "rr" | "round-robin" => Assign::RoundRobin,
+            "ll" | "least-loaded" => Assign::LeastLoaded,
+            other => bail!(
+                "unknown assignment strategy {other:?} (try rr|least-loaded|pinned:<edge>)"
+            ),
+        })
+    }
+
+    /// Edge for request `i` when the assignment is static (`None` for
+    /// `LeastLoaded`, which must read the monitors at the arrival
+    /// event).
+    pub fn static_pick(self, i: usize, n_edges: usize) -> Option<EdgeId> {
+        match self {
+            Assign::Pinned(e) => Some(e),
+            Assign::RoundRobin => Some(i % n_edges.max(1)),
+            Assign::LeastLoaded => None,
+        }
+    }
+
+    /// Reject assignments the fleet cannot honor.
+    pub fn validate(self, n_edges: usize) -> Result<()> {
+        if let Assign::Pinned(e) = self {
+            if e >= n_edges {
+                bail!("Pinned({e}) but the fleet has {n_edges} edge(s)");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reference payload for the `LeastLoaded` link term: roughly one
+/// pruned uplink (image partition at default retention). The exact
+/// value only scales the bandwidth term against the wait term.
+const ROUTE_REF_BYTES: f64 = 512.0 * 1024.0;
+
+/// An edge's routing score under its monitor's current belief: lower is
+/// better. Strictly increasing in the smoothed queue wait and RTT,
+/// strictly decreasing in the bandwidth estimate — so an edge that is
+/// dominated on every axis can never win the argmin.
+pub fn edge_load_score(monitor: &SystemMonitor) -> f64 {
+    let est = monitor.estimate();
+    monitor.wait_s(Site::Edge(0))
+        + ROUTE_REF_BYTES * 8.0 / (est.bandwidth_mbps * 1e6)
+        + 0.5 * est.rtt_ms * 1e-3
+}
+
+/// The `LeastLoaded` pick: argmin of [`edge_load_score`] over the
+/// fleet, ties broken toward the lower edge id.
+pub fn least_loaded(vc: &VirtualCluster) -> EdgeId {
+    let mut best = 0;
+    let mut best_score = f64::INFINITY;
+    for (id, edge) in vc.edges.iter().enumerate() {
+        let score = edge_load_score(&edge.monitor);
+        if score < best_score {
+            best_score = score;
+            best = id;
+        }
+    }
+    best
+}
+
+/// Per-trace request router: resolves each session's edge assignment.
+/// Static strategies are resolved by index; `LeastLoaded` reads the
+/// fleet's monitors at the moment a session first steps (its arrival
+/// event, in virtual-time order).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetRouter {
+    assign: Assign,
+}
+
+impl FleetRouter {
+    pub fn new(assign: Assign) -> Self {
+        FleetRouter { assign }
+    }
+
+    /// Edge for request `i`, given the live cluster state.
+    pub fn pick(&self, i: usize, vc: &VirtualCluster) -> EdgeId {
+        match self.assign.static_pick(i, vc.n_edges()) {
+            Some(e) => e,
+            None => least_loaded(vc),
+        }
+    }
+}
+
 /// Permanently-resident bytes per site (weights + workspace).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResidentProfile {
@@ -161,10 +279,13 @@ impl ResidentProfile {
 
 /// Fresh virtual testbed with `profile`'s resident weights pinned — the
 /// one place the cluster is configured (shared by the trace server and
-/// the golden equivalence tests).
+/// the golden equivalence tests). Every edge of the fleet hosts the
+/// policy's edge-resident weights (each site serves independently).
 pub fn testbed(cfg: &Config, seed: u64, profile: &ResidentProfile) -> VirtualCluster {
     let mut vc = VirtualCluster::new(cfg, seed);
-    vc.edge_mem.set_base(profile.edge_bytes);
+    for edge in &mut vc.edges {
+        edge.mem.set_base(profile.edge_bytes);
+    }
     vc.cloud_mem.set_base(profile.cloud_bytes);
     vc
 }
@@ -194,6 +315,9 @@ pub struct TraceSpec {
     pub seed: u64,
     /// Resident-weight override; `None` derives from the policy.
     pub profile: Option<ResidentProfile>,
+    /// How requests are assigned to edge sites. Round-robin by default
+    /// (on a fleet of one every strategy degenerates to edge 0).
+    pub assign: Assign,
 }
 
 impl TraceSpec {
@@ -205,6 +329,7 @@ impl TraceSpec {
             concurrency: None,
             seed: 0,
             profile: None,
+            assign: Assign::RoundRobin,
         }
     }
 
@@ -229,6 +354,12 @@ impl TraceSpec {
     /// Override the resident-weight placement derived from the policy.
     pub fn profile(mut self, profile: ResidentProfile) -> Self {
         self.profile = Some(profile);
+        self
+    }
+
+    /// Pick the edge-assignment strategy for the fleet.
+    pub fn assign(mut self, assign: Assign) -> Self {
+        self.assign = assign;
         self
     }
 
@@ -388,11 +519,67 @@ mod tests {
     }
 
     #[test]
-    fn testbed_pins_profile_bases() {
-        let cfg = Config::default();
+    fn testbed_pins_profile_bases_on_every_edge() {
+        let mut cfg = Config::default();
         let profile = PolicyKind::Msao(Mode::Msao).resident_profile();
         let vc = testbed(&cfg, 1, &profile);
-        assert!((vc.edge_mem.peak_gb() - profile.edge_bytes / 1e9).abs() < 1e-9);
+        assert!((vc.edges[0].mem.peak_gb() - profile.edge_bytes / 1e9).abs() < 1e-9);
         assert!((vc.cloud_mem.peak_gb() - profile.cloud_bytes / 1e9).abs() < 1e-9);
+        cfg.replicate_edges(3).unwrap();
+        let vc = testbed(&cfg, 1, &profile);
+        for edge in &vc.edges {
+            assert!((edge.mem.peak_gb() - profile.edge_bytes / 1e9).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn assign_parse_and_static_pick() {
+        assert_eq!(Assign::parse("rr").unwrap(), Assign::RoundRobin);
+        assert_eq!(Assign::parse("round-robin").unwrap(), Assign::RoundRobin);
+        assert_eq!(Assign::parse("ll").unwrap(), Assign::LeastLoaded);
+        assert_eq!(Assign::parse("least-loaded").unwrap(), Assign::LeastLoaded);
+        assert_eq!(Assign::parse("pinned:2").unwrap(), Assign::Pinned(2));
+        assert!(Assign::parse("pinned:x").is_err());
+        assert!(Assign::parse("bogus").is_err());
+
+        assert_eq!(Assign::Pinned(1).static_pick(9, 4), Some(1));
+        assert_eq!(Assign::RoundRobin.static_pick(5, 3), Some(2));
+        assert_eq!(Assign::LeastLoaded.static_pick(0, 3), None);
+
+        Assign::Pinned(2).validate(3).unwrap();
+        assert!(Assign::Pinned(3).validate(3).is_err());
+        Assign::RoundRobin.validate(1).unwrap();
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_fast_edges() {
+        let mut cfg = Config::default();
+        cfg.replicate_edges(3).unwrap();
+        let mut vc = testbed(&cfg, 1, &PolicyKind::Msao(Mode::Msao).resident_profile());
+        // All idle, identical priors: ties break to edge 0.
+        assert_eq!(least_loaded(&vc), 0);
+        // Load edge 0's queue-wait EMA: the router moves off it.
+        vc.edges[0].monitor.observe_wait(Site::Edge(0), 2.0);
+        assert_eq!(least_loaded(&vc), 1);
+        // Degrade edge 1's bandwidth belief: edge 2 wins.
+        for _ in 0..20 {
+            vc.edges[1].monitor.observe_transfer(10.0, 200.0);
+        }
+        assert_eq!(least_loaded(&vc), 2);
+    }
+
+    #[test]
+    fn router_resolves_static_and_dynamic_assignments() {
+        let mut cfg = Config::default();
+        cfg.replicate_edges(2).unwrap();
+        let vc = testbed(&cfg, 1, &PolicyKind::CloudOnly.resident_profile());
+        let rr = FleetRouter::new(Assign::RoundRobin);
+        assert_eq!(rr.pick(0, &vc), 0);
+        assert_eq!(rr.pick(1, &vc), 1);
+        assert_eq!(rr.pick(2, &vc), 0);
+        let pin = FleetRouter::new(Assign::Pinned(1));
+        assert_eq!(pin.pick(7, &vc), 1);
+        let ll = FleetRouter::new(Assign::LeastLoaded);
+        assert_eq!(ll.pick(3, &vc), 0); // idle fleet: lowest id
     }
 }

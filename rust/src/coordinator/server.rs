@@ -1,5 +1,6 @@
 //! Unified trace server: [`serve`] is the one way to run a request
-//! trace, whatever the strategy.
+//! trace, whatever the strategy — now over an edge *fleet* sharing one
+//! cloud.
 //!
 //! # Event model
 //!
@@ -14,46 +15,80 @@
 //!
 //! The scheduler ([`super::scheduler::drive`]) admits sessions FCFS up
 //! to the spec's concurrency cap and always advances the session with
-//! the earliest next event, so edge/cloud occupancy and link
-//! serialization are charged in virtual-time order across requests and
-//! across *strategies* — a Cloud-only tenant queues behind an MSAO
-//! verify burst exactly as it would on real hardware. Verify uplinks
-//! from different MSAO sessions interleave on the link, which is what
-//! lets the dynamic [`Batcher`] coalesce them into shared exchange
-//! windows (the paper's collaborative scheduling).
+//! the earliest next event, so device occupancy and link serialization
+//! are charged in virtual-time order across requests and across
+//! *strategies* — a Cloud-only tenant queues behind an MSAO verify
+//! burst exactly as it would on real hardware.
 //!
-//! At `concurrency == 1` the loop degenerates to sequential
-//! run-to-completion FCFS and reproduces the pre-refactor per-strategy
-//! loops bit for bit (pinned by the golden equivalence tests).
+//! # Fleet routing
+//!
+//! Each session is bound to one edge site by the spec's
+//! [`Assign`] strategy: `Pinned`/`RoundRobin` are resolved by request
+//! index, while `LeastLoaded` is resolved by the [`FleetRouter`] at the
+//! session's arrival event from the fleet's monitor estimates
+//! (queue-wait + link beliefs — the fleet-aware router reads beliefs,
+//! not ground truth). A session's probe/draft/uplink/memory land on its
+//! edge; all verify/decode cloud work contends on the one shared cloud
+//! device. Each edge's uplink has its own verify [`Batcher`] window, so
+//! only rounds sharing a link can coalesce into one exchange.
+//!
+//! At `concurrency == 1` on a fleet of one, the loop degenerates to
+//! sequential run-to-completion FCFS and reproduces the pre-refactor
+//! two-site loops bit for bit (pinned by the golden equivalence tests).
 
 use anyhow::Result;
 
 use crate::baselines::{Baseline, BaselineSession};
-use crate::cluster::NetEstimate;
+use crate::cluster::{NetEstimate, Site};
 use crate::config::Config;
 use crate::metrics::ExecRecord;
 use crate::optimizer::ThetaController;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
-use super::policy::{self, PolicyKind, TraceSpec};
+use super::policy::{self, Assign, FleetRouter, PolicyKind, TraceSpec};
 use super::scheduler::{self, StepOutcome};
 use super::session::{Coordinator, Session};
 use super::timeline::VirtualCluster;
 
-pub struct TraceResult {
-    pub records: Vec<ExecRecord>,
+/// End-of-trace view of one edge site (fleet observability: the
+/// per-edge rows of the `fleet` experiment come from here).
+#[derive(Debug, Clone)]
+pub struct EdgeTraceStats {
+    pub edge_id: usize,
+    /// Requests assigned to this edge.
+    pub requests: usize,
     pub uplink_bytes: u64,
     pub downlink_bytes: u64,
-    pub batch_amortization: f64,
-    /// The system monitor's link-condition belief when the trace ended
-    /// (equals the config's nominal conditions on a static link).
+    /// This edge's monitor belief about its own link at trace end.
     pub net_estimate: NetEstimate,
-    /// The monitor's smoothed per-site queue waits (seconds) at trace
-    /// end — the load-observability half of the monitor. Scheduling
+    /// This edge's smoothed device queue wait at trace end.
+    pub edge_wait_s: f64,
+}
+
+pub struct TraceResult {
+    pub records: Vec<ExecRecord>,
+    /// Fleet-total link traffic (sums over every edge's link).
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    /// Fleet-aggregate verify-batch amortization (piggybacked fraction
+    /// over every edge's exchange windows).
+    pub batch_amortization: f64,
+    /// Edge 0's link-condition belief when the trace ended (the
+    /// single-edge view; per-edge beliefs are in `per_edge`). Equals
+    /// the config's nominal conditions on a static link.
+    pub net_estimate: NetEstimate,
+    /// Fleet-mean smoothed edge queue wait (seconds) at trace end —
+    /// the load-observability half of the monitors. Scheduling
     /// decisions use the coordinator's exact queue depths instead.
     pub edge_wait_s: f64,
+    /// Smoothed cloud queue wait at trace end, as advertised to the
+    /// edges (fleet mean; every edge hears the same advertisements).
+    /// This is the number that grows with fleet size at fixed per-edge
+    /// load — cloud-side contention is the defining fleet phenomenon.
     pub cloud_wait_s: f64,
+    /// Per-edge breakdown (id, request count, traffic, beliefs).
+    pub per_edge: Vec<EdgeTraceStats>,
 }
 
 /// One admitted request under whichever policy its spec assigns.
@@ -63,19 +98,32 @@ enum AnySession<'a> {
 }
 
 impl<'a> AnySession<'a> {
-    fn new(policy: &PolicyKind, item: &'a Item, arrival: f64) -> Self {
+    fn new(policy: &PolicyKind, item: &'a Item, arrival: f64, edge: usize) -> Self {
         match policy {
-            PolicyKind::Msao(mode) => AnySession::Msao(Session::new(item, arrival, *mode)),
-            PolicyKind::CloudOnly => {
-                AnySession::Baseline(BaselineSession::new(Baseline::CloudOnly, item, arrival))
-            }
-            PolicyKind::EdgeOnly => {
-                AnySession::Baseline(BaselineSession::new(Baseline::EdgeOnly, item, arrival))
-            }
+            PolicyKind::Msao(mode) => AnySession::Msao(Session::new(item, arrival, *mode, edge)),
+            PolicyKind::CloudOnly => AnySession::Baseline(BaselineSession::new(
+                Baseline::CloudOnly,
+                item,
+                arrival,
+                edge,
+            )),
+            PolicyKind::EdgeOnly => AnySession::Baseline(BaselineSession::new(
+                Baseline::EdgeOnly,
+                item,
+                arrival,
+                edge,
+            )),
             PolicyKind::PerLlm => {
-                AnySession::Baseline(BaselineSession::new(Baseline::PerLlm, item, arrival))
+                AnySession::Baseline(BaselineSession::new(Baseline::PerLlm, item, arrival, edge))
             }
             PolicyKind::PerRequest(_) => unreachable!("validate() rejects nested PerRequest"),
+        }
+    }
+
+    fn set_edge(&mut self, edge: usize) {
+        match self {
+            AnySession::Msao(s) => s.set_edge(edge),
+            AnySession::Baseline(b) => b.set_edge(edge),
         }
     }
 
@@ -90,11 +138,11 @@ impl<'a> AnySession<'a> {
         &mut self,
         coord: &mut Coordinator,
         vc: &mut VirtualCluster,
-        batcher: &mut Batcher,
+        batchers: &mut [Batcher],
         theta: &mut ThetaController,
     ) -> Result<StepOutcome> {
         match self {
-            AnySession::Msao(s) => s.step(coord, vc, batcher, theta),
+            AnySession::Msao(s) => s.step(coord, vc, batchers, theta),
             AnySession::Baseline(b) => b.step(coord, vc),
         }
     }
@@ -107,40 +155,84 @@ impl<'a> AnySession<'a> {
     }
 }
 
-/// Serve a trace per its [`TraceSpec`]: build the testbed from the
-/// policy's resident-weight profile, spawn one session per request, and
+/// Serve a trace per its [`TraceSpec`]: build the fleet testbed from the
+/// policy's resident-weight profile, spawn one session per request,
+/// route each onto an edge per the spec's assignment strategy, and
 /// drive them event-ordered under the spec's concurrency cap.
 pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
     spec.validate()?;
     let cfg: Config = coord.cfg.clone();
     let mut vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
-    let mut batcher = Batcher::new(
-        cfg.serve.batch_wait_ms,
-        cfg.serve.verify_batch,
-        spec.policy.collaborative(),
-    );
+    let n_edges = vc.n_edges();
+    spec.assign.validate(n_edges)?;
+    let mut batchers: Vec<Batcher> = (0..n_edges)
+        .map(|_| {
+            Batcher::new(
+                cfg.serve.batch_wait_ms,
+                cfg.serve.verify_batch,
+                spec.policy.collaborative(),
+            )
+        })
+        .collect();
     let mut theta = coord.theta();
     let concurrency = spec.effective_concurrency(&cfg);
+    let router = FleetRouter::new(spec.assign);
 
+    // Static assignments resolve by request index now; `LeastLoaded`
+    // sessions start on a placeholder edge and are routed at their
+    // arrival event below, when the monitors reflect the traffic that
+    // actually preceded them.
     let mut sessions: Vec<AnySession> = spec
         .items
         .iter()
         .zip(&spec.arrivals)
         .enumerate()
-        .map(|(i, (item, &arr))| AnySession::new(spec.policy.for_request(i), item, arr))
+        .map(|(i, (item, &arr))| {
+            let edge = spec.assign.static_pick(i, n_edges).unwrap_or(0);
+            AnySession::new(spec.policy.for_request(i), item, arr, edge)
+        })
         .collect();
-    scheduler::drive(&mut sessions, concurrency, AnySession::next_time, |_, s| {
-        s.step(coord, &mut vc, &mut batcher, &mut theta)
+    let mut routed: Vec<bool> =
+        vec![!matches!(spec.assign, Assign::LeastLoaded); sessions.len()];
+    scheduler::drive(&mut sessions, concurrency, AnySession::next_time, |i, s| {
+        if !routed[i] {
+            s.set_edge(router.pick(i, &vc));
+            routed[i] = true;
+        }
+        s.step(coord, &mut vc, &mut batchers, &mut theta)
     })?;
     let records: Vec<ExecRecord> = sessions.into_iter().map(AnySession::into_record).collect();
 
+    let (piggy, windows) = batchers
+        .iter()
+        .fold((0u64, 0u64), |(p, w), b| (p + b.piggybacked, w + b.windows_opened));
+    let amortization = Batcher::ratio(piggy, windows);
+    let per_edge: Vec<EdgeTraceStats> = vc
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(id, e)| EdgeTraceStats {
+            edge_id: id,
+            requests: records.iter().filter(|r| r.edge_id == id).count(),
+            uplink_bytes: e.link.uplink_bytes,
+            downlink_bytes: e.link.downlink_bytes,
+            net_estimate: e.monitor.estimate(),
+            edge_wait_s: e.monitor.wait_s(Site::Edge(id)),
+        })
+        .collect();
+    let edge_wait_s =
+        vc.edges.iter().map(|e| e.monitor.wait_s(Site::Edge(0))).sum::<f64>() / n_edges as f64;
+    let cloud_wait_s =
+        vc.edges.iter().map(|e| e.monitor.wait_s(Site::Cloud)).sum::<f64>() / n_edges as f64;
+
     Ok(TraceResult {
+        uplink_bytes: vc.uplink_bytes(),
+        downlink_bytes: vc.downlink_bytes(),
+        batch_amortization: amortization,
+        net_estimate: vc.edges[0].monitor.estimate(),
+        edge_wait_s,
+        cloud_wait_s,
+        per_edge,
         records,
-        uplink_bytes: vc.link.uplink_bytes,
-        downlink_bytes: vc.link.downlink_bytes,
-        batch_amortization: batcher.amortization(),
-        net_estimate: vc.monitor.estimate(),
-        edge_wait_s: vc.monitor.wait_s(false),
-        cloud_wait_s: vc.monitor.wait_s(true),
     })
 }

@@ -28,7 +28,7 @@ use super::mas::{run_probe, ProbeOutcome};
 use super::planner::{self, Plan, PlanCtx};
 use super::scheduler::StepOutcome;
 use super::speculative::{SpecParams, SpecSession};
-use super::timeline::{Site, VirtualCluster};
+use super::timeline::{EdgeId, Site, VirtualCluster};
 
 /// Serving mode: full MSAO or one of the Fig. 9 ablations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -139,24 +139,43 @@ enum Phase {
 
 /// One request moving through the serving pipeline as a sequence of
 /// virtual-time events. `next_time()` is the scheduler's sort key;
-/// `step()` advances exactly one phase / round.
+/// `step()` advances exactly one phase / round. The session is bound to
+/// one edge site of the fleet: its probe, drafting, uplink, and memory
+/// are charged there, and its planner/replanner read that edge's
+/// monitor.
 pub struct Session<'a> {
     item: &'a Item,
     arrival: f64,
     mode: Mode,
+    edge: EdgeId,
     rec: ExecRecord,
     phase: Phase,
 }
 
 impl<'a> Session<'a> {
-    pub fn new(item: &'a Item, arrival: f64, mode: Mode) -> Self {
+    pub fn new(item: &'a Item, arrival: f64, mode: Mode, edge: EdgeId) -> Self {
         Session {
             item,
             arrival,
             mode,
-            rec: ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() },
+            edge,
+            rec: ExecRecord {
+                request_id: item.id,
+                t_arrival: arrival,
+                edge_id: edge,
+                ..Default::default()
+            },
             phase: Phase::Probe,
         }
+    }
+
+    /// Re-bind the session to another edge. Only valid before the first
+    /// step (the fleet router resolves `LeastLoaded` at the arrival
+    /// event); afterwards charges would straddle two sites.
+    pub fn set_edge(&mut self, edge: EdgeId) {
+        debug_assert!(matches!(self.phase, Phase::Probe), "edge re-bound mid-session");
+        self.edge = edge;
+        self.rec.edge_id = edge;
     }
 
     /// Virtual time of this session's next event.
@@ -181,12 +200,14 @@ impl<'a> Session<'a> {
     }
 
     /// Advance one phase (or one draft/verify round), charging the
-    /// shared virtual cluster. Returns `Done` after the final downlink.
+    /// shared virtual cluster. `batchers` holds one verify batcher per
+    /// edge uplink; the session only touches its own edge's window.
+    /// Returns `Done` after the final downlink.
     pub fn step(
         &mut self,
         coord: &mut Coordinator,
         vc: &mut VirtualCluster,
-        batcher: &mut Batcher,
+        batchers: &mut [Batcher],
         theta: &mut ThetaController,
     ) -> Result<StepOutcome> {
         let phase = std::mem::replace(&mut self.phase, Phase::Done);
@@ -195,7 +216,9 @@ impl<'a> Session<'a> {
             Phase::Prefill { probe, probe_end } => {
                 self.step_prefill(coord, vc, probe, probe_end)?
             }
-            Phase::Decode(d) => self.step_decode(coord, vc, batcher, theta, d)?,
+            Phase::Decode(d) => {
+                self.step_decode(coord, vc, &mut batchers[self.edge], theta, d)?
+            }
             Phase::CloudDecode(s) => self.step_cloud_decode(coord, vc, s)?,
             Phase::Finish(f) => self.step_finish(coord, vc, *f)?,
             Phase::Done => Phase::Done,
@@ -215,8 +238,9 @@ impl<'a> Session<'a> {
             // model) but no probe heads; no probe latency charged.
             self.arrival
         } else {
-            let (_, end) = vc.exec(Site::Edge, self.arrival, probe.probe_s, probe.probe_flops);
-            vc.edge_mem.alloc(probe.probe_mem_gb * 1e9);
+            let (_, end) =
+                vc.exec(Site::Edge(self.edge), self.arrival, probe.probe_s, probe.probe_flops);
+            vc.edges[self.edge].mem.alloc(probe.probe_mem_gb * 1e9);
             self.rec.probe_s = probe.probe_s;
             end
         };
@@ -237,9 +261,10 @@ impl<'a> Session<'a> {
         let cfg = coord.cfg.clone();
 
         // ---------------- coarse plan ------------------------------------
-        // The planner sees the monitor's link-condition belief, not the
-        // ground-truth config — plans adapt as estimates converge.
-        let net = vc.monitor.estimate();
+        // The planner sees the *assigned edge's* monitor belief about
+        // its own link, not the ground-truth config — plans adapt as
+        // that edge's estimates converge.
+        let net = vc.edges[self.edge].monitor.estimate();
         let n_out = cfg.msao.max_new_tokens;
         let plan = match mode {
             Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, coord.p_conf0),
@@ -280,12 +305,12 @@ impl<'a> Session<'a> {
         // everything to the static path.
         if mode == Mode::Msao {
             let est = {
-                let d_edge = vc.dev(Site::Edge);
+                let d_edge = vc.dev(Site::Edge(self.edge));
                 let d_cloud = vc.dev(Site::Cloud);
                 let draft = SimModel::qwen2vl_2b();
                 let full = SimModel::qwen25vl_7b();
                 let vitm = SimModel::vision_encoder();
-                let edge_q = (vc.busy_until(Site::Edge) - probe_end).max(0.0);
+                let edge_q = (vc.busy_until(Site::Edge(self.edge)) - probe_end).max(0.0);
                 let cloud_q = (vc.busy_until(Site::Cloud) - probe_end).max(0.0);
                 let t_edge = edge_q
                     + d_edge.encode_s(&vitm, 256.0)
@@ -340,23 +365,24 @@ impl<'a> Session<'a> {
             EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
         };
         let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-        let enc_secs = vc.dev(Site::Edge).encode_s(&vit, enc_patches) * enc_frames * late_scale;
+        let enc_secs =
+            vc.dev(Site::Edge(self.edge)).encode_s(&vit, enc_patches) * enc_frames * late_scale;
         let (_, enc_end) = vc.exec(
-            Site::Edge,
+            Site::Edge(self.edge),
             probe_end,
             enc_secs,
             vit.flops_prefill(enc_patches) * enc_frames * late_scale,
         );
-        let edge_pre_secs = vc.dev(Site::Edge).prefill_s(&draft_m, seq_paper);
+        let edge_pre_secs = vc.dev(Site::Edge(self.edge)).prefill_s(&draft_m, seq_paper);
         let (_, edge_pre_end) = vc.exec(
-            Site::Edge,
+            Site::Edge(self.edge),
             enc_end,
             edge_pre_secs,
             draft_m.flops_prefill(seq_paper),
         );
 
         // Cloud: pruned payload uplink, re-encode, full prefill.
-        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        let (_, up_arr) = vc.send_up(self.edge, probe_end, plan.bytes_up, false);
         self.rec.bytes_up += plan.bytes_up;
         let kept_frames = plan.frames_keep.len().max(1) as f64;
         // Cloud re-encodes only the shipped (pruned) content.
@@ -390,7 +416,7 @@ impl<'a> Session<'a> {
         let cloud_kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
         let edge_mem_bytes = edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper);
         let cloud_mem_bytes = cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
-        vc.edge_mem.alloc(edge_mem_bytes);
+        vc.edges[self.edge].mem.alloc(edge_mem_bytes);
         vc.cloud_mem.alloc(cloud_mem_bytes);
 
         let prefill_done = edge_pre_end.max(cloud_pre_end);
@@ -400,6 +426,7 @@ impl<'a> Session<'a> {
         let spec = SpecSession::new(
             &coord.eng,
             SpecParams {
+                edge: self.edge,
                 edge_kv: edge_pre.kv,
                 cloud_kv: cloud_pre.kv,
                 lens,
@@ -459,7 +486,7 @@ impl<'a> Session<'a> {
         let full_m = SimModel::qwen25vl_7b();
         let vit = SimModel::vision_encoder();
 
-        let (_, up_arr) = vc.send_up(probe_end, plan.bytes_up, false);
+        let (_, up_arr) = vc.send_up(self.edge, probe_end, plan.bytes_up, false);
         self.rec.bytes_up += plan.bytes_up;
         let kept_frames = plan.frames_keep.len().max(1) as f64;
         let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
@@ -575,7 +602,7 @@ impl<'a> Session<'a> {
         let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
         let bytes = 4 * f.tokens_out as u64 + 64;
         // Downlink the generated text to the user.
-        let (_, done) = vc.send_down(f.t_done, bytes, false);
+        let (_, done) = vc.send_down(self.edge, f.t_done, bytes, false);
         self.rec.bytes_down += bytes;
 
         if let Some(kv) = f.common.edge_kv {
@@ -585,13 +612,13 @@ impl<'a> Session<'a> {
             coord.eng.free_kv(true, kv);
         }
         if f.common.edge_mem_bytes > 0.0 {
-            vc.edge_mem.free(f.common.edge_mem_bytes);
+            vc.edges[self.edge].mem.free(f.common.edge_mem_bytes);
         }
         if f.common.cloud_mem_bytes > 0.0 {
             vc.cloud_mem.free(f.common.cloud_mem_bytes);
         }
         if f.common.probe_mem_bytes > 0.0 {
-            vc.edge_mem.free(f.common.probe_mem_bytes);
+            vc.edges[self.edge].mem.free(f.common.probe_mem_bytes);
         }
 
         self.rec.t_done = done;
@@ -603,7 +630,7 @@ impl<'a> Session<'a> {
         self.rec.replans = f.replans;
         self.rec.vis_tokens_kept = f.common.vlen;
         self.rec.frames_kept = f.common.plan.frames_keep.len();
-        self.rec.mem_edge_gb = vc.edge_mem.peak_gb();
+        self.rec.mem_edge_gb = vc.edges[self.edge].mem.peak_gb();
         self.rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
         // MSAO's cloud model is a shared multi-tenant verifier touched in
         // short bursts; the stream's dedicated memory is the edge peak
@@ -612,8 +639,9 @@ impl<'a> Session<'a> {
         // setting) they equal this stream's footprint, while under
         // concurrent interleave they measure cluster occupancy — all
         // in-flight sessions' KV is genuinely resident at once.
-        self.rec.mem_serving_gb = vc.edge_mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
-        self.rec.flops_edge = vc.flops_edge;
+        self.rec.mem_serving_gb =
+            vc.edges[self.edge].mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
+        self.rec.flops_edge = vc.edges[self.edge].flops;
         self.rec.flops_cloud = vc.flops_cloud;
 
         // ---------------- quality -----------------------------------------
@@ -698,10 +726,11 @@ impl Coordinator {
         ThetaController::from_calibration(&self.cfg.msao, &self.calibration)
     }
 
-    /// Serve one item under `mode`, charging the shared virtual cluster.
-    /// Runs the session state machine to completion — the seed's
-    /// run-to-completion FCFS path, and the reference the event-driven
-    /// scheduler must reproduce bit for bit at concurrency 1.
+    /// Serve one item under `mode` on edge 0, charging the shared
+    /// virtual cluster. Runs the session state machine to completion —
+    /// the seed's run-to-completion FCFS path on the original two-site
+    /// pair, and the reference the event-driven scheduler must
+    /// reproduce bit for bit at concurrency 1 on a fleet of one.
     pub fn serve(
         &mut self,
         vc: &mut VirtualCluster,
@@ -711,8 +740,8 @@ impl Coordinator {
         arrival: f64,
         mode: Mode,
     ) -> Result<ExecRecord> {
-        let mut s = Session::new(item, arrival, mode);
-        while s.step(self, vc, batcher, theta)? == StepOutcome::Pending {}
+        let mut s = Session::new(item, arrival, mode, 0);
+        while s.step(self, vc, std::slice::from_mut(batcher), theta)? == StepOutcome::Pending {}
         Ok(s.into_record())
     }
 }

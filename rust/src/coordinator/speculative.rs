@@ -31,10 +31,13 @@ use crate::runtime::engine::KvHandle;
 
 use super::batcher::Batcher;
 use super::engines::{argmax, entropy, Engines};
-use super::timeline::{Site, VirtualCluster};
+use super::timeline::{EdgeId, Site, VirtualCluster};
 
 #[derive(Debug, Clone, Copy)]
 pub struct SpecParams {
+    /// Edge site drafting for this session (its device, uplink, and
+    /// monitor are the ones charged/consulted every round).
+    pub edge: EdgeId,
     pub edge_kv: KvHandle,
     pub cloud_kv: KvHandle,
     /// (vlen, alen, tlen) segment lengths for masking.
@@ -244,7 +247,7 @@ impl SpecSession {
         // estimate (no-op bit for bit while the estimate sits on the
         // plan's belief — the constant-conditions case).
         if p.adaptive {
-            let est = vc.monitor.estimate();
+            let est = vc.edges[p.edge].monitor.estimate();
             let n_new = replan_draft(self.n_draft_plan, &p.planned_net, &est, p.n_max, n_spec);
             if n_new != self.n_draft {
                 self.n_draft = n_new;
@@ -270,8 +273,8 @@ impl SpecSession {
             }
             let logits = eng.block(false, false, p.edge_kv, pos, &[input], p.lens)?;
             let ctx = p.seq_paper + (n + j) as f64;
-            let secs = vc.dev(Site::Edge).decode_s(&draft_m, ctx);
-            let (_, end) = vc.exec(Site::Edge, t_cursor, secs, draft_m.flops_decode(ctx));
+            let secs = vc.dev(Site::Edge(p.edge)).decode_s(&draft_m, ctx);
+            let (_, end) = vc.exec(Site::Edge(p.edge), t_cursor, secs, draft_m.flops_decode(ctx));
             t_cursor = end;
             let h = entropy(&logits);
             theta.record_entropy(h);
@@ -302,7 +305,7 @@ impl SpecSession {
         // compute, verdict downlink.
         let up_bytes = VERIFY_UP_BYTES + if low_conf { OFFLOAD_STATE_BYTES } else { 0 };
         let piggyback = p.adaptive && batcher.admit(draft_end);
-        let (_, up_arr) = vc.send_up(draft_end, up_bytes, piggyback);
+        let (_, up_arr) = vc.send_up(p.edge, draft_end, up_bytes, piggyback);
         let ctx = p.seq_paper + n as f64;
         // Batched verifies share the cloud's weight streaming: a
         // piggybacked round pays only its incremental compute + KV reads,
@@ -321,7 +324,7 @@ impl SpecSession {
             v_secs,
             full_m.flops_verify((m + 1) as f64, ctx),
         );
-        let (_, v_arr) = vc.send_down(v_end, VERDICT_DOWN_BYTES, false);
+        let (_, v_arr) = vc.send_down(p.edge, v_end, VERDICT_DOWN_BYTES, false);
 
         // --- acceptance (greedy longest prefix) -------------------------
         let mut j = 0usize;

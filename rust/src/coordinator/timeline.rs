@@ -1,144 +1,229 @@
-//! Virtual testbed timeline: serialized occupancy of the edge device,
-//! the cloud device, and the two link directions, plus FLOPs and memory
-//! ledgers — the discrete-event substrate every serving mode runs on.
+//! Virtual testbed timeline: serialized occupancy of every edge site in
+//! the fleet, the shared cloud device, and each edge's two link
+//! directions, plus FLOPs and memory ledgers — the discrete-event
+//! substrate every serving mode runs on.
 //!
 //! Real token streams come from the PJRT engines; *time* comes from the
 //! cost model applied to the same events at paper scale (DESIGN.md §3).
 //! Devices are serially occupied resources: an op scheduled at `earliest`
-//! starts at max(earliest, busy_until). The uplink and downlink are
-//! independent serialization resources with propagation delay appended.
+//! starts at max(earliest, busy_until). Each edge's uplink and downlink
+//! are independent serialization resources with propagation delay
+//! appended; different edges' links never contend with each other, but
+//! every edge's cloud-side work shares the one cloud device — the
+//! contention that defines fleet scaling.
 //!
-//! Link conditions are time-varying: every transfer samples the
-//! bandwidth/RTT in effect at its virtual start time
-//! ([`Link::conditions_at`], driven by the config's `NetworkDynamics`),
-//! and reports what it experienced to the [`SystemMonitor`] — the EMA
-//! estimator the planner and the speculative replanning consume in
-//! place of ground truth. Device execs report their queue waits to the
-//! monitor too.
+//! Link conditions are time-varying per edge: every transfer samples
+//! the bandwidth/RTT in effect on *its* link at its virtual start time
+//! ([`Link::conditions_at`], driven by that edge's `NetworkDynamics`
+//! with a per-edge seed), and reports what it experienced to that
+//! edge's [`SystemMonitor`] — the EMA estimator the planner, the fleet
+//! router, and the speculative replanning consume in place of ground
+//! truth. Device execs report their queue waits to the monitors too:
+//! edge waits to the owning edge's monitor, cloud waits to every edge's
+//! monitor (the cloud advertises its queue state on responses).
+//!
+//! A fleet of one is the original two-site pair: edge 0 takes the
+//! cluster seed unchanged and every charge runs through the same
+//! arithmetic, so single-edge results reproduce bit for bit.
 
 use crate::cluster::network::serialize_s_with;
-use crate::cluster::{DeviceSim, Link, MemTracker, SystemMonitor};
+use crate::cluster::{DeviceSim, Dir, Link, MemTracker, SystemMonitor};
 use crate::config::Config;
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Site {
-    Edge,
-    Cloud,
+pub use crate::cluster::{EdgeId, Site};
+
+/// Per-edge seed for link dynamics (jitter RNG + Markov sample path):
+/// distinct per edge so fleet links fade independently, and equal to
+/// the cluster seed for edge 0 so a fleet of one reproduces the
+/// single-edge substrate bit for bit.
+pub fn edge_seed(seed: u64, id: EdgeId) -> u64 {
+    seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
+/// One edge site of the fleet: an owned device plus its own link to the
+/// cloud, monitor, memory ledger, and occupancy cursors.
 #[derive(Debug)]
-pub struct VirtualCluster {
-    pub edge: DeviceSim,
-    pub cloud: DeviceSim,
+pub struct EdgeSite {
+    pub dev: DeviceSim,
     pub link: Link,
-    /// The coordinator's estimator of real-time system state (EMA
-    /// bandwidth/RTT/load) — fed by transfers and exec waits below.
+    /// This edge coordinator's estimator of real-time system state
+    /// (EMA bandwidth/RTT/load) — fed by its transfers and exec waits.
     pub monitor: SystemMonitor,
-    pub edge_mem: MemTracker,
-    pub cloud_mem: MemTracker,
-    pub flops_edge: f64,
-    pub flops_cloud: f64,
-    edge_busy: f64,
-    cloud_busy: f64,
+    pub mem: MemTracker,
+    pub flops: f64,
+    busy: f64,
     up_busy: f64,
     down_busy: f64,
 }
 
+#[derive(Debug)]
+pub struct VirtualCluster {
+    /// The edge fleet. A default (fleet-less) config yields exactly one
+    /// site built from the top-level `edge`/`network` fields.
+    pub edges: Vec<EdgeSite>,
+    pub cloud: DeviceSim,
+    pub cloud_mem: MemTracker,
+    pub flops_cloud: f64,
+    cloud_busy: f64,
+}
+
 impl VirtualCluster {
     pub fn new(cfg: &Config, seed: u64) -> Self {
+        let edges = cfg
+            .edge_sites()
+            .iter()
+            .enumerate()
+            .map(|(id, site)| EdgeSite {
+                dev: DeviceSim::new(site.device),
+                link: Link::with_dynamics(site.network, &site.dynamics, edge_seed(seed, id)),
+                monitor: SystemMonitor::new(&site.network, cfg.serve.monitor_ema),
+                mem: MemTracker::new(),
+                flops: 0.0,
+                busy: 0.0,
+                up_busy: 0.0,
+                down_busy: 0.0,
+            })
+            .collect();
         VirtualCluster {
-            edge: DeviceSim::new(cfg.edge),
+            edges,
             cloud: DeviceSim::new(cfg.cloud),
-            link: Link::with_dynamics(cfg.network, &cfg.dynamics, seed),
-            monitor: SystemMonitor::new(&cfg.network, cfg.serve.monitor_ema),
-            edge_mem: MemTracker::new(),
             cloud_mem: MemTracker::new(),
-            flops_edge: 0.0,
             flops_cloud: 0.0,
-            edge_busy: 0.0,
             cloud_busy: 0.0,
-            up_busy: 0.0,
-            down_busy: 0.0,
         }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
     }
 
     pub fn busy_until(&self, site: Site) -> f64 {
         match site {
-            Site::Edge => self.edge_busy,
+            Site::Edge(e) => self.edges[e].busy,
             Site::Cloud => self.cloud_busy,
         }
     }
 
     /// Run `secs` of compute consuming `flops` on `site`, no earlier than
-    /// `earliest`. Returns (start, end).
+    /// `earliest`. Returns (start, end). Edge waits feed the owning
+    /// edge's monitor; cloud waits are advertised to every edge's
+    /// monitor (the shared verifier piggybacks its queue state).
     pub fn exec(&mut self, site: Site, earliest: f64, secs: f64, flops: f64) -> (f64, f64) {
-        let busy = match site {
-            Site::Edge => &mut self.edge_busy,
-            Site::Cloud => &mut self.cloud_busy,
+        match site {
+            Site::Edge(e) => {
+                let edge = &mut self.edges[e];
+                let start = edge.busy.max(earliest);
+                let end = start + secs;
+                edge.busy = end;
+                edge.flops += flops;
+                // Queue-depth observation: how long the op waited.
+                edge.monitor.observe_wait(site, start - earliest);
+                (start, end)
+            }
+            Site::Cloud => {
+                let start = self.cloud_busy.max(earliest);
+                let end = start + secs;
+                self.cloud_busy = end;
+                self.flops_cloud += flops;
+                for edge in &mut self.edges {
+                    edge.monitor.observe_wait(Site::Cloud, start - earliest);
+                }
+                (start, end)
+            }
+        }
+    }
+
+    /// Transfer `bytes` over `edge`'s link in direction `dir`, starting
+    /// no earlier than `earliest`. Returns (serialization end, arrival
+    /// at the far side). `skip_propagation` models a batched/piggybacked
+    /// message that rides an already-open exchange window (dynamic
+    /// batcher). Conditions are sampled at the serialization start
+    /// time; the transfer reports the bandwidth/RTT it experienced to
+    /// the edge's monitor.
+    fn transfer(
+        &mut self,
+        edge: EdgeId,
+        dir: Dir,
+        earliest: f64,
+        bytes: u64,
+        skip_propagation: bool,
+    ) -> (f64, f64) {
+        let site = &mut self.edges[edge];
+        let busy = match dir {
+            Dir::Up => site.up_busy,
+            Dir::Down => site.down_busy,
         };
         let start = busy.max(earliest);
-        let end = start + secs;
-        *busy = end;
-        match site {
-            Site::Edge => self.flops_edge += flops,
-            Site::Cloud => self.flops_cloud += flops,
+        let (bw, rtt) = site.link.conditions_at(start);
+        let ser = serialize_s_with(bw, bytes);
+        let end = start + ser;
+        match dir {
+            Dir::Up => {
+                site.up_busy = end;
+                site.link.uplink_bytes += bytes;
+            }
+            Dir::Down => {
+                site.down_busy = end;
+                site.link.downlink_bytes += bytes;
+            }
         }
-        // Queue-depth observation: how long the op waited for the device.
-        self.monitor.observe_wait(site == Site::Cloud, start - earliest);
-        (start, end)
-    }
-
-    /// Transfer `bytes` edge->cloud starting no earlier than `earliest`.
-    /// Returns (serialization end, arrival time at the cloud).
-    /// `skip_propagation` models a batched/piggybacked message that rides
-    /// an already-open exchange window (dynamic batcher). Conditions are
-    /// sampled at the serialization start time; the transfer reports the
-    /// bandwidth/RTT it experienced to the monitor.
-    pub fn send_up(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
-        let start = self.up_busy.max(earliest);
-        let (bw, rtt) = self.link.conditions_at(start);
-        let ser = serialize_s_with(bw, bytes);
-        let end = start + ser;
-        self.up_busy = end;
-        self.link.uplink_bytes += bytes;
-        self.link.transfers += 1;
+        site.link.transfers += 1;
         let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
-        self.monitor.observe_transfer(bw, rtt);
+        site.monitor.observe_transfer(bw, rtt);
         (end, end + prop)
     }
 
-    /// Transfer `bytes` cloud->edge. Returns (serialization end, arrival).
-    pub fn send_down(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
-        let start = self.down_busy.max(earliest);
-        let (bw, rtt) = self.link.conditions_at(start);
-        let ser = serialize_s_with(bw, bytes);
-        let end = start + ser;
-        self.down_busy = end;
-        self.link.downlink_bytes += bytes;
-        self.link.transfers += 1;
-        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
-        self.monitor.observe_transfer(bw, rtt);
-        (end, end + prop)
+    /// Transfer `bytes` edge->cloud on `edge`'s uplink.
+    pub fn send_up(
+        &mut self,
+        edge: EdgeId,
+        earliest: f64,
+        bytes: u64,
+        skip_propagation: bool,
+    ) -> (f64, f64) {
+        self.transfer(edge, Dir::Up, earliest, bytes, skip_propagation)
+    }
+
+    /// Transfer `bytes` cloud->edge on `edge`'s downlink.
+    pub fn send_down(
+        &mut self,
+        edge: EdgeId,
+        earliest: f64,
+        bytes: u64,
+        skip_propagation: bool,
+    ) -> (f64, f64) {
+        self.transfer(edge, Dir::Down, earliest, bytes, skip_propagation)
     }
 
     pub fn mem(&mut self, site: Site) -> &mut MemTracker {
         match site {
-            Site::Edge => &mut self.edge_mem,
+            Site::Edge(e) => &mut self.edges[e].mem,
             Site::Cloud => &mut self.cloud_mem,
         }
     }
 
     pub fn dev(&self, site: Site) -> &DeviceSim {
         match site {
-            Site::Edge => &self.edge,
+            Site::Edge(e) => &self.edges[e].dev,
             Site::Cloud => &self.cloud,
         }
+    }
+
+    /// Fleet-total uplink bytes across every edge's link.
+    pub fn uplink_bytes(&self) -> u64 {
+        self.edges.iter().map(|e| e.link.uplink_bytes).sum()
+    }
+
+    /// Fleet-total downlink bytes across every edge's link.
+    pub fn downlink_bytes(&self) -> u64 {
+        self.edges.iter().map(|e| e.link.downlink_bytes).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::EdgeSiteCfg;
 
     fn vc() -> VirtualCluster {
         let mut cfg = Config::default();
@@ -146,17 +231,31 @@ mod tests {
         VirtualCluster::new(&cfg, 1)
     }
 
+    fn fleet(k: usize) -> VirtualCluster {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.fleet = vec![
+            EdgeSiteCfg {
+                device: cfg.edge,
+                network: cfg.network,
+                dynamics: cfg.dynamics.clone(),
+            };
+            k
+        ];
+        VirtualCluster::new(&cfg, 1)
+    }
+
     #[test]
     fn devices_serialize_work() {
         let mut c = vc();
-        let (s1, e1) = c.exec(Site::Edge, 0.0, 1.0, 1e9);
-        let (s2, e2) = c.exec(Site::Edge, 0.0, 0.5, 1e9);
+        let (s1, e1) = c.exec(Site::Edge(0), 0.0, 1.0, 1e9);
+        let (s2, e2) = c.exec(Site::Edge(0), 0.0, 0.5, 1e9);
         assert_eq!((s1, e1), (0.0, 1.0));
         assert_eq!((s2, e2), (1.0, 1.5)); // queued behind op 1
         // Cloud is independent.
         let (s3, _) = c.exec(Site::Cloud, 0.2, 0.1, 1e9);
         assert_eq!(s3, 0.2);
-        assert_eq!(c.flops_edge, 2e9);
+        assert_eq!(c.edges[0].flops, 2e9);
         assert_eq!(c.flops_cloud, 1e9);
     }
 
@@ -171,19 +270,19 @@ mod tests {
     fn link_directions_independent_and_serialized() {
         let mut c = vc();
         // 300 Mbps: 1 MB = 8e6/3e8 s ~= 26.7ms serialize; one-way 10 ms.
-        let (end1, arr1) = c.send_up(0.0, 1_000_000, false);
+        let (end1, arr1) = c.send_up(0, 0.0, 1_000_000, false);
         assert!((end1 - 0.026_666).abs() < 1e-4, "{end1}");
         assert!((arr1 - end1 - 0.010).abs() < 1e-9);
-        let (end2, _) = c.send_up(0.0, 1_000_000, false);
+        let (end2, _) = c.send_up(0, 0.0, 1_000_000, false);
         assert!(end2 > end1 * 1.9); // serialized behind first
-        let (end3, _) = c.send_down(0.0, 1_000_000, false);
+        let (end3, _) = c.send_down(0, 0.0, 1_000_000, false);
         assert!((end3 - end1).abs() < 1e-9); // downlink independent
     }
 
     #[test]
     fn piggyback_skips_propagation() {
         let mut c = vc();
-        let (end, arr) = c.send_up(0.0, 1000, true);
+        let (end, arr) = c.send_up(0, 0.0, 1000, true);
         assert_eq!(end, arr);
     }
 
@@ -204,16 +303,16 @@ mod tests {
         let mut traced = VirtualCluster::new(&cfg, 1);
         for (i, &bytes) in [1_000_000u64, 0, 555, 64 * 1024].iter().enumerate() {
             let t = i as f64 * 0.3;
-            let (e1, a1) = base.send_up(t, bytes, false);
-            let (e2, a2) = traced.send_up(t, bytes, false);
+            let (e1, a1) = base.send_up(0, t, bytes, false);
+            let (e2, a2) = traced.send_up(0, t, bytes, false);
             assert_eq!(e1.to_bits(), e2.to_bits(), "transfer {i}: end");
             assert_eq!(a1.to_bits(), a2.to_bits(), "transfer {i}: arrival");
-            let (d1, _) = base.send_down(t, bytes, false);
-            let (d2, _) = traced.send_down(t, bytes, false);
+            let (d1, _) = base.send_down(0, t, bytes, false);
+            let (d2, _) = traced.send_down(0, t, bytes, false);
             assert_eq!(d1.to_bits(), d2.to_bits(), "transfer {i}: down");
         }
         // Estimates stayed pinned at the prior on both substrates.
-        let (eb, et) = (base.monitor.estimate(), traced.monitor.estimate());
+        let (eb, et) = (base.edges[0].monitor.estimate(), traced.edges[0].monitor.estimate());
         assert_eq!(eb.bandwidth_mbps.to_bits(), et.bandwidth_mbps.to_bits());
         assert_eq!(eb.bandwidth_mbps.to_bits(), cfg.network.bandwidth_mbps.to_bits());
     }
@@ -229,26 +328,122 @@ mod tests {
             rtt_ms: 40.0,
         }]);
         let mut c = VirtualCluster::new(&cfg, 1);
-        let (end_pre, arr_pre) = c.send_up(0.0, 1_000_000, false);
+        let (end_pre, arr_pre) = c.send_up(0, 0.0, 1_000_000, false);
         // 300 Mbps: ~26.7 ms serialize + 10 ms one-way.
         assert!((end_pre - 0.026_666).abs() < 1e-4, "{end_pre}");
         assert!((arr_pre - end_pre - 0.010).abs() < 1e-9);
-        let (end_post, arr_post) = c.send_up(3.0, 1_000_000, false);
+        let (end_post, arr_post) = c.send_up(0, 3.0, 1_000_000, false);
         // 60 Mbps: ~133 ms serialize + 20 ms one-way.
         assert!((end_post - 3.0 - 0.1333).abs() < 1e-3, "{end_post}");
         assert!((arr_post - end_post - 0.020).abs() < 1e-9);
         // The monitor saw both segments and is converging to the second.
-        let e = c.monitor.estimate();
+        let e = c.edges[0].monitor.estimate();
         assert!(e.bandwidth_mbps < 300.0 && e.bandwidth_mbps > 60.0, "{e:?}");
-        assert_eq!(c.monitor.transfers_observed, 2);
+        assert_eq!(c.edges[0].monitor.transfers_observed, 2);
     }
 
     #[test]
     fn exec_waits_feed_the_load_estimate() {
         let mut c = vc();
-        c.exec(Site::Edge, 0.0, 1.0, 0.0); // busy until 1.0
-        c.exec(Site::Edge, 0.2, 0.1, 0.0); // waits 0.8 s
-        assert!(c.monitor.wait_s(false) > 0.0);
-        assert_eq!(c.monitor.wait_s(true), 0.0);
+        c.exec(Site::Edge(0), 0.0, 1.0, 0.0); // busy until 1.0
+        c.exec(Site::Edge(0), 0.2, 0.1, 0.0); // waits 0.8 s
+        assert!(c.edges[0].monitor.wait_s(Site::Edge(0)) > 0.0);
+        assert_eq!(c.edges[0].monitor.wait_s(Site::Cloud), 0.0);
+    }
+
+    // ---------------- fleet-specific substrate invariants ---------------
+
+    #[test]
+    fn default_config_is_a_fleet_of_one() {
+        let c = vc();
+        assert_eq!(c.n_edges(), 1);
+    }
+
+    #[test]
+    fn edge_seed_identity_for_edge_zero() {
+        for seed in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(edge_seed(seed, 0), seed);
+            assert_ne!(edge_seed(seed, 1), edge_seed(seed, 2));
+        }
+    }
+
+    #[test]
+    fn edge_devices_and_links_are_independent() {
+        let mut c = fleet(3);
+        // Work on edge 0 never delays edge 1's device or link.
+        c.exec(Site::Edge(0), 0.0, 5.0, 1e9);
+        c.send_up(0, 0.0, 10_000_000, false);
+        let (s, _) = c.exec(Site::Edge(1), 0.0, 0.1, 1e9);
+        assert_eq!(s, 0.0);
+        let (end, _) = c.send_up(1, 0.0, 1_000_000, false);
+        assert!((end - 0.026_666).abs() < 1e-4, "{end}");
+        assert_eq!(c.edges[0].flops, 1e9);
+        assert_eq!(c.edges[1].flops, 1e9);
+        assert_eq!(c.edges[2].flops, 0.0);
+        assert_eq!(c.edges[0].link.uplink_bytes, 10_000_000);
+        assert_eq!(c.edges[1].link.uplink_bytes, 1_000_000);
+        assert_eq!(c.uplink_bytes(), 11_000_000);
+    }
+
+    #[test]
+    fn shared_cloud_serializes_cross_edge_work() {
+        let mut c = fleet(2);
+        // Edge 0's verify occupies the cloud 0..1; edge 1's request at
+        // t=0.2 queues behind it — the defining fleet contention.
+        let (s1, e1) = c.exec(Site::Cloud, 0.0, 1.0, 1e9);
+        let (s2, _) = c.exec(Site::Cloud, 0.2, 0.5, 1e9);
+        assert_eq!((s1, e1), (0.0, 1.0));
+        assert_eq!(s2, 1.0);
+        // Both edges heard the advertised cloud wait (0.8 s for op 2).
+        for e in &c.edges {
+            assert!(e.monitor.wait_s(Site::Cloud) > 0.0);
+            assert_eq!(e.monitor.wait_s(Site::Edge(0)), 0.0);
+        }
+    }
+
+    #[test]
+    fn per_edge_monitors_observe_only_their_own_link() {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        // Heterogeneous links: edge 1 is 5x slower.
+        let fast = cfg.network;
+        let mut slow = cfg.network;
+        slow.bandwidth_mbps = 60.0;
+        cfg.fleet = vec![
+            EdgeSiteCfg { device: cfg.edge, network: fast, dynamics: cfg.dynamics.clone() },
+            EdgeSiteCfg { device: cfg.edge, network: slow, dynamics: cfg.dynamics.clone() },
+        ];
+        let mut c = VirtualCluster::new(&cfg, 1);
+        for _ in 0..10 {
+            c.send_up(1, 0.0, 1_000_000, false);
+        }
+        // Edge 0's belief stays pinned at its own prior, bitwise.
+        let e0 = c.edges[0].monitor.estimate();
+        assert_eq!(e0.bandwidth_mbps.to_bits(), (300.0f64).to_bits());
+        assert_eq!(c.edges[0].monitor.transfers_observed, 0);
+        let e1 = c.edges[1].monitor.estimate();
+        assert_eq!(e1.bandwidth_mbps.to_bits(), (60.0f64).to_bits());
+        assert_eq!(c.edges[1].monitor.transfers_observed, 10);
+    }
+
+    #[test]
+    fn fleet_edge_zero_matches_single_edge_bitwise() {
+        // Edge 0 of a fleet charges the exact same times as the lone
+        // edge of a single-edge cluster (same per-edge seed, same
+        // arithmetic) — the substrate half of the fleet-of-one golden
+        // guarantee.
+        let mut single = vc();
+        let mut many = fleet(4);
+        for (i, &bytes) in [1_000_000u64, 555, 64 * 1024].iter().enumerate() {
+            let t = i as f64 * 0.1;
+            let a = single.send_up(0, t, bytes, false);
+            let b = many.send_up(0, t, bytes, false);
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "transfer {i}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "transfer {i}");
+            let (sa, ea) = single.exec(Site::Edge(0), t, 0.05, 1e9);
+            let (sb, eb) = many.exec(Site::Edge(0), t, 0.05, 1e9);
+            assert_eq!((sa.to_bits(), ea.to_bits()), (sb.to_bits(), eb.to_bits()));
+        }
+        assert_eq!(single.uplink_bytes(), many.uplink_bytes());
     }
 }

@@ -9,8 +9,8 @@
 
 use anyhow::Result;
 
-use crate::config::{Config, NetworkDynamics, NetworkScenario};
-use crate::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
+use crate::config::{Config, EdgeSiteCfg, NetworkDynamics, NetworkScenario};
+use crate::coordinator::{serve, Assign, Coordinator, Mode, PolicyKind, TraceResult, TraceSpec};
 use crate::metrics::{summarize, Summary};
 use crate::util::json::{arr, num, obj, s, Value};
 use crate::util::table::{f1, f2, f3, Table};
@@ -508,6 +508,155 @@ pub fn volatility(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
     Ok((table, arr(rows)))
 }
 
+/// Per-edge breakdown rows shared by the fleet experiment's table and
+/// JSON dump: (id, requests, p50/p99, MB_up, replans) per edge, so
+/// heterogeneous-fleet skew is observable next to the aggregate.
+fn fleet_edge_rows(res: &TraceResult, label: &str, table: &mut Table, rows: &mut Vec<Value>) {
+    for e in &res.per_edge {
+        let recs: Vec<_> =
+            res.records.iter().filter(|r| r.edge_id == e.edge_id).cloned().collect();
+        let (p50, p99, replans) = if recs.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            let sum = summarize(&recs);
+            (sum.latency_p50_s, sum.latency_p99_s, sum.replans_per_req)
+        };
+        table.row(vec![
+            format!("{label} / edge {}", e.edge_id),
+            e.requests.to_string(),
+            f3(p50),
+            f3(p99),
+            f2(e.uplink_bytes as f64 / 1e6),
+            f2(replans),
+            f1(e.net_estimate.bandwidth_mbps),
+            String::new(),
+        ]);
+        rows.push(obj(vec![
+            ("cell", s(label)),
+            ("edge_id", num(e.edge_id as f64)),
+            ("requests", num(e.requests as f64)),
+            ("latency_p50_s", num(p50)),
+            ("latency_p99_s", num(p99)),
+            ("mb_up", num(e.uplink_bytes as f64 / 1e6)),
+            ("replans_per_req", num(replans)),
+            ("bw_est_mbps", num(e.net_estimate.bandwidth_mbps)),
+            ("edge_wait_s", num(e.edge_wait_s)),
+        ]));
+    }
+}
+
+/// Fleet sweep — N edge sites contending for the shared cloud.
+///
+/// Part 1 (scaling): homogeneous fleets of 1/2/4 edges at *fixed
+/// per-edge load* (round-robin split). Aggregate p50/p99 and the
+/// advertised cloud queue-wait are reported per size; the cloud wait
+/// growing with fleet size is the defining contention phenomenon.
+///
+/// Part 2 (routing): a heterogeneous mixed-link fleet (300/120/60 Mbps)
+/// served round-robin vs least-loaded. The fleet-aware router reads the
+/// monitors' queue-wait/bandwidth beliefs and shifts traffic off the
+/// weak link, which is what shows up as a lower p99.
+pub fn fleet(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    const PER_EDGE_RATE: f64 = 1.8;
+    coord.cfg.network.bandwidth_mbps = 300.0;
+    let saved_fleet = std::mem::take(&mut coord.cfg.fleet);
+    let mut table = Table::new(
+        "Fleet — N edges share one cloud (VQA, 300 Mbps nominal, MSAO)",
+        &["cell", "n", "lat_p50_s", "lat_p99_s", "MB_up", "replans_req", "bw_est", "cloud_wait_s"],
+    );
+    let mut rows = Vec::new();
+
+    // Part 1: homogeneous scaling at fixed per-edge load.
+    for k in [1usize, 2, 4] {
+        coord.cfg.replicate_edges(k)?;
+        let label = format!("scale x{k}");
+        let conc = coord.cfg.serve.max_inflight * k;
+        run_fleet_cell(
+            coord,
+            &label,
+            n * k,
+            PER_EDGE_RATE * k as f64,
+            conc,
+            Assign::RoundRobin,
+            &mut table,
+            &mut rows,
+        )?;
+    }
+
+    // Part 2: heterogeneous mixed-link fleet, round-robin vs
+    // least-loaded assignment on the identical trace.
+    let base = coord.cfg.network;
+    let mut mid = base;
+    mid.bandwidth_mbps = 120.0;
+    mid.rtt_ms = 40.0;
+    let mut weak = base;
+    weak.bandwidth_mbps = 60.0;
+    weak.rtt_ms = 60.0;
+    coord.cfg.fleet = vec![
+        EdgeSiteCfg { device: coord.cfg.edge, network: base, dynamics: coord.cfg.dynamics.clone() },
+        EdgeSiteCfg { device: coord.cfg.edge, network: mid, dynamics: coord.cfg.dynamics.clone() },
+        EdgeSiteCfg { device: coord.cfg.edge, network: weak, dynamics: coord.cfg.dynamics.clone() },
+    ];
+    let conc = coord.cfg.serve.max_inflight * 3;
+    let rate = PER_EDGE_RATE * 3.0;
+    let routes = [("hetero rr", Assign::RoundRobin), ("hetero ll", Assign::LeastLoaded)];
+    for (label, assign) in routes {
+        run_fleet_cell(coord, label, n * 3, rate, conc, assign, &mut table, &mut rows)?;
+    }
+
+    coord.cfg.fleet = saved_fleet;
+    Ok((table, arr(rows)))
+}
+
+/// One fleet cell: serve the trace under `assign`, append the aggregate
+/// row and the per-edge breakdown to the table/JSON.
+#[allow(clippy::too_many_arguments)]
+fn run_fleet_cell(
+    coord: &mut Coordinator,
+    label: &str,
+    n_req: usize,
+    rate: f64,
+    conc: usize,
+    assign: Assign,
+    table: &mut Table,
+    rows: &mut Vec<Value>,
+) -> Result<TraceResult> {
+    let mut gen = Generator::new(4242);
+    let items = gen.items(Benchmark::Vqa, n_req);
+    let arrivals = gen.arrivals(n_req, rate);
+    let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+        .trace(items, arrivals)
+        .seed(9)
+        .concurrency(conc)
+        .assign(assign);
+    let res = serve(coord, &spec)?;
+    let sum = summarize(&res.records);
+    table.row(vec![
+        label.to_string(),
+        n_req.to_string(),
+        f3(sum.latency_p50_s),
+        f3(sum.latency_p99_s),
+        f2(res.uplink_bytes as f64 / 1e6),
+        f2(sum.replans_per_req),
+        // bw_est is a per-link belief; only the per-edge rows carry it.
+        String::new(),
+        f3(res.cloud_wait_s),
+    ]);
+    rows.push(obj(vec![
+        ("cell", s(label)),
+        ("edge_id", Value::Null),
+        ("requests", num(n_req as f64)),
+        ("latency_p50_s", num(sum.latency_p50_s)),
+        ("latency_p99_s", num(sum.latency_p99_s)),
+        ("mb_up", num(res.uplink_bytes as f64 / 1e6)),
+        ("replans_per_req", num(sum.replans_per_req)),
+        ("cloud_wait_s", num(res.cloud_wait_s)),
+        ("throughput_tps", num(sum.throughput_tps)),
+    ]));
+    fleet_edge_rows(&res, label, table, rows);
+    Ok(res)
+}
+
 /// Dispatcher: run one experiment id (or "all"), print tables, dump JSON.
 pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) -> Result<()> {
     let mut dumps: Vec<(&str, Value)> = Vec::new();
@@ -554,6 +703,11 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             t.print();
             dumps.push(("volatility", v));
         }
+        "fleet" => {
+            let (t, v) = fleet(coord, n)?;
+            t.print();
+            dumps.push(("fleet", v));
+        }
         "main" => {
             // Figs. 5-8 share one sweep; run it once.
             let data = main_sweep(coord, n)?;
@@ -596,6 +750,9 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             let (t, v) = volatility(coord, n)?;
             t.print();
             dumps.push(("volatility", v));
+            let (t, v) = fleet(coord, n)?;
+            t.print();
+            dumps.push(("fleet", v));
         }
         other => anyhow::bail!("unknown experiment id {other:?}"),
     }

@@ -10,12 +10,14 @@
 //! Crate layout (see DESIGN.md for the full inventory):
 //! - [`config`]      — TOML config: models, devices, network, MSAO params.
 //! - [`runtime`]     — PJRT engine actors (edge/cloud sites), tokenizer.
-//! - [`cluster`]     — substrates: device cost model, network simulator.
+//! - [`cluster`]     — substrates: device cost model, per-edge links and
+//!   monitors, site identity for the edge fleet.
 //! - [`sparsity`]    — MAS metric math (Eqs. 4-7).
 //! - [`optimizer`]   — from-scratch GP Bayesian optimization + EMA.
 //! - [`coordinator`] — the paper's contribution: MAS probing, offload
 //!   planning, speculative decode loop, batching, KV management, and the
-//!   policy-driven serving API (`serve` + `TraceSpec` + `PolicyKind`).
+//!   policy-driven serving API (`serve` + `TraceSpec` + `PolicyKind` +
+//!   fleet-aware `Assign` routing) over an edge fleet sharing one cloud.
 //! - [`baselines`]   — Cloud-only / Edge-only / PerLLM comparators, each
 //!   an event-driven session schedulable alongside MSAO.
 //! - [`workload`]    — synthetic VQAv2/MMBench-like generators and traces.

@@ -4,7 +4,8 @@
 //!   info                         — print artifact + config summary
 //!   probe [--seed N]             — probe one synthetic item, print MAS
 //!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
-//!         [--concurrency C] [--network SC] — serve a trace through the
+//!         [--concurrency C] [--network SC] [--edges E] [--assign A]
+//!                                — serve a trace through the
 //!                                  unified policy API, print summary.
 //!                                  Modes: msao|no-modality|no-collab|
 //!                                  cloud|edge|perllm|mixed. One --seed
@@ -13,10 +14,14 @@
 //!                                  every mode; --network layers a
 //!                                  time-varying link scenario
 //!                                  (constant|step-drop|burst|flaky)
-//!                                  over the base bandwidth.
+//!                                  over the base bandwidth; --edges
+//!                                  serves on a homogeneous fleet of E
+//!                                  edge sites sharing the cloud, and
+//!                                  --assign picks the request routing
+//!                                  (rr|least-loaded|pinned:<edge>).
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
 //!                                  (fig4|table1|fig5..fig9|concurrency|
-//!                                  mixed|volatility|main|all)
+//!                                  mixed|volatility|fleet|main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap) and lives
 //! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
@@ -97,13 +102,19 @@ fn main() -> Result<()> {
             if let Some(dynamics) = cli::network_dynamics(&args)? {
                 cfg.dynamics = dynamics;
             }
+            cli::apply_fleet_flags(&mut cfg, &args)?;
             let (mode, spec) = cli::serve_spec(&args)?;
             let n = spec.items.len();
             let conc = spec.effective_concurrency(&cfg);
+            let n_edges = cfg.edge_sites().len();
             let mut coord = Coordinator::new(cfg)?;
             let res = serve(&mut coord, &spec)?;
             let sum = summarize(&res.records);
-            println!("mode={mode} n={n} seed={} concurrency={conc}", spec.seed);
+            println!(
+                "mode={mode} n={n} seed={} concurrency={conc} edges={n_edges} assign={}",
+                spec.seed,
+                spec.assign.name()
+            );
             println!(
                 "accuracy {:.1}%  latency mean {:.3}s p99 {:.3}s  throughput {:.1} tok/s",
                 sum.accuracy * 100.0,
@@ -131,6 +142,19 @@ fn main() -> Result<()> {
                     "monitor estimate at trace end: {:.1} Mbps rtt {:.1} ms",
                     res.net_estimate.bandwidth_mbps, res.net_estimate.rtt_ms
                 );
+            }
+            if res.per_edge.len() > 1 {
+                println!("cloud queue-wait estimate {:.3} s", res.cloud_wait_s);
+                for e in &res.per_edge {
+                    println!(
+                        "  edge {}: {} req  {:.2} MB up  bw est {:.1} Mbps  wait {:.3} s",
+                        e.edge_id,
+                        e.requests,
+                        e.uplink_bytes as f64 / 1e6,
+                        e.net_estimate.bandwidth_mbps,
+                        e.edge_wait_s
+                    );
+                }
             }
         }
         "experiment" => {

@@ -7,6 +7,9 @@ use crate::util::stats::{mean, percentile};
 #[derive(Debug, Clone, Default)]
 pub struct ExecRecord {
     pub request_id: u64,
+    /// Edge site of the fleet this request was assigned to (0 on a
+    /// single-edge testbed).
+    pub edge_id: usize,
     /// Virtual arrival / completion times (seconds).
     pub t_arrival: f64,
     pub t_done: f64,

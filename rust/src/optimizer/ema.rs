@@ -101,7 +101,7 @@ impl ThetaController {
     }
 }
 
-/// Expected speculative run length E[N_spec] = 1 / (1 - P_conf) (Eq. 13),
+/// Expected speculative run length `E[N_spec]` = 1 / (1 - P_conf) (Eq. 13),
 /// capped at N_max.
 pub fn expected_spec_len(p_conf: f64, n_max: usize) -> f64 {
     let p = p_conf.clamp(0.0, 0.999);

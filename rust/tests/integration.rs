@@ -7,11 +7,11 @@ use std::sync::{Mutex, OnceLock};
 
 use msao::baselines::{cloud_only, edge_only, perllm, Baseline};
 use msao::cluster::NetEstimate;
-use msao::config::{Config, NetworkDynamics, Segment};
+use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, Segment};
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
-    serve, testbed, Batcher, Coordinator, Mode, PolicyKind, TraceSpec,
+    serve, testbed, Assign, Batcher, Coordinator, Mode, PolicyKind, TraceSpec,
 };
 use msao::metrics::summarize;
 use msao::sparsity::Modality;
@@ -415,8 +415,11 @@ fn baseline_sessions_reproduce_sequential_loop_bit_for_bit() {
             );
             assert_eq!(rec.correct, s.correct, "{policy:?} req {i}: correct");
         }
-        assert_eq!(new.uplink_bytes, vc.link.uplink_bytes, "{policy:?}: uplink bytes");
-        assert_eq!(new.downlink_bytes, vc.link.downlink_bytes, "{policy:?}: downlink bytes");
+        assert_eq!(new.uplink_bytes, vc.edges[0].link.uplink_bytes, "{policy:?}: uplink bytes");
+        assert_eq!(
+            new.downlink_bytes, vc.edges[0].link.downlink_bytes,
+            "{policy:?}: downlink bytes"
+        );
     }
 }
 
@@ -487,6 +490,114 @@ fn constant_network_trace_is_bit_for_bit_identical() {
             );
         }
     }
+}
+
+#[test]
+fn fleet_of_one_reproduces_single_edge_bit_for_bit() {
+    require_artifacts!();
+    // The fleet golden guarantee: an explicitly-configured fleet of one
+    // edge must reproduce the fleet-less single-edge path (the
+    // pre-refactor two-site testbed, itself pinned bit for bit to the
+    // seed loops by the other golden tests) — times, bytes, flops,
+    // quality — under every assignment strategy, at concurrency 1.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let make_spec = |policy: PolicyKind, assign: Assign| {
+        let mut gen = Generator::new(31);
+        let n = 5;
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 1.3);
+        TraceSpec::new(policy).trace(items, arrivals).seed(5).concurrency(1).assign(assign)
+    };
+    for policy in [PolicyKind::Msao(Mode::Msao), PolicyKind::CloudOnly] {
+        c.cfg.fleet = Vec::new();
+        let golden = serve(&mut c, &make_spec(policy.clone(), Assign::RoundRobin)).unwrap();
+        c.cfg.fleet = vec![EdgeSiteCfg {
+            device: c.cfg.edge,
+            network: c.cfg.network,
+            dynamics: c.cfg.dynamics.clone(),
+        }];
+        for assign in [Assign::RoundRobin, Assign::LeastLoaded, Assign::Pinned(0)] {
+            let res = serve(&mut c, &make_spec(policy.clone(), assign)).unwrap();
+            for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+                assert_records_bitwise_equal(a, b, &format!("{policy:?} {assign:?} req {i}"));
+                assert_eq!(b.edge_id, 0, "{policy:?} {assign:?} req {i}: edge id");
+            }
+            assert_eq!(golden.uplink_bytes, res.uplink_bytes, "{policy:?} {assign:?}: uplink");
+            assert_eq!(
+                golden.downlink_bytes, res.downlink_bytes,
+                "{policy:?} {assign:?}: downlink"
+            );
+            assert_eq!(
+                golden.batch_amortization.to_bits(),
+                res.batch_amortization.to_bits(),
+                "{policy:?} {assign:?}: amortization"
+            );
+            assert_eq!(res.per_edge.len(), 1);
+            assert_eq!(res.per_edge[0].requests, res.records.len());
+            assert_eq!(
+                golden.cloud_wait_s.to_bits(),
+                res.cloud_wait_s.to_bits(),
+                "{policy:?} {assign:?}: cloud wait"
+            );
+        }
+        c.cfg.fleet = Vec::new();
+    }
+}
+
+#[test]
+fn least_loaded_shifts_traffic_off_the_weak_link() {
+    require_artifacts!();
+    // Heterogeneous mixed-link fleet (300/120/60 Mbps): the fleet-blind
+    // round-robin split forces a third of the trace through the weak
+    // link, while the monitor-driven least-loaded router reads each
+    // edge's queue-wait/bandwidth beliefs and sends the weak edge
+    // less — which is what shows up as a lower tail latency.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let base = c.cfg.network;
+    let mut mid = base;
+    mid.bandwidth_mbps = 120.0;
+    mid.rtt_ms = 40.0;
+    let mut weak = base;
+    weak.bandwidth_mbps = 60.0;
+    weak.rtt_ms = 60.0;
+    c.cfg.fleet = vec![
+        EdgeSiteCfg { device: c.cfg.edge, network: base, dynamics: c.cfg.dynamics.clone() },
+        EdgeSiteCfg { device: c.cfg.edge, network: mid, dynamics: c.cfg.dynamics.clone() },
+        EdgeSiteCfg { device: c.cfg.edge, network: weak, dynamics: c.cfg.dynamics.clone() },
+    ];
+    let n = 12;
+    let run = |c: &mut Coordinator, assign: Assign| {
+        let mut gen = Generator::new(4242);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 5.4);
+        let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(9)
+            .concurrency(12)
+            .assign(assign);
+        serve(c, &spec).unwrap()
+    };
+    let rr = run(&mut c, Assign::RoundRobin);
+    let ll = run(&mut c, Assign::LeastLoaded);
+    c.cfg.fleet = Vec::new();
+    assert_eq!(rr.per_edge[2].requests, n / 3, "round-robin must split evenly");
+    assert!(
+        ll.per_edge[2].requests < rr.per_edge[2].requests,
+        "least-loaded sent {} of {n} requests to the weak link (round-robin: {})",
+        ll.per_edge[2].requests,
+        rr.per_edge[2].requests
+    );
+    let p99 = |r: &msao::coordinator::TraceResult| summarize(&r.records).latency_p99_s;
+    assert!(
+        p99(&ll) < p99(&rr),
+        "least-loaded p99 {} must beat round-robin p99 {}",
+        p99(&ll),
+        p99(&rr)
+    );
+    // Every session completed on some edge of the fleet.
+    assert_eq!(ll.per_edge.iter().map(|e| e.requests).sum::<usize>(), n);
 }
 
 #[test]

@@ -3,8 +3,10 @@
 //! deterministic PRNG; failures print the offending seed.
 
 use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
-use msao::config::{DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment};
-use msao::coordinator::Batcher;
+use msao::config::{
+    Config, DeviceCfg, EdgeSiteCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment,
+};
+use msao::coordinator::{edge_seed, least_loaded, Batcher, Site, VirtualCluster};
 use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::json::Value;
@@ -254,6 +256,128 @@ fn prop_monitor_estimate_stays_within_observation_hull() {
                 e.bandwidth_mbps
             );
         }
+    }
+}
+
+// --- fleet substrate / routing -------------------------------------------------
+
+#[test]
+fn prop_least_loaded_never_picks_a_dominated_edge() {
+    // The fleet router's argmin score is strictly increasing in the
+    // monitor's queue-wait and RTT beliefs and strictly decreasing in
+    // its bandwidth belief, so the picked edge can never be strictly
+    // dominated (higher wait, lower bandwidth, higher RTT) by another
+    // edge — in particular never by an idle faster edge.
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x11AD);
+        let k = 2 + r.below(5);
+        let mut cfg = Config::default();
+        cfg.replicate_edges(k).unwrap();
+        let mut vc = VirtualCluster::new(&cfg, seed);
+        for edge in &mut vc.edges {
+            for _ in 0..r.below(6) {
+                edge.monitor.observe_wait(Site::Edge(0), r.range_f64(0.0, 3.0));
+            }
+            for _ in 0..r.below(6) {
+                edge.monitor.observe_transfer(r.range_f64(20.0, 600.0), r.range_f64(5.0, 120.0));
+            }
+        }
+        let pick = least_loaded(&vc);
+        let pw = vc.edges[pick].monitor.wait_s(Site::Edge(0));
+        let pe = vc.edges[pick].monitor.estimate();
+        for (i, e) in vc.edges.iter().enumerate() {
+            if i == pick {
+                continue;
+            }
+            let w = e.monitor.wait_s(Site::Edge(0));
+            let est = e.monitor.estimate();
+            let dominates =
+                w < pw && est.bandwidth_mbps > pe.bandwidth_mbps && est.rtt_ms < pe.rtt_ms;
+            assert!(
+                !dominates,
+                "seed {seed}: picked edge {pick} (wait {pw}, {pe:?}) but edge {i} \
+                 strictly dominates (wait {w}, {est:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fleet_round_robin_equals_independent_single_edges_when_cloud_uncontended() {
+    // Fleet-of-N with identical edges and a round-robin op split must
+    // charge each edge exactly what N independent single-edge clusters
+    // charge (bitwise), as long as the shared cloud never queues
+    // cross-edge work. Each edge's ops live in a disjoint 1000 s window
+    // to guarantee the uncontended premise; per-edge Flaky dynamics
+    // exercise the per-edge seed derivation (fleet edge i == a lone
+    // edge seeded with edge_seed(seed, i)).
+    for seed in cases(25) {
+        let mut r = Rng::seed_from_u64(seed ^ 0xF1EE7);
+        let k = 2 + r.below(3);
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.dynamics = NetworkDynamics::Scenario(NetworkScenario::Flaky);
+        cfg.fleet = vec![
+            EdgeSiteCfg {
+                device: cfg.edge,
+                network: cfg.network,
+                dynamics: cfg.dynamics.clone(),
+            };
+            k
+        ];
+        let mut fleet = VirtualCluster::new(&cfg, seed);
+        let mut single_cfg = cfg.clone();
+        single_cfg.fleet = Vec::new();
+        let mut singles: Vec<VirtualCluster> =
+            (0..k).map(|i| VirtualCluster::new(&single_cfg, edge_seed(seed, i))).collect();
+        for i in 0..k {
+            let mut t = 1000.0 * i as f64;
+            for step in 0..20 {
+                t += r.range_f64(0.01, 0.5);
+                let secs = r.range_f64(0.001, 0.05);
+                let bytes = r.below(1_000_000) as u64 + 1;
+                let what = format!("seed {seed}: edge {i} step {step}");
+                let a = fleet.exec(Site::Edge(i), t, secs, 1e9);
+                let b = singles[i].exec(Site::Edge(0), t, secs, 1e9);
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "{what}: exec start");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "{what}: exec end");
+                let ua = fleet.send_up(i, a.1, bytes, false);
+                let ub = singles[i].send_up(0, b.1, bytes, false);
+                assert_eq!(ua.1.to_bits(), ub.1.to_bits(), "{what}: uplink arrival");
+                let ca = fleet.exec(Site::Cloud, ua.1, secs, 2e9);
+                let cb = singles[i].exec(Site::Cloud, ub.1, secs, 2e9);
+                assert_eq!(ca.0.to_bits(), cb.0.to_bits(), "{what}: cloud start");
+                let da = fleet.send_down(i, ca.1, 4096, false);
+                let db = singles[i].send_down(0, cb.1, 4096, false);
+                assert_eq!(da.1.to_bits(), db.1.to_bits(), "{what}: downlink arrival");
+            }
+        }
+        // Per-edge metrics equal the independent runs.
+        for i in 0..k {
+            let (fe, se) = (&fleet.edges[i], &singles[i].edges[0]);
+            assert_eq!(fe.flops.to_bits(), se.flops.to_bits(), "seed {seed}: edge {i} flops");
+            assert_eq!(fe.link.uplink_bytes, se.link.uplink_bytes, "seed {seed}: edge {i} up");
+            assert_eq!(
+                fe.link.downlink_bytes, se.link.downlink_bytes,
+                "seed {seed}: edge {i} down"
+            );
+            let (ea, eb) = (fe.monitor.estimate(), se.monitor.estimate());
+            assert_eq!(
+                ea.bandwidth_mbps.to_bits(),
+                eb.bandwidth_mbps.to_bits(),
+                "seed {seed}: edge {i} bw estimate"
+            );
+            assert_eq!(
+                fe.monitor.wait_s(Site::Edge(0)).to_bits(),
+                se.monitor.wait_s(Site::Edge(0)).to_bits(),
+                "seed {seed}: edge {i} wait estimate"
+            );
+        }
+        assert_eq!(
+            fleet.flops_cloud.to_bits(),
+            singles.iter().map(|s| s.flops_cloud).sum::<f64>().to_bits(),
+            "seed {seed}: cloud flops must sum across the fleet"
+        );
     }
 }
 
