@@ -1,12 +1,16 @@
 //! Bench: end-to-end serving per method — the rows behind Figs. 5-8 at
 //! 300 Mbps, VQAv2-like workload, every method through the unified
 //! `serve(coord, &TraceSpec)` entrypoint. Reports both real wall-clock
-//! of the whole stack and the virtual-testbed summary.
+//! of the whole stack and the virtual-testbed summary, plus a scaling
+//! section comparing the streaming heap scheduler against the
+//! materialized linear-scan reference on the real serving path
+//! (scheduler-only scaling over synthetic sessions is in
+//! `benches/substrate.rs`, which also emits `BENCH_serving.json`).
 
 use std::time::Instant;
 
 use msao::config::Config;
-use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
+use msao::coordinator::{serve, serve_materialized_ref, Coordinator, Mode, PolicyKind, TraceSpec};
 use msao::metrics::summarize;
 use msao::workload::{Benchmark, Generator};
 
@@ -68,6 +72,32 @@ fn main() -> anyhow::Result<()> {
                 conc, wall, s.latency_p99_s, s.throughput_tps, res.batch_amortization
             );
         }
+    }
+
+    // Streaming heap vs materialized linear-scan on the real serving
+    // path: identical records by construction (golden-pinned in the
+    // integration tests); the wall-clock gap here is the engine-
+    // dominated floor the pure-scheduler grid in substrate.rs rises
+    // above at high concurrency.
+    let n2 = 24;
+    println!("== streaming heap vs materialized linear serve (MSAO, {n2} reqs, 6 req/s) ==");
+    println!("{:<14} {:>14} {:>14}", "concurrency", "stream_wall_s", "mat_wall_s");
+    for conc in [8usize, 32] {
+        let mut gen = Generator::new(42);
+        let items = gen.items(Benchmark::Vqa, n2);
+        let arrivals = gen.arrivals(n2, 6.0);
+        let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(1)
+            .concurrency(conc);
+        let t0 = Instant::now();
+        let stream = serve(&mut coord, &spec)?;
+        let stream_wall = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mat = serve_materialized_ref(&mut coord, &spec)?;
+        let mat_wall = t1.elapsed().as_secs_f64();
+        assert_eq!(stream.records.len(), mat.records.len());
+        println!("{:<14} {:>14.2} {:>14.2}", conc, stream_wall, mat_wall);
     }
     Ok(())
 }

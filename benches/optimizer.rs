@@ -1,6 +1,12 @@
 //! Bench: the coarse-phase optimizer — GP fit/predict scaling and the
 //! full 50-iteration BO loop (must stay ~ms-scale so per-request
-//! planning never bottlenecks the coordinator).
+//! planning never bottlenecks the coordinator). `observe` is the
+//! incremental O(n²) path (packed Cholesky row-append); the
+//! `observe+refit` row name is kept for trajectory diffing but the
+//! measured work includes the `gp.clone()` the loop needs to reset
+//! state. The same combined clone+observe measure is what
+//! `BENCH_serving.json`'s `gp` section records (benches/substrate.rs,
+//! field `clone_observe_mean_s`).
 
 use msao::optimizer::{BayesOpt, Gp, Matern52};
 use msao::util::bench::{bench, black_box, header};

@@ -146,6 +146,13 @@ impl<'a> BaselineSession<'a> {
         self.rec.edge_id = edge;
     }
 
+    /// Whether the session has not yet taken its first step (still
+    /// waiting at its arrival event) — the window in which the trace
+    /// server may still re-route it onto another edge.
+    pub fn is_unstarted(&self) -> bool {
+        matches!(self.phase, BPhase::Start)
+    }
+
     /// Virtual time of this session's next event.
     pub fn next_time(&self) -> f64 {
         match &self.phase {

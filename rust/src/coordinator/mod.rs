@@ -22,7 +22,12 @@
 //! monitor-driven least-loaded), the concurrency cap, and the testbed
 //! seed, and [`serve`] is the one entrypoint that runs it — every
 //! strategy is an event-driven session interleaved by [`scheduler`] on
-//! the shared fleet.
+//! the shared fleet. The serving hot path is an index min-heap with
+//! *streaming admission*: sessions are built lazily at their admission
+//! slot and folded into records as they finish, so each event costs
+//! O(log active) and resident session state is O(concurrency), not
+//! O(trace) — [`serve_materialized_ref`] keeps the pre-overhaul
+//! materialized linear-scan path as the golden reference.
 
 pub mod batcher;
 pub mod engines;
@@ -38,10 +43,8 @@ pub mod timeline;
 pub use batcher::Batcher;
 pub use engines::Engines;
 pub use planner::Plan;
-pub use policy::{
-    least_loaded, testbed, Assign, FleetRouter, PolicyKind, ResidentProfile, TraceSpec,
-};
+pub use policy::{least_loaded, testbed, Assign, PolicyKind, ResidentProfile, TraceSpec};
 pub use scheduler::StepOutcome;
-pub use server::{serve, EdgeTraceStats, TraceResult};
+pub use server::{serve, serve_materialized_ref, EdgeTraceStats, TraceResult};
 pub use session::{Coordinator, Mode, Session};
 pub use timeline::{edge_seed, EdgeId, EdgeSite, Site, VirtualCluster};

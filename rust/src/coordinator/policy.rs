@@ -237,29 +237,6 @@ pub fn least_loaded(vc: &VirtualCluster) -> EdgeId {
     best
 }
 
-/// Per-trace request router: resolves each session's edge assignment.
-/// Static strategies are resolved by index; `LeastLoaded` reads the
-/// fleet's monitors at the moment a session first steps (its arrival
-/// event, in virtual-time order).
-#[derive(Debug, Clone, Copy)]
-pub struct FleetRouter {
-    assign: Assign,
-}
-
-impl FleetRouter {
-    pub fn new(assign: Assign) -> Self {
-        FleetRouter { assign }
-    }
-
-    /// Edge for request `i`, given the live cluster state.
-    pub fn pick(&self, i: usize, vc: &VirtualCluster) -> EdgeId {
-        match self.assign.static_pick(i, vc.n_edges()) {
-            Some(e) => e,
-            None => least_loaded(vc),
-        }
-    }
-}
-
 /// Permanently-resident bytes per site (weights + workspace).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ResidentProfile {
@@ -566,20 +543,5 @@ mod tests {
             vc.edges[1].monitor.observe_transfer(10.0, 200.0);
         }
         assert_eq!(least_loaded(&vc), 2);
-    }
-
-    #[test]
-    fn router_resolves_static_and_dynamic_assignments() {
-        let mut cfg = Config::default();
-        cfg.replicate_edges(2).unwrap();
-        let vc = testbed(&cfg, 1, &PolicyKind::CloudOnly.resident_profile());
-        let rr = FleetRouter::new(Assign::RoundRobin);
-        assert_eq!(rr.pick(0, &vc), 0);
-        assert_eq!(rr.pick(1, &vc), 1);
-        assert_eq!(rr.pick(2, &vc), 0);
-        let pin = FleetRouter::new(Assign::Pinned(1));
-        assert_eq!(pin.pick(7, &vc), 1);
-        let ll = FleetRouter::new(Assign::LeastLoaded);
-        assert_eq!(ll.pick(3, &vc), 0); // idle fleet: lowest id
     }
 }

@@ -12,6 +12,29 @@
 //! different requests interleave on the link where the dynamic batcher
 //! can coalesce them.
 //!
+//! # Event selection is an index min-heap
+//!
+//! Active sessions sit in a binary min-heap keyed on
+//! `(next_time, session_index)` (`EventKey`) — the lower-index
+//! tie-break is encoded in the key, so the pop order is *identical by
+//! construction* to the linear argmin scan it replaced
+//! ([`drive_linear_ref`], kept as the equivalence reference for the
+//! property tests and the scaling bench). Only the stepped session's
+//! key changes per event (stepping is the sole mutator of a session's
+//! clock), so one pop + one push re-keys the heap: each step costs
+//! O(log active) instead of O(active), which is what makes
+//! high-concurrency traces (256+ in flight) affordable to simulate.
+//!
+//! # Streaming admission
+//!
+//! [`drive_stream`] is the O(concurrency)-residency variant: sessions
+//! are *built lazily* at their admission slot (the [`SessionSource`]
+//! constructs request `i` only when a slot frees) and handed back to
+//! the source the moment they finish, so at most `concurrency` sessions
+//! exist at once — resident memory scales with the in-flight cap, not
+//! the trace length, enabling 100k+-request traces. [`drive`] keeps
+//! the pre-materialized slice interface on the same heap core.
+//!
 //! With `concurrency == 1` the loop degenerates to the seed's
 //! run-to-completion FCFS: one session is admitted at a time and is the
 //! unique earliest event until it finishes, so every engine call and
@@ -24,6 +47,9 @@
 //! non-decreasing), and admission is FIFO — no session can be bypassed
 //! indefinitely.
 
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
 use anyhow::Result;
 
 /// Outcome of advancing a session by one step.
@@ -33,17 +59,51 @@ pub enum StepOutcome {
     Done,
 }
 
-/// Drive `sessions` to completion.
-///
-/// * `concurrency` — max sessions in flight at once (admission is FCFS
-///   in slice order, which the trace server keeps sorted by arrival).
-/// * `next_time` — virtual time of a session's next event (sort key).
-/// * `step` — advance one session by one event; returns whether it
-///   completed. Called with the session's index for logging/records.
-///
-/// Ties on `next_time` break toward the lower index so replays are
-/// deterministic and admission order doubles as the tie-break.
-pub fn drive<S>(
+/// Heap key: `(next_time, session_index)`, ordered ascending — exactly
+/// the argmin the linear scan computed, ties toward the lower index.
+/// `slot` is payload (where the session lives), never compared: two
+/// live keys can never share an index.
+#[derive(Debug, Clone, Copy)]
+struct EventKey {
+    time: f64,
+    index: usize,
+    slot: usize,
+}
+
+impl EventKey {
+    fn new(time: f64, index: usize, slot: usize) -> Self {
+        debug_assert!(!time.is_nan(), "session {index}: NaN event time");
+        // Canonicalize -0.0 to +0.0 so total_cmp matches the reference
+        // scan's `<` (which treats them equal and falls to the index).
+        EventKey { time: time + 0.0, index, slot }
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time.total_cmp(&other.time).then(self.index.cmp(&other.index))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+/// Linear-scan reference implementation of [`drive`] — the pre-heap
+/// event loop, kept verbatim as the golden the heap scheduler is pinned
+/// against (equivalence property tests) and as the baseline the scaling
+/// bench measures the O(log n) win over. O(active) per step.
+pub fn drive_linear_ref<S>(
     sessions: &mut [S],
     concurrency: usize,
     next_time: impl Fn(&S) -> f64,
@@ -77,6 +137,137 @@ pub fn drive<S>(
     Ok(())
 }
 
+/// Lazy session factory + sink for [`drive_stream`]: the driver owns at
+/// most `concurrency` live sessions; everything else — construction,
+/// stepping against shared state, folding a finished session into its
+/// record — lives behind one `&mut` so the source can hold the cluster,
+/// engines, and result buffers without fighting the borrow checker.
+pub trait SessionSource {
+    type Session;
+
+    /// Build session `i` (0-based trace order). Called exactly once per
+    /// session, in FCFS order, at the moment a slot frees for it.
+    fn admit(&mut self, i: usize) -> Result<Self::Session>;
+
+    /// Virtual time of the session's next event (heap sort key).
+    fn next_time(&self, s: &Self::Session) -> f64;
+
+    /// Advance one session by one event.
+    fn step(&mut self, i: usize, s: &mut Self::Session) -> Result<StepOutcome>;
+
+    /// Fold a completed session into its record. Called exactly once
+    /// per session, the moment its step returns [`StepOutcome::Done`].
+    fn finish(&mut self, i: usize, s: Self::Session) -> Result<()>;
+}
+
+/// Drive a trace of `n` sessions to completion with *streaming
+/// admission*: session `i` is constructed only when an in-flight slot
+/// frees for it and is handed back to the source as soon as it
+/// finishes, so at most `min(concurrency, n)` sessions are resident at
+/// once. Event order (and therefore every virtual-cluster charge) is
+/// identical to materializing all `n` sessions up front and running
+/// [`drive`] — admission is FCFS by index either way and construction
+/// is effect-free — which is pinned by the streaming golden test.
+pub fn drive_stream<H: SessionSource>(n: usize, concurrency: usize, h: &mut H) -> Result<()> {
+    let cap = concurrency.max(1).min(n.max(1));
+    let mut slots: Vec<Option<H::Session>> = Vec::with_capacity(cap);
+    slots.resize_with(cap, || None);
+    let mut free: Vec<usize> = (0..cap).rev().collect();
+    let mut heap: BinaryHeap<Reverse<EventKey>> = BinaryHeap::with_capacity(cap + 1);
+    let mut next_admit = 0usize;
+    admit_into_free_slots(h, &mut heap, &mut slots, &mut free, &mut next_admit, n)?;
+    while let Some(Reverse(key)) = heap.pop() {
+        let s = slots[key.slot].as_mut().expect("heap key points at a live slot");
+        if h.step(key.index, s)? == StepOutcome::Done {
+            let s = slots[key.slot].take().expect("finished session still in its slot");
+            h.finish(key.index, s)?;
+            free.push(key.slot);
+            admit_into_free_slots(h, &mut heap, &mut slots, &mut free, &mut next_admit, n)?;
+        } else {
+            let t = h.next_time(slots[key.slot].as_ref().expect("pending session in slot"));
+            heap.push(Reverse(EventKey::new(t, key.index, key.slot)));
+        }
+    }
+    Ok(())
+}
+
+/// FCFS admission: build and enqueue sessions until the slots run out
+/// or the trace is exhausted (shared by [`drive_stream`]'s initial fill
+/// and its post-finish refill).
+fn admit_into_free_slots<H: SessionSource>(
+    h: &mut H,
+    heap: &mut BinaryHeap<Reverse<EventKey>>,
+    slots: &mut [Option<H::Session>],
+    free: &mut Vec<usize>,
+    next_admit: &mut usize,
+    n: usize,
+) -> Result<()> {
+    while *next_admit < n {
+        let Some(slot) = free.pop() else { break };
+        let s = h.admit(*next_admit)?;
+        heap.push(Reverse(EventKey::new(h.next_time(&s), *next_admit, slot)));
+        slots[slot] = Some(s);
+        *next_admit += 1;
+    }
+    Ok(())
+}
+
+/// Adapter backing [`drive`]: pre-materialized sessions on the
+/// [`drive_stream`] heap core — the streamed "session" is just the
+/// index into the slice, so there is exactly one event loop to
+/// maintain.
+struct SliceSource<'a, S, F, G> {
+    sessions: &'a mut [S],
+    next_time: F,
+    step: G,
+}
+
+impl<S, F, G> SessionSource for SliceSource<'_, S, F, G>
+where
+    F: Fn(&S) -> f64,
+    G: FnMut(usize, &mut S) -> Result<StepOutcome>,
+{
+    type Session = usize;
+
+    fn admit(&mut self, i: usize) -> Result<usize> {
+        Ok(i)
+    }
+
+    fn next_time(&self, s: &usize) -> f64 {
+        (self.next_time)(&self.sessions[*s])
+    }
+
+    fn step(&mut self, _i: usize, s: &mut usize) -> Result<StepOutcome> {
+        (self.step)(*s, &mut self.sessions[*s])
+    }
+
+    fn finish(&mut self, _i: usize, _s: usize) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Drive `sessions` to completion.
+///
+/// * `concurrency` — max sessions in flight at once (admission is FCFS
+///   in slice order, which the trace server keeps sorted by arrival).
+/// * `next_time` — virtual time of a session's next event (sort key).
+/// * `step` — advance one session by one event; returns whether it
+///   completed. Called with the session's index for logging/records.
+///
+/// Ties on `next_time` break toward the lower index so replays are
+/// deterministic and admission order doubles as the tie-break. Event
+/// order is bitwise identical to [`drive_linear_ref`] (property-tested)
+/// at O(log active) per step instead of O(active).
+pub fn drive<S>(
+    sessions: &mut [S],
+    concurrency: usize,
+    next_time: impl Fn(&S) -> f64,
+    step: impl FnMut(usize, &mut S) -> Result<StepOutcome>,
+) -> Result<()> {
+    let n = sessions.len();
+    drive_stream(n, concurrency, &mut SliceSource { sessions, next_time, step })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,26 +287,73 @@ mod tests {
         fn next_time(&self) -> f64 {
             self.times.get(self.at).copied().unwrap_or(f64::INFINITY)
         }
+
+        fn step(&mut self) -> StepOutcome {
+            self.at += 1;
+            if self.at == self.times.len() {
+                StepOutcome::Done
+            } else {
+                StepOutcome::Pending
+            }
+        }
     }
 
     fn run(mocks: &mut [Mock], cap: usize) -> Vec<(usize, f64)> {
         let mut log = Vec::new();
-        drive(
-            mocks,
-            cap,
-            Mock::next_time,
-            |i, m| {
-                log.push((i, m.next_time()));
-                m.at += 1;
-                Ok(if m.at == m.times.len() {
-                    StepOutcome::Done
-                } else {
-                    StepOutcome::Pending
-                })
-            },
-        )
+        drive(mocks, cap, Mock::next_time, |i, m| {
+            log.push((i, m.next_time()));
+            Ok(m.step())
+        })
         .unwrap();
         log
+    }
+
+    /// Same trace through the streaming driver: sessions are built at
+    /// admission from the times table and folded away on completion.
+    struct StreamSource<'a> {
+        times: &'a [Vec<f64>],
+        log: Vec<(usize, f64)>,
+        live: usize,
+        peak_live: usize,
+        finished: Vec<bool>,
+    }
+
+    impl SessionSource for StreamSource<'_> {
+        type Session = Mock;
+
+        fn admit(&mut self, i: usize) -> Result<Mock> {
+            self.live += 1;
+            self.peak_live = self.peak_live.max(self.live);
+            Ok(Mock::new(self.times[i].clone()))
+        }
+
+        fn next_time(&self, s: &Mock) -> f64 {
+            s.next_time()
+        }
+
+        fn step(&mut self, i: usize, s: &mut Mock) -> Result<StepOutcome> {
+            self.log.push((i, s.next_time()));
+            Ok(s.step())
+        }
+
+        fn finish(&mut self, i: usize, s: Mock) -> Result<()> {
+            assert_eq!(s.at, s.times.len(), "session {i} finished early");
+            self.live -= 1;
+            self.finished[i] = true;
+            Ok(())
+        }
+    }
+
+    fn run_stream(times: &[Vec<f64>], cap: usize) -> StreamSource<'_> {
+        let mut src = StreamSource {
+            times,
+            log: Vec::new(),
+            live: 0,
+            peak_live: 0,
+            finished: vec![false; times.len()],
+        };
+        drive_stream(times.len(), cap, &mut src).unwrap();
+        src
     }
 
     #[test]
@@ -148,6 +386,17 @@ mod tests {
         let mut m = vec![Mock::new(vec![1.0]), Mock::new(vec![0.0, 1.0])];
         let log = run(&mut m, 2);
         assert_eq!(log, vec![(1, 0.0), (0, 1.0), (1, 1.0)]);
+    }
+
+    #[test]
+    fn negative_zero_ties_break_by_index_like_the_reference() {
+        // total_cmp orders -0.0 < 0.0; the reference `<` treats them
+        // equal and falls to the index. The key canonicalizes, so a
+        // -0.0 event must not let a higher index jump the queue.
+        let mut m = vec![Mock::new(vec![0.0]), Mock::new(vec![-0.0])];
+        let log = run(&mut m, 2);
+        let order: Vec<usize> = log.iter().map(|&(i, _)| i).collect();
+        assert_eq!(order, vec![0, 1]);
     }
 
     #[test]
@@ -189,15 +438,10 @@ mod tests {
         assert!(mocks.iter().all(|m| m.at == m.times.len()), "starved session");
     }
 
-    #[test]
-    fn no_starvation_under_poisson_trace() {
-        // 100 sessions with Poisson arrivals and random per-step service
-        // times: every session must finish every step.
-        let mut rng = Rng::seed_from_u64(0xE7E7);
+    fn poisson_times(rng: &mut Rng, n: usize) -> Vec<Vec<f64>> {
         let mut t = 0.0;
-        let mut mocks = Vec::new();
-        let mut expect = 0usize;
-        for _ in 0..100 {
+        let mut all = Vec::new();
+        for _ in 0..n {
             t += rng.exp(4.0);
             let steps = 1 + rng.below(6);
             let mut times = Vec::with_capacity(steps);
@@ -206,17 +450,67 @@ mod tests {
                 times.push(tt);
                 tt += rng.f64() * 0.5;
             }
-            expect += steps;
-            mocks.push(Mock::new(times));
+            all.push(times);
         }
+        all
+    }
+
+    #[test]
+    fn no_starvation_under_poisson_trace() {
+        // 100 sessions with Poisson arrivals and random per-step service
+        // times: every session must finish every step.
+        let mut rng = Rng::seed_from_u64(0xE7E7);
+        let all = poisson_times(&mut rng, 100);
+        let expect: usize = all.iter().map(Vec::len).sum();
         for &cap in &[1usize, 4, 8, usize::MAX] {
-            let mut ms: Vec<Mock> = mocks
-                .iter()
-                .map(|m| Mock::new(m.times.clone()))
-                .collect();
+            let mut ms: Vec<Mock> = all.iter().map(|t| Mock::new(t.clone())).collect();
             let log = run(&mut ms, cap);
             assert_eq!(log.len(), expect, "cap {cap}: missing steps");
             assert!(ms.iter().all(|m| m.at == m.times.len()), "cap {cap}: starved session");
         }
+    }
+
+    #[test]
+    fn heap_reproduces_linear_reference_step_sequence() {
+        let mut rng = Rng::seed_from_u64(0x5EED);
+        let all = poisson_times(&mut rng, 60);
+        for &cap in &[1usize, 3, 7, usize::MAX] {
+            let mut heap_ms: Vec<Mock> = all.iter().map(|t| Mock::new(t.clone())).collect();
+            let heap_log = run(&mut heap_ms, cap);
+            let mut lin_ms: Vec<Mock> = all.iter().map(|t| Mock::new(t.clone())).collect();
+            let mut lin_log = Vec::new();
+            drive_linear_ref(&mut lin_ms, cap, Mock::next_time, |i, m| {
+                lin_log.push((i, m.next_time()));
+                Ok(m.step())
+            })
+            .unwrap();
+            assert_eq!(heap_log, lin_log, "cap {cap}: heap diverged from linear scan");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_materialized_and_bounds_residency() {
+        let mut rng = Rng::seed_from_u64(0xABCD);
+        let all = poisson_times(&mut rng, 80);
+        for &cap in &[1usize, 4, 9, usize::MAX] {
+            let mut ms: Vec<Mock> = all.iter().map(|t| Mock::new(t.clone())).collect();
+            let mat_log = run(&mut ms, cap);
+            let src = run_stream(&all, cap);
+            assert_eq!(src.log, mat_log, "cap {cap}: streaming diverged");
+            assert!(src.finished.iter().all(|&f| f), "cap {cap}: unfinished session");
+            assert!(
+                src.peak_live <= cap.min(all.len()),
+                "cap {cap}: {} sessions resident at once",
+                src.peak_live
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_handles_empty_trace() {
+        let times: Vec<Vec<f64>> = Vec::new();
+        let src = run_stream(&times, 4);
+        assert!(src.log.is_empty());
+        assert_eq!(src.peak_live, 0);
     }
 }

@@ -1,6 +1,6 @@
 //! Unified trace server: [`serve`] is the one way to run a request
 //! trace, whatever the strategy — now over an edge *fleet* sharing one
-//! cloud.
+//! cloud, with streaming admission so resident state is O(concurrency).
 //!
 //! # Event model
 //!
@@ -13,22 +13,38 @@
 //!   prefill) → per-token decode steps (per-token edge→cloud hops for
 //!   the PerLLM mid-split) → downlink.
 //!
-//! The scheduler ([`super::scheduler::drive`]) admits sessions FCFS up
-//! to the spec's concurrency cap and always advances the session with
-//! the earliest next event, so device occupancy and link serialization
-//! are charged in virtual-time order across requests and across
-//! *strategies* — a Cloud-only tenant queues behind an MSAO verify
-//! burst exactly as it would on real hardware.
+//! The scheduler ([`super::scheduler::drive_stream`]) admits sessions
+//! FCFS up to the spec's concurrency cap and always advances the
+//! session with the earliest next event (an index min-heap keyed on
+//! `(next_time, request_index)` — O(log active) per step), so device
+//! occupancy and link serialization are charged in virtual-time order
+//! across requests and across *strategies* — a Cloud-only tenant queues
+//! behind an MSAO verify burst exactly as it would on real hardware.
+//!
+//! # Streaming admission
+//!
+//! Sessions are built *lazily*: request `i`'s `AnySession` is
+//! constructed from the spec (item / arrival / policy / edge resolved on
+//! demand) only when an in-flight slot frees for it, and is folded into
+//! its [`ExecRecord`] the moment it finishes. At most
+//! `min(concurrency, n)` sessions are ever resident, so trace length is
+//! bounded by the records buffer alone — 100k+-request traces run in
+//! O(concurrency) session memory. Construction is effect-free, so the
+//! event sequence (and every virtual-cluster charge) is bit-for-bit
+//! identical to materializing the whole trace up front
+//! ([`serve_materialized_ref`], the pre-streaming path kept as the
+//! golden reference).
 //!
 //! # Fleet routing
 //!
 //! Each session is bound to one edge site by the spec's
 //! [`Assign`] strategy: `Pinned`/`RoundRobin` are resolved by request
-//! index, while `LeastLoaded` is resolved by the [`FleetRouter`] at the
-//! session's arrival event from the fleet's monitor estimates
-//! (queue-wait + link beliefs — the fleet-aware router reads beliefs,
-//! not ground truth). A session's probe/draft/uplink/memory land on its
-//! edge; all verify/decode cloud work contends on the one shared cloud
+//! index at admission, while `LeastLoaded` is resolved at the session's
+//! *arrival event* from the fleet's monitor estimates (queue-wait +
+//! link beliefs — the fleet-aware router reads beliefs, not ground
+//! truth, and it reads them at the moment every earlier event has been
+//! charged). A session's probe/draft/uplink/memory land on its edge;
+//! all verify/decode cloud work contends on the one shared cloud
 //! device. Each edge's uplink has its own verify [`Batcher`] window, so
 //! only rounds sharing a link can coalesce into one exchange.
 //!
@@ -46,8 +62,8 @@ use crate::optimizer::ThetaController;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
-use super::policy::{self, Assign, FleetRouter, PolicyKind, TraceSpec};
-use super::scheduler::{self, StepOutcome};
+use super::policy::{self, Assign, PolicyKind, TraceSpec};
+use super::scheduler::{self, SessionSource, StepOutcome};
 use super::session::{Coordinator, Session};
 use super::timeline::VirtualCluster;
 
@@ -127,6 +143,14 @@ impl<'a> AnySession<'a> {
         }
     }
 
+    /// Still waiting at its arrival event (routing may still change).
+    fn is_unstarted(&self) -> bool {
+        match self {
+            AnySession::Msao(s) => s.is_unstarted(),
+            AnySession::Baseline(b) => b.is_unstarted(),
+        }
+    }
+
     fn next_time(&self) -> f64 {
         match self {
             AnySession::Msao(s) => s.next_time(),
@@ -155,17 +179,71 @@ impl<'a> AnySession<'a> {
     }
 }
 
-/// Serve a trace per its [`TraceSpec`]: build the fleet testbed from the
-/// policy's resident-weight profile, spawn one session per request,
-/// route each onto an edge per the spec's assignment strategy, and
-/// drive them event-ordered under the spec's concurrency cap.
-pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+/// Everything one in-flight trace needs, behind the single `&mut` the
+/// streaming driver hands back on every admit/step/finish: the
+/// coordinator (engines + RNG), the fleet testbed, the per-edge verify
+/// batchers, the shared theta controller, and the records buffer
+/// finished sessions fold into.
+struct ServeSource<'s, 'c> {
+    coord: &'c mut Coordinator,
+    spec: &'s TraceSpec,
+    vc: VirtualCluster,
+    batchers: Vec<Batcher>,
+    theta: ThetaController,
+    n_edges: usize,
+    /// `LeastLoaded` routes at the arrival event; static assignments
+    /// are already resolved at admission.
+    route_at_arrival: bool,
+    records: Vec<Option<ExecRecord>>,
+}
+
+impl<'s> SessionSource for ServeSource<'s, '_> {
+    type Session = AnySession<'s>;
+
+    /// Build request `i` lazily from the spec. Static edge assignments
+    /// resolve here (by request index); `LeastLoaded` sessions start on
+    /// a placeholder edge and are re-routed at their arrival event,
+    /// when the monitors reflect the traffic that actually preceded
+    /// them in virtual time.
+    fn admit(&mut self, i: usize) -> Result<AnySession<'s>> {
+        let edge = self.spec.assign.static_pick(i, self.n_edges).unwrap_or(0);
+        Ok(AnySession::new(
+            self.spec.policy.for_request(i),
+            &self.spec.items[i],
+            self.spec.arrivals[i],
+            edge,
+        ))
+    }
+
+    fn next_time(&self, s: &AnySession<'s>) -> f64 {
+        s.next_time()
+    }
+
+    fn step(&mut self, _i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
+        if self.route_at_arrival && s.is_unstarted() {
+            s.set_edge(policy::least_loaded(&self.vc));
+        }
+        s.step(self.coord, &mut self.vc, &mut self.batchers, &mut self.theta)
+    }
+
+    fn finish(&mut self, i: usize, s: AnySession<'s>) -> Result<()> {
+        self.records[i] = Some(s.into_record());
+        Ok(())
+    }
+}
+
+/// Shared setup for both serve paths: fleet testbed, per-edge verify
+/// batchers, theta controller, concurrency cap.
+fn prepare<'s, 'c>(
+    coord: &'c mut Coordinator,
+    spec: &'s TraceSpec,
+) -> Result<(ServeSource<'s, 'c>, usize)> {
     spec.validate()?;
     let cfg: Config = coord.cfg.clone();
-    let mut vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
+    let vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
     let n_edges = vc.n_edges();
     spec.assign.validate(n_edges)?;
-    let mut batchers: Vec<Batcher> = (0..n_edges)
+    let batchers: Vec<Batcher> = (0..n_edges)
         .map(|_| {
             Batcher::new(
                 cfg.serve.batch_wait_ms,
@@ -174,35 +252,45 @@ pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
             )
         })
         .collect();
-    let mut theta = coord.theta();
+    let theta = coord.theta();
     let concurrency = spec.effective_concurrency(&cfg);
-    let router = FleetRouter::new(spec.assign);
+    let n = spec.items.len();
+    Ok((
+        ServeSource {
+            coord,
+            spec,
+            vc,
+            batchers,
+            theta,
+            n_edges,
+            route_at_arrival: matches!(spec.assign, Assign::LeastLoaded),
+            records: (0..n).map(|_| None).collect(),
+        },
+        concurrency,
+    ))
+}
 
-    // Static assignments resolve by request index now; `LeastLoaded`
-    // sessions start on a placeholder edge and are routed at their
-    // arrival event below, when the monitors reflect the traffic that
-    // actually preceded them.
-    let mut sessions: Vec<AnySession> = spec
-        .items
-        .iter()
-        .zip(&spec.arrivals)
+/// Fleet-mean smoothed edge queue wait: each edge's *own* monitor,
+/// queried for its *own* device EMA.
+fn fleet_mean_edge_wait(vc: &VirtualCluster) -> f64 {
+    let n = vc.n_edges().max(1) as f64;
+    vc.edges.iter().enumerate().map(|(id, e)| e.monitor.wait_s(Site::Edge(id))).sum::<f64>() / n
+}
+
+/// Fleet-mean smoothed cloud queue wait as advertised to the edges.
+fn fleet_mean_cloud_wait(vc: &VirtualCluster) -> f64 {
+    let n = vc.n_edges().max(1) as f64;
+    vc.edges.iter().map(|e| e.monitor.wait_s(Site::Cloud)).sum::<f64>() / n
+}
+
+/// Fold the finished testbed + records into the end-of-trace view.
+fn collect(src: ServeSource<'_, '_>) -> TraceResult {
+    let ServeSource { vc, batchers, records, .. } = src;
+    let records: Vec<ExecRecord> = records
+        .into_iter()
         .enumerate()
-        .map(|(i, (item, &arr))| {
-            let edge = spec.assign.static_pick(i, n_edges).unwrap_or(0);
-            AnySession::new(spec.policy.for_request(i), item, arr, edge)
-        })
+        .map(|(i, r)| r.unwrap_or_else(|| panic!("session {i} never finished")))
         .collect();
-    let mut routed: Vec<bool> =
-        vec![!matches!(spec.assign, Assign::LeastLoaded); sessions.len()];
-    scheduler::drive(&mut sessions, concurrency, AnySession::next_time, |i, s| {
-        if !routed[i] {
-            s.set_edge(router.pick(i, &vc));
-            routed[i] = true;
-        }
-        s.step(coord, &mut vc, &mut batchers, &mut theta)
-    })?;
-    let records: Vec<ExecRecord> = sessions.into_iter().map(AnySession::into_record).collect();
-
     let (piggy, windows) = batchers
         .iter()
         .fold((0u64, 0u64), |(p, w), b| (p + b.piggybacked, w + b.windows_opened));
@@ -220,19 +308,94 @@ pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
             edge_wait_s: e.monitor.wait_s(Site::Edge(id)),
         })
         .collect();
-    let edge_wait_s =
-        vc.edges.iter().map(|e| e.monitor.wait_s(Site::Edge(0))).sum::<f64>() / n_edges as f64;
-    let cloud_wait_s =
-        vc.edges.iter().map(|e| e.monitor.wait_s(Site::Cloud)).sum::<f64>() / n_edges as f64;
 
-    Ok(TraceResult {
+    TraceResult {
         uplink_bytes: vc.uplink_bytes(),
         downlink_bytes: vc.downlink_bytes(),
         batch_amortization: amortization,
         net_estimate: vc.edges[0].monitor.estimate(),
-        edge_wait_s,
-        cloud_wait_s,
+        edge_wait_s: fleet_mean_edge_wait(&vc),
+        cloud_wait_s: fleet_mean_cloud_wait(&vc),
         per_edge,
         records,
-    })
+    }
+}
+
+/// Serve a trace per its [`TraceSpec`]: build the fleet testbed from the
+/// policy's resident-weight profile, stream one session per request
+/// through the event-heap scheduler (built lazily at admission, folded
+/// into its record on completion), route each onto an edge per the
+/// spec's assignment strategy, and charge everything event-ordered
+/// under the spec's concurrency cap.
+pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+    let (mut src, concurrency) = prepare(coord, spec)?;
+    scheduler::drive_stream(spec.items.len(), concurrency, &mut src)?;
+    Ok(collect(src))
+}
+
+/// Pre-streaming reference path: materialize every session up front and
+/// drive the trace with the linear-scan scheduler — exactly what
+/// [`serve`] did before the heap + streaming-admission overhaul. Kept
+/// (like the baselines' straight-line `serve` functions) as the golden
+/// the streaming path is pinned against bit for bit, and as the
+/// baseline the e2e scaling bench measures against. O(trace) resident
+/// sessions, O(active) per event — do not use for large traces.
+pub fn serve_materialized_ref(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+    let (mut src, concurrency) = prepare(coord, spec)?;
+    let mut sessions: Vec<AnySession> = (0..spec.items.len())
+        .map(|i| src.admit(i))
+        .collect::<Result<_>>()?;
+    scheduler::drive_linear_ref(&mut sessions, concurrency, AnySession::next_time, |i, s| {
+        src.step(i, s)
+    })?;
+    for (i, s) in sessions.into_iter().enumerate() {
+        src.finish(i, s)?;
+    }
+    Ok(collect(src))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, EdgeSiteCfg};
+
+    fn fleet(k: usize) -> VirtualCluster {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.fleet = vec![
+            EdgeSiteCfg {
+                device: cfg.edge,
+                network: cfg.network,
+                dynamics: cfg.dynamics.clone(),
+            };
+            k
+        ];
+        VirtualCluster::new(&cfg, 1)
+    }
+
+    #[test]
+    fn fleet_mean_edge_wait_reflects_a_loaded_nonzero_edge() {
+        // Regression: the fleet mean must read each edge's own monitor
+        // (a load on edge 1 shows up in the mean), not only edge 0's
+        // belief.
+        let mut vc = fleet(3);
+        // Edge 1's device queues: two back-to-back ops, the second
+        // waits 1.0 s. Edges 0 and 2 stay idle.
+        vc.exec(Site::Edge(1), 0.0, 1.0, 1e9);
+        vc.exec(Site::Edge(1), 0.0, 0.5, 1e9);
+        let loaded = vc.edges[1].monitor.wait_s(Site::Edge(1));
+        assert!(loaded > 0.0, "edge 1 monitor saw no wait");
+        let mean = fleet_mean_edge_wait(&vc);
+        assert!(
+            (mean - loaded / 3.0).abs() < 1e-12,
+            "fleet mean {mean} must be the loaded edge's {loaded} averaged over 3 edges"
+        );
+        // Cloud waits are advertised fleet-wide: every edge hears the
+        // same value, so the mean equals any single belief.
+        vc.exec(Site::Cloud, 0.0, 1.0, 1e9);
+        vc.exec(Site::Cloud, 0.0, 0.5, 1e9);
+        let cw = fleet_mean_cloud_wait(&vc);
+        assert_eq!(cw.to_bits(), vc.edges[0].monitor.wait_s(Site::Cloud).to_bits());
+        assert!(cw > 0.0);
+    }
 }

@@ -178,6 +178,15 @@ impl<'a> Session<'a> {
         self.rec.edge_id = edge;
     }
 
+    /// Whether the session has not yet taken its first step (it is
+    /// still waiting at its arrival event). The trace server uses this
+    /// to resolve `LeastLoaded` routing at the arrival event — the
+    /// moment the monitors reflect exactly the traffic that preceded
+    /// this session in virtual time.
+    pub fn is_unstarted(&self) -> bool {
+        matches!(self.phase, Phase::Probe)
+    }
+
     /// Virtual time of this session's next event.
     pub fn next_time(&self) -> f64 {
         match &self.phase {

@@ -36,26 +36,22 @@ impl BayesOpt {
     }
 
     /// Next point to evaluate: random (space-filling) during seeding, then
-    /// EI-argmax over a fresh random candidate set.
+    /// EI-argmax over a fresh random candidate set. EI works in raw
+    /// units against the raw incumbent (equivalent ranking to the
+    /// standardized form); the incumbent scan is hoisted out of the
+    /// candidate loop — it is O(observations) and the candidates all
+    /// share it.
     pub fn suggest(&mut self) -> Vec<f64> {
         if self.gp.len() < self.n_seed {
             return (0..self.dim).map(|_| self.rng.f64()).collect();
         }
-        let best = self.gp.best_standardized();
+        let raw_best = self.gp.best().map(|(_, y)| y).unwrap_or(0.0);
         let mut best_x: Vec<f64> = (0..self.dim).map(|_| self.rng.f64()).collect();
         let mut best_ei = f64::NEG_INFINITY;
         for _ in 0..self.n_candidates {
             let x: Vec<f64> = (0..self.dim).map(|_| self.rng.f64()).collect();
             let (raw_mean, raw_var) = self.gp.predict(&x);
-            // Standardize for EI (gp returns raw units).
-            let (m, s) = (raw_mean, raw_var);
-            let _ = (m, s);
-            let ei = {
-                // Work in raw units with raw best: equivalent ranking.
-                let raw_best = self.gp.best().map(|(_, y)| y).unwrap_or(0.0);
-                let _ = best;
-                expected_improvement(raw_mean, raw_var, raw_best, self.xi)
-            };
+            let ei = expected_improvement(raw_mean, raw_var, raw_best, self.xi);
             if ei > best_ei {
                 best_ei = ei;
                 best_x = x;

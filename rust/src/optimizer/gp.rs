@@ -5,6 +5,27 @@
 //! mean and variance. Outputs are standardized internally so the EI
 //! acquisition is scale-free. With the GP-UCB/EI machinery the coarse
 //! phase achieves the O(sqrt(T log T)) regret the paper cites (Eq. 15).
+//!
+//! # Incremental fit
+//!
+//! [`Gp::observe`] is O(n²), not O(n³): the kernel matrix is cached in
+//! packed lower-triangular form and *extended by one row* per
+//! observation, and that row is appended to the existing Cholesky
+//! factor ([`linalg::cholesky_packed_append`] — row-by-row Cholesky
+//! computes row `n` from rows `< n` only, so the appended factor is
+//! bitwise identical to refactoring from scratch). Only `alpha` is
+//! re-solved in full each time, because re-standardizing the outputs
+//! changes the right-hand side. The jitter level is sticky: a pivot
+//! failure escalates it (1e-8, x10, ...) and triggers one full packed
+//! refactorization, exactly the ladder the old per-observation refit
+//! climbed — the smallest jitter that factors K_n never decreases in n
+//! (a failing leading minor keeps failing), so the sticky level lands
+//! on the same rung bitwise while skipping the doomed retries.
+//! [`Gp::predict`] reuses interior scratch buffers instead of
+//! allocating `kx` and the solve vector per call.
+
+use std::cell::RefCell;
+use std::cmp::Ordering;
 
 use anyhow::Result;
 
@@ -37,17 +58,31 @@ impl Matern52 {
     }
 }
 
+/// Reusable buffers for [`Gp::predict`] (k(x, X) and the forward-solve
+/// output) — interior mutability keeps `predict(&self)` on the public
+/// API while killing its two per-call allocations.
+#[derive(Debug, Clone, Default)]
+struct PredictScratch {
+    kx: Vec<f64>,
+    v: Vec<f64>,
+}
+
 #[derive(Debug, Clone)]
 pub struct Gp {
     kernel: Matern52,
     noise: f64,
     xs: Vec<Vec<f64>>,
     ys_raw: Vec<f64>,
-    // Fitted state.
+    // Fitted state. `kmat` is the packed lower-triangular kernel matrix
+    // (noise on the diagonal, jitter NOT baked in); `chol` is its
+    // packed Cholesky factor at jitter level `jitter`.
+    kmat: Vec<f64>,
     chol: Vec<f64>,
+    jitter: f64,
     alpha: Vec<f64>,
     y_mean: f64,
     y_std: f64,
+    scratch: RefCell<PredictScratch>,
 }
 
 impl Gp {
@@ -57,10 +92,13 @@ impl Gp {
             noise,
             xs: Vec::new(),
             ys_raw: Vec::new(),
+            kmat: Vec::new(),
             chol: Vec::new(),
+            jitter: 0.0,
             alpha: Vec::new(),
             y_mean: 0.0,
             y_std: 1.0,
+            scratch: RefCell::new(PredictScratch::default()),
         }
     }
 
@@ -72,23 +110,57 @@ impl Gp {
         self.xs.is_empty()
     }
 
-    /// Best (minimum) observed raw value.
+    /// Best (minimum) observed raw value. NaN observations of *either
+    /// sign* lose every comparison (`nan_last` — plain `total_cmp`
+    /// would rank a sign-bit-set NaN, the x86-64 default QNaN from ops
+    /// like 0.0/0.0, below -inf), so a poisoned objective sample can
+    /// never become the incumbent; an all-NaN history still returns
+    /// one rather than panicking.
     pub fn best(&self) -> Option<(&[f64], f64)> {
         let (i, y) = self
             .ys_raw
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())?;
+            .min_by(|a, b| nan_last(*a.1, *b.1))?;
         Some((&self.xs[i], *y))
     }
 
+    /// Add one observation and refit incrementally: extend the cached
+    /// kernel matrix by one packed row, append that row to the Cholesky
+    /// factor, and re-solve `alpha` against the re-standardized outputs
+    /// — O(n²) per observation.
     pub fn observe(&mut self, x: Vec<f64>, y: f64) -> Result<()> {
         self.xs.push(x);
         self.ys_raw.push(y);
-        self.refit()
-    }
+        let i = self.xs.len() - 1;
+        for j in 0..i {
+            self.kmat.push(self.kernel.eval(&self.xs[i], &self.xs[j]));
+        }
+        self.kmat.push(self.kernel.eval(&self.xs[i], &self.xs[i]) + self.noise);
 
-    fn refit(&mut self) -> Result<()> {
+        // Fast path: append the new row at the current jitter level
+        // (the factor of the leading block is already at that level).
+        // On a pivot failure, escalate and refactor in full until a
+        // level holds — the rung ladder of the old refit; see the
+        // module docs for why the sticky level reproduces it bitwise.
+        let row_start = linalg::tri(i, 0);
+        let row = &self.kmat[row_start..row_start + i + 1];
+        if linalg::cholesky_packed_append(&mut self.chol, i, row, self.jitter).is_err() {
+            loop {
+                self.jitter = if self.jitter == 0.0 { 1e-8 } else { self.jitter * 10.0 };
+                match linalg::cholesky_packed(&self.kmat, i + 1, self.jitter) {
+                    Ok(l) => {
+                        self.chol = l;
+                        break;
+                    }
+                    Err(e) if self.jitter >= 1.0 => return Err(e),
+                    Err(_) => {}
+                }
+            }
+        }
+
+        // Outputs are re-standardized over ALL observations, so alpha's
+        // right-hand side changes every time: one O(n²) pair of solves.
         let n = self.xs.len();
         self.y_mean = self.ys_raw.iter().sum::<f64>() / n as f64;
         self.y_std = (self
@@ -100,35 +172,7 @@ impl Gp {
             .sqrt()
             .max(1e-9);
         let ys: Vec<f64> = self.ys_raw.iter().map(|y| (y - self.y_mean) / self.y_std).collect();
-
-        let mut k = vec![0.0; n * n];
-        for i in 0..n {
-            for j in 0..=i {
-                let v = self.kernel.eval(&self.xs[i], &self.xs[j]);
-                k[i * n + j] = v;
-                k[j * n + i] = v;
-            }
-            k[i * n + i] += self.noise;
-        }
-        // Escalate jitter if the factorization struggles.
-        let mut jitter = 0.0;
-        let chol = loop {
-            let mut kj = k.clone();
-            if jitter > 0.0 {
-                for i in 0..n {
-                    kj[i * n + i] += jitter;
-                }
-            }
-            match linalg::cholesky(&kj, n) {
-                Ok(l) => break l,
-                Err(_) if jitter < 1.0 => {
-                    jitter = if jitter == 0.0 { 1e-8 } else { jitter * 10.0 };
-                }
-                Err(e) => return Err(e),
-            }
-        };
-        self.alpha = linalg::chol_solve(&chol, n, &ys);
-        self.chol = chol;
+        self.alpha = linalg::chol_solve_packed(&self.chol, n, &ys);
         Ok(())
     }
 
@@ -138,22 +182,29 @@ impl Gp {
         if n == 0 {
             return (0.0, self.kernel.sigma2);
         }
-        let kx: Vec<f64> = self.xs.iter().map(|xi| self.kernel.eval(xi, x)).collect();
+        let mut sc = self.scratch.borrow_mut();
+        let PredictScratch { kx, v } = &mut *sc;
+        kx.clear();
+        kx.extend(self.xs.iter().map(|xi| self.kernel.eval(xi, x)));
         let mean_std: f64 = kx.iter().zip(&self.alpha).map(|(a, b)| a * b).sum();
-        let v = linalg::solve_lower(&self.chol, n, &kx);
+        linalg::solve_lower_packed_into(&self.chol, n, kx, v);
         let var_std = (self.kernel.eval(x, x) - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
         (
             mean_std * self.y_std + self.y_mean,
             var_std * self.y_std * self.y_std,
         )
     }
+}
 
-    /// Best observed value standardized (for EI).
-    pub fn best_standardized(&self) -> f64 {
-        self.ys_raw
-            .iter()
-            .map(|y| (y - self.y_mean) / self.y_std)
-            .fold(f64::INFINITY, f64::min)
+/// Total order placing every NaN — whatever its sign bit — above every
+/// real value, so a min-scan can never elect one; real values compare
+/// by `total_cmp`, and ties keep the first occurrence.
+fn nan_last(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
     }
 }
 
@@ -214,6 +265,27 @@ mod tests {
     }
 
     #[test]
+    fn best_is_nan_safe() {
+        // A penalized/poisoned objective sample must neither panic the
+        // incumbent scan (the old partial_cmp().unwrap() did) nor win
+        // it — including a sign-bit-set NaN, the default QNaN x86-64
+        // float ops actually produce (raw total_cmp would rank it
+        // below -inf and elect it).
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        gp.observe(vec![0.1], f64::NAN).unwrap();
+        gp.observe(vec![0.3], -f64::NAN).unwrap();
+        gp.observe(vec![0.5], 2.0).unwrap();
+        gp.observe(vec![0.9], 7.0).unwrap();
+        let (x, y) = gp.best().unwrap();
+        assert_eq!(y, 2.0);
+        assert_eq!(x, &[0.5]);
+        // All-NaN degenerates to a NaN incumbent, but still no panic.
+        let mut all_nan = Gp::new(Matern52::default(), 1e-6);
+        all_nan.observe(vec![0.3], f64::NAN).unwrap();
+        assert!(all_nan.best().unwrap().1.is_nan());
+    }
+
+    #[test]
     fn survives_duplicate_points() {
         let mut gp = Gp::new(Matern52::default(), 1e-6);
         gp.observe(vec![0.5], 1.0).unwrap();
@@ -221,5 +293,113 @@ mod tests {
         gp.observe(vec![0.5], 1.02).unwrap();
         let (m, _) = gp.predict(&[0.5]);
         assert!((m - 1.0).abs() < 0.1);
+    }
+
+    /// The old per-observation full refit (escalating jitter from zero
+    /// each time, full-layout Cholesky), as an independent reference.
+    fn full_refit_reference(
+        kernel: &Matern52,
+        noise: f64,
+        xs: &[Vec<f64>],
+        ys_raw: &[f64],
+    ) -> (Vec<f64>, Vec<f64>) {
+        let n = xs.len();
+        let y_mean = ys_raw.iter().sum::<f64>() / n as f64;
+        let y_std = (ys_raw.iter().map(|y| (y - y_mean).powi(2)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let ys: Vec<f64> = ys_raw.iter().map(|y| (y - y_mean) / y_std).collect();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = kernel.eval(&xs[i], &xs[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += noise;
+        }
+        let mut jitter = 0.0;
+        let chol = loop {
+            let mut kj = k.clone();
+            if jitter > 0.0 {
+                for i in 0..n {
+                    kj[i * n + i] += jitter;
+                }
+            }
+            match linalg::cholesky(&kj, n) {
+                Ok(l) => break l,
+                Err(_) if jitter < 1.0 => {
+                    jitter = if jitter == 0.0 { 1e-8 } else { jitter * 10.0 };
+                }
+                Err(e) => panic!("reference refit failed: {e}"),
+            }
+        };
+        let alpha = linalg::chol_solve(&chol, n, &ys);
+        (chol, alpha)
+    }
+
+    #[test]
+    fn incremental_fit_is_bitwise_identical_to_full_refit() {
+        // The equivalence the O(n²) observe path is pinned to: after
+        // every observation — including ones that force the jitter
+        // ladder — the packed factor and alpha must equal the old
+        // full-refit's, to the bit. Zero noise + duplicate points make
+        // the kernel matrix exactly singular, so the ladder genuinely
+        // escalates mid-sequence (diagonal noise alone keeps duplicates
+        // positive definite and would leave the ladder untested).
+        let mut gp = Gp::new(Matern52::default(), 0.0);
+        // Leading with the duplicate pair pins the escalation: row 1
+        // duplicates row 0, so its pivot is exactly 1.0 - 1.0 = 0.0
+        // (k(x,x) is exactly 1.0) — no reliance on marginal rounding.
+        let pts: Vec<(f64, f64)> = vec![
+            (0.50, 2.0),
+            (0.50, 2.0), // exact duplicate of row 0: pivot 0, jitter escalates
+            (0.10, 5.0),
+            (0.90, 7.0),
+            (0.50, 2.01),
+            (0.31, -1.0),
+            (0.31, -1.0),
+            (0.77, 0.25),
+        ];
+        for (k, &(x, y)) in pts.iter().enumerate() {
+            gp.observe(vec![x, 1.0 - x], y).unwrap();
+            let n = gp.len();
+            let (chol_ref, alpha_ref) =
+                full_refit_reference(&gp.kernel, gp.noise, &gp.xs, &gp.ys_raw);
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        gp.chol[linalg::tri(i, j)].to_bits(),
+                        chol_ref[i * n + j].to_bits(),
+                        "after obs {k}: chol ({i},{j})"
+                    );
+                }
+            }
+            for i in 0..n {
+                assert_eq!(
+                    gp.alpha[i].to_bits(),
+                    alpha_ref[i].to_bits(),
+                    "after obs {k}: alpha[{i}]"
+                );
+            }
+        }
+        assert!(gp.jitter > 0.0, "duplicates never forced the jitter ladder");
+    }
+
+    #[test]
+    fn predict_scratch_reuse_is_transparent() {
+        // Same query twice (and interleaved with another) returns
+        // identical results — the scratch buffers carry no state across
+        // calls.
+        let mut gp = Gp::new(Matern52::default(), 1e-6);
+        for i in 0..6 {
+            let x = i as f64 / 5.0;
+            gp.observe(vec![x], (x - 0.4).powi(2)).unwrap();
+        }
+        let a = gp.predict(&[0.33]);
+        let _ = gp.predict(&[0.91]);
+        let b = gp.predict(&[0.33]);
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
     }
 }

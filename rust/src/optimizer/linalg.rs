@@ -1,6 +1,20 @@
 //! Dense linear algebra for the GP (substrate): Cholesky factorization
-//! and triangular solves over row-major `Vec<f64>` matrices. Problem
-//! sizes are tiny (BO with <=50 observations), so simplicity wins.
+//! and triangular solves, in two layouts.
+//!
+//! * Full row-major `n x n` matrices ([`cholesky`], [`solve_lower`],
+//!   [`solve_upper_t`], [`chol_solve`]) — the original routines, kept as
+//!   the independent reference the packed path is pinned against.
+//! * Packed row-major *lower-triangular* storage (`tri(i, j)`
+//!   indexing): row `i` holds exactly `i + 1` entries, so a factor can
+//!   grow by **appending one row** without restructuring —
+//!   [`cholesky_packed_append`] is the incremental kernel behind
+//!   `Gp::observe`'s O(n²) refit. Row-by-row Cholesky computes row `i`
+//!   from rows `< i` only, in the same operation order as the full
+//!   factorization, so an append-built factor is *bitwise identical* to
+//!   factoring from scratch.
+//!
+//! Problem sizes are tiny (BO with <= 50 observations), so simplicity
+//! wins over blocking/SIMD.
 
 use anyhow::{bail, Result};
 
@@ -60,9 +74,104 @@ pub fn chol_solve(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
     solve_upper_t(l, n, &solve_lower(l, n, b))
 }
 
+// ---------------- packed lower-triangular layout -----------------------
+
+/// Index of entry `(i, j)` (`j <= i`) in packed row-major
+/// lower-triangular storage: rows are laid out back to back, row `i`
+/// holding its `i + 1` lower-triangle entries.
+#[inline]
+pub fn tri(i: usize, j: usize) -> usize {
+    debug_assert!(j <= i);
+    i * (i + 1) / 2 + j
+}
+
+/// Append row `n` to a packed Cholesky factor `l` currently holding the
+/// factor of the leading `n x n` block. `row` is the matrix's new
+/// packed row (`n + 1` entries, diagonal noise already included);
+/// `jitter` is added to the diagonal term on the fly — no matrix copy.
+///
+/// The arithmetic (operation order included) is exactly the full
+/// [`cholesky`]'s row `n`, so append-extending a factor is bitwise
+/// identical to refactoring from scratch at the same jitter. On a
+/// non-positive pivot the factor is left untouched and an error
+/// returned, so the caller can escalate jitter and retry.
+pub fn cholesky_packed_append(l: &mut Vec<f64>, n: usize, row: &[f64], jitter: f64) -> Result<()> {
+    debug_assert_eq!(l.len(), n * (n + 1) / 2);
+    debug_assert_eq!(row.len(), n + 1);
+    let base = l.len();
+    for j in 0..=n {
+        let mut sum = row[j] + if j == n { jitter } else { 0.0 };
+        for k in 0..j {
+            sum -= l[base + k] * l[tri(j, k)];
+        }
+        if j == n {
+            if sum <= 0.0 {
+                l.truncate(base);
+                bail!("matrix not positive definite at pivot {n} (sum={sum})");
+            }
+            l.push(sum.sqrt());
+        } else {
+            l.push(sum / l[tri(j, j)]);
+        }
+    }
+    Ok(())
+}
+
+/// Packed Cholesky of the packed lower-triangular matrix `k` (diagonal
+/// noise included; `jitter` added to every diagonal on the fly) — just
+/// [`cholesky_packed_append`] row by row, i.e. exactly the incremental
+/// path replayed from scratch.
+pub fn cholesky_packed(k: &[f64], n: usize, jitter: f64) -> Result<Vec<f64>> {
+    debug_assert_eq!(k.len(), n * (n + 1) / 2);
+    let mut l = Vec::with_capacity(k.len());
+    for i in 0..n {
+        let start = tri(i, 0);
+        cholesky_packed_append(&mut l, i, &k[start..start + i + 1], jitter)?;
+    }
+    Ok(l)
+}
+
+/// Forward substitution L y = b on a packed factor, writing into a
+/// caller-owned scratch vector (no per-call allocation).
+pub fn solve_lower_packed_into(l: &[f64], n: usize, b: &[f64], y: &mut Vec<f64>) {
+    y.clear();
+    y.resize(n, 0.0);
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[tri(i, k)] * y[k];
+        }
+        y[i] = sum / l[tri(i, i)];
+    }
+}
+
+/// Backward substitution L^T x = y on a packed factor, writing into a
+/// caller-owned scratch vector.
+pub fn solve_upper_t_packed_into(l: &[f64], n: usize, y: &[f64], x: &mut Vec<f64>) {
+    x.clear();
+    x.resize(n, 0.0);
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[tri(k, i)] * x[k];
+        }
+        x[i] = sum / l[tri(i, i)];
+    }
+}
+
+/// Solve A x = b given the packed Cholesky factor L of A.
+pub fn chol_solve_packed(l: &[f64], n: usize, b: &[f64]) -> Vec<f64> {
+    let mut y = Vec::new();
+    let mut x = Vec::new();
+    solve_lower_packed_into(l, n, b, &mut y);
+    solve_upper_t_packed_into(l, n, &y, &mut x);
+    x
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn factor_and_solve_3x3() {
@@ -109,6 +218,96 @@ mod tests {
         let x = chol_solve(&l, n, &b);
         for i in 0..n {
             assert!((x[i] - b[i]).abs() < 1e-14);
+        }
+    }
+
+    /// Random SPD matrix in both layouts: full row-major and packed
+    /// lower-triangular.
+    fn random_spd(r: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let b: Vec<f64> = (0..n * n).map(|_| r.normal()).collect();
+        let mut full = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                full[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let mut packed = Vec::with_capacity(n * (n + 1) / 2);
+        for i in 0..n {
+            for j in 0..=i {
+                packed.push(full[i * n + j]);
+            }
+        }
+        (full, packed)
+    }
+
+    #[test]
+    fn packed_factor_and_solves_match_full_layout_bitwise() {
+        // The equivalence that carries the incremental GP: packed
+        // factorization, forward/backward solves, and the append path
+        // must reproduce the full-layout reference to the bit.
+        let mut r = Rng::seed_from_u64(0x11A6);
+        for &n in &[1usize, 2, 3, 5, 8, 13] {
+            let (full, packed) = random_spd(&mut r, n);
+            let lf = cholesky(&full, n).unwrap();
+            let lp = cholesky_packed(&packed, n, 0.0).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        lf[i * n + j].to_bits(),
+                        lp[tri(i, j)].to_bits(),
+                        "n={n}: factor entry ({i},{j})"
+                    );
+                }
+            }
+            // Append-built factor == from-scratch packed factor.
+            let mut la = Vec::new();
+            for i in 0..n {
+                let start = tri(i, 0);
+                cholesky_packed_append(&mut la, i, &packed[start..start + i + 1], 0.0).unwrap();
+            }
+            assert_eq!(la, lp, "n={n}: append path diverged");
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 - 1.5) * 0.7).collect();
+            let xf = chol_solve(&lf, n, &b);
+            let xp = chol_solve_packed(&lp, n, &b);
+            for i in 0..n {
+                assert_eq!(xf[i].to_bits(), xp[i].to_bits(), "n={n}: solve entry {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_append_rejects_bad_pivot_and_rolls_back() {
+        // 2x2 with an off-diagonal too large for SPD: row 1 must fail
+        // and leave the row-0 factor intact for a jittered retry.
+        let mut l = Vec::new();
+        cholesky_packed_append(&mut l, 0, &[1.0], 0.0).unwrap();
+        let saved = l.clone();
+        assert!(cholesky_packed_append(&mut l, 1, &[2.0, 1.0], 0.0).is_err());
+        assert_eq!(l, saved, "failed append must not leave partial rows");
+        // A large-enough jitter rescues the pivot.
+        cholesky_packed_append(&mut l, 1, &[2.0, 1.0], 4.0).unwrap();
+        assert_eq!(l.len(), 3);
+    }
+
+    #[test]
+    fn packed_jitter_matches_prejittered_full_factor() {
+        let mut r = Rng::seed_from_u64(0x7133);
+        let n = 6;
+        let (mut full, packed) = random_spd(&mut r, n);
+        let jitter = 1e-6;
+        for i in 0..n {
+            full[i * n + i] += jitter;
+        }
+        let lf = cholesky(&full, n).unwrap();
+        let lp = cholesky_packed(&packed, n, jitter).unwrap();
+        for i in 0..n {
+            for j in 0..=i {
+                assert_eq!(lf[i * n + j].to_bits(), lp[tri(i, j)].to_bits(), "({i},{j})");
+            }
         }
     }
 }

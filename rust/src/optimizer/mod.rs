@@ -2,6 +2,13 @@
 //! algorithm (Alg. 1): Bayesian optimization (GP + Matérn 5/2 + EI) for
 //! the coarse per-request phase, and the EMA confidence-threshold
 //! controller for the fine per-step phase.
+//!
+//! The BO loop runs once per request on the serving hot path
+//! (`planner::plan`), so the GP fit is engineered for incremental cost:
+//! `Gp::observe` extends a cached packed kernel matrix and its Cholesky
+//! factor by one row (O(n²) per observation, bitwise identical to a
+//! full O(n³) refit — see [`gp`] and [`linalg`]), and `Gp::predict`
+//! reuses scratch buffers instead of allocating per call.
 
 pub mod acquisition;
 pub mod bayesopt;

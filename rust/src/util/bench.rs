@@ -3,9 +3,16 @@
 //! `bench(name, iters, f)` warms up, measures wall-clock per iteration,
 //! and prints mean / p50 / p99 in criterion-like format so `cargo bench`
 //! output stays diffable. Returns the stats for programmatic use.
+//!
+//! [`BenchJson`] is the machine-readable side: benches accumulate
+//! sections of JSON rows and write one pinned-baseline file (e.g.
+//! `BENCH_serving.json` from the serving scaling bench) so future PRs
+//! can diff perf trajectories instead of eyeballing stdout. The format
+//! is documented in the README's "Performance & scaling" section.
 
 use std::time::Instant;
 
+use crate::util::json::{self, Value};
 use crate::util::stats::{mean, percentile};
 
 #[derive(Debug, Clone)]
@@ -27,6 +34,17 @@ impl BenchStats {
             fmt_s(self.p99_s),
             self.iters
         );
+    }
+
+    /// JSON row: `{"name", "iters", "mean_s", "p50_s", "p99_s"}`.
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_s", json::num(self.mean_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("p99_s", json::num(self.p99_s)),
+        ])
     }
 }
 
@@ -73,8 +91,80 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchStats {
     stats
 }
 
+/// Accumulator for a bench binary's machine-readable output: named
+/// sections, each an array of JSON rows, written as one object
+/// (`{"schema": ..., "<section>": [...], ...}`) at the end of the run.
+#[derive(Debug)]
+pub struct BenchJson {
+    schema: String,
+    sections: Vec<(String, Vec<Value>)>,
+}
+
+impl BenchJson {
+    /// `schema` names the format (versioned, e.g. `msao-bench-serving/1`)
+    /// so downstream tooling can reject rows it does not understand.
+    pub fn new(schema: &str) -> Self {
+        BenchJson { schema: schema.to_string(), sections: Vec::new() }
+    }
+
+    /// Append one row to `section` (created on first use, order kept).
+    pub fn push(&mut self, section: &str, row: Value) {
+        match self.sections.iter_mut().find(|(name, _)| name == section) {
+            Some((_, rows)) => rows.push(row),
+            None => self.sections.push((section.to_string(), vec![row])),
+        }
+    }
+
+    /// The accumulated document.
+    pub fn to_value(&self) -> Value {
+        let mut pairs = vec![("schema", json::s(&self.schema))];
+        for (name, rows) in &self.sections {
+            pairs.push((name.as_str(), json::arr(rows.clone())));
+        }
+        json::obj(pairs)
+    }
+
+    /// Write the document to `path` (pretty is overkill: one line of
+    /// valid JSON diffs fine and parses everywhere).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_value().to_string())?;
+        println!("wrote {path}");
+        Ok(())
+    }
+}
+
 /// Prevent the optimizer from discarding a value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_accumulates_sections_and_roundtrips() {
+        let mut b = BenchJson::new("msao-bench-test/1");
+        b.push("grid", json::obj(vec![("n", json::num(10.0))]));
+        b.push("grid", json::obj(vec![("n", json::num(20.0))]));
+        b.push(
+            "gp",
+            BenchStats {
+                name: "observe".into(),
+                iters: 5,
+                mean_s: 1e-3,
+                p50_s: 1e-3,
+                p99_s: 2e-3,
+            }
+            .to_json(),
+        );
+        let v = b.to_value();
+        let re = Value::parse(&v.to_string()).unwrap();
+        assert_eq!(re.req("schema").unwrap().as_str().unwrap(), "msao-bench-test/1");
+        assert_eq!(re.req("grid").unwrap().as_arr().unwrap().len(), 2);
+        let gp = re.req("gp").unwrap().as_arr().unwrap();
+        assert_eq!(gp[0].req("name").unwrap().as_str().unwrap(), "observe");
+        assert_eq!(gp[0].req("iters").unwrap().as_usize().unwrap(), 5);
+    }
 }

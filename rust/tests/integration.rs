@@ -11,7 +11,8 @@ use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, Segment};
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
-    serve, testbed, Assign, Batcher, Coordinator, Mode, PolicyKind, TraceSpec,
+    serve, serve_materialized_ref, testbed, Assign, Batcher, Coordinator, Mode, PolicyKind,
+    TraceSpec,
 };
 use msao::metrics::summarize;
 use msao::sparsity::Modality;
@@ -446,6 +447,50 @@ fn assert_records_bitwise_equal(
     assert_eq!(a.flops_cloud.to_bits(), b.flops_cloud.to_bits(), "{what}: flops_cloud");
     assert_eq!(a.mem_serving_gb.to_bits(), b.mem_serving_gb.to_bits(), "{what}: mem_serving");
     assert_eq!(a.p_correct.to_bits(), b.p_correct.to_bits(), "{what}: p_correct");
+}
+
+#[test]
+fn streaming_admission_reproduces_materialized_serve_bit_for_bit() {
+    // The streaming-admission golden: `serve` builds sessions lazily at
+    // their admission slot and folds them into records as they finish;
+    // `serve_materialized_ref` keeps the pre-overhaul path (all
+    // sessions up front, linear-scan scheduler). On the testbed trace
+    // the two must agree on every record — times, bytes, flops,
+    // quality — sequentially AND under the concurrent interleave, for
+    // MSAO and a baseline.
+    require_artifacts!();
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    for policy in [PolicyKind::Msao(Mode::Msao), PolicyKind::CloudOnly] {
+        for conc in [1usize, 8] {
+            let mut gen = Generator::new(31);
+            let n = 6;
+            let items = gen.items(Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, 2.5);
+            let spec = TraceSpec::new(policy.clone())
+                .trace(items, arrivals)
+                .seed(5)
+                .concurrency(conc);
+            let golden = serve_materialized_ref(&mut c, &spec).unwrap();
+            let streamed = serve(&mut c, &spec).unwrap();
+            assert_eq!(streamed.records.len(), n);
+            for (i, (a, b)) in golden.records.iter().zip(&streamed.records).enumerate() {
+                assert_records_bitwise_equal(a, b, &format!("{policy:?} conc {conc} req {i}"));
+            }
+            assert_eq!(golden.uplink_bytes, streamed.uplink_bytes, "{policy:?}: uplink");
+            assert_eq!(golden.downlink_bytes, streamed.downlink_bytes, "{policy:?}: downlink");
+            assert_eq!(
+                golden.batch_amortization.to_bits(),
+                streamed.batch_amortization.to_bits(),
+                "{policy:?} conc {conc}: amortization"
+            );
+            assert_eq!(
+                golden.edge_wait_s.to_bits(),
+                streamed.edge_wait_s.to_bits(),
+                "{policy:?} conc {conc}: edge wait"
+            );
+        }
+    }
 }
 
 #[test]

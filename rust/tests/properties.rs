@@ -6,6 +6,9 @@ use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
 use msao::config::{
     Config, DeviceCfg, EdgeSiteCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment,
 };
+use msao::coordinator::scheduler::{
+    drive, drive_linear_ref, drive_stream, SessionSource, StepOutcome,
+};
 use msao::coordinator::{edge_seed, least_loaded, Batcher, Site, VirtualCluster};
 use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
 use msao::sparsity::{self, MasInputs, Modality};
@@ -395,6 +398,126 @@ fn prop_exec_time_monotone_in_work() {
     }
 }
 
+// --- scheduler -----------------------------------------------------------------
+
+/// Mock session for scheduler equivalence: fixed event times, one step
+/// each.
+struct MockSession {
+    times: Vec<f64>,
+    at: usize,
+}
+
+impl MockSession {
+    fn next_time(&self) -> f64 {
+        self.times.get(self.at).copied().unwrap_or(f64::INFINITY)
+    }
+
+    fn step(&mut self) -> StepOutcome {
+        self.at += 1;
+        if self.at == self.times.len() {
+            StepOutcome::Done
+        } else {
+            StepOutcome::Pending
+        }
+    }
+}
+
+/// Random Poisson trace: arrival-sorted sessions, 1-6 events each with
+/// random inter-event gaps (including exact ties across sessions, which
+/// a Poisson grid at coarse quantization produces).
+fn poisson_mock_trace(r: &mut Rng, n: usize) -> Vec<Vec<f64>> {
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += r.exp(6.0);
+            let steps = 1 + r.below(6);
+            let mut times = Vec::with_capacity(steps);
+            let mut tt = t;
+            for _ in 0..steps {
+                times.push(tt);
+                // Coarse quantization manufactures cross-session ties so
+                // the (time, index) tie-break is actually exercised.
+                tt += (r.f64() * 8.0).round() * 0.125;
+            }
+            times
+        })
+        .collect()
+}
+
+struct MockStream<'a> {
+    times: &'a [Vec<f64>],
+    log: Vec<(usize, u64)>,
+    live: usize,
+    peak_live: usize,
+}
+
+impl SessionSource for MockStream<'_> {
+    type Session = MockSession;
+
+    fn admit(&mut self, i: usize) -> anyhow::Result<MockSession> {
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        Ok(MockSession { times: self.times[i].clone(), at: 0 })
+    }
+
+    fn next_time(&self, s: &MockSession) -> f64 {
+        s.next_time()
+    }
+
+    fn step(&mut self, i: usize, s: &mut MockSession) -> anyhow::Result<StepOutcome> {
+        self.log.push((i, s.next_time().to_bits()));
+        Ok(s.step())
+    }
+
+    fn finish(&mut self, _i: usize, _s: MockSession) -> anyhow::Result<()> {
+        self.live -= 1;
+        Ok(())
+    }
+}
+
+#[test]
+fn prop_heap_scheduler_reproduces_linear_scan_step_sequence() {
+    // The heap overhaul's pin: on random Poisson traces, at every cap,
+    // the O(log n) heap loop and the O(n) linear-scan reference must
+    // produce the exact same (session, event-time) step sequence — and
+    // the streaming-admission driver the same again, with session
+    // residency bounded by the cap.
+    for seed in cases(60) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x5C4ED);
+        let n = 5 + r.below(60);
+        let trace = poisson_mock_trace(&mut r, n);
+        for &cap in &[1usize, 4, 8, usize::MAX] {
+            let mk = || -> Vec<MockSession> {
+                trace.iter().map(|t| MockSession { times: t.clone(), at: 0 }).collect()
+            };
+            let mut heap_log: Vec<(usize, u64)> = Vec::new();
+            let mut hs = mk();
+            drive(&mut hs, cap, MockSession::next_time, |i, s| {
+                heap_log.push((i, s.next_time().to_bits()));
+                Ok(s.step())
+            })
+            .unwrap();
+            let mut lin_log: Vec<(usize, u64)> = Vec::new();
+            let mut ls = mk();
+            drive_linear_ref(&mut ls, cap, MockSession::next_time, |i, s| {
+                lin_log.push((i, s.next_time().to_bits()));
+                Ok(s.step())
+            })
+            .unwrap();
+            assert_eq!(heap_log, lin_log, "seed {seed} cap {cap}: heap diverged");
+            let mut src = MockStream { times: &trace, log: Vec::new(), live: 0, peak_live: 0 };
+            drive_stream(n, cap, &mut src).unwrap();
+            assert_eq!(src.log, lin_log, "seed {seed} cap {cap}: streaming diverged");
+            assert!(
+                src.peak_live <= cap.min(n),
+                "seed {seed} cap {cap}: residency {} over cap",
+                src.peak_live
+            );
+            assert!(hs.iter().all(|s| s.at == s.times.len()), "seed {seed}: starved");
+        }
+    }
+}
+
 // --- optimizer -------------------------------------------------------------------
 
 #[test]
@@ -423,6 +546,84 @@ fn prop_cholesky_reconstructs_spd_matrices() {
                 }
                 assert!((s - a[i * n + j]).abs() < 1e-8, "seed {seed} at ({i},{j})");
             }
+        }
+    }
+}
+
+#[test]
+fn prop_gp_incremental_fit_matches_full_refit_posterior() {
+    // The incremental-observe pin, end to end: a GP fitted by packed
+    // row-appends (with the sticky jitter ladder) must predict the
+    // exact same posterior — to the bit — as the old per-observation
+    // full refit, rebuilt here on the full-layout linalg routines.
+    // Duplicate inputs are injected to force jitter escalation.
+    for seed in cases(40) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x6F17);
+        let kernel = Matern52::default();
+        // Zero noise makes duplicate inputs exactly singular, forcing
+        // the jitter ladder; the noisy half covers the common path.
+        let noise = if r.bool(0.5) { 0.0 } else { 1e-6 };
+        let mut gp = Gp::new(Matern52::default(), noise);
+        let n = 3 + r.below(12);
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        for _ in 0..n {
+            let x = if !xs.is_empty() && r.bool(0.3) {
+                xs[r.below(xs.len())].clone() // duplicate -> singular K
+            } else {
+                vec![r.f64(), r.f64()]
+            };
+            let y = r.normal();
+            xs.push(x.clone());
+            ys.push(y);
+            gp.observe(x, y).unwrap();
+        }
+
+        // Old algorithm: full K with noise, jitter escalating from 0,
+        // full-layout Cholesky, alpha against standardized outputs.
+        let y_mean = ys.iter().sum::<f64>() / n as f64;
+        let y_std = (ys.iter().map(|y| (y - y_mean).powi(2)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let ys_std: Vec<f64> = ys.iter().map(|y| (y - y_mean) / y_std).collect();
+        let mut k = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = kernel.eval(&xs[i], &xs[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+            k[i * n + i] += noise;
+        }
+        let mut jitter = 0.0;
+        let chol = loop {
+            let mut kj = k.clone();
+            if jitter > 0.0 {
+                for i in 0..n {
+                    kj[i * n + i] += jitter;
+                }
+            }
+            match linalg::cholesky(&kj, n) {
+                Ok(l) => break l,
+                Err(_) if jitter < 1.0 => {
+                    jitter = if jitter == 0.0 { 1e-8 } else { jitter * 10.0 };
+                }
+                Err(e) => panic!("seed {seed}: reference refit failed: {e}"),
+            }
+        };
+        let alpha = linalg::chol_solve(&chol, n, &ys_std);
+
+        for q in 0..5 {
+            let query = vec![r.f64(), r.f64()];
+            let kx: Vec<f64> = xs.iter().map(|xi| kernel.eval(xi, &query)).collect();
+            let mean_std: f64 = kx.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+            let v = linalg::solve_lower(&chol, n, &kx);
+            let var_std =
+                (kernel.eval(&query, &query) - v.iter().map(|a| a * a).sum::<f64>()).max(1e-12);
+            let want = (mean_std * y_std + y_mean, var_std * y_std * y_std);
+            let got = gp.predict(&query);
+            assert_eq!(got.0.to_bits(), want.0.to_bits(), "seed {seed} q{q}: mean");
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "seed {seed} q{q}: var");
         }
     }
 }
