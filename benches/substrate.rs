@@ -3,7 +3,8 @@
 //! scaling section: the event-heap scheduler with streaming admission
 //! against the linear-scan reference over a trace-length × concurrency
 //! grid of synthetic sessions (pure scheduler cost, no engines needed).
-//! The grid (and an incremental-GP section) is written to
+//! The grid (an incremental-GP section, and the sharded parallel
+//! driver's speedup-vs-workers fleet cell) is written to
 //! `BENCH_serving.json` — the pinned perf-trajectory baseline future
 //! PRs diff against. `MSAO_BENCH_QUICK=1` shrinks the grid for CI
 //! smoke runs.
@@ -14,7 +15,10 @@ use anyhow::Result;
 use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
 use msao::config::{Config, DeviceCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario};
 use msao::coordinator::scheduler::{drive_linear_ref, drive_stream, SessionSource, StepOutcome};
-use msao::coordinator::{least_loaded, Site, VirtualCluster};
+use msao::coordinator::{
+    drive_sharded, least_loaded, CloudDevice, EdgeSite, Sequentialized, ShardedSource, Site,
+    StepClass, VirtualCluster,
+};
 use msao::optimizer::{linalg, Gp, Matern52};
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::bench::{bench, black_box, header, BenchJson};
@@ -151,6 +155,244 @@ fn main() {
     });
 
     serving_scaling_grid().expect("serving scaling grid");
+}
+
+// ---------------- sharded parallel driver -------------------------------
+//
+// The fleet cell for the sharded driver: synthetic sessions doing real
+// timeline arithmetic — per-step `DeviceSim::decode_s` cost-model math
+// charged through `EdgeSite::exec` on the session's home shard (a
+// genuinely Local step), completed by one `CloudDevice::exec` Global
+// step. Every worker count is asserted bitwise identical to the
+// sequential `drive_stream` oracle over the same source; the rows
+// land in the `parallel` section of `BENCH_serving.json`.
+
+/// One bench session: `left_local` decode steps on its home edge, then
+/// one cloud completion step. `hash` folds every (start, end) the
+/// session observes, so any scheduling divergence is caught bitwise.
+struct FleetSess {
+    t: f64,
+    left_local: usize,
+    shard: usize,
+    ctx: f64,
+    hash: u64,
+    steps: u64,
+}
+
+/// A shard the worker threads own: the real [`EdgeSite`] plus the
+/// cost-model inputs its local steps need.
+struct FleetShard {
+    site: EdgeSite,
+    id: usize,
+    model: SimModel,
+}
+
+/// Arrival, local-step count, home shard, context length.
+type FleetParams = Vec<(f64, usize, usize, f64)>;
+
+struct ParallelFleet<'a> {
+    shards: Vec<FleetShard>,
+    cloud: CloudDevice,
+    cloud_model: SimModel,
+    params: &'a FleetParams,
+    done_hash: u64,
+    events: u64,
+}
+
+fn fnv64(mut h: u64, word: u64) -> u64 {
+    for b in word.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ParallelFleet<'_> {
+    fn new(params: &FleetParams, n_edges: usize) -> ParallelFleet<'_> {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.replicate_edges(n_edges).unwrap();
+        let vc = VirtualCluster::new(&cfg, 7);
+        let model = SimModel::qwen25vl_7b();
+        ParallelFleet {
+            shards: vc
+                .edges
+                .into_iter()
+                .enumerate()
+                .map(|(id, site)| FleetShard { site, id, model })
+                .collect(),
+            cloud: vc.cloud,
+            cloud_model: model,
+            params,
+            done_hash: 0,
+            events: 0,
+        }
+    }
+
+    /// Bitwise state digest: every shard cursor + FLOPs ledger, the
+    /// cloud cursor, and the folded per-session event hashes.
+    fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for sh in &self.shards {
+            h = fnv64(h, sh.site.busy_s().to_bits());
+            h = fnv64(h, sh.site.flops.to_bits());
+        }
+        h = fnv64(h, self.cloud.busy_s().to_bits());
+        h = fnv64(h, self.cloud.flops.to_bits());
+        h ^ self.done_hash
+    }
+}
+
+impl ShardedSource for ParallelFleet<'_> {
+    type Session = FleetSess;
+    type Shard = FleetShard;
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn global_reads_shards(&self) -> bool {
+        false
+    }
+
+    fn admit(&mut self, i: usize) -> Result<(FleetSess, Option<usize>)> {
+        let (arrival, left_local, shard, ctx) = self.params[i];
+        let s = FleetSess {
+            t: arrival,
+            left_local,
+            shard,
+            ctx,
+            hash: 0xcbf2_9ce4_8422_2325,
+            steps: 0,
+        };
+        Ok((s, Some(shard)))
+    }
+
+    fn next_time(s: &FleetSess) -> f64 {
+        s.t
+    }
+
+    fn step_class(s: &FleetSess) -> StepClass {
+        if s.left_local > 0 {
+            StepClass::Local
+        } else {
+            StepClass::Global
+        }
+    }
+
+    fn with_shards<R>(&mut self, f: impl FnOnce(&mut [FleetShard]) -> R) -> R {
+        f(&mut self.shards)
+    }
+
+    fn step_local(shard: &mut FleetShard, s: &mut FleetSess) -> Result<StepOutcome> {
+        // Real per-step body: eight decode-cost evaluations at growing
+        // context, charged to this edge's cursor/FLOPs/monitor.
+        let mut secs = 0.0;
+        for j in 0..8 {
+            secs += shard.site.dev.decode_s(&shard.model, s.ctx + j as f64);
+        }
+        let (start, end) = shard.site.exec(s.t, secs, 8.0 * 2.0 * 1.5e9, shard.id);
+        s.hash = fnv64(s.hash, start.to_bits());
+        s.hash = fnv64(s.hash, end.to_bits());
+        s.t = end;
+        s.left_local -= 1;
+        s.steps += 1;
+        Ok(StepOutcome::Pending)
+    }
+
+    fn step_global(&mut self, _i: usize, s: &mut FleetSess) -> Result<StepOutcome> {
+        let secs = self.cloud.dev.decode_s(&self.cloud_model, s.ctx);
+        let (start, end) = self.cloud.exec(s.t, secs, 2.0 * 7e9);
+        s.hash = fnv64(s.hash, start.to_bits());
+        s.hash = fnv64(s.hash, end.to_bits());
+        s.t = end;
+        s.steps += 1;
+        Ok(StepOutcome::Done)
+    }
+
+    fn shard_of(&self, s: &FleetSess) -> usize {
+        s.shard
+    }
+
+    fn finish(&mut self, i: usize, s: FleetSess) -> Result<()> {
+        self.done_hash ^= fnv64(fnv64(s.hash, i as u64), s.t.to_bits());
+        self.events += s.steps;
+        Ok(())
+    }
+}
+
+/// Poisson arrivals, 2-7 local steps, round-robin home shards, varied
+/// context lengths.
+fn fleet_params(n: usize, n_edges: usize, seed: u64) -> FleetParams {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.exp(64.0);
+            (t, 2 + rng.below(6), i % n_edges, 128.0 + (rng.below(512) as f64))
+        })
+        .collect()
+}
+
+/// Run one parallel fleet cell over the workers curve: sequential-driver
+/// oracle first, then `drive_sharded` at each worker count, asserting
+/// every run bitwise identical and reporting the speedup vs workers=1.
+fn parallel_cell(
+    out: &mut BenchJson,
+    cell: &str,
+    n: usize,
+    conc: usize,
+    n_edges: usize,
+    workers_list: &[usize],
+) -> Result<()> {
+    let params = fleet_params(n, n_edges, 0xF1EE7 ^ n as u64);
+    let mut oracle = Sequentialized::new(ParallelFleet::new(&params, n_edges));
+    drive_stream(n, conc, &mut oracle)?;
+    let oracle = oracle.into_inner();
+    let oracle_fp = oracle.fingerprint();
+
+    let mut seq_wall = f64::NAN;
+    for &w in workers_list {
+        let mut fleet = ParallelFleet::new(&params, n_edges);
+        let t0 = Instant::now();
+        drive_sharded(n, conc, w, &mut fleet)?;
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            fleet.fingerprint(),
+            oracle_fp,
+            "cell {cell} workers {w}: sharded run diverged from the sequential driver"
+        );
+        if w == workers_list[0] {
+            seq_wall = wall;
+        }
+        let events = fleet.events;
+        let speedup = seq_wall / wall;
+        println!(
+            "{:<26} {:>8} {:>10.3} {:>12} {:>14.0} {:>8.2} {:>10}",
+            format!("{cell} n={n} conc={conc}"),
+            w,
+            wall,
+            events,
+            events as f64 / wall.max(1e-12),
+            speedup,
+            "yes"
+        );
+        out.push(
+            "parallel",
+            json::obj(vec![
+                ("cell", json::s(cell)),
+                ("workers", json::num(w as f64)),
+                ("n_requests", json::num(n as f64)),
+                ("concurrency", json::num(conc as f64)),
+                ("n_edges", json::num(n_edges as f64)),
+                ("wall_s", json::num(wall)),
+                ("events", json::num(events as f64)),
+                ("events_per_s", json::num(events as f64 / wall.max(1e-12))),
+                ("speedup_vs_seq", json::num(speedup)),
+                ("identical", Value::Bool(true)),
+            ]),
+        );
+    }
+    Ok(())
 }
 
 // ---------------- serving-core scaling grid ----------------------------
@@ -330,6 +572,25 @@ fn serving_scaling_grid() -> Result<()> {
                 ("clone_observe_mean_s", json::num(stats.mean_s)),
             ]),
         );
+    }
+
+    // Sharded parallel driver: the fleet cell's speedup-vs-workers
+    // curve, every row bitwise-checked against the sequential oracle.
+    // "fleet" is the trickle regime (cap << n: admissions serialize on
+    // completions, so the conservative window has little to overlap and
+    // the curve mostly prices the protocol overhead); "burst" admits
+    // the whole trace up front (cap = n), where the per-edge local runs
+    // genuinely parallelize.
+    println!("== sharded parallel driver: speedup vs workers (bitwise-checked) ==");
+    println!(
+        "{:<26} {:>8} {:>10} {:>12} {:>14} {:>8} {:>10}",
+        "cell", "workers", "wall_s", "events", "events/s", "speedup", "identical"
+    );
+    if quick {
+        parallel_cell(&mut out, "fleet", 100_000, 2_000, 8, &[1, 2])?;
+    } else {
+        parallel_cell(&mut out, "fleet", 1_000_000, 10_000, 8, &[1, 2, 4, 8])?;
+        parallel_cell(&mut out, "burst", 250_000, 250_000, 8, &[1, 2, 4, 8])?;
     }
 
     out.write("BENCH_serving.json")?;

@@ -64,14 +64,14 @@ pub(crate) fn start(
 
     let kv_gb = kv_bytes(&full_m, inp.seq_paper + n_out as f64) / 1e9;
     let mem_bytes = kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper);
-    vc.cloud_mem.alloc(mem_bytes);
+    vc.cloud.mem.alloc(mem_bytes);
 
     // Real prefill on the cloud engine; decode continues step-wise.
     let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
         coord.eng.free_kv(true, pre.kv);
-        vc.cloud_mem.free(mem_bytes);
+        vc.cloud.mem.free(mem_bytes);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
             tokens_out: 1,
@@ -136,7 +136,7 @@ pub fn serve(
     rec.prefill_s = pre_end - arrival;
 
     let kv_gb = kv_bytes(&full_m, inp.seq_paper + n_out as f64) / 1e9;
-    vc.cloud_mem.alloc(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
+    vc.cloud.mem.alloc(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
 
     // Real prefill + decode on the cloud engine.
     let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
@@ -161,7 +161,7 @@ pub fn serve(
         }
     }
     coord.eng.free_kv(true, pre.kv);
-    vc.cloud_mem.free(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
+    vc.cloud.mem.free(kv_gb * 1e9 + activation_bytes(&full_m, inp.seq_paper));
 
     let (_, done) = vc.send_down(0, t, 4 * tokens.len() as u64 + 64, false);
     rec.bytes_down = 4 * tokens.len() as u64 + 64;
@@ -169,11 +169,11 @@ pub fn serve(
     rec.latency_s = done - arrival;
     rec.tokens_out = tokens.len();
     rec.flops_edge = vc.edges[0].flops;
-    rec.flops_cloud = vc.flops_cloud;
+    rec.flops_cloud = vc.cloud.flops;
     rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
-    rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+    rec.mem_cloud_gb = vc.cloud.mem.peak_gb();
     // Cloud-only pins the full model for the stream's entire duration.
-    rec.mem_serving_gb = vc.cloud_mem.peak_gb();
+    rec.mem_serving_gb = vc.cloud.mem.peak_gb();
 
     let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);
     rec.p_correct = quality::p_correct(cap, item, &ServedInfo::default());

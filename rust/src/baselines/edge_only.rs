@@ -156,9 +156,9 @@ pub fn serve(
     rec.latency_s = t - arrival;
     rec.tokens_out = tokens.len();
     rec.flops_edge = vc.edges[0].flops;
-    rec.flops_cloud = vc.flops_cloud;
+    rec.flops_cloud = vc.cloud.flops;
     rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
-    rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+    rec.mem_cloud_gb = vc.cloud.mem.peak_gb();
     rec.mem_serving_gb = vc.edges[0].mem.peak_gb();
 
     let cap = Capability::for_benchmark(item.benchmark, cfg.network.bandwidth_mbps);

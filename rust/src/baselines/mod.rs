@@ -146,6 +146,12 @@ impl<'a> BaselineSession<'a> {
         self.rec.edge_id = edge;
     }
 
+    /// The edge site this session is bound to (its home shard under
+    /// the sharded driver).
+    pub fn edge(&self) -> EdgeId {
+        self.edge
+    }
+
     /// Whether the session has not yet taken its first step (still
     /// waiting at its arrival event) — the window in which the trace
     /// server may still re-route it onto another edge.
@@ -229,17 +235,17 @@ impl<'a> BaselineSession<'a> {
         self.rec.latency_s = t_done - self.arrival;
         self.rec.tokens_out = f.tokens_out;
         self.rec.flops_edge = vc.edges[self.edge].flops;
-        self.rec.flops_cloud = vc.flops_cloud;
+        self.rec.flops_cloud = vc.cloud.flops;
         self.rec.mem_edge_gb = vc.edges[self.edge].mem.peak_gb();
-        self.rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+        self.rec.mem_cloud_gb = vc.cloud.mem.peak_gb();
         // Dedicated serving memory (Fig. 8): Cloud-only pins the full
         // model for the stream; Edge-only the draft; PerLLM pins its
         // layer split on both devices regardless of where a given
         // request lands. Edge-side peaks are the session's own site.
         self.rec.mem_serving_gb = match self.baseline {
-            Baseline::CloudOnly => vc.cloud_mem.peak_gb(),
+            Baseline::CloudOnly => vc.cloud.mem.peak_gb(),
             Baseline::EdgeOnly => vc.edges[self.edge].mem.peak_gb(),
-            Baseline::PerLlm => vc.edges[self.edge].mem.peak_gb() + vc.cloud_mem.peak_gb(),
+            Baseline::PerLlm => vc.edges[self.edge].mem.peak_gb() + vc.cloud.mem.peak_gb(),
         };
 
         let cap = Capability::for_benchmark(self.item.benchmark, bandwidth_mbps);

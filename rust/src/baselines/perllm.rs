@@ -208,7 +208,7 @@ fn split_start(
     let kv_total = kv_bytes(&full_m, inp.seq_paper + n_out as f64);
     let mem_half = 0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper);
     vc.edges[edge].mem.alloc(mem_half);
-    vc.cloud_mem.alloc(mem_half);
+    vc.cloud.mem.alloc(mem_half);
 
     // Real tokens: unsplit full model on the cloud engine (identical math).
     let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
@@ -216,7 +216,7 @@ fn split_start(
     if n_out <= 1 {
         coord.eng.free_kv(true, pre.kv);
         vc.edges[edge].mem.free(mem_half);
-        vc.cloud_mem.free(mem_half);
+        vc.cloud.mem.free(mem_half);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
             tokens_out: 1,
@@ -278,7 +278,7 @@ pub(crate) fn split_step(
     if s.tok == eos || s.j >= s.n_out - 1 {
         coord.eng.free_kv(true, s.kv);
         vc.edges[s.edge].mem.free(s.mem_half);
-        vc.cloud_mem.free(s.mem_half);
+        vc.cloud.mem.free(s.mem_half);
         return Ok(BPhase::Finish(FinishState {
             t_done: s.t,
             tokens_out: s.tokens_out,
@@ -320,7 +320,7 @@ pub fn serve(
     };
     // PerLLM pins its layer split on both devices regardless of where a
     // given request lands.
-    rec.mem_serving_gb = vc.edges[0].mem.peak_gb() + vc.cloud_mem.peak_gb();
+    rec.mem_serving_gb = vc.edges[0].mem.peak_gb() + vc.cloud.mem.peak_gb();
     Ok(rec)
 }
 
@@ -380,7 +380,7 @@ fn serve_split(
 
     let kv_total = kv_bytes(&full_m, inp.seq_paper + n_out as f64);
     vc.edges[0].mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
-    vc.cloud_mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
+    vc.cloud.mem.alloc(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
 
     // Real tokens: unsplit full model on the cloud engine (identical math).
     let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
@@ -417,15 +417,15 @@ fn serve_split(
     }
     coord.eng.free_kv(true, pre.kv);
     vc.edges[0].mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
-    vc.cloud_mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
+    vc.cloud.mem.free(0.5 * kv_total + activation_bytes(&full_m, inp.seq_paper));
 
     rec.t_done = t;
     rec.latency_s = t - arrival;
     rec.tokens_out = tokens.len();
     rec.flops_edge = vc.edges[0].flops;
-    rec.flops_cloud = vc.flops_cloud;
+    rec.flops_cloud = vc.cloud.flops;
     rec.mem_edge_gb = vc.edges[0].mem.peak_gb();
-    rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+    rec.mem_cloud_gb = vc.cloud.mem.peak_gb();
     patch_quality(&mut rec, item, &cfg, 1.0);
     Ok(rec)
 }

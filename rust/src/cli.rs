@@ -19,6 +19,10 @@
 //!   edge (config files can describe heterogeneous fleets via the
 //!   `fleet` section); `--assign rr|least-loaded|pinned:<edge>` picks
 //!   the request→edge routing strategy.
+//! * `--workers N` picks the simulation worker count (1 = sequential
+//!   driver, >= 2 = sharded per-edge event loops, 0 = auto from
+//!   available parallelism); without it the `serve.workers` config
+//!   knob applies (default 1). Results are identical either way.
 
 use std::collections::HashMap;
 
@@ -125,6 +129,9 @@ pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
     if let Some(a) = args.get("assign") {
         spec = spec.assign(Assign::parse(a)?);
     }
+    if let Some(w) = args.get("workers") {
+        spec = spec.workers(w.parse().context("parsing --workers")?);
+    }
     Ok((mode, spec))
 }
 
@@ -145,6 +152,23 @@ mod tests {
             assert_eq!(spec.concurrency, Some(3), "mode {mode} dropped --concurrency");
             spec.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn workers_flag_honored_for_every_mode() {
+        for mode in ["msao", "no-modality", "no-collab", "cloud", "edge", "perllm", "mixed"] {
+            // Default: no override — `serve.workers` (1) applies.
+            let a = argv(&["serve", "--mode", mode, "--n", "4"]);
+            let (_, spec) = serve_spec(&a).unwrap();
+            assert_eq!(spec.workers, None, "mode {mode} invented a worker override");
+            assert_eq!(spec.effective_workers(&Config::default()), 1, "mode {mode}");
+            let a = argv(&["serve", "--mode", mode, "--n", "4", "--workers", "2"]);
+            let (_, spec) = serve_spec(&a).unwrap();
+            assert_eq!(spec.workers, Some(2), "mode {mode} dropped --workers");
+            spec.validate().unwrap();
+        }
+        assert!(serve_spec(&argv(&["serve", "--workers", "-1"])).is_err());
+        assert!(serve_spec(&argv(&["serve", "--workers", "x"])).is_err());
     }
 
     #[test]

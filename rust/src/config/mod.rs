@@ -326,6 +326,11 @@ pub struct ServeCfg {
     /// EMA smoothing for the system monitor's bandwidth/RTT/load
     /// estimates (0 < alpha <= 1; higher reacts faster, noisier).
     pub monitor_ema: f64,
+    /// Simulation worker threads for the sharded event loop (1 =
+    /// sequential driver, >= 2 = one event loop per edge site, 0 =
+    /// auto from available parallelism). Pure wall-clock knob: results
+    /// are bit-for-bit identical for every value.
+    pub workers: usize,
 }
 
 impl Default for ServeCfg {
@@ -336,6 +341,7 @@ impl Default for ServeCfg {
             batch_wait_ms: 6.0,
             queue_cap: 256,
             monitor_ema: 0.3,
+            workers: 1,
         }
     }
 }
@@ -457,6 +463,7 @@ impl Config {
                         "batch_wait_ms" => s.batch_wait_ms => as_f64,
                         "queue_cap" => s.queue_cap => as_usize,
                         "monitor_ema" => s.monitor_ema => as_f64,
+                        "workers" => s.workers => as_usize,
                     });
                     // EMA weights outside (0, 1] overshoot (alpha > 1 can
                     // drive the bandwidth estimate negative) or freeze
@@ -730,5 +737,19 @@ mod tests {
             let json = format!("{{\"serve\": {{\"monitor_ema\": {bad}}}}}");
             assert!(Config::from_json_str(&json).is_err(), "accepted monitor_ema {bad}");
         }
+    }
+
+    #[test]
+    fn workers_default_and_override() {
+        // Default 1 = sequential driver, so existing configs and
+        // goldens are untouched.
+        assert_eq!(Config::default().serve.workers, 1);
+        let c = Config::from_json_str(r#"{"serve": {"workers": 4}}"#).unwrap();
+        assert_eq!(c.serve.workers, 4);
+        // 0 = auto from available parallelism (resolved at serve time).
+        let c = Config::from_json_str(r#"{"serve": {"workers": 0}}"#).unwrap();
+        assert_eq!(c.serve.workers, 0);
+        // Negative counts are rejected by the usize parse.
+        assert!(Config::from_json_str(r#"{"serve": {"workers": -2}}"#).is_err());
     }
 }

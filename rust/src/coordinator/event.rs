@@ -1,0 +1,197 @@
+//! Shared event-key machinery for the sequential heap driver and the
+//! sharded fleet driver.
+//!
+//! Both event loops must pick events in exactly the same total order or
+//! the bit-for-bit guarantee between them is void, so the key — and in
+//! particular the `-0.0` canonicalization subtlety — lives here once
+//! instead of being hand-copied into each driver.
+//!
+//! Also hosts [`SeqHash`], the debug-mode event-sequence fingerprint the
+//! determinism tests compare across drivers: a cheap order-sensitive
+//! hash of each request's step sequence, folded order-*insensitively*
+//! across requests so the fingerprint is meaningful even though the
+//! sharded driver interleaves requests differently *in wall-clock*
+//! (virtual-time order is identical, per-request step order doubly so).
+
+use std::cmp::Ordering;
+
+/// Canonicalize an event time for ordering: maps `-0.0` to `+0.0` so
+/// `f64::total_cmp` agrees with the reference scan's `<` (which treats
+/// the two zeros as equal and falls through to the index tie-break).
+/// NaN event times are a scheduling bug; caught in debug builds.
+#[inline]
+pub fn canonical_time(time: f64) -> f64 {
+    debug_assert!(!time.is_nan(), "NaN event time");
+    time + 0.0
+}
+
+/// Heap key: `(next_time, session_index)`, ordered ascending — exactly
+/// the argmin the linear scan computed, ties toward the lower index.
+/// `slot` is payload (where the session lives), never compared: two
+/// live keys can never share an index.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct EventKey {
+    pub time: f64,
+    pub index: usize,
+    pub slot: usize,
+}
+
+impl EventKey {
+    pub fn new(time: f64, index: usize, slot: usize) -> Self {
+        debug_assert!(!time.is_nan(), "session {index}: NaN event time");
+        EventKey { time: canonical_time(time), index, slot }
+    }
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time.total_cmp(&other.time).then(self.index.cmp(&other.index))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
+
+/// Event-sequence fingerprint for determinism checks.
+///
+/// Per request: an FNV-1a-style fold of `(index, time.to_bits())` over
+/// that request's steps, *order-sensitive* (each request's steps happen
+/// in a well-defined sequence on every driver). Across requests the
+/// per-request digests are XOR-folded, *order-insensitive*, because the
+/// two drivers may visit different requests' events in different
+/// wall-clock order while the virtual-time semantics are identical.
+#[derive(Debug, Clone, Default)]
+pub struct SeqHash {
+    /// Per-request running digests, keyed by request index.
+    lanes: Vec<u64>,
+    /// Total events observed.
+    pub events: u64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_fold(mut h: u64, word: u64) -> u64 {
+    for byte in word.to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl SeqHash {
+    pub fn new() -> Self {
+        SeqHash::default()
+    }
+
+    /// Record one step of request `index` at canonicalized event `time`.
+    #[inline]
+    pub fn observe(&mut self, index: usize, time: f64) {
+        if self.lanes.len() <= index {
+            self.lanes.resize(index + 1, FNV_OFFSET);
+        }
+        let lane = &mut self.lanes[index];
+        *lane = fnv_fold(*lane, index as u64);
+        *lane = fnv_fold(*lane, canonical_time(time).to_bits());
+        self.events += 1;
+    }
+
+    /// Fold the per-request digests into one fingerprint. Requests that
+    /// never stepped contribute the offset basis, so the digest also
+    /// pins *which* requests ran.
+    pub fn digest(&self) -> u64 {
+        self.lanes
+            .iter()
+            .enumerate()
+            .fold(FNV_OFFSET, |acc, (i, &lane)| acc ^ lane.rotate_left((i % 63) as u32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_time_maps_negative_zero() {
+        assert_eq!(canonical_time(-0.0).to_bits(), 0.0f64.to_bits());
+        assert_eq!(canonical_time(1.5).to_bits(), 1.5f64.to_bits());
+        assert_eq!(canonical_time(f64::INFINITY), f64::INFINITY);
+    }
+
+    #[test]
+    fn key_orders_by_time_then_index() {
+        let a = EventKey::new(1.0, 5, 0);
+        let b = EventKey::new(2.0, 1, 1);
+        assert!(a < b);
+        let c = EventKey::new(1.0, 2, 3);
+        assert!(c < a); // same time, lower index wins
+        assert_eq!(EventKey::new(1.0, 5, 0), EventKey::new(1.0, 5, 9)); // slot is payload
+    }
+
+    #[test]
+    fn key_treats_negative_zero_as_positive_zero() {
+        let neg = EventKey::new(-0.0, 7, 0);
+        let pos = EventKey::new(0.0, 3, 0);
+        // Canonicalized: tie falls to the index, index 3 first.
+        assert!(pos < neg);
+        assert_eq!(neg.time.to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn seq_hash_is_order_sensitive_within_a_request() {
+        let mut a = SeqHash::new();
+        a.observe(0, 1.0);
+        a.observe(0, 2.0);
+        let mut b = SeqHash::new();
+        b.observe(0, 2.0);
+        b.observe(0, 1.0);
+        assert_ne!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn seq_hash_is_order_insensitive_across_requests() {
+        let mut a = SeqHash::new();
+        a.observe(0, 1.0);
+        a.observe(1, 2.0);
+        a.observe(0, 3.0);
+        let mut b = SeqHash::new();
+        b.observe(1, 2.0);
+        b.observe(0, 1.0);
+        b.observe(0, 3.0);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.events, 3);
+    }
+
+    #[test]
+    fn seq_hash_distinguishes_times_and_requests() {
+        let mut a = SeqHash::new();
+        a.observe(0, 1.0);
+        let mut b = SeqHash::new();
+        b.observe(0, 1.5);
+        assert_ne!(a.digest(), b.digest());
+        let mut c = SeqHash::new();
+        c.observe(1, 1.0);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn seq_hash_canonicalizes_negative_zero() {
+        let mut a = SeqHash::new();
+        a.observe(0, -0.0);
+        let mut b = SeqHash::new();
+        b.observe(0, 0.0);
+        assert_eq!(a.digest(), b.digest());
+    }
+}

@@ -28,23 +28,35 @@
 //! O(log active) and resident session state is O(concurrency), not
 //! O(trace) — [`serve_materialized_ref`] keeps the pre-overhaul
 //! materialized linear-scan path as the golden reference.
+//!
+//! Simulation itself can be parallel: [`sharded`] runs one event loop
+//! per edge site on worker threads with the shared cloud as the only
+//! synchronization point (conservative lookahead over the per-shard
+//! heap horizons), reproducing the sequential driver bit for bit for
+//! every worker count — `TraceSpec::workers` / `serve.workers` /
+//! `--workers` select it ([`event`] holds the shared event-key and
+//! sequence-hash machinery both drivers use).
 
 pub mod batcher;
 pub mod engines;
+pub mod event;
 pub mod mas;
 pub mod planner;
 pub mod policy;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod sharded;
 pub mod speculative;
 pub mod timeline;
 
 pub use batcher::Batcher;
 pub use engines::Engines;
+pub use event::SeqHash;
 pub use planner::Plan;
 pub use policy::{least_loaded, testbed, Assign, PolicyKind, ResidentProfile, TraceSpec};
 pub use scheduler::StepOutcome;
 pub use server::{serve, serve_materialized_ref, EdgeTraceStats, TraceResult};
 pub use session::{Coordinator, Mode, Session};
-pub use timeline::{edge_seed, EdgeId, EdgeSite, Site, VirtualCluster};
+pub use sharded::{drive_sharded, Sequentialized, ShardedSource, StepClass};
+pub use timeline::{edge_seed, CloudDevice, EdgeId, EdgeSite, Site, VirtualCluster};

@@ -263,7 +263,7 @@ pub fn testbed(cfg: &Config, seed: u64, profile: &ResidentProfile) -> VirtualClu
     for edge in &mut vc.edges {
         edge.mem.set_base(profile.edge_bytes);
     }
-    vc.cloud_mem.set_base(profile.cloud_bytes);
+    vc.cloud.mem.set_base(profile.cloud_bytes);
     vc
 }
 
@@ -295,6 +295,11 @@ pub struct TraceSpec {
     /// How requests are assigned to edge sites. Round-robin by default
     /// (on a fleet of one every strategy degenerates to edge 0).
     pub assign: Assign,
+    /// Simulation worker threads; `None` = the `serve.workers` config
+    /// knob (default 1 = sequential; 0 = auto from available
+    /// parallelism). Results are identical for every value — the
+    /// sharded driver is bit-for-bit against the sequential one.
+    pub workers: Option<usize>,
 }
 
 impl TraceSpec {
@@ -307,6 +312,7 @@ impl TraceSpec {
             seed: 0,
             profile: None,
             assign: Assign::RoundRobin,
+            workers: None,
         }
     }
 
@@ -344,10 +350,27 @@ impl TraceSpec {
         self.profile.unwrap_or_else(|| self.policy.resident_profile())
     }
 
+    /// Pin the simulation worker count (1 = sequential driver, `>= 2`
+    /// = sharded parallel driver, 0 = auto from available parallelism).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
     pub fn effective_concurrency(&self, cfg: &Config) -> usize {
         match self.concurrency {
             Some(c) => c,
             None => self.policy.default_concurrency(cfg),
+        }
+    }
+
+    /// Resolve the worker count: the spec override, else `serve.workers`
+    /// from config, with 0 mapped to the machine's available
+    /// parallelism.
+    pub fn effective_workers(&self, cfg: &Config) -> usize {
+        match self.workers.unwrap_or(cfg.serve.workers) {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            w => w,
         }
     }
 
@@ -496,12 +519,29 @@ mod tests {
     }
 
     #[test]
+    fn effective_workers_resolves_spec_config_and_auto() {
+        let mut cfg = Config::default();
+        // Default: sequential.
+        let spec = TraceSpec::new(PolicyKind::EdgeOnly);
+        assert_eq!(spec.workers, None);
+        assert_eq!(spec.effective_workers(&cfg), 1);
+        // Spec override wins over config.
+        cfg.serve.workers = 4;
+        assert_eq!(spec.effective_workers(&cfg), 4);
+        let spec = spec.workers(2);
+        assert_eq!(spec.effective_workers(&cfg), 2);
+        // 0 = auto: at least one worker, wherever it runs.
+        let spec = spec.workers(0);
+        assert!(spec.effective_workers(&cfg) >= 1);
+    }
+
+    #[test]
     fn testbed_pins_profile_bases_on_every_edge() {
         let mut cfg = Config::default();
         let profile = PolicyKind::Msao(Mode::Msao).resident_profile();
         let vc = testbed(&cfg, 1, &profile);
         assert!((vc.edges[0].mem.peak_gb() - profile.edge_bytes / 1e9).abs() < 1e-9);
-        assert!((vc.cloud_mem.peak_gb() - profile.cloud_bytes / 1e9).abs() < 1e-9);
+        assert!((vc.cloud.mem.peak_gb() - profile.cloud_bytes / 1e9).abs() < 1e-9);
         cfg.replicate_edges(3).unwrap();
         let vc = testbed(&cfg, 1, &profile);
         for edge in &vc.edges {

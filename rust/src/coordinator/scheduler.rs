@@ -15,9 +15,11 @@
 //! # Event selection is an index min-heap
 //!
 //! Active sessions sit in a binary min-heap keyed on
-//! `(next_time, session_index)` (`EventKey`) — the lower-index
-//! tie-break is encoded in the key, so the pop order is *identical by
-//! construction* to the linear argmin scan it replaced
+//! `(next_time, session_index)` (`EventKey` in `super::event`, shared
+//! with the sharded driver in [`super::sharded`] so both loops order
+//! events — including the `-0.0` canonicalization — identically) — the
+//! lower-index tie-break is encoded in the key, so the pop order is
+//! *identical by construction* to the linear argmin scan it replaced
 //! ([`drive_linear_ref`], kept as the equivalence reference for the
 //! property tests and the scaling bench). Only the stepped session's
 //! key changes per event (stepping is the sole mutator of a session's
@@ -47,10 +49,12 @@
 //! non-decreasing), and admission is FIFO — no session can be bypassed
 //! indefinitely.
 
-use std::cmp::{Ordering, Reverse};
+use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use anyhow::Result;
+
+use super::event::EventKey;
 
 /// Outcome of advancing a session by one step.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,46 +62,6 @@ pub enum StepOutcome {
     Pending,
     Done,
 }
-
-/// Heap key: `(next_time, session_index)`, ordered ascending — exactly
-/// the argmin the linear scan computed, ties toward the lower index.
-/// `slot` is payload (where the session lives), never compared: two
-/// live keys can never share an index.
-#[derive(Debug, Clone, Copy)]
-struct EventKey {
-    time: f64,
-    index: usize,
-    slot: usize,
-}
-
-impl EventKey {
-    fn new(time: f64, index: usize, slot: usize) -> Self {
-        debug_assert!(!time.is_nan(), "session {index}: NaN event time");
-        // Canonicalize -0.0 to +0.0 so total_cmp matches the reference
-        // scan's `<` (which treats them equal and falls to the index).
-        EventKey { time: time + 0.0, index, slot }
-    }
-}
-
-impl Ord for EventKey {
-    fn cmp(&self, other: &Self) -> Ordering {
-        self.time.total_cmp(&other.time).then(self.index.cmp(&other.index))
-    }
-}
-
-impl PartialOrd for EventKey {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl PartialEq for EventKey {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == Ordering::Equal
-    }
-}
-
-impl Eq for EventKey {}
 
 /// Linear-scan reference implementation of [`drive`] — the pre-heap
 /// event loop, kept verbatim as the golden the heap scheduler is pinned

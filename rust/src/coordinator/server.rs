@@ -51,8 +51,23 @@
 //! At `concurrency == 1` on a fleet of one, the loop degenerates to
 //! sequential run-to-completion FCFS and reproduces the pre-refactor
 //! two-site loops bit for bit (pinned by the golden equivalence tests).
+//!
+//! # Parallel simulation (`--workers N`)
+//!
+//! With `TraceSpec::workers >= 2` (or `serve.workers`), the trace runs
+//! through the sharded driver ([`super::sharded::drive_sharded`]) via
+//! a private sharded adapter. Every real serving step is classified Global —
+//! each session phase calls the PJRT engines and touches the shared
+//! RNG/theta/cloud — so on this path the protocol degenerates to the
+//! sequential global order and the results are bit-for-bit identical
+//! by construction (pinned by the engine-backed goldens). Sources with
+//! genuinely edge-local steps (the synthetic fleet cell in
+//! `benches/substrate.rs`) are where the worker threads buy wall-clock
+//! speedup; here the knob exercises the same protocol end to end.
 
-use anyhow::Result;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
 
 use crate::baselines::{Baseline, BaselineSession};
 use crate::cluster::{NetEstimate, Site};
@@ -62,10 +77,12 @@ use crate::optimizer::ThetaController;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
+use super::event::SeqHash;
 use super::policy::{self, Assign, PolicyKind, TraceSpec};
 use super::scheduler::{self, SessionSource, StepOutcome};
 use super::session::{Coordinator, Session};
-use super::timeline::VirtualCluster;
+use super::sharded::{drive_sharded, ShardedSource, StepClass};
+use super::timeline::{EdgeSite, VirtualCluster};
 
 /// End-of-trace view of one edge site (fleet observability: the
 /// per-edge rows of the `fleet` experiment come from here).
@@ -105,6 +122,17 @@ pub struct TraceResult {
     pub cloud_wait_s: f64,
     /// Per-edge breakdown (id, request count, traffic, beliefs).
     pub per_edge: Vec<EdgeTraceStats>,
+    /// Total scheduler events (session steps) the trace took.
+    pub events: u64,
+    /// Event-sequence fingerprint ([`SeqHash`]): identical across the
+    /// sequential and sharded drivers by the determinism guarantee —
+    /// the cheap first thing to compare when hunting a divergence.
+    pub events_hash: u64,
+    /// Real (wall-clock) seconds the simulation took — not virtual
+    /// time. Simulation-rate observability for the perf trajectory.
+    pub wall_clock_s: f64,
+    /// Events per wall-clock second (`events / wall_clock_s`).
+    pub events_per_s: f64,
 }
 
 /// One admitted request under whichever policy its spec assigns.
@@ -177,6 +205,15 @@ impl<'a> AnySession<'a> {
             AnySession::Baseline(b) => b.into_record(),
         }
     }
+
+    /// The session's current home edge (its shard under the sharded
+    /// driver; tracks `LeastLoaded` re-routing at the arrival event).
+    fn edge(&self) -> usize {
+        match self {
+            AnySession::Msao(s) => s.edge(),
+            AnySession::Baseline(b) => b.edge(),
+        }
+    }
 }
 
 /// Everything one in-flight trace needs, behind the single `&mut` the
@@ -195,6 +232,9 @@ struct ServeSource<'s, 'c> {
     /// are already resolved at admission.
     route_at_arrival: bool,
     records: Vec<Option<ExecRecord>>,
+    /// Event-sequence fingerprint + event count, fed pre-step so both
+    /// drivers hash the exact event stream they executed.
+    seq: SeqHash,
 }
 
 impl<'s> SessionSource for ServeSource<'s, '_> {
@@ -219,7 +259,8 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
         s.next_time()
     }
 
-    fn step(&mut self, _i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
+    fn step(&mut self, i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
+        self.seq.observe(i, s.next_time());
         if self.route_at_arrival && s.is_unstarted() {
             s.set_edge(policy::least_loaded(&self.vc));
         }
@@ -265,6 +306,7 @@ fn prepare<'s, 'c>(
             n_edges,
             route_at_arrival: matches!(spec.assign, Assign::LeastLoaded),
             records: (0..n).map(|_| None).collect(),
+            seq: SeqHash::new(),
         },
         concurrency,
     ))
@@ -283,9 +325,72 @@ fn fleet_mean_cloud_wait(vc: &VirtualCluster) -> f64 {
     vc.edges.iter().map(|e| e.monitor.wait_s(Site::Cloud)).sum::<f64>() / n
 }
 
+/// Sharded adapter over [`ServeSource`]: shards are the fleet's
+/// [`EdgeSite`]s, every session step is Global (see the module docs),
+/// and admission/stepping/finishing delegate to the exact same
+/// [`SessionSource`] logic the sequential driver runs — one behavior,
+/// two drivers.
+struct ShardedServe<'s, 'c> {
+    src: ServeSource<'s, 'c>,
+}
+
+impl<'s> ShardedSource for ShardedServe<'s, '_> {
+    type Session = AnySession<'s>;
+    type Shard = EdgeSite;
+
+    fn n_shards(&self) -> usize {
+        self.src.n_edges
+    }
+
+    fn global_reads_shards(&self) -> bool {
+        // `LeastLoaded` reads every edge's monitor at the arrival
+        // event; moot while all steps are Global, but declared so the
+        // protocol stays correct if local classification ever lands.
+        self.src.route_at_arrival
+    }
+
+    fn admit(&mut self, i: usize) -> Result<(AnySession<'s>, Option<usize>)> {
+        let route = self.src.spec.assign.static_pick(i, self.src.n_edges);
+        let s = SessionSource::admit(&mut self.src, i)?;
+        Ok((s, route))
+    }
+
+    fn next_time(s: &AnySession<'s>) -> f64 {
+        s.next_time()
+    }
+
+    fn step_class(_s: &AnySession<'s>) -> StepClass {
+        // Every real phase calls the engines and touches the shared
+        // RNG/theta/cloud, so nothing is provably edge-local yet.
+        StepClass::Global
+    }
+
+    fn with_shards<R>(&mut self, f: impl FnOnce(&mut [EdgeSite]) -> R) -> R {
+        let (edges, _cloud) = self.src.vc.split_mut();
+        f(edges)
+    }
+
+    fn step_local(_shard: &mut EdgeSite, _s: &mut AnySession<'s>) -> Result<StepOutcome> {
+        bail!("serving sessions classify every step Global; no local step can be scheduled")
+    }
+
+    fn step_global(&mut self, i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
+        SessionSource::step(&mut self.src, i, s)
+    }
+
+    fn shard_of(&self, s: &AnySession<'s>) -> usize {
+        s.edge()
+    }
+
+    fn finish(&mut self, i: usize, s: AnySession<'s>) -> Result<()> {
+        SessionSource::finish(&mut self.src, i, s)
+    }
+}
+
 /// Fold the finished testbed + records into the end-of-trace view.
-fn collect(src: ServeSource<'_, '_>) -> TraceResult {
-    let ServeSource { vc, batchers, records, .. } = src;
+/// `wall_clock_s` is the measured drive time (real seconds).
+fn collect(src: ServeSource<'_, '_>, wall_clock_s: f64) -> TraceResult {
+    let ServeSource { vc, batchers, records, seq, .. } = src;
     let records: Vec<ExecRecord> = records
         .into_iter()
         .enumerate()
@@ -317,6 +422,10 @@ fn collect(src: ServeSource<'_, '_>) -> TraceResult {
         edge_wait_s: fleet_mean_edge_wait(&vc),
         cloud_wait_s: fleet_mean_cloud_wait(&vc),
         per_edge,
+        events: seq.events,
+        events_hash: seq.digest(),
+        wall_clock_s,
+        events_per_s: if wall_clock_s > 0.0 { seq.events as f64 / wall_clock_s } else { 0.0 },
         records,
     }
 }
@@ -327,10 +436,26 @@ fn collect(src: ServeSource<'_, '_>) -> TraceResult {
 /// into its record on completion), route each onto an edge per the
 /// spec's assignment strategy, and charge everything event-ordered
 /// under the spec's concurrency cap.
+///
+/// `TraceSpec::workers` (default: the `serve.workers` config knob)
+/// selects the driver: 1 = the sequential event-heap stream, >= 2 = the
+/// sharded per-edge driver with a conservative cloud-sync window. The
+/// results are bit-for-bit identical either way.
 pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
-    let (mut src, concurrency) = prepare(coord, spec)?;
-    scheduler::drive_stream(spec.items.len(), concurrency, &mut src)?;
-    Ok(collect(src))
+    let workers = spec.effective_workers(&coord.cfg);
+    let (src, concurrency) = prepare(coord, spec)?;
+    let n = spec.items.len();
+    let t0 = Instant::now();
+    let src = if workers <= 1 {
+        let mut src = src;
+        scheduler::drive_stream(n, concurrency, &mut src)?;
+        src
+    } else {
+        let mut sh = ShardedServe { src };
+        drive_sharded(n, concurrency, workers, &mut sh)?;
+        sh.src
+    };
+    Ok(collect(src, t0.elapsed().as_secs_f64()))
 }
 
 /// Pre-streaming reference path: materialize every session up front and
@@ -342,6 +467,7 @@ pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
 /// sessions, O(active) per event — do not use for large traces.
 pub fn serve_materialized_ref(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
     let (mut src, concurrency) = prepare(coord, spec)?;
+    let t0 = Instant::now();
     let mut sessions: Vec<AnySession> = (0..spec.items.len())
         .map(|i| src.admit(i))
         .collect::<Result<_>>()?;
@@ -351,7 +477,7 @@ pub fn serve_materialized_ref(coord: &mut Coordinator, spec: &TraceSpec) -> Resu
     for (i, s) in sessions.into_iter().enumerate() {
         src.finish(i, s)?;
     }
-    Ok(collect(src))
+    Ok(collect(src, t0.elapsed().as_secs_f64()))
 }
 
 #[cfg(test)]

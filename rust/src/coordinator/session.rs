@@ -178,6 +178,12 @@ impl<'a> Session<'a> {
         self.rec.edge_id = edge;
     }
 
+    /// The edge site this session is bound to (its home shard under
+    /// the sharded driver).
+    pub fn edge(&self) -> EdgeId {
+        self.edge
+    }
+
     /// Whether the session has not yet taken its first step (it is
     /// still waiting at its arrival event). The trace server uses this
     /// to resolve `LeastLoaded` routing at the arrival event — the
@@ -426,7 +432,7 @@ impl<'a> Session<'a> {
         let edge_mem_bytes = edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper);
         let cloud_mem_bytes = cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
         vc.edges[self.edge].mem.alloc(edge_mem_bytes);
-        vc.cloud_mem.alloc(cloud_mem_bytes);
+        vc.cloud.mem.alloc(cloud_mem_bytes);
 
         let prefill_done = edge_pre_end.max(cloud_pre_end);
         self.rec.prefill_s = prefill_done - self.arrival;
@@ -520,7 +526,7 @@ impl<'a> Session<'a> {
 
         let kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
         let cloud_mem_bytes = kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
-        vc.cloud_mem.alloc(cloud_mem_bytes);
+        vc.cloud.mem.alloc(cloud_mem_bytes);
 
         let pre = coord.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
         let tok = argmax(&pre.logits);
@@ -624,7 +630,7 @@ impl<'a> Session<'a> {
             vc.edges[self.edge].mem.free(f.common.edge_mem_bytes);
         }
         if f.common.cloud_mem_bytes > 0.0 {
-            vc.cloud_mem.free(f.common.cloud_mem_bytes);
+            vc.cloud.mem.free(f.common.cloud_mem_bytes);
         }
         if f.common.probe_mem_bytes > 0.0 {
             vc.edges[self.edge].mem.free(f.common.probe_mem_bytes);
@@ -640,7 +646,7 @@ impl<'a> Session<'a> {
         self.rec.vis_tokens_kept = f.common.vlen;
         self.rec.frames_kept = f.common.plan.frames_keep.len();
         self.rec.mem_edge_gb = vc.edges[self.edge].mem.peak_gb();
-        self.rec.mem_cloud_gb = vc.cloud_mem.peak_gb();
+        self.rec.mem_cloud_gb = vc.cloud.mem.peak_gb();
         // MSAO's cloud model is a shared multi-tenant verifier touched in
         // short bursts; the stream's dedicated memory is the edge peak
         // plus the cloud's marginal KV/activations. These are *cluster*
@@ -649,9 +655,9 @@ impl<'a> Session<'a> {
         // concurrent interleave they measure cluster occupancy — all
         // in-flight sessions' KV is genuinely resident at once.
         self.rec.mem_serving_gb =
-            vc.edges[self.edge].mem.peak_gb() + vc.cloud_mem.peak_marginal_gb();
+            vc.edges[self.edge].mem.peak_gb() + vc.cloud.mem.peak_marginal_gb();
         self.rec.flops_edge = vc.edges[self.edge].flops;
-        self.rec.flops_cloud = vc.flops_cloud;
+        self.rec.flops_cloud = vc.cloud.flops;
 
         // ---------------- quality -----------------------------------------
         let info = served_info(

@@ -1,0 +1,651 @@
+//! Sharded discrete-event driver: one event loop per edge site on
+//! worker threads, with the shared cloud as the only synchronization
+//! point — conservative-lookahead parallel simulation that reproduces
+//! the sequential [`super::scheduler::drive_stream`] **bit for bit**.
+//!
+//! # Model
+//!
+//! A [`ShardedSource`] partitions its state into `n_shards` independent
+//! shards (in the serving stack: one [`super::timeline::EdgeSite`]
+//! each) plus the residual shared state behind `&mut self` (the cloud
+//! device, engines, RNG, records). Every session step is classified
+//! ([`StepClass`]):
+//!
+//! * **Local** — touches only the session and its own shard (edge
+//!   compute, link serialization). Safe to run on a worker thread.
+//! * **Global** — touches shared state (cloud exec, admission-coupled
+//!   bookkeeping, cross-shard reads). Runs on the driver thread, in
+//!   global virtual-time order.
+//!
+//! # Conservative lookahead
+//!
+//! The driver alternates two phases until the trace drains:
+//!
+//! 1. **Local phase** (parallel): each shard advances its own min-heap
+//!    while its top event is Local. Each shard's heap top is its
+//!    advertised *lookahead horizon* — a valid lower bound on every
+//!    future event it can produce, because per-session event times are
+//!    non-decreasing (the same contract the sequential driver relies
+//!    on). When the source declares that global steps read shard state
+//!    ([`ShardedSource::global_reads_shards`], e.g. `LeastLoaded`
+//!    routing reading every edge's monitor at arrival), a shard may
+//!    only advance events strictly below the *other* shards' horizons,
+//!    so no local mutation can slip past a pending global read; the
+//!    phase repeats to a fixpoint as horizons move.
+//! 2. **Sync phase** (driver thread): the globally earliest event — by
+//!    the exact sequential `EventKey` order (`super::event`) — is
+//!    necessarily a Global step at fixpoint; it runs against `&mut
+//!    source`, and completions admit new sessions FCFS exactly where
+//!    the sequential driver would.
+//!
+//! # Why this is bit-for-bit, not just "close"
+//!
+//! Within a shard, events run in the sequential order (same heap, same
+//! key). Across shards, a Local step commutes with every step of other
+//! shards — it reads and writes only its own shard — so reordering it
+//! ahead of other shards' events cannot change any value it produces
+//! or they observe. Global steps are totally ordered by the sequential
+//! key. Therefore every per-location read/write sequence equals the
+//! sequential execution's, and all derived numbers are bitwise equal.
+//! Thread scheduling cannot perturb this: worker threads own disjoint
+//! shards and never touch shared state.
+//!
+//! **Contract:** a Local step must never complete a session
+//! ([`StepOutcome::Done`]) — completion frees an admission slot, and
+//! admission is only ordered correctly at global sync points. The
+//! driver rejects the trace rather than silently diverging.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Context, Result};
+
+use super::event::EventKey;
+use super::scheduler::{SessionSource, StepOutcome};
+
+/// Classification of a session's next step: may it run on the owning
+/// shard's worker thread, or does it need the synchronized driver?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepClass {
+    /// Touches only the session and its own shard.
+    Local,
+    /// Touches shared state; runs on the driver thread in global order.
+    Global,
+}
+
+/// A session/state factory whose mutable state splits into independent
+/// shards plus shared residue — the parallel counterpart of
+/// [`SessionSource`]. Associated (self-less) functions are deliberate:
+/// they are called from worker threads that hold a shard but not the
+/// source.
+pub trait ShardedSource {
+    type Session: Send;
+    type Shard: Send;
+
+    /// Number of shards. Sources reporting zero must classify every
+    /// step Global (there is nowhere to run a Local step).
+    fn n_shards(&self) -> usize;
+
+    /// Do Global steps read shard-local state (e.g. arrival routing
+    /// over cross-edge monitor beliefs)? If true the driver windows
+    /// local progress below the other shards' horizons so such reads
+    /// see exactly the sequential prefix.
+    fn global_reads_shards(&self) -> bool;
+
+    /// Build session `i` (FCFS trace order). Returns the session and
+    /// its home shard; `None` means not yet routed — it is parked on
+    /// shard 0 and its first step must be Global (the routing step).
+    fn admit(&mut self, i: usize) -> Result<(Self::Session, Option<usize>)>;
+
+    /// Virtual time of the session's next event (heap sort key).
+    fn next_time(s: &Self::Session) -> f64;
+
+    /// Classify the session's next step.
+    fn step_class(s: &Self::Session) -> StepClass;
+
+    /// Expose the shard array to the driver for the local phase.
+    fn with_shards<R>(&mut self, f: impl FnOnce(&mut [Self::Shard]) -> R) -> R;
+
+    /// Advance one Local step against the session's own shard. Must
+    /// not complete the session (see module docs).
+    fn step_local(shard: &mut Self::Shard, s: &mut Self::Session) -> Result<StepOutcome>;
+
+    /// Advance one Global step against the shared state.
+    fn step_global(&mut self, i: usize, s: &mut Self::Session) -> Result<StepOutcome>;
+
+    /// The session's current home shard (re-read after every Global
+    /// step so routing can move it).
+    fn shard_of(&self, s: &Self::Session) -> usize;
+
+    /// Fold a completed session into its record.
+    fn finish(&mut self, i: usize, s: Self::Session) -> Result<()>;
+}
+
+/// Per-shard runtime: that shard's slice of the sequential heap, plus
+/// a slot arena for its resident sessions.
+struct ShardRt<S> {
+    heap: BinaryHeap<Reverse<EventKey>>,
+    slots: Vec<Option<S>>,
+    free: Vec<usize>,
+}
+
+impl<S> ShardRt<S> {
+    fn new() -> Self {
+        ShardRt { heap: BinaryHeap::new(), slots: Vec::new(), free: Vec::new() }
+    }
+
+    fn alloc(&mut self, s: S) -> usize {
+        match self.free.pop() {
+            Some(k) => {
+                self.slots[k] = Some(s);
+                k
+            }
+            None => {
+                self.slots.push(Some(s));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    fn top(&self) -> Option<EventKey> {
+        self.heap.peek().map(|Reverse(k)| *k)
+    }
+}
+
+/// Advance one shard through its runnable Local prefix: pop-step-push
+/// while the top event is Local and (in windowed mode) strictly below
+/// `window`, the snapshot of the other shards' horizons. Returns
+/// whether any event ran.
+fn advance_local<H: ShardedSource>(
+    shard: &mut H::Shard,
+    rt: &mut ShardRt<H::Session>,
+    window: Option<EventKey>,
+) -> Result<bool> {
+    let mut advanced = false;
+    while let Some(top) = rt.top() {
+        {
+            let s = rt.slots[top.slot].as_ref().expect("heap key points at a live slot");
+            if H::step_class(s) != StepClass::Local {
+                break;
+            }
+        }
+        if let Some(w) = window {
+            if top >= w {
+                break;
+            }
+        }
+        rt.heap.pop();
+        let s = rt.slots[top.slot].as_mut().expect("heap key points at a live slot");
+        if H::step_local(shard, s)? == StepOutcome::Done {
+            bail!(
+                "sharded contract violated: local step completed session {} — \
+                 completing steps must be Global so admission stays ordered",
+                top.index
+            );
+        }
+        let t = H::next_time(s);
+        debug_assert!(
+            EventKey::new(t, top.index, top.slot) >= top,
+            "session {}: event time went backwards ({} -> {t})",
+            top.index,
+            top.time
+        );
+        rt.heap.push(Reverse(EventKey::new(t, top.index, top.slot)));
+        advanced = true;
+    }
+    Ok(advanced)
+}
+
+/// Drive `n` sessions to completion on `workers` threads (1 = run the
+/// local phases inline; the protocol and therefore the results are
+/// identical for every worker count). Event semantics are bit-for-bit
+/// those of `drive_stream(n, concurrency, &mut Sequentialized::new(h))`.
+pub fn drive_sharded<H: ShardedSource>(
+    n: usize,
+    concurrency: usize,
+    workers: usize,
+    h: &mut H,
+) -> Result<()> {
+    let cap = concurrency.max(1).min(n.max(1));
+    let workers = workers.max(1);
+    let n_rts = h.n_shards().max(1);
+    let windowed = h.global_reads_shards();
+    let mut rts: Vec<ShardRt<H::Session>> = (0..n_rts).map(|_| ShardRt::new()).collect();
+    let mut next_admit = 0usize;
+    let mut in_flight = 0usize;
+
+    // FCFS admission into shard arenas — same order, same cap, same
+    // moments (initial fill + after each completion) as the sequential
+    // driver.
+    fn admit_up_to<H: ShardedSource>(
+        h: &mut H,
+        rts: &mut [ShardRt<H::Session>],
+        next_admit: &mut usize,
+        in_flight: &mut usize,
+        n: usize,
+        cap: usize,
+    ) -> Result<()> {
+        while *next_admit < n && *in_flight < cap {
+            let i = *next_admit;
+            let (s, route) = h.admit(i)?;
+            let e = route.unwrap_or(0).min(rts.len() - 1);
+            let t = H::next_time(&s);
+            let slot = rts[e].alloc(s);
+            rts[e].heap.push(Reverse(EventKey::new(t, i, slot)));
+            *next_admit += 1;
+            *in_flight += 1;
+        }
+        Ok(())
+    }
+
+    admit_up_to(h, &mut rts, &mut next_admit, &mut in_flight, n, cap)?;
+
+    loop {
+        // ---- Local phase: run shards to fixpoint -----------------------
+        loop {
+            let tops: Vec<Option<EventKey>> = rts.iter().map(ShardRt::top).collect();
+            let windows: Vec<Option<EventKey>> = if windowed {
+                (0..rts.len())
+                    .map(|e| {
+                        tops.iter()
+                            .enumerate()
+                            .filter_map(|(o, k)| if o == e { None } else { *k })
+                            .min()
+                    })
+                    .collect()
+            } else {
+                vec![None; rts.len()]
+            };
+            // In windowed mode a shard with no window (every other shard
+            // is empty) is unconstrained: nothing can be read concurrently.
+            let runnable: Vec<bool> = (0..rts.len())
+                .map(|e| match tops[e] {
+                    Some(k) => match windows[e] {
+                        Some(w) if windowed => k < w,
+                        _ => true,
+                    },
+                    None => false,
+                })
+                .collect();
+            let advanced = h.with_shards(|shards| -> Result<bool> {
+                let mut work: Vec<(&mut H::Shard, &mut ShardRt<H::Session>, Option<EventKey>)> =
+                    shards
+                        .iter_mut()
+                        .zip(rts.iter_mut())
+                        .enumerate()
+                        .filter(|(e, _)| runnable[*e])
+                        .map(|(e, (sh, rt))| (sh, rt, windows[e]))
+                        .collect();
+                if work.is_empty() {
+                    return Ok(false);
+                }
+                if workers <= 1 || work.len() <= 1 {
+                    let mut any = false;
+                    for (sh, rt, w) in work {
+                        any |= advance_local::<H>(sh, rt, w)?;
+                    }
+                    return Ok(any);
+                }
+                // Round-robin the runnable shards over at most `workers`
+                // scoped threads; each thread owns disjoint shard state,
+                // so scheduling cannot affect the result.
+                let buckets = workers.min(work.len());
+                let mut lanes: Vec<Vec<_>> = (0..buckets).map(|_| Vec::new()).collect();
+                for (k, item) in work.drain(..).enumerate() {
+                    lanes[k % buckets].push(item);
+                }
+                let results: Vec<Result<bool>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = lanes
+                        .into_iter()
+                        .map(|lane| {
+                            scope.spawn(move || -> Result<bool> {
+                                let mut any = false;
+                                for (sh, rt, w) in lane {
+                                    any |= advance_local::<H>(sh, rt, w)?;
+                                }
+                                Ok(any)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|j| j.join().expect("sharded worker thread panicked"))
+                        .collect()
+                });
+                let mut any = false;
+                for r in results {
+                    any |= r?;
+                }
+                Ok(any)
+            })?;
+            if !advanced {
+                break;
+            }
+        }
+
+        // ---- Sync phase: one Global step at the global minimum ---------
+        let Some((e, key)) = rts
+            .iter()
+            .enumerate()
+            .filter_map(|(e, rt)| rt.top().map(|k| (e, k)))
+            .min_by_key(|&(_, k)| k)
+        else {
+            break; // all heaps drained
+        };
+        rts[e].heap.pop();
+        let mut s = rts[e].slots[key.slot].take().expect("heap key points at a live slot");
+        rts[e].free.push(key.slot);
+        if H::step_class(&s) == StepClass::Local {
+            // Only reachable if a horizon was invalid (a session's time
+            // went backwards) — the local fixpoint would have run it.
+            bail!(
+                "sharded scheduling stuck: earliest event (session {}) is Local \
+                 but was not runnable — source broke the non-decreasing-time contract",
+                key.index
+            );
+        }
+        let out = h
+            .step_global(key.index, &mut s)
+            .with_context(|| format!("global step of session {}", key.index))?;
+        match out {
+            StepOutcome::Pending => {
+                let home = h.shard_of(&s).min(rts.len() - 1);
+                let t = H::next_time(&s);
+                let slot = rts[home].alloc(s);
+                rts[home].heap.push(Reverse(EventKey::new(t, key.index, slot)));
+            }
+            StepOutcome::Done => {
+                h.finish(key.index, s)?;
+                in_flight -= 1;
+                admit_up_to(h, &mut rts, &mut next_admit, &mut in_flight, n, cap)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Adapter running a [`ShardedSource`] through the sequential
+/// [`SessionSource`] interface — the retained reference path: the same
+/// admission/step/finish logic, driven by `drive_stream`'s single heap.
+/// The determinism suite pins `drive_sharded` against exactly this.
+pub struct Sequentialized<H: ShardedSource> {
+    pub inner: H,
+}
+
+impl<H: ShardedSource> Sequentialized<H> {
+    pub fn new(inner: H) -> Self {
+        Sequentialized { inner }
+    }
+
+    pub fn into_inner(self) -> H {
+        self.inner
+    }
+}
+
+impl<H: ShardedSource> SessionSource for Sequentialized<H> {
+    type Session = H::Session;
+
+    fn admit(&mut self, i: usize) -> Result<Self::Session> {
+        let (s, _route) = self.inner.admit(i)?;
+        Ok(s)
+    }
+
+    fn next_time(&self, s: &Self::Session) -> f64 {
+        H::next_time(s)
+    }
+
+    fn step(&mut self, i: usize, s: &mut Self::Session) -> Result<StepOutcome> {
+        match H::step_class(s) {
+            StepClass::Global => self.inner.step_global(i, s),
+            StepClass::Local => {
+                let e = self.inner.shard_of(s);
+                self.inner.with_shards(|shards| H::step_local(&mut shards[e], s))
+            }
+        }
+    }
+
+    fn finish(&mut self, i: usize, s: Self::Session) -> Result<()> {
+        self.inner.finish(i, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::drive_stream;
+    use crate::util::Rng;
+
+    /// One simulated request: arrival, per-step (service, class), home
+    /// shard (`None` = routed by the first global step, LL-style).
+    #[derive(Clone)]
+    struct Spec {
+        arrival: f64,
+        steps: Vec<(f64, StepClass)>,
+        route: Option<usize>,
+    }
+
+    struct MockShard {
+        busy: f64,
+    }
+
+    struct MockSess {
+        steps: Vec<(f64, StepClass)>,
+        at: usize,
+        t: f64,
+        shard: usize,
+        trace: Vec<u64>,
+    }
+
+    /// Mini fleet simulation: per-shard busy cursors advanced by Local
+    /// steps, one shared cloud cursor advanced by Global steps. Same
+    /// shape as the real timeline, small enough to run thousands of
+    /// randomized traces.
+    struct MockFleet {
+        specs: Vec<Spec>,
+        shards: Vec<MockShard>,
+        cloud_busy: f64,
+        ll_routing: bool,
+        finished: Vec<Option<(Vec<u64>, u64)>>,
+    }
+
+    impl MockFleet {
+        fn new(specs: Vec<Spec>, n_shards: usize, ll_routing: bool) -> Self {
+            let finished = vec![None; specs.len()];
+            MockFleet {
+                specs,
+                shards: (0..n_shards).map(|_| MockShard { busy: 0.0 }).collect(),
+                cloud_busy: 0.0,
+                ll_routing,
+                finished,
+            }
+        }
+
+        fn fingerprint(&self) -> Vec<u64> {
+            let mut out: Vec<u64> = self.shards.iter().map(|s| s.busy.to_bits()).collect();
+            out.push(self.cloud_busy.to_bits());
+            out
+        }
+    }
+
+    impl ShardedSource for MockFleet {
+        type Session = MockSess;
+        type Shard = MockShard;
+
+        fn n_shards(&self) -> usize {
+            self.shards.len()
+        }
+
+        fn global_reads_shards(&self) -> bool {
+            self.ll_routing
+        }
+
+        fn admit(&mut self, i: usize) -> Result<(MockSess, Option<usize>)> {
+            let spec = self.specs[i].clone();
+            let s = MockSess {
+                steps: spec.steps,
+                at: 0,
+                t: spec.arrival,
+                shard: spec.route.unwrap_or(0),
+                trace: Vec::new(),
+            };
+            Ok((s, spec.route))
+        }
+
+        fn next_time(s: &MockSess) -> f64 {
+            s.t
+        }
+
+        fn step_class(s: &MockSess) -> StepClass {
+            s.steps[s.at].1
+        }
+
+        fn with_shards<R>(&mut self, f: impl FnOnce(&mut [MockShard]) -> R) -> R {
+            f(&mut self.shards)
+        }
+
+        fn step_local(shard: &mut MockShard, s: &mut MockSess) -> Result<StepOutcome> {
+            let (service, class) = s.steps[s.at];
+            assert_eq!(class, StepClass::Local);
+            s.trace.push(s.t.to_bits());
+            let start = shard.busy.max(s.t);
+            let end = start + service;
+            shard.busy = end;
+            s.t = end;
+            s.at += 1;
+            if s.at == s.steps.len() {
+                Ok(StepOutcome::Done) // contract violation, on purpose in one test
+            } else {
+                Ok(StepOutcome::Pending)
+            }
+        }
+
+        fn step_global(&mut self, _i: usize, s: &mut MockSess) -> Result<StepOutcome> {
+            let (service, class) = s.steps[s.at];
+            assert_eq!(class, StepClass::Global);
+            s.trace.push(s.t.to_bits());
+            if self.ll_routing && s.at == 0 {
+                // LL-style arrival routing: argmin over the shard
+                // cursors — a cross-shard read that only the windowed
+                // protocol orders correctly.
+                let mut pick = 0usize;
+                for (e, sh) in self.shards.iter().enumerate() {
+                    if sh.busy < self.shards[pick].busy {
+                        pick = e;
+                    }
+                }
+                s.shard = pick;
+            }
+            let start = self.cloud_busy.max(s.t);
+            let end = start + service;
+            self.cloud_busy = end;
+            s.t = end;
+            s.at += 1;
+            if s.at == s.steps.len() {
+                Ok(StepOutcome::Done)
+            } else {
+                Ok(StepOutcome::Pending)
+            }
+        }
+
+        fn shard_of(&self, s: &MockSess) -> usize {
+            s.shard
+        }
+
+        fn finish(&mut self, i: usize, s: MockSess) -> Result<()> {
+            assert_eq!(s.at, s.steps.len(), "request {i} finished early");
+            assert!(self.finished[i].is_none(), "request {i} finished twice");
+            self.finished[i] = Some((s.trace, s.t.to_bits()));
+            Ok(())
+        }
+    }
+
+    /// Random Poisson trace; coarse service quantization manufactures
+    /// event-time ties so the index tie-break is exercised.
+    fn gen_specs(r: &mut Rng, n: usize, n_shards: usize, ll: bool) -> Vec<Spec> {
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += (r.f64() * 8.0).round() * 0.125;
+                let n_steps = 1 + r.below(5);
+                let mut steps: Vec<(f64, StepClass)> = (0..n_steps)
+                    .map(|_| {
+                        let service = (r.f64() * 4.0).round() * 0.125;
+                        let class =
+                            if r.bool(0.5) { StepClass::Local } else { StepClass::Global };
+                        (service, class)
+                    })
+                    .collect();
+                // Completion must be a Global step (driver contract).
+                steps.push(((r.f64() * 4.0).round() * 0.125, StepClass::Global));
+                if ll {
+                    // LL-style: unrouted, first step is the routing step.
+                    steps[0].1 = StepClass::Global;
+                }
+                let route = if ll { None } else { Some(r.below(n_shards)) };
+                Spec { arrival: t, steps, route }
+            })
+            .collect()
+    }
+
+    fn run_pair(specs: &[Spec], n_shards: usize, ll: bool, cap: usize, workers: usize) {
+        let mut seq = Sequentialized::new(MockFleet::new(specs.to_vec(), n_shards, ll));
+        drive_stream(specs.len(), cap, &mut seq).unwrap();
+        let oracle = seq.into_inner();
+        let mut par = MockFleet::new(specs.to_vec(), n_shards, ll);
+        drive_sharded(specs.len(), cap, workers, &mut par).unwrap();
+        assert_eq!(
+            par.fingerprint(),
+            oracle.fingerprint(),
+            "cap {cap} workers {workers}: cursors diverged"
+        );
+        for (i, (a, b)) in par.finished.iter().zip(oracle.finished.iter()).enumerate() {
+            assert_eq!(a, b, "cap {cap} workers {workers}: request {i} diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_reproduces_sequential_on_random_traces() {
+        let mut r = Rng::seed_from_u64(0x5AAD);
+        for _ in 0..30 {
+            let n_shards = 1 + r.below(4);
+            let specs = gen_specs(&mut r, 20 + r.below(40), n_shards, false);
+            for &cap in &[1usize, 4, usize::MAX] {
+                for &workers in &[1usize, 2, 4] {
+                    run_pair(&specs, n_shards, false, cap, workers);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_ll_routing_reproduces_sequential() {
+        let mut r = Rng::seed_from_u64(0x11AA);
+        for _ in 0..30 {
+            let n_shards = 2 + r.below(3);
+            let specs = gen_specs(&mut r, 20 + r.below(40), n_shards, true);
+            for &cap in &[2usize, 8, usize::MAX] {
+                for &workers in &[2usize, 4] {
+                    run_pair(&specs, n_shards, true, cap, workers);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_completion_violates_the_contract() {
+        // A session whose final step is Local: the driver must refuse
+        // rather than mis-order the successor's admission.
+        let specs =
+            vec![Spec { arrival: 0.0, steps: vec![(1.0, StepClass::Local)], route: Some(0) }];
+        let mut src = MockFleet::new(specs, 1, false);
+        let err = drive_sharded(1, 1, 2, &mut src).unwrap_err();
+        assert!(err.to_string().contains("contract"), "{err}");
+    }
+
+    #[test]
+    fn empty_trace_is_a_noop() {
+        let mut src = MockFleet::new(Vec::new(), 2, false);
+        drive_sharded(0, 4, 4, &mut src).unwrap();
+        assert_eq!(src.cloud_busy, 0.0);
+    }
+}

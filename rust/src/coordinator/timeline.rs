@@ -25,6 +25,17 @@
 //! A fleet of one is the original two-site pair: edge 0 takes the
 //! cluster seed unchanged and every charge runs through the same
 //! arithmetic, so single-edge results reproduce bit for bit.
+//!
+//! # Ownership for parallel simulation
+//!
+//! The cluster's state splits along the fleet boundary:
+//! [`EdgeSite`] is the per-worker shard (device + link cursors +
+//! monitor + memory ledger — nothing another edge ever writes except
+//! the cloud-wait advertisement), and [`CloudDevice`] is the single
+//! synchronized resource. [`VirtualCluster::split_mut`] hands the
+//! sharded driver (`coordinator::sharded`) exactly that partition; the
+//! sequential methods on [`VirtualCluster`] are the same arithmetic on
+//! the same fields, so the two drivers charge identical times.
 
 use crate::cluster::network::serialize_s_with;
 use crate::cluster::{DeviceSim, Dir, Link, MemTracker, SystemMonitor};
@@ -56,15 +67,67 @@ pub struct EdgeSite {
     down_busy: f64,
 }
 
+/// The shared cloud device: cost model, memory ledger, FLOPs counter,
+/// and the single occupancy cursor every edge's cloud-side work
+/// serializes on. Split out of [`VirtualCluster`] so the sharded
+/// driver's ownership story is explicit: per-worker [`EdgeSite`] state
+/// advances independently; this struct is the one synchronization
+/// point.
+#[derive(Debug)]
+pub struct CloudDevice {
+    pub dev: DeviceSim,
+    pub mem: MemTracker,
+    pub flops: f64,
+    busy: f64,
+}
+
+impl EdgeSite {
+    /// This edge device's occupancy cursor (busy until, virtual s).
+    pub fn busy_s(&self) -> f64 {
+        self.busy
+    }
+
+    /// Run `secs` of compute consuming `flops` on this edge, no earlier
+    /// than `earliest`. Returns (start, end). Touches only this site
+    /// (cursor, FLOPs ledger, own monitor) — safe from a sharded-driver
+    /// worker thread that owns the shard.
+    pub fn exec(&mut self, earliest: f64, secs: f64, flops: f64, id: EdgeId) -> (f64, f64) {
+        let start = self.busy.max(earliest);
+        let end = start + secs;
+        self.busy = end;
+        self.flops += flops;
+        // Queue-depth observation: how long the op waited.
+        self.monitor.observe_wait(Site::Edge(id), start - earliest);
+        (start, end)
+    }
+}
+
+impl CloudDevice {
+    /// The cloud device's occupancy cursor (busy until, virtual s).
+    pub fn busy_s(&self) -> f64 {
+        self.busy
+    }
+
+    /// Run `secs` of compute consuming `flops` on the cloud, no earlier
+    /// than `earliest`. Returns (start, end). Does NOT advertise the
+    /// queue wait to the edge monitors — that broadcast needs the whole
+    /// fleet and lives in [`VirtualCluster::exec`].
+    pub fn exec(&mut self, earliest: f64, secs: f64, flops: f64) -> (f64, f64) {
+        let start = self.busy.max(earliest);
+        let end = start + secs;
+        self.busy = end;
+        self.flops += flops;
+        (start, end)
+    }
+}
+
 #[derive(Debug)]
 pub struct VirtualCluster {
     /// The edge fleet. A default (fleet-less) config yields exactly one
     /// site built from the top-level `edge`/`network` fields.
     pub edges: Vec<EdgeSite>,
-    pub cloud: DeviceSim,
-    pub cloud_mem: MemTracker,
-    pub flops_cloud: f64,
-    cloud_busy: f64,
+    /// The one shared cloud device all edges contend for.
+    pub cloud: CloudDevice,
 }
 
 impl VirtualCluster {
@@ -86,11 +149,21 @@ impl VirtualCluster {
             .collect();
         VirtualCluster {
             edges,
-            cloud: DeviceSim::new(cfg.cloud),
-            cloud_mem: MemTracker::new(),
-            flops_cloud: 0.0,
-            cloud_busy: 0.0,
+            cloud: CloudDevice {
+                dev: DeviceSim::new(cfg.cloud),
+                mem: MemTracker::new(),
+                flops: 0.0,
+                busy: 0.0,
+            },
         }
+    }
+
+    /// Split the cluster into its independently-advancing edge shards
+    /// and the shared cloud — the ownership boundary the sharded driver
+    /// parallelizes across (edges on worker threads, cloud on the sync
+    /// thread).
+    pub fn split_mut(&mut self) -> (&mut [EdgeSite], &mut CloudDevice) {
+        (&mut self.edges, &mut self.cloud)
     }
 
     pub fn n_edges(&self) -> usize {
@@ -100,7 +173,7 @@ impl VirtualCluster {
     pub fn busy_until(&self, site: Site) -> f64 {
         match site {
             Site::Edge(e) => self.edges[e].busy,
-            Site::Cloud => self.cloud_busy,
+            Site::Cloud => self.cloud.busy,
         }
     }
 
@@ -110,21 +183,9 @@ impl VirtualCluster {
     /// monitor (the shared verifier piggybacks its queue state).
     pub fn exec(&mut self, site: Site, earliest: f64, secs: f64, flops: f64) -> (f64, f64) {
         match site {
-            Site::Edge(e) => {
-                let edge = &mut self.edges[e];
-                let start = edge.busy.max(earliest);
-                let end = start + secs;
-                edge.busy = end;
-                edge.flops += flops;
-                // Queue-depth observation: how long the op waited.
-                edge.monitor.observe_wait(site, start - earliest);
-                (start, end)
-            }
+            Site::Edge(e) => self.edges[e].exec(earliest, secs, flops, e),
             Site::Cloud => {
-                let start = self.cloud_busy.max(earliest);
-                let end = start + secs;
-                self.cloud_busy = end;
-                self.flops_cloud += flops;
+                let (start, end) = self.cloud.exec(earliest, secs, flops);
                 for edge in &mut self.edges {
                     edge.monitor.observe_wait(Site::Cloud, start - earliest);
                 }
@@ -198,14 +259,14 @@ impl VirtualCluster {
     pub fn mem(&mut self, site: Site) -> &mut MemTracker {
         match site {
             Site::Edge(e) => &mut self.edges[e].mem,
-            Site::Cloud => &mut self.cloud_mem,
+            Site::Cloud => &mut self.cloud.mem,
         }
     }
 
     pub fn dev(&self, site: Site) -> &DeviceSim {
         match site {
             Site::Edge(e) => &self.edges[e].dev,
-            Site::Cloud => &self.cloud,
+            Site::Cloud => &self.cloud.dev,
         }
     }
 
@@ -256,7 +317,7 @@ mod tests {
         let (s3, _) = c.exec(Site::Cloud, 0.2, 0.1, 1e9);
         assert_eq!(s3, 0.2);
         assert_eq!(c.edges[0].flops, 2e9);
-        assert_eq!(c.flops_cloud, 1e9);
+        assert_eq!(c.cloud.flops, 1e9);
     }
 
     #[test]

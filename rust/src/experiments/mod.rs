@@ -339,7 +339,8 @@ pub fn concurrency_sweep(coord: &mut Coordinator, n: usize) -> Result<(Table, Va
                     .seed(9)
                     .concurrency(conc);
                 let res = serve(coord, &spec)?;
-                let sum = summarize(&res.records);
+                let sum = summarize(&res.records)
+                    .with_sim_rate(res.wall_clock_s, res.events_per_s);
                 table.row(vec![
                     method.name().to_string(),
                     f1(rate),
@@ -359,6 +360,8 @@ pub fn concurrency_sweep(coord: &mut Coordinator, n: usize) -> Result<(Table, Va
                     ("latency_p50_s", num(sum.latency_p50_s)),
                     ("latency_p99_s", num(sum.latency_p99_s)),
                     ("batch_amortization", num(res.batch_amortization)),
+                    ("wall_clock_s", num(sum.wall_clock_s)),
+                    ("events_per_s", num(sum.events_per_s)),
                 ]));
             }
         }
@@ -630,7 +633,7 @@ fn run_fleet_cell(
         .concurrency(conc)
         .assign(assign);
     let res = serve(coord, &spec)?;
-    let sum = summarize(&res.records);
+    let sum = summarize(&res.records).with_sim_rate(res.wall_clock_s, res.events_per_s);
     table.row(vec![
         label.to_string(),
         n_req.to_string(),
@@ -652,6 +655,8 @@ fn run_fleet_cell(
         ("replans_per_req", num(sum.replans_per_req)),
         ("cloud_wait_s", num(res.cloud_wait_s)),
         ("throughput_tps", num(sum.throughput_tps)),
+        ("wall_clock_s", num(sum.wall_clock_s)),
+        ("events_per_s", num(sum.events_per_s)),
     ]));
     fleet_edge_rows(&res, label, table, rows);
     Ok(res)

@@ -5,6 +5,7 @@
 //!   probe [--seed N]             — probe one synthetic item, print MAS
 //!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
 //!         [--concurrency C] [--network SC] [--edges E] [--assign A]
+//!         [--workers W]
 //!                                — serve a trace through the
 //!                                  unified policy API, print summary.
 //!                                  Modes: msao|no-modality|no-collab|
@@ -18,7 +19,10 @@
 //!                                  serves on a homogeneous fleet of E
 //!                                  edge sites sharing the cloud, and
 //!                                  --assign picks the request routing
-//!                                  (rr|least-loaded|pinned:<edge>).
+//!                                  (rr|least-loaded|pinned:<edge>);
+//!                                  --workers runs the sharded parallel
+//!                                  simulator (0 = auto, results are
+//!                                  bit-for-bit identical).
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
 //!                                  (fig4|table1|fig5..fig9|concurrency|
 //!                                  mixed|volatility|fleet|main|all)
@@ -106,12 +110,14 @@ fn main() -> Result<()> {
             let (mode, spec) = cli::serve_spec(&args)?;
             let n = spec.items.len();
             let conc = spec.effective_concurrency(&cfg);
+            let workers = spec.effective_workers(&cfg);
             let n_edges = cfg.edge_sites().len();
             let mut coord = Coordinator::new(cfg)?;
             let res = serve(&mut coord, &spec)?;
             let sum = summarize(&res.records);
             println!(
-                "mode={mode} n={n} seed={} concurrency={conc} edges={n_edges} assign={}",
+                "mode={mode} n={n} seed={} concurrency={conc} edges={n_edges} assign={} \
+                 workers={workers}",
                 spec.seed,
                 spec.assign.name()
             );

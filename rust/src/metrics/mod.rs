@@ -102,6 +102,22 @@ pub struct Summary {
     /// Monitor-driven mid-stream replans per request (0 on static links).
     pub replans_per_req: f64,
     pub tokens_per_req: f64,
+    /// Real (wall-clock) seconds the simulation itself took — not
+    /// virtual time. Zero out of [`summarize`]; callers with a
+    /// `TraceResult` in hand stamp it via [`Summary::with_sim_rate`].
+    pub wall_clock_s: f64,
+    /// Scheduler events per wall-clock second (simulation rate).
+    pub events_per_s: f64,
+}
+
+impl Summary {
+    /// Stamp the simulation-rate observability fields measured by the
+    /// trace driver (they live on the `TraceResult`, not the records).
+    pub fn with_sim_rate(mut self, wall_clock_s: f64, events_per_s: f64) -> Self {
+        self.wall_clock_s = wall_clock_s;
+        self.events_per_s = events_per_s;
+        self
+    }
 }
 
 pub fn summarize(records: &[ExecRecord]) -> Summary {
@@ -142,6 +158,8 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
         offloads_per_req: mean(&records.iter().map(|r| r.offloads as f64).collect::<Vec<_>>()),
         replans_per_req: mean(&records.iter().map(|r| r.replans as f64).collect::<Vec<_>>()),
         tokens_per_req: tokens as f64 / n as f64,
+        wall_clock_s: 0.0,
+        events_per_s: 0.0,
     }
 }
 

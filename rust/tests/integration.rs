@@ -7,7 +7,7 @@ use std::sync::{Mutex, OnceLock};
 
 use msao::baselines::{cloud_only, edge_only, perllm, Baseline};
 use msao::cluster::NetEstimate;
-use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, Segment};
+use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, NetworkScenario, Segment};
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
@@ -588,6 +588,93 @@ fn fleet_of_one_reproduces_single_edge_bit_for_bit() {
         }
         c.cfg.fleet = Vec::new();
     }
+}
+
+#[test]
+fn sharded_serve_reproduces_sequential_bit_for_bit() {
+    require_artifacts!();
+    // The parallel-simulation golden: `--workers >= 2` routes the trace
+    // through the sharded per-edge driver, which must reproduce the
+    // sequential driver bit for bit — every record (times, bytes,
+    // flops, quality), the fleet totals, the per-link breakdown, and
+    // the event-sequence hash — on a heterogeneous fleet of three
+    // (including a flaky Markov edge), across every assign strategy.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let base = c.cfg.network;
+    let mut mid = base;
+    mid.bandwidth_mbps = 120.0;
+    mid.rtt_ms = 40.0;
+    c.cfg.fleet = vec![
+        EdgeSiteCfg { device: c.cfg.edge, network: base, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg { device: c.cfg.edge, network: mid, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg {
+            device: c.cfg.edge,
+            network: base,
+            dynamics: NetworkDynamics::Scenario(NetworkScenario::Flaky),
+        },
+    ];
+    let make_spec = |assign: Assign, workers: usize| {
+        let mut gen = Generator::new(33);
+        let n = 6;
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 2.5);
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(5)
+            .concurrency(4)
+            .assign(assign)
+            .workers(workers)
+    };
+    for assign in [Assign::RoundRobin, Assign::LeastLoaded, Assign::Pinned(0)] {
+        let golden = serve(&mut c, &make_spec(assign, 1)).unwrap();
+        for workers in [2usize, 4] {
+            let res = serve(&mut c, &make_spec(assign, workers)).unwrap();
+            // Cheapest divergence detector first: the event-sequence
+            // hash both drivers fold over every (request, time) step.
+            assert_eq!(golden.events, res.events, "{assign:?} w{workers}: event count");
+            assert_eq!(
+                golden.events_hash, res.events_hash,
+                "{assign:?} w{workers}: event-sequence hash"
+            );
+            for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+                assert_records_bitwise_equal(a, b, &format!("{assign:?} w{workers} req {i}"));
+                assert_eq!(a.edge_id, b.edge_id, "{assign:?} w{workers} req {i}: edge id");
+            }
+            assert_eq!(golden.uplink_bytes, res.uplink_bytes, "{assign:?} w{workers}: uplink");
+            assert_eq!(
+                golden.downlink_bytes, res.downlink_bytes,
+                "{assign:?} w{workers}: downlink"
+            );
+            assert_eq!(
+                golden.batch_amortization.to_bits(),
+                res.batch_amortization.to_bits(),
+                "{assign:?} w{workers}: amortization"
+            );
+            assert_eq!(
+                golden.cloud_wait_s.to_bits(),
+                res.cloud_wait_s.to_bits(),
+                "{assign:?} w{workers}: cloud wait"
+            );
+            assert_eq!(
+                golden.edge_wait_s.to_bits(),
+                res.edge_wait_s.to_bits(),
+                "{assign:?} w{workers}: edge wait"
+            );
+            for (ga, ra) in golden.per_edge.iter().zip(&res.per_edge) {
+                let what = format!("{assign:?} w{workers} edge {}", ga.edge_id);
+                assert_eq!(ga.requests, ra.requests, "{what}: requests");
+                assert_eq!(ga.uplink_bytes, ra.uplink_bytes, "{what}: uplink");
+                assert_eq!(ga.downlink_bytes, ra.downlink_bytes, "{what}: downlink");
+                assert_eq!(
+                    ga.net_estimate.bandwidth_mbps.to_bits(),
+                    ra.net_estimate.bandwidth_mbps.to_bits(),
+                    "{what}: bw estimate"
+                );
+            }
+        }
+    }
+    c.cfg.fleet = Vec::new();
 }
 
 #[test]

@@ -9,7 +9,10 @@ use msao::config::{
 use msao::coordinator::scheduler::{
     drive, drive_linear_ref, drive_stream, SessionSource, StepOutcome,
 };
-use msao::coordinator::{edge_seed, least_loaded, Batcher, Site, VirtualCluster};
+use msao::coordinator::{
+    drive_sharded, edge_seed, least_loaded, Batcher, CloudDevice, EdgeSite, Sequentialized,
+    ShardedSource, Site, StepClass, VirtualCluster,
+};
 use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::json::Value;
@@ -377,8 +380,8 @@ fn prop_fleet_round_robin_equals_independent_single_edges_when_cloud_uncontended
             );
         }
         assert_eq!(
-            fleet.flops_cloud.to_bits(),
-            singles.iter().map(|s| s.flops_cloud).sum::<f64>().to_bits(),
+            fleet.cloud.flops.to_bits(),
+            singles.iter().map(|s| s.cloud.flops).sum::<f64>().to_bits(),
             "seed {seed}: cloud flops must sum across the fleet"
         );
     }
@@ -514,6 +517,239 @@ fn prop_heap_scheduler_reproduces_linear_scan_step_sequence() {
                 src.peak_live
             );
             assert!(hs.iter().all(|s| s.at == s.times.len()), "seed {seed}: starved");
+        }
+    }
+}
+
+// --- sharded parallel driver ---------------------------------------------------
+
+/// One request for the sharded-vs-sequential property: arrival, per-step
+/// (service scale, class), home edge (`None` = routed by the first
+/// Global step, LeastLoaded-style).
+#[derive(Clone)]
+struct ShardSpec {
+    arrival: f64,
+    steps: Vec<(f64, StepClass)>,
+    route: Option<usize>,
+}
+
+struct TimelineShard {
+    site: EdgeSite,
+    id: usize,
+}
+
+struct TimelineSess {
+    steps: Vec<(f64, StepClass)>,
+    at: usize,
+    t: f64,
+    shard: usize,
+    trace: Vec<u64>,
+}
+
+/// Real-timeline fleet under the sharded driver: Local steps sample the
+/// edge's (per-edge-seeded, flaky Markov) link and charge the edge's
+/// own device cursor through [`EdgeSite::exec`] — genuine shard-local
+/// mutation including the lazy Markov chain extension — while Global
+/// steps serialize on the shared [`CloudDevice`]. In LL mode the first
+/// Global step routes by a cross-shard read (the edge cursors), which
+/// only the windowed protocol orders correctly.
+struct TimelineFleet {
+    specs: Vec<ShardSpec>,
+    shards: Vec<TimelineShard>,
+    cloud: CloudDevice,
+    ll: bool,
+    finished: Vec<Option<Vec<u64>>>,
+}
+
+impl TimelineFleet {
+    fn new(specs: Vec<ShardSpec>, k: usize, seed: u64, ll: bool) -> Self {
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        cfg.dynamics = NetworkDynamics::Scenario(NetworkScenario::Flaky);
+        cfg.replicate_edges(k).unwrap();
+        let vc = VirtualCluster::new(&cfg, seed);
+        let finished = vec![None; specs.len()];
+        TimelineFleet {
+            specs,
+            shards: vc
+                .edges
+                .into_iter()
+                .enumerate()
+                .map(|(id, site)| TimelineShard { site, id })
+                .collect(),
+            cloud: vc.cloud,
+            ll,
+            finished,
+        }
+    }
+
+    fn fingerprint(&self) -> Vec<u64> {
+        let mut out: Vec<u64> = self
+            .shards
+            .iter()
+            .flat_map(|s| [s.site.busy_s().to_bits(), s.site.flops.to_bits()])
+            .collect();
+        out.push(self.cloud.busy_s().to_bits());
+        out.push(self.cloud.flops.to_bits());
+        for t in self.finished.iter().flatten() {
+            out.extend_from_slice(t);
+        }
+        out
+    }
+}
+
+impl ShardedSource for TimelineFleet {
+    type Session = TimelineSess;
+    type Shard = TimelineShard;
+
+    fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn global_reads_shards(&self) -> bool {
+        self.ll
+    }
+
+    fn admit(&mut self, i: usize) -> anyhow::Result<(TimelineSess, Option<usize>)> {
+        let spec = self.specs[i].clone();
+        let s = TimelineSess {
+            steps: spec.steps,
+            at: 0,
+            t: spec.arrival,
+            shard: spec.route.unwrap_or(0),
+            trace: Vec::new(),
+        };
+        Ok((s, spec.route))
+    }
+
+    fn next_time(s: &TimelineSess) -> f64 {
+        s.t
+    }
+
+    fn step_class(s: &TimelineSess) -> StepClass {
+        s.steps[s.at].1
+    }
+
+    fn with_shards<R>(&mut self, f: impl FnOnce(&mut [TimelineShard]) -> R) -> R {
+        f(&mut self.shards)
+    }
+
+    fn step_local(shard: &mut TimelineShard, s: &mut TimelineSess) -> anyhow::Result<StepOutcome> {
+        let (scale, class) = s.steps[s.at];
+        assert_eq!(class, StepClass::Local);
+        // Service time depends on the edge's *sampled* link conditions:
+        // the lazy Markov chain extends under the worker thread, and any
+        // ordering divergence changes the bits downstream.
+        let (bw, _rtt) = shard.site.link.conditions_at(s.t);
+        let (start, end) = shard.site.exec(s.t, scale * 300.0 / bw, 1e9, shard.id);
+        s.trace.push(start.to_bits());
+        s.trace.push(end.to_bits());
+        s.t = end;
+        s.at += 1;
+        assert!(s.at < s.steps.len(), "generator puts the Global completion step last");
+        Ok(StepOutcome::Pending)
+    }
+
+    fn step_global(&mut self, _i: usize, s: &mut TimelineSess) -> anyhow::Result<StepOutcome> {
+        let (service, class) = s.steps[s.at];
+        assert_eq!(class, StepClass::Global);
+        if self.ll && s.at == 0 {
+            // LeastLoaded-style arrival routing: argmin over the edge
+            // cursors — a cross-shard read at the arrival event.
+            let mut pick = 0usize;
+            for (e, sh) in self.shards.iter().enumerate() {
+                if sh.site.busy_s() < self.shards[pick].site.busy_s() {
+                    pick = e;
+                }
+            }
+            s.shard = pick;
+        }
+        let (start, end) = self.cloud.exec(s.t, service, 2e9);
+        s.trace.push(start.to_bits());
+        s.trace.push(end.to_bits());
+        s.t = end;
+        s.at += 1;
+        if s.at == s.steps.len() {
+            Ok(StepOutcome::Done)
+        } else {
+            Ok(StepOutcome::Pending)
+        }
+    }
+
+    fn shard_of(&self, s: &TimelineSess) -> usize {
+        s.shard
+    }
+
+    fn finish(&mut self, i: usize, s: TimelineSess) -> anyhow::Result<()> {
+        assert_eq!(s.at, s.steps.len(), "request {i} finished early");
+        let mut trace = s.trace;
+        trace.push(s.t.to_bits());
+        self.finished[i] = Some(trace);
+        Ok(())
+    }
+}
+
+/// Random Poisson trace over the fleet. Route per the assign strategy:
+/// 0 = pinned to one edge, 1 = round-robin, 2 = LL-style (unrouted,
+/// first step Global). Coarse service quantization manufactures ties.
+fn gen_shard_specs(r: &mut Rng, n: usize, k: usize, assign: usize) -> Vec<ShardSpec> {
+    let pinned = r.below(k);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += (r.f64() * 8.0).round() * 0.125;
+            let n_steps = 1 + r.below(4);
+            let mut steps: Vec<(f64, StepClass)> = (0..n_steps)
+                .map(|_| {
+                    let service = 0.125 + (r.f64() * 4.0).round() * 0.125;
+                    let class = if r.bool(0.5) { StepClass::Local } else { StepClass::Global };
+                    (service, class)
+                })
+                .collect();
+            // Completion must be Global (driver contract).
+            steps.push((0.125 + (r.f64() * 4.0).round() * 0.125, StepClass::Global));
+            let route = match assign {
+                0 => Some(pinned),
+                1 => Some(i % k),
+                _ => {
+                    steps[0].1 = StepClass::Global; // the routing step
+                    None
+                }
+            };
+            ShardSpec { arrival: t, steps, route }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sharded_timeline_fleet_bitwise_equal_sequential() {
+    // The tentpole pin at the timeline level: on random Poisson traces
+    // over a fleet with per-edge flaky Markov links, the sharded driver
+    // (workers 2 and 4) reproduces the sequential driver bit for bit —
+    // edge cursors, FLOPs ledgers, Markov-dependent service times, and
+    // every per-request event time — across pinned, round-robin, and
+    // LeastLoaded-style routing.
+    for seed in cases(12) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x44AD);
+        let k = 2 + r.below(3);
+        let n = 15 + r.below(30);
+        for assign in 0..3usize {
+            let specs = gen_shard_specs(&mut r, n, k, assign);
+            for &cap in &[2usize, usize::MAX] {
+                let mut oracle =
+                    Sequentialized::new(TimelineFleet::new(specs.clone(), k, seed, assign == 2));
+                drive_stream(n, cap, &mut oracle).unwrap();
+                let oracle = oracle.into_inner();
+                for &workers in &[2usize, 4] {
+                    let mut par = TimelineFleet::new(specs.clone(), k, seed, assign == 2);
+                    drive_sharded(n, cap, workers, &mut par).unwrap();
+                    assert_eq!(
+                        par.fingerprint(),
+                        oracle.fingerprint(),
+                        "seed {seed} assign {assign} cap {cap} workers {workers}: diverged"
+                    );
+                }
+            }
         }
     }
 }
