@@ -3,11 +3,11 @@
 //! scaling section: the event-heap scheduler with streaming admission
 //! against the linear-scan reference over a trace-length × concurrency
 //! grid of synthetic sessions (pure scheduler cost, no engines needed).
-//! The grid (an incremental-GP section, and the sharded parallel
-//! driver's speedup-vs-workers fleet cell) is written to
-//! `BENCH_serving.json` — the pinned perf-trajectory baseline future
-//! PRs diff against. `MSAO_BENCH_QUICK=1` shrinks the grid for CI
-//! smoke runs.
+//! The grid (an incremental-GP section, the sharded parallel driver's
+//! speedup-vs-workers fleet cell, and the scenario-compile section) is
+//! written to `BENCH_serving.json` — the pinned perf-trajectory
+//! baseline future PRs diff against. `MSAO_BENCH_QUICK=1` shrinks the
+//! grid for CI smoke runs.
 
 use std::time::Instant;
 
@@ -591,6 +591,60 @@ fn serving_scaling_grid() -> Result<()> {
     } else {
         parallel_cell(&mut out, "fleet", 1_000_000, 10_000, 8, &[1, 2, 4, 8])?;
         parallel_cell(&mut out, "burst", 250_000, 250_000, 8, &[1, 2, 4, 8])?;
+    }
+
+    // Scenario compilation: the declarative workload layer's cost to
+    // expand a spec into a TraceSpec (items + arrivals + policy), per
+    // cell kind — the serve-path overhead a scenario file adds before
+    // the first event fires.
+    {
+        use msao::scenario::{ArrivalProcess, DialogueCfg, MmppState, ScenarioSpec, Shape};
+        let n = if quick { 64 } else { 512 };
+        let cells: Vec<(&str, ScenarioSpec)> = vec![
+            ("flat", ScenarioSpec { n, ..Default::default() }),
+            (
+                "diurnal",
+                ScenarioSpec {
+                    n,
+                    shape: Shape::Diurnal { period_s: 8.0, amplitude: 0.6, phase: 0.0 },
+                    ..Default::default()
+                },
+            ),
+            (
+                "mmpp+spike",
+                ScenarioSpec {
+                    n,
+                    arrival: ArrivalProcess::Mmpp {
+                        states: vec![
+                            MmppState { rate: 1.2, mean_dwell: 6.0 },
+                            MmppState { rate: 8.0, mean_dwell: 1.5 },
+                        ],
+                        transitions: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+                    },
+                    shape: Shape::Spike { factor: 3.0, t_start: 1.0, duration_s: 2.0 },
+                    ..Default::default()
+                },
+            ),
+            (
+                "dialogue",
+                ScenarioSpec { n, dialogue: Some(DialogueCfg::default()), ..Default::default() },
+            ),
+        ];
+        for (cell, sc) in &cells {
+            let requests = sc.compile(42)?.items.len();
+            let stats = bench(&format!("scenario/compile {cell} (n={n})"), 10, || {
+                black_box(sc.compile(42).unwrap());
+            });
+            out.push(
+                "scenario",
+                json::obj(vec![
+                    ("cell", json::s(cell)),
+                    ("sessions", json::num(n as f64)),
+                    ("requests", json::num(requests as f64)),
+                    ("compile_mean_s", json::num(stats.mean_s)),
+                ]),
+            );
+        }
     }
 
     out.write("BENCH_serving.json")?;

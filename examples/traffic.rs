@@ -1,0 +1,64 @@
+//! Traffic scenarios: declarative workloads through the serving path.
+//!
+//! Loads each scenario file under `scenarios/`, compiles it to a
+//! `TraceSpec`, serves it, and prints the trace-wide summary plus the
+//! per-window offered vs completed rates — the transient behaviour
+//! (diurnal swell, flash-crowd backlog, dialogue turn bursts) that a
+//! single trace-wide mean hides. Run with:
+//!
+//!     make artifacts && cargo run --release --example traffic
+//!
+//! Scenario *compilation* needs no artifacts — `msao scenario --dir
+//! scenarios` validates the files engine-free; this example is the
+//! serving half.
+
+use anyhow::Result;
+
+use msao::config::Config;
+use msao::coordinator::{serve, Coordinator};
+use msao::metrics::{summarize, windowed_rates};
+use msao::scenario;
+
+fn main() -> Result<()> {
+    let cfg = Config::default();
+    println!("== MSAO traffic scenarios ==");
+    // Self-skip (cleanly green) where the AOT artifacts are absent, so
+    // CI can smoke-run this example and still catch API drift/panics.
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        println!("skipped: artifacts/ not built (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut coord = Coordinator::new(cfg)?;
+
+    for file in ["scenarios/diurnal.toml", "scenarios/flashcrowd.toml", "scenarios/dialogue.toml"]
+    {
+        let sc = scenario::ScenarioSpec::load(file)?;
+        let spec = sc.compile(42)?;
+        println!(
+            "\n{file}: {} requests from {} sessions (dialogue: {})",
+            spec.items.len(),
+            sc.n,
+            sc.dialogue.is_some()
+        );
+        let res = serve(&mut coord, &spec)?;
+        let sum = summarize(&res.records);
+        println!(
+            "  latency p50 {:.3} s  p99 {:.3} s  throughput {:.1} tok/s over {:.1} s",
+            sum.latency_p50_s, sum.latency_p99_s, sum.throughput_tps, sum.makespan_s
+        );
+        let follow_ups = spec.items.iter().filter(|i| i.prior_turns > 0).count();
+        if follow_ups > 0 {
+            println!(
+                "  {follow_ups} follow-up turns served at reuse discount {:.2}",
+                spec.reuse_discount
+            );
+        }
+        for w in windowed_rates(&res.records, (sum.makespan_s / 6.0).max(1e-3)) {
+            println!(
+                "  [{:6.2}, {:6.2}) s  offered {:5.2} req/s  completed {:5.2} req/s  p99 {:.3} s",
+                w.t_start, w.t_end, w.offered_rps, w.completed_rps, w.latency_p99_s
+            );
+        }
+    }
+    Ok(())
+}

@@ -25,7 +25,9 @@ use super::{BPhase, DecodeState, FinishState};
 /// on the session's edge, cloud encode + prefill at full fidelity.
 /// Transitions to per-token cloud decode events. `cloud_frac` is
 /// threaded through so PerLLM's cloud-landing requests carry their
-/// quality provenance.
+/// quality provenance. `reuse_scale` multiplies the prefill charge
+/// (< 1.0 only for dialogue follow-up turns that reuse cached prefix).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -34,6 +36,7 @@ pub(crate) fn start(
     edge: EdgeId,
     rec: &mut ExecRecord,
     cloud_frac: f64,
+    reuse_scale: f64,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
 
@@ -57,8 +60,8 @@ pub(crate) fn start(
     let (_, pre_end) = vc.exec(
         Site::Cloud,
         enc_end,
-        vc.dev(Site::Cloud).prefill_s(&full_m, inp.seq_paper),
-        full_m.flops_prefill(inp.seq_paper),
+        reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, inp.seq_paper),
+        reuse_scale * full_m.flops_prefill(inp.seq_paper),
     );
     rec.prefill_s = pre_end - arrival;
 

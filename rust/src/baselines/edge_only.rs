@@ -26,7 +26,9 @@ use super::{BPhase, DecodeState, FinishState};
 /// prefill at full fidelity (no network) on the session's edge site.
 /// Transitions to per-token edge decode events. `cloud_frac` is
 /// threaded through so PerLLM's edge-landing requests carry their
-/// quality provenance.
+/// quality provenance. `reuse_scale` multiplies the prefill charge
+/// (< 1.0 only for dialogue follow-up turns that reuse cached prefix).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -35,6 +37,7 @@ pub(crate) fn start(
     edge: EdgeId,
     rec: &mut ExecRecord,
     cloud_frac: f64,
+    reuse_scale: f64,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
 
@@ -52,8 +55,8 @@ pub(crate) fn start(
     let (_, pre_end) = vc.exec(
         Site::Edge(edge),
         enc_end,
-        vc.dev(Site::Edge(edge)).prefill_s(&draft_m, inp.seq_paper),
-        draft_m.flops_prefill(inp.seq_paper),
+        reuse_scale * vc.dev(Site::Edge(edge)).prefill_s(&draft_m, inp.seq_paper),
+        reuse_scale * draft_m.flops_prefill(inp.seq_paper),
     );
     rec.prefill_s = pre_end - arrival;
 

@@ -116,17 +116,27 @@ pub struct BaselineSession<'a> {
     arrival: f64,
     baseline: Baseline,
     edge: EdgeId,
+    /// Prefill cost multiplier for dialogue follow-up turns (1.0 for
+    /// fresh requests; see `TraceSpec::reuse_discount`).
+    reuse_scale: f64,
     rec: ExecRecord,
     phase: BPhase,
 }
 
 impl<'a> BaselineSession<'a> {
-    pub fn new(baseline: Baseline, item: &'a Item, arrival: f64, edge: EdgeId) -> Self {
+    pub fn new(
+        baseline: Baseline,
+        item: &'a Item,
+        arrival: f64,
+        edge: EdgeId,
+        reuse_scale: f64,
+    ) -> Self {
         BaselineSession {
             item,
             arrival,
             baseline,
             edge,
+            reuse_scale,
             rec: ExecRecord {
                 request_id: item.id,
                 t_arrival: arrival,
@@ -203,16 +213,15 @@ impl<'a> BaselineSession<'a> {
 
     // ---------------- arrival: uplink + encode + prefill ---------------
     fn step_start(&mut self, coord: &mut Coordinator, vc: &mut VirtualCluster) -> Result<BPhase> {
+        let (item, t0, edge, scale) = (self.item, self.arrival, self.edge, self.reuse_scale);
         match self.baseline {
             Baseline::CloudOnly => {
-                cloud_only::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec, 1.0)
+                cloud_only::start(coord, vc, item, t0, edge, &mut self.rec, 1.0, scale)
             }
             Baseline::EdgeOnly => {
-                edge_only::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec, 0.0)
+                edge_only::start(coord, vc, item, t0, edge, &mut self.rec, 0.0, scale)
             }
-            Baseline::PerLlm => {
-                perllm::start(coord, vc, self.item, self.arrival, self.edge, &mut self.rec)
-            }
+            Baseline::PerLlm => perllm::start(coord, vc, item, t0, edge, &mut self.rec, scale),
         }
     }
 

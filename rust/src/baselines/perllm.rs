@@ -129,7 +129,9 @@ fn pick_partition(
 /// Session start phase, fired at the arrival time: the partition
 /// decision reads the cluster's live queue depths, then the request
 /// enters the chosen path's phases (delegating to the edge-only /
-/// cloud-only session starts, or the mid-split below).
+/// cloud-only session starts, or the mid-split below). `reuse_scale`
+/// multiplies the prefill charge on whichever path is chosen (< 1.0
+/// only for dialogue follow-up turns that reuse cached prefix).
 pub(crate) fn start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -137,6 +139,7 @@ pub(crate) fn start(
     arrival: f64,
     edge: EdgeId,
     rec: &mut ExecRecord,
+    reuse_scale: f64,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
     // The partition decision prices the uplink/hops at the *assigned
@@ -146,9 +149,13 @@ pub(crate) fn start(
     let bandwidth_mbps = net.bandwidth_mbps;
     let rtt_s = net.rtt_ms * 1e-3;
     match pick_partition(vc, item, n_out, bandwidth_mbps, rtt_s, edge, arrival) {
-        Partition::AllEdge => super::edge_only::start(coord, vc, item, arrival, edge, rec, 0.0),
-        Partition::AllCloud => super::cloud_only::start(coord, vc, item, arrival, edge, rec, 1.0),
-        Partition::Split => split_start(coord, vc, item, arrival, edge, rec),
+        Partition::AllEdge => {
+            super::edge_only::start(coord, vc, item, arrival, edge, rec, 0.0, reuse_scale)
+        }
+        Partition::AllCloud => {
+            super::cloud_only::start(coord, vc, item, arrival, edge, rec, 1.0, reuse_scale)
+        }
+        Partition::Split => split_start(coord, vc, item, arrival, edge, rec, reuse_scale),
     }
 }
 
@@ -165,6 +172,7 @@ fn half_model() -> SimModel {
 
 /// Mid-split prefill: edge encode + front-half prefill, hidden-state
 /// uplink, cloud back-half prefill. Transitions to per-token hop events.
+/// `reuse_scale` multiplies both half-model prefill charges.
 fn split_start(
     coord: &mut Coordinator,
     vc: &mut VirtualCluster,
@@ -172,6 +180,7 @@ fn split_start(
     arrival: f64,
     edge: EdgeId,
     rec: &mut ExecRecord,
+    reuse_scale: f64,
 ) -> Result<BPhase> {
     let n_out = coord.cfg.msao.max_new_tokens;
 
@@ -191,8 +200,8 @@ fn split_start(
     let (_, front_end) = vc.exec(
         Site::Edge(edge),
         enc_end,
-        vc.dev(Site::Edge(edge)).prefill_s(&half, inp.seq_paper),
-        half.flops_prefill(inp.seq_paper),
+        reuse_scale * vc.dev(Site::Edge(edge)).prefill_s(&half, inp.seq_paper),
+        reuse_scale * half.flops_prefill(inp.seq_paper),
     );
     let hidden_bytes = (inp.seq_paper * full_m.d * 2.0) as u64;
     let (_, up_arr) = vc.send_up(edge, front_end, hidden_bytes, false);
@@ -200,8 +209,8 @@ fn split_start(
     let (_, pre_end) = vc.exec(
         Site::Cloud,
         up_arr,
-        vc.dev(Site::Cloud).prefill_s(&half, inp.seq_paper),
-        half.flops_prefill(inp.seq_paper),
+        reuse_scale * vc.dev(Site::Cloud).prefill_s(&half, inp.seq_paper),
+        reuse_scale * half.flops_prefill(inp.seq_paper),
     );
     rec.prefill_s = pre_end - arrival;
 

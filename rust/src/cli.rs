@@ -6,6 +6,11 @@
 //! * `--mode` picks the serving policy (`msao`, the Fig. 9 ablations
 //!   `no-modality` / `no-collab`, the baselines `cloud` / `edge` /
 //!   `perllm`, or `mixed` for a round-robin multi-tenant trace).
+//! * `--scenario <file>` loads a declarative scenario file (see
+//!   [`crate::scenario`]) instead of the flat `--mode`/`--n`/`--rate`
+//!   workload: arrival process, shape, request mix, and dialogue
+//!   structure all come from the file, compiled with `--seed`. Mutually
+//!   exclusive with `--mode`, `--n`, and `--rate`.
 //! * `--seed` seeds the workload generator AND the virtual testbed —
 //!   one run, one seed (the testbed seed used to be silently pinned
 //!   to 1).
@@ -110,9 +115,19 @@ pub fn apply_fleet_flags(cfg: &mut Config, args: &Args) -> Result<()> {
 /// Build the `msao serve` trace spec from parsed flags. Returns the
 /// mode string (for display) alongside the spec.
 pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
+    let seed = args.usize_or("seed", 42)? as u64;
+    if let Some(path) = args.get("scenario") {
+        for k in ["mode", "n", "rate"] {
+            if args.get(k).is_some() {
+                bail!("--scenario replaces the flat workload flags; drop --{k}");
+            }
+        }
+        let sc = crate::scenario::ScenarioSpec::load(path)?;
+        let spec = apply_serve_overrides(sc.compile(seed)?, args)?;
+        return Ok((format!("scenario:{path}"), spec));
+    }
     let n = args.usize_or("n", 16)?;
     let mode = args.get("mode").unwrap_or("msao").to_string();
-    let seed = args.usize_or("seed", 42)? as u64;
     let rate = args.f64_or("rate", 2.0)?;
     let policy = if mode == "mixed" {
         PolicyKind::PerRequest(PolicyKind::round_robin(n))
@@ -122,7 +137,14 @@ pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
     let mut gen = Generator::new(seed);
     let items = gen.items(Benchmark::Vqa, n);
     let arrivals = gen.arrivals(n, rate);
-    let mut spec = TraceSpec::new(policy).trace(items, arrivals).seed(seed);
+    let spec = TraceSpec::new(policy).trace(items, arrivals).seed(seed);
+    Ok((mode, apply_serve_overrides(spec, args)?))
+}
+
+/// Execution-knob overrides shared by the flat and scenario paths:
+/// `--concurrency`, `--assign`, `--workers` apply on top of whichever
+/// workload built the spec.
+fn apply_serve_overrides(mut spec: TraceSpec, args: &Args) -> Result<TraceSpec> {
     if let Some(c) = args.get("concurrency") {
         spec = spec.concurrency(c.parse().context("parsing --concurrency")?);
     }
@@ -132,7 +154,7 @@ pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
     if let Some(w) = args.get("workers") {
         spec = spec.workers(w.parse().context("parsing --workers")?);
     }
-    Ok((mode, spec))
+    Ok(spec)
 }
 
 #[cfg(test)]
@@ -251,6 +273,41 @@ mod tests {
         let mut cfg3 = Config::default();
         assert!(apply_fleet_flags(&mut cfg3, &argv(&["serve", "--edges", "0"])).is_err());
         assert!(apply_fleet_flags(&mut cfg3, &argv(&["serve", "--edges", "x"])).is_err());
+    }
+
+    #[test]
+    fn scenario_flag_builds_spec_from_file() {
+        let dir = std::env::temp_dir().join("msao_cli_scenario_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flat.toml");
+        std::fs::write(&path, "n = 4\nrate = 2.0\n").unwrap();
+        let p = path.to_str().unwrap().to_string();
+        let a = argv(&["serve", "--scenario", &p, "--seed", "7", "--concurrency", "3"]);
+        let (mode, spec) = serve_spec(&a).unwrap();
+        assert_eq!(mode, format!("scenario:{p}"));
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.items.len(), 4);
+        assert_eq!(spec.concurrency, Some(3), "overrides must apply on the scenario path");
+        spec.validate().unwrap();
+        // A flat scenario file reproduces the legacy flat path bit for bit.
+        let (_, flat) = serve_spec(&argv(&["serve", "--n", "4", "--seed", "7"])).unwrap();
+        let got: Vec<u64> = spec.arrivals.iter().map(|t| t.to_bits()).collect();
+        let want: Vec<u64> = flat.arrivals.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(got, want);
+        assert_eq!(spec.policy, flat.policy);
+    }
+
+    #[test]
+    fn scenario_flag_conflicts_with_flat_workload_flags() {
+        // The conflict is detected before the file is opened.
+        for k in ["mode", "n", "rate"] {
+            let a = argv(&["serve", "--scenario", "nope.toml", &format!("--{k}"), "1"]);
+            let err = serve_spec(&a).unwrap_err().to_string();
+            assert!(err.contains(&format!("--{k}")), "missing flag name in {err:?}");
+        }
+        // A missing file is a load error, not a panic.
+        let a = argv(&["serve", "--scenario", "/definitely/not/here.toml"]);
+        assert!(serve_spec(&a).is_err());
     }
 
     #[test]

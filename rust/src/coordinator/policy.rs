@@ -300,6 +300,13 @@ pub struct TraceSpec {
     /// parallelism). Results are identical for every value — the
     /// sharded driver is bit-for-bit against the sequential one.
     pub workers: Option<usize>,
+    /// Prefill-reuse discount for dialogue follow-up turns, in [0, 1):
+    /// a request with `Item::prior_turns > 0` charges LLM prefill time
+    /// and FLOPs scaled by `1 - reuse_discount` (KV/prefix reuse of the
+    /// conversation context; encoders run full price). 0 — the default,
+    /// and the only value first-turn items ever see — is an exact
+    /// no-op, so single-turn traces are bitwise unaffected.
+    pub reuse_discount: f64,
 }
 
 impl TraceSpec {
@@ -313,6 +320,7 @@ impl TraceSpec {
             profile: None,
             assign: Assign::RoundRobin,
             workers: None,
+            reuse_discount: 0.0,
         }
     }
 
@@ -357,6 +365,13 @@ impl TraceSpec {
         self
     }
 
+    /// Set the dialogue prefill-reuse discount (applies to items with
+    /// `prior_turns > 0` only; must be in [0, 1)).
+    pub fn reuse(mut self, discount: f64) -> Self {
+        self.reuse_discount = discount;
+        self
+    }
+
     pub fn effective_concurrency(&self, cfg: &Config) -> usize {
         match self.concurrency {
             Some(c) => c,
@@ -387,6 +402,9 @@ impl TraceSpec {
         }
         if self.concurrency == Some(0) {
             bail!("concurrency must be >= 1");
+        }
+        if !(self.reuse_discount.is_finite() && (0.0..1.0).contains(&self.reuse_discount)) {
+            bail!("reuse_discount must be in [0, 1), got {}", self.reuse_discount);
         }
         if let PolicyKind::PerRequest(v) = &self.policy {
             if v.len() != self.items.len() {
@@ -461,6 +479,18 @@ mod tests {
         ]))
         .trace(items, arrivals);
         assert!(no_collab_mix.validate().is_err(), "NoCollabSched mix accepted");
+    }
+
+    #[test]
+    fn reuse_discount_validated_to_unit_interval() {
+        let (items, arrivals) = trace(2);
+        let base = TraceSpec::new(PolicyKind::CloudOnly).trace(items, arrivals);
+        assert_eq!(base.reuse_discount, 0.0, "default must be the exact no-op");
+        base.clone().reuse(0.0).validate().unwrap();
+        base.clone().reuse(0.35).validate().unwrap();
+        for bad in [1.0, -0.1, f64::NAN, f64::INFINITY] {
+            assert!(base.clone().reuse(bad).validate().is_err(), "discount {bad} accepted");
+        }
     }
 
     #[test]

@@ -142,24 +142,43 @@ enum AnySession<'a> {
 }
 
 impl<'a> AnySession<'a> {
-    fn new(policy: &PolicyKind, item: &'a Item, arrival: f64, edge: usize) -> Self {
+    fn new(
+        policy: &PolicyKind,
+        item: &'a Item,
+        arrival: f64,
+        edge: usize,
+        reuse_discount: f64,
+    ) -> Self {
+        // Dialogue follow-up turns reuse the prior turn's prefill state:
+        // LLM prefill time/FLOPs scale by 1 - discount. First turns (and
+        // every request of a non-dialogue trace) keep scale 1.0, an
+        // exact multiplicative no-op.
+        let reuse_scale = if item.prior_turns > 0 { 1.0 - reuse_discount } else { 1.0 };
         match policy {
-            PolicyKind::Msao(mode) => AnySession::Msao(Session::new(item, arrival, *mode, edge)),
+            PolicyKind::Msao(mode) => {
+                AnySession::Msao(Session::new(item, arrival, *mode, edge, reuse_scale))
+            }
             PolicyKind::CloudOnly => AnySession::Baseline(BaselineSession::new(
                 Baseline::CloudOnly,
                 item,
                 arrival,
                 edge,
+                reuse_scale,
             )),
             PolicyKind::EdgeOnly => AnySession::Baseline(BaselineSession::new(
                 Baseline::EdgeOnly,
                 item,
                 arrival,
                 edge,
+                reuse_scale,
             )),
-            PolicyKind::PerLlm => {
-                AnySession::Baseline(BaselineSession::new(Baseline::PerLlm, item, arrival, edge))
-            }
+            PolicyKind::PerLlm => AnySession::Baseline(BaselineSession::new(
+                Baseline::PerLlm,
+                item,
+                arrival,
+                edge,
+                reuse_scale,
+            )),
             PolicyKind::PerRequest(_) => unreachable!("validate() rejects nested PerRequest"),
         }
     }
@@ -252,6 +271,7 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
             &self.spec.items[i],
             self.spec.arrivals[i],
             edge,
+            self.spec.reuse_discount,
         ))
     }
 

@@ -148,17 +148,23 @@ pub struct Session<'a> {
     arrival: f64,
     mode: Mode,
     edge: EdgeId,
+    /// Multiplier on LLM prefill time/FLOPs (1.0 except for dialogue
+    /// follow-up turns, which reuse the prior turn's KV/prefix state —
+    /// `1 - TraceSpec::reuse_discount`). Encoders are never discounted:
+    /// each turn ships fresh modality inputs.
+    reuse_scale: f64,
     rec: ExecRecord,
     phase: Phase,
 }
 
 impl<'a> Session<'a> {
-    pub fn new(item: &'a Item, arrival: f64, mode: Mode, edge: EdgeId) -> Self {
+    pub fn new(item: &'a Item, arrival: f64, mode: Mode, edge: EdgeId, reuse_scale: f64) -> Self {
         Session {
             item,
             arrival,
             mode,
             edge,
+            reuse_scale,
             rec: ExecRecord {
                 request_id: item.id,
                 t_arrival: arrival,
@@ -388,12 +394,13 @@ impl<'a> Session<'a> {
             enc_secs,
             vit.flops_prefill(enc_patches) * enc_frames * late_scale,
         );
-        let edge_pre_secs = vc.dev(Site::Edge(self.edge)).prefill_s(&draft_m, seq_paper);
+        let edge_pre_secs =
+            self.reuse_scale * vc.dev(Site::Edge(self.edge)).prefill_s(&draft_m, seq_paper);
         let (_, edge_pre_end) = vc.exec(
             Site::Edge(self.edge),
             enc_end,
             edge_pre_secs,
-            draft_m.flops_prefill(seq_paper),
+            self.reuse_scale * draft_m.flops_prefill(seq_paper),
         );
 
         // Cloud: pruned payload uplink, re-encode, full prefill.
@@ -413,12 +420,12 @@ impl<'a> Session<'a> {
             cloud_enc,
             vit.flops_prefill(enc_patches) * cloud_share,
         );
-        let cloud_pre_secs = vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
+        let cloud_pre_secs = self.reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
         let (_, cloud_pre_end) = vc.exec(
             Site::Cloud,
             cloud_enc_end,
             cloud_pre_secs,
-            full_m.flops_prefill(seq_paper),
+            self.reuse_scale * full_m.flops_prefill(seq_paper),
         );
 
         // Real prefills.
@@ -519,8 +526,8 @@ impl<'a> Session<'a> {
         let (_, pre_end) = vc.exec(
             Site::Cloud,
             enc_end,
-            vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
-            full_m.flops_prefill(seq_paper),
+            self.reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
+            self.reuse_scale * full_m.flops_prefill(seq_paper),
         );
         self.rec.prefill_s = pre_end - self.arrival;
 
@@ -755,7 +762,7 @@ impl Coordinator {
         arrival: f64,
         mode: Mode,
     ) -> Result<ExecRecord> {
-        let mut s = Session::new(item, arrival, mode, 0);
+        let mut s = Session::new(item, arrival, mode, 0, 1.0);
         while s.step(self, vc, std::slice::from_mut(batcher), theta)? == StepOutcome::Pending {}
         Ok(s.into_record())
     }

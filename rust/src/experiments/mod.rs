@@ -662,6 +662,159 @@ fn run_fleet_cell(
     Ok(res)
 }
 
+/// Traffic — declarative scenario cells through the full serving path:
+/// a diurnal sinusoid over Poisson arrivals, an MMPP flash crowd with a
+/// spike window, and multi-turn dialogue sessions with a prefill-reuse
+/// discount. Each cell reports the trace-wide summary, per-window
+/// offered vs completed rates (the transient the flat experiments
+/// average away), and — for the dialogue cell — per-turn-index latency
+/// rows showing what prefix reuse buys follow-up turns. Every JSON row
+/// carries a `cell` + `row` discriminator (sectioned-row schema).
+pub fn traffic(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    use crate::metrics::windowed_rates;
+    use crate::scenario::{ArrivalProcess, DialogueCfg, MmppState, ScenarioSpec, Shape};
+    use crate::util::stats::{mean, percentile};
+    use std::collections::{BTreeMap, HashMap};
+
+    coord.cfg.network.bandwidth_mbps = 300.0;
+    let cells = vec![
+        (
+            "diurnal",
+            ScenarioSpec {
+                n,
+                rate: 2.5,
+                shape: Shape::Diurnal { period_s: 8.0, amplitude: 0.6, phase: 0.0 },
+                ..Default::default()
+            },
+        ),
+        (
+            "flashcrowd",
+            ScenarioSpec {
+                n,
+                arrival: ArrivalProcess::Mmpp {
+                    states: vec![
+                        MmppState { rate: 1.2, mean_dwell: 6.0 },
+                        MmppState { rate: 8.0, mean_dwell: 1.5 },
+                    ],
+                    transitions: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+                },
+                shape: Shape::Spike { factor: 3.0, t_start: 1.0, duration_s: 2.0 },
+                ..Default::default()
+            },
+        ),
+        (
+            "dialogue",
+            ScenarioSpec {
+                n: (n / 2).max(2),
+                rate: 1.0,
+                dialogue: Some(DialogueCfg {
+                    alpha: 1.3,
+                    max_turns: 5,
+                    think_mean_s: 1.0,
+                    reuse_discount: 0.4,
+                }),
+                ..Default::default()
+            },
+        ),
+    ];
+
+    let mut table = Table::new(
+        "Traffic — declarative scenarios through the serving path (VQA, 300 Mbps, conc 8)",
+        &["cell", "row", "n", "offered_rps", "done_rps", "lat_p50_s", "lat_p99_s", "tput_tok_s"],
+    );
+    let mut rows = Vec::new();
+    for (label, sc) in cells {
+        let spec = sc.compile(4242)?.concurrency(8);
+        let offered_span =
+            (spec.arrivals.last().copied().unwrap_or(0.0) - spec.arrivals[0]).max(1e-9);
+        let res = serve(coord, &spec)?;
+        let sum = summarize(&res.records);
+        table.row(vec![
+            label.to_string(),
+            "summary".to_string(),
+            res.records.len().to_string(),
+            f2(res.records.len() as f64 / offered_span),
+            f2(sum.req_throughput_rps),
+            f3(sum.latency_p50_s),
+            f3(sum.latency_p99_s),
+            f1(sum.throughput_tps),
+        ]);
+        rows.push(obj(vec![
+            ("cell", s(label)),
+            ("row", s("summary")),
+            ("requests", num(res.records.len() as f64)),
+            ("sessions", num(sc.n as f64)),
+            ("makespan_s", num(sum.makespan_s)),
+            ("offered_rps", num(res.records.len() as f64 / offered_span)),
+            ("completed_rps", num(sum.req_throughput_rps)),
+            ("latency_p50_s", num(sum.latency_p50_s)),
+            ("latency_p99_s", num(sum.latency_p99_s)),
+            ("throughput_tps", num(sum.throughput_tps)),
+            ("reuse_discount", num(spec.reuse_discount)),
+        ]));
+
+        // Windowed load: 6 windows spanning first arrival → last done.
+        let win = (sum.makespan_s / 6.0).max(1e-3);
+        for w in windowed_rates(&res.records, win) {
+            table.row(vec![
+                label.to_string(),
+                format!("[{:.1},{:.1})s", w.t_start, w.t_end),
+                w.offered.to_string(),
+                f2(w.offered_rps),
+                f2(w.completed_rps),
+                f3(w.latency_p50_s),
+                f3(w.latency_p99_s),
+                String::new(),
+            ]);
+            rows.push(obj(vec![
+                ("cell", s(label)),
+                ("row", s("window")),
+                ("t_start_s", num(w.t_start)),
+                ("t_end_s", num(w.t_end)),
+                ("offered", num(w.offered as f64)),
+                ("completed", num(w.completed as f64)),
+                ("offered_rps", num(w.offered_rps)),
+                ("completed_rps", num(w.completed_rps)),
+                ("latency_p50_s", num(w.latency_p50_s)),
+                ("latency_p99_s", num(w.latency_p99_s)),
+            ]));
+        }
+
+        // Per-turn-index latency: follow-up turns (prior_turns > 0) pay
+        // the discounted prefill, visible as a latency drop vs turn 0.
+        if sc.dialogue.is_some() {
+            let turn_of: HashMap<u64, usize> =
+                spec.items.iter().map(|it| (it.id, it.prior_turns)).collect();
+            let mut by_turn: BTreeMap<usize, Vec<f64>> = BTreeMap::new();
+            for r in &res.records {
+                by_turn.entry(turn_of[&r.request_id]).or_default().push(r.latency_s);
+            }
+            for (turn, lats) in &by_turn {
+                table.row(vec![
+                    label.to_string(),
+                    format!("turn {turn}"),
+                    lats.len().to_string(),
+                    String::new(),
+                    String::new(),
+                    f3(percentile(lats, 0.5)),
+                    f3(percentile(lats, 0.99)),
+                    String::new(),
+                ]);
+                rows.push(obj(vec![
+                    ("cell", s(label)),
+                    ("row", s("turn")),
+                    ("turn", num(*turn as f64)),
+                    ("requests", num(lats.len() as f64)),
+                    ("latency_mean_s", num(mean(lats))),
+                    ("latency_p50_s", num(percentile(lats, 0.5))),
+                    ("latency_p99_s", num(percentile(lats, 0.99))),
+                ]));
+            }
+        }
+    }
+    Ok((table, arr(rows)))
+}
+
 /// Dispatcher: run one experiment id (or "all"), print tables, dump JSON.
 pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) -> Result<()> {
     let mut dumps: Vec<(&str, Value)> = Vec::new();
@@ -713,6 +866,11 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             t.print();
             dumps.push(("fleet", v));
         }
+        "traffic" => {
+            let (t, v) = traffic(coord, n)?;
+            t.print();
+            dumps.push(("traffic", v));
+        }
         "main" => {
             // Figs. 5-8 share one sweep; run it once.
             let data = main_sweep(coord, n)?;
@@ -758,6 +916,9 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             let (t, v) = fleet(coord, n)?;
             t.print();
             dumps.push(("fleet", v));
+            let (t, v) = traffic(coord, n)?;
+            t.print();
+            dumps.push(("traffic", v));
         }
         other => anyhow::bail!("unknown experiment id {other:?}"),
     }

@@ -21,6 +21,9 @@
 //! - [`baselines`]   — Cloud-only / Edge-only / PerLLM comparators, each
 //!   an event-driven session schedulable alongside MSAO.
 //! - [`workload`]    — synthetic VQAv2/MMBench-like generators and traces.
+//! - [`scenario`]    — declarative workload scenarios (arrival processes,
+//!   shapes, request mixes, multi-turn dialogues) compiling to
+//!   `TraceSpec`s.
 //! - [`quality`]     — calibrated accuracy model (DESIGN.md §7).
 //! - [`metrics`]     — histograms, counters, table emitters.
 //! - [`experiments`] — drivers regenerating every paper table and figure.
@@ -50,6 +53,7 @@ pub mod metrics;
 pub mod optimizer;
 pub mod quality;
 pub mod runtime;
+pub mod scenario;
 pub mod sparsity;
 pub mod workload;
 

@@ -4,16 +4,18 @@
 //!   info                         — print artifact + config summary
 //!   probe [--seed N]             — probe one synthetic item, print MAS
 //!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
-//!         [--concurrency C] [--network SC] [--edges E] [--assign A]
-//!         [--workers W]
+//!         [--scenario FILE] [--concurrency C] [--network SC]
+//!         [--edges E] [--assign A] [--workers W]
 //!                                — serve a trace through the
 //!                                  unified policy API, print summary.
 //!                                  Modes: msao|no-modality|no-collab|
 //!                                  cloud|edge|perllm|mixed. One --seed
 //!                                  drives both the workload and the
-//!                                  testbed; --concurrency is honored by
-//!                                  every mode; --network layers a
-//!                                  time-varying link scenario
+//!                                  testbed; --scenario loads a
+//!                                  declarative workload file instead of
+//!                                  --mode/--n/--rate; --concurrency is
+//!                                  honored by every mode; --network
+//!                                  layers a time-varying link scenario
 //!                                  (constant|step-drop|burst|flaky)
 //!                                  over the base bandwidth; --edges
 //!                                  serves on a homogeneous fleet of E
@@ -23,9 +25,17 @@
 //!                                  --workers runs the sharded parallel
 //!                                  simulator (0 = auto, results are
 //!                                  bit-for-bit identical).
+//!   scenario [--file F | --dir D] [--seed S]
+//!                                — parse + compile scenario files
+//!                                  without serving (no engine
+//!                                  artifacts needed): validates every
+//!                                  .toml/.json in D (default
+//!                                  `scenarios/`) and prints one line
+//!                                  per file.
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
 //!                                  (fig4|table1|fig5..fig9|concurrency|
-//!                                  mixed|volatility|fleet|main|all)
+//!                                  mixed|volatility|fleet|traffic|
+//!                                  main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap) and lives
 //! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
@@ -163,6 +173,23 @@ fn main() -> Result<()> {
                 }
             }
         }
+        "scenario" => {
+            let seed = args.usize_or("seed", 42)? as u64;
+            let reports = match args.get("file") {
+                Some(f) => vec![msao::scenario::check_file(f, seed)?],
+                None => {
+                    let dir = args.get("dir").unwrap_or("scenarios");
+                    msao::scenario::check_dir(dir, seed)?
+                }
+            };
+            for r in &reports {
+                println!(
+                    "{}: {} requests / {} sessions over {:.1}s  policy={}  dialogue={}",
+                    r.file, r.requests, r.sessions, r.span_s, r.policy, r.dialogue
+                );
+            }
+            println!("{} scenario file(s) OK (seed {seed})", reports.len());
+        }
         "experiment" => {
             let cfg = load_config(&args)?;
             let id = args.get("id").context("--id required")?.to_string();
@@ -171,7 +198,7 @@ fn main() -> Result<()> {
             let mut coord = Coordinator::new(cfg)?;
             experiments::run(&mut coord, &id, n, json.as_deref())?;
         }
-        other => bail!("unknown command {other:?} (try info|probe|serve|experiment)"),
+        other => bail!("unknown command {other:?} (try info|probe|serve|scenario|experiment)"),
     }
     Ok(())
 }

@@ -163,6 +163,61 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
     }
 }
 
+/// Load observability over one time window of a trace: what was offered
+/// (arrivals) vs. what the system completed, plus in-window latency
+/// percentiles. The `traffic` experiment emits these so time-varying
+/// scenarios (diurnal, flash crowd) show their transient behavior
+/// instead of one trace-wide average.
+#[derive(Debug, Clone)]
+pub struct WindowStats {
+    /// Window bounds (virtual seconds; `[t_start, t_end)`).
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Requests arriving in the window.
+    pub offered: usize,
+    /// Requests completing in the window.
+    pub completed: usize,
+    pub offered_rps: f64,
+    pub completed_rps: f64,
+    /// Latency percentiles over requests *completing* in the window
+    /// (0.0 when none did).
+    pub latency_p50_s: f64,
+    pub latency_p99_s: f64,
+}
+
+/// Bucket a trace's records into fixed-width time windows spanning the
+/// first arrival to the last completion. Arrivals are bucketed by
+/// `t_arrival`, completions (and their latencies) by `t_done`. An empty
+/// record slice yields no windows.
+pub fn windowed_rates(records: &[ExecRecord], window_s: f64) -> Vec<WindowStats> {
+    assert!(window_s.is_finite() && window_s > 0.0, "bad window {window_s}");
+    if records.is_empty() {
+        return Vec::new();
+    }
+    let t0 = records.iter().map(|r| r.t_arrival).fold(f64::INFINITY, f64::min);
+    let t1 = records.iter().map(|r| r.t_done).fold(t0, f64::max);
+    let n_win = (((t1 - t0) / window_s).floor() as usize) + 1;
+    let mut offered = vec![0usize; n_win];
+    let mut done: Vec<Vec<f64>> = vec![Vec::new(); n_win];
+    let bucket = |t: f64| (((t - t0) / window_s).floor() as usize).min(n_win - 1);
+    for r in records {
+        offered[bucket(r.t_arrival)] += 1;
+        done[bucket(r.t_done)].push(r.latency_s);
+    }
+    (0..n_win)
+        .map(|w| WindowStats {
+            t_start: t0 + w as f64 * window_s,
+            t_end: t0 + (w + 1) as f64 * window_s,
+            offered: offered[w],
+            completed: done[w].len(),
+            offered_rps: offered[w] as f64 / window_s,
+            completed_rps: done[w].len() as f64 / window_s,
+            latency_p50_s: percentile(&done[w], 0.5),
+            latency_p99_s: percentile(&done[w], 0.99),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,5 +253,40 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         summarize(&[]);
+    }
+
+    #[test]
+    fn windowed_rates_buckets_arrivals_and_completions() {
+        // Arrivals at 0, 1, 9; completions at 2, 3, 14. Window 5s:
+        // [0,5): offered 2, completed 2; [5,10): offered 1, completed 0;
+        // [10,15): offered 0, completed 1.
+        let recs =
+            vec![rec(2.0, 0.0, 10, true), rec(2.0, 1.0, 10, true), rec(5.0, 9.0, 10, true)];
+        let w = windowed_rates(&recs, 5.0);
+        assert_eq!(w.len(), 3);
+        assert_eq!((w[0].offered, w[0].completed), (2, 2));
+        assert_eq!((w[1].offered, w[1].completed), (1, 0));
+        assert_eq!((w[2].offered, w[2].completed), (0, 1));
+        assert!((w[0].offered_rps - 0.4).abs() < 1e-12);
+        assert!((w[2].completed_rps - 0.2).abs() < 1e-12);
+        // Latency percentiles cover only in-window completions.
+        assert!((w[0].latency_p50_s - 2.0).abs() < 1e-12);
+        assert_eq!(w[1].latency_p50_s, 0.0, "empty window has no latency");
+        assert!((w[2].latency_p99_s - 5.0).abs() < 1e-12);
+        // Total offered/completed across windows conserves requests.
+        assert_eq!(w.iter().map(|x| x.offered).sum::<usize>(), recs.len());
+        assert_eq!(w.iter().map(|x| x.completed).sum::<usize>(), recs.len());
+        // Window bounds tile the span contiguously from the first arrival.
+        assert_eq!(w[0].t_start, 0.0);
+        for pair in w.windows(2) {
+            assert_eq!(pair[0].t_end, pair[1].t_start);
+        }
+        assert!(windowed_rates(&[], 5.0).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "bad window")]
+    fn windowed_rates_rejects_nonpositive_window() {
+        windowed_rates(&[rec(1.0, 0.0, 1, true)], 0.0);
     }
 }

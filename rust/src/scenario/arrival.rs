@@ -1,0 +1,436 @@
+//! Arrival processes and deterministic shape modifiers.
+//!
+//! A scenario's arrival stream is a *base process* (Poisson, MMPP, or a
+//! replayed timestamp trace) composed with an optional *shape* — a
+//! deterministic rate multiplier `m(t)` applied as time-rescaling:
+//! base arrivals `s_i` map to `t_i = Λ⁻¹(s_i)` where
+//! `Λ(t) = ∫₀ᵗ m(u) du`. Rescaling preserves ordering (Λ is strictly
+//! increasing because every shape keeps `m(t) > 0`), so all bitwise
+//! determinism pins on the serving core survive, and [`Shape::None`]
+//! skips the inversion entirely — an exact identity.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::Rng;
+use crate::workload::Generator;
+
+/// Base stochastic arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at the scenario's `rate`. Bit-for-bit equal
+    /// to [`Generator::try_arrivals`] (it *is* that call).
+    Poisson,
+    /// Markov-modulated Poisson process: a seeded continuous-time chain
+    /// dwells in rate states (same idiom as the link-state chain in
+    /// `cluster/network.rs`); arrivals within a dwell segment are
+    /// Poisson at that state's rate.
+    Mmpp {
+        states: Vec<MmppState>,
+        /// Row-stochastic-up-to-normalisation transition weights,
+        /// `transitions[from][to]`, sampled at each dwell expiry.
+        transitions: Vec<Vec<f64>>,
+    },
+    /// Replay explicit timestamps (seconds, non-decreasing). The first
+    /// `n` entries become the trace.
+    Replay { times: Vec<f64> },
+}
+
+/// One MMPP rate state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MmppState {
+    /// Arrival rate while dwelling here (req/s).
+    pub rate: f64,
+    /// Mean dwell time before re-sampling the state (s).
+    pub mean_dwell: f64,
+}
+
+impl ArrivalProcess {
+    /// Validate against the scenario's `rate` and request count `n`.
+    pub fn validate(&self, rate: f64, n: usize) -> Result<()> {
+        match self {
+            ArrivalProcess::Poisson => {
+                ensure!(
+                    rate.is_finite() && rate > 0.0,
+                    "arrival rate must be finite and > 0, got {rate}"
+                );
+            }
+            ArrivalProcess::Mmpp { states, transitions } => {
+                ensure!(!states.is_empty(), "mmpp needs at least one state");
+                for (i, s) in states.iter().enumerate() {
+                    ensure!(
+                        s.rate.is_finite() && s.rate > 0.0,
+                        "mmpp state {i}: rate must be finite and > 0, got {}",
+                        s.rate
+                    );
+                    ensure!(
+                        s.mean_dwell.is_finite() && s.mean_dwell > 0.0,
+                        "mmpp state {i}: mean_dwell must be finite and > 0, got {}",
+                        s.mean_dwell
+                    );
+                }
+                ensure!(
+                    transitions.len() == states.len(),
+                    "mmpp transitions must have one row per state ({} rows for {} states)",
+                    transitions.len(),
+                    states.len()
+                );
+                for (i, row) in transitions.iter().enumerate() {
+                    ensure!(
+                        row.len() == states.len(),
+                        "mmpp transitions row {i}: expected {} weights, got {}",
+                        states.len(),
+                        row.len()
+                    );
+                    ensure!(
+                        row.iter().all(|w| w.is_finite() && *w >= 0.0),
+                        "mmpp transitions row {i}: weights must be finite and >= 0"
+                    );
+                    ensure!(
+                        row.iter().sum::<f64>() > 0.0,
+                        "mmpp transitions row {i}: weights must not all be zero"
+                    );
+                }
+            }
+            ArrivalProcess::Replay { times } => {
+                ensure!(
+                    times.len() >= n,
+                    "replay trace has {} timestamps but the scenario needs {n}",
+                    times.len()
+                );
+                for (i, &t) in times.iter().enumerate() {
+                    ensure!(t.is_finite() && t >= 0.0, "replay timestamp {i} is {t}");
+                }
+                if let Some(w) = times.windows(2).find(|w| w[1] < w[0]) {
+                    bail!("replay timestamps must be non-decreasing ({} after {})", w[1], w[0]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Sample `n` base arrival timestamps. Poisson draws through the
+    /// generator's own stream (`try_arrivals`) so a flat scenario is
+    /// bitwise the legacy `items` + `arrivals` sequence; MMPP draws from
+    /// the same stream via [`Generator::rng_mut`].
+    pub fn sample(&self, gen: &mut Generator, n: usize, rate: f64) -> Result<Vec<f64>> {
+        self.validate(rate, n)?;
+        Ok(match self {
+            ArrivalProcess::Poisson => gen.try_arrivals(n, rate)?,
+            ArrivalProcess::Mmpp { states, transitions } => {
+                sample_mmpp(gen.rng_mut(), states, transitions, n)
+            }
+            ArrivalProcess::Replay { times } => times[..n].to_vec(),
+        })
+    }
+}
+
+fn sample_mmpp(rng: &mut Rng, states: &[MmppState], trans: &[Vec<f64>], n: usize) -> Vec<f64> {
+    if states.len() == 1 {
+        // Degenerate one-state chain: no dwell or transition draws, so
+        // the stream is bit-for-bit the plain Poisson loop at that
+        // state's rate (pinned by a property test).
+        let mut t = 0.0;
+        return (0..n)
+            .map(|_| {
+                t += rng.exp(states[0].rate);
+                t
+            })
+            .collect();
+    }
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0;
+    let mut state = 0usize;
+    let mut seg_end = rng.exp(1.0 / states[0].mean_dwell);
+    while out.len() < n {
+        let gap = rng.exp(states[state].rate);
+        if t + gap <= seg_end {
+            t += gap;
+            out.push(t);
+        } else {
+            // The exponential is memoryless: jump to the segment
+            // boundary, switch state, and redraw the gap fresh.
+            t = seg_end;
+            state = rng.weighted(&trans[state]);
+            seg_end = t + rng.exp(1.0 / states[state].mean_dwell);
+        }
+    }
+    out
+}
+
+/// Deterministic rate-shape modifier over a base process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    /// No reshaping — base timestamps pass through untouched (exact
+    /// identity, no floating-point round trip).
+    None,
+    /// Linear ramp of the rate multiplier from 1 at t=0 to `to` at
+    /// t=`duration_s`, constant `to` afterwards.
+    Ramp { to: f64, duration_s: f64 },
+    /// Flash crowd: multiplier jumps to `factor` on
+    /// [`t_start`, `t_start + duration_s`), 1 elsewhere.
+    Spike { factor: f64, t_start: f64, duration_s: f64 },
+    /// Diurnal sinusoid: multiplier `1 + amplitude·sin(2πt/period + φ)`
+    /// (requires `|amplitude| < 1` so the rate stays positive).
+    Diurnal { period_s: f64, amplitude: f64, phase: f64 },
+}
+
+impl Shape {
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Shape::None => {}
+            Shape::Ramp { to, duration_s } => {
+                ensure!(to.is_finite() && to > 0.0, "ramp `to` must be finite and > 0, got {to}");
+                ensure!(
+                    duration_s.is_finite() && duration_s > 0.0,
+                    "ramp duration_s must be finite and > 0, got {duration_s}"
+                );
+            }
+            Shape::Spike { factor, t_start, duration_s } => {
+                ensure!(
+                    factor.is_finite() && factor > 0.0,
+                    "spike factor must be finite and > 0, got {factor}"
+                );
+                ensure!(
+                    t_start.is_finite() && t_start >= 0.0,
+                    "spike t_start must be finite and >= 0, got {t_start}"
+                );
+                ensure!(
+                    duration_s.is_finite() && duration_s > 0.0,
+                    "spike duration_s must be finite and > 0, got {duration_s}"
+                );
+            }
+            Shape::Diurnal { period_s, amplitude, phase } => {
+                ensure!(
+                    period_s.is_finite() && period_s > 0.0,
+                    "diurnal period_s must be finite and > 0, got {period_s}"
+                );
+                ensure!(
+                    amplitude.is_finite() && amplitude.abs() < 1.0,
+                    "diurnal amplitude must satisfy |a| < 1, got {amplitude}"
+                );
+                ensure!(phase.is_finite(), "diurnal phase must be finite, got {phase}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate multiplier `m(t)` (always > 0 for valid
+    /// shapes).
+    pub fn multiplier(&self, t: f64) -> f64 {
+        match *self {
+            Shape::None => 1.0,
+            Shape::Ramp { to, duration_s } => 1.0 + (to - 1.0) * (t / duration_s).clamp(0.0, 1.0),
+            Shape::Spike { factor, t_start, duration_s } => {
+                if t >= t_start && t < t_start + duration_s {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+            Shape::Diurnal { period_s, amplitude, phase } => {
+                1.0 + amplitude * (std::f64::consts::TAU * t / period_s + phase).sin()
+            }
+        }
+    }
+
+    /// Cumulative intensity `Λ(t) = ∫₀ᵗ m(u) du` in closed form.
+    fn cumulative(&self, t: f64) -> f64 {
+        match *self {
+            Shape::None => t,
+            Shape::Ramp { to, duration_s } => {
+                let k = to - 1.0;
+                if t <= duration_s {
+                    t + k * t * t / (2.0 * duration_s)
+                } else {
+                    duration_s + k * duration_s / 2.0 + (t - duration_s) * to
+                }
+            }
+            Shape::Spike { factor, t_start, duration_s } => {
+                let overlap = (t.min(t_start + duration_s) - t_start).clamp(0.0, duration_s);
+                t + (factor - 1.0) * overlap
+            }
+            Shape::Diurnal { period_s, amplitude, phase } => {
+                let w = std::f64::consts::TAU / period_s;
+                t + amplitude / w * (phase.cos() - (w * t + phase).cos())
+            }
+        }
+    }
+
+    /// Time-rescale base arrivals: each `s_i` maps to `Λ⁻¹(s_i)`.
+    /// Strictly order-preserving; [`Shape::None`] returns the input
+    /// vector unchanged (the bitwise-identity pin).
+    pub fn rescale(&self, base: Vec<f64>) -> Vec<f64> {
+        if matches!(self, Shape::None) {
+            return base;
+        }
+        let mut lo = 0.0;
+        base.into_iter()
+            .map(|s| {
+                let t = self.invert(s, lo);
+                lo = t;
+                t
+            })
+            .collect()
+    }
+
+    /// Λ⁻¹(s) by deterministic expanding bracket + bisection. Λ is
+    /// strictly increasing (multiplier > 0) but has no closed-form
+    /// inverse for the diurnal sinusoid, and 64 halvings from any
+    /// bracket reach adjacent floats. `lo0` is the previous inverse —
+    /// the sequence of targets is non-decreasing, so it is always a
+    /// valid lower bound and the outputs stay monotone.
+    fn invert(&self, s: f64, lo0: f64) -> f64 {
+        let mut lo = lo0;
+        let mut hi = (lo0 * 2.0).max(1.0);
+        while self.cumulative(hi) < s {
+            hi *= 2.0;
+        }
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break; // interval collapsed to adjacent floats
+            }
+            if self.cumulative(mid) < s {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn monotone(xs: &[f64]) -> bool {
+        xs.windows(2).all(|w| w[1] >= w[0])
+    }
+
+    #[test]
+    fn poisson_matches_generator_arrivals() {
+        let mut a = Generator::new(7);
+        let got = ArrivalProcess::Poisson.sample(&mut a, 64, 3.0).unwrap();
+        let want = Generator::new(7).arrivals(64, 3.0);
+        let got_bits: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+        let want_bits: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got_bits, want_bits);
+    }
+
+    #[test]
+    fn mmpp_single_state_is_poisson_bitwise() {
+        let p = ArrivalProcess::Mmpp {
+            states: vec![MmppState { rate: 2.5, mean_dwell: 4.0 }],
+            transitions: vec![vec![1.0]],
+        };
+        let got = p.sample(&mut Generator::new(8), 50, 1.0).unwrap();
+        let want = Generator::new(8).arrivals(50, 2.5);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mmpp_two_state_is_finite_monotone_and_rate_modulated() {
+        let p = ArrivalProcess::Mmpp {
+            states: vec![
+                MmppState { rate: 1.0, mean_dwell: 10.0 },
+                MmppState { rate: 20.0, mean_dwell: 10.0 },
+            ],
+            transitions: vec![vec![0.0, 1.0], vec![1.0, 0.0]],
+        };
+        let a = p.sample(&mut Generator::new(9), 4000, 1.0).unwrap();
+        assert_eq!(a.len(), 4000);
+        assert!(a.iter().all(|t| t.is_finite() && *t > 0.0));
+        assert!(monotone(&a));
+        // Long-run rate sits between the two state rates.
+        let mean_rate = 4000.0 / a.last().unwrap();
+        assert!((1.0..20.0).contains(&mean_rate), "mean rate {mean_rate}");
+    }
+
+    #[test]
+    fn mmpp_validation_rejects_bad_configs() {
+        let bad_rate = ArrivalProcess::Mmpp {
+            states: vec![MmppState { rate: 0.0, mean_dwell: 1.0 }],
+            transitions: vec![vec![1.0]],
+        };
+        assert!(bad_rate.validate(1.0, 4).is_err());
+        let ragged = ArrivalProcess::Mmpp {
+            states: vec![
+                MmppState { rate: 1.0, mean_dwell: 1.0 },
+                MmppState { rate: 2.0, mean_dwell: 1.0 },
+            ],
+            transitions: vec![vec![1.0, 1.0]],
+        };
+        assert!(ragged.validate(1.0, 4).is_err());
+        let zero_row = ArrivalProcess::Mmpp {
+            states: vec![
+                MmppState { rate: 1.0, mean_dwell: 1.0 },
+                MmppState { rate: 2.0, mean_dwell: 1.0 },
+            ],
+            transitions: vec![vec![0.0, 0.0], vec![1.0, 0.0]],
+        };
+        assert!(zero_row.validate(1.0, 4).is_err());
+    }
+
+    #[test]
+    fn replay_validates_and_truncates() {
+        let p = ArrivalProcess::Replay { times: vec![0.0, 0.5, 0.5, 2.0, 9.0] };
+        let a = p.sample(&mut Generator::new(1), 3, 1.0).unwrap();
+        assert_eq!(a, vec![0.0, 0.5, 0.5]);
+        assert!(p.validate(1.0, 6).is_err(), "too few timestamps");
+        let dec = ArrivalProcess::Replay { times: vec![1.0, 0.5] };
+        assert!(dec.validate(1.0, 2).is_err(), "decreasing");
+        let nan = ArrivalProcess::Replay { times: vec![f64::NAN] };
+        assert!(nan.validate(1.0, 1).is_err(), "NaN");
+    }
+
+    #[test]
+    fn shape_none_is_exact_identity() {
+        let base = Generator::new(3).arrivals(32, 2.0);
+        let out = Shape::None.rescale(base.clone());
+        assert_eq!(
+            base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn spike_compresses_arrivals_into_window() {
+        // With multiplier f on [2, 4), base time s in [Λ(2), Λ(4)) maps
+        // into the window, squeezing f× the arrivals into it.
+        let shape = Shape::Spike { factor: 10.0, t_start: 2.0, duration_s: 2.0 };
+        let base: Vec<f64> = (1..=400).map(|i| i as f64 * 0.1).collect();
+        let out = shape.rescale(base);
+        assert!(out.windows(2).all(|w| w[1] >= w[0]));
+        let in_window = out.iter().filter(|t| (2.0..4.0).contains(*t)).count();
+        // Window covers Λ⁻¹ of [2, 22): 200 of the 400 base points.
+        assert_eq!(in_window, 200);
+    }
+
+    #[test]
+    fn ramp_and_diurnal_inverses_are_accurate() {
+        for shape in [
+            Shape::Ramp { to: 5.0, duration_s: 10.0 },
+            Shape::Diurnal { period_s: 8.0, amplitude: 0.9, phase: 1.0 },
+        ] {
+            shape.validate().unwrap();
+            let base: Vec<f64> = (1..=200).map(|i| i as f64 * 0.25).collect();
+            let out = shape.rescale(base.clone());
+            assert!(out.windows(2).all(|w| w[1] >= w[0]), "{shape:?} not monotone");
+            for (s, t) in base.iter().zip(&out) {
+                let back = shape.cumulative(*t);
+                assert!((back - s).abs() < 1e-9, "{shape:?}: Λ({t}) = {back}, want {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_degenerate_knobs() {
+        assert!(Shape::Ramp { to: 0.0, duration_s: 1.0 }.validate().is_err());
+        assert!(Shape::Spike { factor: 1.0, t_start: -1.0, duration_s: 1.0 }.validate().is_err());
+        assert!(
+            Shape::Diurnal { period_s: 8.0, amplitude: 1.0, phase: 0.0 }.validate().is_err(),
+            "amplitude 1 lets the rate touch zero"
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Multi-turn dialogue sessions à la LCIO's M4AI setting.
+//!
+//! A dialogue scenario samples a heavy-tailed turn count per session
+//! and open-loop think-time gaps between turns: turn `j+1` arrives at
+//! `t_j + gap` regardless of when turn `j` completes, so the whole
+//! trace is still a static `TraceSpec::arrivals` vector and every
+//! bitwise-determinism pin on the serving core survives. Follow-up
+//! turns carry `Item::prior_turns > 0` and are eligible for the
+//! prefill-reuse discount (`TraceSpec::reuse_discount`): the session
+//! state machines scale LLM prefill time and FLOPs by
+//! `1 - reuse_discount`, modeling KV/prefix reuse of the conversation
+//! context (encoders run full price — new images arrive each turn).
+
+use anyhow::{ensure, Result};
+
+use crate::util::Rng;
+
+/// Dialogue-session knobs (`[dialogue]` table of a scenario file).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DialogueCfg {
+    /// Pareto tail index for the turn count — smaller is heavier
+    /// tailed. Must be > 0.
+    pub alpha: f64,
+    /// Hard cap on turns per session (>= 1).
+    pub max_turns: usize,
+    /// Mean think time between consecutive turns of a session (s).
+    pub think_mean_s: f64,
+    /// Prefill-reuse discount for follow-up turns, in [0, 1).
+    pub reuse_discount: f64,
+}
+
+impl Default for DialogueCfg {
+    fn default() -> Self {
+        DialogueCfg { alpha: 1.6, max_turns: 8, think_mean_s: 4.0, reuse_discount: 0.3 }
+    }
+}
+
+impl DialogueCfg {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.alpha.is_finite() && self.alpha > 0.0,
+            "dialogue alpha must be finite and > 0, got {}",
+            self.alpha
+        );
+        ensure!(self.max_turns >= 1, "dialogue max_turns must be >= 1");
+        ensure!(
+            self.think_mean_s.is_finite() && self.think_mean_s > 0.0,
+            "dialogue think_mean_s must be finite and > 0, got {}",
+            self.think_mean_s
+        );
+        ensure!(
+            self.reuse_discount.is_finite() && (0.0..1.0).contains(&self.reuse_discount),
+            "dialogue reuse_discount must be in [0, 1), got {}",
+            self.reuse_discount
+        );
+        Ok(())
+    }
+
+    /// Heavy-tailed turn count: discrete Pareto `ceil(U^(-1/alpha))`,
+    /// clamped to `[1, max_turns]`.
+    pub fn sample_turns(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64().max(1e-12);
+        let k = u.powf(-1.0 / self.alpha).ceil() as usize;
+        k.clamp(1, self.max_turns)
+    }
+
+    /// Think-time gaps for one session of `turns` turns (length
+    /// `turns - 1`, exponential with mean `think_mean_s`).
+    pub fn sample_gaps(&self, rng: &mut Rng, turns: usize) -> Vec<f64> {
+        (1..turns).map(|_| rng.exp(1.0 / self.think_mean_s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn turn_counts_are_clamped_and_heavy_tailed() {
+        let cfg = DialogueCfg { alpha: 1.2, max_turns: 10, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(5);
+        let counts: Vec<usize> = (0..4000).map(|_| cfg.sample_turns(&mut rng)).collect();
+        assert!(counts.iter().all(|&k| (1..=10).contains(&k)));
+        let singles = counts.iter().filter(|&&k| k == 1).count();
+        let multis = counts.iter().filter(|&&k| k >= 4).count();
+        // Pareto(1.2): P(k=1) ≈ 0.56, and a real tail survives past 4.
+        assert!(singles > 1500, "singles {singles}");
+        assert!(multis > 200, "multis {multis}");
+    }
+
+    #[test]
+    fn gaps_have_configured_mean() {
+        let cfg = DialogueCfg { think_mean_s: 2.0, ..Default::default() };
+        let mut rng = Rng::seed_from_u64(6);
+        let gaps = cfg.sample_gaps(&mut rng, 20_001);
+        assert_eq!(gaps.len(), 20_000);
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean gap {mean}");
+        assert!(gaps.iter().all(|g| g.is_finite() && *g > 0.0));
+    }
+
+    #[test]
+    fn validation_rejects_bad_knobs() {
+        assert!(DialogueCfg { alpha: 0.0, ..Default::default() }.validate().is_err());
+        assert!(DialogueCfg { max_turns: 0, ..Default::default() }.validate().is_err());
+        assert!(DialogueCfg { think_mean_s: -1.0, ..Default::default() }.validate().is_err());
+        assert!(DialogueCfg { reuse_discount: 1.0, ..Default::default() }.validate().is_err());
+        assert!(DialogueCfg::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,655 @@
+//! Declarative workload scenarios: a small configuration language that
+//! compiles to a [`TraceSpec`].
+//!
+//! A scenario file (TOML or JSON — see the README's "Scenario files"
+//! section for the grammar) composes three orthogonal pieces:
+//!
+//! * an **arrival process** ([`ArrivalProcess`]: Poisson, MMPP, or a
+//!   replayed timestamp trace) with an optional deterministic
+//!   **shape** ([`Shape`]: ramp, flash-crowd spike, diurnal sinusoid)
+//!   applied as time-rescaling;
+//! * a **request mix** ([`Mix`]): weighted benchmark and tenant-policy
+//!   distributions resolved per session from one seeded stream;
+//! * optional **multi-turn dialogue sessions** ([`DialogueCfg`]):
+//!   heavy-tailed turn counts, open-loop think-time gaps, and a
+//!   prefill-reuse discount for follow-up turns.
+//!
+//! [`ScenarioSpec::compile`] is the single entrypoint: it expands the
+//! scenario into a static `TraceSpec` (items + arrivals + policy), so
+//! everything downstream — admission, routing, sharded simulation —
+//! runs unchanged. A scenario with no scenario-specific features (flat
+//! Poisson, default mix, no dialogue) compiles to the *bitwise
+//! identical* trace the legacy `msao serve --mode` path builds, pinned
+//! by property and golden tests.
+
+mod arrival;
+mod dialogue;
+
+pub use arrival::{ArrivalProcess, MmppState, Shape};
+pub use dialogue::DialogueCfg;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{Mode, PolicyKind, TraceSpec};
+use crate::util::json::Value;
+use crate::util::Rng;
+use crate::workload::{Benchmark, Generator, Item};
+
+/// Salt for the mix RNG stream: benchmark/tenant draws must never touch
+/// the generator's item/arrival stream (that is what keeps the flat
+/// scenario bitwise identical to the legacy path).
+const MIX_SALT: u64 = 0x6D69_785F_7374_7231;
+/// Salt for the dialogue RNG stream (turn counts and think-time gaps).
+const DIALOGUE_SALT: u64 = 0x6469_616C_6F67_5F73;
+
+/// A parsed, validated scenario — see the module docs for the model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Number of sessions (= requests when dialogue is off).
+    pub n: usize,
+    /// Base arrival rate (sessions/s) for the Poisson process; unused
+    /// by MMPP (per-state rates) and replay (explicit timestamps).
+    pub rate: f64,
+    pub arrival: ArrivalProcess,
+    pub shape: Shape,
+    pub mix: Mix,
+    /// `Some` turns each session into a multi-turn dialogue.
+    pub dialogue: Option<DialogueCfg>,
+}
+
+impl Default for ScenarioSpec {
+    /// The flat scenario: Poisson at the `msao serve` defaults, VQA
+    /// items, single MSAO tenant, no dialogue.
+    fn default() -> Self {
+        ScenarioSpec {
+            n: 16,
+            rate: 2.0,
+            arrival: ArrivalProcess::Poisson,
+            shape: Shape::None,
+            mix: Mix::default(),
+            dialogue: None,
+        }
+    }
+}
+
+/// Weighted request mix: which benchmark each session draws its items
+/// from and which tenant policy serves it. Entries are kept in
+/// canonical (name-sorted) order so sampling is deterministic across
+/// construction paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mix {
+    pub benchmarks: Vec<(Benchmark, f64)>,
+    pub tenants: Vec<(PolicyKind, f64)>,
+}
+
+impl Default for Mix {
+    fn default() -> Self {
+        Mix {
+            benchmarks: vec![(Benchmark::Vqa, 1.0)],
+            tenants: vec![(PolicyKind::Msao(Mode::Msao), 1.0)],
+        }
+    }
+}
+
+impl Mix {
+    pub fn validate(&self) -> Result<()> {
+        for (what, weights) in [
+            ("benchmarks", self.benchmarks.iter().map(|(_, w)| *w).collect::<Vec<_>>()),
+            ("tenants", self.tenants.iter().map(|(_, w)| *w).collect::<Vec<_>>()),
+        ] {
+            ensure!(!weights.is_empty(), "mix {what} must not be empty");
+            ensure!(
+                weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+                "mix {what} weights must be finite and >= 0"
+            );
+            ensure!(weights.iter().sum::<f64>() > 0.0, "mix {what} weights must not all be zero");
+        }
+        if self.tenants.len() > 1
+            && self.tenants.iter().any(|(p, _)| matches!(p, PolicyKind::Msao(Mode::NoCollabSched)))
+        {
+            bail!("no-collab cannot appear in a multi-tenant mix (it disarms the shared batcher)");
+        }
+        if self.tenants.iter().any(|(p, _)| matches!(p, PolicyKind::PerRequest(_))) {
+            bail!("mix tenants must be concrete policies, not PerRequest");
+        }
+        Ok(())
+    }
+}
+
+impl ScenarioSpec {
+    /// Load a scenario file, dispatching on extension: `.json` parses
+    /// as JSON, anything else as the TOML subset (`util::toml`).
+    pub fn load(path: &str) -> Result<ScenarioSpec> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = if path.ends_with(".json") {
+            Value::parse(&text)
+        } else {
+            crate::util::toml::parse(&text)
+        }
+        .with_context(|| format!("parsing {path}"))?;
+        Self::from_value(&v).with_context(|| format!("in scenario file {path}"))
+    }
+
+    /// Build from a parsed [`Value`] tree; unknown keys are errors.
+    pub fn from_value(v: &Value) -> Result<ScenarioSpec> {
+        check_keys(v, &["n", "rate", "arrival", "shape", "mix", "dialogue"], "scenario")?;
+        let d = ScenarioSpec::default();
+        let spec = ScenarioSpec {
+            n: match v.get("n") {
+                Some(x) => x.as_usize()?,
+                None => d.n,
+            },
+            rate: match v.get("rate") {
+                Some(x) => x.as_f64()?,
+                None => d.rate,
+            },
+            arrival: match v.get("arrival") {
+                Some(t) => parse_arrival(t)?,
+                None => ArrivalProcess::Poisson,
+            },
+            shape: match v.get("shape") {
+                Some(t) => parse_shape(t)?,
+                None => Shape::None,
+            },
+            mix: match v.get("mix") {
+                Some(t) => parse_mix(t)?,
+                None => Mix::default(),
+            },
+            dialogue: match v.get("dialogue") {
+                Some(t) => parse_dialogue(t)?,
+                None => None,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.n >= 1, "scenario needs n >= 1 sessions");
+        self.arrival.validate(self.rate, self.n)?;
+        self.shape.validate()?;
+        self.mix.validate()?;
+        if let Some(d) = &self.dialogue {
+            d.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Expand the scenario into a static [`TraceSpec`].
+    ///
+    /// Determinism contract: the generator's stream sees exactly the
+    /// same draw sequence as the legacy path — all items first (one per
+    /// turn, session-major), then the base arrivals — while mix and
+    /// dialogue draws come from separately salted streams. A flat
+    /// scenario (Poisson, single benchmark, single tenant, no dialogue)
+    /// therefore reproduces `Generator::items` + `Generator::arrivals`
+    /// bit for bit.
+    pub fn compile(&self, seed: u64) -> Result<TraceSpec> {
+        self.validate()?;
+        let mut gen = Generator::new(seed);
+        let mut mix_rng = Rng::seed_from_u64(seed ^ MIX_SALT);
+        let mut dlg_rng = Rng::seed_from_u64(seed ^ DIALOGUE_SALT);
+        let bench_w: Vec<f64> = self.mix.benchmarks.iter().map(|(_, w)| *w).collect();
+        let tenant_w: Vec<f64> = self.mix.tenants.iter().map(|(_, w)| *w).collect();
+
+        // Per-session draws and items. A single-entry mix makes no RNG
+        // draw at all, so the default mix is cost-free on the streams.
+        let mut items: Vec<Item> = Vec::new();
+        let mut sessions: Vec<(usize, Vec<f64>)> = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let bench = if bench_w.len() == 1 { 0 } else { mix_rng.weighted(&bench_w) };
+            let tenant = if tenant_w.len() == 1 { 0 } else { mix_rng.weighted(&tenant_w) };
+            let turns = match &self.dialogue {
+                Some(d) => d.sample_turns(&mut dlg_rng),
+                None => 1,
+            };
+            let gaps = match &self.dialogue {
+                Some(d) => d.sample_gaps(&mut dlg_rng, turns),
+                None => Vec::new(),
+            };
+            for turn in 0..turns {
+                let mut item = match self.mix.benchmarks[bench].0 {
+                    Benchmark::Vqa => gen.vqa_item(),
+                    Benchmark::MmBench => gen.mmbench_item(),
+                };
+                item.prior_turns = turn;
+                items.push(item);
+            }
+            sessions.push((tenant, gaps));
+        }
+
+        // Base arrivals (one per session) on the generator's stream,
+        // then the deterministic shape rescale.
+        let base = self.arrival.sample(&mut gen, self.n, self.rate)?;
+        let base = self.shape.rescale(base);
+
+        // Open-loop turn expansion: turn j+1 of a session arrives at
+        // turn j's arrival plus a think gap, regardless of completion.
+        // The flattened trace is then stably sorted by arrival time so
+        // `TraceSpec::validate`'s non-decreasing invariant holds.
+        let mut order: Vec<(f64, usize, usize)> = Vec::with_capacity(items.len());
+        let mut cursor = 0usize;
+        for (s, (tenant, gaps)) in sessions.iter().enumerate() {
+            let mut t = base[s];
+            order.push((t, cursor, *tenant));
+            cursor += 1;
+            for gap in gaps {
+                t += gap;
+                order.push((t, cursor, *tenant));
+                cursor += 1;
+            }
+        }
+        debug_assert_eq!(cursor, items.len());
+        order.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        let mut slots: Vec<Option<Item>> = items.into_iter().map(Some).collect();
+        let mut final_items = Vec::with_capacity(slots.len());
+        let mut arrivals = Vec::with_capacity(slots.len());
+        let mut tenants = Vec::with_capacity(slots.len());
+        for (t, idx, tenant) in order {
+            final_items.push(slots[idx].take().expect("each item placed exactly once"));
+            arrivals.push(t);
+            tenants.push(tenant);
+        }
+
+        let policy = if self.mix.tenants.len() == 1 {
+            self.mix.tenants[0].0.clone()
+        } else {
+            PolicyKind::PerRequest(
+                tenants.iter().map(|&i| self.mix.tenants[i].0.clone()).collect(),
+            )
+        };
+        let discount = self.dialogue.as_ref().map_or(0.0, |d| d.reuse_discount);
+        let spec = TraceSpec::new(policy)
+            .trace(final_items, arrivals)
+            .seed(seed)
+            .reuse(discount);
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// One-line summary of a compiled scenario file (the `msao scenario`
+/// command and the CI parse-validation step print these).
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub file: String,
+    /// Requests in the compiled trace (>= sessions when dialogue is on).
+    pub requests: usize,
+    pub sessions: usize,
+    /// Last arrival timestamp (s).
+    pub span_s: f64,
+    pub policy: String,
+    pub dialogue: bool,
+}
+
+/// Parse + compile one scenario file (engine-free — no artifacts or
+/// serving required), returning its summary.
+pub fn check_file(path: &str, seed: u64) -> Result<ScenarioReport> {
+    let sc = ScenarioSpec::load(path)?;
+    let spec = sc.compile(seed).with_context(|| format!("compiling {path}"))?;
+    Ok(ScenarioReport {
+        file: path.to_string(),
+        requests: spec.items.len(),
+        sessions: sc.n,
+        span_s: spec.arrivals.last().copied().unwrap_or(0.0),
+        policy: spec.policy.name().to_string(),
+        dialogue: sc.dialogue.is_some(),
+    })
+}
+
+/// [`check_file`] over every `.toml`/`.json` file in `dir` (sorted by
+/// name; an empty directory is an error so CI cannot silently pass).
+pub fn check_dir(dir: &str, seed: u64) -> Result<Vec<ScenarioReport>> {
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {dir}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| matches!(p.extension().and_then(|e| e.to_str()), Some("toml" | "json")))
+        .collect();
+    paths.sort();
+    ensure!(!paths.is_empty(), "no .toml/.json scenario files in {dir}");
+    paths.iter().map(|p| check_file(&p.to_string_lossy(), seed)).collect()
+}
+
+fn check_keys(v: &Value, allowed: &[&str], what: &str) -> Result<()> {
+    for k in v.as_obj()?.keys() {
+        if !allowed.contains(&k.as_str()) {
+            bail!("unknown key {k:?} in {what} (allowed: {allowed:?})");
+        }
+    }
+    Ok(())
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.req(key)?.as_f64().with_context(|| format!("key {key:?}"))
+}
+
+fn parse_arrival(v: &Value) -> Result<ArrivalProcess> {
+    check_keys(v, &["process", "states", "transitions", "times"], "[arrival]")?;
+    let process = match v.get("process") {
+        Some(p) => p.as_str()?,
+        None => "poisson",
+    };
+    let only = |keys: &[&str]| -> Result<()> {
+        for k in ["states", "transitions", "times"] {
+            if !keys.contains(&k) && v.get(k).is_some() {
+                bail!("[arrival] key {k:?} does not apply to process {process:?}");
+            }
+        }
+        Ok(())
+    };
+    Ok(match process {
+        "poisson" => {
+            only(&[])?;
+            ArrivalProcess::Poisson
+        }
+        "mmpp" => {
+            only(&["states", "transitions"])?;
+            let states = v
+                .req("states")?
+                .as_arr()?
+                .iter()
+                .map(|s| {
+                    check_keys(s, &["rate", "mean_dwell"], "[arrival] mmpp state")?;
+                    Ok(MmppState {
+                        rate: req_f64(s, "rate")?,
+                        mean_dwell: req_f64(s, "mean_dwell")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let transitions = v
+                .req("transitions")?
+                .as_arr()?
+                .iter()
+                .map(|row| row.as_arr()?.iter().map(|w| w.as_f64()).collect())
+                .collect::<Result<Vec<Vec<f64>>>>()?;
+            ArrivalProcess::Mmpp { states, transitions }
+        }
+        "replay" => {
+            only(&["times"])?;
+            let times =
+                v.req("times")?.as_arr()?.iter().map(|t| t.as_f64()).collect::<Result<Vec<_>>>()?;
+            ArrivalProcess::Replay { times }
+        }
+        other => bail!("unknown arrival process {other:?} (try poisson|mmpp|replay)"),
+    })
+}
+
+fn parse_shape(v: &Value) -> Result<Shape> {
+    let kind = match v.get("kind") {
+        Some(k) => k.as_str()?,
+        None => "none",
+    };
+    Ok(match kind {
+        "none" => {
+            check_keys(v, &["kind"], "[shape] none")?;
+            Shape::None
+        }
+        "ramp" => {
+            check_keys(v, &["kind", "to", "duration_s"], "[shape] ramp")?;
+            Shape::Ramp { to: req_f64(v, "to")?, duration_s: req_f64(v, "duration_s")? }
+        }
+        "spike" => {
+            check_keys(v, &["kind", "factor", "t_start", "duration_s"], "[shape] spike")?;
+            Shape::Spike {
+                factor: req_f64(v, "factor")?,
+                t_start: req_f64(v, "t_start")?,
+                duration_s: req_f64(v, "duration_s")?,
+            }
+        }
+        "diurnal" => {
+            check_keys(v, &["kind", "period_s", "amplitude", "phase"], "[shape] diurnal")?;
+            Shape::Diurnal {
+                period_s: req_f64(v, "period_s")?,
+                amplitude: req_f64(v, "amplitude")?,
+                phase: match v.get("phase") {
+                    Some(p) => p.as_f64()?,
+                    None => 0.0,
+                },
+            }
+        }
+        other => bail!("unknown shape kind {other:?} (try none|ramp|spike|diurnal)"),
+    })
+}
+
+fn parse_mix(v: &Value) -> Result<Mix> {
+    check_keys(v, &["benchmarks", "tenants"], "[mix]")?;
+    let mut mix = Mix::default();
+    if let Some(b) = v.get("benchmarks") {
+        // BTreeMap iteration = name-sorted = canonical sampling order.
+        mix.benchmarks = b
+            .as_obj()?
+            .iter()
+            .map(|(name, w)| {
+                let bench = match name.as_str() {
+                    "vqa" => Benchmark::Vqa,
+                    "mmbench" => Benchmark::MmBench,
+                    other => bail!("unknown benchmark {other:?} (try vqa|mmbench)"),
+                };
+                Ok((bench, w.as_f64()?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(t) = v.get("tenants") {
+        mix.tenants = t
+            .as_obj()?
+            .iter()
+            .map(|(name, w)| Ok((crate::cli::policy_for_mode(name)?, w.as_f64()?)))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    Ok(mix)
+}
+
+fn parse_dialogue(v: &Value) -> Result<Option<DialogueCfg>> {
+    check_keys(
+        v,
+        &["enabled", "alpha", "max_turns", "think_mean_s", "reuse_discount"],
+        "[dialogue]",
+    )?;
+    let enabled = match v.get("enabled") {
+        Some(e) => e.as_bool()?,
+        None => true,
+    };
+    if !enabled {
+        return Ok(None);
+    }
+    let d = DialogueCfg::default();
+    Ok(Some(DialogueCfg {
+        alpha: match v.get("alpha") {
+            Some(x) => x.as_f64()?,
+            None => d.alpha,
+        },
+        max_turns: match v.get("max_turns") {
+            Some(x) => x.as_usize()?,
+            None => d.max_turns,
+        },
+        think_mean_s: match v.get("think_mean_s") {
+            Some(x) => x.as_f64()?,
+            None => d.think_mean_s,
+        },
+        reuse_discount: match v.get("reuse_discount") {
+            Some(x) => x.as_f64()?,
+            None => d.reuse_discount,
+        },
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toml_spec(doc: &str) -> Result<ScenarioSpec> {
+        ScenarioSpec::from_value(&crate::util::toml::parse(doc)?)
+    }
+
+    #[test]
+    fn empty_scenario_is_the_flat_default() {
+        let sc = toml_spec("").unwrap();
+        assert_eq!(sc, ScenarioSpec::default());
+    }
+
+    #[test]
+    fn full_grammar_round_trip() {
+        let sc = toml_spec(
+            r#"
+            n = 12
+            rate = 3.0
+
+            [arrival]
+            process = "mmpp"
+            states = [
+              { rate = 2.0, mean_dwell = 6.0 },
+              { rate = 10.0, mean_dwell = 2.0 },
+            ]
+            transitions = [[0.0, 1.0], [1.0, 0.0]]
+
+            [shape]
+            kind = "diurnal"
+            period_s = 24.0
+            amplitude = 0.6
+
+            [mix]
+            benchmarks = { vqa = 0.7, mmbench = 0.3 }
+            tenants = { msao = 0.5, cloud = 0.25, edge = 0.25 }
+
+            [dialogue]
+            alpha = 1.4
+            max_turns = 5
+            think_mean_s = 2.0
+            reuse_discount = 0.4
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sc.n, 12);
+        assert!(matches!(sc.arrival, ArrivalProcess::Mmpp { ref states, .. } if states.len() == 2));
+        assert_eq!(sc.shape, Shape::Diurnal { period_s: 24.0, amplitude: 0.6, phase: 0.0 });
+        assert_eq!(sc.mix.benchmarks.len(), 2);
+        assert_eq!(sc.mix.tenants.len(), 3);
+        let d = sc.dialogue.as_ref().unwrap();
+        assert_eq!(d.max_turns, 5);
+        assert_eq!(d.reuse_discount, 0.4);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_at_every_level() {
+        assert!(toml_spec("bogus = 1\n").is_err());
+        assert!(toml_spec("[arrival]\nprocess = \"poisson\"\nbogus = 1\n").is_err());
+        assert!(toml_spec("[shape]\nkind = \"ramp\"\nto = 2.0\nduration_s = 1.0\nx = 1\n")
+            .is_err());
+        assert!(toml_spec("[mix]\nbogus = {}\n").is_err());
+        assert!(toml_spec("[dialogue]\nbogus = 1\n").is_err());
+        // Cross-process keys are rejected too.
+        assert!(toml_spec("[arrival]\nprocess = \"poisson\"\ntimes = [1.0]\n").is_err());
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        assert!(toml_spec("[arrival]\nprocess = \"bogus\"\n").is_err());
+        assert!(toml_spec("[shape]\nkind = \"bogus\"\n").is_err());
+        assert!(toml_spec("[mix]\nbenchmarks = { bogus = 1.0 }\n").is_err());
+        assert!(toml_spec("[mix]\ntenants = { bogus = 1.0 }\n").is_err());
+        // `mixed` is a CLI expansion, not a tenant policy.
+        assert!(toml_spec("[mix]\ntenants = { mixed = 1.0 }\n").is_err());
+    }
+
+    #[test]
+    fn multi_tenant_no_collab_rejected_single_allowed() {
+        assert!(toml_spec("[mix]\ntenants = { no-collab = 1.0 }\n").is_ok());
+        assert!(toml_spec("[mix]\ntenants = { no-collab = 0.5, msao = 0.5 }\n").is_err());
+    }
+
+    #[test]
+    fn disabled_dialogue_table_is_none() {
+        let sc = toml_spec("[dialogue]\nenabled = false\n").unwrap();
+        assert_eq!(sc.dialogue, None);
+        let sc = toml_spec("[dialogue]\nenabled = true\n").unwrap();
+        assert!(sc.dialogue.is_some());
+    }
+
+    #[test]
+    fn flat_compile_matches_legacy_generator_stream_bitwise() {
+        // The golden pin at the unit level: default scenario == the
+        // exact `Generator::items` + `Generator::arrivals` sequence the
+        // `msao serve` path runs.
+        for seed in [1u64, 42, 1234] {
+            let spec = ScenarioSpec::default().compile(seed).unwrap();
+            let mut gen = Generator::new(seed);
+            let items = gen.items(Benchmark::Vqa, 16);
+            let arrivals = gen.arrivals(16, 2.0);
+            assert_eq!(spec.policy, PolicyKind::Msao(Mode::Msao));
+            assert_eq!(spec.seed, seed);
+            assert_eq!(spec.reuse_discount, 0.0);
+            let got: Vec<u64> = spec.arrivals.iter().map(|t| t.to_bits()).collect();
+            let want: Vec<u64> = arrivals.iter().map(|t| t.to_bits()).collect();
+            assert_eq!(got, want, "seed {seed}: arrivals diverge");
+            assert_eq!(spec.items.len(), items.len());
+            for (a, b) in spec.items.iter().zip(&items) {
+                assert_eq!(a.id, b.id, "seed {seed}");
+                assert_eq!(a.question, b.question, "seed {seed}");
+                assert_eq!(a.image, b.image, "seed {seed}");
+                assert_eq!(a.answer, b.answer, "seed {seed}");
+                assert_eq!(a.prior_turns, 0, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn dialogue_compile_expands_turns_open_loop() {
+        let sc = ScenarioSpec {
+            n: 10,
+            dialogue: Some(DialogueCfg {
+                alpha: 1.2,
+                max_turns: 6,
+                think_mean_s: 1.5,
+                reuse_discount: 0.3,
+            }),
+            ..Default::default()
+        };
+        let spec = sc.compile(7).unwrap();
+        spec.validate().unwrap();
+        assert!(spec.items.len() >= 10, "at least one turn per session");
+        assert_eq!(spec.items.len(), spec.arrivals.len());
+        assert!(spec.arrivals.windows(2).all(|w| w[1] >= w[0]), "arrivals must stay sorted");
+        assert!(
+            spec.items.iter().any(|i| i.prior_turns > 0),
+            "10 Pareto(1.2) sessions should produce follow-up turns"
+        );
+        assert_eq!(spec.reuse_discount, 0.3);
+        // Item ids stay unique through the reorder.
+        let mut ids: Vec<u64> = spec.items.iter().map(|i| i.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), spec.items.len());
+        // Compilation is deterministic.
+        let again = sc.compile(7).unwrap();
+        let a: Vec<u64> = spec.arrivals.iter().map(|t| t.to_bits()).collect();
+        let b: Vec<u64> = again.arrivals.iter().map(|t| t.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_tenant_compile_builds_per_request_policy() {
+        let doc = "n = 8\n[mix]\ntenants = { msao = 0.4, cloud = 0.3, edge = 0.3 }\n";
+        let sc = toml_spec(doc).unwrap();
+        let spec = sc.compile(3).unwrap();
+        match &spec.policy {
+            PolicyKind::PerRequest(v) => {
+                assert_eq!(v.len(), 8);
+                spec.validate().unwrap();
+            }
+            p => panic!("expected PerRequest, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn json_scenarios_parse_too() {
+        let v = Value::parse(
+            r#"{"n": 4, "rate": 1.5, "shape": {"kind": "ramp", "to": 3.0, "duration_s": 5.0}}"#,
+        )
+        .unwrap();
+        let sc = ScenarioSpec::from_value(&v).unwrap();
+        assert_eq!(sc.n, 4);
+        assert_eq!(sc.shape, Shape::Ramp { to: 3.0, duration_s: 5.0 });
+        sc.compile(1).unwrap().validate().unwrap();
+    }
+}

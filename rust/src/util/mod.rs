@@ -1,5 +1,5 @@
-//! From-scratch substrates for the offline environment: JSON, PRNG,
-//! one-shot channels, statistics, and table rendering.
+//! From-scratch substrates for the offline environment: JSON, TOML,
+//! PRNG, one-shot channels, statistics, and table rendering.
 
 pub mod json;
 pub mod oneshot;
@@ -7,5 +7,6 @@ pub mod rng;
 pub mod stats;
 pub mod bench;
 pub mod table;
+pub mod toml;
 
 pub use rng::Rng;

@@ -1,0 +1,447 @@
+//! Minimal TOML-subset parser lowering into [`Value`] (substrate — no
+//! toml crate offline). The consumer is `crate::scenario`: scenario
+//! files are authored in TOML for readability, parsed here into the
+//! same [`Value`] tree that `.json` files produce, so everything
+//! downstream (validation, `compile`) is format-agnostic.
+//!
+//! Supported grammar:
+//! * `#` comments and blank lines
+//! * `[table]` / `[a.b]` headers and `[[array.of.tables]]`
+//! * `key = value` with bare (`A-Za-z0-9_-`) or `"quoted"` keys
+//! * values: `"strings"` (escapes `\"` `\\` `\n` `\t` `\r`), integers
+//!   and floats (underscore separators stripped), `true`/`false`,
+//!   `[arrays]` (multi-line, trailing comma allowed), and
+//!   `{inline = "tables"}`
+//!
+//! Deliberately rejected (with a line-numbered error): dates, literal
+//! `'...'` and multi-line strings, dotted keys left of `=`, and
+//! `inf`/`nan` literals — scenario knobs must be finite. Duplicate keys
+//! in the same table are an error; re-opening a `[table]` header merges.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Value;
+
+/// Parse a TOML-subset document into a [`Value::Obj`].
+pub fn parse(text: &str) -> Result<Value> {
+    let mut p = Toml { b: text.as_bytes(), i: 0 };
+    let mut root = BTreeMap::new();
+    // Path of the table the current `key = value` lines land in.
+    let mut path: Vec<String> = Vec::new();
+    loop {
+        p.skip_trivia();
+        let Some(c) = p.peek() else { break };
+        if c == b'[' {
+            p.i += 1;
+            let array = p.peek() == Some(b'[');
+            if array {
+                p.i += 1;
+            }
+            let segs = p.header_path()?;
+            let line = p.line();
+            p.expect(b']')?;
+            if array {
+                p.expect(b']')?;
+            }
+            p.end_of_line()?;
+            if array {
+                push_table(&mut root, &segs).with_context(|| format!("line {line}"))?;
+            } else {
+                navigate(&mut root, &segs).with_context(|| format!("line {line}"))?;
+            }
+            path = segs;
+        } else {
+            let line = p.line();
+            let key = p.key()?;
+            p.expect(b'=')?;
+            let v = p.value()?;
+            p.end_of_line()?;
+            let table = navigate(&mut root, &path).with_context(|| format!("line {line}"))?;
+            if table.contains_key(&key) {
+                bail!("duplicate key {key:?} at line {line}");
+            }
+            table.insert(key, v);
+        }
+    }
+    Ok(Value::Obj(root))
+}
+
+/// Walk (creating as needed) to the table at `path`. Array-of-tables
+/// segments resolve to their most recently pushed element.
+fn navigate<'m>(
+    root: &'m mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'m mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for seg in path {
+        let slot = cur.entry(seg.clone()).or_insert_with(|| Value::Obj(BTreeMap::new()));
+        cur = match slot {
+            Value::Obj(m) => m,
+            Value::Arr(a) => match a.last_mut() {
+                Some(Value::Obj(m)) => m,
+                _ => bail!("cannot extend non-table array {seg:?}"),
+            },
+            _ => bail!("key {seg:?} is not a table"),
+        };
+    }
+    Ok(cur)
+}
+
+/// `[[a.b]]`: append a fresh table to the array at the path's last
+/// segment, creating the array on first sight.
+fn push_table(root: &mut BTreeMap<String, Value>, segs: &[String]) -> Result<()> {
+    let (last, parent) = segs.split_last().expect("header path is non-empty");
+    let map = navigate(root, parent)?;
+    match map.entry(last.clone()).or_insert_with(|| Value::Arr(Vec::new())) {
+        Value::Arr(a) => a.push(Value::Obj(BTreeMap::new())),
+        _ => bail!("key {last:?} is not an array of tables"),
+    }
+    Ok(())
+}
+
+struct Toml<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Toml<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// 1-based line number of the current cursor, for error messages.
+    fn line(&self) -> usize {
+        1 + self.b[..self.i].iter().filter(|&&c| c == b'\n').count()
+    }
+
+    fn skip_inline_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t')) {
+            self.i += 1;
+        }
+    }
+
+    /// Skip whitespace, newlines, and `#` comments.
+    fn skip_trivia(&mut self) {
+        loop {
+            match self.peek() {
+                Some(b' ' | b'\t' | b'\n' | b'\r') => self.i += 1,
+                Some(b'#') => {
+                    while !matches!(self.peek(), None | Some(b'\n')) {
+                        self.i += 1;
+                    }
+                }
+                _ => return,
+            }
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        self.skip_inline_ws();
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at line {}", c as char, self.line())
+        }
+    }
+
+    /// Consume to end of line, allowing only trailing space / comment.
+    fn end_of_line(&mut self) -> Result<()> {
+        self.skip_inline_ws();
+        if self.peek() == Some(b'#') {
+            while !matches!(self.peek(), None | Some(b'\n')) {
+                self.i += 1;
+            }
+        }
+        match self.peek() {
+            None => Ok(()),
+            Some(b'\n') => {
+                self.i += 1;
+                Ok(())
+            }
+            Some(b'\r') if self.b.get(self.i + 1) == Some(&b'\n') => {
+                self.i += 2;
+                Ok(())
+            }
+            Some(c) => bail!("unexpected {:?} at line {}", c as char, self.line()),
+        }
+    }
+
+    fn key(&mut self) -> Result<String> {
+        self.skip_inline_ws();
+        if self.peek() == Some(b'"') {
+            return self.string();
+        }
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_alphanumeric() || c == b'_' || c == b'-' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if self.i == start {
+            bail!("expected a key at line {}", self.line());
+        }
+        Ok(std::str::from_utf8(&self.b[start..self.i])?.to_string())
+    }
+
+    /// Dotted `[a.b.c]` header path.
+    fn header_path(&mut self) -> Result<Vec<String>> {
+        let mut segs = vec![self.key()?];
+        loop {
+            self.skip_inline_ws();
+            if self.peek() == Some(b'.') {
+                self.i += 1;
+                segs.push(self.key()?);
+            } else {
+                return Ok(segs);
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<Value> {
+        self.skip_inline_ws();
+        match self.peek() {
+            Some(b'"') => Ok(Value::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.inline_table(),
+            Some(b't' | b'f') => self.boolean(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.') => self.number(),
+            _ => bail!("expected a value at line {}", self.line()),
+        }
+    }
+
+    fn boolean(&mut self) -> Result<Value> {
+        for (lit, v) in [("true", true), ("false", false)] {
+            if self.b[self.i..].starts_with(lit.as_bytes()) {
+                self.i += lit.len();
+                return Ok(Value::Bool(v));
+            }
+        }
+        bail!("expected true/false at line {}", self.line())
+    }
+
+    fn number(&mut self) -> Result<Value> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            // Alphanumerics swallow exponent markers (`1e-3`); the f64
+            // parse below rejects anything that isn't a number.
+            if c.is_ascii_alphanumeric() || matches!(c, b'+' | b'-' | b'.' | b'_') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let raw: String =
+            std::str::from_utf8(&self.b[start..self.i])?.chars().filter(|&c| c != '_').collect();
+        let line = self.line();
+        match raw.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Value::Num(x)),
+            _ => bail!("bad number {raw:?} at line {line}"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            let line = self.line();
+            let Some(c) = self.peek() else { bail!("unterminated string at line {line}") };
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\n' => bail!("unterminated string at line {line}"),
+                b'\\' => {
+                    let Some(e) = self.peek() else { bail!("unterminated escape at line {line}") };
+                    self.i += 1;
+                    s.push(match e {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        other => {
+                            bail!("unsupported escape \\{} at line {line}", other as char)
+                        }
+                    });
+                }
+                c if c < 0x80 => s.push(c as char),
+                _ => {
+                    // Re-assemble a UTF-8 multibyte sequence.
+                    let start = self.i - 1;
+                    let lead = self.b[start];
+                    let width = if lead >= 0xF0 {
+                        4
+                    } else if lead >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let Some(bytes) = self.b.get(start..start + width) else {
+                        bail!("truncated UTF-8 at line {line}")
+                    };
+                    s.push_str(std::str::from_utf8(bytes)?);
+                    self.i = start + width;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        loop {
+            self.skip_trivia();
+            if self.peek() == Some(b']') {
+                self.i += 1;
+                return Ok(Value::Arr(a));
+            }
+            a.push(self.value()?);
+            self.skip_trivia();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {}
+                _ => bail!("expected ',' or ']' in array at line {}", self.line()),
+            }
+        }
+    }
+
+    fn inline_table(&mut self) -> Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        loop {
+            self.skip_trivia();
+            if self.peek() == Some(b'}') {
+                self.i += 1;
+                return Ok(Value::Obj(m));
+            }
+            let line = self.line();
+            let k = self.key()?;
+            self.expect(b'=')?;
+            let v = self.value()?;
+            if m.insert(k.clone(), v).is_some() {
+                bail!("duplicate key {k:?} at line {line}");
+            }
+            self.skip_trivia();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {}
+                _ => bail!("expected ',' or '}}' in inline table at line {}", self.line()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get<'v>(v: &'v Value, path: &[&str]) -> &'v Value {
+        let mut cur = v;
+        for k in path {
+            cur = cur.get(k).unwrap_or_else(|| panic!("missing key {k}"));
+        }
+        cur
+    }
+
+    #[test]
+    fn scalars_tables_and_comments() {
+        let doc = r#"
+            # top comment
+            n = 16
+            rate = 2.5           # trailing comment
+            big = 1_000_000
+            name = "flat \"base\" case"
+            on = true
+
+            [arrival]
+            process = "poisson"
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(get(&v, &["n"]).as_f64().unwrap(), 16.0);
+        assert_eq!(get(&v, &["rate"]).as_f64().unwrap(), 2.5);
+        assert_eq!(get(&v, &["big"]).as_f64().unwrap(), 1e6);
+        assert_eq!(get(&v, &["name"]).as_str().unwrap(), "flat \"base\" case");
+        assert!(get(&v, &["on"]).as_bool().unwrap());
+        assert_eq!(get(&v, &["arrival", "process"]).as_str().unwrap(), "poisson");
+    }
+
+    #[test]
+    fn arrays_inline_tables_and_aot() {
+        let doc = r#"
+            times = [0.5, 1.0, 2.25,]   # trailing comma ok
+            nested = [[1, 2], [3, 4]]
+            weights = { vqa = 0.7, mmbench = 0.3 }
+
+            [[mmpp.states]]
+            rate = 2.0
+            mean_dwell = 5.0
+
+            [[mmpp.states]]
+            rate = 9.0
+            mean_dwell = 1.0
+        "#;
+        let v = parse(doc).unwrap();
+        let times = get(&v, &["times"]).as_arr().unwrap();
+        assert_eq!(times.len(), 3);
+        assert_eq!(times[2].as_f64().unwrap(), 2.25);
+        let nested = get(&v, &["nested"]).as_arr().unwrap();
+        assert_eq!(nested[1].as_arr().unwrap()[0].as_f64().unwrap(), 3.0);
+        assert_eq!(get(&v, &["weights", "vqa"]).as_f64().unwrap(), 0.7);
+        let states = get(&v, &["mmpp", "states"]).as_arr().unwrap();
+        assert_eq!(states.len(), 2);
+        assert_eq!(states[1].get("rate").unwrap().as_f64().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn multiline_array_with_comments() {
+        let doc = "xs = [\n  1.0, # one\n  2.0,\n  3.0\n]\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(get(&v, &["xs"]).as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("a = 1\nb = oops\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse("a = 1\na = 2\n").unwrap_err().to_string();
+        assert!(err.contains("duplicate key"), "{err}");
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse("a = 1 b = 2\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_finite_numbers() {
+        assert!(parse("a = inf\n").is_err());
+        assert!(parse("a = nan\n").is_err());
+        // 1e999 overflows f64 to inf — also rejected.
+        assert!(parse("a = 1e999\n").is_err());
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let v = parse("a = -0.5\nb = 1e-3\nc = +4\n").unwrap();
+        assert_eq!(get(&v, &["a"]).as_f64().unwrap(), -0.5);
+        assert_eq!(get(&v, &["b"]).as_f64().unwrap(), 1e-3);
+        assert_eq!(get(&v, &["c"]).as_f64().unwrap(), 4.0);
+    }
+
+    #[test]
+    fn reopening_table_merges_but_duplicate_leaf_errors() {
+        let doc = "[a]\nx = 1\n[b]\ny = 2\n[a]\nz = 3\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(get(&v, &["a", "x"]).as_f64().unwrap(), 1.0);
+        assert_eq!(get(&v, &["a", "z"]).as_f64().unwrap(), 3.0);
+        assert!(parse("[a]\nx = 1\n[a]\nx = 2\n").is_err());
+    }
+
+    #[test]
+    fn unicode_in_strings() {
+        let v = parse("s = \"caf\u{e9} \u{1F680}\"\n").unwrap();
+        assert_eq!(get(&v, &["s"]).as_str().unwrap(), "caf\u{e9} \u{1F680}");
+    }
+}

@@ -5,6 +5,8 @@
 //! novelty / relevant-modality labels so the quality model can score the
 //! coordinator's real pruning decisions mechanistically.
 
+use anyhow::Result;
+
 use crate::sparsity::Modality;
 use crate::util::Rng;
 
@@ -80,6 +82,10 @@ pub struct Item {
     pub audio: Option<Vec<f32>>,
     /// Synthetic answer index (maps to an answer token).
     pub answer: usize,
+    /// Turn index within a multi-turn dialogue session (0 = first turn
+    /// or standalone request). Follow-up turns can reuse the previous
+    /// turn's prefill state via `TraceSpec::reuse_discount`.
+    pub prior_turns: usize,
 }
 
 impl Item {
@@ -242,6 +248,7 @@ impl Generator {
             novel: None,
             audio: None,
             answer: self.rng.below(120),
+            prior_turns: 0,
         }
     }
 
@@ -284,6 +291,7 @@ impl Generator {
             novel,
             audio,
             answer: self.rng.below(120),
+            prior_turns: 0,
         }
     }
 
@@ -297,14 +305,35 @@ impl Generator {
     }
 
     /// Poisson arrival offsets (seconds) for `n` requests at `rate` req/s.
+    ///
+    /// Panics on a non-finite or non-positive rate — use
+    /// [`Generator::try_arrivals`] where the rate comes from user input.
     pub fn arrivals(&mut self, n: usize, rate: f64) -> Vec<f64> {
+        self.try_arrivals(n, rate).expect("invalid arrival rate")
+    }
+
+    /// Validating variant of [`Generator::arrivals`]: a `rate <= 0` or
+    /// non-finite rate is an error (it would yield inf/NaN timestamps
+    /// that poison the event heap downstream).
+    pub fn try_arrivals(&mut self, n: usize, rate: f64) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            rate.is_finite() && rate > 0.0,
+            "arrival rate must be finite and > 0, got {rate}"
+        );
         let mut t = 0.0;
-        (0..n)
+        Ok((0..n)
             .map(|_| {
                 t += self.rng.exp(rate);
                 t
             })
-            .collect()
+            .collect())
+    }
+
+    /// Mutable access to the generator's RNG stream. The scenario
+    /// compiler's arrival processes draw from this same stream so that
+    /// a flat scenario reproduces `items` + `arrivals` bit for bit.
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
     }
 
     fn bump(&mut self) -> u64 {
@@ -403,5 +432,33 @@ mod tests {
         let b = Generator::new(9).vqa_item();
         assert_eq!(a.image, b.image);
         assert_eq!(a.question, b.question);
+    }
+
+    #[test]
+    fn try_arrivals_rejects_bad_rates() {
+        // Regression: these used to return inf/NaN timestamps that
+        // poisoned the event heap downstream.
+        let mut g = Generator::new(11);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = g.try_arrivals(4, bad);
+            assert!(err.is_err(), "rate {bad} should be rejected");
+        }
+        // State untouched by failed draws: a valid call still matches a
+        // fresh generator's stream.
+        let ok = g.try_arrivals(4, 2.0).unwrap();
+        assert_eq!(ok, Generator::new(11).arrivals(4, 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid arrival rate")]
+    fn arrivals_panics_on_zero_rate() {
+        Generator::new(12).arrivals(4, 0.0);
+    }
+
+    #[test]
+    fn items_start_at_turn_zero() {
+        let mut g = Generator::new(13);
+        assert_eq!(g.vqa_item().prior_turns, 0);
+        assert_eq!(g.mmbench_item().prior_turns, 0);
     }
 }

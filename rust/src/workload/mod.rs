@@ -1,5 +1,15 @@
 //! Synthetic workload substrates: VQAv2/MMBench-like item generators,
 //! Poisson traces, and the Fig. 4 probe configurations.
+//!
+//! [`Generator`] is the seeded primitive stream — items
+//! ([`Generator::items`]) and flat Poisson arrivals
+//! ([`Generator::arrivals`] / the validating
+//! [`Generator::try_arrivals`]). Structured traffic — MMPP bursts,
+//! diurnal/flash-crowd rate shapes, weighted benchmark/tenant mixes,
+//! multi-turn dialogue sessions — lives one layer up in
+//! [`crate::scenario`], which drives this generator so that a flat
+//! scenario reproduces the plain `items` + `arrivals` stream bit for
+//! bit.
 
 pub mod configs;
 pub mod generator;

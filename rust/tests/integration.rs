@@ -15,6 +15,7 @@ use msao::coordinator::{
     TraceSpec,
 };
 use msao::metrics::summarize;
+use msao::scenario::ScenarioSpec;
 use msao::sparsity::Modality;
 use msao::workload::{Benchmark, Generator, Item};
 
@@ -827,6 +828,90 @@ fn msao_replans_mid_trace_after_network_step_drop() {
     let sum_c = summarize(&constant.records);
     let sum_d = summarize(&degraded.records);
     assert!(sum_d.latency_mean_s > sum_c.latency_mean_s);
+}
+
+#[test]
+fn scenario_flat_poisson_reproduces_serve_path_bit_for_bit() {
+    require_artifacts!();
+    // The scenario-subsystem golden: serving the compiled flat scenario
+    // (`scenarios/flat.toml`: Poisson, default mix, no dialogue) must be
+    // indistinguishable from the legacy `msao serve --mode msao` path —
+    // every record (times, bytes, flops, quality), the link totals, and
+    // the event-sequence hash, bit for bit.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/flat.toml");
+    let scenario_spec = ScenarioSpec::load(path).unwrap().compile(42).unwrap();
+
+    let mut gen = Generator::new(42);
+    let items = gen.items(Benchmark::Vqa, 16);
+    let arrivals = gen.arrivals(16, 2.0);
+    let legacy_spec = msao_spec(items, arrivals, Mode::Msao, 42);
+
+    let legacy = serve(&mut c, &legacy_spec).unwrap();
+    let scenic = serve(&mut c, &scenario_spec).unwrap();
+    assert_eq!(legacy.records.len(), scenic.records.len());
+    for (i, (a, b)) in legacy.records.iter().zip(&scenic.records).enumerate() {
+        assert_records_bitwise_equal(a, b, &format!("scenario req {i}"));
+    }
+    assert_eq!(legacy.events, scenic.events, "event count");
+    assert_eq!(legacy.events_hash, scenic.events_hash, "event-sequence hash");
+    assert_eq!(legacy.uplink_bytes, scenic.uplink_bytes, "uplink bytes");
+    assert_eq!(legacy.downlink_bytes, scenic.downlink_bytes, "downlink bytes");
+    assert_eq!(
+        legacy.batch_amortization.to_bits(),
+        scenic.batch_amortization.to_bits(),
+        "amortization"
+    );
+}
+
+#[test]
+fn dialogue_scenario_serves_follow_up_turns_with_prefill_reuse() {
+    require_artifacts!();
+    // Multi-turn sessions end to end: every turn of the dialogue
+    // scenario completes with causal times, follow-up turns exist, and
+    // the reuse discount provably cuts total prefill time against the
+    // identical trace re-served at discount 0 (concurrency 1 keeps the
+    // two runs' transfer order — and hence every plan — identical, so
+    // the only difference is the discounted prefill charge).
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/dialogue.toml");
+    let spec = ScenarioSpec::load(path).unwrap().compile(7).unwrap().concurrency(1);
+    assert!(spec.reuse_discount > 0.0, "dialogue.toml must set a reuse discount");
+    let follow_ups = spec.items.iter().filter(|i| i.prior_turns > 0).count();
+    assert!(follow_ups > 0, "dialogue trace produced no follow-up turns");
+
+    let discounted = serve(&mut c, &spec).unwrap();
+    assert_eq!(discounted.records.len(), spec.items.len());
+    for (i, r) in discounted.records.iter().enumerate() {
+        assert!(r.tokens_out > 0, "turn {i} produced no tokens");
+        assert!(r.t_done > r.t_arrival, "turn {i}: non-causal completion");
+        assert!(r.latency_s.is_finite() && r.latency_s > 0.0, "turn {i}: latency");
+    }
+
+    let full = serve(&mut c, &spec.clone().reuse(0.0)).unwrap();
+    let prefill = |res: &msao::coordinator::TraceResult| {
+        res.records.iter().map(|r| r.prefill_s).sum::<f64>()
+    };
+    assert!(
+        prefill(&discounted) < prefill(&full),
+        "discount {} did not reduce prefill: {} vs {}",
+        spec.reuse_discount,
+        prefill(&discounted),
+        prefill(&full)
+    );
+    // First turns never see the discount: their prefill charge matches
+    // the undiscounted run bit for bit.
+    for (i, (d, f)) in discounted.records.iter().zip(&full.records).enumerate() {
+        if spec.items[i].prior_turns == 0 {
+            assert_eq!(
+                d.prefill_s.to_bits(),
+                f.prefill_s.to_bits(),
+                "first-turn req {i}: prefill must be identical"
+            );
+        }
+    }
 }
 
 #[test]

@@ -14,6 +14,7 @@ use msao::coordinator::{
     ShardedSource, Site, StepClass, VirtualCluster,
 };
 use msao::optimizer::{draft_len, expected_spec_len, linalg, Gp, Matern52, ThetaController};
+use msao::scenario::{ArrivalProcess, DialogueCfg, MmppState, ScenarioSpec, Shape};
 use msao::sparsity::{self, MasInputs, Modality};
 use msao::util::json::Value;
 use msao::util::stats::percentile;
@@ -994,6 +995,177 @@ fn random_json(r: &mut Rng, depth: usize) -> Value {
             Value::Obj(m)
         }
     }
+}
+
+// --- scenario -----------------------------------------------------------------
+
+fn random_shape(r: &mut Rng) -> Shape {
+    match r.below(4) {
+        0 => Shape::None,
+        1 => Shape::Ramp { to: r.range_f64(0.2, 6.0), duration_s: r.range_f64(0.5, 20.0) },
+        2 => Shape::Spike {
+            factor: r.range_f64(0.5, 8.0),
+            t_start: r.range_f64(0.0, 5.0),
+            duration_s: r.range_f64(0.2, 6.0),
+        },
+        _ => Shape::Diurnal {
+            period_s: r.range_f64(1.0, 40.0),
+            amplitude: r.range_f64(0.0, 0.95),
+            phase: r.range_f64(0.0, 6.28),
+        },
+    }
+}
+
+fn random_arrival(r: &mut Rng, n: usize) -> ArrivalProcess {
+    match r.below(3) {
+        0 => ArrivalProcess::Poisson,
+        1 => {
+            let k = 1 + r.below(3);
+            let states = (0..k)
+                .map(|_| MmppState {
+                    rate: r.range_f64(0.5, 12.0),
+                    mean_dwell: r.range_f64(0.5, 8.0),
+                })
+                .collect();
+            let transitions =
+                (0..k).map(|_| (0..k).map(|_| r.f64() + 1e-3).collect()).collect();
+            ArrivalProcess::Mmpp { states, transitions }
+        }
+        _ => {
+            let mut t = 0.0;
+            let times = (0..n)
+                .map(|_| {
+                    t += r.exp(2.0);
+                    t
+                })
+                .collect();
+            ArrivalProcess::Replay { times }
+        }
+    }
+}
+
+#[test]
+fn prop_scenario_compile_times_finite_and_nondecreasing() {
+    // Every (arrival process, shape, dialogue) combination must compile
+    // to a well-formed trace: finite non-negative timestamps, sorted
+    // arrivals, one arrival per item, at least one turn per session,
+    // and `TraceSpec::validate` happy.
+    for seed in cases(120) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x5CE2);
+        let n = 1 + r.below(24);
+        let sc = ScenarioSpec {
+            n,
+            rate: r.range_f64(0.3, 8.0),
+            arrival: random_arrival(&mut r, n),
+            shape: random_shape(&mut r),
+            dialogue: if r.bool(0.4) {
+                Some(DialogueCfg {
+                    alpha: r.range_f64(1.05, 3.0),
+                    max_turns: 1 + r.below(6),
+                    think_mean_s: r.range_f64(0.1, 5.0),
+                    reuse_discount: r.f64() * 0.9,
+                })
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        let spec = sc.compile(seed).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        spec.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(spec.items.len(), spec.arrivals.len(), "seed {seed}");
+        assert!(spec.items.len() >= n, "seed {seed}: fewer items than sessions");
+        assert!(
+            spec.arrivals.iter().all(|t| t.is_finite() && *t >= 0.0),
+            "seed {seed}: non-finite or negative arrival"
+        );
+        assert!(
+            spec.arrivals.windows(2).all(|w| w[1] >= w[0]),
+            "seed {seed}: arrivals out of order"
+        );
+    }
+}
+
+#[test]
+fn prop_mmpp_single_state_bitwise_equals_poisson() {
+    // The degenerate one-state chain must make no dwell or transition
+    // draws: its stream is bit-for-bit the plain Poisson loop.
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x33A0);
+        let rate = r.range_f64(0.2, 20.0);
+        let dwell = r.range_f64(0.1, 50.0);
+        let n = 1 + r.below(64);
+        let p = ArrivalProcess::Mmpp {
+            states: vec![MmppState { rate, mean_dwell: dwell }],
+            transitions: vec![vec![1.0]],
+        };
+        let got = p.sample(&mut Generator::new(seed), n, 1.0).unwrap();
+        let want = Generator::new(seed).arrivals(n, rate);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "seed {seed}: one-state MMPP diverged from Poisson"
+        );
+    }
+}
+
+#[test]
+fn prop_identity_shape_and_flat_scenario_are_bitwise_poisson() {
+    for seed in cases(100) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x1DE4);
+        let n = 1 + r.below(40);
+        let rate = r.range_f64(0.3, 6.0);
+        // Shape::None must be an exact pass-through...
+        let base = Generator::new(seed).arrivals(n, rate);
+        let out = Shape::None.rescale(base.clone());
+        assert_eq!(
+            base.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "seed {seed}: Shape::None not identity"
+        );
+        // ...so a flat scenario reproduces the legacy generator stream.
+        let sc = ScenarioSpec { n, rate, ..Default::default() };
+        let spec = sc.compile(seed).unwrap();
+        let mut gen = Generator::new(seed);
+        let items = gen.items(Benchmark::Vqa, n);
+        let want = gen.arrivals(n, rate);
+        assert_eq!(
+            spec.arrivals.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "seed {seed}: flat scenario arrivals diverge"
+        );
+        assert_eq!(spec.items.len(), items.len(), "seed {seed}");
+        for (a, b) in spec.items.iter().zip(&items) {
+            assert_eq!(a.id, b.id, "seed {seed}: item stream diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_shape_rescale_monotone_and_finite() {
+    for seed in cases(150) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x54A9);
+        let shape = random_shape(&mut r);
+        shape.validate().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let base = Generator::new(seed).arrivals(1 + r.below(64), r.range_f64(0.5, 5.0));
+        let out = shape.rescale(base);
+        assert!(
+            out.windows(2).all(|w| w[1] >= w[0]),
+            "seed {seed}: {shape:?} broke arrival order"
+        );
+        assert!(out.iter().all(|t| t.is_finite() && *t >= 0.0), "seed {seed}: {shape:?}");
+    }
+}
+
+#[test]
+fn prop_generator_try_arrivals_rejects_degenerate_rates() {
+    // Regression: these rates used to yield inf/NaN timestamps that
+    // poisoned the event heap downstream; the fallible path rejects.
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        assert!(Generator::new(1).try_arrivals(4, bad).is_err(), "rate {bad} must be rejected");
+    }
+    let ok = Generator::new(1).try_arrivals(4, 2.0).unwrap();
+    assert_eq!(ok.len(), 4);
+    assert!(ok.windows(2).all(|w| w[1] >= w[0]));
 }
 
 // --- stats ---------------------------------------------------------------------
