@@ -141,10 +141,32 @@ impl<'a> BaselineSession<'a> {
                 request_id: item.id,
                 t_arrival: arrival,
                 edge_id: edge,
+                deadline_s: item.deadline_s,
+                slo: item.slo,
                 ..Default::default()
             },
             phase: BPhase::Start,
         }
+    }
+
+    /// Reject this request at admission (load shedding). Valid only at
+    /// the arrival event: the session completes immediately with a
+    /// zeroed record marked `shed`.
+    pub fn shed(&mut self) {
+        debug_assert!(matches!(self.phase, BPhase::Start), "shed mid-session");
+        self.rec.shed = true;
+        self.rec.t_done = self.arrival;
+        self.rec.latency_s = 0.0;
+        self.phase = BPhase::Done;
+    }
+
+    /// Mark this request degraded. Baselines have no speculative budget
+    /// to shrink — the degradation knob is MSAO's — so for a baseline
+    /// tenant this is accounting only (the request still serves at its
+    /// strategy's normal cost/quality).
+    pub fn degrade(&mut self) {
+        debug_assert!(matches!(self.phase, BPhase::Start), "degrade mid-session");
+        self.rec.degraded = true;
     }
 
     /// Re-bind the session to another edge. Only valid before the first

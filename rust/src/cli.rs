@@ -28,13 +28,19 @@
 //!   driver, >= 2 = sharded per-edge event loops, 0 = auto from
 //!   available parallelism); without it the `serve.workers` config
 //!   knob applies (default 1). Results are identical either way.
+//! * SLO flags: `--sched fcfs|edf` picks the event-scheduling
+//!   discipline (without it the `serve.sched` config knob applies);
+//!   `--deadline S` stamps every request with an S-second deadline in
+//!   the class named by `--slo latency-critical|standard|best-effort`
+//!   (default standard); `--admission on|off` enables monitor-driven
+//!   shed/degrade at arrival.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::{Config, NetworkDynamics, NetworkScenario};
-use crate::coordinator::{Assign, Mode, PolicyKind, TraceSpec};
+use crate::coordinator::{Assign, Mode, PolicyKind, Sched, SloClass, TraceSpec};
 use crate::workload::{Benchmark, Generator};
 
 pub struct Args {
@@ -142,8 +148,9 @@ pub fn serve_spec(args: &Args) -> Result<(String, TraceSpec)> {
 }
 
 /// Execution-knob overrides shared by the flat and scenario paths:
-/// `--concurrency`, `--assign`, `--workers` apply on top of whichever
-/// workload built the spec.
+/// `--concurrency`, `--assign`, `--workers`, and the SLO flags
+/// (`--sched`, `--deadline` + `--slo`, `--admission`) apply on top of
+/// whichever workload built the spec.
 fn apply_serve_overrides(mut spec: TraceSpec, args: &Args) -> Result<TraceSpec> {
     if let Some(c) = args.get("concurrency") {
         spec = spec.concurrency(c.parse().context("parsing --concurrency")?);
@@ -153,6 +160,26 @@ fn apply_serve_overrides(mut spec: TraceSpec, args: &Args) -> Result<TraceSpec> 
     }
     if let Some(w) = args.get("workers") {
         spec = spec.workers(w.parse().context("parsing --workers")?);
+    }
+    if let Some(s) = args.get("sched") {
+        spec = spec.sched(Sched::parse(s)?);
+    }
+    if let Some(d) = args.get("deadline") {
+        let deadline: f64 = d.parse().context("parsing --deadline")?;
+        let class = match args.get("slo") {
+            Some(c) => SloClass::parse(c)?,
+            None => SloClass::Standard,
+        };
+        spec = spec.slo_all(class, deadline);
+    } else if args.get("slo").is_some() {
+        bail!("--slo names a class for --deadline; pass both or neither");
+    }
+    if let Some(a) = args.get("admission") {
+        spec = spec.admission(match a {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => bail!("--admission takes on|off, got {other:?}"),
+        });
     }
     Ok(spec)
 }
@@ -191,6 +218,42 @@ mod tests {
         }
         assert!(serve_spec(&argv(&["serve", "--workers", "-1"])).is_err());
         assert!(serve_spec(&argv(&["serve", "--workers", "x"])).is_err());
+    }
+
+    #[test]
+    fn slo_flags_map_to_spec() {
+        // Defaults: FCFS (no override), no deadlines, admission off.
+        let (_, spec) = serve_spec(&argv(&["serve", "--n", "2"])).unwrap();
+        assert_eq!(spec.sched, None);
+        assert_eq!(spec.effective_sched(&Config::default()), Sched::Fcfs);
+        assert!(!spec.admission);
+        assert!(spec.items.iter().all(|i| i.deadline_s.is_none()));
+        // Full SLO surface in one invocation.
+        let a = argv(&[
+            "serve", "--n", "2", "--sched", "edf", "--deadline", "2.5", "--slo",
+            "best-effort", "--admission", "on",
+        ]);
+        let (_, spec) = serve_spec(&a).unwrap();
+        assert_eq!(spec.sched, Some(Sched::Edf));
+        assert_eq!(spec.effective_sched(&Config::default()), Sched::Edf);
+        assert!(spec.admission);
+        for it in &spec.items {
+            assert_eq!(it.deadline_s, Some(2.5));
+            assert_eq!(it.slo, SloClass::BestEffort);
+        }
+        spec.validate().unwrap();
+        // --deadline without --slo defaults to the standard class.
+        let (_, spec) =
+            serve_spec(&argv(&["serve", "--n", "2", "--deadline", "1.0"])).unwrap();
+        assert!(spec.items.iter().all(|i| i.slo == SloClass::Standard));
+        // Error paths: bad discipline, orphan --slo, bad admission value,
+        // non-positive deadline (caught by validate()).
+        assert!(serve_spec(&argv(&["serve", "--sched", "lifo"])).is_err());
+        assert!(serve_spec(&argv(&["serve", "--slo", "standard"])).is_err());
+        assert!(serve_spec(&argv(&["serve", "--admission", "maybe"])).is_err());
+        let (_, spec) =
+            serve_spec(&argv(&["serve", "--n", "2", "--deadline", "-1"])).unwrap();
+        assert!(spec.validate().is_err(), "negative deadline must fail validation");
     }
 
     #[test]

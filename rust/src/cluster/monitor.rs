@@ -95,6 +95,21 @@ impl SystemMonitor {
             Site::Edge(_) => self.edge_wait_s,
         }
     }
+
+    /// Predicted response time (seconds) for a request routed to this
+    /// edge, from the monitor's beliefs only: both smoothed queue waits
+    /// (edge device + shared cloud, the terms that blow up past the
+    /// capacity knee) plus the time to ship `payload_bytes` at the
+    /// estimated link conditions. Deliberately excludes compute time the
+    /// monitor cannot observe, so the estimate is optimistic at idle
+    /// (admits everything) and queue-dominated under saturation —
+    /// exactly the signal SLO admission control needs.
+    pub fn predicted_response_s(&self, payload_bytes: f64) -> f64 {
+        self.edge_wait_s
+            + self.cloud_wait_s
+            + payload_bytes * 8.0 / (self.est.bandwidth_mbps.max(1e-9) * 1e6)
+            + self.est.rtt_ms * 1e-3
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +175,26 @@ mod tests {
         assert!((m.wait_s(Site::Cloud) - 1.5).abs() < 1e-12);
         m.observe_wait(Site::Edge(0), 1.0);
         assert!((m.wait_s(Site::Edge(0)) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predicted_response_tracks_queue_and_link_beliefs() {
+        let mut m = SystemMonitor::new(&cfg(), 0.5);
+        // Idle, nominal link: prediction is just transfer + RTT.
+        let idle = m.predicted_response_s(1e6);
+        let want = 8e6 / (300.0 * 1e6) + 20.0 * 1e-3;
+        assert!((idle - want).abs() < 1e-12, "idle {idle} want {want}");
+        // Growing queue-wait beliefs push the prediction up by the sum
+        // of both smoothed waits.
+        m.observe_wait(Site::Edge(0), 2.0);
+        m.observe_wait(Site::Cloud, 4.0);
+        let loaded = m.predicted_response_s(1e6);
+        assert!((loaded - (idle + 1.0 + 2.0)).abs() < 1e-12, "loaded {loaded}");
+        // A degraded bandwidth belief also raises it.
+        for _ in 0..50 {
+            m.observe_transfer(30.0, 20.0);
+        }
+        assert!(m.predicted_response_s(1e6) > loaded);
     }
 
     #[test]

@@ -331,6 +331,12 @@ pub struct ServeCfg {
     /// auto from available parallelism). Pure wall-clock knob: results
     /// are bit-for-bit identical for every value.
     pub workers: usize,
+    /// Event-scheduling discipline: `"fcfs"` (arrival order, the
+    /// bitwise-pinned default) or `"edf"` (earliest absolute deadline
+    /// first among simultaneous events; requests without a deadline
+    /// sort last). Parsed into [`crate::coordinator::Sched`] at serve
+    /// time; a `TraceSpec`-level override wins.
+    pub sched: String,
 }
 
 impl Default for ServeCfg {
@@ -342,6 +348,7 @@ impl Default for ServeCfg {
             queue_cap: 256,
             monitor_ema: 0.3,
             workers: 1,
+            sched: "fcfs".to_string(),
         }
     }
 }
@@ -456,15 +463,22 @@ impl Config {
                     });
                 }
                 "serve" => {
-                    let s = &mut self.serve;
-                    merge_fields!(section.as_obj()?, *s, {
-                        "max_inflight" => s.max_inflight => as_usize,
-                        "verify_batch" => s.verify_batch => as_usize,
-                        "batch_wait_ms" => s.batch_wait_ms => as_f64,
-                        "queue_cap" => s.queue_cap => as_usize,
-                        "monitor_ema" => s.monitor_ema => as_f64,
-                        "workers" => s.workers => as_usize,
-                    });
+                    // Manual loop (not `merge_fields!`): `sched` is a
+                    // string key the numeric-conversion macro cannot
+                    // express.
+                    for (k2, v2) in section.as_obj()? {
+                        let s = &mut self.serve;
+                        match k2.as_str() {
+                            "max_inflight" => s.max_inflight = v2.as_usize()?,
+                            "verify_batch" => s.verify_batch = v2.as_usize()?,
+                            "batch_wait_ms" => s.batch_wait_ms = v2.as_f64()?,
+                            "queue_cap" => s.queue_cap = v2.as_usize()?,
+                            "monitor_ema" => s.monitor_ema = v2.as_f64()?,
+                            "workers" => s.workers = v2.as_usize()?,
+                            "sched" => s.sched = v2.as_str()?.to_string(),
+                            other => bail!("unknown config key {other:?}"),
+                        }
+                    }
                     // EMA weights outside (0, 1] overshoot (alpha > 1 can
                     // drive the bandwidth estimate negative) or freeze
                     // adaptation (alpha <= 0); NaN fails the check too.
@@ -474,6 +488,10 @@ impl Config {
                             self.serve.monitor_ema
                         );
                     }
+                    // Validate the discipline here so a typo fails at
+                    // config load, not at serve time.
+                    crate::coordinator::Sched::parse(&self.serve.sched)
+                        .with_context(|| "config key serve.sched")?;
                 }
                 "fleet" => fleet_section = Some(section),
                 other => bail!("unknown config section {other:?}"),
@@ -737,6 +755,19 @@ mod tests {
             let json = format!("{{\"serve\": {{\"monitor_ema\": {bad}}}}}");
             assert!(Config::from_json_str(&json).is_err(), "accepted monitor_ema {bad}");
         }
+    }
+
+    #[test]
+    fn sched_default_and_override() {
+        // Default "fcfs" keeps the event heap bitwise-pinned.
+        assert_eq!(Config::default().serve.sched, "fcfs");
+        let c = Config::from_json_str(r#"{"serve": {"sched": "edf"}}"#).unwrap();
+        assert_eq!(c.serve.sched, "edf");
+        // Unknown disciplines fail at config load with the key named.
+        let err = Config::from_json_str(r#"{"serve": {"sched": "lifo"}}"#).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("serve.sched"), "missing key in: {msg}");
+        assert!(msg.contains("lifo"), "missing value in: {msg}");
     }
 
     #[test]

@@ -25,27 +25,59 @@ pub fn canonical_time(time: f64) -> f64 {
     time + 0.0
 }
 
-/// Heap key: `(next_time, session_index)`, ordered ascending — exactly
-/// the argmin the linear scan computed, ties toward the lower index.
-/// `slot` is payload (where the session lives), never compared: two
-/// live keys can never share an index.
+/// Heap key: `(next_time, deadline, session_index)`, ordered ascending —
+/// exactly the argmin the linear scan computed, ties toward the earlier
+/// deadline and then the lower index. Under the default FCFS scheduler
+/// every key carries `deadline = +INF`, so the deadline comparison is
+/// always `Equal` (`total_cmp` of two `+INF`s) and the ordering is
+/// bitwise the historical `(time, index)` key; the EDF scheduler
+/// (`serve.sched = edf`) stamps each request's absolute deadline here so
+/// same-time events fire earliest-deadline-first. `slot` is payload
+/// (where the session lives), never compared: two live keys can never
+/// share an index.
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct EventKey {
     pub time: f64,
+    pub deadline: f64,
     pub index: usize,
     pub slot: usize,
 }
 
 impl EventKey {
+    /// FCFS key: no deadline component (`+INF` compares `Equal` against
+    /// every other FCFS key, so ties fall through to the index).
     pub fn new(time: f64, index: usize, slot: usize) -> Self {
+        EventKey::with_deadline(time, f64::INFINITY, index, slot)
+    }
+
+    /// EDF key: `deadline` is the request's *absolute* virtual-time
+    /// deadline (arrival + `deadline_s`); requests without one pass
+    /// `+INF` and sort after all deadlined ties.
+    pub fn with_deadline(time: f64, deadline: f64, index: usize, slot: usize) -> Self {
         debug_assert!(!time.is_nan(), "session {index}: NaN event time");
-        EventKey { time: canonical_time(time), index, slot }
+        debug_assert!(!deadline.is_nan(), "session {index}: NaN deadline");
+        EventKey {
+            time: canonical_time(time),
+            deadline: canonical_time(deadline),
+            index,
+            slot,
+        }
+    }
+
+    /// The same request's next event at a new time: deadline and index
+    /// ride along (re-push sites must not lose the deadline component).
+    pub fn at(self, time: f64) -> Self {
+        debug_assert!(!time.is_nan(), "session {}: NaN event time", self.index);
+        EventKey { time: canonical_time(time), ..self }
     }
 }
 
 impl Ord for EventKey {
     fn cmp(&self, other: &Self) -> Ordering {
-        self.time.total_cmp(&other.time).then(self.index.cmp(&other.index))
+        self.time
+            .total_cmp(&other.time)
+            .then(self.deadline.total_cmp(&other.deadline))
+            .then(self.index.cmp(&other.index))
     }
 }
 
@@ -138,6 +170,33 @@ mod tests {
         let c = EventKey::new(1.0, 2, 3);
         assert!(c < a); // same time, lower index wins
         assert_eq!(EventKey::new(1.0, 5, 0), EventKey::new(1.0, 5, 9)); // slot is payload
+    }
+
+    #[test]
+    fn key_deadline_breaks_time_ties_before_index() {
+        // Same time: earlier deadline wins even against a lower index.
+        let edf = EventKey::with_deadline(1.0, 3.0, 9, 0);
+        let lax = EventKey::with_deadline(1.0, 8.0, 1, 1);
+        assert!(edf < lax);
+        // A deadlined key beats an FCFS (+INF) key at the same time.
+        assert!(edf < EventKey::new(1.0, 0, 2));
+        // Time still dominates the deadline: physics before policy.
+        assert!(EventKey::new(0.5, 9, 0) < edf);
+        // Two +INF deadlines compare Equal -> index tie-break (the FCFS
+        // bitwise-compatibility property).
+        assert!(EventKey::with_deadline(1.0, f64::INFINITY, 2, 0) < EventKey::new(1.0, 5, 1));
+        // `at` moves the time but keeps the deadline component.
+        let moved = edf.at(4.0);
+        assert_eq!(moved.time.to_bits(), 4.0f64.to_bits());
+        assert_eq!(moved.deadline.to_bits(), edf.deadline.to_bits());
+        assert_eq!(moved.index, edf.index);
+    }
+
+    #[test]
+    fn key_canonicalizes_negative_zero_deadline() {
+        let neg = EventKey::with_deadline(1.0, -0.0, 0, 0);
+        assert_eq!(neg.deadline.to_bits(), 0.0f64.to_bits());
+        assert_eq!(neg, EventKey::with_deadline(1.0, 0.0, 0, 1));
     }
 
     #[test]

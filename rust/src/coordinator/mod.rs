@@ -54,7 +54,9 @@ pub use batcher::Batcher;
 pub use engines::Engines;
 pub use event::SeqHash;
 pub use planner::Plan;
-pub use policy::{least_loaded, testbed, Assign, PolicyKind, ResidentProfile, TraceSpec};
+pub use policy::{
+    least_loaded, testbed, Assign, PolicyKind, ResidentProfile, Sched, SloClass, TraceSpec,
+};
 pub use scheduler::StepOutcome;
 pub use server::{serve, serve_materialized_ref, EdgeTraceStats, TraceResult};
 pub use session::{Coordinator, Mode, Session};

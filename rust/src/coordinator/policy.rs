@@ -142,6 +142,82 @@ impl PolicyKind {
     }
 }
 
+/// Service-level class of a request: how the admission controller
+/// treats it when the monitor predicts a deadline miss. Per-class
+/// policy (paper-style priority tiers):
+///
+/// * `LatencyCritical` — never shed, never degraded: the scheduler does
+///   its best (EDF puts these first on time ties) and the miss, if any,
+///   is reported honestly in `slo_attainment`.
+/// * `Standard` — degraded on a predicted miss (shrunken speculative
+///   draft budget, edge-leaning low-cost path) but always served.
+/// * `BestEffort` — shed outright on a predicted miss, freeing capacity
+///   for the paying classes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SloClass {
+    LatencyCritical,
+    #[default]
+    Standard,
+    BestEffort,
+}
+
+impl SloClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::LatencyCritical => "latency-critical",
+            SloClass::Standard => "standard",
+            SloClass::BestEffort => "best-effort",
+        }
+    }
+
+    /// Parse a class name (scenario files, CLI).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "latency-critical" | "critical" => SloClass::LatencyCritical,
+            "standard" => SloClass::Standard,
+            "best-effort" | "besteffort" => SloClass::BestEffort,
+            other => bail!(
+                "unknown SLO class {other:?} (try latency-critical|standard|best-effort)"
+            ),
+        })
+    }
+
+    /// All classes, in priority order (for per-class reporting).
+    pub const ALL: [SloClass; 3] =
+        [SloClass::LatencyCritical, SloClass::Standard, SloClass::BestEffort];
+}
+
+/// Event-scheduling discipline for the serving heap (`serve.sched`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Sched {
+    /// First-come-first-served: the historical `(time, index)` event
+    /// key, bitwise-pinned by the golden tests. The default.
+    #[default]
+    Fcfs,
+    /// Earliest-deadline-first: the event key gains the request's
+    /// absolute deadline as a secondary component, so same-time events
+    /// fire tightest-deadline-first. Requests without a deadline sort
+    /// last among ties (deadline `+INF`).
+    Edf,
+}
+
+impl Sched {
+    pub fn name(self) -> &'static str {
+        match self {
+            Sched::Fcfs => "fcfs",
+            Sched::Edf => "edf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fcfs" => Sched::Fcfs,
+            "edf" => Sched::Edf,
+            other => bail!("unknown scheduling discipline {other:?} (try fcfs|edf)"),
+        })
+    }
+}
+
 /// How incoming requests are assigned to edge sites of the fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Assign {
@@ -307,6 +383,16 @@ pub struct TraceSpec {
     /// and the only value first-turn items ever see — is an exact
     /// no-op, so single-turn traces are bitwise unaffected.
     pub reuse_discount: f64,
+    /// Event-scheduling discipline override; `None` = the `serve.sched`
+    /// config knob (default FCFS, bitwise-pinned).
+    pub sched: Option<Sched>,
+    /// SLO admission control: when true, the arrival event consults the
+    /// routed edge's monitor beliefs, predicts the response time, and —
+    /// on a predicted deadline miss — sheds best-effort requests and
+    /// degrades standard ones (latency-critical requests are never
+    /// touched). False (the default) serves everything, so traces
+    /// without SLOs are bitwise the pre-SLO path.
+    pub admission: bool,
 }
 
 impl TraceSpec {
@@ -321,6 +407,8 @@ impl TraceSpec {
             assign: Assign::RoundRobin,
             workers: None,
             reuse_discount: 0.0,
+            sched: None,
+            admission: false,
         }
     }
 
@@ -372,11 +460,41 @@ impl TraceSpec {
         self
     }
 
+    /// Pin the event-scheduling discipline (overrides `serve.sched`).
+    pub fn sched(mut self, sched: Sched) -> Self {
+        self.sched = Some(sched);
+        self
+    }
+
+    /// Enable SLO admission control (shedding/degradation at arrival).
+    pub fn admission(mut self, on: bool) -> Self {
+        self.admission = on;
+        self
+    }
+
+    /// Stamp one SLO (class + relative deadline, seconds) onto every
+    /// item of the trace — the flat-trace counterpart of the scenario
+    /// language's per-tenant `[slo]` table.
+    pub fn slo_all(mut self, class: SloClass, deadline_s: f64) -> Self {
+        for item in &mut self.items {
+            item.slo = class;
+            item.deadline_s = Some(deadline_s);
+        }
+        self
+    }
+
     pub fn effective_concurrency(&self, cfg: &Config) -> usize {
         match self.concurrency {
             Some(c) => c,
             None => self.policy.default_concurrency(cfg),
         }
+    }
+
+    /// Resolve the scheduling discipline: the spec override, else the
+    /// (merge-validated) `serve.sched` config knob; an unrecognized
+    /// config string falls back to FCFS, the safe pinned default.
+    pub fn effective_sched(&self, cfg: &Config) -> Sched {
+        self.sched.unwrap_or_else(|| Sched::parse(&cfg.serve.sched).unwrap_or_default())
     }
 
     /// Resolve the worker count: the spec override, else `serve.workers`
@@ -405,6 +523,13 @@ impl TraceSpec {
         }
         if !(self.reuse_discount.is_finite() && (0.0..1.0).contains(&self.reuse_discount)) {
             bail!("reuse_discount must be in [0, 1), got {}", self.reuse_discount);
+        }
+        for (i, item) in self.items.iter().enumerate() {
+            if let Some(d) = item.deadline_s {
+                if !(d.is_finite() && d > 0.0) {
+                    bail!("request {i}: deadline_s must be finite and > 0, got {d}");
+                }
+            }
         }
         if let PolicyKind::PerRequest(v) = &self.policy {
             if v.len() != self.items.len() {
@@ -490,6 +615,46 @@ mod tests {
         base.clone().reuse(0.35).validate().unwrap();
         for bad in [1.0, -0.1, f64::NAN, f64::INFINITY] {
             assert!(base.clone().reuse(bad).validate().is_err(), "discount {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn slo_class_and_sched_parse_roundtrip() {
+        for class in SloClass::ALL {
+            assert_eq!(SloClass::parse(class.name()).unwrap(), class);
+        }
+        assert_eq!(SloClass::parse("critical").unwrap(), SloClass::LatencyCritical);
+        assert_eq!(SloClass::default(), SloClass::Standard);
+        assert!(SloClass::parse("gold").is_err());
+        for sched in [Sched::Fcfs, Sched::Edf] {
+            assert_eq!(Sched::parse(sched.name()).unwrap(), sched);
+        }
+        assert_eq!(Sched::default(), Sched::Fcfs);
+        assert!(Sched::parse("lifo").is_err());
+    }
+
+    #[test]
+    fn slo_spec_defaults_stay_inert_and_deadlines_validate() {
+        let cfg = Config::default();
+        let (items, arrivals) = trace(3);
+        let base = TraceSpec::new(PolicyKind::CloudOnly).trace(items, arrivals);
+        // SLO-free defaults: no admission control, FCFS, no deadlines.
+        assert!(!base.admission);
+        assert_eq!(base.sched, None);
+        assert_eq!(base.effective_sched(&cfg), Sched::Fcfs);
+        assert!(base.items.iter().all(|it| it.deadline_s.is_none()));
+        assert!(base.items.iter().all(|it| it.slo == SloClass::Standard));
+        base.validate().unwrap();
+
+        let slo = base.clone().slo_all(SloClass::BestEffort, 2.5).admission(true);
+        assert!(slo.items.iter().all(|it| it.deadline_s == Some(2.5)));
+        assert!(slo.items.iter().all(|it| it.slo == SloClass::BestEffort));
+        slo.validate().unwrap();
+        assert_eq!(slo.clone().sched(Sched::Edf).effective_sched(&cfg), Sched::Edf);
+
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let spec = base.clone().slo_all(SloClass::Standard, bad);
+            assert!(spec.validate().is_err(), "deadline {bad} accepted");
         }
     }
 

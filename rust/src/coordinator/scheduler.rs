@@ -66,7 +66,10 @@ pub enum StepOutcome {
 /// Linear-scan reference implementation of [`drive`] — the pre-heap
 /// event loop, kept verbatim as the golden the heap scheduler is pinned
 /// against (equivalence property tests) and as the baseline the scaling
-/// bench measures the O(log n) win over. O(active) per step.
+/// bench measures the O(log n) win over. O(active) per step. FCFS only:
+/// the reference scan predates the deadline component and never
+/// consults [`SessionSource::deadline`], so equivalence holds exactly
+/// for `serve.sched = fcfs` (the bitwise-pinned default).
 pub fn drive_linear_ref<S>(
     sessions: &mut [S],
     concurrency: usize,
@@ -116,6 +119,17 @@ pub trait SessionSource {
     /// Virtual time of the session's next event (heap sort key).
     fn next_time(&self, s: &Self::Session) -> f64;
 
+    /// Absolute virtual-time deadline of request `i`, used as the
+    /// event key's secondary sort component. The default (`+INF`) is the
+    /// FCFS scheduler: every key carries the same deadline, the
+    /// comparison is always `Equal`, and ordering is bitwise the
+    /// historical `(time, index)` key. EDF sources (`serve.sched = edf`)
+    /// return `arrival + deadline_s` so same-time events fire
+    /// earliest-deadline-first.
+    fn deadline(&self, _i: usize) -> f64 {
+        f64::INFINITY
+    }
+
     /// Advance one session by one event.
     fn step(&mut self, i: usize, s: &mut Self::Session) -> Result<StepOutcome>;
 
@@ -149,7 +163,8 @@ pub fn drive_stream<H: SessionSource>(n: usize, concurrency: usize, h: &mut H) -
             admit_into_free_slots(h, &mut heap, &mut slots, &mut free, &mut next_admit, n)?;
         } else {
             let t = h.next_time(slots[key.slot].as_ref().expect("pending session in slot"));
-            heap.push(Reverse(EventKey::new(t, key.index, key.slot)));
+            // `at` keeps the key's deadline component across re-pushes.
+            heap.push(Reverse(key.at(t)));
         }
     }
     Ok(())
@@ -169,7 +184,9 @@ fn admit_into_free_slots<H: SessionSource>(
     while *next_admit < n {
         let Some(slot) = free.pop() else { break };
         let s = h.admit(*next_admit)?;
-        heap.push(Reverse(EventKey::new(h.next_time(&s), *next_admit, slot)));
+        let deadline = h.deadline(*next_admit);
+        let key = EventKey::with_deadline(h.next_time(&s), deadline, *next_admit, slot);
+        heap.push(Reverse(key));
         slots[slot] = Some(s);
         *next_admit += 1;
     }
@@ -476,5 +493,74 @@ mod tests {
         let src = run_stream(&times, 4);
         assert!(src.log.is_empty());
         assert_eq!(src.peak_live, 0);
+    }
+
+    /// StreamSource plus a per-request deadline table — the EDF override
+    /// of [`SessionSource::deadline`].
+    struct EdfSource<'a> {
+        inner: StreamSource<'a>,
+        deadlines: &'a [f64],
+    }
+
+    impl SessionSource for EdfSource<'_> {
+        type Session = Mock;
+
+        fn admit(&mut self, i: usize) -> Result<Mock> {
+            self.inner.admit(i)
+        }
+
+        fn next_time(&self, s: &Mock) -> f64 {
+            self.inner.next_time(s)
+        }
+
+        fn deadline(&self, i: usize) -> f64 {
+            self.deadlines[i]
+        }
+
+        fn step(&mut self, i: usize, s: &mut Mock) -> Result<StepOutcome> {
+            self.inner.step(i, s)
+        }
+
+        fn finish(&mut self, i: usize, s: Mock) -> Result<()> {
+            self.inner.finish(i, s)
+        }
+    }
+
+    fn run_edf(times: &[Vec<f64>], deadlines: &[f64], cap: usize) -> Vec<(usize, f64)> {
+        let mut src = EdfSource {
+            inner: StreamSource {
+                times,
+                log: Vec::new(),
+                live: 0,
+                peak_live: 0,
+                finished: vec![false; times.len()],
+            },
+            deadlines,
+        };
+        drive_stream(times.len(), cap, &mut src).unwrap();
+        assert!(src.inner.finished.iter().all(|&f| f), "unfinished session");
+        src.inner.log
+    }
+
+    #[test]
+    fn edf_deadline_reorders_same_time_events_only() {
+        // Two sessions with identical event times: the tighter deadline
+        // (higher index) fires first under EDF, and the deadline rides
+        // through every re-push of the session's key.
+        let times = vec![vec![1.0, 2.0], vec![1.0, 2.0]];
+        let log = run_edf(&times, &[10.0, 3.0], 2);
+        let order: Vec<usize> = log.iter().map(|&(i, _)| i).collect();
+        assert_eq!(order, vec![1, 0, 1, 0], "EDF must win every time tie");
+        // Distinct event times: time dominates the deadline (physics
+        // before policy) — a tight deadline cannot fire a later event
+        // before an earlier one.
+        let times = vec![vec![1.0], vec![2.0]];
+        let log = run_edf(&times, &[f64::INFINITY, 0.5], 2);
+        assert_eq!(log, vec![(0, 1.0), (1, 2.0)]);
+        // All-infinite deadlines reproduce the FCFS order exactly.
+        let times = vec![vec![1.0], vec![1.0]];
+        let log = run_edf(&times, &[f64::INFINITY, f64::INFINITY], 2);
+        let order: Vec<usize> = log.iter().map(|&(i, _)| i).collect();
+        assert_eq!(order, vec![0, 1]);
     }
 }

@@ -52,6 +52,32 @@
 //! sequential run-to-completion FCFS and reproduces the pre-refactor
 //! two-site loops bit for bit (pinned by the golden equivalence tests).
 //!
+//! # SLO-aware serving
+//!
+//! Requests may carry a deadline and an [`SloClass`]
+//! (latency-critical | standard | best-effort). Three mechanisms hang
+//! off them, all inert by default:
+//!
+//! * **EDF scheduling** (`serve.sched = "edf"` / `TraceSpec::sched`):
+//!   event keys carry the request's absolute deadline, so simultaneous
+//!   events pop earliest-deadline-first. Physics still dominates policy
+//!   — time orders first; the deadline only breaks exact time ties.
+//!   Under FCFS (the default) every key carries +inf and the heap order
+//!   is bitwise the pre-deadline order.
+//! * **Admission control** (`TraceSpec::admission`): at each arrival
+//!   event — after `LeastLoaded` routing — the routed edge's
+//!   [`crate::cluster::SystemMonitor`] predicts the response time from
+//!   its queue-wait/link beliefs; requests predicted to miss their
+//!   deadline are handled per class: latency-critical always serves,
+//!   standard degrades, best-effort sheds (a zeroed `shed` record — the
+//!   trace still accounts for every offered request).
+//! * **Degraded service**: MSAO sessions halve the token budget, cap
+//!   the speculative window, and skip the cloud-direct path; the
+//!   quality model prices the resulting lower cloud-verified fraction.
+//!
+//! Deadlines alone (no EDF, no admission) only annotate records for
+//! SLO-attainment metrics — the serve path is untouched.
+//!
 //! # Parallel simulation (`--workers N`)
 //!
 //! With `TraceSpec::workers >= 2` (or `serve.workers`), the trace runs
@@ -78,7 +104,7 @@ use crate::workload::Item;
 
 use super::batcher::Batcher;
 use super::event::SeqHash;
-use super::policy::{self, Assign, PolicyKind, TraceSpec};
+use super::policy::{self, Assign, PolicyKind, Sched, SloClass, TraceSpec};
 use super::scheduler::{self, SessionSource, StepOutcome};
 use super::session::{Coordinator, Session};
 use super::sharded::{drive_sharded, ShardedSource, StepClass};
@@ -122,6 +148,11 @@ pub struct TraceResult {
     pub cloud_wait_s: f64,
     /// Per-edge breakdown (id, request count, traffic, beliefs).
     pub per_edge: Vec<EdgeTraceStats>,
+    /// Requests rejected at admission (load shedding) / served at the
+    /// degraded service level. Both zero unless `TraceSpec::admission`
+    /// enabled SLO admission control.
+    pub shed: usize,
+    pub degraded: usize,
     /// Total scheduler events (session steps) the trace took.
     pub events: u64,
     /// Event-sequence fingerprint ([`SeqHash`]): identical across the
@@ -190,6 +221,23 @@ impl<'a> AnySession<'a> {
         }
     }
 
+    /// Reject at admission: completes immediately with a `shed` record.
+    fn shed(&mut self) {
+        match self {
+            AnySession::Msao(s) => s.shed(),
+            AnySession::Baseline(b) => b.shed(),
+        }
+    }
+
+    /// Downgrade to the degraded service level (MSAO shrinks its
+    /// speculative budget; baselines mark the record).
+    fn degrade(&mut self) {
+        match self {
+            AnySession::Msao(s) => s.degrade(),
+            AnySession::Baseline(b) => b.degrade(),
+        }
+    }
+
     /// Still waiting at its arrival event (routing may still change).
     fn is_unstarted(&self) -> bool {
         match self {
@@ -250,6 +298,12 @@ struct ServeSource<'s, 'c> {
     /// `LeastLoaded` routes at the arrival event; static assignments
     /// are already resolved at admission.
     route_at_arrival: bool,
+    /// EDF scheduling: event keys carry each request's absolute
+    /// deadline so simultaneous events pop earliest-deadline-first.
+    edf: bool,
+    /// SLO admission control: at the arrival event, consult the routed
+    /// edge's monitor and shed/degrade requests predicted to miss.
+    admission: bool,
     records: Vec<Option<ExecRecord>>,
     /// Event-sequence fingerprint + event count, fed pre-step so both
     /// drivers hash the exact event stream they executed.
@@ -279,10 +333,52 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
         s.next_time()
     }
 
+    /// Absolute deadline for the event key — only under EDF; FCFS keys
+    /// all carry +inf, which keeps the heap order bitwise identical to
+    /// the pre-deadline key.
+    fn deadline(&self, i: usize) -> f64 {
+        if self.edf {
+            match self.spec.items[i].deadline_s {
+                Some(d) => self.spec.arrivals[i] + d,
+                None => f64::INFINITY,
+            }
+        } else {
+            f64::INFINITY
+        }
+    }
+
     fn step(&mut self, i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
         self.seq.observe(i, s.next_time());
         if self.route_at_arrival && s.is_unstarted() {
             s.set_edge(policy::least_loaded(&self.vc));
+        }
+        // SLO admission control, after routing (the prediction reads
+        // the *routed* edge's beliefs) and before the first phase runs.
+        if self.admission && s.is_unstarted() {
+            if let Some(deadline) = self.spec.items[i].deadline_s {
+                let item = &self.spec.items[i];
+                // Predict from beliefs only: smoothed queue waits plus
+                // the raw payload at the estimated link. Optimistic at
+                // idle (admits everything), queue-dominated at
+                // saturation — when the prediction blows past the
+                // deadline, serving the request would only push every
+                // later one further past its own.
+                let payload = crate::baselines::full_payload_bytes(item) as f64;
+                let predicted =
+                    self.vc.edges[s.edge()].monitor.predicted_response_s(payload);
+                if predicted > deadline {
+                    match item.slo {
+                        // Latency-critical traffic is never refused —
+                        // the other classes are degraded/shed first.
+                        SloClass::LatencyCritical => {}
+                        SloClass::Standard => s.degrade(),
+                        SloClass::BestEffort => {
+                            s.shed();
+                            return Ok(StepOutcome::Done);
+                        }
+                    }
+                }
+            }
         }
         s.step(self.coord, &mut self.vc, &mut self.batchers, &mut self.theta)
     }
@@ -325,6 +421,8 @@ fn prepare<'s, 'c>(
             theta,
             n_edges,
             route_at_arrival: matches!(spec.assign, Assign::LeastLoaded),
+            edf: spec.effective_sched(&cfg) == Sched::Edf,
+            admission: spec.admission,
             records: (0..n).map(|_| None).collect(),
             seq: SeqHash::new(),
         },
@@ -377,6 +475,10 @@ impl<'s> ShardedSource for ShardedServe<'s, '_> {
 
     fn next_time(s: &AnySession<'s>) -> f64 {
         s.next_time()
+    }
+
+    fn deadline(&self, i: usize) -> f64 {
+        SessionSource::deadline(&self.src, i)
     }
 
     fn step_class(_s: &AnySession<'s>) -> StepClass {
@@ -442,6 +544,8 @@ fn collect(src: ServeSource<'_, '_>, wall_clock_s: f64) -> TraceResult {
         edge_wait_s: fleet_mean_edge_wait(&vc),
         cloud_wait_s: fleet_mean_cloud_wait(&vc),
         per_edge,
+        shed: records.iter().filter(|r| r.shed).count(),
+        degraded: records.iter().filter(|r| r.degraded).count(),
         events: seq.events,
         events_hash: seq.digest(),
         wall_clock_s,

@@ -153,6 +153,10 @@ pub struct Session<'a> {
     /// `1 - TraceSpec::reuse_discount`). Encoders are never discounted:
     /// each turn ships fresh modality inputs.
     reuse_scale: f64,
+    /// Serve at the degraded quality level (admission control's middle
+    /// ground between full service and shedding): halved token budget,
+    /// capped speculative window, no cloud-direct escape hatch.
+    degraded: bool,
     rec: ExecRecord,
     phase: Phase,
 }
@@ -165,14 +169,38 @@ impl<'a> Session<'a> {
             mode,
             edge,
             reuse_scale,
+            degraded: false,
             rec: ExecRecord {
                 request_id: item.id,
                 t_arrival: arrival,
                 edge_id: edge,
+                deadline_s: item.deadline_s,
+                slo: item.slo,
                 ..Default::default()
             },
             phase: Phase::Probe,
         }
+    }
+
+    /// Reject this request at admission (load shedding). Valid only at
+    /// the arrival event, before the first step: the session completes
+    /// immediately with a zeroed record marked `shed` — it still yields
+    /// an [`ExecRecord`] so the trace accounts for every offered
+    /// request.
+    pub fn shed(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::Probe), "shed mid-session");
+        self.rec.shed = true;
+        self.rec.t_done = self.arrival;
+        self.rec.latency_s = 0.0;
+        self.phase = Phase::Done;
+    }
+
+    /// Downgrade this request to the degraded service level. Valid only
+    /// at the arrival event, before planning has run.
+    pub fn degrade(&mut self) {
+        debug_assert!(matches!(self.phase, Phase::Probe), "degrade mid-session");
+        self.degraded = true;
+        self.rec.degraded = true;
     }
 
     /// Re-bind the session to another edge. Only valid before the first
@@ -286,7 +314,16 @@ impl<'a> Session<'a> {
         // its own link, not the ground-truth config — plans adapt as
         // that edge's estimates converge.
         let net = vc.edges[self.edge].monitor.estimate();
-        let n_out = cfg.msao.max_new_tokens;
+        // Degraded service level: half the token budget. Everything
+        // downstream (plan, cost estimates, KV sizing, spec budget)
+        // flows from this one knob, and the quality price follows
+        // organically — fewer verified tokens means a lower
+        // cloud-quality fraction in the existing model.
+        let n_out = if self.degraded {
+            (cfg.msao.max_new_tokens / 2).max(1)
+        } else {
+            cfg.msao.max_new_tokens
+        };
         let plan = match mode {
             Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, coord.p_conf0),
             // NoCollabSched keeps modality-aware pruning; scheduling is
@@ -323,8 +360,11 @@ impl<'a> Session<'a> {
         // through the edge speculative path. Queue depths are the
         // coordinator's own state (exact); link terms use the monitor's
         // estimates. The ablation "w/o collaborative scheduling" pins
-        // everything to the static path.
-        if mode == Mode::Msao {
+        // everything to the static path. Degraded requests are pinned to
+        // the cheap edge speculative path: cloud-direct serves every
+        // token at full-model cost, the opposite of load shedding's
+        // goal.
+        if mode == Mode::Msao && !self.degraded {
             let est = {
                 let d_edge = vc.dev(Site::Edge(self.edge));
                 let d_cloud = vc.dev(Site::Cloud);
@@ -457,8 +497,8 @@ impl<'a> Session<'a> {
                 edge_ready: edge_pre_end,
                 cloud_ready: cloud_pre_end,
                 max_new: n_out,
-                n_draft: plan.n_draft,
-                n_max: cfg.msao.n_max,
+                n_draft: if self.degraded { plan.n_draft.min(2) } else { plan.n_draft },
+                n_max: if self.degraded { cfg.msao.n_max.min(2) } else { cfg.msao.n_max },
                 planned_net: net,
                 adaptive: mode != Mode::NoCollabSched,
             },

@@ -100,6 +100,15 @@ pub trait ShardedSource {
     /// Virtual time of the session's next event (heap sort key).
     fn next_time(s: &Self::Session) -> f64;
 
+    /// Absolute virtual-time deadline of request `i` — the event key's
+    /// secondary sort component, mirroring
+    /// [`SessionSource::deadline`]. Default `+INF` = FCFS (bitwise the
+    /// historical key); EDF sources return `arrival + deadline_s`. Only
+    /// consulted at admission (driver thread), so it takes `&self`.
+    fn deadline(&self, _i: usize) -> f64 {
+        f64::INFINITY
+    }
+
     /// Classify the session's next step.
     fn step_class(s: &Self::Session) -> StepClass;
 
@@ -185,12 +194,13 @@ fn advance_local<H: ShardedSource>(
         }
         let t = H::next_time(s);
         debug_assert!(
-            EventKey::new(t, top.index, top.slot) >= top,
+            top.at(t) >= top,
             "session {}: event time went backwards ({} -> {t})",
             top.index,
             top.time
         );
-        rt.heap.push(Reverse(EventKey::new(t, top.index, top.slot)));
+        // `at` keeps the key's deadline component across re-pushes.
+        rt.heap.push(Reverse(top.at(t)));
         advanced = true;
     }
     Ok(advanced)
@@ -230,8 +240,9 @@ pub fn drive_sharded<H: ShardedSource>(
             let (s, route) = h.admit(i)?;
             let e = route.unwrap_or(0).min(rts.len() - 1);
             let t = H::next_time(&s);
+            let deadline = h.deadline(i);
             let slot = rts[e].alloc(s);
-            rts[e].heap.push(Reverse(EventKey::new(t, i, slot)));
+            rts[e].heap.push(Reverse(EventKey::with_deadline(t, deadline, i, slot)));
             *next_admit += 1;
             *in_flight += 1;
         }
@@ -352,7 +363,13 @@ pub fn drive_sharded<H: ShardedSource>(
                 let home = h.shard_of(&s).min(rts.len() - 1);
                 let t = H::next_time(&s);
                 let slot = rts[home].alloc(s);
-                rts[home].heap.push(Reverse(EventKey::new(t, key.index, slot)));
+                // Re-slot but keep the key's deadline component.
+                rts[home].heap.push(Reverse(EventKey::with_deadline(
+                    t,
+                    key.deadline,
+                    key.index,
+                    slot,
+                )));
             }
             StepOutcome::Done => {
                 h.finish(key.index, s)?;
@@ -392,6 +409,10 @@ impl<H: ShardedSource> SessionSource for Sequentialized<H> {
 
     fn next_time(&self, s: &Self::Session) -> f64 {
         H::next_time(s)
+    }
+
+    fn deadline(&self, i: usize) -> f64 {
+        self.inner.deadline(i)
     }
 
     fn step(&mut self, i: usize, s: &mut Self::Session) -> Result<StepOutcome> {
@@ -445,6 +466,8 @@ mod tests {
         shards: Vec<MockShard>,
         cloud_busy: f64,
         ll_routing: bool,
+        /// Absolute per-request deadlines (empty = FCFS, all `+INF`).
+        deadlines: Vec<f64>,
         finished: Vec<Option<(Vec<u64>, u64)>>,
     }
 
@@ -456,8 +479,14 @@ mod tests {
                 shards: (0..n_shards).map(|_| MockShard { busy: 0.0 }).collect(),
                 cloud_busy: 0.0,
                 ll_routing,
+                deadlines: Vec::new(),
                 finished,
             }
+        }
+
+        fn with_deadlines(mut self, deadlines: Vec<f64>) -> Self {
+            self.deadlines = deadlines;
+            self
         }
 
         fn fingerprint(&self) -> Vec<u64> {
@@ -493,6 +522,10 @@ mod tests {
 
         fn next_time(s: &MockSess) -> f64 {
             s.t
+        }
+
+        fn deadline(&self, i: usize) -> f64 {
+            self.deadlines.get(i).copied().unwrap_or(f64::INFINITY)
         }
 
         fn step_class(s: &MockSess) -> StepClass {
@@ -612,6 +645,47 @@ mod tests {
             for &cap in &[1usize, 4, usize::MAX] {
                 for &workers in &[1usize, 2, 4] {
                     run_pair(&specs, n_shards, false, cap, workers);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_edf_deadlines_reproduce_sequential() {
+        // EDF compatibility pin: with per-request deadlines stamped into
+        // the event keys, the sharded driver must still reproduce the
+        // sequential driver bit for bit at every worker count. The
+        // coarse time quantization in gen_specs manufactures time ties,
+        // so the deadline tie-break genuinely fires.
+        let mut r = Rng::seed_from_u64(0xEDF0);
+        for _ in 0..20 {
+            let n_shards = 1 + r.below(4);
+            let specs = gen_specs(&mut r, 20 + r.below(40), n_shards, false);
+            let deadlines: Vec<f64> = specs
+                .iter()
+                .map(|s| s.arrival + (r.f64() * 16.0).round() * 0.25)
+                .collect();
+            for &cap in &[1usize, 4, usize::MAX] {
+                for &workers in &[1usize, 2, 4] {
+                    let mut seq = Sequentialized::new(
+                        MockFleet::new(specs.to_vec(), n_shards, false)
+                            .with_deadlines(deadlines.clone()),
+                    );
+                    drive_stream(specs.len(), cap, &mut seq).unwrap();
+                    let oracle = seq.into_inner();
+                    let mut par = MockFleet::new(specs.to_vec(), n_shards, false)
+                        .with_deadlines(deadlines.clone());
+                    drive_sharded(specs.len(), cap, workers, &mut par).unwrap();
+                    assert_eq!(
+                        par.fingerprint(),
+                        oracle.fingerprint(),
+                        "cap {cap} workers {workers}: EDF cursors diverged"
+                    );
+                    for (i, (a, b)) in
+                        par.finished.iter().zip(oracle.finished.iter()).enumerate()
+                    {
+                        assert_eq!(a, b, "cap {cap} workers {workers}: request {i} diverged");
+                    }
                 }
             }
         }

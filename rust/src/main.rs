@@ -6,6 +6,8 @@
 //!   serve [--n N] [--mode M] [--bandwidth B] [--rate R] [--seed S]
 //!         [--scenario FILE] [--concurrency C] [--network SC]
 //!         [--edges E] [--assign A] [--workers W]
+//!         [--sched fcfs|edf] [--deadline S [--slo CLASS]]
+//!         [--admission on|off]
 //!                                — serve a trace through the
 //!                                  unified policy API, print summary.
 //!                                  Modes: msao|no-modality|no-collab|
@@ -24,7 +26,15 @@
 //!                                  (rr|least-loaded|pinned:<edge>);
 //!                                  --workers runs the sharded parallel
 //!                                  simulator (0 = auto, results are
-//!                                  bit-for-bit identical).
+//!                                  bit-for-bit identical); --sched
+//!                                  picks FCFS (default) or
+//!                                  earliest-deadline-first; --deadline
+//!                                  stamps every request with an SLO
+//!                                  deadline in the --slo class
+//!                                  (latency-critical|standard|
+//!                                  best-effort, default standard), and
+//!                                  --admission on sheds/degrades
+//!                                  requests predicted to miss.
 //!   scenario [--file F | --dir D] [--seed S]
 //!                                — parse + compile scenario files
 //!                                  without serving (no engine
@@ -35,7 +45,7 @@
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
 //!                                  (fig4|table1|fig5..fig9|concurrency|
 //!                                  mixed|volatility|fleet|traffic|
-//!                                  main|all)
+//!                                  saturation|main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap) and lives
 //! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
@@ -153,6 +163,19 @@ fn main() -> Result<()> {
                 sum.replans_per_req,
                 res.uplink_bytes as f64 / 1e6
             );
+            if sum.deadlined > 0 || sum.shed > 0 || sum.degraded > 0 {
+                println!(
+                    "slo attainment {:.1}% (crit {:.1}% std {:.1}% be {:.1}%)  goodput {:.2} \
+                     req/s  shed {}  degraded {}",
+                    sum.slo_attainment * 100.0,
+                    sum.slo_attainment_by_class[0] * 100.0,
+                    sum.slo_attainment_by_class[1] * 100.0,
+                    sum.slo_attainment_by_class[2] * 100.0,
+                    sum.goodput_rps,
+                    sum.shed,
+                    sum.degraded
+                );
+            }
             if coord.cfg.dynamics != msao::config::NetworkDynamics::Constant {
                 println!(
                     "monitor estimate at trace end: {:.1} Mbps rtt {:.1} ms",

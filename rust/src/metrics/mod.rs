@@ -1,6 +1,10 @@
 //! Metrics: per-request execution records and workload-level aggregation
-//! — the raw material for every table and figure.
+//! — the raw material for every table and figure. SLO accounting lives
+//! here too: records carry their deadline/class and whether the request
+//! was shed or degraded by admission control, and [`Summary`] reports
+//! per-class attainment plus deadline-aware goodput.
 
+use crate::coordinator::SloClass;
 use crate::util::stats::{mean, percentile};
 
 /// Everything measured for one served request (virtual-testbed units).
@@ -52,6 +56,17 @@ pub struct ExecRecord {
     /// Retention achieved per modality (for ablation analysis).
     pub vis_tokens_kept: usize,
     pub frames_kept: usize,
+    /// SLO deadline relative to arrival (seconds), `None` when the
+    /// request carries no deadline.
+    pub deadline_s: Option<f64>,
+    /// SLO class the request was admitted under.
+    pub slo: SloClass,
+    /// Rejected at admission (load shedding): no tokens were served,
+    /// `t_done == t_arrival` and `latency_s == 0`.
+    pub shed: bool,
+    /// Served at the degraded quality level (shrunken speculative
+    /// budget, no cloud-direct escape hatch).
+    pub degraded: bool,
 }
 
 impl ExecRecord {
@@ -65,6 +80,18 @@ impl ExecRecord {
 
     pub fn total_flops(&self) -> f64 {
         self.flops_edge + self.flops_cloud
+    }
+
+    /// Did this request meet its SLO? Shed requests never do; requests
+    /// without a deadline trivially do (completing is the whole SLO).
+    pub fn met_deadline(&self) -> bool {
+        if self.shed {
+            return false;
+        }
+        match self.deadline_s {
+            Some(d) => self.latency_s <= d,
+            None => true,
+        }
     }
 }
 
@@ -108,6 +135,22 @@ pub struct Summary {
     pub wall_clock_s: f64,
     /// Scheduler events per wall-clock second (simulation rate).
     pub events_per_s: f64,
+    /// Requests shed (rejected at admission) / served degraded.
+    pub shed: usize,
+    pub degraded: usize,
+    /// Requests that carried a deadline (shed ones included).
+    pub deadlined: usize,
+    /// Fraction of all requests meeting their SLO (shed never does; a
+    /// request without a deadline meets it by completing). 1.0 on a
+    /// deadline-free trace with no shedding.
+    pub slo_attainment: f64,
+    /// Per-class attainment in [`SloClass::ALL`] order
+    /// (latency-critical, standard, best-effort); 1.0 for empty classes.
+    pub slo_attainment_by_class: [f64; 3],
+    /// Goodput: requests completing *within their deadline* per second
+    /// of makespan — the saturation experiment's headline (plateaus
+    /// under shedding where raw throughput would collapse).
+    pub goodput_rps: f64,
 }
 
 impl Summary {
@@ -123,43 +166,64 @@ impl Summary {
 pub fn summarize(records: &[ExecRecord]) -> Summary {
     let n = records.len();
     assert!(n > 0, "no records");
-    let lat: Vec<f64> = records.iter().map(|r| r.latency_s).collect();
+    // Latency/quality/cost statistics cover *served* requests only —
+    // shed ones never ran, so their zeroed fields would skew every mean
+    // low. On a shed-free trace the filter is the identity and each
+    // aggregate is bitwise what it always was.
+    let served: Vec<&ExecRecord> = records.iter().filter(|r| !r.shed).collect();
+    let n_served = served.len();
+    let lat: Vec<f64> = served.iter().map(|r| r.latency_s).collect();
     let makespan = records
         .iter()
         .map(|r| r.t_done)
         .fold(0.0f64, f64::max)
         - records.iter().map(|r| r.t_arrival).fold(f64::INFINITY, f64::min);
-    let tokens: usize = records.iter().map(|r| r.tokens_out).sum();
-    let (acc_n, prop_n): (usize, usize) = records
+    let tokens: usize = served.iter().map(|r| r.tokens_out).sum();
+    let (acc_n, prop_n): (usize, usize) = served
         .iter()
         .fold((0, 0), |(a, p), r| (a + r.accepted, p + r.proposed));
+    let met = records.iter().filter(|r| r.met_deadline()).count();
+    let by_class = SloClass::ALL.map(|class| {
+        let in_class = records.iter().filter(|r| r.slo == class);
+        let (met_c, n_c) = in_class.fold((0usize, 0usize), |(m, k), r| {
+            (m + usize::from(r.met_deadline()), k + 1)
+        });
+        if n_c == 0 { 1.0 } else { met_c as f64 / n_c as f64 }
+    });
     Summary {
         n,
-        accuracy: records.iter().filter(|r| r.correct).count() as f64 / n as f64,
-        expected_accuracy: records.iter().map(|r| r.p_correct).sum::<f64>() / n as f64,
+        accuracy: served.iter().filter(|r| r.correct).count() as f64 / n_served.max(1) as f64,
+        expected_accuracy: served.iter().map(|r| r.p_correct).sum::<f64>()
+            / n_served.max(1) as f64,
         latency_mean_s: mean(&lat),
         latency_p50_s: percentile(&lat, 0.5),
         latency_p99_s: percentile(&lat, 0.99),
-        prefill_mean_s: mean(&records.iter().map(|r| r.prefill_s).collect::<Vec<_>>()),
-        probe_mean_ms: 1e3 * mean(&records.iter().map(|r| r.probe_s).collect::<Vec<_>>()),
+        prefill_mean_s: mean(&served.iter().map(|r| r.prefill_s).collect::<Vec<_>>()),
+        probe_mean_ms: 1e3 * mean(&served.iter().map(|r| r.probe_s).collect::<Vec<_>>()),
         throughput_tps: tokens as f64 / makespan.max(1e-9),
         makespan_s: makespan,
-        req_throughput_rps: n as f64 / makespan.max(1e-9),
-        tflops_per_req: mean(&records.iter().map(|r| r.total_flops() / 1e12).collect::<Vec<_>>()),
-        tflops_edge_per_req: mean(&records.iter().map(|r| r.flops_edge / 1e12).collect::<Vec<_>>()),
+        req_throughput_rps: n_served as f64 / makespan.max(1e-9),
+        tflops_per_req: mean(&served.iter().map(|r| r.total_flops() / 1e12).collect::<Vec<_>>()),
+        tflops_edge_per_req: mean(&served.iter().map(|r| r.flops_edge / 1e12).collect::<Vec<_>>()),
         tflops_cloud_per_req: mean(
-            &records.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>(),
+            &served.iter().map(|r| r.flops_cloud / 1e12).collect::<Vec<_>>(),
         ),
-        mem_edge_peak_gb: records.iter().map(|r| r.mem_edge_gb).fold(0.0, f64::max),
-        mem_cloud_peak_gb: records.iter().map(|r| r.mem_cloud_gb).fold(0.0, f64::max),
-        mem_serving_gb: records.iter().map(|r| r.mem_serving_gb).fold(0.0, f64::max),
-        gb_up_per_req: mean(&records.iter().map(|r| r.bytes_up as f64 / 1e9).collect::<Vec<_>>()),
+        mem_edge_peak_gb: served.iter().map(|r| r.mem_edge_gb).fold(0.0, f64::max),
+        mem_cloud_peak_gb: served.iter().map(|r| r.mem_cloud_gb).fold(0.0, f64::max),
+        mem_serving_gb: served.iter().map(|r| r.mem_serving_gb).fold(0.0, f64::max),
+        gb_up_per_req: mean(&served.iter().map(|r| r.bytes_up as f64 / 1e9).collect::<Vec<_>>()),
         acceptance_rate: if prop_n == 0 { 0.0 } else { acc_n as f64 / prop_n as f64 },
-        offloads_per_req: mean(&records.iter().map(|r| r.offloads as f64).collect::<Vec<_>>()),
-        replans_per_req: mean(&records.iter().map(|r| r.replans as f64).collect::<Vec<_>>()),
-        tokens_per_req: tokens as f64 / n as f64,
+        offloads_per_req: mean(&served.iter().map(|r| r.offloads as f64).collect::<Vec<_>>()),
+        replans_per_req: mean(&served.iter().map(|r| r.replans as f64).collect::<Vec<_>>()),
+        tokens_per_req: tokens as f64 / n_served.max(1) as f64,
         wall_clock_s: 0.0,
         events_per_s: 0.0,
+        shed: n - n_served,
+        degraded: records.iter().filter(|r| r.degraded).count(),
+        deadlined: records.iter().filter(|r| r.deadline_s.is_some()).count(),
+        slo_attainment: met as f64 / n as f64,
+        slo_attainment_by_class: by_class,
+        goodput_rps: met as f64 / makespan.max(1e-9),
     }
 }
 
@@ -175,20 +239,25 @@ pub struct WindowStats {
     pub t_end: f64,
     /// Requests arriving in the window.
     pub offered: usize,
-    /// Requests completing in the window.
+    /// Requests *served to completion* in the window (shed excluded).
     pub completed: usize,
+    /// Requests shed in the window (bucketed by their rejection time,
+    /// which is their arrival time).
+    pub shed: usize,
     pub offered_rps: f64,
     pub completed_rps: f64,
     /// Latency percentiles over requests *completing* in the window
-    /// (0.0 when none did).
+    /// (0.0 when none did). Shed requests never contribute a latency.
     pub latency_p50_s: f64,
     pub latency_p99_s: f64,
 }
 
 /// Bucket a trace's records into fixed-width time windows spanning the
 /// first arrival to the last completion. Arrivals are bucketed by
-/// `t_arrival`, completions (and their latencies) by `t_done`. An empty
-/// record slice yields no windows.
+/// `t_arrival`, completions (and their latencies) by `t_done`. A shed
+/// request counts as offered and as shed — never as completed, and its
+/// zero latency never enters the percentiles (it did not finish, it was
+/// rejected). An empty record slice yields no windows.
 pub fn windowed_rates(records: &[ExecRecord], window_s: f64) -> Vec<WindowStats> {
     assert!(window_s.is_finite() && window_s > 0.0, "bad window {window_s}");
     if records.is_empty() {
@@ -198,11 +267,16 @@ pub fn windowed_rates(records: &[ExecRecord], window_s: f64) -> Vec<WindowStats>
     let t1 = records.iter().map(|r| r.t_done).fold(t0, f64::max);
     let n_win = (((t1 - t0) / window_s).floor() as usize) + 1;
     let mut offered = vec![0usize; n_win];
+    let mut shed = vec![0usize; n_win];
     let mut done: Vec<Vec<f64>> = vec![Vec::new(); n_win];
     let bucket = |t: f64| (((t - t0) / window_s).floor() as usize).min(n_win - 1);
     for r in records {
         offered[bucket(r.t_arrival)] += 1;
-        done[bucket(r.t_done)].push(r.latency_s);
+        if r.shed {
+            shed[bucket(r.t_done)] += 1;
+        } else {
+            done[bucket(r.t_done)].push(r.latency_s);
+        }
     }
     (0..n_win)
         .map(|w| WindowStats {
@@ -210,6 +284,7 @@ pub fn windowed_rates(records: &[ExecRecord], window_s: f64) -> Vec<WindowStats>
             t_end: t0 + (w + 1) as f64 * window_s,
             offered: offered[w],
             completed: done[w].len(),
+            shed: shed[w],
             offered_rps: offered[w] as f64 / window_s,
             completed_rps: done[w].len() as f64 / window_s,
             latency_p50_s: percentile(&done[w], 0.5),
@@ -276,6 +351,7 @@ mod tests {
         // Total offered/completed across windows conserves requests.
         assert_eq!(w.iter().map(|x| x.offered).sum::<usize>(), recs.len());
         assert_eq!(w.iter().map(|x| x.completed).sum::<usize>(), recs.len());
+        assert_eq!(w.iter().map(|x| x.shed).sum::<usize>(), 0);
         // Window bounds tile the span contiguously from the first arrival.
         assert_eq!(w[0].t_start, 0.0);
         for pair in w.windows(2) {
@@ -288,5 +364,82 @@ mod tests {
     #[should_panic(expected = "bad window")]
     fn windowed_rates_rejects_nonpositive_window() {
         windowed_rates(&[rec(1.0, 0.0, 1, true)], 0.0);
+    }
+
+    fn shed_rec(t0: f64) -> ExecRecord {
+        ExecRecord { t_arrival: t0, t_done: t0, shed: true, ..Default::default() }
+    }
+
+    #[test]
+    fn windowed_rates_split_shed_from_completed() {
+        // A shed request must not count as a completion in any window —
+        // the pre-split code pushed its zero latency into the t_done
+        // bucket, deflating the percentiles and inflating completed.
+        // Shed exactly ON a window edge (t = 5.0) buckets into [5,10),
+        // like any arrival on an edge.
+        let recs = vec![rec(2.0, 0.0, 10, true), shed_rec(5.0), rec(7.0, 4.0, 10, true)];
+        let w = windowed_rates(&recs, 5.0);
+        assert_eq!(w.len(), 3);
+        assert_eq!((w[0].offered, w[0].completed, w[0].shed), (2, 1, 0));
+        assert_eq!((w[1].offered, w[1].completed, w[1].shed), (1, 0, 1));
+        assert_eq!((w[2].offered, w[2].completed, w[2].shed), (0, 1, 0));
+        // The shed window has no completions, so no latency either —
+        // the zero latency of the shed record must not appear as p50.
+        assert_eq!(w[1].latency_p50_s, 0.0);
+        assert!((w[2].latency_p50_s - 7.0).abs() < 1e-12);
+        // Conservation: offered = completed + shed across the trace.
+        let (off, comp, sh) = w.iter().fold((0, 0, 0), |(o, c, s), x| {
+            (o + x.offered, c + x.completed, s + x.shed)
+        });
+        assert_eq!(off, recs.len());
+        assert_eq!(comp + sh, recs.len());
+    }
+
+    #[test]
+    fn summary_slo_accounting() {
+        // Two deadlined requests (one met, one missed), one deadline-free,
+        // one shed. Classes: met = critical, missed = standard,
+        // deadline-free = standard, shed = best-effort.
+        let mut met = rec(1.0, 0.0, 10, true);
+        met.deadline_s = Some(2.0);
+        met.slo = SloClass::LatencyCritical;
+        let mut missed = rec(5.0, 1.0, 10, true);
+        missed.deadline_s = Some(2.0);
+        let free = rec(2.0, 2.0, 10, true);
+        let mut dropped = shed_rec(3.0);
+        dropped.slo = SloClass::BestEffort;
+        let s = summarize(&[met, missed, free, dropped.clone()]);
+        assert_eq!((s.n, s.shed, s.degraded, s.deadlined), (4, 1, 0, 2));
+        // Met: the critical request and the deadline-free one => 2/4.
+        assert!((s.slo_attainment - 0.5).abs() < 1e-12);
+        assert_eq!(s.slo_attainment_by_class[0], 1.0, "critical met");
+        assert!((s.slo_attainment_by_class[1] - 0.5).abs() < 1e-12, "standard 1/2");
+        assert_eq!(s.slo_attainment_by_class[2], 0.0, "best-effort shed");
+        // makespan 0 -> 6; goodput counts only within-deadline finishes.
+        assert!((s.goodput_rps - 2.0 / 6.0).abs() < 1e-12);
+        // Served-only stats: the shed zeros must not drag the means.
+        assert!((s.latency_mean_s - (1.0 + 5.0 + 2.0) / 3.0).abs() < 1e-12);
+        assert!((s.req_throughput_rps - 3.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s.accuracy, 1.0);
+        // Degenerate all-shed batch: no served stats, full shed count.
+        let s = summarize(&[dropped]);
+        assert_eq!((s.n, s.shed), (1, 1));
+        assert_eq!(s.latency_mean_s, 0.0);
+        assert_eq!(s.slo_attainment, 0.0);
+        assert_eq!(s.accuracy, 0.0);
+    }
+
+    #[test]
+    fn met_deadline_semantics() {
+        let mut r = rec(2.0, 0.0, 10, true);
+        assert!(r.met_deadline(), "no deadline = met by completing");
+        r.deadline_s = Some(2.0);
+        assert!(r.met_deadline(), "exactly on the deadline is met");
+        r.deadline_s = Some(1.9);
+        assert!(!r.met_deadline());
+        let mut s = shed_rec(0.0);
+        assert!(!s.met_deadline(), "shed never meets");
+        s.deadline_s = Some(10.0);
+        assert!(!s.met_deadline());
     }
 }

@@ -30,7 +30,7 @@ pub use dialogue::DialogueCfg;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::{Mode, PolicyKind, TraceSpec};
+use crate::coordinator::{Mode, PolicyKind, Sched, SloClass, TraceSpec};
 use crate::util::json::Value;
 use crate::util::Rng;
 use crate::workload::{Benchmark, Generator, Item};
@@ -55,6 +55,10 @@ pub struct ScenarioSpec {
     pub mix: Mix,
     /// `Some` turns each session into a multi-turn dialogue.
     pub dialogue: Option<DialogueCfg>,
+    /// `Some` stamps every request with an SLO deadline/class (with
+    /// per-tenant overrides) and optionally flips the scheduling
+    /// discipline / admission controller for the compiled trace.
+    pub slo: Option<SloCfg>,
 }
 
 impl Default for ScenarioSpec {
@@ -68,7 +72,54 @@ impl Default for ScenarioSpec {
             shape: Shape::None,
             mix: Mix::default(),
             dialogue: None,
+            slo: None,
         }
+    }
+}
+
+/// The `[slo]` table: service-level objectives for the compiled trace.
+///
+/// Every request gets the default `class` + `deadline_s`; entries under
+/// `[slo.tenants]` override both per tenant (keyed by the same policy
+/// names the `[mix]` table uses). `sched`/`admission` map onto the
+/// matching `TraceSpec` knobs so a scenario file can opt into EDF
+/// scheduling and the admission controller without CLI flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloCfg {
+    /// Default class for every request (per-tenant overrides win).
+    pub class: SloClass,
+    /// Default deadline (seconds after arrival); `None` means only
+    /// tenants with an override carry deadlines.
+    pub deadline_s: Option<f64>,
+    /// `Some` pins the event-scheduling discipline for this trace.
+    pub sched: Option<Sched>,
+    /// Enable the admission controller (shed/degrade predicted misses).
+    pub admission: bool,
+    /// Per-tenant overrides: (tenant policy name, class, deadline).
+    /// A `None` deadline inherits the table-level `deadline_s`.
+    pub tenants: Vec<(String, SloClass, Option<f64>)>,
+}
+
+impl SloCfg {
+    pub fn validate(&self, mix: &Mix) -> Result<()> {
+        if let Some(d) = self.deadline_s {
+            ensure!(d.is_finite() && d > 0.0, "[slo] deadline_s must be finite and > 0, got {d}");
+        }
+        for (name, _, deadline) in &self.tenants {
+            let p = crate::cli::policy_for_mode(name)
+                .with_context(|| format!("[slo.tenants] key {name:?}"))?;
+            ensure!(
+                mix.tenants.iter().any(|(t, _)| *t == p),
+                "[slo.tenants] key {name:?} is not a tenant of the [mix] table"
+            );
+            if let Some(d) = deadline {
+                ensure!(
+                    d.is_finite() && *d > 0.0,
+                    "[slo.tenants] {name}: deadline_s must be finite and > 0, got {d}"
+                );
+            }
+        }
+        Ok(())
     }
 }
 
@@ -132,7 +183,7 @@ impl ScenarioSpec {
 
     /// Build from a parsed [`Value`] tree; unknown keys are errors.
     pub fn from_value(v: &Value) -> Result<ScenarioSpec> {
-        check_keys(v, &["n", "rate", "arrival", "shape", "mix", "dialogue"], "scenario")?;
+        check_keys(v, &["n", "rate", "arrival", "shape", "mix", "dialogue", "slo"], "scenario")?;
         let d = ScenarioSpec::default();
         let spec = ScenarioSpec {
             n: match v.get("n") {
@@ -159,6 +210,10 @@ impl ScenarioSpec {
                 Some(t) => parse_dialogue(t)?,
                 None => None,
             },
+            slo: match v.get("slo") {
+                Some(t) => Some(parse_slo(t)?),
+                None => None,
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -171,6 +226,9 @@ impl ScenarioSpec {
         self.mix.validate()?;
         if let Some(d) = &self.dialogue {
             d.validate()?;
+        }
+        if let Some(slo) = &self.slo {
+            slo.validate(&self.mix)?;
         }
         Ok(())
     }
@@ -252,6 +310,24 @@ impl ScenarioSpec {
             tenants.push(tenant);
         }
 
+        // SLO stamping: the table default for every request, then the
+        // per-tenant overrides (resolved to mix indices by policy name).
+        if let Some(slo) = &self.slo {
+            let mut per_tenant: Vec<(SloClass, Option<f64>)> =
+                vec![(slo.class, slo.deadline_s); self.mix.tenants.len()];
+            for (name, class, deadline) in &slo.tenants {
+                let p = crate::cli::policy_for_mode(name)?;
+                if let Some(i) = self.mix.tenants.iter().position(|(t, _)| *t == p) {
+                    per_tenant[i] = (*class, deadline.or(slo.deadline_s));
+                }
+            }
+            for (item, &t) in final_items.iter_mut().zip(&tenants) {
+                let (class, deadline) = per_tenant[t];
+                item.slo = class;
+                item.deadline_s = deadline;
+            }
+        }
+
         let policy = if self.mix.tenants.len() == 1 {
             self.mix.tenants[0].0.clone()
         } else {
@@ -260,10 +336,16 @@ impl ScenarioSpec {
             )
         };
         let discount = self.dialogue.as_ref().map_or(0.0, |d| d.reuse_discount);
-        let spec = TraceSpec::new(policy)
+        let mut spec = TraceSpec::new(policy)
             .trace(final_items, arrivals)
             .seed(seed)
             .reuse(discount);
+        if let Some(slo) = &self.slo {
+            if let Some(sched) = slo.sched {
+                spec = spec.sched(sched);
+            }
+            spec = spec.admission(slo.admission);
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -474,6 +556,46 @@ fn parse_dialogue(v: &Value) -> Result<Option<DialogueCfg>> {
     }))
 }
 
+fn parse_slo(v: &Value) -> Result<SloCfg> {
+    check_keys(v, &["class", "deadline_s", "sched", "admission", "tenants"], "[slo]")?;
+    let class = match v.get("class") {
+        Some(c) => SloClass::parse(c.as_str()?).with_context(|| "[slo] key \"class\"")?,
+        None => SloClass::default(),
+    };
+    let deadline_s = match v.get("deadline_s") {
+        Some(d) => Some(d.as_f64().with_context(|| "[slo] key \"deadline_s\"")?),
+        None => None,
+    };
+    let sched = match v.get("sched") {
+        Some(x) => Some(Sched::parse(x.as_str()?).with_context(|| "[slo] key \"sched\"")?),
+        None => None,
+    };
+    let admission = match v.get("admission") {
+        Some(a) => a.as_bool().with_context(|| "[slo] key \"admission\"")?,
+        None => false,
+    };
+    let mut tenants = Vec::new();
+    if let Some(t) = v.get("tenants") {
+        // BTreeMap iteration = name-sorted = deterministic order.
+        for (name, o) in t.as_obj()? {
+            check_keys(o, &["class", "deadline_s"], "[slo.tenants] entry")?;
+            let c = match o.get("class") {
+                Some(x) => SloClass::parse(x.as_str()?)
+                    .with_context(|| format!("[slo.tenants] {name}: key \"class\""))?,
+                None => class,
+            };
+            let d = match o.get("deadline_s") {
+                Some(x) => Some(
+                    x.as_f64().with_context(|| format!("[slo.tenants] {name}: \"deadline_s\""))?,
+                ),
+                None => None,
+            };
+            tenants.push((name.clone(), c, d));
+        }
+    }
+    Ok(SloCfg { class, deadline_s, sched, admission, tenants })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -639,6 +761,97 @@ mod tests {
             }
             p => panic!("expected PerRequest, got {p:?}"),
         }
+    }
+
+    #[test]
+    fn slo_table_stamps_every_request_and_sets_trace_knobs() {
+        let sc = toml_spec(
+            "n = 6\n[slo]\nclass = \"latency-critical\"\ndeadline_s = 2.0\nsched = \"edf\"\n\
+             admission = true\n",
+        )
+        .unwrap();
+        let slo = sc.slo.as_ref().unwrap();
+        assert_eq!(slo.class, SloClass::LatencyCritical);
+        assert_eq!(slo.sched, Some(Sched::Edf));
+        let spec = sc.compile(7).unwrap();
+        assert!(spec
+            .items
+            .iter()
+            .all(|i| i.deadline_s == Some(2.0) && i.slo == SloClass::LatencyCritical));
+        assert_eq!(spec.sched, Some(Sched::Edf));
+        assert!(spec.admission);
+        // Without [slo] the compiled trace stays inert on every knob.
+        let flat = ScenarioSpec::default().compile(7).unwrap();
+        assert!(flat.items.iter().all(|i| i.deadline_s.is_none()));
+        assert_eq!(flat.sched, None);
+        assert!(!flat.admission);
+    }
+
+    #[test]
+    fn slo_per_tenant_overrides_follow_the_mix() {
+        let doc = "n = 12\n[mix]\ntenants = { msao = 0.5, cloud = 0.5 }\n[slo]\n\
+                   deadline_s = 8.0\n[slo.tenants]\n\
+                   msao = { class = \"latency-critical\", deadline_s = 2.0 }\n";
+        let sc = toml_spec(doc).unwrap();
+        let spec = sc.compile(3).unwrap();
+        match &spec.policy {
+            PolicyKind::PerRequest(v) => {
+                assert_eq!(v.len(), spec.items.len());
+                for (item, p) in spec.items.iter().zip(v) {
+                    if matches!(p, PolicyKind::Msao(Mode::Msao)) {
+                        assert_eq!(item.deadline_s, Some(2.0));
+                        assert_eq!(item.slo, SloClass::LatencyCritical);
+                    } else {
+                        // Non-overridden tenants inherit the defaults.
+                        assert_eq!(item.deadline_s, Some(8.0));
+                        assert_eq!(item.slo, SloClass::Standard);
+                    }
+                }
+            }
+            p => panic!("expected PerRequest, got {p:?}"),
+        }
+    }
+
+    #[test]
+    fn slo_error_paths_name_the_key() {
+        // Malformed class name.
+        let err = toml_spec("[slo]\nclass = \"platinum\"\ndeadline_s = 1.0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("platinum"), "{err:#}");
+        // Deadline <= 0 (zero and negative).
+        for doc in ["[slo]\ndeadline_s = -1.0\n", "[slo]\ndeadline_s = 0\n"] {
+            let err = toml_spec(doc).unwrap_err();
+            assert!(format!("{err:#}").contains("deadline_s"), "{err:#}");
+        }
+        // Unknown keys inside [slo] and [slo.tenants] entries.
+        let err = toml_spec("[slo]\nbogus = 1\n").unwrap_err();
+        assert!(format!("{err:#}").contains("bogus"), "{err:#}");
+        assert!(toml_spec("[slo.tenants]\nmsao = { bogus = 1.0 }\n").is_err());
+        // Unknown tenant name, and a tenant absent from the mix.
+        let err =
+            toml_spec("[slo.tenants]\nbogus = { deadline_s = 1.0 }\n").unwrap_err();
+        assert!(format!("{err:#}").contains("bogus"), "{err:#}");
+        let err =
+            toml_spec("[slo.tenants]\ncloud = { deadline_s = 1.0 }\n").unwrap_err();
+        assert!(format!("{err:#}").contains("cloud"), "{err:#}");
+        // Bad sched / per-tenant deadline <= 0.
+        assert!(toml_spec("[slo]\nsched = \"lifo\"\n").is_err());
+        assert!(toml_spec(
+            "[mix]\ntenants = { msao = 1.0 }\n[slo.tenants]\nmsao = { deadline_s = -2.0 }\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scenario_file_errors_name_file_and_key() {
+        // The `msao scenario` validator path: errors carry the file name
+        // (via load's context) and the offending key.
+        let path = std::env::temp_dir().join("msao_bad_slo.toml");
+        std::fs::write(&path, "[slo]\nclass = \"platinum\"\n").unwrap();
+        let err = check_file(&path.to_string_lossy(), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("msao_bad_slo.toml"), "{msg}");
+        assert!(msg.contains("platinum"), "{msg}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

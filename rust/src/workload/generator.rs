@@ -7,6 +7,7 @@
 
 use anyhow::Result;
 
+use crate::coordinator::SloClass;
 use crate::sparsity::Modality;
 use crate::util::Rng;
 
@@ -86,6 +87,13 @@ pub struct Item {
     /// or standalone request). Follow-up turns can reuse the previous
     /// turn's prefill state via `TraceSpec::reuse_discount`.
     pub prior_turns: usize,
+    /// Optional SLO deadline, seconds after arrival (`None` = no
+    /// deadline: the request never counts against `slo_attainment`,
+    /// sorts last among EDF time-ties, and is never shed/degraded).
+    pub deadline_s: Option<f64>,
+    /// Service-level class consulted by the admission controller when a
+    /// deadline is predicted to be missed. Ignored without a deadline.
+    pub slo: SloClass,
 }
 
 impl Item {
@@ -249,6 +257,8 @@ impl Generator {
             audio: None,
             answer: self.rng.below(120),
             prior_turns: 0,
+            deadline_s: None,
+            slo: SloClass::default(),
         }
     }
 
@@ -292,6 +302,8 @@ impl Generator {
             audio,
             answer: self.rng.below(120),
             prior_turns: 0,
+            deadline_s: None,
+            slo: SloClass::default(),
         }
     }
 
@@ -460,5 +472,16 @@ mod tests {
         let mut g = Generator::new(13);
         assert_eq!(g.vqa_item().prior_turns, 0);
         assert_eq!(g.mmbench_item().prior_turns, 0);
+    }
+
+    #[test]
+    fn items_have_no_slo_by_default() {
+        // The SLO-free default is what keeps legacy traces bitwise
+        // pinned: no deadline, standard class, both inert downstream.
+        let mut g = Generator::new(14);
+        for it in [g.vqa_item(), g.mmbench_item()] {
+            assert_eq!(it.deadline_s, None);
+            assert_eq!(it.slo, SloClass::Standard);
+        }
     }
 }

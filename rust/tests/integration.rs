@@ -12,7 +12,7 @@ use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
     serve, serve_materialized_ref, testbed, Assign, Batcher, Coordinator, Mode, PolicyKind,
-    TraceSpec,
+    Sched, SloClass, TraceSpec,
 };
 use msao::metrics::summarize;
 use msao::scenario::ScenarioSpec;
@@ -910,6 +910,200 @@ fn dialogue_scenario_serves_follow_up_turns_with_prefill_reuse() {
                 f.prefill_s.to_bits(),
                 "first-turn req {i}: prefill must be identical"
             );
+        }
+    }
+}
+
+#[test]
+fn fcfs_and_bare_deadlines_stay_bitwise_inert() {
+    require_artifacts!();
+    // The SLO golden: with `sched = fcfs` (default or explicit) and the
+    // admission controller off, the SLO machinery must be invisible —
+    // records and the event-sequence hash bit for bit identical to the
+    // plain pre-SLO serve path, whether or not requests carry
+    // deadlines, at concurrency {1, 8} x workers {1, 2}.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    for conc in [1usize, 8] {
+        for workers in [1usize, 2] {
+            let make = || {
+                let mut gen = Generator::new(31);
+                let n = 6;
+                let items = gen.items(Benchmark::Vqa, n);
+                let arrivals = gen.arrivals(n, 2.5);
+                msao_spec(items, arrivals, Mode::Msao, 5).concurrency(conc).workers(workers)
+            };
+            let golden = serve(&mut c, &make()).unwrap();
+            let explicit = serve(&mut c, &make().sched(Sched::Fcfs)).unwrap();
+            // Deadlines without EDF/admission only annotate records.
+            let stamped =
+                serve(&mut c, &make().slo_all(SloClass::LatencyCritical, 2.0)).unwrap();
+            for (i, a) in golden.records.iter().enumerate() {
+                let what = format!("conc {conc} w{workers} req {i}");
+                assert_records_bitwise_equal(a, &explicit.records[i], &format!("fcfs {what}"));
+                assert_records_bitwise_equal(a, &stamped.records[i], &format!("stamped {what}"));
+            }
+            assert_eq!(golden.events, explicit.events, "conc {conc} w{workers}: event count");
+            assert_eq!(
+                golden.events_hash, explicit.events_hash,
+                "conc {conc} w{workers}: explicit-fcfs event hash"
+            );
+            assert_eq!(
+                golden.events_hash, stamped.events_hash,
+                "conc {conc} w{workers}: deadline-stamped event hash"
+            );
+            assert_eq!(stamped.shed, 0, "no admission control, nothing shed");
+            assert_eq!(stamped.degraded, 0, "no admission control, nothing degraded");
+            assert!(stamped.records.iter().all(|r| r.deadline_s == Some(2.0)));
+            assert!(golden.records.iter().all(|r| r.deadline_s.is_none()));
+        }
+    }
+}
+
+#[test]
+fn admission_sheds_best_effort_and_degrades_standard_under_overload() {
+    require_artifacts!();
+    // Burst arrivals with deadlines no schedule can meet (1 ms — below
+    // the link RTT + payload transfer alone): the admission controller
+    // must shed the best-effort third, degrade the standard third, and
+    // leave the latency-critical third untouched; with the controller
+    // off the same trace serves everything.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let n = 12;
+    let make = |admission: bool| {
+        let mut gen = Generator::new(4242);
+        let mut items = gen.items(Benchmark::Vqa, n);
+        let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+        for (i, it) in items.iter_mut().enumerate() {
+            it.slo = SloClass::ALL[i % 3];
+            it.deadline_s = Some(0.001);
+        }
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(9)
+            .concurrency(4)
+            .sched(Sched::Edf)
+            .admission(admission)
+    };
+    let off = serve(&mut c, &make(false)).unwrap();
+    assert_eq!(off.shed, 0, "controller off must never shed");
+    assert_eq!(off.degraded, 0, "controller off must never degrade");
+    assert!(off.records.iter().all(|r| r.tokens_out > 0));
+
+    let on = serve(&mut c, &make(true)).unwrap();
+    assert_eq!(on.records.len(), n, "shed requests still yield records");
+    assert_eq!(on.shed, n / 3, "every best-effort request predicted to miss is shed");
+    assert_eq!(on.degraded, n / 3, "every standard request predicted to miss degrades");
+    for (i, r) in on.records.iter().enumerate() {
+        match r.slo {
+            SloClass::LatencyCritical => {
+                assert!(!r.shed && !r.degraded, "req {i}: critical request shed/degraded")
+            }
+            SloClass::Standard => assert!(!r.shed, "req {i}: standard request shed"),
+            SloClass::BestEffort => assert!(r.shed, "req {i}: best-effort request served"),
+        }
+        if r.shed {
+            assert_eq!(r.tokens_out, 0, "req {i}: shed request produced tokens");
+            assert_eq!(r.t_done.to_bits(), r.t_arrival.to_bits(), "req {i}: shed t_done");
+        } else {
+            assert!(r.tokens_out > 0, "req {i}: served request produced no tokens");
+        }
+    }
+    // Degradation shrinks the decode budget, so the degraded run burns
+    // strictly less compute per served request than the uncontrolled one.
+    let served_flops = |res: &msao::coordinator::TraceResult| {
+        res.records
+            .iter()
+            .filter(|r| !r.shed)
+            .map(|r| r.flops_edge + r.flops_cloud)
+            .sum::<f64>()
+            / res.records.iter().filter(|r| !r.shed).count() as f64
+    };
+    assert!(
+        served_flops(&on) < served_flops(&off),
+        "degraded service level must cost less compute: {} vs {}",
+        served_flops(&on),
+        served_flops(&off)
+    );
+    let sum = summarize(&on.records);
+    assert_eq!(sum.shed, n / 3);
+    assert_eq!(sum.n, n);
+}
+
+#[test]
+fn edf_without_deadlines_reproduces_fcfs_bit_for_bit() {
+    require_artifacts!();
+    // Deadline-free requests carry a +INF key component, which
+    // `total_cmp`s Equal against every other +INF — so EDF with no
+    // deadlines must fall through to the index tie-break and reproduce
+    // FCFS bit for bit (records AND the event-sequence hash). With
+    // deadlines, EDF is exercised end to end as a completion smoke:
+    // every session still finishes with causal times.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let n = 8;
+    let make = |sched: Sched, deadlines: bool| {
+        let mut gen = Generator::new(77);
+        let mut items = gen.items(Benchmark::Vqa, n);
+        let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.02).collect();
+        if deadlines {
+            for (i, it) in items.iter_mut().enumerate() {
+                if i % 2 == 1 {
+                    it.slo = SloClass::LatencyCritical;
+                    it.deadline_s = Some(1.0);
+                }
+            }
+        }
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(9)
+            .concurrency(4)
+            .sched(sched)
+    };
+    let fcfs = serve(&mut c, &make(Sched::Fcfs, false)).unwrap();
+    let edf = serve(&mut c, &make(Sched::Edf, false)).unwrap();
+    assert_eq!(fcfs.events, edf.events, "deadline-free EDF: event count");
+    assert_eq!(fcfs.events_hash, edf.events_hash, "deadline-free EDF: event hash");
+    for (i, (a, b)) in fcfs.records.iter().zip(&edf.records).enumerate() {
+        assert_records_bitwise_equal(a, b, &format!("deadline-free EDF req {i}"));
+    }
+
+    let edf_dl = serve(&mut c, &make(Sched::Edf, true)).unwrap();
+    assert_eq!(edf_dl.records.len(), n);
+    for (i, r) in edf_dl.records.iter().enumerate() {
+        assert!(r.tokens_out > 0, "req {i} produced no tokens");
+        assert!(r.t_done > r.t_arrival, "req {i}: non-causal completion");
+        assert_eq!(r.slo == SloClass::LatencyCritical, i % 2 == 1, "req {i}: class survives");
+    }
+}
+
+#[test]
+fn slo_scenario_file_compiles_and_serves_with_admission() {
+    require_artifacts!();
+    // scenarios/slo.toml end to end: the [slo] table's classes,
+    // deadlines, EDF, and admission survive compile() and drive the
+    // serving path; per-class accounting lands in the summary.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/scenarios/slo.toml");
+    let spec = ScenarioSpec::load(path).unwrap().compile(7).unwrap().concurrency(8);
+    assert_eq!(spec.sched, Some(Sched::Edf));
+    assert!(spec.admission);
+    assert!(spec.items.iter().all(|i| i.deadline_s.is_some()));
+    assert!(spec.items.iter().any(|i| i.slo == SloClass::LatencyCritical));
+    let res = serve(&mut c, &spec).unwrap();
+    assert_eq!(res.records.len(), spec.items.len());
+    let sum = summarize(&res.records);
+    assert!(sum.deadlined == res.records.len(), "every request carries a deadline");
+    assert!((0.0..=1.0).contains(&sum.slo_attainment));
+    for a in sum.slo_attainment_by_class {
+        assert!((0.0..=1.0).contains(&a));
+    }
+    // Critical requests are never shed.
+    for r in &res.records {
+        if r.slo == SloClass::LatencyCritical {
+            assert!(!r.shed);
         }
     }
 }
