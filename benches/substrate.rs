@@ -4,10 +4,12 @@
 //! against the linear-scan reference over a trace-length × concurrency
 //! grid of synthetic sessions (pure scheduler cost, no engines needed).
 //! The grid (an incremental-GP section, the sharded parallel driver's
-//! speedup-vs-workers fleet cell, and the scenario-compile section) is
+//! synthetic speedup-vs-workers fleet cell, the `serve_parallel`
+//! real-serve speedup curve, and the scenario-compile section) is
 //! written to `BENCH_serving.json` — the pinned perf-trajectory
 //! baseline future PRs diff against. `MSAO_BENCH_QUICK=1` shrinks the
-//! grid for CI smoke runs.
+//! grid for CI smoke runs; `MSAO_BENCH_SERVE_N` overrides the
+//! real-serve cell's trace length.
 
 use std::time::Instant;
 
@@ -593,6 +595,156 @@ fn serving_scaling_grid() -> Result<()> {
         parallel_cell(&mut out, "burst", 250_000, 250_000, 8, &[1, 2, 4, 8])?;
     }
 
+    // Real serve path: speedup vs workers on `msao serve` itself (the
+    // de-globalized serving core, where probe/plan/draft/edge-decode
+    // are shard-local). Engine-backed, so it self-skips without the
+    // AOT artifacts; every row is fingerprint-asserted bitwise
+    // identical to the workers=1 run before it is emitted.
+    serve_parallel_section(&mut out, quick)?;
+
+    scenario_compile_section(&mut out, quick)?;
+
+    out.write("BENCH_serving.json")?;
+    Ok(())
+}
+
+// ---------------- real-serve parallel section ---------------------------
+//
+// `serve_parallel` in BENCH_serving.json: the speedup-vs-workers curve
+// of the REAL `msao serve` path (engines + cost model + per-edge
+// theta/batcher state) on a fleet of four edges. Unlike the synthetic
+// `parallel` rows above, each request here runs the full MSAO session —
+// probe, plan, edge prefill, speculative draft/verify rounds — so one
+// request costs ~10^4 synthetic steps. The workers=1 run is the oracle;
+// every other worker count must reproduce its records, link totals, and
+// event-sequence hash bitwise (asserted before any speedup row lands in
+// the JSON).
+
+/// Bitwise digest of a serve run: every record's timing/byte/flops/
+/// quality fields, the link totals, and the event-sequence hash.
+fn serve_fingerprint(res: &msao::coordinator::TraceResult) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for r in &res.records {
+        h = fnv64(h, r.tokens_out as u64);
+        h = fnv64(h, r.accepted as u64);
+        h = fnv64(h, r.proposed as u64);
+        h = fnv64(h, r.bytes_up);
+        h = fnv64(h, r.bytes_down);
+        h = fnv64(h, r.t_done.to_bits());
+        h = fnv64(h, r.latency_s.to_bits());
+        h = fnv64(h, r.prefill_s.to_bits());
+        h = fnv64(h, r.flops_edge.to_bits());
+        h = fnv64(h, r.flops_cloud.to_bits());
+        h = fnv64(h, r.p_correct.to_bits());
+        h = fnv64(h, (r.edge_id as u64) << 1 | r.correct as u64);
+    }
+    h = fnv64(h, res.uplink_bytes);
+    h = fnv64(h, res.downlink_bytes);
+    h = fnv64(h, res.batch_amortization.to_bits());
+    h ^ res.events_hash
+}
+
+fn serve_parallel_section(out: &mut BenchJson, quick: bool) -> Result<()> {
+    use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
+    use msao::workload::Benchmark;
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("serve_parallel: skipped (artifacts/ not built)");
+        return Ok(());
+    }
+    let mut cfg = Config::default();
+    cfg.network.bandwidth_mbps = 300.0;
+    cfg.replicate_edges(4)?;
+    let coord = Coordinator::new(cfg)?;
+
+    // Cell size: real requests carry ~200 KB of image patches each, so
+    // the trace itself costs n x 200 KB resident. The 100k-request
+    // curve (~20 GB of items + hours of engine time) is reachable via
+    // MSAO_BENCH_SERVE_N where RAM allows; the default full cell keeps
+    // the curve measurable on a workstation.
+    let n_env = std::env::var("MSAO_BENCH_SERVE_N").ok().and_then(|v| v.parse().ok());
+    let (n, conc, workers_list): (usize, usize, &[usize]) = if quick {
+        (n_env.unwrap_or(128), 32, &[1, 2])
+    } else {
+        (n_env.unwrap_or(20_000), 256, &[1, 2, 4, 8])
+    };
+    let n_edges = 4usize;
+    // Offered load high enough that all four edges hold concurrent
+    // sessions (round-robin assignment spreads the trace evenly).
+    let rate = n as f64 / 60.0;
+
+    let make = |workers: usize| {
+        let mut gen = Generator::new(42);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, rate);
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(7)
+            .concurrency(conc)
+            .workers(workers)
+    };
+
+    println!("== serve_parallel: real `msao serve` speedup vs workers (fleet of 4, bitwise-checked) ==");
+    println!(
+        "{:<26} {:>8} {:>10} {:>12} {:>14} {:>8} {:>10}",
+        "cell", "workers", "wall_s", "events", "events/s", "speedup", "identical"
+    );
+    let mut seq_wall = f64::NAN;
+    let mut oracle_fp = 0u64;
+    let mut oracle_hash = 0u64;
+    for &w in workers_list {
+        let spec = make(w);
+        let t0 = Instant::now();
+        let res = serve(&coord, &spec)?;
+        let wall = t0.elapsed().as_secs_f64();
+        if w == workers_list[0] {
+            seq_wall = wall;
+            oracle_fp = serve_fingerprint(&res);
+            oracle_hash = res.events_hash;
+        } else {
+            // The load-bearing invariant, checked before any speedup
+            // row is emitted: sharded == sequential, bitwise.
+            assert_eq!(
+                res.events_hash, oracle_hash,
+                "serve_parallel workers {w}: event-sequence hash diverged from workers=1"
+            );
+            assert_eq!(
+                serve_fingerprint(&res),
+                oracle_fp,
+                "serve_parallel workers {w}: records diverged from workers=1"
+            );
+        }
+        let speedup = seq_wall / wall;
+        println!(
+            "{:<26} {:>8} {:>10.3} {:>12} {:>14.0} {:>8.2} {:>10}",
+            format!("msao-fleet4 n={n} conc={conc}"),
+            w,
+            wall,
+            res.events,
+            res.events as f64 / wall.max(1e-12),
+            speedup,
+            "yes"
+        );
+        out.push(
+            "serve_parallel",
+            json::obj(vec![
+                ("cell", json::s("msao-fleet4")),
+                ("workers", json::num(w as f64)),
+                ("n_requests", json::num(n as f64)),
+                ("concurrency", json::num(conc as f64)),
+                ("n_edges", json::num(n_edges as f64)),
+                ("wall_s", json::num(wall)),
+                ("events", json::num(res.events as f64)),
+                ("events_per_s", json::num(res.events as f64 / wall.max(1e-12))),
+                ("speedup_vs_seq", json::num(speedup)),
+                ("identical", Value::Bool(true)),
+            ]),
+        );
+    }
+    Ok(())
+}
+
+fn scenario_compile_section(out: &mut BenchJson, quick: bool) -> Result<()> {
     // Scenario compilation: the declarative workload layer's cost to
     // expand a spec into a TraceSpec (items + arrivals + policy), per
     // cell kind — the serve-path overhead a scenario file adds before
@@ -646,7 +798,5 @@ fn serving_scaling_grid() -> Result<()> {
             );
         }
     }
-
-    out.write("BENCH_serving.json")?;
     Ok(())
 }

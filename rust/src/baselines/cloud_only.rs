@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
-use crate::coordinator::session::Coordinator;
+use crate::coordinator::session::{Coordinator, ServeCtx};
 use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
@@ -29,7 +29,7 @@ use super::{BPhase, DecodeState, FinishState};
 /// (< 1.0 only for dialogue follow-up turns that reuse cached prefix).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn start(
-    coord: &mut Coordinator,
+    ctx: &ServeCtx,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -38,7 +38,7 @@ pub(crate) fn start(
     cloud_frac: f64,
     reuse_scale: f64,
 ) -> Result<BPhase> {
-    let n_out = coord.cfg.msao.max_new_tokens;
+    let n_out = ctx.cfg.msao.max_new_tokens;
 
     // Raw payload uplink.
     let bytes = super::full_payload_bytes(item);
@@ -46,7 +46,7 @@ pub(crate) fn start(
     rec.bytes_up = bytes;
 
     // Cloud encodes + prefills at full fidelity.
-    let inp = super::full_inputs(coord, item, true)?;
+    let inp = super::full_inputs(&ctx.eng, item, true)?;
     let vit = SimModel::vision_encoder();
     let full_m = SimModel::qwen25vl_7b();
     let enc_frames = inp.frames.max(1) as f64;
@@ -70,10 +70,10 @@ pub(crate) fn start(
     vc.cloud.mem.alloc(mem_bytes);
 
     // Real prefill on the cloud engine; decode continues step-wise.
-    let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let pre = ctx.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
-        coord.eng.free_kv(true, pre.kv);
+        ctx.eng.free_kv(true, pre.kv);
         vc.cloud.mem.free(mem_bytes);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
@@ -103,7 +103,7 @@ pub(crate) fn start(
 /// used only by the golden equivalence tests; production serving goes
 /// through the session path above.
 pub fn serve(
-    coord: &mut Coordinator,
+    coord: &Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -119,7 +119,7 @@ pub fn serve(
     rec.bytes_up = bytes;
 
     // Cloud encodes + prefills at full fidelity.
-    let inp = super::full_inputs(coord, item, true)?;
+    let inp = super::full_inputs(&coord.eng, item, true)?;
     let vit = SimModel::vision_encoder();
     let full_m = SimModel::qwen25vl_7b();
     let enc_frames = inp.frames.max(1) as f64;

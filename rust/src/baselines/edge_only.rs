@@ -13,8 +13,8 @@ use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
-use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
+use crate::coordinator::session::{Coordinator, ServeCtx};
+use crate::coordinator::timeline::{EdgeId, EdgeSite, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
@@ -24,14 +24,16 @@ use super::{BPhase, DecodeState, FinishState};
 
 /// Session start phase, fired at the arrival time: edge encode + draft
 /// prefill at full fidelity (no network) on the session's edge site.
-/// Transitions to per-token edge decode events. `cloud_frac` is
-/// threaded through so PerLLM's edge-landing requests carry their
-/// quality provenance. `reuse_scale` multiplies the prefill charge
-/// (< 1.0 only for dialogue follow-up turns that reuse cached prefix).
+/// Transitions to per-token edge decode events. Touches only `site` —
+/// a `StepClass::Local` step the sharded driver runs on the home
+/// shard's worker thread. `cloud_frac` is threaded through so PerLLM's
+/// edge-landing requests carry their quality provenance. `reuse_scale`
+/// multiplies the prefill charge (< 1.0 only for dialogue follow-up
+/// turns that reuse cached prefix).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn start(
-    coord: &mut Coordinator,
-    vc: &mut VirtualCluster,
+    ctx: &ServeCtx,
+    site: &mut EdgeSite,
     item: &Item,
     arrival: f64,
     edge: EdgeId,
@@ -39,37 +41,39 @@ pub(crate) fn start(
     cloud_frac: f64,
     reuse_scale: f64,
 ) -> Result<BPhase> {
-    let n_out = coord.cfg.msao.max_new_tokens;
+    let n_out = ctx.cfg.msao.max_new_tokens;
 
-    let inp = super::full_inputs(coord, item, false)?;
+    let inp = super::full_inputs(&ctx.eng, item, false)?;
     let vit = SimModel::vision_encoder();
     let draft_m = SimModel::qwen2vl_2b();
     let enc_frames = inp.frames.max(1) as f64;
     let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-    let (_, enc_end) = vc.exec(
-        Site::Edge(edge),
+    let enc_secs = site.dev.encode_s(&vit, enc_patches) * enc_frames;
+    let (_, enc_end) = site.exec(
         arrival,
-        vc.dev(Site::Edge(edge)).encode_s(&vit, enc_patches) * enc_frames,
+        enc_secs,
         vit.flops_prefill(enc_patches) * enc_frames,
+        edge,
     );
-    let (_, pre_end) = vc.exec(
-        Site::Edge(edge),
+    let pre_secs = reuse_scale * site.dev.prefill_s(&draft_m, inp.seq_paper);
+    let (_, pre_end) = site.exec(
         enc_end,
-        reuse_scale * vc.dev(Site::Edge(edge)).prefill_s(&draft_m, inp.seq_paper),
+        pre_secs,
         reuse_scale * draft_m.flops_prefill(inp.seq_paper),
+        edge,
     );
     rec.prefill_s = pre_end - arrival;
 
     let kv_gb = kv_bytes(&draft_m, inp.seq_paper + n_out as f64) / 1e9;
     let mem_bytes = kv_gb * 1e9 + activation_bytes(&draft_m, inp.seq_paper);
-    vc.edges[edge].mem.alloc(mem_bytes);
+    site.mem.alloc(mem_bytes);
 
     let pre =
-        coord.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+        ctx.eng.prefill(false, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
-        coord.eng.free_kv(false, pre.kv);
-        vc.edges[edge].mem.free(mem_bytes);
+        ctx.eng.free_kv(false, pre.kv);
+        site.mem.free(mem_bytes);
         return Ok(BPhase::Finish(FinishState {
             t_done: pre_end,
             tokens_out: 1,
@@ -98,7 +102,7 @@ pub(crate) fn start(
 /// used only by the golden equivalence tests; production serving goes
 /// through the session path above.
 pub fn serve(
-    coord: &mut Coordinator,
+    coord: &Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -108,7 +112,7 @@ pub fn serve(
     let n_out = cfg.msao.max_new_tokens;
     let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
 
-    let inp = super::full_inputs(coord, item, false)?;
+    let inp = super::full_inputs(&coord.eng, item, false)?;
     let vit = SimModel::vision_encoder();
     let draft_m = SimModel::qwen2vl_2b();
     let enc_frames = inp.frames.max(1) as f64;

@@ -9,6 +9,14 @@
 //! PJRT engines and charging the same virtual testbed, so Table 1 /
 //! Figs. 5-8 stay apples to apples.
 //!
+//! Like MSAO sessions, baseline sessions classify their steps for the
+//! sharded driver: an Edge-only start and any edge-local decode step
+//! touch only the session's home [`EdgeSite`] (`StepClass::Local`,
+//! runnable on that shard's worker thread via
+//! [`BaselineSession::step_local`]); cloud starts, the PerLLM partition
+//! decision (it reads live fleet-wide queue depths), cloud/split decode
+//! steps, and the completing finish step are Global.
+//!
 //! Each submodule also keeps its pre-refactor run-to-completion `serve`
 //! function, verbatim, as the sequential reference the golden
 //! equivalence tests pin the session decomposition against: at
@@ -22,10 +30,11 @@ pub mod perllm;
 use anyhow::Result;
 
 use crate::cluster::SimModel;
-use crate::coordinator::engines::argmax;
+use crate::coordinator::engines::{argmax, EngineCore};
 use crate::coordinator::scheduler::StepOutcome;
-use crate::coordinator::session::Coordinator;
-use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
+use crate::coordinator::session::ServeCtx;
+use crate::coordinator::sharded::StepClass;
+use crate::coordinator::timeline::{EdgeId, EdgeSite, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::runtime::engine::KvHandle;
@@ -110,8 +119,10 @@ pub(crate) enum BPhase {
 /// `next_time()` is the scheduler's sort key; `step()` advances exactly
 /// one phase / decode step. Like MSAO sessions, a baseline session is
 /// bound to one edge site of the fleet (its uplink, local compute, and
-/// memory all land there).
+/// memory all land there) and owns its serving context ([`ServeCtx`]),
+/// so shard-local steps need no shared coordinator.
 pub struct BaselineSession<'a> {
+    ctx: ServeCtx,
     item: &'a Item,
     arrival: f64,
     baseline: Baseline,
@@ -125,6 +136,7 @@ pub struct BaselineSession<'a> {
 
 impl<'a> BaselineSession<'a> {
     pub fn new(
+        ctx: &ServeCtx,
         baseline: Baseline,
         item: &'a Item,
         arrival: f64,
@@ -132,6 +144,7 @@ impl<'a> BaselineSession<'a> {
         reuse_scale: f64,
     ) -> Self {
         BaselineSession {
+            ctx: ctx.clone(),
             item,
             arrival,
             baseline,
@@ -211,19 +224,27 @@ impl<'a> BaselineSession<'a> {
         self.rec
     }
 
+    /// Classify the next step for the sharded driver. Edge-only starts
+    /// and edge-local decode steps touch only the home shard; everything
+    /// else (cloud work, the PerLLM partition decision reading fleet-wide
+    /// queue depths, split hops, the completing finish) is Global.
+    pub fn step_class(&self) -> StepClass {
+        match &self.phase {
+            BPhase::Start if self.baseline == Baseline::EdgeOnly => StepClass::Local,
+            BPhase::Decode(d) if !d.cloud => StepClass::Local,
+            _ => StepClass::Global,
+        }
+    }
+
     /// Advance one phase (or one decode step), charging the shared
     /// virtual cluster. Returns `Done` after the final bookkeeping.
-    pub fn step(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-    ) -> Result<StepOutcome> {
+    pub fn step(&mut self, vc: &mut VirtualCluster) -> Result<StepOutcome> {
         let phase = std::mem::replace(&mut self.phase, BPhase::Done);
         self.phase = match phase {
-            BPhase::Start => self.step_start(coord, vc)?,
-            BPhase::Decode(d) => step_decode(coord, vc, d)?,
-            BPhase::Split(s) => perllm::split_step(coord, vc, &mut self.rec, s)?,
-            BPhase::Finish(f) => self.step_finish(coord, vc, f)?,
+            BPhase::Start => self.step_start(vc)?,
+            BPhase::Decode(d) => step_decode(&self.ctx, vc, d)?,
+            BPhase::Split(s) => perllm::split_step(&self.ctx, vc, &mut self.rec, s)?,
+            BPhase::Finish(f) => self.step_finish(vc, f)?,
             BPhase::Done => BPhase::Done,
         };
         Ok(if matches!(self.phase, BPhase::Done) {
@@ -233,28 +254,53 @@ impl<'a> BaselineSession<'a> {
         })
     }
 
+    /// Advance one Local step against the session's home shard only —
+    /// the worker-thread entry point of the sharded driver. Local steps
+    /// never complete the session, so this always leaves a pending phase.
+    pub fn step_local(&mut self, site: &mut EdgeSite) -> Result<StepOutcome> {
+        let phase = std::mem::replace(&mut self.phase, BPhase::Done);
+        self.phase = match phase {
+            BPhase::Start if self.baseline == Baseline::EdgeOnly => edge_only::start(
+                &self.ctx,
+                site,
+                self.item,
+                self.arrival,
+                self.edge,
+                &mut self.rec,
+                0.0,
+                self.reuse_scale,
+            )?,
+            BPhase::Decode(d) if !d.cloud => step_decode_edge(&self.ctx, site, d)?,
+            _ => anyhow::bail!("baseline session {}: local step on a Global phase", self.item.id),
+        };
+        Ok(StepOutcome::Pending)
+    }
+
     // ---------------- arrival: uplink + encode + prefill ---------------
-    fn step_start(&mut self, coord: &mut Coordinator, vc: &mut VirtualCluster) -> Result<BPhase> {
+    fn step_start(&mut self, vc: &mut VirtualCluster) -> Result<BPhase> {
         let (item, t0, edge, scale) = (self.item, self.arrival, self.edge, self.reuse_scale);
+        let ctx = &self.ctx;
         match self.baseline {
             Baseline::CloudOnly => {
-                cloud_only::start(coord, vc, item, t0, edge, &mut self.rec, 1.0, scale)
+                cloud_only::start(ctx, vc, item, t0, edge, &mut self.rec, 1.0, scale)
             }
-            Baseline::EdgeOnly => {
-                edge_only::start(coord, vc, item, t0, edge, &mut self.rec, 0.0, scale)
-            }
-            Baseline::PerLlm => perllm::start(coord, vc, item, t0, edge, &mut self.rec, scale),
+            Baseline::EdgeOnly => edge_only::start(
+                ctx,
+                &mut vc.edges[edge],
+                item,
+                t0,
+                edge,
+                &mut self.rec,
+                0.0,
+                scale,
+            ),
+            Baseline::PerLlm => perllm::start(ctx, vc, item, t0, edge, &mut self.rec, scale),
         }
     }
 
     // ---------------- downlink + bookkeeping + quality ------------------
-    fn step_finish(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-        f: FinishState,
-    ) -> Result<BPhase> {
-        let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
+    fn step_finish(&mut self, vc: &mut VirtualCluster, f: FinishState) -> Result<BPhase> {
+        let bandwidth_mbps = self.ctx.cfg.network.bandwidth_mbps;
         let mut t_done = f.t_done;
         if f.downlink {
             let bytes = 4 * f.tokens_out as u64 + 64;
@@ -295,6 +341,8 @@ impl<'a> BaselineSession<'a> {
             ),
         };
         self.rec.p_correct = quality::p_correct(cap, self.item, &info);
+        // Per-item stream, independent of scheduling by construction
+        // (interleave-invariant before the per-session streams existed).
         let mut rng = Rng::seed_from_u64(self.item.id ^ seed_xor);
         self.rec.correct = quality::sample_correct(&mut rng, self.rec.p_correct);
         Ok(BPhase::Done)
@@ -303,28 +351,65 @@ impl<'a> BaselineSession<'a> {
 
 // ---------------- one single-site decode step --------------------------
 fn step_decode(
-    coord: &mut Coordinator,
+    ctx: &ServeCtx,
     vc: &mut VirtualCluster,
     mut d: Box<DecodeState>,
 ) -> Result<BPhase> {
-    let gen_off = coord.eng.c.gen_off();
-    let eos = coord.eng.c.eos();
-    let site = if d.cloud { Site::Cloud } else { Site::Edge(d.edge) };
-    let m = if d.cloud { SimModel::qwen25vl_7b() } else { SimModel::qwen2vl_2b() };
-    let lg = coord.eng.block(d.cloud, false, d.kv, gen_off + d.j, &[d.tok], d.lens)?;
-    let ctx = d.seq_paper + d.j as f64;
-    let (_, end) = vc.exec(site, d.t, vc.dev(site).decode_s(&m, ctx), m.flops_decode(ctx));
+    if !d.cloud {
+        // Same arithmetic on the same shard state as the Global path.
+        let e = d.edge;
+        return step_decode_edge(ctx, &mut vc.edges[e], d);
+    }
+    let gen_off = ctx.eng.c.gen_off();
+    let eos = ctx.eng.c.eos();
+    let m = SimModel::qwen25vl_7b();
+    let lg = ctx.eng.block(true, false, d.kv, gen_off + d.j, &[d.tok], d.lens)?;
+    let ctx_len = d.seq_paper + d.j as f64;
+    let secs = vc.dev(Site::Cloud).decode_s(&m, ctx_len);
+    let (_, end) = vc.exec(Site::Cloud, d.t, secs, m.flops_decode(ctx_len));
     d.t = end;
     d.tok = argmax(&lg);
     d.tokens_out += 1;
     d.j += 1;
     if d.tok == eos || d.j >= d.n_out - 1 {
-        coord.eng.free_kv(d.cloud, d.kv);
-        vc.mem(site).free(d.mem_bytes);
+        ctx.eng.free_kv(true, d.kv);
+        vc.cloud.mem.free(d.mem_bytes);
         return Ok(BPhase::Finish(FinishState {
             t_done: d.t,
             tokens_out: d.tokens_out,
-            downlink: d.cloud,
+            downlink: true,
+            cloud_frac: d.cloud_frac,
+        }));
+    }
+    Ok(BPhase::Decode(d))
+}
+
+/// One edge-local decode step (`!d.cloud`): draft-model block on the
+/// session's home shard only — a `StepClass::Local` step.
+fn step_decode_edge(
+    ctx: &ServeCtx,
+    site: &mut EdgeSite,
+    mut d: Box<DecodeState>,
+) -> Result<BPhase> {
+    debug_assert!(!d.cloud);
+    let gen_off = ctx.eng.c.gen_off();
+    let eos = ctx.eng.c.eos();
+    let m = SimModel::qwen2vl_2b();
+    let lg = ctx.eng.block(false, false, d.kv, gen_off + d.j, &[d.tok], d.lens)?;
+    let ctx_len = d.seq_paper + d.j as f64;
+    let secs = site.dev.decode_s(&m, ctx_len);
+    let (_, end) = site.exec(d.t, secs, m.flops_decode(ctx_len), d.edge);
+    d.t = end;
+    d.tok = argmax(&lg);
+    d.tokens_out += 1;
+    d.j += 1;
+    if d.tok == eos || d.j >= d.n_out - 1 {
+        ctx.eng.free_kv(false, d.kv);
+        site.mem.free(d.mem_bytes);
+        return Ok(BPhase::Finish(FinishState {
+            t_done: d.t,
+            tokens_out: d.tokens_out,
+            downlink: false,
             cloud_frac: d.cloud_frac,
         }));
     }
@@ -344,11 +429,10 @@ pub(crate) struct FullInputs {
 }
 
 pub(crate) fn full_inputs(
-    coord: &Coordinator,
+    eng: &EngineCore,
     item: &Item,
     cloud: bool,
 ) -> Result<FullInputs> {
-    let eng = &coord.eng;
     let c = eng.c.clone();
     let d = c.d_enc();
     let text = eng.tok.pad_to(

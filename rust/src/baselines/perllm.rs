@@ -18,7 +18,7 @@ use anyhow::Result;
 
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
-use crate::coordinator::session::Coordinator;
+use crate::coordinator::session::{Coordinator, ServeCtx};
 use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
@@ -133,7 +133,7 @@ fn pick_partition(
 /// multiplies the prefill charge on whichever path is chosen (< 1.0
 /// only for dialogue follow-up turns that reuse cached prefix).
 pub(crate) fn start(
-    coord: &mut Coordinator,
+    ctx: &ServeCtx,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -141,21 +141,28 @@ pub(crate) fn start(
     rec: &mut ExecRecord,
     reuse_scale: f64,
 ) -> Result<BPhase> {
-    let n_out = coord.cfg.msao.max_new_tokens;
+    let n_out = ctx.cfg.msao.max_new_tokens;
     // The partition decision prices the uplink/hops at the *assigned
     // edge's* base link, not the fleet-wide nominal — on heterogeneous
     // fleets the weak link must make AllCloud/Split genuinely dearer.
-    let net = coord.cfg.edge_network(edge);
+    let net = ctx.cfg.edge_network(edge);
     let bandwidth_mbps = net.bandwidth_mbps;
     let rtt_s = net.rtt_ms * 1e-3;
     match pick_partition(vc, item, n_out, bandwidth_mbps, rtt_s, edge, arrival) {
-        Partition::AllEdge => {
-            super::edge_only::start(coord, vc, item, arrival, edge, rec, 0.0, reuse_scale)
-        }
+        Partition::AllEdge => super::edge_only::start(
+            ctx,
+            &mut vc.edges[edge],
+            item,
+            arrival,
+            edge,
+            rec,
+            0.0,
+            reuse_scale,
+        ),
         Partition::AllCloud => {
-            super::cloud_only::start(coord, vc, item, arrival, edge, rec, 1.0, reuse_scale)
+            super::cloud_only::start(ctx, vc, item, arrival, edge, rec, 1.0, reuse_scale)
         }
-        Partition::Split => split_start(coord, vc, item, arrival, edge, rec, reuse_scale),
+        Partition::Split => split_start(ctx, vc, item, arrival, edge, rec, reuse_scale),
     }
 }
 
@@ -174,7 +181,7 @@ fn half_model() -> SimModel {
 /// uplink, cloud back-half prefill. Transitions to per-token hop events.
 /// `reuse_scale` multiplies both half-model prefill charges.
 fn split_start(
-    coord: &mut Coordinator,
+    ctx: &ServeCtx,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -182,9 +189,9 @@ fn split_start(
     rec: &mut ExecRecord,
     reuse_scale: f64,
 ) -> Result<BPhase> {
-    let n_out = coord.cfg.msao.max_new_tokens;
+    let n_out = ctx.cfg.msao.max_new_tokens;
 
-    let inp = super::full_inputs(coord, item, false)?;
+    let inp = super::full_inputs(&ctx.eng, item, false)?;
     let vit = SimModel::vision_encoder();
     let full_m = SimModel::qwen25vl_7b();
     let half = half_model();
@@ -220,10 +227,10 @@ fn split_start(
     vc.cloud.mem.alloc(mem_half);
 
     // Real tokens: unsplit full model on the cloud engine (identical math).
-    let pre = coord.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
+    let pre = ctx.eng.prefill(true, &inp.text, inp.tlen, &inp.vis, inp.vlen, &inp.aud, inp.alen)?;
     let tok = argmax(&pre.logits);
     if n_out <= 1 {
-        coord.eng.free_kv(true, pre.kv);
+        ctx.eng.free_kv(true, pre.kv);
         vc.edges[edge].mem.free(mem_half);
         vc.cloud.mem.free(mem_half);
         return Ok(BPhase::Finish(FinishState {
@@ -251,32 +258,32 @@ fn split_start(
 /// back half, token hop down (the PerLLM fallback when both devices are
 /// loaded).
 pub(crate) fn split_step(
-    coord: &mut Coordinator,
+    ctx: &ServeCtx,
     vc: &mut VirtualCluster,
     rec: &mut ExecRecord,
     mut s: Box<SplitState>,
 ) -> Result<BPhase> {
-    let gen_off = coord.eng.c.gen_off();
-    let eos = coord.eng.c.eos();
+    let gen_off = ctx.eng.c.gen_off();
+    let eos = ctx.eng.c.eos();
     let full_m = SimModel::qwen25vl_7b();
     let half = half_model();
     let act_bytes = (full_m.d * 2.0) as u64;
 
-    let lg = coord.eng.block(true, false, s.kv, gen_off + s.j, &[s.tok], s.lens)?;
-    let ctx = s.seq_paper + s.j as f64;
+    let lg = ctx.eng.block(true, false, s.kv, gen_off + s.j, &[s.tok], s.lens)?;
+    let ctx_len = s.seq_paper + s.j as f64;
     let (_, fe) = vc.exec(
         Site::Edge(s.edge),
         s.t,
-        vc.dev(Site::Edge(s.edge)).decode_s(&half, ctx),
-        half.flops_decode(ctx),
+        vc.dev(Site::Edge(s.edge)).decode_s(&half, ctx_len),
+        half.flops_decode(ctx_len),
     );
     let (_, ua) = vc.send_up(s.edge, fe, act_bytes, false);
     rec.bytes_up += act_bytes;
     let (_, ce) = vc.exec(
         Site::Cloud,
         ua,
-        vc.dev(Site::Cloud).decode_s(&half, ctx),
-        half.flops_decode(ctx),
+        vc.dev(Site::Cloud).decode_s(&half, ctx_len),
+        half.flops_decode(ctx_len),
     );
     let (_, da) = vc.send_down(s.edge, ce, 16, false);
     rec.bytes_down += 16;
@@ -285,7 +292,7 @@ pub(crate) fn split_step(
     s.tokens_out += 1;
     s.j += 1;
     if s.tok == eos || s.j >= s.n_out - 1 {
-        coord.eng.free_kv(true, s.kv);
+        ctx.eng.free_kv(true, s.kv);
         vc.edges[s.edge].mem.free(s.mem_half);
         vc.cloud.mem.free(s.mem_half);
         return Ok(BPhase::Finish(FinishState {
@@ -303,7 +310,7 @@ pub(crate) fn split_step(
 /// used only by the golden equivalence tests; production serving goes
 /// through the session path above.
 pub fn serve(
-    coord: &mut Coordinator,
+    coord: &Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -344,7 +351,7 @@ fn patch_quality(rec: &mut ExecRecord, item: &Item, cfg: &crate::config::Config,
 /// Mid-split execution: per-token activation hops (the PerLLM fallback
 /// when both devices are loaded).
 fn serve_split(
-    coord: &mut Coordinator,
+    coord: &Coordinator,
     vc: &mut VirtualCluster,
     item: &Item,
     arrival: f64,
@@ -354,7 +361,7 @@ fn serve_split(
     let n_out = cfg.msao.max_new_tokens;
     let mut rec = ExecRecord { request_id: item.id, t_arrival: arrival, ..Default::default() };
 
-    let inp = super::full_inputs(coord, item, false)?;
+    let inp = super::full_inputs(&coord.eng, item, false)?;
     let vit = SimModel::vision_encoder();
     let full_m = SimModel::qwen25vl_7b();
     let mut half = full_m;

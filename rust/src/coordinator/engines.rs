@@ -4,6 +4,8 @@
 //! that speaks raw `HostTensor` to the engines; everything above deals in
 //! tokens, entropies and probe outputs.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::engine::{Arg, HostTensor, KvHandle, OutPlan};
@@ -31,14 +33,35 @@ pub const CLOUD_GRAPHS: [&str; 5] = [
     "full_verify",
 ];
 
-pub struct Engines {
+/// Cheap, cloneable bundle of everything needed to *issue* inference
+/// calls: the two site-actor senders, the manifest constants, and the
+/// tokenizer. Every method takes `&self` — the engines are immutable
+/// after [`Engines::start`] — so a clone of this handle can be owned by
+/// each session and used from any worker thread (the site actors
+/// serialize execution; concurrent callers just queue). [`Engines`]
+/// derefs to this, so `coord.eng.prefill(..)` keeps working unchanged.
+#[derive(Clone)]
+pub struct EngineCore {
     pub edge: SiteHandle,
     pub cloud: SiteHandle,
-    pub c: Constants,
+    pub c: Arc<Constants>,
     pub tok: Tokenizer,
+}
+
+/// The owning side: the engine core plus the site threads themselves
+/// (dropping this shuts the actors down) and the full manifest.
+pub struct Engines {
+    core: EngineCore,
     pub manifest: Manifest,
     _edge_thread: SiteThread,
     _cloud_thread: SiteThread,
+}
+
+impl std::ops::Deref for Engines {
+    type Target = EngineCore;
+    fn deref(&self) -> &EngineCore {
+        &self.core
+    }
 }
 
 /// Output of a vision-encoder call.
@@ -66,16 +89,25 @@ impl Engines {
         let edge_t = SiteThread::spawn("edge", &manifest, &EDGE_GRAPHS)?;
         let cloud_t = SiteThread::spawn("cloud", &manifest, &CLOUD_GRAPHS)?;
         Ok(Engines {
-            edge: edge_t.handle.clone(),
-            cloud: cloud_t.handle.clone(),
-            c: manifest.constants.clone(),
-            tok: Tokenizer::new(),
+            core: EngineCore {
+                edge: edge_t.handle.clone(),
+                cloud: cloud_t.handle.clone(),
+                c: Arc::new(manifest.constants.clone()),
+                tok: Tokenizer::new(),
+            },
             manifest,
             _edge_thread: edge_t,
             _cloud_thread: cloud_t,
         })
     }
 
+    /// A session-ownable clone of the call handles (see [`EngineCore`]).
+    pub fn core(&self) -> EngineCore {
+        self.core.clone()
+    }
+}
+
+impl EngineCore {
     fn site(&self, cloud: bool) -> &SiteHandle {
         if cloud {
             &self.cloud

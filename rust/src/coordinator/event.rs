@@ -123,6 +123,22 @@ fn fnv_fold(mut h: u64, word: u64) -> u64 {
     h
 }
 
+/// Starting value for a per-request lane digest (see [`lane_observe`]).
+pub const LANE_START: u64 = FNV_OFFSET;
+
+/// Fold one step of request `index` at canonicalized event `time` into a
+/// lane digest the *session itself* carries. In the sharded driver a
+/// request's steps alternate between its home-shard worker (local steps)
+/// and the sync thread (global steps); because the order-sensitive lane
+/// travels with the session, the digest is identical to the sequential
+/// driver's no matter which thread folded each step. Finished lanes are
+/// folded into a [`SeqHash`] with [`SeqHash::absorb`].
+#[inline]
+pub fn lane_observe(lane: &mut u64, index: usize, time: f64) {
+    *lane = fnv_fold(*lane, index as u64);
+    *lane = fnv_fold(*lane, canonical_time(time).to_bits());
+}
+
 impl SeqHash {
     pub fn new() -> Self {
         SeqHash::default()
@@ -134,10 +150,27 @@ impl SeqHash {
         if self.lanes.len() <= index {
             self.lanes.resize(index + 1, FNV_OFFSET);
         }
-        let lane = &mut self.lanes[index];
-        *lane = fnv_fold(*lane, index as u64);
-        *lane = fnv_fold(*lane, canonical_time(time).to_bits());
+        lane_observe(&mut self.lanes[index], index, time);
         self.events += 1;
+    }
+
+    /// Install request `index`'s finished lane digest (built step by
+    /// step with [`lane_observe`]) and account its `steps` events.
+    pub fn absorb(&mut self, index: usize, lane: u64, steps: u64) {
+        if self.lanes.len() <= index {
+            self.lanes.resize(index + 1, FNV_OFFSET);
+        }
+        self.lanes[index] = lane;
+        self.events += steps;
+    }
+
+    /// Pre-size the lane table to `n` requests so requests that never
+    /// step still contribute their offset basis to the digest (pinning
+    /// *which* requests ran) regardless of absorb order.
+    pub fn reserve_requests(&mut self, n: usize) {
+        if self.lanes.len() < n {
+            self.lanes.resize(n, FNV_OFFSET);
+        }
     }
 
     /// Fold the per-request digests into one fingerprint. Requests that
@@ -243,6 +276,34 @@ mod tests {
         let mut c = SeqHash::new();
         c.observe(1, 1.0);
         assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn absorbed_lanes_reproduce_observe() {
+        // Session-carried lanes folded in any absorb order must match
+        // the driver-side observe path bit for bit — the property that
+        // makes the sharded real-serve events_hash comparable.
+        let mut a = SeqHash::new();
+        a.observe(0, 1.0);
+        a.observe(1, 2.0);
+        a.observe(0, 3.0);
+        let mut lane0 = LANE_START;
+        lane_observe(&mut lane0, 0, 1.0);
+        lane_observe(&mut lane0, 0, 3.0);
+        let mut lane1 = LANE_START;
+        lane_observe(&mut lane1, 1, 2.0);
+        let mut b = SeqHash::new();
+        b.absorb(1, lane1, 1); // out of order on purpose
+        b.absorb(0, lane0, 2);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.events, b.events);
+        // reserve_requests pins never-stepped requests the same way the
+        // observe path's resize does.
+        let mut c = SeqHash::new();
+        c.reserve_requests(2);
+        c.absorb(0, lane0, 2);
+        c.absorb(1, lane1, 1);
+        assert_eq!(a.digest(), c.digest());
     }
 
     #[test]

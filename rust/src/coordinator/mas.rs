@@ -15,7 +15,7 @@ use crate::runtime::engine::HostTensor;
 use crate::sparsity::{self, MasInputs, Modality, ModalityMas};
 use crate::workload::generator::{Item, N_FRAMES};
 
-use super::engines::{Engines, PruneOut};
+use super::engines::{EngineCore, PruneOut};
 
 /// Everything the planner and session need from the probe phase.
 pub struct ProbeOutcome {
@@ -80,8 +80,10 @@ pub fn probe_cost(
     (secs, flops, mem_gb)
 }
 
-/// Run the probe phase for `item` on the edge engine.
-pub fn run_probe(eng: &Engines, cfg: &MsaoCfg, item: &Item) -> Result<ProbeOutcome> {
+/// Run the probe phase for `item` on the edge engine. Takes the
+/// cloneable engine handle bundle so shard-local (worker-thread) probe
+/// steps need no access to the shared [`super::engines::Engines`].
+pub fn run_probe(eng: &EngineCore, cfg: &MsaoCfg, item: &Item) -> Result<ProbeOutcome> {
     let c = &eng.c;
     let present = item.present_mask();
     let mut pooled4 = vec![0f32; 4 * c.d_enc()];

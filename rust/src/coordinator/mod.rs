@@ -30,12 +30,20 @@
 //! materialized linear-scan path as the golden reference.
 //!
 //! Simulation itself can be parallel: [`sharded`] runs one event loop
-//! per edge site on worker threads with the shared cloud as the only
-//! synchronization point (conservative lookahead over the per-shard
-//! heap horizons), reproducing the sequential driver bit for bit for
-//! every worker count — `TraceSpec::workers` / `serve.workers` /
-//! `--workers` select it ([`event`] holds the shared event-key and
-//! sequence-hash machinery both drivers use).
+//! per edge site on a persistent pool of worker threads with the shared
+//! cloud as the only synchronization point (conservative lookahead over
+//! the per-shard heap horizons), reproducing the sequential driver bit
+//! for bit for every worker count — `TraceSpec::workers` /
+//! `serve.workers` / `--workers` select it ([`event`] holds the shared
+//! event-key and sequence-hash machinery both drivers use). Serving
+//! state is de-globalized so this pays off on `serve` itself: sessions
+//! own a cloneable engine-handle bundle ([`session::ServeCtx`]) and a
+//! per-request RNG stream ([`session::session_seed`]), each
+//! [`EdgeSite`] owns its theta controller and verify batcher, and the
+//! edge-side phases (probe, plan + edge prefill + uplink, draft rounds,
+//! edge decode) are classified [`StepClass::Local`] — they run on the
+//! home shard's worker while cloud verify/decode, routing, admission,
+//! and completion stay globally ordered.
 
 pub mod batcher;
 pub mod engines;
@@ -51,7 +59,7 @@ pub mod speculative;
 pub mod timeline;
 
 pub use batcher::Batcher;
-pub use engines::Engines;
+pub use engines::{EngineCore, Engines};
 pub use event::SeqHash;
 pub use planner::Plan;
 pub use policy::{
@@ -59,6 +67,6 @@ pub use policy::{
 };
 pub use scheduler::StepOutcome;
 pub use server::{serve, serve_materialized_ref, EdgeTraceStats, TraceResult};
-pub use session::{Coordinator, Mode, Session};
+pub use session::{session_seed, Coordinator, Mode, ServeCtx, Session};
 pub use sharded::{drive_sharded, Sequentialized, ShardedSource, StepClass};
 pub use timeline::{edge_seed, CloudDevice, EdgeId, EdgeSite, Site, VirtualCluster};

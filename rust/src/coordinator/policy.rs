@@ -352,7 +352,7 @@ pub fn testbed(cfg: &Config, seed: u64, profile: &ResidentProfile) -> VirtualClu
 ///     .trace(items, arrivals)
 ///     .seed(42)
 ///     .concurrency(8);
-/// let result = serve(&mut coord, &spec)?;
+/// let result = serve(&coord, &spec)?;
 /// ```
 #[derive(Debug, Clone)]
 pub struct TraceSpec {

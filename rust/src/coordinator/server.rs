@@ -7,8 +7,9 @@
 //! Every request — MSAO and baseline alike — is a resumable session
 //! state machine whose phases are anchored at virtual-time events:
 //!
-//! * MSAO sessions ([`Session`]): probe → plan + dual prefill →
-//!   draft/verify rounds (or cloud-direct decode steps) → downlink.
+//! * MSAO sessions ([`Session`]): probe → plan + edge prefill + uplink →
+//!   cloud prefill → draft/verify rounds (or cloud-direct decode steps)
+//!   → downlink.
 //! * Baseline sessions ([`BaselineSession`]): arrival (uplink + encode +
 //!   prefill) → per-token decode steps (per-token edge→cloud hops for
 //!   the PerLLM mid-split) → downlink.
@@ -35,7 +36,7 @@
 //! ([`serve_materialized_ref`], the pre-streaming path kept as the
 //! golden reference).
 //!
-//! # Fleet routing
+//! # Fleet routing and per-edge adaptive state
 //!
 //! Each session is bound to one edge site by the spec's
 //! [`Assign`] strategy: `Pinned`/`RoundRobin` are resolved by request
@@ -45,8 +46,12 @@
 //! truth, and it reads them at the moment every earlier event has been
 //! charged). A session's probe/draft/uplink/memory land on its edge;
 //! all verify/decode cloud work contends on the one shared cloud
-//! device. Each edge's uplink has its own verify [`Batcher`] window, so
-//! only rounds sharing a link can coalesce into one exchange.
+//! device. The adaptive serving state is *per edge*, owned by the
+//! [`EdgeSite`]: each edge has its own speculation-threshold
+//! [`crate::optimizer::ThetaController`] (seeded from the coordinator's
+//! calibration) and its own verify-batch window, so only rounds sharing
+//! a link can coalesce into one exchange and one edge's entropy mix
+//! never perturbs another's threshold.
 //!
 //! At `concurrency == 1` on a fleet of one, the loop degenerates to
 //! sequential run-to-completion FCFS and reproduces the pre-refactor
@@ -81,32 +86,54 @@
 //! # Parallel simulation (`--workers N`)
 //!
 //! With `TraceSpec::workers >= 2` (or `serve.workers`), the trace runs
-//! through the sharded driver ([`super::sharded::drive_sharded`]) via
-//! a private sharded adapter. Every real serving step is classified Global —
-//! each session phase calls the PJRT engines and touches the shared
-//! RNG/theta/cloud — so on this path the protocol degenerates to the
-//! sequential global order and the results are bit-for-bit identical
-//! by construction (pinned by the engine-backed goldens). Sources with
-//! genuinely edge-local steps (the synthetic fleet cell in
-//! `benches/substrate.rs`) are where the worker threads buy wall-clock
-//! speedup; here the knob exercises the same protocol end to end.
+//! through the sharded driver ([`super::sharded::drive_sharded`]):
+//! every session step is classified ([`StepClass`]) by what it touches.
+//! Edge-side phases — the modality probe, planning + edge prefill +
+//! uplink prep, and speculative draft rounds (MSAO); edge-only starts
+//! and edge decode steps (baselines) — touch only the session and its
+//! home [`EdgeSite`], so they run **Local** on that shard's worker
+//! thread. Cloud prefill/verify/decode, PerLLM partition picks,
+//! `LeastLoaded` routing, SLO admission, and completion run **Global**
+//! on the driver thread in exact sequential event order.
+//!
+//! Nothing about the *values* depends on the worker count:
+//!
+//! * Sessions are self-contained. Each owns a cloneable engine-handle
+//!   bundle ([`ServeCtx`]) and an RNG stream salted from
+//!   `(trace seed, request index)` ([`session_seed`]), so a session's
+//!   engine calls and quality draws are identical under any scheduler
+//!   interleave.
+//! * The per-request event fingerprint travels *with* the session
+//!   ([`lane_observe`]): local steps fold it on the worker thread,
+//!   global steps on the driver, and finished lanes fold into the
+//!   trace [`SeqHash`] order-insensitively — the `events_hash` is
+//!   bitwise equal across drivers and worker counts.
+//! * Cross-shard couplings (cloud execs broadcasting queue-wait
+//!   observations into every edge's monitor; routing reading those
+//!   beliefs) are ordered by the conservative lookahead window — see
+//!   [`ShardedSource::global_reads_shards`].
+//!
+//! The result: `workers >= 2` buys real wall-clock speedup on
+//! `msao serve` itself (the `serve_parallel` bench section measures the
+//! curve) while records and `events_hash` stay bit-for-bit identical
+//! to `--workers 1` — the load-bearing invariant, pinned by the
+//! sharded-serve property suite.
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::baselines::{Baseline, BaselineSession};
 use crate::cluster::{NetEstimate, Site};
 use crate::config::Config;
 use crate::metrics::ExecRecord;
-use crate::optimizer::ThetaController;
 use crate::workload::Item;
 
 use super::batcher::Batcher;
-use super::event::SeqHash;
+use super::event::{lane_observe, SeqHash, LANE_START};
 use super::policy::{self, Assign, PolicyKind, Sched, SloClass, TraceSpec};
 use super::scheduler::{self, SessionSource, StepOutcome};
-use super::session::{Coordinator, Session};
+use super::session::{session_seed, Coordinator, ServeCtx, Session};
 use super::sharded::{drive_sharded, ShardedSource, StepClass};
 use super::timeline::{EdgeSite, VirtualCluster};
 
@@ -166,44 +193,69 @@ pub struct TraceResult {
     pub events_per_s: f64,
 }
 
-/// One admitted request under whichever policy its spec assigns.
-enum AnySession<'a> {
+enum Inner<'a> {
     Msao(Session<'a>),
     Baseline(BaselineSession<'a>),
 }
 
+/// One admitted request under whichever policy its spec assigns, plus
+/// the driver-independent bookkeeping that must travel with it across
+/// worker/driver-thread handoffs: the order-sensitive event-lane
+/// digest, its step count, its request index, and whether its arrival
+/// event is pinned Global (fleet-wide routing/admission reads).
+struct AnySession<'a> {
+    inner: Inner<'a>,
+    /// Per-request event digest ([`lane_observe`]); folded into the
+    /// trace [`SeqHash`] at finish.
+    lane: u64,
+    steps: u64,
+    index: usize,
+    /// `LeastLoaded` routing / SLO admission read fleet-wide state at
+    /// the arrival instant, so the arrival event must run on the
+    /// driver thread even for phases that are otherwise shard-local.
+    arrive_global: bool,
+}
+
 impl<'a> AnySession<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
+        ctx: &ServeCtx,
         policy: &PolicyKind,
         item: &'a Item,
         arrival: f64,
         edge: usize,
         reuse_discount: f64,
+        rng_seed: u64,
+        index: usize,
+        arrive_global: bool,
     ) -> Self {
         // Dialogue follow-up turns reuse the prior turn's prefill state:
         // LLM prefill time/FLOPs scale by 1 - discount. First turns (and
         // every request of a non-dialogue trace) keep scale 1.0, an
         // exact multiplicative no-op.
         let reuse_scale = if item.prior_turns > 0 { 1.0 - reuse_discount } else { 1.0 };
-        match policy {
+        let inner = match policy {
             PolicyKind::Msao(mode) => {
-                AnySession::Msao(Session::new(item, arrival, *mode, edge, reuse_scale))
+                Inner::Msao(Session::new(ctx, item, arrival, *mode, edge, reuse_scale, rng_seed))
             }
-            PolicyKind::CloudOnly => AnySession::Baseline(BaselineSession::new(
+            PolicyKind::CloudOnly => Inner::Baseline(BaselineSession::new(
+                ctx,
                 Baseline::CloudOnly,
                 item,
                 arrival,
                 edge,
                 reuse_scale,
             )),
-            PolicyKind::EdgeOnly => AnySession::Baseline(BaselineSession::new(
+            PolicyKind::EdgeOnly => Inner::Baseline(BaselineSession::new(
+                ctx,
                 Baseline::EdgeOnly,
                 item,
                 arrival,
                 edge,
                 reuse_scale,
             )),
-            PolicyKind::PerLlm => AnySession::Baseline(BaselineSession::new(
+            PolicyKind::PerLlm => Inner::Baseline(BaselineSession::new(
+                ctx,
                 Baseline::PerLlm,
                 item,
                 arrival,
@@ -211,89 +263,108 @@ impl<'a> AnySession<'a> {
                 reuse_scale,
             )),
             PolicyKind::PerRequest(_) => unreachable!("validate() rejects nested PerRequest"),
-        }
+        };
+        AnySession { inner, lane: LANE_START, steps: 0, index, arrive_global }
     }
 
     fn set_edge(&mut self, edge: usize) {
-        match self {
-            AnySession::Msao(s) => s.set_edge(edge),
-            AnySession::Baseline(b) => b.set_edge(edge),
+        match &mut self.inner {
+            Inner::Msao(s) => s.set_edge(edge),
+            Inner::Baseline(b) => b.set_edge(edge),
         }
     }
 
     /// Reject at admission: completes immediately with a `shed` record.
     fn shed(&mut self) {
-        match self {
-            AnySession::Msao(s) => s.shed(),
-            AnySession::Baseline(b) => b.shed(),
+        match &mut self.inner {
+            Inner::Msao(s) => s.shed(),
+            Inner::Baseline(b) => b.shed(),
         }
     }
 
     /// Downgrade to the degraded service level (MSAO shrinks its
     /// speculative budget; baselines mark the record).
     fn degrade(&mut self) {
-        match self {
-            AnySession::Msao(s) => s.degrade(),
-            AnySession::Baseline(b) => b.degrade(),
+        match &mut self.inner {
+            Inner::Msao(s) => s.degrade(),
+            Inner::Baseline(b) => b.degrade(),
         }
     }
 
     /// Still waiting at its arrival event (routing may still change).
     fn is_unstarted(&self) -> bool {
-        match self {
-            AnySession::Msao(s) => s.is_unstarted(),
-            AnySession::Baseline(b) => b.is_unstarted(),
+        match &self.inner {
+            Inner::Msao(s) => s.is_unstarted(),
+            Inner::Baseline(b) => b.is_unstarted(),
         }
     }
 
     fn next_time(&self) -> f64 {
-        match self {
-            AnySession::Msao(s) => s.next_time(),
-            AnySession::Baseline(b) => b.next_time(),
+        match &self.inner {
+            Inner::Msao(s) => s.next_time(),
+            Inner::Baseline(b) => b.next_time(),
         }
     }
 
-    fn step(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-        batchers: &mut [Batcher],
-        theta: &mut ThetaController,
-    ) -> Result<StepOutcome> {
-        match self {
-            AnySession::Msao(s) => s.step(coord, vc, batchers, theta),
-            AnySession::Baseline(b) => b.step(coord, vc),
+    /// Fold the event about to run into the session-carried lane digest
+    /// — called exactly once per step, on whichever thread runs it.
+    fn observe(&mut self) {
+        lane_observe(&mut self.lane, self.index, self.next_time());
+        self.steps += 1;
+    }
+
+    /// May the next step run on the home shard's worker thread?
+    fn step_class(&self) -> StepClass {
+        if self.arrive_global && self.is_unstarted() {
+            return StepClass::Global;
+        }
+        match &self.inner {
+            Inner::Msao(s) => s.step_class(),
+            Inner::Baseline(b) => b.step_class(),
+        }
+    }
+
+    fn step(&mut self, vc: &mut VirtualCluster) -> Result<StepOutcome> {
+        match &mut self.inner {
+            Inner::Msao(s) => s.step(vc),
+            Inner::Baseline(b) => b.step(vc),
+        }
+    }
+
+    /// Advance one shard-local step against the session's home edge.
+    fn step_local(&mut self, site: &mut EdgeSite) -> Result<StepOutcome> {
+        match &mut self.inner {
+            Inner::Msao(s) => s.step_local(site),
+            Inner::Baseline(b) => b.step_local(site),
         }
     }
 
     fn into_record(self) -> ExecRecord {
-        match self {
-            AnySession::Msao(s) => s.into_record(),
-            AnySession::Baseline(b) => b.into_record(),
+        match self.inner {
+            Inner::Msao(s) => s.into_record(),
+            Inner::Baseline(b) => b.into_record(),
         }
     }
 
     /// The session's current home edge (its shard under the sharded
     /// driver; tracks `LeastLoaded` re-routing at the arrival event).
     fn edge(&self) -> usize {
-        match self {
-            AnySession::Msao(s) => s.edge(),
-            AnySession::Baseline(b) => b.edge(),
+        match &self.inner {
+            Inner::Msao(s) => s.edge(),
+            Inner::Baseline(b) => b.edge(),
         }
     }
 }
 
 /// Everything one in-flight trace needs, behind the single `&mut` the
 /// streaming driver hands back on every admit/step/finish: the
-/// coordinator (engines + RNG), the fleet testbed, the per-edge verify
-/// batchers, the shared theta controller, and the records buffer
-/// finished sessions fold into.
-struct ServeSource<'s, 'c> {
-    coord: &'c mut Coordinator,
+/// cloneable engine/config context sessions are built from, the fleet
+/// testbed (whose edges own their theta controllers and verify
+/// batchers), and the records buffer finished sessions fold into.
+struct ServeSource<'s> {
+    ctx: ServeCtx,
     spec: &'s TraceSpec,
     vc: VirtualCluster,
-    batchers: Vec<Batcher>,
-    theta: ThetaController,
     n_edges: usize,
     /// `LeastLoaded` routes at the arrival event; static assignments
     /// are already resolved at admission.
@@ -304,13 +375,16 @@ struct ServeSource<'s, 'c> {
     /// SLO admission control: at the arrival event, consult the routed
     /// edge's monitor and shed/degrade requests predicted to miss.
     admission: bool,
+    /// Arrival events read fleet-wide state (routing and/or admission),
+    /// so they must run Global under the sharded driver.
+    arrive_global: bool,
     records: Vec<Option<ExecRecord>>,
-    /// Event-sequence fingerprint + event count, fed pre-step so both
-    /// drivers hash the exact event stream they executed.
+    /// Event count + fingerprint; lanes are carried by the sessions and
+    /// absorbed here at finish, so both drivers produce the same hash.
     seq: SeqHash,
 }
 
-impl<'s> SessionSource for ServeSource<'s, '_> {
+impl<'s> SessionSource for ServeSource<'s> {
     type Session = AnySession<'s>;
 
     /// Build request `i` lazily from the spec. Static edge assignments
@@ -321,11 +395,15 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
     fn admit(&mut self, i: usize) -> Result<AnySession<'s>> {
         let edge = self.spec.assign.static_pick(i, self.n_edges).unwrap_or(0);
         Ok(AnySession::new(
+            &self.ctx,
             self.spec.policy.for_request(i),
             &self.spec.items[i],
             self.spec.arrivals[i],
             edge,
             self.spec.reuse_discount,
+            session_seed(self.spec.seed, i),
+            i,
+            self.arrive_global,
         ))
     }
 
@@ -348,7 +426,7 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
     }
 
     fn step(&mut self, i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
-        self.seq.observe(i, s.next_time());
+        s.observe();
         if self.route_at_arrival && s.is_unstarted() {
             s.set_edge(policy::least_loaded(&self.vc));
         }
@@ -380,51 +458,52 @@ impl<'s> SessionSource for ServeSource<'s, '_> {
                 }
             }
         }
-        s.step(self.coord, &mut self.vc, &mut self.batchers, &mut self.theta)
+        s.step(&mut self.vc)
     }
 
     fn finish(&mut self, i: usize, s: AnySession<'s>) -> Result<()> {
+        self.seq.absorb(s.index, s.lane, s.steps);
         self.records[i] = Some(s.into_record());
         Ok(())
     }
 }
 
-/// Shared setup for both serve paths: fleet testbed, per-edge verify
-/// batchers, theta controller, concurrency cap.
-fn prepare<'s, 'c>(
-    coord: &'c mut Coordinator,
-    spec: &'s TraceSpec,
-) -> Result<(ServeSource<'s, 'c>, usize)> {
+/// Shared setup for both serve paths: fleet testbed (each edge's theta
+/// controller seeded from the coordinator's calibration, each edge's
+/// verify batcher from the serve config), session-construction context,
+/// concurrency cap.
+fn prepare<'s>(coord: &Coordinator, spec: &'s TraceSpec) -> Result<(ServeSource<'s>, usize)> {
     spec.validate()?;
     let cfg: Config = coord.cfg.clone();
-    let vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
+    let mut vc = policy::testbed(&cfg, spec.seed, &spec.resident_profile());
     let n_edges = vc.n_edges();
     spec.assign.validate(n_edges)?;
-    let batchers: Vec<Batcher> = (0..n_edges)
-        .map(|_| {
-            Batcher::new(
-                cfg.serve.batch_wait_ms,
-                cfg.serve.verify_batch,
-                spec.policy.collaborative(),
-            )
-        })
-        .collect();
-    let theta = coord.theta();
+    for e in vc.edges.iter_mut() {
+        e.theta = coord.theta();
+        e.batcher = Batcher::new(
+            cfg.serve.batch_wait_ms,
+            cfg.serve.verify_batch,
+            spec.policy.collaborative(),
+        );
+    }
     let concurrency = spec.effective_concurrency(&cfg);
     let n = spec.items.len();
+    let mut seq = SeqHash::new();
+    seq.reserve_requests(n);
+    let route_at_arrival = matches!(spec.assign, Assign::LeastLoaded);
+    let admission = spec.admission;
     Ok((
         ServeSource {
-            coord,
+            ctx: coord.ctx(),
             spec,
             vc,
-            batchers,
-            theta,
             n_edges,
-            route_at_arrival: matches!(spec.assign, Assign::LeastLoaded),
+            route_at_arrival,
             edf: spec.effective_sched(&cfg) == Sched::Edf,
-            admission: spec.admission,
+            admission,
+            arrive_global: route_at_arrival || admission,
             records: (0..n).map(|_| None).collect(),
-            seq: SeqHash::new(),
+            seq,
         },
         concurrency,
     ))
@@ -444,15 +523,16 @@ fn fleet_mean_cloud_wait(vc: &VirtualCluster) -> f64 {
 }
 
 /// Sharded adapter over [`ServeSource`]: shards are the fleet's
-/// [`EdgeSite`]s, every session step is Global (see the module docs),
-/// and admission/stepping/finishing delegate to the exact same
-/// [`SessionSource`] logic the sequential driver runs — one behavior,
-/// two drivers.
-struct ShardedServe<'s, 'c> {
-    src: ServeSource<'s, 'c>,
+/// [`EdgeSite`]s (each owning its theta controller and verify batcher);
+/// probe / plan+prefill+uplink / draft steps run Local on the home
+/// shard's worker, cloud/routing/admission/completion steps run Global
+/// through the exact same [`SessionSource`] logic the sequential driver
+/// runs — one behavior, two drivers.
+struct ShardedServe<'s> {
+    src: ServeSource<'s>,
 }
 
-impl<'s> ShardedSource for ShardedServe<'s, '_> {
+impl<'s> ShardedSource for ShardedServe<'s> {
     type Session = AnySession<'s>;
     type Shard = EdgeSite;
 
@@ -461,10 +541,13 @@ impl<'s> ShardedSource for ShardedServe<'s, '_> {
     }
 
     fn global_reads_shards(&self) -> bool {
-        // `LeastLoaded` reads every edge's monitor at the arrival
-        // event; moot while all steps are Global, but declared so the
-        // protocol stays correct if local classification ever lands.
-        self.src.route_at_arrival
+        // Always windowed: cloud execs broadcast queue-wait
+        // observations into *every* edge's monitor (a cross-shard write
+        // from a Global step), and shard-local routing decisions read
+        // the home edge's belief about the cloud — so Global and Local
+        // steps are coupled through the monitors even before
+        // `LeastLoaded` routing or SLO admission add fleet-wide reads.
+        true
     }
 
     fn admit(&mut self, i: usize) -> Result<(AnySession<'s>, Option<usize>)> {
@@ -481,10 +564,8 @@ impl<'s> ShardedSource for ShardedServe<'s, '_> {
         SessionSource::deadline(&self.src, i)
     }
 
-    fn step_class(_s: &AnySession<'s>) -> StepClass {
-        // Every real phase calls the engines and touches the shared
-        // RNG/theta/cloud, so nothing is provably edge-local yet.
-        StepClass::Global
+    fn step_class(s: &AnySession<'s>) -> StepClass {
+        s.step_class()
     }
 
     fn with_shards<R>(&mut self, f: impl FnOnce(&mut [EdgeSite]) -> R) -> R {
@@ -492,8 +573,9 @@ impl<'s> ShardedSource for ShardedServe<'s, '_> {
         f(edges)
     }
 
-    fn step_local(_shard: &mut EdgeSite, _s: &mut AnySession<'s>) -> Result<StepOutcome> {
-        bail!("serving sessions classify every step Global; no local step can be scheduled")
+    fn step_local(shard: &mut EdgeSite, s: &mut AnySession<'s>) -> Result<StepOutcome> {
+        s.observe();
+        s.step_local(shard)
     }
 
     fn step_global(&mut self, i: usize, s: &mut AnySession<'s>) -> Result<StepOutcome> {
@@ -511,16 +593,17 @@ impl<'s> ShardedSource for ShardedServe<'s, '_> {
 
 /// Fold the finished testbed + records into the end-of-trace view.
 /// `wall_clock_s` is the measured drive time (real seconds).
-fn collect(src: ServeSource<'_, '_>, wall_clock_s: f64) -> TraceResult {
-    let ServeSource { vc, batchers, records, seq, .. } = src;
+fn collect(src: ServeSource<'_>, wall_clock_s: f64) -> TraceResult {
+    let ServeSource { vc, records, seq, .. } = src;
     let records: Vec<ExecRecord> = records
         .into_iter()
         .enumerate()
         .map(|(i, r)| r.unwrap_or_else(|| panic!("session {i} never finished")))
         .collect();
-    let (piggy, windows) = batchers
+    let (piggy, windows) = vc
+        .edges
         .iter()
-        .fold((0u64, 0u64), |(p, w), b| (p + b.piggybacked, w + b.windows_opened));
+        .fold((0u64, 0u64), |(p, w), e| (p + e.batcher.piggybacked, w + e.batcher.windows_opened));
     let amortization = Batcher::ratio(piggy, windows);
     let per_edge: Vec<EdgeTraceStats> = vc
         .edges
@@ -563,9 +646,10 @@ fn collect(src: ServeSource<'_, '_>, wall_clock_s: f64) -> TraceResult {
 ///
 /// `TraceSpec::workers` (default: the `serve.workers` config knob)
 /// selects the driver: 1 = the sequential event-heap stream, >= 2 = the
-/// sharded per-edge driver with a conservative cloud-sync window. The
+/// sharded per-edge driver with a conservative cloud-sync window and a
+/// persistent worker pool running the edge-local steps in parallel. The
 /// results are bit-for-bit identical either way.
-pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+pub fn serve(coord: &Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
     let workers = spec.effective_workers(&coord.cfg);
     let (src, concurrency) = prepare(coord, spec)?;
     let n = spec.items.len();
@@ -589,7 +673,7 @@ pub fn serve(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
 /// the streaming path is pinned against bit for bit, and as the
 /// baseline the e2e scaling bench measures against. O(trace) resident
 /// sessions, O(active) per event — do not use for large traces.
-pub fn serve_materialized_ref(coord: &mut Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
+pub fn serve_materialized_ref(coord: &Coordinator, spec: &TraceSpec) -> Result<TraceResult> {
     let (mut src, concurrency) = prepare(coord, spec)?;
     let t0 = Instant::now();
     let mut sessions: Vec<AnySession> = (0..spec.items.len())

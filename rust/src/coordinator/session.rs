@@ -3,16 +3,41 @@
 //! the ablation modes of Fig. 9 switch off one half each.
 //!
 //! The request is a resumable state machine ([`Session`]): each phase
-//! (probe, plan+prefill, every draft/verify round, final downlink) is
-//! one `step()` call anchored at a virtual-time event, so the
-//! event-driven trace scheduler ([`super::scheduler`]) can interleave
-//! many sessions on the shared [`VirtualCluster`] in virtual-time
-//! order. [`Coordinator::serve`] drives a single session to completion
-//! and is exactly the seed's monolithic run-to-completion path.
+//! (probe, plan + edge prefill, cloud prefill, every draft and verify
+//! leg, final downlink) is one step anchored at a virtual-time event,
+//! so the event-driven trace scheduler ([`super::scheduler`]) can
+//! interleave many sessions on the shared [`VirtualCluster`] in
+//! virtual-time order.
+//!
+//! # Local vs Global steps
+//!
+//! Phases are classified for the sharded driver
+//! ([`super::sharded::StepClass`]): a **Local** phase touches only the
+//! session and its home [`EdgeSite`] (probe, plan + edge-side prefill +
+//! uplink serialization, drafting), so [`Session::step_local`] runs it
+//! against `&mut EdgeSite` from a worker thread that owns the shard. A
+//! **Global** phase touches the shared cloud (cloud prefill/verify/
+//! decode, which also broadcast the cloud's queue wait to every edge's
+//! monitor) or completes the session, and runs on the driver thread in
+//! exact virtual-time order. [`Session::step`] is the sequential
+//! dispatch over both — the reference the sharded driver reproduces
+//! bit for bit.
+//!
+//! # Determinism
+//!
+//! Each session owns everything its steps mutate besides its shard and
+//! the cloud: a clone of the engine call handles ([`EngineCore`]), the
+//! config, and — crucially — its **own quality RNG stream**, seeded by
+//! [`session_seed`] from `(trace seed, request index)`. A session's
+//! draw sequence is therefore identical under any scheduler interleave
+//! and any worker count; nothing about the stream depends on *when*
+//! the session runs relative to others.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::cluster::{activation_bytes, kv_bytes, SimModel};
+use crate::cluster::{activation_bytes, kv_bytes, DeviceSim, NetEstimate, SimModel};
 use crate::config::Config;
 use crate::metrics::ExecRecord;
 use crate::optimizer::ThetaController;
@@ -22,13 +47,13 @@ use crate::sparsity::Modality;
 use crate::util::Rng;
 use crate::workload::generator::Item;
 
-use super::batcher::Batcher;
-use super::engines::{argmax, entropy, Engines};
+use super::engines::{argmax, entropy, EngineCore, Engines};
 use super::mas::{run_probe, ProbeOutcome};
 use super::planner::{self, Plan, PlanCtx};
 use super::scheduler::StepOutcome;
+use super::sharded::StepClass;
 use super::speculative::{SpecParams, SpecSession};
-use super::timeline::{EdgeId, Site, VirtualCluster};
+use super::timeline::{EdgeId, EdgeSite, Site, VirtualCluster};
 
 /// Serving mode: full MSAO or one of the Fig. 9 ablations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,13 +66,41 @@ pub enum Mode {
     NoCollabSched,
 }
 
+/// Per-session RNG seed, salted from the trace seed and the request
+/// index. Interleave-invariant by construction: the stream depends only
+/// on `(trace_seed, index)`, never on scheduling, so the sharded driver
+/// reproduces the sequential quality draws at any worker count. The
+/// `+1` keeps index 0 off the identity (two trace seeds always yield
+/// two distinct streams, even for the first request); the odd constant
+/// is a 64-bit multiplicative mix so neighboring indices land far
+/// apart.
+pub fn session_seed(trace_seed: u64, index: usize) -> u64 {
+    trace_seed ^ (index as u64).wrapping_add(1).wrapping_mul(0xA076_1D64_78BD_642F)
+}
+
+/// Read-only serving context a session owns: cloneable engine call
+/// handles (the site actors serialize execution, so any thread may
+/// call), the config, and the calibrated confidence prior. Cloning is
+/// cheap (`Arc` + channel senders); every session carries its own copy
+/// so no step needs the [`Coordinator`] — the shared-`&mut`
+/// bottleneck the sharded serve path must not have.
+#[derive(Clone)]
+pub struct ServeCtx {
+    pub eng: EngineCore,
+    pub cfg: Arc<Config>,
+    pub p_conf0: f64,
+    /// Cloud device *cost model* (pure arithmetic over the device
+    /// config, `Copy`): the adaptive router consults cloud speeds from
+    /// a shard-local step without reading the shared cloud's cursor.
+    pub cloud_dev: DeviceSim,
+}
+
 pub struct Coordinator {
     pub eng: Engines,
     pub cfg: Config,
     /// Calibration entropies for theta initialization (Alg. 1 line 2).
     pub calibration: Vec<f64>,
     pub p_conf0: f64,
-    rng: Rng,
 }
 
 /// Everything the downlink/bookkeeping/quality tail of a session needs,
@@ -63,6 +116,39 @@ struct FinishCommon {
     edge_mem_bytes: f64,
     cloud_mem_bytes: f64,
     probe_mem_bytes: f64,
+}
+
+/// Edge half of the dual prefill, handed from the Local prefill step to
+/// the Global cloud-prefill step.
+struct EdgePrefill {
+    kv: KvHandle,
+    pre_end: f64,
+    mem_bytes: f64,
+}
+
+/// Everything the Global cloud-prefill step needs from the Local
+/// plan + edge-prefill step: the plan, the assembled model inputs, and
+/// where/when the uplink delivered the pruned payload.
+struct PrefillHandoff {
+    probe: ProbeOutcome,
+    plan: Plan,
+    kept_idx: Vec<i32>,
+    text: Vec<i32>,
+    tlen: usize,
+    vis: HostTensor,
+    vlen: usize,
+    aud: HostTensor,
+    alen: usize,
+    seq_paper: f64,
+    n_out: usize,
+    /// Link belief the coarse plan was computed against.
+    net: NetEstimate,
+    /// Uplink arrival of the pruned payload at the cloud — the virtual
+    /// time of the cloud-prefill event.
+    up_arr: f64,
+    /// Dual-prefill edge half; `None` = the adaptive router chose the
+    /// cloud-direct path (no edge speculation).
+    edge: Option<EdgePrefill>,
 }
 
 /// Speculative decode in flight (edge drafts, cloud verifies).
@@ -127,10 +213,17 @@ impl FinishState {
 }
 
 enum Phase {
-    /// Waiting to run the probe at the arrival time.
+    /// Waiting to run the probe at the arrival time (Local).
     Probe,
-    /// Probe charged up to `probe_end`; plan + prefill next.
-    Prefill { probe: ProbeOutcome, probe_end: f64 },
+    /// Probe charged up to `probe_end`; plan + edge-side prefill +
+    /// uplink next (Local).
+    PrefillEdge { probe: ProbeOutcome, probe_end: f64 },
+    /// Pruned payload in flight; cloud encode + prefill at `up_arr`
+    /// (Global — the cloud is the shared resource).
+    PrefillCloud(Box<PrefillHandoff>),
+    /// Speculative decode: alternates a Local draft leg (edge blocks,
+    /// uplink) and a Global verify leg (cloud exec, verdict, theta
+    /// feedback).
     Decode(Box<DecodeState>),
     CloudDecode(Box<CloudState>),
     Finish(Box<FinishState>),
@@ -139,11 +232,12 @@ enum Phase {
 
 /// One request moving through the serving pipeline as a sequence of
 /// virtual-time events. `next_time()` is the scheduler's sort key;
-/// `step()` advances exactly one phase / round. The session is bound to
-/// one edge site of the fleet: its probe, drafting, uplink, and memory
-/// are charged there, and its planner/replanner read that edge's
-/// monitor.
+/// `step()` / `step_local()` advance exactly one phase or decode leg.
+/// The session is bound to one edge site of the fleet: its probe,
+/// drafting, uplink, and memory are charged there, and its
+/// planner/replanner read that edge's monitor.
 pub struct Session<'a> {
+    ctx: ServeCtx,
     item: &'a Item,
     arrival: f64,
     mode: Mode,
@@ -157,19 +251,31 @@ pub struct Session<'a> {
     /// ground between full service and shedding): halved token budget,
     /// capped speculative window, no cloud-direct escape hatch.
     degraded: bool,
+    /// Session-owned quality RNG (see [`session_seed`]).
+    rng: Rng,
     rec: ExecRecord,
     phase: Phase,
 }
 
 impl<'a> Session<'a> {
-    pub fn new(item: &'a Item, arrival: f64, mode: Mode, edge: EdgeId, reuse_scale: f64) -> Self {
+    pub fn new(
+        ctx: &ServeCtx,
+        item: &'a Item,
+        arrival: f64,
+        mode: Mode,
+        edge: EdgeId,
+        reuse_scale: f64,
+        rng_seed: u64,
+    ) -> Self {
         Session {
+            ctx: ctx.clone(),
             item,
             arrival,
             mode,
             edge,
             reuse_scale,
             degraded: false,
+            rng: Rng::seed_from_u64(rng_seed),
             rec: ExecRecord {
                 request_id: item.id,
                 t_arrival: arrival,
@@ -231,7 +337,8 @@ impl<'a> Session<'a> {
     pub fn next_time(&self) -> f64 {
         match &self.phase {
             Phase::Probe => self.arrival,
-            Phase::Prefill { probe_end, .. } => *probe_end,
+            Phase::PrefillEdge { probe_end, .. } => *probe_end,
+            Phase::PrefillCloud(h) => h.up_arr,
             Phase::Decode(d) => d.spec.next_time(),
             Phase::CloudDecode(s) => s.t,
             Phase::Finish(f) => f.t_done,
@@ -248,28 +355,41 @@ impl<'a> Session<'a> {
         self.rec
     }
 
-    /// Advance one phase (or one draft/verify round), charging the
-    /// shared virtual cluster. `batchers` holds one verify batcher per
-    /// edge uplink; the session only touches its own edge's window.
-    /// Returns `Done` after the final downlink.
-    pub fn step(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-        batchers: &mut [Batcher],
-        theta: &mut ThetaController,
-    ) -> Result<StepOutcome> {
+    /// Classify the next step for the sharded driver: probe, plan +
+    /// edge prefill + uplink, and draft legs touch only this session
+    /// and its home [`EdgeSite`]; cloud prefill/verify/decode and the
+    /// completing downlink touch the shared cloud (and broadcast its
+    /// queue wait fleet-wide), so they run on the driver thread.
+    pub fn step_class(&self) -> StepClass {
+        match &self.phase {
+            Phase::Probe | Phase::PrefillEdge { .. } => StepClass::Local,
+            Phase::Decode(d) if !d.spec.awaiting_verify() => StepClass::Local,
+            _ => StepClass::Global,
+        }
+    }
+
+    /// Advance one phase (or one decode leg), charging the shared
+    /// virtual cluster — the sequential dispatch over Local and Global
+    /// phases alike. Returns `Done` after the final downlink.
+    pub fn step(&mut self, vc: &mut VirtualCluster) -> Result<StepOutcome> {
+        let e = self.edge;
         let phase = std::mem::replace(&mut self.phase, Phase::Done);
         self.phase = match phase {
-            Phase::Probe => self.step_probe(coord, vc)?,
-            Phase::Prefill { probe, probe_end } => {
-                self.step_prefill(coord, vc, probe, probe_end)?
+            Phase::Probe => self.step_probe(&mut vc.edges[e])?,
+            Phase::PrefillEdge { probe, probe_end } => {
+                self.step_prefill_edge(&mut vc.edges[e], probe, probe_end)?
             }
-            Phase::Decode(d) => {
-                self.step_decode(coord, vc, &mut batchers[self.edge], theta, d)?
+            Phase::PrefillCloud(h) => self.step_prefill_cloud(vc, h)?,
+            Phase::Decode(mut d) => {
+                if d.spec.awaiting_verify() {
+                    self.step_decode_verify(vc, d)?
+                } else {
+                    d.spec.draft(&self.ctx.eng, &mut vc.edges[e])?;
+                    Phase::Decode(d)
+                }
             }
-            Phase::CloudDecode(s) => self.step_cloud_decode(coord, vc, s)?,
-            Phase::Finish(f) => self.step_finish(coord, vc, *f)?,
+            Phase::CloudDecode(s) => self.step_cloud_decode(vc, s)?,
+            Phase::Finish(f) => self.step_finish(vc, *f)?,
             Phase::Done => Phase::Done,
         };
         Ok(if matches!(self.phase, Phase::Done) {
@@ -279,41 +399,60 @@ impl<'a> Session<'a> {
         })
     }
 
-    // ---------------- probe phase (edge) ---------------------------
-    fn step_probe(&mut self, coord: &mut Coordinator, vc: &mut VirtualCluster) -> Result<Phase> {
-        let probe = run_probe(&coord.eng, &coord.cfg.msao, self.item)?;
+    /// Advance one Local step against the session's home shard only —
+    /// the worker-thread entry point of the sharded driver. Local steps
+    /// never complete the session (the driver contract), so this always
+    /// leaves a pending phase.
+    pub fn step_local(&mut self, site: &mut EdgeSite) -> Result<StepOutcome> {
+        let phase = std::mem::replace(&mut self.phase, Phase::Done);
+        self.phase = match phase {
+            Phase::Probe => self.step_probe(site)?,
+            Phase::PrefillEdge { probe, probe_end } => {
+                self.step_prefill_edge(site, probe, probe_end)?
+            }
+            Phase::Decode(mut d) => {
+                debug_assert!(!d.spec.awaiting_verify(), "verify leg scheduled as Local");
+                d.spec.draft(&self.ctx.eng, site)?;
+                Phase::Decode(d)
+            }
+            _ => anyhow::bail!("session {}: local step on a Global phase", self.item.id),
+        };
+        Ok(StepOutcome::Pending)
+    }
+
+    // ---------------- probe phase (edge, Local) ------------------------
+    fn step_probe(&mut self, site: &mut EdgeSite) -> Result<Phase> {
+        let probe = run_probe(&self.ctx.eng, &self.ctx.cfg.msao, self.item)?;
         let probe_end = if self.mode == Mode::NoModalityAware {
             // Uniform policy: encoders still run (they feed the draft
             // model) but no probe heads; no probe latency charged.
             self.arrival
         } else {
-            let (_, end) =
-                vc.exec(Site::Edge(self.edge), self.arrival, probe.probe_s, probe.probe_flops);
-            vc.edges[self.edge].mem.alloc(probe.probe_mem_gb * 1e9);
+            let (_, end) = site.exec(self.arrival, probe.probe_s, probe.probe_flops, self.edge);
+            site.mem.alloc(probe.probe_mem_gb * 1e9);
             self.rec.probe_s = probe.probe_s;
             end
         };
-        Ok(Phase::Prefill { probe, probe_end })
+        Ok(Phase::PrefillEdge { probe, probe_end })
     }
 
-    // ---------------- plan + route + dual prefill ---------------------
-    fn step_prefill(
+    // -------- plan + route + edge prefill + uplink (edge, Local) -------
+    fn step_prefill_edge(
         &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
+        site: &mut EdgeSite,
         probe: ProbeOutcome,
         probe_end: f64,
     ) -> Result<Phase> {
         let item = self.item;
         let mode = self.mode;
-        let c = coord.eng.c.clone();
-        let cfg = coord.cfg.clone();
+        let c = self.ctx.eng.c.clone();
+        let cfg = &*self.ctx.cfg;
 
         // ---------------- coarse plan ------------------------------------
         // The planner sees the *assigned edge's* monitor belief about
         // its own link, not the ground-truth config — plans adapt as
         // that edge's estimates converge.
-        let net = vc.edges[self.edge].monitor.estimate();
+        let net = site.monitor.estimate();
         // Degraded service level: half the token budget. Everything
         // downstream (plan, cost estimates, KV sizing, spec budget)
         // flows from this one knob, and the quality price follows
@@ -325,29 +464,28 @@ impl<'a> Session<'a> {
             cfg.msao.max_new_tokens
         };
         let plan = match mode {
-            Mode::NoModalityAware => Plan::uniform(&probe, item, &cfg, coord.p_conf0),
+            Mode::NoModalityAware => Plan::uniform(&probe, item, cfg, self.ctx.p_conf0),
             // NoCollabSched keeps modality-aware pruning; scheduling is
             // static (fixed draft length, no overlap/batching, no routing).
             Mode::Msao | Mode::NoCollabSched => planner::plan(&PlanCtx {
-                cfg: &cfg,
+                cfg,
                 item,
                 probe: &probe,
                 net,
-                p_conf: coord.p_conf0,
+                p_conf: self.ctx.p_conf0,
                 n_out,
                 seed: item.id ^ 0x9E37,
             })?,
         };
 
         // ---------------- assemble prefill inputs ------------------------
-        let (vis, vlen, kept_idx) = assemble_visual(&coord.eng, &probe, &plan, item, mode)?;
-        let (aud, alen) = assemble_audio(&coord.eng, &probe, &plan)?;
-        let text = coord.eng.tok.pad_to(
-            coord.eng.tok.encode_prompt(&item.question, c.text_slots()),
+        let (vis, vlen, kept_idx) = assemble_visual(&self.ctx.eng, &probe, &plan, item, mode)?;
+        let (aud, alen) = assemble_audio(&self.ctx.eng, &probe, &plan)?;
+        let text = self.ctx.eng.tok.pad_to(
+            self.ctx.eng.tok.encode_prompt(&item.question, c.text_slots()),
             c.text_slots(),
         );
         let tlen = text.iter().filter(|&&t| t != crate::runtime::tokenizer::PAD).count();
-        let lens = (vlen, alen, tlen);
 
         // Paper-scale sequence length for the cost model.
         let seq_paper = paper_seq(item, vlen, plan.frames_keep.len(), alen);
@@ -357,264 +495,255 @@ impl<'a> Session<'a> {
         // the derived MAS scores and real-time system states" (§4.2): when
         // the edge queue is deep (or the cloud decisively faster for this
         // request), the pruned request is served cloud-direct instead of
-        // through the edge speculative path. Queue depths are the
-        // coordinator's own state (exact); link terms use the monitor's
-        // estimates. The ablation "w/o collaborative scheduling" pins
+        // through the edge speculative path. The edge queue depth is this
+        // site's own state (exact); the cloud queue term is the monitor's
+        // *belief* — the smoothed wait the cloud advertises on every
+        // response — because a shard-local step cannot read the shared
+        // cloud's cursor. The ablation "w/o collaborative scheduling" pins
         // everything to the static path. Degraded requests are pinned to
         // the cheap edge speculative path: cloud-direct serves every
         // token at full-model cost, the opposite of load shedding's
         // goal.
+        let mut cloud_direct = false;
         if mode == Mode::Msao && !self.degraded {
-            let est = {
-                let d_edge = vc.dev(Site::Edge(self.edge));
-                let d_cloud = vc.dev(Site::Cloud);
-                let draft = SimModel::qwen2vl_2b();
-                let full = SimModel::qwen25vl_7b();
-                let vitm = SimModel::vision_encoder();
-                let edge_q = (vc.busy_until(Site::Edge(self.edge)) - probe_end).max(0.0);
-                let cloud_q = (vc.busy_until(Site::Cloud) - probe_end).max(0.0);
-                let t_edge = edge_q
-                    + d_edge.encode_s(&vitm, 256.0)
-                    + d_edge.prefill_s(&draft, seq_paper)
-                    + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
-                let up = plan.bytes_up as f64 * 8.0 / (net.bandwidth_mbps * 1e6)
-                    + 0.5 * net.rtt_ms * 1e-3;
-                let t_cloud = cloud_q
-                    + up
-                    + d_cloud.encode_s(&vitm, 256.0)
-                    + d_cloud.prefill_s(&full, seq_paper)
-                    + n_out as f64 * d_cloud.decode_s(&full, seq_paper);
-                (t_edge, t_cloud)
-            };
-            if est.1 < 0.9 * est.0 {
-                return self.prefill_cloud_direct(
-                    coord,
-                    vc,
-                    probe,
-                    probe_end,
-                    plan,
-                    (text, tlen, vis, vlen, aud, alen),
-                    seq_paper,
-                    kept_idx,
-                );
-            }
+            let d_edge = &site.dev;
+            let d_cloud = &self.ctx.cloud_dev;
+            let draft = SimModel::qwen2vl_2b();
+            let full = SimModel::qwen25vl_7b();
+            let vitm = SimModel::vision_encoder();
+            let edge_q = (site.busy_s() - probe_end).max(0.0);
+            let cloud_q = site.monitor.wait_s(Site::Cloud);
+            let t_edge = edge_q
+                + d_edge.encode_s(&vitm, 256.0)
+                + d_edge.prefill_s(&draft, seq_paper)
+                + n_out as f64 * d_edge.decode_s(&draft, seq_paper);
+            let up = plan.bytes_up as f64 * 8.0 / (net.bandwidth_mbps * 1e6)
+                + 0.5 * net.rtt_ms * 1e-3;
+            let t_cloud = cloud_q
+                + up
+                + d_cloud.encode_s(&vitm, 256.0)
+                + d_cloud.prefill_s(&full, seq_paper)
+                + n_out as f64 * d_cloud.decode_s(&full, seq_paper);
+            cloud_direct = t_cloud < 0.9 * t_edge;
         }
 
-        // ---------------- dual prefill (Eq. 14 max term) ------------------
-        let draft_m = SimModel::qwen2vl_2b();
+        // ---------------- edge half of the dual prefill -------------------
+        // (Eq. 14 max term; skipped entirely on the cloud-direct path.)
+        let edge = if cloud_direct {
+            None
+        } else {
+            let draft_m = SimModel::qwen2vl_2b();
+            let vit = SimModel::vision_encoder();
+            // Edge vision-encode cost. MSAO pays the probe's early layers
+            // on everything (already charged) and the *remaining* encoder
+            // layers only on retained content: kept frames for video,
+            // kept-patch fraction for images (§4.1: non-critical patches
+            // are pruned before the deep layers / projector). The uniform
+            // ablation encodes everything at full depth.
+            const EARLY_SHARE: f64 = 2.0 / 32.0; // probe taps layer 2 of 32
+            let enc_frames = if mode == Mode::NoModalityAware {
+                frames_encoded(item) as f64
+            } else if item.video.is_some() {
+                plan.frames_keep.len().max(1) as f64
+            } else {
+                frames_encoded(item) as f64
+            };
+            let late_scale = if mode == Mode::NoModalityAware || item.image.is_none() {
+                1.0
+            } else {
+                // Deep layers run on the retained patches only.
+                EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
+            };
+            let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
+            let enc_secs = site.dev.encode_s(&vit, enc_patches) * enc_frames * late_scale;
+            let (_, enc_end) = site.exec(
+                probe_end,
+                enc_secs,
+                vit.flops_prefill(enc_patches) * enc_frames * late_scale,
+                self.edge,
+            );
+            let edge_pre_secs = self.reuse_scale * site.dev.prefill_s(&draft_m, seq_paper);
+            let (_, edge_pre_end) = site.exec(
+                enc_end,
+                edge_pre_secs,
+                self.reuse_scale * draft_m.flops_prefill(seq_paper),
+                self.edge,
+            );
+            // Real edge prefill (draft model).
+            let edge_pre = self.ctx.eng.prefill(false, &text, tlen, &vis, vlen, &aud, alen)?;
+            let edge_kv_gb = kv_bytes(&draft_m, seq_paper + n_out as f64) / 1e9;
+            let mem_bytes = edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper);
+            site.mem.alloc(mem_bytes);
+            Some(EdgePrefill { kv: edge_pre.kv, pre_end: edge_pre_end, mem_bytes })
+        };
+
+        // Pruned payload uplink — both paths ship the same bytes at the
+        // same moment; only what happens at the far side differs.
+        let (_, up_arr) = site.send_up(probe_end, plan.bytes_up, false);
+        self.rec.bytes_up += plan.bytes_up;
+
+        Ok(Phase::PrefillCloud(Box::new(PrefillHandoff {
+            probe,
+            plan,
+            kept_idx,
+            text,
+            tlen,
+            vis,
+            vlen,
+            aud,
+            alen,
+            seq_paper,
+            n_out,
+            net,
+            up_arr,
+            edge,
+        })))
+    }
+
+    // ------------- cloud encode + prefill (cloud, Global) ---------------
+    fn step_prefill_cloud(
+        &mut self,
+        vc: &mut VirtualCluster,
+        h: Box<PrefillHandoff>,
+    ) -> Result<Phase> {
+        let h = *h;
+        let item = self.item;
+        let mode = self.mode;
         let full_m = SimModel::qwen25vl_7b();
         let vit = SimModel::vision_encoder();
 
-        // Edge vision-encode cost. MSAO pays the probe's early layers on
-        // everything (already charged) and the *remaining* encoder layers
-        // only on retained content: kept frames for video, kept-patch
-        // fraction for images (§4.1: non-critical patches are pruned
-        // before the deep layers / projector). The uniform ablation
-        // encodes everything at full depth.
-        const EARLY_SHARE: f64 = 2.0 / 32.0; // probe taps layer 2 of 32
-        let enc_frames = if mode == Mode::NoModalityAware {
-            frames_encoded(item) as f64
-        } else if item.video.is_some() {
-            plan.frames_keep.len().max(1) as f64
-        } else {
-            frames_encoded(item) as f64
-        };
-        let late_scale = if mode == Mode::NoModalityAware || item.image.is_none() {
-            1.0
-        } else {
-            // Deep layers run on the retained patches only.
-            EARLY_SHARE + (1.0 - EARLY_SHARE) * (vlen.max(8) as f64 / 256.0)
-        };
-        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-        let enc_secs =
-            vc.dev(Site::Edge(self.edge)).encode_s(&vit, enc_patches) * enc_frames * late_scale;
-        let (_, enc_end) = vc.exec(
-            Site::Edge(self.edge),
-            probe_end,
-            enc_secs,
-            vit.flops_prefill(enc_patches) * enc_frames * late_scale,
-        );
-        let edge_pre_secs =
-            self.reuse_scale * vc.dev(Site::Edge(self.edge)).prefill_s(&draft_m, seq_paper);
-        let (_, edge_pre_end) = vc.exec(
-            Site::Edge(self.edge),
-            enc_end,
-            edge_pre_secs,
-            self.reuse_scale * draft_m.flops_prefill(seq_paper),
-        );
-
-        // Cloud: pruned payload uplink, re-encode, full prefill.
-        let (_, up_arr) = vc.send_up(self.edge, probe_end, plan.bytes_up, false);
-        self.rec.bytes_up += plan.bytes_up;
-        let kept_frames = plan.frames_keep.len().max(1) as f64;
         // Cloud re-encodes only the shipped (pruned) content.
+        let kept_frames = h.plan.frames_keep.len().max(1) as f64;
+        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
         let cloud_share = if item.video.is_some() {
             kept_frames
         } else {
-            (vlen.max(8) as f64 / 256.0).min(1.0)
+            (h.vlen.max(8) as f64 / 256.0).min(1.0)
         };
         let cloud_enc = vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * cloud_share;
         let (_, cloud_enc_end) = vc.exec(
             Site::Cloud,
-            up_arr,
+            h.up_arr,
             cloud_enc,
             vit.flops_prefill(enc_patches) * cloud_share,
         );
-        let cloud_pre_secs = self.reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper);
+        let cloud_pre_secs =
+            self.reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, h.seq_paper);
         let (_, cloud_pre_end) = vc.exec(
             Site::Cloud,
             cloud_enc_end,
             cloud_pre_secs,
-            self.reuse_scale * full_m.flops_prefill(seq_paper),
+            self.reuse_scale * full_m.flops_prefill(h.seq_paper),
         );
 
-        // Real prefills.
-        let edge_pre = coord.eng.prefill(false, &text, tlen, &vis, vlen, &aud, alen)?;
-        let cloud_pre = coord.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
+        // Real cloud prefill (full model) + memory at paper scale.
+        let cloud_kv_gb = kv_bytes(&full_m, h.seq_paper + h.n_out as f64) / 1e9;
+        let cloud_mem_bytes = cloud_kv_gb * 1e9 + activation_bytes(&full_m, h.seq_paper);
+        vc.cloud.mem.alloc(cloud_mem_bytes);
+        let cloud_pre =
+            self.ctx.eng.prefill(true, &h.text, h.tlen, &h.vis, h.vlen, &h.aud, h.alen)?;
         let first_token = argmax(&cloud_pre.logits);
 
-        // Memory at paper scale.
-        let edge_kv_gb = kv_bytes(&draft_m, seq_paper + n_out as f64) / 1e9;
-        let cloud_kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
-        let edge_mem_bytes = edge_kv_gb * 1e9 + activation_bytes(&draft_m, seq_paper);
-        let cloud_mem_bytes = cloud_kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
-        vc.edges[self.edge].mem.alloc(edge_mem_bytes);
-        vc.cloud.mem.alloc(cloud_mem_bytes);
-
-        let prefill_done = edge_pre_end.max(cloud_pre_end);
-        self.rec.prefill_s = prefill_done - self.arrival;
-
-        // ---------------- speculative decode ------------------------------
-        let spec = SpecSession::new(
-            &coord.eng,
-            SpecParams {
-                edge: self.edge,
-                edge_kv: edge_pre.kv,
-                cloud_kv: cloud_pre.kv,
-                lens,
-                seq_paper,
-                first_token,
-                edge_ready: edge_pre_end,
-                cloud_ready: cloud_pre_end,
-                max_new: n_out,
-                n_draft: if self.degraded { plan.n_draft.min(2) } else { plan.n_draft },
-                n_max: if self.degraded { cfg.msao.n_max.min(2) } else { cfg.msao.n_max },
-                planned_net: net,
-                adaptive: mode != Mode::NoCollabSched,
-            },
-        );
         let probe_mem_bytes = if mode != Mode::NoModalityAware {
-            probe.probe_mem_gb * 1e9
+            h.probe.probe_mem_gb * 1e9
         } else {
             0.0
         };
-        let finish = FinishCommon {
-            probe,
-            plan,
-            kept_idx,
-            vlen,
-            edge_kv: Some(edge_pre.kv),
-            cloud_kv: Some(cloud_pre.kv),
-            edge_mem_bytes,
-            cloud_mem_bytes,
-            probe_mem_bytes,
-        };
-        if spec.is_done() {
-            // Degenerate budget (max_new <= 1): nothing to decode.
-            return Ok(Phase::Finish(Box::new(FinishState::from_spec(spec.finish(), finish))));
+
+        match h.edge {
+            // ---------------- speculative decode --------------------------
+            Some(ep) => {
+                self.rec.prefill_s = ep.pre_end.max(cloud_pre_end) - self.arrival;
+                let cfg = &self.ctx.cfg;
+                let spec = SpecSession::new(
+                    &self.ctx.eng,
+                    SpecParams {
+                        edge: self.edge,
+                        edge_kv: ep.kv,
+                        cloud_kv: cloud_pre.kv,
+                        lens: (h.vlen, h.alen, h.tlen),
+                        seq_paper: h.seq_paper,
+                        first_token,
+                        edge_ready: ep.pre_end,
+                        cloud_ready: cloud_pre_end,
+                        max_new: h.n_out,
+                        n_draft: if self.degraded {
+                            h.plan.n_draft.min(2)
+                        } else {
+                            h.plan.n_draft
+                        },
+                        n_max: if self.degraded { cfg.msao.n_max.min(2) } else { cfg.msao.n_max },
+                        planned_net: h.net,
+                        adaptive: mode != Mode::NoCollabSched,
+                    },
+                );
+                let finish = FinishCommon {
+                    probe: h.probe,
+                    plan: h.plan,
+                    kept_idx: h.kept_idx,
+                    vlen: h.vlen,
+                    edge_kv: Some(ep.kv),
+                    cloud_kv: Some(cloud_pre.kv),
+                    edge_mem_bytes: ep.mem_bytes,
+                    cloud_mem_bytes,
+                    probe_mem_bytes,
+                };
+                if spec.is_done() {
+                    // Degenerate budget (max_new <= 1): nothing to decode.
+                    return Ok(Phase::Finish(Box::new(FinishState::from_spec(
+                        spec.finish(),
+                        finish,
+                    ))));
+                }
+                Ok(Phase::Decode(Box::new(DecodeState { spec, finish })))
+            }
+            // ---------------- cloud-direct decode -------------------------
+            // The adaptive router shipped the *pruned* request to the
+            // cloud; the full model both prefills and decodes there (no
+            // edge speculation). Chosen when the real-time system state
+            // made the edge path slower (deep edge queue, idle cloud).
+            None => {
+                self.rec.prefill_s = cloud_pre_end - self.arrival;
+                let state = CloudState {
+                    lens: (h.vlen, h.alen, h.tlen),
+                    seq_paper: h.seq_paper,
+                    tok: first_token,
+                    tokens: vec![first_token],
+                    t: cloud_pre_end,
+                    j: 0,
+                    n_out: h.n_out,
+                    finish: FinishCommon {
+                        probe: h.probe,
+                        plan: h.plan,
+                        kept_idx: h.kept_idx,
+                        vlen: h.vlen,
+                        edge_kv: None,
+                        cloud_kv: Some(cloud_pre.kv),
+                        edge_mem_bytes: 0.0,
+                        cloud_mem_bytes,
+                        probe_mem_bytes,
+                    },
+                };
+                if state.n_out <= 1 {
+                    let CloudState { tokens, t, finish, .. } = state;
+                    return Ok(Phase::Finish(Box::new(FinishState::from_cloud(
+                        tokens.len(),
+                        t,
+                        finish,
+                    ))));
+                }
+                Ok(Phase::CloudDecode(Box::new(state)))
+            }
         }
-        Ok(Phase::Decode(Box::new(DecodeState { spec, finish })))
     }
 
-    /// Cloud-direct path of the adaptive router: the *pruned* request is
-    /// shipped to the cloud and the full model both prefills and decodes
-    /// there (no edge speculation). Chosen when the real-time system
-    /// state makes the edge path slower (deep edge queue, idle cloud).
-    #[allow(clippy::too_many_arguments)]
-    fn prefill_cloud_direct(
+    // ------------- one verify leg of a draft/verify round ---------------
+    fn step_decode_verify(
         &mut self,
-        coord: &mut Coordinator,
         vc: &mut VirtualCluster,
-        probe: ProbeOutcome,
-        probe_end: f64,
-        plan: Plan,
-        inputs: (Vec<i32>, usize, HostTensor, usize, HostTensor, usize),
-        seq_paper: f64,
-        kept_idx: Vec<i32>,
-    ) -> Result<Phase> {
-        let (text, tlen, vis, vlen, aud, alen) = inputs;
-        let item = self.item;
-        let n_out = coord.cfg.msao.max_new_tokens;
-        let full_m = SimModel::qwen25vl_7b();
-        let vit = SimModel::vision_encoder();
-
-        let (_, up_arr) = vc.send_up(self.edge, probe_end, plan.bytes_up, false);
-        self.rec.bytes_up += plan.bytes_up;
-        let kept_frames = plan.frames_keep.len().max(1) as f64;
-        let enc_patches = if item.video.is_some() { 256.0 } else { 1024.0 };
-        let enc_mult = if item.video.is_some() {
-            kept_frames
-        } else {
-            (vlen.max(8) as f64 / 256.0).min(1.0)
-        };
-        let (_, enc_end) = vc.exec(
-            Site::Cloud,
-            up_arr,
-            vc.dev(Site::Cloud).encode_s(&vit, enc_patches) * enc_mult,
-            vit.flops_prefill(enc_patches) * enc_mult,
-        );
-        let (_, pre_end) = vc.exec(
-            Site::Cloud,
-            enc_end,
-            self.reuse_scale * vc.dev(Site::Cloud).prefill_s(&full_m, seq_paper),
-            self.reuse_scale * full_m.flops_prefill(seq_paper),
-        );
-        self.rec.prefill_s = pre_end - self.arrival;
-
-        let kv_gb = kv_bytes(&full_m, seq_paper + n_out as f64) / 1e9;
-        let cloud_mem_bytes = kv_gb * 1e9 + activation_bytes(&full_m, seq_paper);
-        vc.cloud.mem.alloc(cloud_mem_bytes);
-
-        let pre = coord.eng.prefill(true, &text, tlen, &vis, vlen, &aud, alen)?;
-        let tok = argmax(&pre.logits);
-        let probe_mem_bytes = probe.probe_mem_gb * 1e9;
-        let state = CloudState {
-            lens: (vlen, alen, tlen),
-            seq_paper,
-            tok,
-            tokens: vec![tok],
-            t: pre_end,
-            j: 0,
-            n_out,
-            finish: FinishCommon {
-                probe,
-                plan,
-                kept_idx,
-                vlen,
-                edge_kv: None,
-                cloud_kv: Some(pre.kv),
-                edge_mem_bytes: 0.0,
-                cloud_mem_bytes,
-                probe_mem_bytes,
-            },
-        };
-        if state.n_out <= 1 {
-            let CloudState { tokens, t, finish, .. } = state;
-            return Ok(Phase::Finish(Box::new(FinishState::from_cloud(tokens.len(), t, finish))));
-        }
-        Ok(Phase::CloudDecode(Box::new(state)))
-    }
-
-    // ---------------- one speculative draft/verify round ----------------
-    fn step_decode(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-        batcher: &mut Batcher,
-        theta: &mut ThetaController,
         mut d: Box<DecodeState>,
     ) -> Result<Phase> {
-        d.spec.round(&coord.eng, vc, theta, batcher)?;
+        d.spec.verify(&self.ctx.eng, vc)?;
         if d.spec.is_done() {
             let DecodeState { spec, finish } = *d;
             Ok(Phase::Finish(Box::new(FinishState::from_spec(spec.finish(), finish))))
@@ -626,22 +755,17 @@ impl<'a> Session<'a> {
     // ---------------- one cloud-direct decode step ----------------------
     fn step_cloud_decode(
         &mut self,
-        coord: &mut Coordinator,
         vc: &mut VirtualCluster,
         mut s: Box<CloudState>,
     ) -> Result<Phase> {
-        let gen_off = coord.eng.c.gen_off();
-        let eos = coord.eng.c.eos();
+        let gen_off = self.ctx.eng.c.gen_off();
+        let eos = self.ctx.eng.c.eos();
         let full_m = SimModel::qwen25vl_7b();
         let kv = s.finish.cloud_kv.expect("cloud-direct session always holds a cloud KV");
-        let lg = coord.eng.block(true, false, kv, gen_off + s.j, &[s.tok], s.lens)?;
+        let lg = self.ctx.eng.block(true, false, kv, gen_off + s.j, &[s.tok], s.lens)?;
         let ctx = s.seq_paper + s.j as f64;
-        let (_, end) = vc.exec(
-            Site::Cloud,
-            s.t,
-            vc.dev(Site::Cloud).decode_s(&full_m, ctx),
-            full_m.flops_decode(ctx),
-        );
+        let secs = vc.dev(Site::Cloud).decode_s(&full_m, ctx);
+        let (_, end) = vc.exec(Site::Cloud, s.t, secs, full_m.flops_decode(ctx));
         s.t = end;
         s.tok = argmax(&lg);
         s.tokens.push(s.tok);
@@ -655,23 +779,18 @@ impl<'a> Session<'a> {
     }
 
     // ---------------- downlink + bookkeeping + quality ------------------
-    fn step_finish(
-        &mut self,
-        coord: &mut Coordinator,
-        vc: &mut VirtualCluster,
-        f: FinishState,
-    ) -> Result<Phase> {
-        let bandwidth_mbps = coord.cfg.network.bandwidth_mbps;
+    fn step_finish(&mut self, vc: &mut VirtualCluster, f: FinishState) -> Result<Phase> {
+        let bandwidth_mbps = self.ctx.cfg.network.bandwidth_mbps;
         let bytes = 4 * f.tokens_out as u64 + 64;
         // Downlink the generated text to the user.
         let (_, done) = vc.send_down(self.edge, f.t_done, bytes, false);
         self.rec.bytes_down += bytes;
 
         if let Some(kv) = f.common.edge_kv {
-            coord.eng.free_kv(false, kv);
+            self.ctx.eng.free_kv(false, kv);
         }
         if let Some(kv) = f.common.cloud_kv {
-            coord.eng.free_kv(true, kv);
+            self.ctx.eng.free_kv(true, kv);
         }
         if f.common.edge_mem_bytes > 0.0 {
             vc.edges[self.edge].mem.free(f.common.edge_mem_bytes);
@@ -717,7 +836,7 @@ impl<'a> Session<'a> {
         );
         let cap = Capability::for_benchmark(self.item.benchmark, bandwidth_mbps);
         self.rec.p_correct = quality::p_correct(cap, self.item, &info);
-        self.rec.correct = quality::sample_correct(&mut coord.rng, self.rec.p_correct);
+        self.rec.correct = quality::sample_correct(&mut self.rng, self.rec.p_correct);
         Ok(Phase::Done)
     }
 }
@@ -725,13 +844,7 @@ impl<'a> Session<'a> {
 impl Coordinator {
     pub fn new(cfg: Config) -> Result<Self> {
         let eng = Engines::start(&cfg.artifacts_dir)?;
-        let mut me = Coordinator {
-            eng,
-            cfg,
-            calibration: Vec::new(),
-            p_conf0: 0.7,
-            rng: Rng::seed_from_u64(0xC0FFEE),
-        };
+        let mut me = Coordinator { eng, cfg, calibration: Vec::new(), p_conf0: 0.7 };
         me.calibrate()?;
         Ok(me)
     }
@@ -788,22 +901,37 @@ impl Coordinator {
         ThetaController::from_calibration(&self.cfg.msao, &self.calibration)
     }
 
+    /// Session-ownable serving context: engine call handles, a snapshot
+    /// of the config, and the calibrated confidence prior. Built fresh
+    /// so post-construction `cfg` tweaks (tests, sweeps) are honored.
+    pub fn ctx(&self) -> ServeCtx {
+        ServeCtx {
+            eng: self.eng.core(),
+            cfg: Arc::new(self.cfg.clone()),
+            p_conf0: self.p_conf0,
+            cloud_dev: DeviceSim::new(self.cfg.cloud),
+        }
+    }
+
     /// Serve one item under `mode` on edge 0, charging the shared
-    /// virtual cluster. Runs the session state machine to completion —
-    /// the seed's run-to-completion FCFS path on the original two-site
-    /// pair, and the reference the event-driven scheduler must
-    /// reproduce bit for bit at concurrency 1 on a fleet of one.
+    /// virtual cluster (whose edge-0 theta controller and batcher carry
+    /// the adaptive state across calls). Runs the session state machine
+    /// to completion — the seed's run-to-completion FCFS path on the
+    /// original two-site pair, and the reference the event-driven
+    /// scheduler must reproduce bit for bit at concurrency 1 on a fleet
+    /// of one. `rng_seed` seeds the session's quality stream (trace
+    /// callers derive it with [`session_seed`]).
     pub fn serve(
-        &mut self,
+        &self,
         vc: &mut VirtualCluster,
-        batcher: &mut Batcher,
-        theta: &mut ThetaController,
         item: &Item,
         arrival: f64,
         mode: Mode,
+        rng_seed: u64,
     ) -> Result<ExecRecord> {
-        let mut s = Session::new(item, arrival, mode, 0, 1.0);
-        while s.step(self, vc, std::slice::from_mut(batcher), theta)? == StepOutcome::Pending {}
+        let ctx = self.ctx();
+        let mut s = Session::new(&ctx, item, arrival, mode, 0, 1.0, rng_seed);
+        while s.step(vc)? == StepOutcome::Pending {}
         Ok(s.into_record())
     }
 }
@@ -832,7 +960,7 @@ pub fn paper_seq(item: &Item, vlen: usize, frames: usize, alen: usize) -> f64 {
 /// Build the visual slot tensor per the plan. Returns (tensor, vlen,
 /// kept source patch indices for quality accounting).
 fn assemble_visual(
-    eng: &Engines,
+    eng: &EngineCore,
     probe: &ProbeOutcome,
     plan: &Plan,
     item: &Item,
@@ -883,7 +1011,7 @@ fn assemble_visual(
 }
 
 fn assemble_audio(
-    eng: &Engines,
+    eng: &EngineCore,
     probe: &ProbeOutcome,
     plan: &Plan,
 ) -> Result<(HostTensor, usize)> {
@@ -963,5 +1091,43 @@ fn served_info(
         novel_frames_retained: novel_frames_retained.clamp(0.0, 1.0),
         relevant_modality_kept,
         cloud_quality_fraction: cloud_fraction,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_seed_depends_on_trace_seed_and_index() {
+        // Regression for the hard-coded 0xC0FFEE coordinator stream:
+        // the per-session seed must vary with the trace seed (two
+        // traces draw different quality streams) and with the request
+        // index (two requests of one trace draw independent streams).
+        assert_ne!(session_seed(1, 0), session_seed(2, 0));
+        assert_ne!(session_seed(1, 0), session_seed(1, 1));
+        assert_ne!(session_seed(0, 0), 0); // index 0 is not the identity
+        // Sanity: deterministic.
+        assert_eq!(session_seed(42, 7), session_seed(42, 7));
+    }
+
+    #[test]
+    fn two_trace_seeds_produce_different_quality_draws() {
+        // The satellite regression: the quality coin sequence must
+        // differ across trace seeds. Drive the exact sampler the finish
+        // step uses at p = 0.5 and require the two streams to diverge.
+        let draws = |trace_seed: u64| -> Vec<bool> {
+            (0..64)
+                .map(|i| {
+                    let mut rng = Rng::seed_from_u64(session_seed(trace_seed, i));
+                    quality::sample_correct(&mut rng, 0.5)
+                })
+                .collect()
+        };
+        let a = draws(1);
+        let b = draws(2);
+        assert_ne!(a, b, "trace seeds 1 and 2 produced identical quality draws");
+        // And the same trace seed reproduces itself exactly.
+        assert_eq!(a, draws(1));
     }
 }

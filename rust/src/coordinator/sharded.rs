@@ -21,7 +21,8 @@
 //!
 //! The driver alternates two phases until the trace drains:
 //!
-//! 1. **Local phase** (parallel): each shard advances its own min-heap
+//! 1. **Local phase** (parallel, on a persistent worker pool spawned
+//!    once per drive): each shard advances its own min-heap
 //!    while its top event is Local. Each shard's heap top is its
 //!    advertised *lookahead horizon* — a valid lower bound on every
 //!    future event it can produce, because per-session event times are
@@ -57,8 +58,10 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::event::EventKey;
 use super::scheduler::{SessionSource, StepOutcome};
@@ -206,10 +209,39 @@ fn advance_local<H: ShardedSource>(
     Ok(advanced)
 }
 
+/// Raw-pointer envelope for shipping `&mut` shard state to a pool
+/// worker for the duration of one local window. Soundness protocol
+/// (upheld by [`drive_sharded`], see the SAFETY comments there): the
+/// pointers sent in one window reference pairwise-disjoint shard state
+/// the driver holds exclusive borrows over, and the driver blocks on
+/// every job's ack before those borrows end.
+struct SendPtr<T>(*mut T);
+
+// SAFETY: SendPtr is only a courier. The driver guarantees exclusive,
+// disjoint access for the pointee during the send→ack window.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+/// One local-phase job for a pool worker: the shard, its runtime (heap
+/// + slots), and the conservative window bound.
+type Job<H> = (
+    SendPtr<<H as ShardedSource>::Shard>,
+    SendPtr<ShardRt<<H as ShardedSource>::Session>>,
+    Option<EventKey>,
+);
+
 /// Drive `n` sessions to completion on `workers` threads (1 = run the
 /// local phases inline; the protocol and therefore the results are
 /// identical for every worker count). Event semantics are bit-for-bit
 /// those of `drive_stream(n, concurrency, &mut Sequentialized::new(h))`.
+///
+/// With `workers >= 2` (and at least two shards) the local phases run
+/// on a **persistent worker pool**: `min(workers, n_shards)` scoped
+/// threads spawned once for the whole drive, fed `(shard, runtime,
+/// window)` jobs over per-worker channels each window and drained over
+/// a shared ack channel. Re-spawning threads per lookahead window —
+/// the previous design — cost more than the window's work for
+/// fine-grained serve steps; the pool keeps the threads warm so the
+/// speedup survives at real serve granularity.
 pub fn drive_sharded<H: ShardedSource>(
     n: usize,
     concurrency: usize,
@@ -251,134 +283,180 @@ pub fn drive_sharded<H: ShardedSource>(
 
     admit_up_to(h, &mut rts, &mut next_admit, &mut in_flight, n, cap)?;
 
-    loop {
-        // ---- Local phase: run shards to fixpoint -----------------------
+    // A pool of one worker is pure overhead (no parallelism, channel
+    // round-trips per window): only stand the pool up when two or more
+    // shards can genuinely run concurrently.
+    let pool_size = if workers >= 2 && n_rts >= 2 { workers.min(n_rts) } else { 0 };
+
+    std::thread::scope(|scope| -> Result<()> {
+        // ---- Persistent worker pool (spawned once per drive) -----------
+        let mut job_txs: Vec<mpsc::Sender<Job<H>>> = Vec::with_capacity(pool_size);
+        let (res_tx, res_rx) = mpsc::channel::<Result<bool>>();
+        for _ in 0..pool_size {
+            let (tx, rx) = mpsc::channel::<Job<H>>();
+            job_txs.push(tx);
+            let res_tx = res_tx.clone();
+            scope.spawn(move || {
+                while let Ok((sh, rt, w)) = rx.recv() {
+                    // A panic inside a local step must still produce an
+                    // ack, or the driver would deadlock waiting for it.
+                    let out = catch_unwind(AssertUnwindSafe(|| {
+                        // SAFETY: the driver sent pointers to shard
+                        // state it exclusively borrows, disjoint from
+                        // every other in-flight job, and will not touch
+                        // (or let the borrow end) until this job acks.
+                        advance_local::<H>(unsafe { &mut *sh.0 }, unsafe { &mut *rt.0 }, w)
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(anyhow!("sharded pool worker panicked during a local step"))
+                    });
+                    if res_tx.send(out).is_err() {
+                        break; // driver gone; shut down
+                    }
+                }
+                // job_txs dropped (drive finished): exit, scope joins.
+            });
+        }
+        drop(res_tx); // workers hold the only senders now
+
         loop {
-            let tops: Vec<Option<EventKey>> = rts.iter().map(ShardRt::top).collect();
-            let windows: Vec<Option<EventKey>> = if windowed {
-                (0..rts.len())
-                    .map(|e| {
-                        tops.iter()
-                            .enumerate()
-                            .filter_map(|(o, k)| if o == e { None } else { *k })
-                            .min()
+            // ---- Local phase: run shards to fixpoint -------------------
+            loop {
+                let tops: Vec<Option<EventKey>> = rts.iter().map(ShardRt::top).collect();
+                let windows: Vec<Option<EventKey>> = if windowed {
+                    (0..rts.len())
+                        .map(|e| {
+                            tops.iter()
+                                .enumerate()
+                                .filter_map(|(o, k)| if o == e { None } else { *k })
+                                .min()
+                        })
+                        .collect()
+                } else {
+                    vec![None; rts.len()]
+                };
+                // In windowed mode a shard with no window (every other
+                // shard is empty) is unconstrained: nothing can be read
+                // concurrently.
+                let runnable: Vec<bool> = (0..rts.len())
+                    .map(|e| match tops[e] {
+                        Some(k) => match windows[e] {
+                            Some(w) if windowed => k < w,
+                            _ => true,
+                        },
+                        None => false,
                     })
-                    .collect()
-            } else {
-                vec![None; rts.len()]
-            };
-            // In windowed mode a shard with no window (every other shard
-            // is empty) is unconstrained: nothing can be read concurrently.
-            let runnable: Vec<bool> = (0..rts.len())
-                .map(|e| match tops[e] {
-                    Some(k) => match windows[e] {
-                        Some(w) if windowed => k < w,
-                        _ => true,
-                    },
-                    None => false,
-                })
-                .collect();
-            let advanced = h.with_shards(|shards| -> Result<bool> {
-                let mut work: Vec<(&mut H::Shard, &mut ShardRt<H::Session>, Option<EventKey>)> =
-                    shards
+                    .collect();
+                let advanced = h.with_shards(|shards| -> Result<bool> {
+                    let mut work: Vec<(
+                        &mut H::Shard,
+                        &mut ShardRt<H::Session>,
+                        Option<EventKey>,
+                    )> = shards
                         .iter_mut()
                         .zip(rts.iter_mut())
                         .enumerate()
                         .filter(|(e, _)| runnable[*e])
                         .map(|(e, (sh, rt))| (sh, rt, windows[e]))
                         .collect();
-                if work.is_empty() {
-                    return Ok(false);
-                }
-                if workers <= 1 || work.len() <= 1 {
-                    let mut any = false;
-                    for (sh, rt, w) in work {
-                        any |= advance_local::<H>(sh, rt, w)?;
+                    if work.is_empty() {
+                        return Ok(false);
                     }
-                    return Ok(any);
+                    if job_txs.is_empty() || work.len() <= 1 {
+                        let mut any = false;
+                        for (sh, rt, w) in work {
+                            any |= advance_local::<H>(sh, rt, w)?;
+                        }
+                        return Ok(any);
+                    }
+                    // Fan the runnable shards over the pool. Each job's
+                    // pointers target state no other job touches (one
+                    // job per shard), and every sent job is acked below
+                    // before this closure — and with it the `&mut`
+                    // borrows backing the pointers — returns.
+                    let mut sent = 0usize;
+                    let mut first_err: Option<anyhow::Error> = None;
+                    for (k, (sh, rt, w)) in work.drain(..).enumerate() {
+                        let job = (SendPtr(sh as *mut H::Shard), SendPtr(rt as *mut _), w);
+                        if job_txs[k % job_txs.len()].send(job).is_err() {
+                            first_err = Some(anyhow!("sharded worker pool hung up"));
+                            break;
+                        }
+                        sent += 1;
+                    }
+                    let mut any = false;
+                    for _ in 0..sent {
+                        match res_rx.recv() {
+                            Ok(Ok(a)) => any |= a,
+                            Ok(Err(e)) => {
+                                first_err.get_or_insert(e);
+                            }
+                            // All workers exited: no pointer can still
+                            // be in use and no ack will ever arrive.
+                            Err(_) => {
+                                first_err
+                                    .get_or_insert(anyhow!("sharded worker pool hung up"));
+                                break;
+                            }
+                        }
+                    }
+                    match first_err {
+                        Some(e) => Err(e),
+                        None => Ok(any),
+                    }
+                })?;
+                if !advanced {
+                    break;
                 }
-                // Round-robin the runnable shards over at most `workers`
-                // scoped threads; each thread owns disjoint shard state,
-                // so scheduling cannot affect the result.
-                let buckets = workers.min(work.len());
-                let mut lanes: Vec<Vec<_>> = (0..buckets).map(|_| Vec::new()).collect();
-                for (k, item) in work.drain(..).enumerate() {
-                    lanes[k % buckets].push(item);
-                }
-                let results: Vec<Result<bool>> = std::thread::scope(|scope| {
-                    let handles: Vec<_> = lanes
-                        .into_iter()
-                        .map(|lane| {
-                            scope.spawn(move || -> Result<bool> {
-                                let mut any = false;
-                                for (sh, rt, w) in lane {
-                                    any |= advance_local::<H>(sh, rt, w)?;
-                                }
-                                Ok(any)
-                            })
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|j| j.join().expect("sharded worker thread panicked"))
-                        .collect()
-                });
-                let mut any = false;
-                for r in results {
-                    any |= r?;
-                }
-                Ok(any)
-            })?;
-            if !advanced {
-                break;
             }
-        }
 
-        // ---- Sync phase: one Global step at the global minimum ---------
-        let Some((e, key)) = rts
-            .iter()
-            .enumerate()
-            .filter_map(|(e, rt)| rt.top().map(|k| (e, k)))
-            .min_by_key(|&(_, k)| k)
-        else {
-            break; // all heaps drained
-        };
-        rts[e].heap.pop();
-        let mut s = rts[e].slots[key.slot].take().expect("heap key points at a live slot");
-        rts[e].free.push(key.slot);
-        if H::step_class(&s) == StepClass::Local {
-            // Only reachable if a horizon was invalid (a session's time
-            // went backwards) — the local fixpoint would have run it.
-            bail!(
-                "sharded scheduling stuck: earliest event (session {}) is Local \
-                 but was not runnable — source broke the non-decreasing-time contract",
-                key.index
-            );
-        }
-        let out = h
-            .step_global(key.index, &mut s)
-            .with_context(|| format!("global step of session {}", key.index))?;
-        match out {
-            StepOutcome::Pending => {
-                let home = h.shard_of(&s).min(rts.len() - 1);
-                let t = H::next_time(&s);
-                let slot = rts[home].alloc(s);
-                // Re-slot but keep the key's deadline component.
-                rts[home].heap.push(Reverse(EventKey::with_deadline(
-                    t,
-                    key.deadline,
-                    key.index,
-                    slot,
-                )));
+            // ---- Sync phase: one Global step at the global minimum -----
+            let Some((e, key)) = rts
+                .iter()
+                .enumerate()
+                .filter_map(|(e, rt)| rt.top().map(|k| (e, k)))
+                .min_by_key(|&(_, k)| k)
+            else {
+                break; // all heaps drained
+            };
+            rts[e].heap.pop();
+            let mut s = rts[e].slots[key.slot].take().expect("heap key points at a live slot");
+            rts[e].free.push(key.slot);
+            if H::step_class(&s) == StepClass::Local {
+                // Only reachable if a horizon was invalid (a session's
+                // time went backwards) — the local fixpoint would have
+                // run it.
+                bail!(
+                    "sharded scheduling stuck: earliest event (session {}) is Local \
+                     but was not runnable — source broke the non-decreasing-time contract",
+                    key.index
+                );
             }
-            StepOutcome::Done => {
-                h.finish(key.index, s)?;
-                in_flight -= 1;
-                admit_up_to(h, &mut rts, &mut next_admit, &mut in_flight, n, cap)?;
+            let out = h
+                .step_global(key.index, &mut s)
+                .with_context(|| format!("global step of session {}", key.index))?;
+            match out {
+                StepOutcome::Pending => {
+                    let home = h.shard_of(&s).min(rts.len() - 1);
+                    let t = H::next_time(&s);
+                    let slot = rts[home].alloc(s);
+                    // Re-slot but keep the key's deadline component.
+                    rts[home].heap.push(Reverse(EventKey::with_deadline(
+                        t,
+                        key.deadline,
+                        key.index,
+                        slot,
+                    )));
+                }
+                StepOutcome::Done => {
+                    h.finish(key.index, s)?;
+                    in_flight -= 1;
+                    admit_up_to(h, &mut rts, &mut next_admit, &mut in_flight, n, cap)?;
+                }
             }
         }
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 /// Adapter running a [`ShardedSource`] through the sequential

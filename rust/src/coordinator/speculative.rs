@@ -14,29 +14,33 @@
 //! intermediate state with the verify payload, and take the cloud's
 //! token at that position — an "offload" in the paper's terms.
 //!
-//! The loop is a resumable state machine ([`SpecSession`]): each
-//! draft→verify round is one `round()` call, and `next_time()` exposes
-//! the virtual time the next round's drafting begins. The event-driven
-//! trace scheduler advances whichever session's round is earliest, so
-//! verify uplinks from concurrent requests interleave on the link and
-//! the dynamic [`Batcher`] can coalesce them. [`speculative_decode`]
-//! keeps the original run-to-completion API for single-request callers.
+//! The loop is a resumable state machine ([`SpecSession`]) split along
+//! the fleet's ownership boundary: [`SpecSession::draft`] runs one draft
+//! leg against the session's home [`EdgeSite`] only (draft blocks,
+//! entropy gating on *that edge's* theta, verify uplink + batcher
+//! admission on *its* link) — a `StepClass::Local` step the sharded
+//! driver runs on the shard's worker thread. [`SpecSession::verify`]
+//! consumes the pending uplink at the shared cloud (verify exec, verdict
+//! downlink, theta feedback) — a Global step on the sync thread.
+//! `next_time()` exposes the virtual time of whichever leg is next, so
+//! the event-driven trace scheduler interleaves concurrent sessions'
+//! legs and the per-edge dynamic [`super::batcher::Batcher`] can
+//! coalesce verify uplinks. [`speculative_decode`] keeps the original
+//! run-to-completion API for single-request callers.
 
 use anyhow::Result;
 
 use crate::cluster::{NetEstimate, SimModel};
-use crate::config::MsaoCfg;
 use crate::optimizer::ThetaController;
 use crate::runtime::engine::KvHandle;
 
-use super::batcher::Batcher;
-use super::engines::{argmax, entropy, Engines};
-use super::timeline::{EdgeId, Site, VirtualCluster};
+use super::engines::{argmax, entropy, EngineCore};
+use super::timeline::{EdgeId, EdgeSite, Site, VirtualCluster};
 
 #[derive(Debug, Clone, Copy)]
 pub struct SpecParams {
-    /// Edge site drafting for this session (its device, uplink, and
-    /// monitor are the ones charged/consulted every round).
+    /// Edge site drafting for this session (its device, uplink, theta,
+    /// batcher, and monitor are the ones charged/consulted every round).
     pub edge: EdgeId,
     pub edge_kv: KvHandle,
     pub cloud_kv: KvHandle,
@@ -162,10 +166,26 @@ pub fn theta_feedback(
     }
 }
 
-/// Resumable speculative-decode loop: one draft→verify round per
-/// `round()` call, with the pipeline cursors (`edge_free`, `commit_t`)
-/// carried across calls so concurrent sessions can interleave rounds on
-/// the shared virtual cluster.
+/// A drafted block shipped to the cloud, awaiting its verdict: the
+/// handoff a session carries from its Local draft leg to the Global
+/// verify leg.
+#[derive(Debug)]
+struct PendingVerify {
+    drafts: Vec<i32>,
+    low_conf: bool,
+    /// Virtual time the edge finished drafting (the pipeline cursor the
+    /// verdict resolves against).
+    draft_end: f64,
+    /// Verify-payload arrival at the cloud — the verify leg's event time.
+    up_arr: f64,
+    /// Whether the uplink rode an open batch window (cheaper verify).
+    piggyback: bool,
+}
+
+/// Resumable speculative-decode loop: one draft leg per `draft()` call,
+/// one verify leg per `verify()` call, with the pipeline cursors
+/// (`edge_free`, `commit_t`) carried across calls so concurrent sessions
+/// can interleave legs on the shared virtual cluster.
 #[derive(Debug)]
 pub struct SpecSession {
     p: SpecParams,
@@ -178,11 +198,13 @@ pub struct SpecSession {
     n_draft_plan: usize,
     /// Current effective draft length (replanned against the monitor).
     n_draft: usize,
+    /// In-flight verify exchange (drafted, not yet judged).
+    pending: Option<PendingVerify>,
     done: bool,
 }
 
 impl SpecSession {
-    pub fn new(eng: &Engines, p: SpecParams) -> Self {
+    pub fn new(eng: &EngineCore, p: SpecParams) -> Self {
         let n_draft = draft_cap(p.n_draft, eng.c.n_spec());
         let out = SpecOutcome {
             tokens: vec![p.first_token],
@@ -196,19 +218,29 @@ impl SpecSession {
             edge_free: p.edge_ready.max(p.cloud_ready),
             n_draft_plan: n_draft,
             n_draft,
+            pending: None,
             done,
             p,
         }
     }
 
     /// Virtual time of this session's next event: the start of the next
-    /// draft block (or the final commit once the loop is done).
+    /// draft block, the cloud-side verify of the block in flight, or the
+    /// final commit once the loop is done.
     pub fn next_time(&self) -> f64 {
         if self.done {
             self.commit_t
+        } else if let Some(pv) = &self.pending {
+            pv.up_arr
         } else {
             self.edge_free
         }
+    }
+
+    /// Whether the next event is the Global verify leg (a drafted block
+    /// is in flight to the cloud) rather than a Local draft leg.
+    pub fn awaiting_verify(&self) -> bool {
+        self.pending.is_some()
     }
 
     pub fn is_done(&self) -> bool {
@@ -222,23 +254,19 @@ impl SpecSession {
         self.out
     }
 
-    /// Run one draft→verify round (Alg. 1 lines 4-13). No-op once done.
-    pub fn round(
-        &mut self,
-        eng: &Engines,
-        vc: &mut VirtualCluster,
-        theta: &mut ThetaController,
-        batcher: &mut Batcher,
-    ) -> Result<()> {
-        if self.done {
+    /// Run one draft leg (Alg. 1 lines 4-7) against the session's home
+    /// edge only: replan against the monitor, draft entropy-gated tokens
+    /// on the edge device, and ship the verify payload up the edge's
+    /// link. Touches nothing but `site` and the session — safe from a
+    /// sharded-driver worker thread. No-op once done or while a verify
+    /// is already in flight.
+    pub fn draft(&mut self, eng: &EngineCore, site: &mut EdgeSite) -> Result<()> {
+        if self.done || self.pending.is_some() {
             return Ok(());
         }
         let c = &eng.c;
         let gen_off = c.gen_off();
-        let n_spec = c.n_spec();
-        let vocab = c.vocab();
         let draft_m = SimModel::qwen2vl_2b();
-        let full_m = SimModel::qwen25vl_7b();
         let p = self.p;
 
         // --- monitor-driven replanning (real-time system state) -------
@@ -247,8 +275,8 @@ impl SpecSession {
         // estimate (no-op bit for bit while the estimate sits on the
         // plan's belief — the constant-conditions case).
         if p.adaptive {
-            let est = vc.edges[p.edge].monitor.estimate();
-            let n_new = replan_draft(self.n_draft_plan, &p.planned_net, &est, p.n_max, n_spec);
+            let est = site.monitor.estimate();
+            let n_new = replan_draft(self.n_draft_plan, &p.planned_net, &est, p.n_max, c.n_spec());
             if n_new != self.n_draft {
                 self.n_draft = n_new;
                 self.out.replans += 1;
@@ -273,44 +301,69 @@ impl SpecSession {
             }
             let logits = eng.block(false, false, p.edge_kv, pos, &[input], p.lens)?;
             let ctx = p.seq_paper + (n + j) as f64;
-            let secs = vc.dev(Site::Edge(p.edge)).decode_s(&draft_m, ctx);
-            let (_, end) = vc.exec(Site::Edge(p.edge), t_cursor, secs, draft_m.flops_decode(ctx));
+            let secs = site.dev.decode_s(&draft_m, ctx);
+            let (_, end) = site.exec(t_cursor, secs, draft_m.flops_decode(ctx), p.edge);
             t_cursor = end;
             let h = entropy(&logits);
-            theta.record_entropy(h);
+            site.theta.record_entropy(h);
             let tok = argmax(&logits);
             drafts.push(tok);
             input = tok;
-            if !theta.speculate(h) {
+            if !site.theta.speculate(h) {
                 low_conf = true;
                 break;
             }
         }
-        let m = drafts.len();
         let draft_end = t_cursor;
+
+        // Uplink (with offload state if low confidence), possibly riding
+        // an open batch window on this edge's link.
+        let up_bytes = VERIFY_UP_BYTES + if low_conf { OFFLOAD_STATE_BYTES } else { 0 };
+        let piggyback = p.adaptive && site.batcher.admit(draft_end);
+        let (_, up_arr) = site.send_up(draft_end, up_bytes, piggyback);
+
+        self.pending = Some(PendingVerify { drafts, low_conf, draft_end, up_arr, piggyback });
+        Ok(())
+    }
+
+    /// Run the verify leg for the block in flight (Alg. 1 lines 8-13):
+    /// cloud verify exec, verdict downlink, greedy-prefix acceptance,
+    /// theta feedback on the drafting edge's controller, commit. Needs
+    /// the whole cluster (shared cloud + the edge's downlink/theta), so
+    /// it is a Global step. No-op unless a verify is pending.
+    pub fn verify(&mut self, eng: &EngineCore, vc: &mut VirtualCluster) -> Result<()> {
+        let Some(pv) = self.pending.take() else {
+            return Ok(());
+        };
+        let c = &eng.c;
+        let gen_off = c.gen_off();
+        let n_spec = c.n_spec();
+        let vocab = c.vocab();
+        let full_m = SimModel::qwen25vl_7b();
+        let p = self.p;
+        // Commits only happen here, so the committed prefix is unchanged
+        // since the draft leg built the block.
+        let n = self.out.tokens.len();
+        let last = *self.out.tokens.last().unwrap();
+        let m = pv.drafts.len();
 
         // --- verify phase (cloud) ---------------------------------------
         // Block inputs: [last, d_1..d_m] padded to N_SPEC; logits[r]
         // checks d_{r+1}; logits[m] is the correction/bonus.
         let mut block: Vec<i32> = Vec::with_capacity(n_spec);
         block.push(last);
-        block.extend(&drafts);
+        block.extend(&pv.drafts);
         while block.len() < n_spec {
             block.push(c.pad());
         }
         let cloud_pos = gen_off + n - 1;
         let logits = eng.block(true, true, p.cloud_kv, cloud_pos, &block, p.lens)?;
 
-        // Virtual: uplink (with offload state if low confidence), verify
-        // compute, verdict downlink.
-        let up_bytes = VERIFY_UP_BYTES + if low_conf { OFFLOAD_STATE_BYTES } else { 0 };
-        let piggyback = p.adaptive && batcher.admit(draft_end);
-        let (_, up_arr) = vc.send_up(p.edge, draft_end, up_bytes, piggyback);
         let ctx = p.seq_paper + n as f64;
         // Batched verifies share the cloud's weight streaming: a
         // piggybacked round pays only its incremental compute + KV reads,
         // the window leader pays the full memory-bound pass.
-        let v_secs = if piggyback {
+        let v_secs = if pv.piggyback {
             vc.dev(Site::Cloud).exec_s(
                 full_m.flops_verify((m + 1) as f64, ctx),
                 full_m.kv_bytes_per_token * ctx,
@@ -320,7 +373,7 @@ impl SpecSession {
         };
         let (_, v_end) = vc.exec(
             Site::Cloud,
-            up_arr,
+            pv.up_arr,
             v_secs,
             full_m.flops_verify((m + 1) as f64, ctx),
         );
@@ -330,7 +383,7 @@ impl SpecSession {
         let mut j = 0usize;
         while j < m {
             let row = &logits[j * vocab..(j + 1) * vocab];
-            if argmax(row) == drafts[j] {
+            if argmax(row) == pv.drafts[j] {
                 j += 1;
             } else {
                 break;
@@ -339,13 +392,13 @@ impl SpecSession {
         let correction = argmax(&logits[j * vocab..(j + 1) * vocab]);
         self.out.proposed += m;
         self.out.accepted += j;
-        if low_conf {
+        if pv.low_conf {
             self.out.offloads += 1;
         }
-        theta_feedback(theta, low_conf, j, m);
+        theta_feedback(&mut vc.edges[p.edge].theta, pv.low_conf, j, m);
 
         // Commit d_1..d_j + correction.
-        let mut committed: Vec<i32> = drafts[..j].to_vec();
+        let mut committed: Vec<i32> = pv.drafts[..j].to_vec();
         committed.push(correction);
         let mut hit_eos = false;
         for t in committed {
@@ -369,10 +422,10 @@ impl SpecSession {
         let all_accepted = j == m && p.adaptive;
         if all_accepted {
             // Verify hidden behind next round's drafting.
-            self.edge_free = draft_end;
+            self.edge_free = pv.draft_end;
         } else {
             // Rejection / offload / non-adaptive: edge stalls for verdict.
-            self.edge_free = draft_end.max(v_arr);
+            self.edge_free = pv.draft_end.max(v_arr);
         }
 
         if hit_eos || self.out.tokens.len() >= p.max_new {
@@ -383,18 +436,19 @@ impl SpecSession {
 }
 
 /// Run the speculative loop to completion (single-request callers; the
-/// trace server interleaves rounds through [`SpecSession`] instead).
+/// trace server interleaves legs through [`SpecSession`] instead). The
+/// drafting edge's theta controller and batcher are the ones living on
+/// `vc.edges[p.edge]`.
 pub fn speculative_decode(
-    eng: &Engines,
+    eng: &EngineCore,
     vc: &mut VirtualCluster,
-    theta: &mut ThetaController,
-    _cfg: &MsaoCfg,
-    batcher: &mut Batcher,
     p: SpecParams,
 ) -> Result<SpecOutcome> {
+    let e = p.edge;
     let mut s = SpecSession::new(eng, p);
     while !s.is_done() {
-        s.round(eng, vc, theta, batcher)?;
+        s.draft(eng, &mut vc.edges[e])?;
+        s.verify(eng, vc)?;
     }
     Ok(s.finish())
 }

@@ -40,6 +40,8 @@
 use crate::cluster::network::serialize_s_with;
 use crate::cluster::{DeviceSim, Dir, Link, MemTracker, SystemMonitor};
 use crate::config::Config;
+use crate::coordinator::batcher::Batcher;
+use crate::optimizer::ThetaController;
 
 pub use crate::cluster::{EdgeId, Site};
 
@@ -52,7 +54,11 @@ pub fn edge_seed(seed: u64, id: EdgeId) -> u64 {
 }
 
 /// One edge site of the fleet: an owned device plus its own link to the
-/// cloud, monitor, memory ledger, and occupancy cursors.
+/// cloud, monitor, memory ledger, occupancy cursors, and the edge-local
+/// adaptive state (confidence-threshold controller + verify batcher).
+/// Everything a session's edge-side steps read or write lives here, so
+/// a sharded-driver worker that owns the shard can run those steps
+/// without touching any shared state.
 #[derive(Debug)]
 pub struct EdgeSite {
     pub dev: DeviceSim,
@@ -61,6 +67,14 @@ pub struct EdgeSite {
     /// (EMA bandwidth/RTT/load) — fed by its transfers and exec waits.
     pub monitor: SystemMonitor,
     pub mem: MemTracker,
+    /// Per-edge confidence-threshold controller (Alg. 1): drafts on this
+    /// edge gate on *its* threshold, and cloud-verify feedback (a global
+    /// step) adapts it. Split per edge so threshold calibration is a
+    /// device-local concern, as in the paper's per-device adaptation.
+    pub theta: ThetaController,
+    /// Per-edge dynamic batcher: verify uplinks from sessions drafting
+    /// on this edge coalesce over this edge's link.
+    pub batcher: Batcher,
     pub flops: f64,
     busy: f64,
     up_busy: f64,
@@ -99,6 +113,47 @@ impl EdgeSite {
         // Queue-depth observation: how long the op waited.
         self.monitor.observe_wait(Site::Edge(id), start - earliest);
         (start, end)
+    }
+
+    /// Transfer `bytes` over this edge's link in direction `dir`,
+    /// starting no earlier than `earliest`. Returns (serialization end,
+    /// arrival at the far side). Touches only this site's link cursors
+    /// and monitor — safe from a sharded-driver worker thread that owns
+    /// the shard; [`VirtualCluster::send_up`]/[`send_down`] delegate
+    /// here.
+    fn transfer(&mut self, dir: Dir, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
+        let busy = match dir {
+            Dir::Up => self.up_busy,
+            Dir::Down => self.down_busy,
+        };
+        let start = busy.max(earliest);
+        let (bw, rtt) = self.link.conditions_at(start);
+        let ser = serialize_s_with(bw, bytes);
+        let end = start + ser;
+        match dir {
+            Dir::Up => {
+                self.up_busy = end;
+                self.link.uplink_bytes += bytes;
+            }
+            Dir::Down => {
+                self.down_busy = end;
+                self.link.downlink_bytes += bytes;
+            }
+        }
+        self.link.transfers += 1;
+        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
+        self.monitor.observe_transfer(bw, rtt);
+        (end, end + prop)
+    }
+
+    /// Transfer `bytes` edge->cloud on this edge's uplink.
+    pub fn send_up(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
+        self.transfer(Dir::Up, earliest, bytes, skip_propagation)
+    }
+
+    /// Transfer `bytes` cloud->edge on this edge's downlink.
+    pub fn send_down(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
+        self.transfer(Dir::Down, earliest, bytes, skip_propagation)
     }
 }
 
@@ -141,6 +196,14 @@ impl VirtualCluster {
                 link: Link::with_dynamics(site.network, &site.dynamics, edge_seed(seed, id)),
                 monitor: SystemMonitor::new(&site.network, cfg.serve.monitor_ema),
                 mem: MemTracker::new(),
+                // Uncalibrated until a serve path installs the
+                // coordinator's calibrated controller (server::prepare).
+                theta: ThetaController::from_calibration(&cfg.msao, &[]),
+                batcher: Batcher::new(
+                    cfg.serve.batch_wait_ms,
+                    cfg.serve.verify_batch,
+                    true,
+                ),
                 flops: 0.0,
                 busy: 0.0,
                 up_busy: 0.0,
@@ -194,47 +257,10 @@ impl VirtualCluster {
         }
     }
 
-    /// Transfer `bytes` over `edge`'s link in direction `dir`, starting
-    /// no earlier than `earliest`. Returns (serialization end, arrival
-    /// at the far side). `skip_propagation` models a batched/piggybacked
-    /// message that rides an already-open exchange window (dynamic
-    /// batcher). Conditions are sampled at the serialization start
-    /// time; the transfer reports the bandwidth/RTT it experienced to
-    /// the edge's monitor.
-    fn transfer(
-        &mut self,
-        edge: EdgeId,
-        dir: Dir,
-        earliest: f64,
-        bytes: u64,
-        skip_propagation: bool,
-    ) -> (f64, f64) {
-        let site = &mut self.edges[edge];
-        let busy = match dir {
-            Dir::Up => site.up_busy,
-            Dir::Down => site.down_busy,
-        };
-        let start = busy.max(earliest);
-        let (bw, rtt) = site.link.conditions_at(start);
-        let ser = serialize_s_with(bw, bytes);
-        let end = start + ser;
-        match dir {
-            Dir::Up => {
-                site.up_busy = end;
-                site.link.uplink_bytes += bytes;
-            }
-            Dir::Down => {
-                site.down_busy = end;
-                site.link.downlink_bytes += bytes;
-            }
-        }
-        site.link.transfers += 1;
-        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
-        site.monitor.observe_transfer(bw, rtt);
-        (end, end + prop)
-    }
-
-    /// Transfer `bytes` edge->cloud on `edge`'s uplink.
+    /// Transfer `bytes` edge->cloud on `edge`'s uplink. `skip_propagation`
+    /// models a batched/piggybacked message riding an already-open
+    /// exchange window (dynamic batcher); conditions are sampled at the
+    /// serialization start time and reported to the edge's monitor.
     pub fn send_up(
         &mut self,
         edge: EdgeId,
@@ -242,7 +268,7 @@ impl VirtualCluster {
         bytes: u64,
         skip_propagation: bool,
     ) -> (f64, f64) {
-        self.transfer(edge, Dir::Up, earliest, bytes, skip_propagation)
+        self.edges[edge].send_up(earliest, bytes, skip_propagation)
     }
 
     /// Transfer `bytes` cloud->edge on `edge`'s downlink.
@@ -253,7 +279,7 @@ impl VirtualCluster {
         bytes: u64,
         skip_propagation: bool,
     ) -> (f64, f64) {
-        self.transfer(edge, Dir::Down, earliest, bytes, skip_propagation)
+        self.edges[edge].send_down(earliest, bytes, skip_propagation)
     }
 
     pub fn mem(&mut self, site: Site) -> &mut MemTracker {

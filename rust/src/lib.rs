@@ -34,12 +34,12 @@
 //! ```ignore
 //! use msao::coordinator::{serve, Coordinator, Mode, PolicyKind, TraceSpec};
 //!
-//! let mut coord = Coordinator::new(Config::default())?;
+//! let coord = Coordinator::new(Config::default())?;
 //! let spec = TraceSpec::new(PolicyKind::Msao(Mode::Msao))
 //!     .trace(items, arrivals)
 //!     .seed(42)
 //!     .concurrency(8);
-//! let result = serve(&mut coord, &spec)?;
+//! let result = serve(&coord, &spec)?;
 //! ```
 
 pub mod baselines;

@@ -132,8 +132,8 @@ fn main() -> Result<()> {
             let conc = spec.effective_concurrency(&cfg);
             let workers = spec.effective_workers(&cfg);
             let n_edges = cfg.edge_sites().len();
-            let mut coord = Coordinator::new(cfg)?;
-            let res = serve(&mut coord, &spec)?;
+            let coord = Coordinator::new(cfg)?;
+            let res = serve(&coord, &spec)?;
             let sum = summarize(&res.records);
             println!(
                 "mode={mode} n={n} seed={} concurrency={conc} edges={n_edges} assign={} \

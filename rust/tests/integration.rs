@@ -11,8 +11,8 @@ use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, NetworkScenario, Segmen
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
-    serve, serve_materialized_ref, testbed, Assign, Batcher, Coordinator, Mode, PolicyKind,
-    Sched, SloClass, TraceSpec,
+    serve, serve_materialized_ref, session_seed, testbed, Assign, Batcher, Coordinator, Mode,
+    PolicyKind, Sched, SloClass, TraceSpec,
 };
 use msao::metrics::summarize;
 use msao::scenario::ScenarioSpec;
@@ -253,14 +253,16 @@ fn scheduler_concurrency_one_reproduces_sequential_fcfs() {
     let spec = msao_spec(items.clone(), arrivals.clone(), Mode::Msao, 5).concurrency(1);
     let sched = serve(&mut c, &spec).unwrap();
 
-    // Seed FCFS reference: one request to completion at a time, sharing
-    // testbed, batcher and theta exactly like the seed serve_trace did.
+    // Seed FCFS reference: one request to completion at a time on a
+    // shared testbed whose edge-0 theta controller and batcher carry
+    // the adaptive state across calls — exactly what the trace driver's
+    // `prepare` installs on every edge before admitting sessions.
     let cfg = c.cfg.clone();
     let mut vc = testbed(&cfg, 5, &PolicyKind::Msao(Mode::Msao).resident_profile());
-    let mut batcher = Batcher::new(cfg.serve.batch_wait_ms, cfg.serve.verify_batch, true);
-    let mut theta = c.theta();
+    vc.edges[0].theta = c.theta();
+    vc.edges[0].batcher = Batcher::new(cfg.serve.batch_wait_ms, cfg.serve.verify_batch, true);
     for (i, (item, &arr)) in items.iter().zip(&arrivals).enumerate() {
-        let rec = c.serve(&mut vc, &mut batcher, &mut theta, item, arr, Mode::Msao).unwrap();
+        let rec = c.serve(&mut vc, item, arr, Mode::Msao, session_seed(5, i)).unwrap();
         let s = &sched.records[i];
         assert_eq!(rec.tokens_out, s.tokens_out, "req {i}: tokens");
         assert_eq!(rec.accepted, s.accepted, "req {i}: accepted");

@@ -755,6 +755,174 @@ fn prop_sharded_timeline_fleet_bitwise_equal_sequential() {
     }
 }
 
+// --- sharded real serve --------------------------------------------------------
+
+/// Engine-backed suite below needs the AOT artifacts; without them it
+/// self-skips (cleanly green) like the integration tests do.
+fn serve_artifacts_built() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists()
+}
+
+/// Bitwise record equality for the sharded-vs-sequential serve pins.
+/// Includes the sampled `correct` draw: per-session RNG streams are
+/// salted from (trace seed, request index), so the quality draws must
+/// survive any worker interleave too.
+fn assert_serve_records_equal(a: &msao::metrics::ExecRecord, b: &msao::metrics::ExecRecord, what: &str) {
+    assert_eq!(a.tokens_out, b.tokens_out, "{what}: tokens_out");
+    assert_eq!(a.accepted, b.accepted, "{what}: accepted");
+    assert_eq!(a.proposed, b.proposed, "{what}: proposed");
+    assert_eq!(a.offloads, b.offloads, "{what}: offloads");
+    assert_eq!(a.bytes_up, b.bytes_up, "{what}: bytes_up");
+    assert_eq!(a.bytes_down, b.bytes_down, "{what}: bytes_down");
+    assert_eq!(a.t_done.to_bits(), b.t_done.to_bits(), "{what}: t_done");
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: latency");
+    assert_eq!(a.prefill_s.to_bits(), b.prefill_s.to_bits(), "{what}: prefill");
+    assert_eq!(a.flops_edge.to_bits(), b.flops_edge.to_bits(), "{what}: flops_edge");
+    assert_eq!(a.flops_cloud.to_bits(), b.flops_cloud.to_bits(), "{what}: flops_cloud");
+    assert_eq!(a.p_correct.to_bits(), b.p_correct.to_bits(), "{what}: p_correct");
+    assert_eq!(a.correct, b.correct, "{what}: correct");
+    assert_eq!(a.edge_id, b.edge_id, "{what}: edge_id");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    assert_eq!(a.degraded, b.degraded, "{what}: degraded");
+}
+
+/// Heterogeneous fleet of four (300/120/60 Mbps constant + one flaky
+/// Markov edge) shared by the real-serve sharding pins.
+fn sharded_serve_coord() -> msao::coordinator::Coordinator {
+    use msao::coordinator::Coordinator;
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    cfg.network.bandwidth_mbps = 300.0;
+    let base = cfg.network;
+    let mut mid = base;
+    mid.bandwidth_mbps = 120.0;
+    mid.rtt_ms = 40.0;
+    let mut weak = base;
+    weak.bandwidth_mbps = 60.0;
+    weak.rtt_ms = 60.0;
+    cfg.fleet = vec![
+        EdgeSiteCfg { device: cfg.edge, network: base, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg { device: cfg.edge, network: mid, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg { device: cfg.edge, network: weak, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg {
+            device: cfg.edge,
+            network: base,
+            dynamics: NetworkDynamics::Scenario(NetworkScenario::Flaky),
+        },
+    ];
+    Coordinator::new(cfg).expect("run `make artifacts` first")
+}
+
+#[test]
+fn prop_sharded_real_serve_bitwise_equal_sequential() {
+    // The tentpole pin on the REAL serve path: with per-session salted
+    // RNG streams, per-edge theta/batcher state, and Local-classified
+    // edge phases, `msao serve` through the sharded driver must
+    // reproduce the sequential driver bit for bit — every record
+    // (times, bytes, flops, quality draws), the fleet totals, and the
+    // event-sequence hash — at workers {2, 4} x assign {RoundRobin,
+    // LeastLoaded, Pinned} x concurrency {1, 8} on a heterogeneous
+    // fleet of four including a flaky Markov edge.
+    if !serve_artifacts_built() {
+        eprintln!("skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    use msao::coordinator::{serve, Assign, Mode, PolicyKind, TraceSpec};
+    let c = sharded_serve_coord();
+    let make = |assign: Assign, conc: usize, workers: usize| {
+        let mut gen = Generator::new(71);
+        let n = 8;
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 3.0);
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(17)
+            .concurrency(conc)
+            .assign(assign)
+            .workers(workers)
+    };
+    for assign in [Assign::RoundRobin, Assign::LeastLoaded, Assign::Pinned(1)] {
+        for conc in [1usize, 8] {
+            let golden = serve(&c, &make(assign, conc, 1)).unwrap();
+            for workers in [2usize, 4] {
+                let what = format!("{assign:?} conc {conc} w{workers}");
+                let res = serve(&c, &make(assign, conc, workers)).unwrap();
+                assert_eq!(golden.events, res.events, "{what}: event count");
+                assert_eq!(golden.events_hash, res.events_hash, "{what}: event hash");
+                assert_eq!(golden.records.len(), res.records.len(), "{what}: record count");
+                for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+                    assert_serve_records_equal(a, b, &format!("{what} req {i}"));
+                }
+                assert_eq!(golden.uplink_bytes, res.uplink_bytes, "{what}: uplink");
+                assert_eq!(golden.downlink_bytes, res.downlink_bytes, "{what}: downlink");
+                assert_eq!(
+                    golden.batch_amortization.to_bits(),
+                    res.batch_amortization.to_bits(),
+                    "{what}: amortization"
+                );
+                assert_eq!(
+                    golden.cloud_wait_s.to_bits(),
+                    res.cloud_wait_s.to_bits(),
+                    "{what}: cloud wait"
+                );
+                for (ga, ra) in golden.per_edge.iter().zip(&res.per_edge) {
+                    assert_eq!(ga.requests, ra.requests, "{what} edge {}: requests", ga.edge_id);
+                    assert_eq!(
+                        ga.net_estimate.bandwidth_mbps.to_bits(),
+                        ra.net_estimate.bandwidth_mbps.to_bits(),
+                        "{what} edge {}: bw estimate",
+                        ga.edge_id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_real_serve_edf_admission_bitwise_equal_sequential() {
+    // EDF + admission control under sharding: deadline-keyed event
+    // ordering and the predictive admission decisions (shed / degrade)
+    // are Global steps, so the sharded driver must reproduce them — and
+    // everything downstream of them — bit for bit at workers {2, 4}.
+    if !serve_artifacts_built() {
+        eprintln!("skipped: artifacts/ not built (run `make artifacts`)");
+        return;
+    }
+    use msao::coordinator::{serve, Mode, PolicyKind, Sched, SloClass, TraceSpec};
+    let c = sharded_serve_coord();
+    let make = |workers: usize| {
+        let mut gen = Generator::new(4242);
+        let n = 9;
+        let mut items = gen.items(Benchmark::Vqa, n);
+        let arrivals: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+        for (i, it) in items.iter_mut().enumerate() {
+            it.slo = SloClass::ALL[i % 3];
+            it.deadline_s = Some(if i % 2 == 0 { 0.5 } else { 2.0 });
+        }
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(29)
+            .concurrency(4)
+            .sched(Sched::Edf)
+            .admission(true)
+            .workers(workers)
+    };
+    let golden = serve(&c, &make(1)).unwrap();
+    for workers in [2usize, 4] {
+        let res = serve(&c, &make(workers)).unwrap();
+        assert_eq!(golden.events, res.events, "w{workers}: event count");
+        assert_eq!(golden.events_hash, res.events_hash, "w{workers}: event hash");
+        assert_eq!(golden.shed, res.shed, "w{workers}: shed count");
+        assert_eq!(golden.degraded, res.degraded, "w{workers}: degraded count");
+        for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+            assert_serve_records_equal(a, b, &format!("edf w{workers} req {i}"));
+        }
+    }
+}
+
 // --- optimizer -------------------------------------------------------------------
 
 #[test]
