@@ -604,7 +604,93 @@ fn serving_scaling_grid() -> Result<()> {
 
     scenario_compile_section(&mut out, quick)?;
 
+    fault_plane_section(&mut out)?;
+
     out.write("BENCH_serving.json")?;
+    Ok(())
+}
+
+// ---------------- fault-plane substrate ---------------------------------
+//
+// The `faults` section of BENCH_serving.json: per-op cost of the fault
+// plane (seeded fault draws + backoff, lazy outage-window renewal, and
+// the fault-aware uplink against the plain one). All engine-free. The
+// armed uplink runs the fault draw, the timeout computation from the
+// monitor's belief, and the degraded-link check on every transfer, so
+// its overhead vs `send_up` is exactly what a `[faults]` table costs a
+// serve run per offload.
+
+fn fault_plane_section(out: &mut BenchJson) -> Result<()> {
+    use msao::cluster::{FaultPlane, OutageProcess};
+    use msao::config::FaultsCfg;
+    use msao::coordinator::SendOutcome;
+
+    let fc = FaultsCfg {
+        p_fault: 0.2,
+        outage_gap_s: 10.0,
+        outage_dur_s: 1.0,
+        ..FaultsCfg::default()
+    };
+
+    let mut plane = FaultPlane::new(fc, 11);
+    let draw = bench("faults/draw_fault+backoff x1000", 2000, || {
+        let mut acc = 0.0;
+        for i in 0..1000usize {
+            if plane.draw_fault(i % 3 == 0) {
+                acc += plane.backoff(i % 4);
+            }
+        }
+        black_box(acc);
+    });
+
+    let mut outage = OutageProcess::new(fc.outage_gap_s, fc.outage_dur_s, 13);
+    let outage_stats = bench("faults/outage down_at x1000", 2000, || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            // Bounded window so the lazy renewal history stays small.
+            if let Some(end) = outage.down_at((i % 500) as f64 * 0.2) {
+                acc += end;
+            }
+        }
+        black_box(acc);
+    });
+
+    // Armed vs unarmed uplink on the same cluster shape.
+    let mut cfg = Config::default();
+    cfg.network.jitter = 0.0;
+    let mut plain = VirtualCluster::new(&cfg, 5);
+    let plain_stats = bench("faults/send_up unarmed x1000", 1000, || {
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            let (_, arr) = plain.send_up(0, i as f64 * 1e-3, 4096, false);
+            acc += arr;
+        }
+        black_box(acc);
+    });
+    let mut armed = VirtualCluster::new(&cfg, 5);
+    armed.arm_faults(&fc, 5);
+    let armed_stats = bench("faults/try_send_up armed x1000", 1000, || {
+        let mut acc = 0.0;
+        for i in 0..1000u64 {
+            match armed.edges[0].try_send_up(i as f64 * 1e-3, 4096, false) {
+                SendOutcome::Delivered { arr, .. } => acc += arr,
+                SendOutcome::Faulted { t_fail } => acc += t_fail,
+            }
+        }
+        black_box(acc);
+    });
+
+    for (op, stats) in [
+        ("draw_fault+backoff_x1000", &draw),
+        ("outage_down_at_x1000", &outage_stats),
+        ("send_up_unarmed_x1000", &plain_stats),
+        ("try_send_up_armed_x1000", &armed_stats),
+    ] {
+        out.push(
+            "faults",
+            json::obj(vec![("op", json::s(op)), ("mean_s", json::num(stats.mean_s))]),
+        );
+    }
     Ok(())
 }
 

@@ -13,13 +13,13 @@ use anyhow::Result;
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
 use crate::coordinator::session::{Coordinator, ServeCtx};
-use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, SendOutcome, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
 use crate::workload::Item;
 
-use super::{BPhase, DecodeState, FinishState};
+use super::{BPhase, DecodeState, FinishState, RetryKind};
 
 /// Session start phase, fired at the arrival time: raw payload uplink
 /// on the session's edge, cloud encode + prefill at full fidelity.
@@ -38,12 +38,63 @@ pub(crate) fn start(
     cloud_frac: f64,
     reuse_scale: f64,
 ) -> Result<BPhase> {
+    start_attempt(ctx, vc, item, arrival, arrival, edge, rec, cloud_frac, reuse_scale, 0)
+}
+
+/// One start attempt, fired at `t0` (the arrival for attempt 0, the
+/// backoff-elapsed retry time otherwise). The uplink can fault or the
+/// cloud be inside an unavailability window; either counts a fault and
+/// transitions through [`super::fault_transition`]. Engine work (encode,
+/// prefill, KV) happens only after a delivered, cloud-up attempt, so a
+/// faulted attempt leaks nothing.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn start_attempt(
+    ctx: &ServeCtx,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    t0: f64,
+    edge: EdgeId,
+    rec: &mut ExecRecord,
+    cloud_frac: f64,
+    reuse_scale: f64,
+    attempt: usize,
+) -> Result<BPhase> {
     let n_out = ctx.cfg.msao.max_new_tokens;
 
-    // Raw payload uplink.
+    // Raw payload uplink (re-shipped in full on every retry).
     let bytes = super::full_payload_bytes(item);
-    let (_, up_arr) = vc.send_up(edge, arrival, bytes, false);
-    rec.bytes_up = bytes;
+    let up_arr = match vc.edges[edge].try_send_up(t0, bytes, false) {
+        SendOutcome::Delivered { arr, .. } => arr,
+        SendOutcome::Faulted { t_fail } => {
+            rec.bytes_up += bytes;
+            return Ok(super::fault_transition(
+                vc,
+                edge,
+                rec,
+                item,
+                arrival,
+                t_fail,
+                attempt,
+                RetryKind::Cloud { cloud_frac },
+            ));
+        }
+    };
+    rec.bytes_up += bytes;
+    if let Some(win_end) = vc.cloud_down_at(up_arr) {
+        // Payload landed inside a cloud unavailability window: retry
+        // after service resumes (plus backoff).
+        return Ok(super::fault_transition(
+            vc,
+            edge,
+            rec,
+            item,
+            arrival,
+            win_end.max(up_arr),
+            attempt,
+            RetryKind::Cloud { cloud_frac },
+        ));
+    }
 
     // Cloud encodes + prefills at full fidelity.
     let inp = super::full_inputs(&ctx.eng, item, true)?;

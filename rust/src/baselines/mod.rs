@@ -105,13 +105,67 @@ pub(crate) struct FinishState {
     pub cloud_frac: f64,
 }
 
+/// Which uplink a retry re-attempts. Baselines have no edge fallback —
+/// the paper's point is that they lack MSAO's recovery path — so
+/// exhausted retries fail the request outright.
+pub(crate) enum RetryKind {
+    /// Raw-payload cloud start (Cloud-only, or PerLLM's AllCloud path).
+    Cloud { cloud_frac: f64 },
+    /// PerLLM mid-split hidden-state uplink (edge-side encode/prefill
+    /// charges from the first attempt are kept; only the uplink and the
+    /// cloud half re-run).
+    Split,
+}
+
+/// A faulted uplink awaiting its backoff-delayed retry — a real
+/// scheduler event, so other sessions interleave during the wait.
+pub(crate) struct RetryState {
+    pub kind: RetryKind,
+    /// Virtual time the retry fires (fault time + backoff).
+    pub t_next: f64,
+    /// 0-based index of the attempt this retry will make.
+    pub attempt: usize,
+}
+
 pub(crate) enum BPhase {
     /// Waiting to start (uplink / encode / prefill) at the arrival time.
     Start,
     Decode(Box<DecodeState>),
     Split(Box<SplitState>),
+    /// Faulted uplink; re-attempt at `t_next` (Global).
+    Retry(Box<RetryState>),
     Finish(FinishState),
+    /// Recovery exhausted at `t`: the next step completes the session
+    /// with a record marked `failed` (Global).
+    Failed { t: f64 },
     Done,
+}
+
+/// Shared fault transition for baseline uplinks: count the fault, then
+/// either schedule a backoff-delayed retry (if attempts and the SLO
+/// deadline allow) or fail the request. `attempt` is the 0-based index
+/// of the attempt that just faulted.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fault_transition(
+    vc: &mut VirtualCluster,
+    edge: EdgeId,
+    rec: &mut ExecRecord,
+    item: &Item,
+    arrival: f64,
+    t_fail: f64,
+    attempt: usize,
+    kind: RetryKind,
+) -> BPhase {
+    rec.faults += 1;
+    let cfg = vc.edges[edge].faults_cfg().expect("baseline fault without an armed FaultPlane");
+    if attempt < cfg.max_retries {
+        let t_next = t_fail + vc.edges[edge].retry_backoff(attempt);
+        if item.deadline_s.map_or(true, |d| t_next <= arrival + d) {
+            rec.retries += 1;
+            return BPhase::Retry(Box::new(RetryState { kind, t_next, attempt: attempt + 1 }));
+        }
+    }
+    BPhase::Failed { t: t_fail }
 }
 
 /// One baseline request moving through the serving pipeline as a
@@ -210,13 +264,22 @@ impl<'a> BaselineSession<'a> {
             BPhase::Start => self.arrival,
             BPhase::Decode(d) => d.t,
             BPhase::Split(s) => s.t,
+            BPhase::Retry(r) => r.t_next,
             BPhase::Finish(f) => f.t_done,
+            BPhase::Failed { t } => *t,
             BPhase::Done => f64::INFINITY,
         }
     }
 
     pub fn is_done(&self) -> bool {
         matches!(self.phase, BPhase::Done)
+    }
+
+    /// Abort the session as a request-level failure at virtual time `t`
+    /// (the engine/actor error path): the next Global step completes it
+    /// with a record marked `failed` instead of aborting the trace.
+    pub fn mark_failed(&mut self, t: f64) {
+        self.phase = BPhase::Failed { t };
     }
 
     pub fn into_record(self) -> ExecRecord {
@@ -244,7 +307,14 @@ impl<'a> BaselineSession<'a> {
             BPhase::Start => self.step_start(vc)?,
             BPhase::Decode(d) => step_decode(&self.ctx, vc, d)?,
             BPhase::Split(s) => perllm::split_step(&self.ctx, vc, &mut self.rec, s)?,
+            BPhase::Retry(r) => self.step_retry(vc, *r)?,
             BPhase::Finish(f) => self.step_finish(vc, f)?,
+            BPhase::Failed { t } => {
+                self.rec.failed = true;
+                self.rec.t_done = t;
+                self.rec.latency_s = t - self.arrival;
+                BPhase::Done
+            }
             BPhase::Done => BPhase::Done,
         };
         Ok(if matches!(self.phase, BPhase::Done) {
@@ -295,6 +365,36 @@ impl<'a> BaselineSession<'a> {
                 scale,
             ),
             Baseline::PerLlm => perllm::start(ctx, vc, item, t0, edge, &mut self.rec, scale),
+        }
+    }
+
+    // ---------------- backoff elapsed: re-attempt the uplink ------------
+    fn step_retry(&mut self, vc: &mut VirtualCluster, r: RetryState) -> Result<BPhase> {
+        let (item, arrival, edge, scale) = (self.item, self.arrival, self.edge, self.reuse_scale);
+        let ctx = &self.ctx;
+        match r.kind {
+            RetryKind::Cloud { cloud_frac } => cloud_only::start_attempt(
+                ctx,
+                vc,
+                item,
+                arrival,
+                r.t_next,
+                edge,
+                &mut self.rec,
+                cloud_frac,
+                scale,
+                r.attempt,
+            ),
+            RetryKind::Split => perllm::split_retry(
+                ctx,
+                vc,
+                item,
+                arrival,
+                edge,
+                &mut self.rec,
+                scale,
+                &r,
+            ),
         }
     }
 

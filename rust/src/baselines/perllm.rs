@@ -19,13 +19,13 @@ use anyhow::Result;
 use crate::cluster::{activation_bytes, kv_bytes, SimModel};
 use crate::coordinator::engines::argmax;
 use crate::coordinator::session::{Coordinator, ServeCtx};
-use crate::coordinator::timeline::{EdgeId, Site, VirtualCluster};
+use crate::coordinator::timeline::{EdgeId, SendOutcome, Site, VirtualCluster};
 use crate::metrics::ExecRecord;
 use crate::quality::{self, Capability, ServedInfo};
 use crate::util::Rng;
 use crate::workload::Item;
 
-use super::{BPhase, FinishState, SplitState};
+use super::{BPhase, FinishState, RetryKind, RetryState, SplitState};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Partition {
@@ -189,11 +189,8 @@ fn split_start(
     rec: &mut ExecRecord,
     reuse_scale: f64,
 ) -> Result<BPhase> {
-    let n_out = ctx.cfg.msao.max_new_tokens;
-
     let inp = super::full_inputs(&ctx.eng, item, false)?;
     let vit = SimModel::vision_encoder();
-    let full_m = SimModel::qwen25vl_7b();
     let half = half_model();
 
     let enc_frames = inp.frames.max(1) as f64;
@@ -210,9 +207,80 @@ fn split_start(
         reuse_scale * vc.dev(Site::Edge(edge)).prefill_s(&half, inp.seq_paper),
         reuse_scale * half.flops_prefill(inp.seq_paper),
     );
+    split_uplink(ctx, vc, &inp, item, arrival, front_end, edge, rec, reuse_scale, 0)
+}
+
+/// Backoff elapsed: re-attempt the hidden-state uplink. The edge-side
+/// encode/front-prefill charges from the first attempt stand (the edge
+/// already did that work); only the prefill *inputs* are recomputed —
+/// pure engine calls that allocate nothing persistent.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn split_retry(
+    ctx: &ServeCtx,
+    vc: &mut VirtualCluster,
+    item: &Item,
+    arrival: f64,
+    edge: EdgeId,
+    rec: &mut ExecRecord,
+    reuse_scale: f64,
+    r: &RetryState,
+) -> Result<BPhase> {
+    let inp = super::full_inputs(&ctx.eng, item, false)?;
+    split_uplink(ctx, vc, &inp, item, arrival, r.t_next, edge, rec, reuse_scale, r.attempt)
+}
+
+/// Hidden-state uplink + cloud back-half prefill — the faultable tail of
+/// the mid-split start, shared by the first attempt and every retry.
+/// Per-token split hops and downlinks are deliberately outside the fault
+/// plane's scope (the substrate faults *offload transfers*, the big
+/// serialized payloads; see docs).
+#[allow(clippy::too_many_arguments)]
+fn split_uplink(
+    ctx: &ServeCtx,
+    vc: &mut VirtualCluster,
+    inp: &super::FullInputs,
+    item: &Item,
+    arrival: f64,
+    t_up: f64,
+    edge: EdgeId,
+    rec: &mut ExecRecord,
+    reuse_scale: f64,
+    attempt: usize,
+) -> Result<BPhase> {
+    let n_out = ctx.cfg.msao.max_new_tokens;
+    let full_m = SimModel::qwen25vl_7b();
+    let half = half_model();
+
     let hidden_bytes = (inp.seq_paper * full_m.d * 2.0) as u64;
-    let (_, up_arr) = vc.send_up(edge, front_end, hidden_bytes, false);
+    let up_arr = match vc.edges[edge].try_send_up(t_up, hidden_bytes, false) {
+        SendOutcome::Delivered { arr, .. } => arr,
+        SendOutcome::Faulted { t_fail } => {
+            rec.bytes_up += hidden_bytes;
+            return Ok(super::fault_transition(
+                vc,
+                edge,
+                rec,
+                item,
+                arrival,
+                t_fail,
+                attempt,
+                RetryKind::Split,
+            ));
+        }
+    };
     rec.bytes_up += hidden_bytes;
+    if let Some(win_end) = vc.cloud_down_at(up_arr) {
+        return Ok(super::fault_transition(
+            vc,
+            edge,
+            rec,
+            item,
+            arrival,
+            win_end.max(up_arr),
+            attempt,
+            RetryKind::Split,
+        ));
+    }
     let (_, pre_end) = vc.exec(
         Site::Cloud,
         up_arr,

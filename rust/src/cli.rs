@@ -34,6 +34,11 @@
 //!   the class named by `--slo latency-critical|standard|best-effort`
 //!   (default standard); `--admission on|off` enables monitor-driven
 //!   shed/degrade at arrival.
+//! * Fault flags: `--fault-p P` arms the fault plane with a
+//!   per-transfer fault probability P (0 arms only the timeout
+//!   detector); `--fault-retries K` caps the retry budget. Other
+//!   `[faults]` knobs keep their scenario/config values, or the
+//!   defaults when the flags arm a fresh plane.
 
 use std::collections::HashMap;
 
@@ -181,6 +186,21 @@ fn apply_serve_overrides(mut spec: TraceSpec, args: &Args) -> Result<TraceSpec> 
             other => bail!("--admission takes on|off, got {other:?}"),
         });
     }
+    // Fault-plane overrides: adjust an already-armed plane (scenario
+    // `[faults]`) or arm a fresh one from the defaults. Absent both
+    // flags the spec is untouched — the no-faults bitwise guarantee
+    // holds for every existing invocation.
+    if args.get("fault-p").is_some() || args.get("fault-retries").is_some() {
+        let mut fc = spec.faults.unwrap_or_default();
+        if let Some(p) = args.get("fault-p") {
+            fc.p_fault = p.parse().context("parsing --fault-p")?;
+        }
+        if let Some(r) = args.get("fault-retries") {
+            fc.max_retries = r.parse().context("parsing --fault-retries")?;
+        }
+        fc.validate().context("applying --fault-p/--fault-retries")?;
+        spec = spec.faults(fc);
+    }
     Ok(spec)
 }
 
@@ -254,6 +274,32 @@ mod tests {
         let (_, spec) =
             serve_spec(&argv(&["serve", "--n", "2", "--deadline", "-1"])).unwrap();
         assert!(spec.validate().is_err(), "negative deadline must fail validation");
+    }
+
+    #[test]
+    fn fault_flags_map_to_spec() {
+        use crate::config::FaultsCfg;
+        // No flags: the spec stays unarmed (the bitwise guarantee).
+        let (_, spec) = serve_spec(&argv(&["serve", "--n", "2"])).unwrap();
+        assert_eq!(spec.faults, None);
+        // --fault-p arms the plane; unset knobs come from the defaults.
+        let (_, spec) =
+            serve_spec(&argv(&["serve", "--n", "2", "--fault-p", "0.25"])).unwrap();
+        let fc = spec.faults.unwrap();
+        assert_eq!(fc.p_fault, 0.25);
+        assert_eq!(fc.max_retries, FaultsCfg::default().max_retries);
+        spec.validate().unwrap();
+        // Both flags together.
+        let (_, spec) = serve_spec(&argv(&[
+            "serve", "--n", "2", "--fault-p", "0.1", "--fault-retries", "0",
+        ]))
+        .unwrap();
+        let fc = spec.faults.unwrap();
+        assert_eq!((fc.p_fault, fc.max_retries), (0.1, 0));
+        // Error paths: out-of-range probability, unparseable values.
+        assert!(serve_spec(&argv(&["serve", "--fault-p", "1.5"])).is_err());
+        assert!(serve_spec(&argv(&["serve", "--fault-p", "x"])).is_err());
+        assert!(serve_spec(&argv(&["serve", "--fault-retries", "-1"])).is_err());
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod site;
 pub use costmodel::{DeviceSim, SimModel};
 pub use memory::{activation_bytes, kv_bytes, MemTracker};
 pub use monitor::{NetEstimate, SystemMonitor};
-pub use network::{Dir, Link};
+pub use network::{Dir, FaultPlane, Link, OutageProcess};
 pub use site::{EdgeId, Site};

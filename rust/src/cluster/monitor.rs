@@ -70,6 +70,18 @@ impl SystemMonitor {
         self.transfers_observed += 1;
     }
 
+    /// A transfer faulted or timed out after `rtt_ms` worth of waiting.
+    /// Deliberately does NOT touch the bandwidth EMA: a truncated
+    /// transfer carries no valid throughput sample, and feeding it in
+    /// would poison the planner's Eq. 14 terms *and* the fault plane's
+    /// own timeout (which is derived from the believed bandwidth),
+    /// cascading into false timeouts. Only the RTT belief absorbs the
+    /// penalty, and the attempt is counted.
+    pub fn observe_fault(&mut self, rtt_ms: f64) {
+        self.est.rtt_ms += self.alpha * (rtt_ms - self.est.rtt_ms);
+        self.transfers_observed += 1;
+    }
+
     /// A device op waited `wait_s` behind `site`'s queue before it could
     /// start. The monitor is already scoped to one edge, so the id
     /// inside [`Site::Edge`] is not inspected — the enum exists so call
@@ -141,6 +153,25 @@ mod tests {
         assert_eq!(e.bandwidth_mbps.to_bits(), c.bandwidth_mbps.to_bits());
         assert_eq!(e.rtt_ms.to_bits(), c.rtt_ms.to_bits());
         assert_eq!(m.transfers_observed, 1000);
+    }
+
+    #[test]
+    fn faulted_transfer_never_feeds_bandwidth_ema() {
+        // Satellite guarantee: a timed-out/faulted transfer records an
+        // RTT penalty only — the bandwidth belief must stay bitwise
+        // identical to what the successful transfers left it at.
+        let c = cfg();
+        let mut m = SystemMonitor::new(&c, 0.3);
+        m.observe_transfer(250.0, 25.0);
+        m.observe_transfer(240.0, 30.0);
+        let bw_before = m.estimate().bandwidth_mbps.to_bits();
+        let rtt_before = m.estimate().rtt_ms;
+        m.observe_fault(120.0);
+        let e = m.estimate();
+        assert_eq!(e.bandwidth_mbps.to_bits(), bw_before, "bandwidth EMA moved on a fault");
+        let want_rtt = rtt_before + 0.3 * (120.0 - rtt_before);
+        assert_eq!(e.rtt_ms.to_bits(), want_rtt.to_bits());
+        assert_eq!(m.transfers_observed, 3, "faulted attempt still counted");
     }
 
     #[test]

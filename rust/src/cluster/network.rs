@@ -19,7 +19,7 @@
 //! [`NetworkCfg`] values untouched and feeds them through the exact
 //! same arithmetic.
 
-use crate::config::{NetworkCfg, NetworkDynamics, NetworkScenario, Segment};
+use crate::config::{FaultsCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment};
 use crate::util::Rng;
 
 /// Serialization time for `bytes` at `bandwidth_mbps` (no propagation).
@@ -280,6 +280,103 @@ impl Link {
     }
 }
 
+/// Cloud unavailability windows as a seeded renewal process: an
+/// exponential gap (mean `gap_s`) of availability, then an exponential
+/// outage (mean `dur_s`), repeating. Windows are generated lazily as
+/// later virtual times are queried — the same lazily-extended pattern
+/// as [`MarkovProcess`] — so the sample path is deterministic given the
+/// seed, and non-monotone queries are answered from the generated
+/// prefix.
+#[derive(Debug, Clone)]
+pub struct OutageProcess {
+    rng: Rng,
+    /// Generated `(start, end)` outage windows, sorted by start.
+    windows: Vec<(f64, f64)>,
+    /// Virtual time covered so far (end of the last generated window).
+    t_end: f64,
+    gap_s: f64,
+    dur_s: f64,
+}
+
+impl OutageProcess {
+    /// `gap_s` and `dur_s` must be > 0 (enforced by
+    /// [`FaultsCfg::validate`]; outages are simply not armed when
+    /// `outage_gap_s` is 0).
+    pub fn new(gap_s: f64, dur_s: f64, seed: u64) -> Self {
+        OutageProcess {
+            rng: Rng::seed_from_u64(seed),
+            windows: Vec::new(),
+            t_end: 0.0,
+            gap_s,
+            dur_s,
+        }
+    }
+
+    /// Extend the renewal process until the generated prefix covers `t`.
+    fn ensure(&mut self, t: f64) {
+        while self.t_end <= t {
+            let start = self.t_end + self.rng.exp(1.0 / self.gap_s);
+            let end = start + self.rng.exp(1.0 / self.dur_s);
+            self.windows.push((start, end));
+            self.t_end = end;
+        }
+    }
+
+    /// Is the cloud down at virtual time `t`? Returns the end of the
+    /// covering outage window (when service resumes), `None` when up.
+    pub fn down_at(&mut self, t: f64) -> Option<f64> {
+        self.ensure(t);
+        let idx = self.windows.partition_point(|w| w.0 <= t);
+        if idx == 0 {
+            return None;
+        }
+        let (_, end) = self.windows[idx - 1];
+        (t < end).then_some(end)
+    }
+}
+
+/// Per-edge fault sampler + backoff schedule. Owns a dedicated salted
+/// RNG stream so fault draws never perturb the link's jitter or Markov
+/// streams: a run with faults disabled (no `FaultPlane` armed) is bit
+/// for bit the pre-fault-plane run.
+#[derive(Debug, Clone)]
+pub struct FaultPlane {
+    pub cfg: FaultsCfg,
+    rng: Rng,
+}
+
+impl FaultPlane {
+    pub fn new(cfg: FaultsCfg, seed: u64) -> Self {
+        FaultPlane { cfg, rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Seeded per-transfer fault draw. `degraded` marks a link whose
+    /// current bandwidth is below the base level (Markov/trace bad
+    /// state), where the fault probability is boosted.
+    pub fn draw_fault(&mut self, degraded: bool) -> bool {
+        let p = if degraded {
+            (self.cfg.p_fault * self.cfg.degraded_boost).min(1.0)
+        } else {
+            self.cfg.p_fault
+        };
+        self.rng.bool(p)
+    }
+
+    /// Backoff delay before retry attempt `attempt` (0-based):
+    /// `min(cap, base * 2^attempt)` scaled by a seeded uniform jitter
+    /// factor in [1, 1 + jitter].
+    pub fn backoff(&mut self, attempt: usize) -> f64 {
+        let exp = self.cfg.backoff_base_s * 2.0_f64.powi(attempt.min(60) as i32);
+        let delay = exp.min(self.cfg.backoff_cap_s);
+        let j = if self.cfg.jitter > 0.0 {
+            1.0 + self.cfg.jitter * self.rng.f64()
+        } else {
+            1.0
+        };
+        delay * j
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,6 +488,90 @@ mod tests {
         assert_eq!(l.conditions_at(8.5), (300.0, 20.0)); // recovered
         assert_eq!(l.conditions_at(15.0), (90.0, 30.0)); // next burst
         assert_eq!(l.conditions_at(1e6), (300.0, 20.0)); // beyond horizon
+    }
+
+    #[test]
+    fn outage_process_is_seeded_deterministic() {
+        let mut a = OutageProcess::new(5.0, 1.0, 42);
+        let mut b = OutageProcess::new(5.0, 1.0, 42);
+        let mut other = OutageProcess::new(5.0, 1.0, 43);
+        let mut saw_down = false;
+        let mut saw_up = false;
+        let mut differs = false;
+        for i in 0..2000 {
+            let t = i as f64 * 0.1;
+            let da = a.down_at(t);
+            assert_eq!(da, b.down_at(t), "seed-determinism at t={t}");
+            match da {
+                Some(end) => {
+                    saw_down = true;
+                    // The window end is in the future and service is
+                    // indeed up again at that instant.
+                    assert!(end > t);
+                    assert!(a.down_at(end).is_none(), "still down at window end {end}");
+                }
+                None => saw_up = true,
+            }
+            differs |= da != other.down_at(t);
+        }
+        assert!(saw_down, "no outage in 200 s at mean gap 5 s");
+        assert!(saw_up, "never up at mean duty 5:1");
+        assert!(differs, "independent seeds produced identical outage paths");
+        // Non-monotone queries answered from the generated prefix.
+        let early = a.down_at(0.05);
+        assert_eq!(early, b.down_at(0.05));
+    }
+
+    #[test]
+    fn fault_plane_backoff_doubles_caps_and_jitters_deterministically() {
+        let fc = FaultsCfg {
+            p_fault: 0.5,
+            backoff_base_s: 0.1,
+            backoff_cap_s: 0.5,
+            jitter: 0.0,
+            ..FaultsCfg::default()
+        };
+        let mut fp = FaultPlane::new(fc, 7);
+        assert!((fp.backoff(0) - 0.1).abs() < 1e-12);
+        assert!((fp.backoff(1) - 0.2).abs() < 1e-12);
+        assert!((fp.backoff(2) - 0.4).abs() < 1e-12);
+        assert!((fp.backoff(3) - 0.5).abs() < 1e-12, "capped");
+        assert!((fp.backoff(40) - 0.5).abs() < 1e-12, "huge attempt stays capped");
+        // With jitter, delays land in [d, d * (1 + jitter)] and are
+        // reproducible across same-seeded planes.
+        let jc = FaultsCfg { jitter: 0.2, ..fc };
+        let mut a = FaultPlane::new(jc, 11);
+        let mut c = FaultPlane::new(jc, 11);
+        for k in 0..8 {
+            let da = a.backoff(k);
+            assert_eq!(da.to_bits(), c.backoff(k).to_bits());
+            let base = (0.1 * 2.0_f64.powi(k as i32)).min(0.5);
+            assert!((base - 1e-12..=base * 1.2 + 1e-12).contains(&da), "{da} vs {base}");
+        }
+    }
+
+    #[test]
+    fn fault_plane_draws_are_seeded_and_match_probability() {
+        let fc = FaultsCfg { p_fault: 0.3, degraded_boost: 2.0, ..FaultsCfg::default() };
+        let mut a = FaultPlane::new(fc, 5);
+        let mut b = FaultPlane::new(fc, 5);
+        let mut hits = 0;
+        for _ in 0..2000 {
+            let fa = a.draw_fault(false);
+            assert_eq!(fa, b.draw_fault(false));
+            hits += fa as u32;
+        }
+        let rate = hits as f64 / 2000.0;
+        assert!((0.25..0.35).contains(&rate), "base fault rate {rate}");
+        let mut d = FaultPlane::new(fc, 6);
+        let boosted = (0..2000).filter(|_| d.draw_fault(true)).count() as f64 / 2000.0;
+        assert!((0.53..0.67).contains(&boosted), "boosted fault rate {boosted}");
+        // p = 0 never faults; boost saturates at probability 1.
+        let mut z = FaultPlane::new(FaultsCfg::default(), 5);
+        assert!((0..100).all(|_| !z.draw_fault(true)));
+        let sat = FaultsCfg { p_fault: 0.9, degraded_boost: 100.0, ..FaultsCfg::default() };
+        let mut s = FaultPlane::new(sat, 5);
+        assert!((0..100).all(|_| s.draw_fault(true)));
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub struct Config {
     /// means a single edge built from the top-level `edge` / `network` /
     /// `dynamics` fields — the original two-site testbed.
     pub fleet: Vec<EdgeSiteCfg>,
+    /// Fault plane: transfer faults, cloud outage windows, retry policy.
+    /// `None` (the default) keeps every fault RNG stream untouched, so
+    /// all pre-fault-plane results reproduce bit for bit.
+    pub faults: Option<FaultsCfg>,
 }
 
 impl Default for Config {
@@ -42,6 +46,7 @@ impl Default for Config {
             cloud: DeviceCfg::a100(),
             serve: ServeCfg::default(),
             fleet: Vec::new(),
+            faults: None,
         }
     }
 }
@@ -353,6 +358,103 @@ impl Default for ServeCfg {
     }
 }
 
+/// Fault-plane knobs: per-transfer fault injection, cloud outage
+/// windows, and the retry/failover policy (`[faults]` config section).
+/// All sampling draws from dedicated salted RNG streams, so two runs
+/// with the same seed and the same fault config see the same faults —
+/// and a run with `faults` unset never touches those streams at all.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultsCfg {
+    /// Base per-transfer fault probability on a fault-injected uplink
+    /// (MSAO verify uplinks, CloudOnly/PerLLM payload uplinks).
+    pub p_fault: f64,
+    /// Multiplier on `p_fault` while the link is in a degraded Markov /
+    /// trace state (current bandwidth below the base level) — faults
+    /// correlate with bad link conditions.
+    pub degraded_boost: f64,
+    /// Mean gap between cloud unavailability windows (seconds of
+    /// virtual time, seeded renewal process). 0 disables outages.
+    pub outage_gap_s: f64,
+    /// Mean duration of one cloud unavailability window (seconds).
+    pub outage_dur_s: f64,
+    /// Max retry attempts per fault site before the session gives up
+    /// (fails over or fails). 0 = no retries.
+    pub max_retries: usize,
+    /// Exponential-backoff base delay (seconds): attempt k waits
+    /// `min(backoff_cap_s, backoff_base_s * 2^k)` plus jitter.
+    pub backoff_base_s: f64,
+    /// Cap on the exponential backoff delay (seconds).
+    pub backoff_cap_s: f64,
+    /// Backoff jitter fraction: the delay is scaled by a seeded uniform
+    /// factor in [1, 1 + jitter]. 0 = deterministic spacing.
+    pub jitter: f64,
+    /// When retries are exhausted, MSAO sessions fall back to
+    /// edge-local completion (accept verified tokens, decode the rest
+    /// on the edge at degraded quality). `false` fails the request
+    /// instead, like the cloud-bound baselines.
+    pub failover: bool,
+    /// Per-transfer timeout as a multiple of the monitor's predicted
+    /// transfer time (serialization at believed bandwidth + RTT).
+    pub timeout_factor: f64,
+}
+
+impl Default for FaultsCfg {
+    fn default() -> Self {
+        FaultsCfg {
+            p_fault: 0.0,
+            degraded_boost: 1.0,
+            outage_gap_s: 0.0,
+            outage_dur_s: 2.0,
+            max_retries: 3,
+            backoff_base_s: 0.05,
+            backoff_cap_s: 1.0,
+            jitter: 0.1,
+            failover: true,
+            timeout_factor: 4.0,
+        }
+    }
+}
+
+impl FaultsCfg {
+    /// Shared validation for the config section, the scenario `[faults]`
+    /// table, and CLI overrides. Messages name the offending key.
+    pub fn validate(&self) -> Result<()> {
+        for (key, v) in [
+            ("p_fault", self.p_fault),
+            ("degraded_boost", self.degraded_boost),
+            ("outage_gap_s", self.outage_gap_s),
+            ("outage_dur_s", self.outage_dur_s),
+            ("backoff_base_s", self.backoff_base_s),
+            ("backoff_cap_s", self.backoff_cap_s),
+            ("jitter", self.jitter),
+            ("timeout_factor", self.timeout_factor),
+        ] {
+            if !(v.is_finite() && v >= 0.0) {
+                bail!("faults.{key} must be finite and >= 0, got {v}");
+            }
+        }
+        if self.p_fault > 1.0 {
+            bail!("faults.p_fault must be a probability in [0, 1], got {}", self.p_fault);
+        }
+        if self.outage_gap_s > 0.0 && self.outage_dur_s <= 0.0 {
+            bail!(
+                "faults.outage_dur_s must be > 0 when outage_gap_s enables outages, got {}",
+                self.outage_dur_s
+            );
+        }
+        if self.timeout_factor <= 0.0 {
+            bail!("faults.timeout_factor must be > 0, got {}", self.timeout_factor);
+        }
+        // With neither retries nor failover, a single fault is an
+        // instant unrecoverable failure for EVERY method that touches
+        // the link — almost certainly a config mistake.
+        if self.max_retries == 0 && !self.failover {
+            bail!("faults.max_retries = 0 with faults.failover = false leaves no recovery path; enable one of them");
+        }
+        Ok(())
+    }
+}
+
 /// Parse one `fleet` array entry: a per-edge site with an optional
 /// device preset and link overrides, defaulting to the top-level
 /// `edge` / `network` / `dynamics` values.
@@ -492,6 +594,29 @@ impl Config {
                     // config load, not at serve time.
                     crate::coordinator::Sched::parse(&self.serve.sched)
                         .with_context(|| "config key serve.sched")?;
+                }
+                "faults" => {
+                    // Manual loop (not `merge_fields!`): `failover` is a
+                    // bool key the numeric-conversion macro cannot
+                    // express, and the section needs post-validation.
+                    let mut fc = self.faults.unwrap_or_default();
+                    for (k2, v2) in section.as_obj()? {
+                        match k2.as_str() {
+                            "p_fault" => fc.p_fault = v2.as_f64()?,
+                            "degraded_boost" => fc.degraded_boost = v2.as_f64()?,
+                            "outage_gap_s" => fc.outage_gap_s = v2.as_f64()?,
+                            "outage_dur_s" => fc.outage_dur_s = v2.as_f64()?,
+                            "max_retries" => fc.max_retries = v2.as_usize()?,
+                            "backoff_base_s" => fc.backoff_base_s = v2.as_f64()?,
+                            "backoff_cap_s" => fc.backoff_cap_s = v2.as_f64()?,
+                            "jitter" => fc.jitter = v2.as_f64()?,
+                            "failover" => fc.failover = v2.as_bool()?,
+                            "timeout_factor" => fc.timeout_factor = v2.as_f64()?,
+                            other => bail!("unknown config key faults.{other}"),
+                        }
+                    }
+                    fc.validate()?;
+                    self.faults = Some(fc);
                 }
                 "fleet" => fleet_section = Some(section),
                 other => bail!("unknown config section {other:?}"),
@@ -768,6 +893,50 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("serve.sched"), "missing key in: {msg}");
         assert!(msg.contains("lifo"), "missing value in: {msg}");
+    }
+
+    #[test]
+    fn faults_default_none_and_section_parses() {
+        // Absent section => None => fault RNG streams never armed.
+        assert!(Config::default().faults.is_none());
+        let c = Config::from_json_str(
+            r#"{"faults": {"p_fault": 0.2, "max_retries": 2, "failover": false,
+                           "outage_gap_s": 5, "outage_dur_s": 1.5}}"#,
+        )
+        .unwrap();
+        let fc = c.faults.unwrap();
+        assert_eq!(fc.p_fault, 0.2);
+        assert_eq!(fc.max_retries, 2);
+        assert!(!fc.failover);
+        assert_eq!(fc.outage_gap_s, 5.0);
+        assert_eq!(fc.outage_dur_s, 1.5);
+        // Unspecified keys keep the documented defaults.
+        assert_eq!(fc.backoff_base_s, 0.05);
+        assert_eq!(fc.timeout_factor, 4.0);
+    }
+
+    #[test]
+    fn faults_section_rejects_invalid_values() {
+        for (bad, why) in [
+            (r#"{"faults": {"typo_key": 1}}"#, "unknown key"),
+            (r#"{"faults": {"p_fault": -0.1}}"#, "negative probability"),
+            (r#"{"faults": {"p_fault": 1.5}}"#, "probability > 1"),
+            (r#"{"faults": {"backoff_base_s": -1}}"#, "negative backoff"),
+            (r#"{"faults": {"timeout_factor": 0}}"#, "zero timeout factor"),
+            (
+                r#"{"faults": {"max_retries": 0, "failover": false}}"#,
+                "no recovery path",
+            ),
+            (
+                r#"{"faults": {"outage_gap_s": 5, "outage_dur_s": 0}}"#,
+                "outages with zero duration",
+            ),
+        ] {
+            assert!(Config::from_json_str(bad).is_err(), "accepted {why}: {bad}");
+        }
+        // The chaos collapse arm — no retries but failover on — is valid.
+        let c = Config::from_json_str(r#"{"faults": {"max_retries": 0}}"#).unwrap();
+        assert_eq!(c.faults.unwrap().max_retries, 0);
     }
 
     #[test]

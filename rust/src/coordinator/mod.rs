@@ -69,4 +69,4 @@ pub use scheduler::StepOutcome;
 pub use server::{serve, serve_materialized_ref, EdgeTraceStats, TraceResult};
 pub use session::{session_seed, Coordinator, Mode, ServeCtx, Session};
 pub use sharded::{drive_sharded, Sequentialized, ShardedSource, StepClass};
-pub use timeline::{edge_seed, CloudDevice, EdgeId, EdgeSite, Site, VirtualCluster};
+pub use timeline::{edge_seed, CloudDevice, EdgeId, EdgeSite, SendOutcome, Site, VirtualCluster};

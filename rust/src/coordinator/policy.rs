@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use crate::cluster::{SimModel, SystemMonitor};
-use crate::config::Config;
+use crate::config::{Config, FaultsCfg};
 use crate::workload::Item;
 
 use super::session::Mode;
@@ -393,6 +393,12 @@ pub struct TraceSpec {
     /// touched). False (the default) serves everything, so traces
     /// without SLOs are bitwise the pre-SLO path.
     pub admission: bool,
+    /// Fault-plane override: `Some` arms per-edge transfer faults,
+    /// timeouts, retry/backoff, and cloud outage windows for this trace
+    /// regardless of the config; `None` falls back to the config's
+    /// `[faults]` section (itself `None` by default, leaving the fault
+    /// plane — and every fault RNG stream — entirely unarmed).
+    pub faults: Option<FaultsCfg>,
 }
 
 impl TraceSpec {
@@ -409,6 +415,7 @@ impl TraceSpec {
             reuse_discount: 0.0,
             sched: None,
             admission: false,
+            faults: None,
         }
     }
 
@@ -470,6 +477,19 @@ impl TraceSpec {
     pub fn admission(mut self, on: bool) -> Self {
         self.admission = on;
         self
+    }
+
+    /// Arm the fault plane for this trace (overrides the config's
+    /// `[faults]` section). The cfg must already be validated.
+    pub fn faults(mut self, fc: FaultsCfg) -> Self {
+        self.faults = Some(fc);
+        self
+    }
+
+    /// Resolve the fault plane: the spec override wins, else the
+    /// config's `[faults]` section, else unarmed.
+    pub fn effective_faults(&self, cfg: &Config) -> Option<FaultsCfg> {
+        self.faults.or(cfg.faults)
     }
 
     /// Stamp one SLO (class + relative deadline, seconds) onto every

@@ -180,6 +180,13 @@ pub struct TraceResult {
     /// enabled SLO admission control.
     pub shed: usize,
     pub degraded: usize,
+    /// Requests that exhausted fault recovery (failed outright), that
+    /// completed on the edge-local failover path, and total retry
+    /// attempts across the trace. All zero unless a `[faults]` plane
+    /// was armed.
+    pub failed: usize,
+    pub failover: usize,
+    pub retries: usize,
     /// Total scheduler events (session steps) the trace took.
     pub events: u64,
     /// Event-sequence fingerprint ([`SeqHash`]): identical across the
@@ -325,17 +332,43 @@ impl<'a> AnySession<'a> {
     }
 
     fn step(&mut self, vc: &mut VirtualCluster) -> Result<StepOutcome> {
-        match &mut self.inner {
+        let t = self.next_time();
+        let r = match &mut self.inner {
             Inner::Msao(s) => s.step(vc),
             Inner::Baseline(b) => b.step(vc),
-        }
+        };
+        self.absorb_step_error(t, r)
     }
 
     /// Advance one shard-local step against the session's home edge.
     fn step_local(&mut self, site: &mut EdgeSite) -> Result<StepOutcome> {
-        match &mut self.inner {
+        let t = self.next_time();
+        let r = match &mut self.inner {
             Inner::Msao(s) => s.step_local(site),
             Inner::Baseline(b) => b.step_local(site),
+        };
+        self.absorb_step_error(t, r)
+    }
+
+    /// A step error (engine/actor death, a panic surfaced as an error)
+    /// fails *this request*, not the whole trace: the session is parked
+    /// in its Failed phase and the next Global step completes it with a
+    /// record marked `failed`. The error is reported, not swallowed.
+    fn absorb_step_error(
+        &mut self,
+        t: f64,
+        r: Result<StepOutcome>,
+    ) -> Result<StepOutcome> {
+        match r {
+            Ok(o) => Ok(o),
+            Err(err) => {
+                eprintln!("request {}: step failed at t={t:.3}s: {err:#}", self.index);
+                match &mut self.inner {
+                    Inner::Msao(s) => s.mark_failed(t),
+                    Inner::Baseline(b) => b.mark_failed(t),
+                }
+                Ok(StepOutcome::Pending)
+            }
         }
     }
 
@@ -486,6 +519,13 @@ fn prepare<'s>(coord: &Coordinator, spec: &'s TraceSpec) -> Result<(ServeSource<
             spec.policy.collaborative(),
         );
     }
+    // Arm the deterministic fault plane (per-edge transfer faults +
+    // cloud outage windows) when the spec or config asks for one. With
+    // no `[faults]` section this is a no-op and no fault RNG stream is
+    // ever created — the bitwise-inertness guarantee.
+    if let Some(fc) = spec.effective_faults(&cfg) {
+        vc.arm_faults(&fc, spec.seed);
+    }
     let concurrency = spec.effective_concurrency(&cfg);
     let n = spec.items.len();
     let mut seq = SeqHash::new();
@@ -629,6 +669,9 @@ fn collect(src: ServeSource<'_>, wall_clock_s: f64) -> TraceResult {
         per_edge,
         shed: records.iter().filter(|r| r.shed).count(),
         degraded: records.iter().filter(|r| r.degraded).count(),
+        failed: records.iter().filter(|r| r.failed).count(),
+        failover: records.iter().filter(|r| r.failover).count(),
+        retries: records.iter().map(|r| r.retries).sum(),
         events: seq.events,
         events_hash: seq.digest(),
         wall_clock_s,

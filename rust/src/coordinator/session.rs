@@ -181,6 +181,10 @@ struct FinishState {
     offloads: usize,
     replans: usize,
     cloud_fraction: f64,
+    faults: usize,
+    retries: usize,
+    failover: bool,
+    failed: bool,
     common: FinishCommon,
 }
 
@@ -194,6 +198,10 @@ impl FinishState {
             offloads: out.offloads,
             replans: out.replans,
             cloud_fraction: out.cloud_fraction,
+            faults: out.faults,
+            retries: out.retries,
+            failover: out.failover,
+            failed: out.failed,
             common,
         }
     }
@@ -207,6 +215,10 @@ impl FinishState {
             offloads: 0,
             replans: 0,
             cloud_fraction: 1.0,
+            faults: 0,
+            retries: 0,
+            failover: false,
+            failed: false,
             common,
         }
     }
@@ -227,6 +239,12 @@ enum Phase {
     Decode(Box<DecodeState>),
     CloudDecode(Box<CloudState>),
     Finish(Box<FinishState>),
+    /// Request-level failure at virtual time `t` (engine/actor error
+    /// surfaced mid-phase): the next Global step completes the session
+    /// with a record marked `failed`. Resources the dead phase held
+    /// cannot be reclaimed — acceptable for an abnormal path whose job
+    /// is to keep the *trace* alive.
+    Failed { t: f64 },
     Done,
 }
 
@@ -342,12 +360,21 @@ impl<'a> Session<'a> {
             Phase::Decode(d) => d.spec.next_time(),
             Phase::CloudDecode(s) => s.t,
             Phase::Finish(f) => f.t_done,
+            Phase::Failed { t } => *t,
             Phase::Done => f64::INFINITY,
         }
     }
 
     pub fn is_done(&self) -> bool {
         matches!(self.phase, Phase::Done)
+    }
+
+    /// Abort the session as a request-level failure at virtual time `t`
+    /// (the engine/actor error path): the next Global step completes it
+    /// with a record marked `failed`, so one dead request degrades the
+    /// trace's availability metric instead of aborting the whole run.
+    pub fn mark_failed(&mut self, t: f64) {
+        self.phase = Phase::Failed { t };
     }
 
     pub fn into_record(self) -> ExecRecord {
@@ -363,7 +390,10 @@ impl<'a> Session<'a> {
     pub fn step_class(&self) -> StepClass {
         match &self.phase {
             Phase::Probe | Phase::PrefillEdge { .. } => StepClass::Local,
-            Phase::Decode(d) if !d.spec.awaiting_verify() => StepClass::Local,
+            // Draft, retry, and edge-failover decode legs all touch only
+            // the home shard; a spec session whose generation just ended
+            // (including by failover) takes a Global step to Finish.
+            Phase::Decode(d) if d.spec.local_ready() => StepClass::Local,
             _ => StepClass::Global,
         }
     }
@@ -381,15 +411,28 @@ impl<'a> Session<'a> {
             }
             Phase::PrefillCloud(h) => self.step_prefill_cloud(vc, h)?,
             Phase::Decode(mut d) => {
-                if d.spec.awaiting_verify() {
+                if d.spec.is_done() {
+                    // A Local retry/failover leg ended generation; the
+                    // Finish transition itself is this Global step (the
+                    // sharded-driver contract: Local steps never
+                    // complete a session).
+                    let DecodeState { spec, finish } = *d;
+                    Phase::Finish(Box::new(FinishState::from_spec(spec.finish(), finish)))
+                } else if d.spec.awaiting_verify() {
                     self.step_decode_verify(vc, d)?
                 } else {
-                    d.spec.draft(&self.ctx.eng, &mut vc.edges[e])?;
+                    d.spec.advance_local(&self.ctx.eng, &mut vc.edges[e])?;
                     Phase::Decode(d)
                 }
             }
             Phase::CloudDecode(s) => self.step_cloud_decode(vc, s)?,
             Phase::Finish(f) => self.step_finish(vc, *f)?,
+            Phase::Failed { t } => {
+                self.rec.failed = true;
+                self.rec.t_done = t;
+                self.rec.latency_s = t - self.arrival;
+                Phase::Done
+            }
             Phase::Done => Phase::Done,
         };
         Ok(if matches!(self.phase, Phase::Done) {
@@ -411,8 +454,8 @@ impl<'a> Session<'a> {
                 self.step_prefill_edge(site, probe, probe_end)?
             }
             Phase::Decode(mut d) => {
-                debug_assert!(!d.spec.awaiting_verify(), "verify leg scheduled as Local");
-                d.spec.draft(&self.ctx.eng, site)?;
+                debug_assert!(d.spec.local_ready(), "non-Local decode leg scheduled as Local");
+                d.spec.advance_local(&self.ctx.eng, site)?;
                 Phase::Decode(d)
             }
             _ => anyhow::bail!("session {}: local step on a Global phase", self.item.id),
@@ -675,6 +718,7 @@ impl<'a> Session<'a> {
                         n_max: if self.degraded { cfg.msao.n_max.min(2) } else { cfg.msao.n_max },
                         planned_net: h.net,
                         adaptive: mode != Mode::NoCollabSched,
+                        deadline_abs: self.item.deadline_s.map(|d| self.arrival + d),
                     },
                 );
                 let finish = FinishCommon {
@@ -781,10 +825,17 @@ impl<'a> Session<'a> {
     // ---------------- downlink + bookkeeping + quality ------------------
     fn step_finish(&mut self, vc: &mut VirtualCluster, f: FinishState) -> Result<Phase> {
         let bandwidth_mbps = self.ctx.cfg.network.bandwidth_mbps;
-        let bytes = 4 * f.tokens_out as u64 + 64;
-        // Downlink the generated text to the user.
-        let (_, done) = vc.send_down(self.edge, f.t_done, bytes, false);
-        self.rec.bytes_down += bytes;
+        // Downlink the generated text to the user. A failed request has
+        // nothing to ship — its t_done is the moment recovery was
+        // exhausted — but it still releases every resource it held.
+        let done = if f.failed {
+            f.t_done
+        } else {
+            let bytes = 4 * f.tokens_out as u64 + 64;
+            let (_, done) = vc.send_down(self.edge, f.t_done, bytes, false);
+            self.rec.bytes_down += bytes;
+            done
+        };
 
         if let Some(kv) = f.common.edge_kv {
             self.ctx.eng.free_kv(false, kv);
@@ -809,6 +860,10 @@ impl<'a> Session<'a> {
         self.rec.proposed = f.proposed;
         self.rec.offloads = f.offloads;
         self.rec.replans = f.replans;
+        self.rec.faults = f.faults;
+        self.rec.retries = f.retries;
+        self.rec.failover = f.failover;
+        self.rec.failed = f.failed;
         self.rec.vis_tokens_kept = f.common.vlen;
         self.rec.frames_kept = f.common.plan.frames_keep.len();
         self.rec.mem_edge_gb = vc.edges[self.edge].mem.peak_gb();
@@ -826,6 +881,14 @@ impl<'a> Session<'a> {
         self.rec.flops_cloud = vc.cloud.flops;
 
         // ---------------- quality -----------------------------------------
+        // A failed request answered nothing: no quality draw (keeping
+        // the session RNG stream untouched keeps the draw sequence of
+        // every *other* record independent of this one's fate).
+        if f.failed {
+            self.rec.p_correct = 0.0;
+            self.rec.correct = false;
+            return Ok(Phase::Done);
+        }
         let info = served_info(
             self.item,
             &f.common.probe,

@@ -35,7 +35,7 @@ use crate::optimizer::ThetaController;
 use crate::runtime::engine::KvHandle;
 
 use super::engines::{argmax, entropy, EngineCore};
-use super::timeline::{EdgeId, EdgeSite, Site, VirtualCluster};
+use super::timeline::{EdgeId, EdgeSite, SendOutcome, Site, VirtualCluster};
 
 #[derive(Debug, Clone, Copy)]
 pub struct SpecParams {
@@ -64,6 +64,9 @@ pub struct SpecParams {
     /// Adaptive gating (false = ablation "w/o collaborative scheduling":
     /// fixed single-token rounds, no overlap, no batching, no replan).
     pub adaptive: bool,
+    /// Absolute SLO deadline (virtual s): the retry budget never
+    /// schedules a backoff past this. `None` = no deadline pressure.
+    pub deadline_abs: Option<f64>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -81,6 +84,15 @@ pub struct SpecOutcome {
     /// Fraction of tokens carrying cloud-level quality (all committed
     /// tokens are verified here, so 1.0 unless the loop degrades).
     pub cloud_fraction: f64,
+    /// Transfer faults / cloud-outage hits this session absorbed.
+    pub faults: usize,
+    /// Retry attempts actually scheduled (each a real scheduler event).
+    pub retries: usize,
+    /// Retries exhausted: the session completed edge-locally (verified
+    /// tokens kept, remainder decoded at draft quality).
+    pub failover: bool,
+    /// Retries exhausted with failover disabled: no answer delivered.
+    pub failed: bool,
 }
 
 /// Verify-exchange payload sizes (bytes, paper scale).
@@ -182,6 +194,23 @@ struct PendingVerify {
     piggyback: bool,
 }
 
+/// A faulted verify uplink awaiting its backoff expiry — a Local retry
+/// arm: the re-send happens on the session's home edge only, so the
+/// sharded driver runs it on the shard's worker thread like any draft.
+#[derive(Debug)]
+struct RetryUplink {
+    drafts: Vec<i32>,
+    low_conf: bool,
+    /// The original draft-completion cursor (pipeline bookkeeping for
+    /// the eventual verdict is unchanged by the retries).
+    draft_end: f64,
+    /// 0-based index of the attempt this retry will make (1 = first
+    /// retry; attempt 0 was the original send).
+    attempt: usize,
+    /// Virtual time the retry fires (fault time + seeded backoff).
+    t_next: f64,
+}
+
 /// Resumable speculative-decode loop: one draft leg per `draft()` call,
 /// one verify leg per `verify()` call, with the pipeline cursors
 /// (`edge_free`, `commit_t`) carried across calls so concurrent sessions
@@ -200,6 +229,20 @@ pub struct SpecSession {
     n_draft: usize,
     /// In-flight verify exchange (drafted, not yet judged).
     pending: Option<PendingVerify>,
+    /// Faulted uplink waiting out its backoff (Local retry arm).
+    retry: Option<RetryUplink>,
+    /// Edge-local failover decode cursor: `Some` once retries were
+    /// exhausted and the session is finishing on the edge alone.
+    failover_t: Option<f64>,
+    /// Outage-retry count for the verify exchange in flight (reset on
+    /// every successful cloud arrival).
+    cloud_attempt: usize,
+    /// Cloud-verified tokens committed so far (first token included) —
+    /// the numerator of a failover session's quality fraction.
+    verified: usize,
+    /// EOS token id, cached so failover commits can stop on it without
+    /// an engine reference.
+    eos: i32,
     done: bool,
 }
 
@@ -219,19 +262,29 @@ impl SpecSession {
             n_draft_plan: n_draft,
             n_draft,
             pending: None,
+            retry: None,
+            failover_t: None,
+            cloud_attempt: 0,
+            verified: 1,
+            eos: eng.c.eos(),
             done,
             p,
         }
     }
 
     /// Virtual time of this session's next event: the start of the next
-    /// draft block, the cloud-side verify of the block in flight, or the
-    /// final commit once the loop is done.
+    /// draft block, the cloud-side verify of the block in flight, a
+    /// pending retry's backoff expiry, the next failover decode step, or
+    /// the final commit once the loop is done.
     pub fn next_time(&self) -> f64 {
         if self.done {
             self.commit_t
         } else if let Some(pv) = &self.pending {
             pv.up_arr
+        } else if let Some(r) = &self.retry {
+            r.t_next
+        } else if let Some(t) = self.failover_t {
+            t
         } else {
             self.edge_free
         }
@@ -243,6 +296,14 @@ impl SpecSession {
         self.pending.is_some()
     }
 
+    /// Whether the next event is a Local leg on the session's home edge
+    /// (draft, uplink retry, or failover decode). False once done — the
+    /// closing transition is Global, so a Local step never completes a
+    /// session (the sharded-driver contract).
+    pub fn local_ready(&self) -> bool {
+        !self.done && self.pending.is_none()
+    }
+
     pub fn is_done(&self) -> bool {
         self.done
     }
@@ -251,7 +312,156 @@ impl SpecSession {
     pub fn finish(mut self) -> SpecOutcome {
         self.out.t_done = self.commit_t;
         self.out.tokens.truncate(self.p.max_new);
+        if self.out.failover {
+            // Failover tokens carry draft (edge) quality: report the
+            // cloud-verified fraction for the quality model.
+            let n = self.out.tokens.len().max(1);
+            self.out.cloud_fraction = self.verified.min(n) as f64 / n as f64;
+        }
         self.out
+    }
+
+    /// Run whichever Local leg is next: a pending uplink retry, one
+    /// failover decode step, or a fresh draft round. No-op once done or
+    /// while a verify is in flight (Global).
+    pub fn advance_local(&mut self, eng: &EngineCore, site: &mut EdgeSite) -> Result<()> {
+        if self.done || self.pending.is_some() {
+            return Ok(());
+        }
+        if self.retry.is_some() {
+            self.retry_step(site);
+            Ok(())
+        } else if self.failover_t.is_some() {
+            self.failover_step(eng, site)
+        } else {
+            self.draft(eng, site)
+        }
+    }
+
+    /// Does scheduling an event at `t` still respect the SLO deadline?
+    fn deadline_ok(&self, t: f64) -> bool {
+        self.p.deadline_abs.map_or(true, |d| t <= d)
+    }
+
+    /// An uplink attempt faulted at `t_fail`. Schedule the next retry
+    /// (seeded backoff, capped attempts, deadline-respecting budget) or
+    /// exhaust into failover / failure.
+    fn on_uplink_fault(
+        &mut self,
+        site: &mut EdgeSite,
+        drafts: Vec<i32>,
+        low_conf: bool,
+        draft_end: f64,
+        t_fail: f64,
+        attempt: usize,
+    ) {
+        let cfg = site.faults_cfg().expect("uplink fault without an armed FaultPlane");
+        if attempt < cfg.max_retries {
+            let t_next = t_fail + site.retry_backoff(attempt);
+            if self.deadline_ok(t_next) {
+                self.out.retries += 1;
+                self.retry = Some(RetryUplink {
+                    drafts,
+                    low_conf,
+                    draft_end,
+                    attempt: attempt + 1,
+                    t_next,
+                });
+                return;
+            }
+        }
+        if cfg.failover {
+            self.enter_failover(t_fail, drafts);
+        } else {
+            self.fail(t_fail);
+        }
+    }
+
+    /// Re-send a faulted verify uplink after its backoff expired. Plain
+    /// (non-piggybacked) uplink: the original batch window is long gone.
+    fn retry_step(&mut self, site: &mut EdgeSite) {
+        let r = self.retry.take().expect("retry_step without a pending retry");
+        let up_bytes = VERIFY_UP_BYTES + if r.low_conf { OFFLOAD_STATE_BYTES } else { 0 };
+        match site.try_send_up(r.t_next, up_bytes, false) {
+            SendOutcome::Delivered { arr: up_arr, .. } => {
+                self.pending = Some(PendingVerify {
+                    drafts: r.drafts,
+                    low_conf: r.low_conf,
+                    draft_end: r.draft_end,
+                    up_arr,
+                    piggyback: false,
+                });
+            }
+            SendOutcome::Faulted { t_fail } => {
+                self.out.faults += 1;
+                self.on_uplink_fault(site, r.drafts, r.low_conf, r.draft_end, t_fail, r.attempt);
+            }
+        }
+    }
+
+    /// Retries exhausted: fall back to edge-local completion. The
+    /// drafted-but-unverified tokens are accepted at draft quality (the
+    /// edge model produced them; the cloud never judged them) and the
+    /// remainder decodes on the edge alone.
+    fn enter_failover(&mut self, t: f64, drafts: Vec<i32>) {
+        self.out.failover = true;
+        let mut hit_eos = false;
+        for tok in drafts {
+            self.out.tokens.push(tok);
+            if tok == self.eos {
+                hit_eos = true;
+                break;
+            }
+            if self.out.tokens.len() >= self.p.max_new {
+                break;
+            }
+        }
+        if hit_eos || self.out.tokens.len() >= self.p.max_new {
+            self.done = true;
+            self.commit_t = t;
+        } else {
+            self.failover_t = Some(t);
+        }
+    }
+
+    /// Retries exhausted with no failover path: the request fails.
+    fn fail(&mut self, t: f64) {
+        self.out.failed = true;
+        self.done = true;
+        self.commit_t = t;
+    }
+
+    /// One edge-local failover decode step: greedy-decode a single token
+    /// on the edge draft model (its KV already holds the committed
+    /// prefix — drafted tokens wrote their positions during drafting).
+    /// Each token is its own scheduler event, so failover decodes
+    /// interleave with other sessions on the edge like draft rounds do.
+    fn failover_step(&mut self, eng: &EngineCore, site: &mut EdgeSite) -> Result<()> {
+        let t = self.failover_t.expect("failover_step without failover");
+        let c = &eng.c;
+        let draft_m = SimModel::qwen2vl_2b();
+        let p = self.p;
+        let n = self.out.tokens.len();
+        let last = *self.out.tokens.last().unwrap();
+        let pos = c.gen_off() + n - 1;
+        if pos + 1 >= c.s_max() {
+            // No room left in the graph: finish with what we have.
+            self.done = true;
+            self.commit_t = t;
+            return Ok(());
+        }
+        let logits = eng.block(false, false, p.edge_kv, pos, &[last], p.lens)?;
+        let ctx = p.seq_paper + n as f64;
+        let secs = site.dev.decode_s(&draft_m, ctx);
+        let (_, end) = site.exec(t, secs, draft_m.flops_decode(ctx), p.edge);
+        let tok = argmax(&logits);
+        self.out.tokens.push(tok);
+        self.failover_t = Some(end);
+        if tok == self.eos || self.out.tokens.len() >= p.max_new {
+            self.done = true;
+            self.commit_t = end;
+        }
+        Ok(())
     }
 
     /// Run one draft leg (Alg. 1 lines 4-7) against the session's home
@@ -317,12 +527,20 @@ impl SpecSession {
         let draft_end = t_cursor;
 
         // Uplink (with offload state if low confidence), possibly riding
-        // an open batch window on this edge's link.
+        // an open batch window on this edge's link. With no fault plane
+        // armed, `try_send_up` is bitwise `send_up`.
         let up_bytes = VERIFY_UP_BYTES + if low_conf { OFFLOAD_STATE_BYTES } else { 0 };
         let piggyback = p.adaptive && site.batcher.admit(draft_end);
-        let (_, up_arr) = site.send_up(draft_end, up_bytes, piggyback);
-
-        self.pending = Some(PendingVerify { drafts, low_conf, draft_end, up_arr, piggyback });
+        match site.try_send_up(draft_end, up_bytes, piggyback) {
+            SendOutcome::Delivered { arr: up_arr, .. } => {
+                self.pending =
+                    Some(PendingVerify { drafts, low_conf, draft_end, up_arr, piggyback });
+            }
+            SendOutcome::Faulted { t_fail } => {
+                self.out.faults += 1;
+                self.on_uplink_fault(site, drafts, low_conf, draft_end, t_fail, 0);
+            }
+        }
         Ok(())
     }
 
@@ -335,6 +553,34 @@ impl SpecSession {
         let Some(pv) = self.pending.take() else {
             return Ok(());
         };
+        // Cloud outage: the payload arrived inside an unavailability
+        // window. Re-poll after the window plus a seeded backoff (the
+        // re-pushed `pending` keeps this a real Global scheduler event),
+        // or exhaust into failover / failure. Always `None` when the
+        // fault plane is not armed — zero overhead on clean runs.
+        if let Some(win_end) = vc.cloud_down_at(pv.up_arr) {
+            self.out.faults += 1;
+            let edge = &mut vc.edges[self.p.edge];
+            let cfg = edge.faults_cfg().expect("cloud outage without an armed FaultPlane");
+            if self.cloud_attempt < cfg.max_retries {
+                let backoff = edge.retry_backoff(self.cloud_attempt);
+                self.cloud_attempt += 1;
+                let t_retry = win_end.max(pv.up_arr) + backoff;
+                if self.deadline_ok(t_retry) {
+                    self.out.retries += 1;
+                    self.pending = Some(PendingVerify { up_arr: t_retry, ..pv });
+                    return Ok(());
+                }
+            }
+            let t = pv.up_arr;
+            if cfg.failover {
+                self.enter_failover(t, pv.drafts);
+            } else {
+                self.fail(t);
+            }
+            return Ok(());
+        }
+        self.cloud_attempt = 0;
         let c = &eng.c;
         let gen_off = c.gen_off();
         let n_spec = c.n_spec();
@@ -403,6 +649,7 @@ impl SpecSession {
         let mut hit_eos = false;
         for t in committed {
             self.out.tokens.push(t);
+            self.verified += 1;
             if t == c.eos() {
                 hit_eos = true;
                 break;
@@ -447,7 +694,7 @@ pub fn speculative_decode(
     let e = p.edge;
     let mut s = SpecSession::new(eng, p);
     while !s.is_done() {
-        s.draft(eng, &mut vc.edges[e])?;
+        s.advance_local(eng, &mut vc.edges[e])?;
         s.verify(eng, vc)?;
     }
     Ok(s.finish())

@@ -38,8 +38,10 @@
 //! the same fields, so the two drivers charge identical times.
 
 use crate::cluster::network::serialize_s_with;
-use crate::cluster::{DeviceSim, Dir, Link, MemTracker, SystemMonitor};
-use crate::config::Config;
+use crate::cluster::{
+    DeviceSim, Dir, FaultPlane, Link, MemTracker, OutageProcess, SystemMonitor,
+};
+use crate::config::{Config, FaultsCfg};
 use crate::coordinator::batcher::Batcher;
 use crate::optimizer::ThetaController;
 
@@ -51,6 +53,26 @@ pub use crate::cluster::{EdgeId, Site};
 /// single-edge substrate bit for bit.
 pub fn edge_seed(seed: u64, id: EdgeId) -> u64 {
     seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Salt for each edge's fault-draw/backoff RNG stream: composed with
+/// [`edge_seed`] so fleet edges fault independently, and distinct from
+/// the link jitter/Markov streams (which use the unsalted edge seed).
+pub const FAULT_SALT: u64 = 0xFA11_7ED0_5EED_0001;
+
+/// Salt for the cloud outage renewal process (one stream per cluster —
+/// the cloud is shared, so every edge sees the same windows).
+pub const OUTAGE_SALT: u64 = 0xC10D_0D0A_5EED_0002;
+
+/// Result of a fault-aware uplink attempt ([`EdgeSite::try_send_up`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SendOutcome {
+    /// The transfer completed: (serialization end, arrival far side) —
+    /// the same pair the plain send paths return.
+    Delivered { end: f64, arr: f64 },
+    /// The transfer faulted or timed out; the sender learns at `t_fail`
+    /// (its timeout expiry) and the uplink was occupied until then.
+    Faulted { t_fail: f64 },
 }
 
 /// One edge site of the fleet: an owned device plus its own link to the
@@ -75,6 +97,10 @@ pub struct EdgeSite {
     /// Per-edge dynamic batcher: verify uplinks from sessions drafting
     /// on this edge coalesce over this edge's link.
     pub batcher: Batcher,
+    /// Fault plane for this edge's uplink: seeded fault draws + backoff
+    /// schedule. `None` (the default) keeps [`Self::try_send_up`] on
+    /// the plain bitwise-identical path with zero extra RNG draws.
+    pub faults: Option<FaultPlane>,
     pub flops: f64,
     busy: f64,
     up_busy: f64,
@@ -155,6 +181,72 @@ impl EdgeSite {
     pub fn send_down(&mut self, earliest: f64, bytes: u64, skip_propagation: bool) -> (f64, f64) {
         self.transfer(Dir::Down, earliest, bytes, skip_propagation)
     }
+
+    /// Fault-aware uplink: like [`Self::send_up`] but the transfer can
+    /// fault (seeded per-transfer draw, boosted while the link is in a
+    /// degraded state) or time out (the sender's timeout is derived
+    /// from the *monitor's* bandwidth/RTT belief, not ground truth).
+    ///
+    /// With no [`FaultPlane`] armed this is exactly `send_up` — same
+    /// arithmetic, same single `conditions_at` sample, zero fault-RNG
+    /// draws — so fault-free runs stay bit for bit. The faulty path
+    /// also samples conditions exactly once, keeping the link's
+    /// jitter/Markov stream aligned with the fault-free path.
+    pub fn try_send_up(
+        &mut self,
+        earliest: f64,
+        bytes: u64,
+        skip_propagation: bool,
+    ) -> SendOutcome {
+        let Some(cfg) = self.faults.as_ref().map(|f| f.cfg) else {
+            let (end, arr) = self.send_up(earliest, bytes, skip_propagation);
+            return SendOutcome::Delivered { end, arr };
+        };
+        let start = self.up_busy.max(earliest);
+        let (bw, rtt) = self.link.conditions_at(start);
+        let ser = serialize_s_with(bw, bytes);
+        let prop = if skip_propagation { 0.0 } else { 0.5 * (rtt * 1e-3) };
+        // Timeout from the coordinator's belief: predicted transfer
+        // time (serialization at believed bandwidth + believed RTT)
+        // scaled by the configured slack factor.
+        let est = self.monitor.estimate();
+        let timeout_s = cfg.timeout_factor
+            * (serialize_s_with(est.bandwidth_mbps, bytes) + est.rtt_ms * 1e-3);
+        // Fault draws correlate with bad link states: boosted while the
+        // current bandwidth sits below the base (nominal) level.
+        let degraded = bw < self.link.bandwidth_mbps() * 0.999;
+        let drew_fault = self.faults.as_mut().expect("checked above").draw_fault(degraded);
+        let faulted = drew_fault || ser + prop > timeout_s;
+        // The attempt occupies the uplink and is metered either way —
+        // the bytes went out even if the far side never acked them.
+        self.link.transfers += 1;
+        self.link.uplink_bytes += bytes;
+        if faulted {
+            let t_fail = start + timeout_s;
+            self.up_busy = t_fail;
+            // A truncated transfer must not poison the bandwidth EMA;
+            // the monitor absorbs the wait as an RTT penalty only.
+            self.monitor.observe_fault(timeout_s * 1e3);
+            SendOutcome::Faulted { t_fail }
+        } else {
+            let end = start + ser;
+            self.up_busy = end;
+            self.monitor.observe_transfer(bw, rtt);
+            SendOutcome::Delivered { end, arr: end + prop }
+        }
+    }
+
+    /// Backoff delay before retry `attempt` (0-based), from this edge's
+    /// fault plane. Panics if faults are not armed — retry arms only
+    /// exist on faulted paths, which require an armed plane.
+    pub fn retry_backoff(&mut self, attempt: usize) -> f64 {
+        self.faults.as_mut().expect("retry_backoff without an armed FaultPlane").backoff(attempt)
+    }
+
+    /// The armed retry policy, if any.
+    pub fn faults_cfg(&self) -> Option<FaultsCfg> {
+        self.faults.as_ref().map(|f| f.cfg)
+    }
 }
 
 impl CloudDevice {
@@ -183,6 +275,12 @@ pub struct VirtualCluster {
     pub edges: Vec<EdgeSite>,
     /// The one shared cloud device all edges contend for.
     pub cloud: CloudDevice,
+    /// Cloud unavailability windows (seeded renewal process), armed by
+    /// [`Self::arm_faults`] when the fault config enables outages.
+    /// Queried only from Global steps (verify/baseline-start arrival at
+    /// the cloud), so the sharded driver sees the exact sequential
+    /// query order.
+    pub outage: Option<OutageProcess>,
 }
 
 impl VirtualCluster {
@@ -204,6 +302,7 @@ impl VirtualCluster {
                     cfg.serve.verify_batch,
                     true,
                 ),
+                faults: None,
                 flops: 0.0,
                 busy: 0.0,
                 up_busy: 0.0,
@@ -218,7 +317,28 @@ impl VirtualCluster {
                 flops: 0.0,
                 busy: 0.0,
             },
+            outage: None,
         }
+    }
+
+    /// Arm the fault plane: every edge gets its own salted fault
+    /// RNG stream (edge 0 included — the salt keeps it off the link
+    /// streams), and the shared cloud gets one outage renewal process
+    /// when the config enables outages. Serve paths call this after
+    /// building the cluster; trace paths that never arm it keep every
+    /// RNG stream untouched.
+    pub fn arm_faults(&mut self, fc: &FaultsCfg, seed: u64) {
+        for (id, edge) in self.edges.iter_mut().enumerate() {
+            edge.faults = Some(FaultPlane::new(*fc, edge_seed(seed, id) ^ FAULT_SALT));
+        }
+        self.outage = (fc.outage_gap_s > 0.0)
+            .then(|| OutageProcess::new(fc.outage_gap_s, fc.outage_dur_s, seed ^ OUTAGE_SALT));
+    }
+
+    /// Is the cloud inside an unavailability window at `t`? Returns
+    /// when service resumes. Always `None` when outages are not armed.
+    pub fn cloud_down_at(&mut self, t: f64) -> Option<f64> {
+        self.outage.as_mut().and_then(|o| o.down_at(t))
     }
 
     /// Split the cluster into its independently-advancing edge shards
@@ -511,6 +631,67 @@ mod tests {
         let e1 = c.edges[1].monitor.estimate();
         assert_eq!(e1.bandwidth_mbps.to_bits(), (60.0f64).to_bits());
         assert_eq!(c.edges[1].monitor.transfers_observed, 10);
+    }
+
+    #[test]
+    fn try_send_up_unarmed_is_bitwise_send_up() {
+        // The inertness guarantee at the substrate layer: with no
+        // FaultPlane armed, try_send_up and send_up charge identical
+        // times (to the bit) and draw nothing from any fault stream.
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        let mut a = VirtualCluster::new(&cfg, 1);
+        let mut b = VirtualCluster::new(&cfg, 1);
+        for (i, &bytes) in [1_000_000u64, 0, 555, 64 * 1024].iter().enumerate() {
+            let t = i as f64 * 0.2;
+            let (e1, a1) = a.send_up(0, t, bytes, i % 2 == 0);
+            match b.edges[0].try_send_up(t, bytes, i % 2 == 0) {
+                SendOutcome::Delivered { end, arr } => {
+                    assert_eq!(e1.to_bits(), end.to_bits(), "transfer {i}: end");
+                    assert_eq!(a1.to_bits(), arr.to_bits(), "transfer {i}: arrival");
+                }
+                o => panic!("unarmed try_send_up faulted: {o:?}"),
+            }
+        }
+        let (ea, eb) = (a.edges[0].monitor.estimate(), b.edges[0].monitor.estimate());
+        assert_eq!(ea.bandwidth_mbps.to_bits(), eb.bandwidth_mbps.to_bits());
+        assert_eq!(ea.rtt_ms.to_bits(), eb.rtt_ms.to_bits());
+    }
+
+    #[test]
+    fn armed_fault_occupies_uplink_until_timeout_and_spares_bandwidth_ema() {
+        use crate::config::FaultsCfg;
+        let mut cfg = Config::default();
+        cfg.network.jitter = 0.0;
+        let mut c = VirtualCluster::new(&cfg, 1);
+        let fc = FaultsCfg { p_fault: 1.0, jitter: 0.0, ..FaultsCfg::default() };
+        c.arm_faults(&fc, 1);
+        let bytes = 1_000_000u64;
+        // Belief == nominal at t=0, so the timeout is factor * (ser + rtt).
+        let want_timeout = 4.0 * (bytes as f64 * 8.0 / 300e6 + 0.020);
+        match c.edges[0].try_send_up(0.0, bytes, false) {
+            SendOutcome::Faulted { t_fail } => {
+                assert!((t_fail - want_timeout).abs() < 1e-12, "{t_fail} vs {want_timeout}");
+            }
+            o => panic!("p_fault = 1 delivered: {o:?}"),
+        }
+        // Uplink was held until the timeout; bytes metered; bandwidth
+        // belief untouched (satellite: no truncated-sample poisoning).
+        c.edges[0].faults.as_mut().unwrap().cfg.p_fault = 0.0;
+        let SendOutcome::Delivered { end, .. } = c.edges[0].try_send_up(0.0, 0, false) else {
+            panic!("zero-byte probe faulted at p_fault = 0");
+        };
+        assert!(end >= want_timeout, "second transfer not queued behind timeout: {end}");
+        let e = c.edges[0].monitor.estimate();
+        assert_eq!(e.bandwidth_mbps.to_bits(), (300.0f64).to_bits());
+        assert!(e.rtt_ms > 20.0, "RTT belief did not absorb the penalty");
+        assert_eq!(c.edges[0].link.uplink_bytes, bytes);
+        // Outage process only arms when the config enables it.
+        assert!(c.outage.is_none());
+        assert!(c.cloud_down_at(5.0).is_none());
+        let oc = FaultsCfg { outage_gap_s: 0.001, outage_dur_s: 10.0, ..fc };
+        c.arm_faults(&oc, 1);
+        assert!(c.outage.is_some());
     }
 
     #[test]

@@ -901,6 +901,96 @@ pub fn saturation(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
     Ok((table, arr(rows)))
 }
 
+/// Chaos — the fault plane swept over injection intensity × retry
+/// policy (MSAO vs Cloud-only vs Edge-only, conc 8).
+///
+/// Intensities: calm (p_fault 0, a control arm with only the armed
+/// timeout detector live), lossy (10% transfer faults), stormy (30%
+/// faults + periodic cloud outage windows). Each intensity runs twice:
+/// with the full retry policy (3 backoff attempts, then MSAO edge-local
+/// failover) and without retries (first fault → failover for MSAO,
+/// outright failure for Cloud-only). The headline is `availability`:
+/// MSAO degrades gracefully (failover keeps requests completing at
+/// reduced cloud fraction) where Cloud-only collapses, and Edge-only is
+/// immune by construction — it never touches the faulted links.
+pub fn chaos(coord: &mut Coordinator, n: usize) -> Result<(Table, Value)> {
+    use crate::config::FaultsCfg;
+
+    coord.cfg.network.bandwidth_mbps = 300.0;
+    let intensities: [(&str, f64, f64); 3] =
+        [("calm", 0.0, 0.0), ("lossy", 0.1, 0.0), ("stormy", 0.3, 25.0)];
+    let arms: [(&str, usize); 2] = [("retry", 3), ("no-retry", 0)];
+    let methods = [Method::Msao, Method::CloudOnly, Method::EdgeOnly];
+    let mut table = Table::new(
+        "Chaos — transfer faults + cloud outages vs retry policy (VQA, 300 Mbps, conc 8)",
+        &[
+            "cell", "method", "avail_%", "goodput_rps", "failover_%", "retries_req", "failed",
+            "shed", "lat_p99_s",
+        ],
+    );
+    let mut rows = Vec::new();
+    for (intensity, p_fault, outage_gap_s) in intensities {
+        for (arm, max_retries) in arms {
+            let fc = FaultsCfg {
+                p_fault,
+                outage_gap_s,
+                outage_dur_s: 2.0,
+                max_retries,
+                // Failover stays on in both arms (max_retries = 0 with
+                // failover off is rejected as an unrecoverable config);
+                // only MSAO can use it, which is the point of the
+                // comparison.
+                failover: true,
+                ..FaultsCfg::default()
+            };
+            let label = format!("{intensity}/{arm}");
+            for method in methods {
+                // Same trace and testbed seed in every cell: rows
+                // differ only by fault intensity and retry policy.
+                let mut gen = Generator::new(4242);
+                let items = gen.items(Benchmark::Vqa, n);
+                let arrivals = gen.arrivals(n, 4.0);
+                let spec = TraceSpec::new(method.policy())
+                    .trace(items, arrivals)
+                    .seed(9)
+                    .concurrency(8)
+                    .faults(fc);
+                let res = serve(coord, &spec)?;
+                let sum = summarize(&res.records);
+                table.row(vec![
+                    label.clone(),
+                    method.name().to_string(),
+                    f1(sum.availability * 100.0),
+                    f2(sum.goodput_rps),
+                    f1(sum.failover_rate * 100.0),
+                    f2(sum.retries_per_req),
+                    sum.failed.to_string(),
+                    sum.shed.to_string(),
+                    f3(sum.latency_p99_s),
+                ]);
+                rows.push(obj(vec![
+                    ("cell", s(&label)),
+                    ("intensity", s(intensity)),
+                    ("arm", s(arm)),
+                    ("p_fault", num(p_fault)),
+                    ("outage_gap_s", num(outage_gap_s)),
+                    ("max_retries", num(max_retries as f64)),
+                    ("method", s(method.name())),
+                    ("availability", num(sum.availability)),
+                    ("goodput_rps", num(sum.goodput_rps)),
+                    ("failover_rate", num(sum.failover_rate)),
+                    ("retries_per_req", num(sum.retries_per_req)),
+                    ("failed", num(sum.failed as f64)),
+                    ("shed", num(sum.shed as f64)),
+                    ("latency_p99_s", num(sum.latency_p99_s)),
+                    ("accuracy", num(sum.expected_accuracy * 100.0)),
+                ]));
+            }
+        }
+    }
+    Ok((table, arr(rows)))
+}
+
 /// Dispatcher: run one experiment id (or "all"), print tables, dump JSON.
 pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) -> Result<()> {
     let mut dumps: Vec<(&str, Value)> = Vec::new();
@@ -962,6 +1052,11 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             t.print();
             dumps.push(("saturation", v));
         }
+        "chaos" => {
+            let (t, v) = chaos(coord, n)?;
+            t.print();
+            dumps.push(("chaos", v));
+        }
         "main" => {
             // Figs. 5-8 share one sweep; run it once.
             let data = main_sweep(coord, n)?;
@@ -1013,6 +1108,9 @@ pub fn run(coord: &mut Coordinator, id: &str, n: usize, out_json: Option<&str>) 
             let (t, v) = saturation(coord, n)?;
             t.print();
             dumps.push(("saturation", v));
+            let (t, v) = chaos(coord, n)?;
+            t.print();
+            dumps.push(("chaos", v));
         }
         other => anyhow::bail!("unknown experiment id {other:?}"),
     }

@@ -7,7 +7,7 @@
 //!         [--scenario FILE] [--concurrency C] [--network SC]
 //!         [--edges E] [--assign A] [--workers W]
 //!         [--sched fcfs|edf] [--deadline S [--slo CLASS]]
-//!         [--admission on|off]
+//!         [--admission on|off] [--fault-p P] [--fault-retries K]
 //!                                — serve a trace through the
 //!                                  unified policy API, print summary.
 //!                                  Modes: msao|no-modality|no-collab|
@@ -34,7 +34,12 @@
 //!                                  (latency-critical|standard|
 //!                                  best-effort, default standard), and
 //!                                  --admission on sheds/degrades
-//!                                  requests predicted to miss.
+//!                                  requests predicted to miss;
+//!                                  --fault-p arms the fault plane with
+//!                                  a per-transfer fault probability and
+//!                                  --fault-retries caps the retry
+//!                                  budget (see `[faults]` in
+//!                                  CONFIG.md).
 //!   scenario [--file F | --dir D] [--seed S]
 //!                                — parse + compile scenario files
 //!                                  without serving (no engine
@@ -45,7 +50,7 @@
 //!   experiment --id ID [--n N] [--json PATH] — regenerate a paper artifact
 //!                                  (fig4|table1|fig5..fig9|concurrency|
 //!                                  mixed|volatility|fleet|traffic|
-//!                                  saturation|main|all)
+//!                                  saturation|chaos|main|all)
 //!
 //! Flag parsing is hand-rolled (offline environment: no clap) and lives
 //! in `msao::cli` so the flag → TraceSpec mapping is unit-tested.
@@ -174,6 +179,15 @@ fn main() -> Result<()> {
                     sum.goodput_rps,
                     sum.shed,
                     sum.degraded
+                );
+            }
+            if spec.effective_faults(&coord.cfg).is_some() {
+                println!(
+                    "faults: availability {:.1}%  retries/req {:.2}  failover {:.1}%  failed {}",
+                    sum.availability * 100.0,
+                    sum.retries_per_req,
+                    sum.failover_rate * 100.0,
+                    sum.failed
                 );
             }
             if coord.cfg.dynamics != msao::config::NetworkDynamics::Constant {

@@ -67,6 +67,19 @@ pub struct ExecRecord {
     /// Served at the degraded quality level (shrunken speculative
     /// budget, no cloud-direct escape hatch).
     pub degraded: bool,
+    /// Transfer faults / cloud-outage hits this request experienced
+    /// (each one burned one attempt at its fault site).
+    pub faults: usize,
+    /// Retry attempts actually scheduled (backoff waits that became
+    /// real scheduler events).
+    pub retries: usize,
+    /// MSAO edge-local failover: retries exhausted, verified-so-far
+    /// tokens accepted, remainder decoded on the edge at draft quality.
+    pub failover: bool,
+    /// Request failed outright (retries exhausted with no failover
+    /// path, or an engine-site error). Counted like shed in the served
+    /// filter, but `t_done` is the failure time, not the arrival.
+    pub failed: bool,
 }
 
 impl ExecRecord {
@@ -82,10 +95,11 @@ impl ExecRecord {
         self.flops_edge + self.flops_cloud
     }
 
-    /// Did this request meet its SLO? Shed requests never do; requests
-    /// without a deadline trivially do (completing is the whole SLO).
+    /// Did this request meet its SLO? Shed and failed requests never
+    /// do; requests without a deadline trivially do (completing is the
+    /// whole SLO).
     pub fn met_deadline(&self) -> bool {
-        if self.shed {
+        if self.shed || self.failed {
             return false;
         }
         match self.deadline_s {
@@ -151,6 +165,15 @@ pub struct Summary {
     /// of makespan — the saturation experiment's headline (plateaus
     /// under shedding where raw throughput would collapse).
     pub goodput_rps: f64,
+    /// Requests that failed outright (fault plane / engine error).
+    pub failed: usize,
+    /// Fraction of requests served to completion: (n - shed - failed)/n
+    /// — the chaos experiment's headline.
+    pub availability: f64,
+    /// Mean retry attempts per request (all requests, served or not).
+    pub retries_per_req: f64,
+    /// Fraction of requests finishing via MSAO edge-local failover.
+    pub failover_rate: f64,
 }
 
 impl Summary {
@@ -167,11 +190,13 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
     let n = records.len();
     assert!(n > 0, "no records");
     // Latency/quality/cost statistics cover *served* requests only —
-    // shed ones never ran, so their zeroed fields would skew every mean
-    // low. On a shed-free trace the filter is the identity and each
-    // aggregate is bitwise what it always was.
-    let served: Vec<&ExecRecord> = records.iter().filter(|r| !r.shed).collect();
+    // shed ones never ran and failed ones never delivered an answer, so
+    // their zeroed/truncated fields would skew every mean low. On a
+    // fault-free trace the filter is the identity and each aggregate is
+    // bitwise what it always was.
+    let served: Vec<&ExecRecord> = records.iter().filter(|r| !r.shed && !r.failed).collect();
     let n_served = served.len();
+    let n_failed = records.iter().filter(|r| r.failed).count();
     let lat: Vec<f64> = served.iter().map(|r| r.latency_s).collect();
     let makespan = records
         .iter()
@@ -218,12 +243,16 @@ pub fn summarize(records: &[ExecRecord]) -> Summary {
         tokens_per_req: tokens as f64 / n_served.max(1) as f64,
         wall_clock_s: 0.0,
         events_per_s: 0.0,
-        shed: n - n_served,
+        shed: records.iter().filter(|r| r.shed).count(),
         degraded: records.iter().filter(|r| r.degraded).count(),
         deadlined: records.iter().filter(|r| r.deadline_s.is_some()).count(),
         slo_attainment: met as f64 / n as f64,
         slo_attainment_by_class: by_class,
         goodput_rps: met as f64 / makespan.max(1e-9),
+        failed: n_failed,
+        availability: n_served as f64 / n as f64,
+        retries_per_req: records.iter().map(|r| r.retries as f64).sum::<f64>() / n as f64,
+        failover_rate: records.iter().filter(|r| r.failover).count() as f64 / n as f64,
     }
 }
 
@@ -272,7 +301,10 @@ pub fn windowed_rates(records: &[ExecRecord], window_s: f64) -> Vec<WindowStats>
     let bucket = |t: f64| (((t - t0) / window_s).floor() as usize).min(n_win - 1);
     for r in records {
         offered[bucket(r.t_arrival)] += 1;
-        if r.shed {
+        if r.shed || r.failed {
+            // Neither delivered an answer: bucketed as non-completions
+            // (shed at its arrival == rejection time, failed at its
+            // failure time) so their latencies never enter percentiles.
             shed[bucket(r.t_done)] += 1;
         } else {
             done[bucket(r.t_done)].push(r.latency_s);
@@ -427,6 +459,46 @@ mod tests {
         assert_eq!(s.latency_mean_s, 0.0);
         assert_eq!(s.slo_attainment, 0.0);
         assert_eq!(s.accuracy, 0.0);
+    }
+
+    #[test]
+    fn summary_fault_accounting() {
+        // One clean request, one that retried then recovered, one MSAO
+        // failover, one outright failure.
+        let clean = rec(1.0, 0.0, 10, true);
+        let mut retried = rec(2.0, 1.0, 10, true);
+        retried.faults = 1;
+        retried.retries = 1;
+        let mut failover = rec(3.0, 2.0, 10, true);
+        failover.faults = 3;
+        failover.retries = 2;
+        failover.failover = true;
+        let mut failed = rec(4.0, 3.0, 0, false);
+        failed.faults = 3;
+        failed.retries = 2;
+        failed.failed = true;
+        let s = summarize(&[clean, retried, failover, failed.clone()]);
+        assert_eq!((s.n, s.shed, s.failed), (4, 0, 1));
+        assert!((s.availability - 0.75).abs() < 1e-12);
+        assert!((s.retries_per_req - 5.0 / 4.0).abs() < 1e-12);
+        assert!((s.failover_rate - 0.25).abs() < 1e-12);
+        // The failed request is excluded from served means but its
+        // t_done (= 7.0) still bounds the makespan.
+        assert!((s.latency_mean_s - 2.0).abs() < 1e-12);
+        assert!((s.makespan_s - 7.0).abs() < 1e-12);
+        // Failed never meets its SLO, deadline or not.
+        assert!(!failed.met_deadline());
+        assert!((s.slo_attainment - 0.75).abs() < 1e-12);
+        // Fault-free batch: counters zero, availability 1 — the
+        // aggregates identity the inertness golden relies on.
+        let s0 = summarize(&[rec(1.0, 0.0, 10, true)]);
+        assert_eq!((s0.failed, s0.shed), (0, 0));
+        assert_eq!(s0.availability, 1.0);
+        assert_eq!(s0.retries_per_req, 0.0);
+        assert_eq!(s0.failover_rate, 0.0);
+        // windowed_rates treats failed as a non-completion.
+        let w = windowed_rates(&[rec(1.0, 0.0, 10, true), failed], 10.0);
+        assert_eq!((w[0].offered, w[0].completed, w[0].shed), (2, 1, 1));
     }
 
     #[test]

@@ -87,7 +87,28 @@ impl SiteThread {
                 while let Ok(cmd) = rx.recv() {
                     match cmd {
                         Cmd::Call { graph, args, plan, resp } => {
-                            resp.send(site.call(&graph, &args, plan));
+                            // A panic inside the engine call must not
+                            // kill the actor (every later request on
+                            // this site would then fail on a dead
+                            // channel): catch it, surface the payload
+                            // and site name as a request-level error,
+                            // and keep serving.
+                            let out = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    site.call(&graph, &args, plan)
+                                }),
+                            )
+                            .unwrap_or_else(|payload| {
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "non-string panic payload".into());
+                                Err(anyhow!(
+                                    "site {name_s}: engine call {graph:?} panicked: {msg}"
+                                ))
+                            });
+                            resp.send(out);
                         }
                         Cmd::ExportKv { handle, spec, resp } => {
                             resp.send(site.export_kv(handle, &spec));

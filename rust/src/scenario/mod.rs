@@ -30,6 +30,7 @@ pub use dialogue::DialogueCfg;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::config::FaultsCfg;
 use crate::coordinator::{Mode, PolicyKind, Sched, SloClass, TraceSpec};
 use crate::util::json::Value;
 use crate::util::Rng;
@@ -59,6 +60,11 @@ pub struct ScenarioSpec {
     /// per-tenant overrides) and optionally flips the scheduling
     /// discipline / admission controller for the compiled trace.
     pub slo: Option<SloCfg>,
+    /// `Some` arms the fault plane for the compiled trace: seeded
+    /// transfer faults/timeouts, cloud outage windows, retry policy,
+    /// and edge-local failover (see `[faults]` in CONFIG.md). `None`
+    /// leaves every fault RNG stream untouched — bitwise inert.
+    pub faults: Option<FaultsCfg>,
 }
 
 impl Default for ScenarioSpec {
@@ -73,6 +79,7 @@ impl Default for ScenarioSpec {
             mix: Mix::default(),
             dialogue: None,
             slo: None,
+            faults: None,
         }
     }
 }
@@ -183,7 +190,11 @@ impl ScenarioSpec {
 
     /// Build from a parsed [`Value`] tree; unknown keys are errors.
     pub fn from_value(v: &Value) -> Result<ScenarioSpec> {
-        check_keys(v, &["n", "rate", "arrival", "shape", "mix", "dialogue", "slo"], "scenario")?;
+        check_keys(
+            v,
+            &["n", "rate", "arrival", "shape", "mix", "dialogue", "slo", "faults"],
+            "scenario",
+        )?;
         let d = ScenarioSpec::default();
         let spec = ScenarioSpec {
             n: match v.get("n") {
@@ -214,6 +225,10 @@ impl ScenarioSpec {
                 Some(t) => Some(parse_slo(t)?),
                 None => None,
             },
+            faults: match v.get("faults") {
+                Some(t) => Some(parse_faults(t)?),
+                None => None,
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -229,6 +244,9 @@ impl ScenarioSpec {
         }
         if let Some(slo) = &self.slo {
             slo.validate(&self.mix)?;
+        }
+        if let Some(fc) = &self.faults {
+            fc.validate().context("[faults]")?;
         }
         Ok(())
     }
@@ -345,6 +363,9 @@ impl ScenarioSpec {
                 spec = spec.sched(sched);
             }
             spec = spec.admission(slo.admission);
+        }
+        if let Some(fc) = self.faults {
+            spec = spec.faults(fc);
         }
         spec.validate()?;
         Ok(spec)
@@ -594,6 +615,54 @@ fn parse_slo(v: &Value) -> Result<SloCfg> {
         }
     }
     Ok(SloCfg { class, deadline_s, sched, admission, tenants })
+}
+
+fn parse_faults(v: &Value) -> Result<FaultsCfg> {
+    check_keys(
+        v,
+        &[
+            "p_fault",
+            "degraded_boost",
+            "outage_gap_s",
+            "outage_dur_s",
+            "max_retries",
+            "backoff_base_s",
+            "backoff_cap_s",
+            "jitter",
+            "failover",
+            "timeout_factor",
+        ],
+        "[faults]",
+    )?;
+    let d = FaultsCfg::default();
+    let f = |key: &str, dflt: f64| -> Result<f64> {
+        match v.get(key) {
+            Some(x) => x.as_f64().with_context(|| format!("[faults] key {key:?}")),
+            None => Ok(dflt),
+        }
+    };
+    let fc = FaultsCfg {
+        p_fault: f("p_fault", d.p_fault)?,
+        degraded_boost: f("degraded_boost", d.degraded_boost)?,
+        outage_gap_s: f("outage_gap_s", d.outage_gap_s)?,
+        outage_dur_s: f("outage_dur_s", d.outage_dur_s)?,
+        max_retries: match v.get("max_retries") {
+            Some(x) => x.as_usize().with_context(|| "[faults] key \"max_retries\"")?,
+            None => d.max_retries,
+        },
+        backoff_base_s: f("backoff_base_s", d.backoff_base_s)?,
+        backoff_cap_s: f("backoff_cap_s", d.backoff_cap_s)?,
+        jitter: f("jitter", d.jitter)?,
+        failover: match v.get("failover") {
+            Some(x) => x.as_bool().with_context(|| "[faults] key \"failover\"")?,
+            None => d.failover,
+        },
+        timeout_factor: f("timeout_factor", d.timeout_factor)?,
+    };
+    // Shared validation with the config `[faults]` section: messages
+    // already name the offending key; add the table for the file path.
+    fc.validate().context("[faults]")?;
+    Ok(fc)
 }
 
 #[cfg(test)]
@@ -851,6 +920,56 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("msao_bad_slo.toml"), "{msg}");
         assert!(msg.contains("platinum"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn faults_table_parses_and_threads_into_the_spec() {
+        let sc = toml_spec(
+            "n = 6\n[faults]\np_fault = 0.2\nmax_retries = 2\nbackoff_base_s = 0.1\n\
+             outage_gap_s = 20.0\noutage_dur_s = 1.5\nfailover = true\n",
+        )
+        .unwrap();
+        let fc = sc.faults.unwrap();
+        assert_eq!(fc.p_fault, 0.2);
+        assert_eq!(fc.max_retries, 2);
+        assert_eq!(fc.outage_gap_s, 20.0);
+        // Unset keys inherit the config-section defaults.
+        assert_eq!(fc.timeout_factor, FaultsCfg::default().timeout_factor);
+        let spec = sc.compile(5).unwrap();
+        assert_eq!(spec.faults, Some(fc));
+        // Without [faults] the compiled trace stays unarmed.
+        assert_eq!(ScenarioSpec::default().compile(5).unwrap().faults, None);
+    }
+
+    #[test]
+    fn faults_error_paths_name_the_key() {
+        // Unknown key inside [faults].
+        let err = toml_spec("[faults]\nbogus = 1.0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("bogus"), "{err:#}");
+        // Probabilities out of range (negative and > 1).
+        for doc in ["[faults]\np_fault = -0.1\n", "[faults]\np_fault = 1.5\n"] {
+            let err = toml_spec(doc).unwrap_err();
+            assert!(format!("{err:#}").contains("p_fault"), "{err:#}");
+        }
+        // Negative backoff.
+        let err = toml_spec("[faults]\nbackoff_base_s = -1.0\n").unwrap_err();
+        assert!(format!("{err:#}").contains("backoff_base_s"), "{err:#}");
+        // No retries and no failover means a single fault has no exit.
+        let err = toml_spec("[faults]\nmax_retries = 0\nfailover = false\n").unwrap_err();
+        assert!(format!("{err:#}").contains("max_retries"), "{err:#}");
+        // Zero retries with failover is a valid degraded arm.
+        assert!(toml_spec("[faults]\nmax_retries = 0\nfailover = true\n").is_ok());
+        // Wrong type surfaces the key too.
+        let err = toml_spec("[faults]\nmax_retries = \"three\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("max_retries"), "{err:#}");
+        // The file-level validator path carries file name and key.
+        let path = std::env::temp_dir().join("msao_bad_faults.toml");
+        std::fs::write(&path, "[faults]\np_fault = 2.0\n").unwrap();
+        let err = check_file(&path.to_string_lossy(), 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("msao_bad_faults.toml"), "{msg}");
+        assert!(msg.contains("p_fault"), "{msg}");
         std::fs::remove_file(&path).ok();
     }
 

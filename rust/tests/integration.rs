@@ -7,7 +7,7 @@ use std::sync::{Mutex, OnceLock};
 
 use msao::baselines::{cloud_only, edge_only, perllm, Baseline};
 use msao::cluster::NetEstimate;
-use msao::config::{Config, EdgeSiteCfg, NetworkDynamics, NetworkScenario, Segment};
+use msao::config::{Config, EdgeSiteCfg, FaultsCfg, NetworkDynamics, NetworkScenario, Segment};
 use msao::coordinator::mas::run_probe;
 use msao::coordinator::planner::{plan, PlanCtx};
 use msao::coordinator::{
@@ -450,6 +450,10 @@ fn assert_records_bitwise_equal(
     assert_eq!(a.flops_cloud.to_bits(), b.flops_cloud.to_bits(), "{what}: flops_cloud");
     assert_eq!(a.mem_serving_gb.to_bits(), b.mem_serving_gb.to_bits(), "{what}: mem_serving");
     assert_eq!(a.p_correct.to_bits(), b.p_correct.to_bits(), "{what}: p_correct");
+    assert_eq!(a.faults, b.faults, "{what}: faults");
+    assert_eq!(a.retries, b.retries, "{what}: retries");
+    assert_eq!(a.failover, b.failover, "{what}: failover");
+    assert_eq!(a.failed, b.failed, "{what}: failed");
 }
 
 #[test]
@@ -1149,4 +1153,245 @@ fn mixed_policy_trace_serves_heterogeneous_tenants() {
     for i in (1..n).step_by(4) {
         assert!(res.records[i].bytes_up > 0, "cloud-only req {i} shipped nothing");
     }
+}
+
+#[test]
+fn faults_disabled_is_bit_for_bit_inert() {
+    require_artifacts!();
+    // The fault-plane golden: with no [faults] table the plane is never
+    // armed — no fault RNG streams exist, every record's fault fields
+    // stay zero, and both serving drivers reproduce the pre-fault serve
+    // path bit for bit at concurrency {1, 8} x workers {1, 2}.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    for conc in [1usize, 8] {
+        let make = || {
+            let mut gen = Generator::new(31);
+            let n = 6;
+            let items = gen.items(Benchmark::Vqa, n);
+            let arrivals = gen.arrivals(n, 2.5);
+            msao_spec(items, arrivals, Mode::Msao, 5).concurrency(conc)
+        };
+        let golden = serve_materialized_ref(&mut c, &make()).unwrap();
+        let sequential = serve(&mut c, &make().workers(1)).unwrap();
+        for workers in [1usize, 2] {
+            let res = serve(&mut c, &make().workers(workers)).unwrap();
+            for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+                assert_records_bitwise_equal(a, b, &format!("conc {conc} w{workers} req {i}"));
+            }
+            assert_eq!(
+                sequential.events_hash, res.events_hash,
+                "conc {conc} w{workers}: event-sequence hash"
+            );
+            assert_eq!(golden.uplink_bytes, res.uplink_bytes, "conc {conc} w{workers}: uplink");
+            assert_eq!(res.failed, 0, "conc {conc} w{workers}: trace failed count");
+            assert_eq!(res.failover, 0, "conc {conc} w{workers}: trace failover count");
+            assert_eq!(res.retries, 0, "conc {conc} w{workers}: trace retry count");
+            for (i, r) in res.records.iter().enumerate() {
+                let what = format!("conc {conc} w{workers} req {i}");
+                assert_eq!(r.faults, 0, "{what}: faults");
+                assert_eq!(r.retries, 0, "{what}: retries");
+                assert!(!r.failover, "{what}: failover");
+                assert!(!r.failed, "{what}: failed");
+            }
+            let sum = summarize(&res.records);
+            assert_eq!(sum.availability.to_bits(), (1.0f64).to_bits(), "conc {conc}: avail");
+            assert_eq!(sum.retries_per_req, 0.0, "conc {conc}: retries/req");
+            assert_eq!(sum.failover_rate, 0.0, "conc {conc}: failover rate");
+            assert_eq!(sum.failed, 0, "conc {conc}: failed");
+        }
+    }
+}
+
+#[test]
+fn certain_faults_pin_exact_retry_and_failover_counts() {
+    require_artifacts!();
+    // Deterministic fault arithmetic: p_fault = 1 faults every offload
+    // attempt, so with max_retries = 2 each offloading request burns
+    // exactly 3 attempts (initial + 2 retries) on its first transfer and
+    // then exhausts recovery. MSAO fails over to edge-local decode and
+    // still answers; Cloud-only (and PerLLM) fail the request outright;
+    // Edge-only never touches the link and must not see the plane at all.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let fc = FaultsCfg {
+        p_fault: 1.0,
+        jitter: 0.0,
+        max_retries: 2,
+        failover: true,
+        ..FaultsCfg::default()
+    };
+    let n = 5;
+    let make = |policy: PolicyKind| {
+        let mut gen = Generator::new(31);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 1.3);
+        TraceSpec::new(policy).trace(items, arrivals).seed(5).concurrency(4).faults(fc)
+    };
+
+    let msao = serve(&mut c, &make(PolicyKind::Msao(Mode::Msao))).unwrap();
+    for (i, r) in msao.records.iter().enumerate() {
+        assert_eq!(r.faults, 3, "msao req {i}: faults");
+        assert_eq!(r.retries, 2, "msao req {i}: retries");
+        assert!(r.failover, "msao req {i}: must fail over");
+        assert!(!r.failed, "msao req {i}: failover still serves");
+        assert!(r.tokens_out > 0, "msao req {i}: failover produced no tokens");
+        assert!(r.t_done > r.t_arrival, "msao req {i}: non-causal completion");
+    }
+    let msao_sum = summarize(&msao.records);
+    assert_eq!(msao_sum.availability.to_bits(), (1.0f64).to_bits(), "msao availability");
+    assert_eq!(msao_sum.failover_rate.to_bits(), (1.0f64).to_bits(), "msao failover rate");
+    assert_eq!(msao_sum.retries_per_req.to_bits(), (2.0f64).to_bits(), "msao retries/req");
+    assert_eq!(msao_sum.failed, 0);
+
+    for policy in [PolicyKind::CloudOnly, PolicyKind::PerLlm] {
+        let res = serve(&mut c, &make(policy.clone())).unwrap();
+        for (i, r) in res.records.iter().enumerate() {
+            assert_eq!(r.faults, 3, "{policy:?} req {i}: faults");
+            assert_eq!(r.retries, 2, "{policy:?} req {i}: retries");
+            assert!(r.failed, "{policy:?} req {i}: must fail (no failover path)");
+            assert!(!r.failover, "{policy:?} req {i}: baselines never fail over");
+            assert_eq!(r.tokens_out, 0, "{policy:?} req {i}: failed request made tokens");
+        }
+        assert_eq!(res.failed, n, "{policy:?}: trace failed count");
+        let sum = summarize(&res.records);
+        assert_eq!(sum.availability.to_bits(), (0.0f64).to_bits(), "{policy:?} availability");
+        assert_eq!(sum.failed, n, "{policy:?} summary failed");
+    }
+
+    let edge = serve(&mut c, &make(PolicyKind::EdgeOnly)).unwrap();
+    for (i, r) in edge.records.iter().enumerate() {
+        assert_eq!(r.faults, 0, "edge-only req {i}: faults");
+        assert_eq!(r.retries, 0, "edge-only req {i}: retries");
+        assert!(!r.failover && !r.failed, "edge-only req {i}: immune");
+        assert!(r.tokens_out > 0, "edge-only req {i}: no tokens");
+    }
+}
+
+#[test]
+fn edge_only_tenants_are_bitwise_unaffected_by_faults() {
+    require_artifacts!();
+    // Fault isolation across tenants: a mixed trace alternates MSAO and
+    // Edge-only on a round-robin fleet of two, so the Edge-only tenant
+    // owns edge 1 and never touches a link or the cloud. Arming the
+    // fault plane must reshape the MSAO records (edge 0) while leaving
+    // every Edge-only record bit for bit identical.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    c.cfg.fleet = vec![
+        EdgeSiteCfg {
+            device: c.cfg.edge,
+            network: c.cfg.network,
+            dynamics: c.cfg.dynamics.clone(),
+        };
+        2
+    ];
+    let n = 8;
+    let make = |faults: Option<FaultsCfg>| {
+        let mut gen = Generator::new(55);
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 2.0);
+        let policies: Vec<PolicyKind> = (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    PolicyKind::Msao(Mode::Msao)
+                } else {
+                    PolicyKind::EdgeOnly
+                }
+            })
+            .collect();
+        let mut spec = TraceSpec::new(PolicyKind::PerRequest(policies))
+            .trace(items, arrivals)
+            .seed(13)
+            .concurrency(n)
+            .assign(Assign::RoundRobin);
+        if let Some(fc) = faults {
+            spec = spec.faults(fc);
+        }
+        spec
+    };
+    let calm = serve(&mut c, &make(None)).unwrap();
+    let fc = FaultsCfg { p_fault: 0.5, max_retries: 1, failover: true, ..FaultsCfg::default() };
+    let chaotic = serve(&mut c, &make(Some(fc))).unwrap();
+    c.cfg.fleet = Vec::new();
+    // The plane actually bit on the MSAO half (p = 0.5 over dozens of
+    // transfers; deterministic under the fixed seed).
+    let msao_faults: usize = chaotic.records.iter().step_by(2).map(|r| r.faults).sum();
+    assert!(msao_faults > 0, "fault plane armed but nothing faulted");
+    for i in (1..n).step_by(2) {
+        let (a, b) = (&calm.records[i], &chaotic.records[i]);
+        assert_eq!(a.edge_id, 1, "edge-only req {i} not on its own edge");
+        assert_records_bitwise_equal(a, b, &format!("edge-only req {i}"));
+        assert_eq!(b.faults, 0, "edge-only req {i}: faults");
+    }
+}
+
+#[test]
+fn sharded_serve_with_faults_reproduces_sequential_bit_for_bit() {
+    require_artifacts!();
+    // The determinism contract under fire: with the fault plane armed
+    // (faults, timeouts, outages, retries, failovers all live) the
+    // sharded driver must still reproduce the sequential driver bit for
+    // bit at every worker count — records, fleet totals, and the
+    // event-sequence hash. Retries are Local steps on the home shard,
+    // so nothing about recovery may leak cross-shard ordering.
+    let mut c = coord();
+    c.cfg.network.bandwidth_mbps = 300.0;
+    let base = c.cfg.network;
+    let mut mid = base;
+    mid.bandwidth_mbps = 120.0;
+    mid.rtt_ms = 40.0;
+    c.cfg.fleet = vec![
+        EdgeSiteCfg { device: c.cfg.edge, network: base, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg { device: c.cfg.edge, network: mid, dynamics: NetworkDynamics::Constant },
+        EdgeSiteCfg {
+            device: c.cfg.edge,
+            network: base,
+            dynamics: NetworkDynamics::Scenario(NetworkScenario::Flaky),
+        },
+    ];
+    let fc = FaultsCfg {
+        p_fault: 0.4,
+        degraded_boost: 2.0,
+        outage_gap_s: 4.0,
+        outage_dur_s: 0.5,
+        max_retries: 2,
+        ..FaultsCfg::default()
+    };
+    let make = |workers: usize| {
+        let mut gen = Generator::new(33);
+        let n = 6;
+        let items = gen.items(Benchmark::Vqa, n);
+        let arrivals = gen.arrivals(n, 2.5);
+        TraceSpec::new(PolicyKind::Msao(Mode::Msao))
+            .trace(items, arrivals)
+            .seed(5)
+            .concurrency(4)
+            .assign(Assign::RoundRobin)
+            .workers(workers)
+            .faults(fc)
+    };
+    let golden = serve(&mut c, &make(1)).unwrap();
+    let total_faults: usize = golden.records.iter().map(|r| r.faults).sum();
+    assert!(total_faults > 0, "fault plane armed but nothing faulted");
+    for workers in [2usize, 4] {
+        let res = serve(&mut c, &make(workers)).unwrap();
+        assert_eq!(golden.events, res.events, "w{workers}: event count");
+        assert_eq!(golden.events_hash, res.events_hash, "w{workers}: event-sequence hash");
+        for (i, (a, b)) in golden.records.iter().zip(&res.records).enumerate() {
+            assert_records_bitwise_equal(a, b, &format!("w{workers} req {i}"));
+            assert_eq!(a.edge_id, b.edge_id, "w{workers} req {i}: edge id");
+        }
+        assert_eq!(golden.uplink_bytes, res.uplink_bytes, "w{workers}: uplink");
+        assert_eq!(golden.downlink_bytes, res.downlink_bytes, "w{workers}: downlink");
+        assert_eq!(golden.failed, res.failed, "w{workers}: failed count");
+        assert_eq!(golden.failover, res.failover, "w{workers}: failover count");
+        assert_eq!(golden.retries, res.retries, "w{workers}: retry count");
+        assert_eq!(
+            golden.cloud_wait_s.to_bits(),
+            res.cloud_wait_s.to_bits(),
+            "w{workers}: cloud wait"
+        );
+    }
+    c.cfg.fleet = Vec::new();
 }

@@ -2,9 +2,10 @@
 //! Each property runs hundreds of seeded random cases through the
 //! deterministic PRNG; failures print the offending seed.
 
-use msao::cluster::{DeviceSim, Link, SimModel, SystemMonitor};
+use msao::cluster::{DeviceSim, FaultPlane, Link, OutageProcess, SimModel, SystemMonitor};
 use msao::config::{
-    Config, DeviceCfg, EdgeSiteCfg, MsaoCfg, NetworkCfg, NetworkDynamics, NetworkScenario, Segment,
+    Config, DeviceCfg, EdgeSiteCfg, FaultsCfg, MsaoCfg, NetworkCfg, NetworkDynamics,
+    NetworkScenario, Segment,
 };
 use msao::coordinator::scheduler::{
     drive, drive_linear_ref, drive_stream, SessionSource, StepOutcome,
@@ -1334,6 +1335,91 @@ fn prop_generator_try_arrivals_rejects_degenerate_rates() {
     let ok = Generator::new(1).try_arrivals(4, 2.0).unwrap();
     assert_eq!(ok.len(), 4);
     assert!(ok.windows(2).all(|w| w[1] >= w[0]));
+}
+
+// --- fault plane ---------------------------------------------------------------
+
+#[test]
+fn prop_fault_draws_respect_probability_extremes() {
+    // p = 0 must never fault and p = 1 must always fault, degraded or
+    // not, for any seed — the boundary cases recovery logic leans on.
+    for seed in cases(200) {
+        let mut sure = FaultPlane::new(FaultsCfg { p_fault: 1.0, ..FaultsCfg::default() }, seed);
+        let mut never = FaultPlane::new(FaultsCfg { p_fault: 0.0, ..FaultsCfg::default() }, seed);
+        for i in 0..50 {
+            let degraded = i % 2 == 0;
+            assert!(sure.draw_fault(degraded), "seed {seed}: p=1 did not fault");
+            assert!(!never.draw_fault(degraded), "seed {seed}: p=0 faulted");
+        }
+    }
+}
+
+#[test]
+fn prop_backoff_bounded_by_cap_and_jitter() {
+    // Every backoff delay sits in [min(cap, base*2^a), that * (1 +
+    // jitter)]; with jitter 0 the schedule is exactly the capped
+    // exponential, hence non-decreasing in the attempt index.
+    for seed in cases(200) {
+        let mut r = Rng::seed_from_u64(seed ^ 0xFA57);
+        let cfg = FaultsCfg {
+            backoff_base_s: r.range_f64(0.01, 0.2),
+            backoff_cap_s: r.range_f64(0.5, 2.5),
+            jitter: r.f64() * 0.5,
+            ..FaultsCfg::default()
+        };
+        let mut fp = FaultPlane::new(cfg, seed);
+        for attempt in 0..80 {
+            let raw =
+                (cfg.backoff_base_s * 2.0_f64.powi(attempt.min(60) as i32)).min(cfg.backoff_cap_s);
+            let d = fp.backoff(attempt);
+            assert!(d >= raw - 1e-12, "seed {seed} attempt {attempt}: {d} below {raw}");
+            assert!(
+                d <= raw * (1.0 + cfg.jitter) + 1e-12,
+                "seed {seed} attempt {attempt}: {d} above jitter bound"
+            );
+        }
+        let mut fp0 = FaultPlane::new(FaultsCfg { jitter: 0.0, ..cfg }, seed);
+        let mut prev = 0.0;
+        for attempt in 0..80 {
+            let d = fp0.backoff(attempt);
+            assert!(d >= prev, "seed {seed} attempt {attempt}: jitter-free backoff decreased");
+            assert!(d <= cfg.backoff_cap_s + 1e-12, "seed {seed}: backoff over cap");
+            prev = d;
+        }
+    }
+}
+
+#[test]
+fn prop_outage_process_windows_are_causal_and_bounded() {
+    // Scanning forward through the renewal process: every "down" answer
+    // ends after the query time and within one window length of it,
+    // re-querying the same instant is idempotent, and over a long
+    // horizon the cloud is neither always down nor always up.
+    for seed in cases(150) {
+        let mut r = Rng::seed_from_u64(seed ^ 0x0D0A);
+        let gap = r.range_f64(0.5, 5.0);
+        let dur = r.range_f64(0.3, 2.0);
+        let mut o = OutageProcess::new(gap, dur, seed);
+        let (mut saw_down, mut saw_up) = (false, false);
+        let mut t = 0.0;
+        while t < 200.0 {
+            let first = o.down_at(t);
+            assert_eq!(first, o.down_at(t), "seed {seed}: down_at({t}) not idempotent");
+            match first {
+                Some(end) => {
+                    saw_down = true;
+                    assert!(end > t, "seed {seed}: outage ends at {end} <= query {t}");
+                    assert!(end - t <= dur + 1e-9, "seed {seed}: residual exceeds window length");
+                }
+                None => saw_up = true,
+            }
+            t += 0.25;
+        }
+        assert!(
+            saw_down && saw_up,
+            "seed {seed}: degenerate process (gap {gap}, dur {dur}, down {saw_down}, up {saw_up})"
+        );
+    }
 }
 
 // --- stats ---------------------------------------------------------------------
